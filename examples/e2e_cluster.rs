@@ -1,0 +1,172 @@
+//! **End-to-end validation driver** (DESIGN.md §5, EXPERIMENTS.md §E2E).
+//!
+//! Boots the full sparklite stack — driver, central scheduler, executor
+//! threads, binary task serialization — and pushes *real work* through
+//! it: word-count jobs over a synthetic corpus plus matrix-multiply
+//! jobs, under single-queue fork-join arrivals. Sweeps the task
+//! granularity k and reports p50/p99 sojourn and throughput per point,
+//! then compares the measured curve against the overhead-aware analytic
+//! approximation evaluated through the AOT artifact engine (the paper's
+//! headline Fig.-8 methodology, on real computation instead of
+//! controlled busy-spins).
+//!
+//! Run: `cargo run --release --example e2e_cluster`
+
+use tiny_tasks::config::{EmulatorConfig, ModelKind, OverheadConfig};
+use tiny_tasks::emulator::{Cluster, JobOutcome, Payload};
+use tiny_tasks::runtime::{BoundQuery, BoundsEngine};
+
+/// Cheap deterministic hash → uniform f64 in (0, 1].
+fn unit(job: u64, task: u32, salt: u64) -> f64 {
+    let mut s = job
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((task as u64) << 17)
+        .wrapping_add(salt) | 1;
+    s ^= s >> 12;
+    s ^= s << 25;
+    s ^= s >> 27;
+    ((s.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64 / (1u64 << 53) as f64)
+        .max(1e-12)
+}
+
+/// Deterministic synthetic corpus: zipf-ish word frequencies.
+fn corpus_shard(job: u64, task: u32, words: usize) -> String {
+    const VOCAB: [&str; 24] = [
+        "tiny", "tasks", "granularity", "overhead", "spark", "queue", "fork", "join",
+        "split", "merge", "worker", "task", "job", "latency", "bound", "quantile",
+        "stability", "scheduler", "executor", "driver", "serialize", "network", "batch",
+        "stream",
+    ];
+    let mut state = job.wrapping_mul(0x9E37_79B9).wrapping_add(task as u64) | 1;
+    let mut out = String::with_capacity(words * 7);
+    for _ in 0..words {
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        let r = (state.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 33) as usize;
+        // Zipf-ish skew: quadratic map favours low indices.
+        let idx = ((r % 576) * (r % 576)) / 13824 % VOCAB.len();
+        out.push_str(VOCAB[idx]);
+        out.push(' ');
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    let l = 8usize;
+    let jobs = 300usize;
+    let warmup = 30usize;
+    let lambda = 0.5; // jobs per emulated second
+    let workload = 8.0; // E[L] ≈ 8 s emulated per job
+    let eps = 0.01;
+    // Tasks are real compute (word count / matmul) padded to an
+    // exponentially distributed duration — I/O-bound map tasks. Word
+    // volume per emulated second of task time:
+    let words_rate = 5.0e3;
+    // Per-k wall scale: cap the wall task rate (~2000/s) so the whole
+    // cluster fits the testbed's core budget (DESIGN.md §2).
+    let scale_for = |k: usize| (k as f64 * 2.5e-4).max(0.02);
+
+    println!("=== tiny-tasks end-to-end driver ===");
+    println!("sparklite: {l} executors, {jobs} jobs/point, SQ-FJ arrivals exp({lambda})");
+    println!("workload: padded word-count shards + 64x64 matmuls, E[L] ≈ {workload} s\n");
+
+    let engine = BoundsEngine::auto();
+    println!("analytic engine: {:?}", engine.kind());
+
+    let ks = [8usize, 24, 80, 240, 960];
+    let mut measured: Vec<(usize, f64, f64, f64)> = Vec::new();
+
+    for &k in &ks {
+        let time_scale = scale_for(k);
+        // Mean task duration: E[L]/k emulated seconds. Durations are
+        // exponentially skewed (inverse-CDF on a per-task hash) — the
+        // data-skew stragglers that motivate tiny tasks in real
+        // map-reduce deployments. Word volume tracks duration so the
+        // compute content is proportional to the shard "size".
+        let mean_task_emu = workload / k as f64;
+        let cfg = EmulatorConfig {
+            executors: l,
+            tasks_per_job: k,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: format!("exp:{lambda}"),
+            execution: "det:1".into(), // unused by run_with
+            time_scale,
+            jobs,
+            warmup,
+            seed: 42,
+            inject_overhead: Some(OverheadConfig::paper()),
+        };
+        let mut res = Cluster::run_with(&cfg, move |job, task| {
+            // Exp-distributed task duration (capped at 20x mean).
+            let skew = (-unit(job, task, 7).ln()).min(20.0);
+            let dur_emu = mean_task_emu * skew;
+            let inner = if job % 5 == 4 && task % 7 == 3 {
+                Payload::MatMul { n: 64, seed: job ^ task as u64 }
+            } else {
+                let words = ((dur_emu * words_rate) as usize).max(16);
+                Payload::WordCount { text: corpus_shard(job, task, words), top: 10 }
+            };
+            Payload::Padded { inner: Box::new(inner), seconds: dur_emu * time_scale }
+        })
+        .map_err(anyhow::Error::msg)?;
+
+        let p50 = res.sojourn_quantile(0.5);
+        let p99 = res.sojourn_quantile(1.0 - eps);
+        let thr = res.throughput();
+        measured.push((k, p50, p99, thr));
+        // Show a real merge result to prove real data flowed end-to-end.
+        if let Some((_, JobOutcome::MergedCounts(counts))) = res
+            .outcomes
+            .iter()
+            .find(|(_, o)| matches!(o, JobOutcome::MergedCounts(_)))
+        {
+            let top: Vec<String> =
+                counts.iter().take(3).map(|(w, c)| format!("{w}:{c}")).collect();
+            println!(
+                "k={k:>4}: p50={p50:>7.2}s p99={p99:>7.2}s thr={thr:>5.3} jobs/s \
+                 (top words: {}) [{:.1}s wall]",
+                top.join(" "),
+                res.wall_seconds
+            );
+        } else {
+            println!("k={k:>4}: p50={p50:>7.2}s p99={p99:>7.2}s thr={thr:>5.3} jobs/s");
+        }
+    }
+
+    // Analytic approximation with overhead for the same sweep. The real
+    // workload is not exponential, so this is a shape comparison — the
+    // paper's point is the U-shaped trade-off, not exact values.
+    println!("\nanalytic approximation (Sec. 6, exp-task model, same E[L]):");
+    let queries: Vec<BoundQuery> = ks
+        .iter()
+        .map(|&k| BoundQuery {
+            k,
+            l,
+            lambda,
+            mu: k as f64 / workload,
+            epsilon: eps,
+            overhead: Some(OverheadConfig::paper()),
+        })
+        .collect();
+    let rows = engine.bounds(&queries)?;
+    println!("{:>6} {:>14} {:>14}", "k", "measured p99", "approx tau_eps");
+    let mut best_measured = (0usize, f64::INFINITY);
+    let mut best_analytic = (0usize, f64::INFINITY);
+    for ((k, _p50, p99, _), row) in measured.iter().zip(&rows) {
+        let tau = row.fork_join.unwrap_or(f64::NAN);
+        println!("{k:>6} {p99:>14.2} {tau:>14.2}");
+        if *p99 < best_measured.1 {
+            best_measured = (*k, *p99);
+        }
+        if tau.is_finite() && tau < best_analytic.1 {
+            best_analytic = (*k, tau);
+        }
+    }
+    println!(
+        "\nbest measured k = {} | analytic recommendation k = {} — the \
+         trade-off optimum (tinyfication helps, overhead caps it).",
+        best_measured.0, best_analytic.0
+    );
+    Ok(())
+}

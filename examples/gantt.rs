@@ -1,0 +1,60 @@
+//! Executor activity traces (Figs. 1–2): render an ASCII Gantt strip of a
+//! split-merge run at coarse vs. fine task granularity and write the
+//! full traces as CSV.
+//!
+//! Run: `cargo run --release --example gantt`
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    for (label, k) in [("COARSE (k=400, Fig. 1)", 400usize), ("FINE (k=1500, Fig. 2)", 1500)] {
+        let cfg = SimulationConfig {
+            model: ModelKind::SplitMerge,
+            servers: 50,
+            tasks_per_job: k,
+            arrival: ArrivalConfig { interarrival: "det:0.001".into() },
+            service: ServiceConfig { execution: format!("exp:{}", k as f64 / 50.0) },
+            jobs: 4,
+            warmup: 0,
+            seed: 3,
+            overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { trace: true, record_jobs: true, ..Default::default() },
+        )
+        .map_err(anyhow::Error::msg)?;
+
+        println!("\n=== {label} ===");
+        // ASCII strip: 12 executors x 100 columns over the first 5 s;
+        // digit = job index running, '.' = idle.
+        let horizon = 5.0;
+        let cols = 100usize;
+        for server in 0..12u32 {
+            let mut row = vec!['.'; cols];
+            for ev in res.trace.events().iter().filter(|e| e.server == server) {
+                let c0 = ((ev.start / horizon) * cols as f64) as usize;
+                let c1 = ((ev.end / horizon) * cols as f64).ceil() as usize;
+                for cell in row.iter_mut().take(c1.min(cols)).skip(c0.min(cols)) {
+                    *cell = char::from_digit(ev.job % 10, 10).unwrap_or('#');
+                }
+            }
+            println!("exec {server:>2} |{}|", row.iter().collect::<String>());
+        }
+        let util = res.trace.utilization(50, 0.0, horizon);
+        println!(
+            "mean utilization over first {horizon}s: {:.1}% | 4th job departs at {:.2}s",
+            100.0 * util.iter().sum::<f64>() / util.len() as f64,
+            res.jobs.last().unwrap().departure
+        );
+        let path = format!("reports/gantt_k{k}.csv");
+        res.trace.to_csv().write_file(&path)?;
+        println!("full trace -> {path}");
+    }
+    println!(
+        "\nFiner granularity fills the merge-barrier idle gaps — the visual\n\
+         motivation for tiny tasks (paper Figs. 1 vs 2)."
+    );
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Granularity advisor — the paper's concluding application (Sec. 7):
+//! use the overhead-aware analytic approximation to pick the number of
+//! tasks per job for a concrete cluster.
+//!
+//! Run: `cargo run --release --example granularity_advisor -- [l] [lambda] [workload]`
+
+use tiny_tasks::config::{ModelKind, OverheadConfig};
+use tiny_tasks::coordinator::advisor;
+use tiny_tasks::runtime::BoundsEngine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let l: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(50);
+    let lambda: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let workload: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(l as f64);
+
+    let engine = BoundsEngine::auto();
+    println!("engine: {:?}", engine.kind());
+    println!(
+        "cluster: {l} workers, λ = {lambda}/s, E[workload] = {workload}s \
+         (utilization {:.2})\n",
+        lambda * workload / l as f64
+    );
+
+    for (name, model) in [
+        ("single-queue fork-join", ModelKind::ForkJoinSingleQueue),
+        ("split-merge", ModelKind::SplitMerge),
+    ] {
+        let rec = advisor::recommend(
+            &engine,
+            model,
+            l,
+            lambda,
+            workload,
+            0.01,
+            OverheadConfig::paper(),
+        )?;
+        println!("== {name} ==");
+        match rec.best {
+            Some((k, tau)) => println!(
+                "  recommended k = {k} (κ = {:.1}); predicted p99 sojourn {tau:.2}s",
+                k as f64 / l as f64
+            ),
+            None => println!("  no stable k at this load"),
+        }
+        // Show the U-shape: first/best/last feasible points.
+        let feasible: Vec<(usize, f64)> =
+            rec.curve.iter().filter_map(|&(k, t)| t.map(|t| (k, t))).collect();
+        if let (Some(first), Some(last)) = (feasible.first(), feasible.last()) {
+            println!(
+                "  curve: k={} -> {:.2}s ... k={} -> {:.2}s ({} feasible points)\n",
+                first.0,
+                first.1,
+                last.0,
+                last.1,
+                feasible.len()
+            );
+        } else {
+            println!();
+        }
+    }
+    println!("The interior optimum is the tiny-tasks granularity trade-off.");
+    Ok(())
+}

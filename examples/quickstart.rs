@@ -1,0 +1,85 @@
+//! Quickstart: the tiny-tasks effect in 60 seconds.
+//!
+//! Simulates a 50-worker cluster at utilization 0.5 under both
+//! split-merge and single-queue fork-join scheduling, sweeping the task
+//! granularity k, and compares the simulated 0.99 sojourn quantiles with
+//! the paper's analytic bounds (Lemma 1 / Theorem 2 via the AOT artifact
+//! engine when available).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::runtime::{BoundQuery, BoundsEngine};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let l = 50usize;
+    let lambda = 0.5;
+    let eps = 0.01;
+    let ks = [50usize, 100, 200, 400, 800, 1600];
+    let engine = BoundsEngine::auto();
+    println!("bounds engine: {:?}\n", engine.kind());
+
+    println!(
+        "{:>6} {:>8} | {:>12} {:>12} | {:>12} {:>12}",
+        "k", "kappa", "sim SM p99", "bound SM", "sim FJ p99", "bound FJ"
+    );
+    let queries: Vec<BoundQuery> = ks
+        .iter()
+        .map(|&k| BoundQuery {
+            k,
+            l,
+            lambda,
+            mu: k as f64 / l as f64,
+            epsilon: eps,
+            overhead: None,
+        })
+        .collect();
+    let bound_rows = engine.bounds(&queries)?;
+
+    for (i, &k) in ks.iter().enumerate() {
+        let mu = k as f64 / l as f64;
+        let simulate = |model: ModelKind| -> anyhow::Result<Option<f64>> {
+            // Skip unstable split-merge points (κ too small at ρ = 0.5).
+            if model == ModelKind::SplitMerge
+                && tiny_tasks::analysis::stability::sm_tiny_tasks(l, k) < 0.5
+            {
+                return Ok(None);
+            }
+            let cfg = SimulationConfig {
+                model,
+                servers: l,
+                tasks_per_job: k,
+                arrival: ArrivalConfig { interarrival: format!("exp:{lambda}") },
+                service: ServiceConfig { execution: format!("exp:{mu}") },
+                jobs: 20_000,
+                warmup: 2_000,
+                seed: 7,
+                overhead: None,
+            };
+            let mut res = sim::run(&cfg, RunOptions::default()).map_err(anyhow::Error::msg)?;
+            Ok(Some(res.sojourn_quantile(1.0 - eps)))
+        };
+        let sm = simulate(ModelKind::SplitMerge)?;
+        let fj = simulate(ModelKind::ForkJoinSingleQueue)?;
+        let fmt = |x: Option<f64>| match x {
+            Some(v) => format!("{v:12.2}"),
+            None => format!("{:>12}", "unstable"),
+        };
+        println!(
+            "{:>6} {:>8.1} | {} {} | {} {}",
+            k,
+            k as f64 / l as f64,
+            fmt(sm),
+            fmt(bound_rows[i].split_merge),
+            fmt(fj),
+            fmt(bound_rows[i].fork_join),
+        );
+    }
+    println!(
+        "\nTiny tasks stabilize split-merge and shrink fork-join tails; the\n\
+         analytic bounds track the simulated quantiles (p99 estimates from\n\
+         20k jobs carry ~10% noise near the split-merge stability edge)."
+    );
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time compile path: JAX/Pallas bound-evaluation graphs, AOT-lowered
+to HLO-text artifacts loaded by the Rust coordinator. Never imported at
+runtime."""

@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md
+§Hardware-Adaptation for the TPU tiling story)."""
+
+from .envelope import bounds_pallas, BOUND_COLS, BOUND_OUTS, THETA_GRID, L_MAX
+from .erlang_max import erlang_sm_pallas, ERLANG_COLS, ERLANG_OUTS
+
+__all__ = [
+    "bounds_pallas",
+    "erlang_sm_pallas",
+    "BOUND_COLS",
+    "BOUND_OUTS",
+    "ERLANG_COLS",
+    "ERLANG_OUTS",
+    "THETA_GRID",
+    "L_MAX",
+]

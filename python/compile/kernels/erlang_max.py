@@ -1,0 +1,167 @@
+"""Pallas kernel: big-tasks split-merge analysis (Secs. 4.2-4.3, Fig. 12).
+
+Per configuration row (l servers, k = l big tasks ~ Erlang(kappa, mu)):
+
+  out[0]  E[Delta] = E[max_l Erlang(kappa, mu)]          (Eq. 21)
+  out[1]  max stable utilization kappa / (mu E[Delta])    (Eq. 23)
+  out[2]  sojourn eps-quantile bound via the Erlang-max MGF (Sec. 4.3)
+          (-1.0 when no feasible theta exists)
+
+Config columns (f64): 0: l, 1: kappa, 2: lam, 3: mu, 4: eps.
+
+Numerics: everything is evaluated in log space. The Erlang CCDF
+``1 - F = exp(-mu y) * sum_{i<kappa} (mu y)^i / i!`` is computed as a
+log-sum-exp over the masked stage grid; ``1 - F^l`` uses the
+``log(-expm1(l * log1p(-ccdf)))`` identity so the MGF integrand
+``(1 - F^l(y)) e^{theta y}`` never overflows even where e^{theta y}
+alone would. Quadrature is composite Simpson on a fixed [QUAD] grid whose
+upper limit covers the (mu - theta) decay at the largest theta on the
+grid (theta <= 0.9 mu, mirrored by the Rust reference).
+
+TPU notes: the [THETA_ERL, QUAD] f64 tile is ~4 MiB (VMEM-resident);
+VPU-bound transcendentals, no MXU work.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.scipy.special import gammaln
+
+jax.config.update("jax_enable_x64", True)
+
+# theta grid resolution (log-spaced in (0.9*mu*1e-6, 0.9*mu]). 128 is
+# sufficient because the ternary refinement recovers the continuous
+# optimum from the bracketing grid cell (§Perf log: halves the [T, G]
+# exp-matrix cost with no accuracy change vs the oracle).
+THETA_ERL = 128
+# Simpson quadrature nodes (odd => even panel count).
+QUAD = 1025
+# Maximum Erlang shape supported by the masked stage grid.
+KAPPA_MAX = 64
+
+ERLANG_COLS = 5
+ERLANG_OUTS = 3
+
+_NEG = -1.0
+
+
+def _ln_ccdf_erlang(y, kappa, mu):
+    """log of the Erlang(kappa, mu) CCDF on grid y [G] via masked LSE."""
+    g = y.shape[0]
+    i = jax.lax.broadcasted_iota(jnp.float64, (g, KAPPA_MAX), 1)  # [G, K]
+    mask = i < kappa
+    # ln term_i = i ln(mu y) - ln i!   (y = 0 handled via where)
+    ln_muy = jnp.log(jnp.where(y > 0.0, mu * y, 1.0))[:, None]  # [G, 1]
+    t = i * ln_muy - gammaln(i + 1.0)
+    t = jnp.where(mask, t, -jnp.inf)
+    tmax = jnp.max(t, axis=1, keepdims=True)  # [G, 1]
+    lse = tmax[:, 0] + jnp.log(jnp.sum(jnp.exp(t - tmax), axis=1))
+    ln_ccdf = -mu * y + lse
+    # y = 0: CCDF = 1 exactly.
+    ln_ccdf = jnp.where(y > 0.0, jnp.minimum(ln_ccdf, 0.0), 0.0)
+    return ln_ccdf
+
+
+def _ln_one_minus_pow(ln_ccdf, l):
+    """log(1 - F^l) where F = 1 - exp(ln_ccdf), computed stably."""
+    c = jnp.exp(ln_ccdf)  # CCDF in (0, 1]
+    # m = l * log(F) = l * log1p(-c); c -> 1 gives m -> -inf (fine).
+    m = l * jnp.log1p(-jnp.minimum(c, 1.0 - 1e-300))
+    # log(1 - e^m) = log(-expm1(m)); clamp for m == 0 (c underflowed).
+    em = -jnp.expm1(m)
+    return jnp.log(jnp.maximum(em, 1e-300))
+
+
+def _simpson_weights(g, h):
+    """Composite Simpson weights on g (odd) nodes with spacing h."""
+    idx = jax.lax.broadcasted_iota(jnp.float64, (g,), 0)
+    w = jnp.where(idx % 2 == 1, 4.0, 2.0)
+    w = w.at[0].set(1.0).at[g - 1].set(1.0)
+    return w * (h / 3.0)
+
+
+def _erlang_kernel(cfg_ref, out_ref):
+    cfg = cfg_ref[0, :]
+    l = cfg[0]
+    kappa = cfg[1]
+    lam = cfg[2]
+    mu = cfg[3]
+    eps = cfg[4]
+    ln_inv_eps = -jnp.log(eps)
+
+    # Quadrature grid: upper limit covers both the CCDF mass and the
+    # slowest MGF decay (mu - theta_max = 0.1 mu).
+    y_hi = (kappa + 10.0 * jnp.sqrt(kappa) + 2.0 * jnp.log(l + 1.0) + 40.0) / mu * 2.0
+    h = y_hi / (QUAD - 1)
+    y = jax.lax.broadcasted_iota(jnp.float64, (QUAD,), 0) * h
+    w = _simpson_weights(QUAD, h)
+
+    ln_ccdf = _ln_ccdf_erlang(y, kappa, mu)
+    ln_tail = _ln_one_minus_pow(ln_ccdf, l)  # log(1 - F^l), [G]
+
+    # --- Eq. 21: E[Delta] = int (1 - F^l) dy ---
+    mean_delta = jnp.sum(w * jnp.exp(ln_tail))
+    out_ref[0, 0] = mean_delta
+
+    # --- Eq. 23: stability ---
+    out_ref[0, 1] = kappa / (mu * mean_delta)
+
+    # --- Sec. 4.3: MGF over theta grid, then Th. 1 ---
+    t = jax.lax.broadcasted_iota(jnp.float64, (THETA_ERL,), 0)
+    frac = t / (THETA_ERL - 1)
+    sup = 0.9 * mu
+    theta = (sup * 1e-6) * (0.999999e6) ** frac  # log-spaced to 0.9 mu
+
+    ln_integrand = ln_tail[None, :] + theta[:, None] * y[None, :]  # [T, G]
+    # Cap to avoid inf*0 in the weighted sum; capped entries only occur
+    # where the MGF is astronomically large (infeasible theta anyway).
+    ln_integrand = jnp.minimum(ln_integrand, 700.0)
+    integral = jnp.sum(w[None, :] * jnp.exp(ln_integrand), axis=1)  # [T]
+    mgf = 1.0 + theta * integral
+    rho_s = jnp.log(mgf) / theta
+    rho_a = (jnp.log(lam + theta) - jnp.log(lam)) / theta
+
+    tau = rho_s + ln_inv_eps / theta
+    feasible = rho_s <= rho_a
+
+    # Ternary-section refinement (see envelope._grid_refine): the optimum
+    # frequently sits on the feasibility boundary where tau is steep.
+    def tau_fn(th):
+        ln_ig = jnp.minimum(ln_tail + th * y, 700.0)
+        m = 1.0 + th * jnp.sum(w * jnp.exp(ln_ig))
+        rs = jnp.log(m) / th
+        ra = (jnp.log(lam + th) - jnp.log(lam)) / th
+        return jnp.where(rs <= ra, rs + ln_inv_eps / th, jnp.inf)
+
+    masked = jnp.where(feasible & jnp.isfinite(tau), tau, jnp.inf)
+    best = jnp.min(masked)
+    idx = jnp.argmin(masked)
+    a0 = theta[jnp.maximum(idx - 1, 0)]
+    b0 = theta[jnp.minimum(idx + 1, THETA_ERL - 1)]
+
+    def body(_, ab):
+        a, b = ab
+        m1 = a + (b - a) / 3.0
+        m2 = b - (b - a) / 3.0
+        take_left = tau_fn(m1) < tau_fn(m2)
+        return (jnp.where(take_left, a, m1), jnp.where(take_left, m2, b))
+
+    a, b = jax.lax.fori_loop(0, 48, body, (a0, b0))
+    mid = 0.5 * (a + b)
+    refined = jnp.minimum(tau_fn(mid), jnp.minimum(tau_fn(a), tau_fn(b)))
+    best = jnp.minimum(best, refined)
+    out_ref[0, 2] = jnp.where(jnp.isfinite(best), best, _NEG)
+
+
+def erlang_sm_pallas(configs):
+    """Evaluate the big-tasks kernel for a [N, ERLANG_COLS] f64 batch."""
+    n = configs.shape[0]
+    assert configs.shape == (n, ERLANG_COLS), configs.shape
+    return pl.pallas_call(
+        _erlang_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, ERLANG_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, ERLANG_OUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ERLANG_OUTS), jnp.float64),
+        interpret=True,
+    )(configs)

@@ -1,0 +1,208 @@
+"""Pure-jnp/numpy oracle for the Pallas kernels — the correctness signal.
+
+Implements the same math as envelope.py / erlang_max.py with plain numpy
+(dense theta scan, scipy-grade quadrature) so pytest can assert_allclose
+kernel outputs against an independent evaluation path.
+"""
+
+import numpy as np
+from scipy.special import gammaln as _gammaln
+
+from .envelope import BOUND_COLS, BOUND_OUTS, L_MAX, THETA_GRID
+from .erlang_max import ERLANG_COLS, ERLANG_OUTS, KAPPA_MAX, QUAD, THETA_ERL
+
+
+def _theta_grid(sup, n):
+    frac = np.arange(n) / (n - 1)
+    lo, hi = sup * 1e-6, sup * 0.999999
+    return lo * (hi / lo) ** frac
+
+
+def _rho_arrival(lam, theta):
+    return (np.log(lam + theta) - np.log(lam)) / theta
+
+
+def _rho_x(l, mu, theta):
+    """(1/theta) sum_{i=1}^{l} ln(i mu / (i mu - theta)); +inf if any term
+    is out of domain (theta >= mu covers all cases since i >= 1)."""
+    i = np.arange(1, int(l) + 1)[None, :]
+    imu = i * mu
+    th = theta[:, None]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        term = np.where(imu > th, np.log(imu) - np.log(np.maximum(imu - th, 1e-300)), np.inf)
+    return term.sum(axis=1) / theta
+
+
+def _min_feasible(tau, feasible):
+    masked = np.where(feasible & np.isfinite(tau), tau, np.inf)
+    best = masked.min()
+    return best if np.isfinite(best) else -1.0
+
+
+def _grid_refine(tau_fn, theta, tau_grid, feasible, iters=60):
+    """Mirror of envelope._grid_refine: grid argmin + ternary section."""
+    masked = np.where(feasible & np.isfinite(tau_grid), tau_grid, np.inf)
+    best = masked.min()
+    idx = int(masked.argmin())
+    a = theta[max(idx - 1, 0)]
+    b = theta[min(idx + 1, len(theta) - 1)]
+    for _ in range(iters):
+        m1 = a + (b - a) / 3.0
+        m2 = b - (b - a) / 3.0
+        if tau_fn(m1) < tau_fn(m2):
+            b = m2
+        else:
+            a = m1
+    mid = 0.5 * (a + b)
+    refined = min(tau_fn(mid), tau_fn(a), tau_fn(b))
+    out = min(best, refined)
+    return out if np.isfinite(out) else -1.0
+
+
+def bounds_ref_row(cfg):
+    """Reference for one envelope-kernel config row -> [BOUND_OUTS]."""
+    k, l, lam, mu, eo, cpd, eps = [float(x) for x in cfg]
+    ln_inv_eps = -np.log(eps)
+    theta = _theta_grid(mu, THETA_GRID)
+    lmu = l * mu
+
+    rho_a = _rho_arrival(lam, theta)
+    rho_x = _rho_x(l, mu, theta)
+    rho_z = (np.log(lmu) - np.log(lmu - theta)) / theta
+
+    def s_rho_a(th):
+        return (np.log(lam + th) - np.log(lam)) / th
+
+    def s_rho_x(th):
+        return float(_rho_x(l, mu, np.array([th]))[0])
+
+    def s_rho_z(th):
+        return (np.log(lmu) - np.log(lmu - th)) / th if th < lmu else np.inf
+
+    rho_z_o = rho_z + eo / l
+    rho_s_sm = rho_x + eo + cpd + (k - l) * rho_z_o
+
+    def sm_fn(th):
+        rs = s_rho_x(th) + eo + cpd + (k - l) * (s_rho_z(th) + eo / l)
+        return rs + ln_inv_eps / th if rs <= s_rho_a(th) else np.inf
+
+    sm = _grid_refine(sm_fn, theta, rho_s_sm + ln_inv_eps / theta, rho_s_sm <= rho_a)
+
+    tau_fj = (k - 1.0) * rho_z_o + rho_x + eo + ln_inv_eps / theta
+
+    def fj_fn(th):
+        rz = s_rho_z(th) + eo / l
+        t = (k - 1.0) * rz + s_rho_x(th) + eo + ln_inv_eps / th
+        return t if k * rz <= s_rho_a(th) else np.inf
+
+    fj = _grid_refine(fj_fn, theta, tau_fj, k * rho_z_o <= rho_a)
+    if fj >= 0.0:
+        fj += cpd
+
+    theta_id = theta * l
+    rho_q = k * (np.log(lmu) - np.log(lmu - theta_id)) / theta_id
+
+    def ideal_fn(th):
+        rq = k * (np.log(lmu) - np.log(lmu - th)) / th if th < lmu else np.inf
+        return rq + ln_inv_eps / th if rq <= s_rho_a(th) else np.inf
+
+    ideal = _grid_refine(
+        ideal_fn,
+        theta_id,
+        rho_q + ln_inv_eps / theta_id,
+        rho_q <= _rho_arrival(lam, theta_id),
+    )
+    return np.array([sm, fj, ideal])
+
+
+def bounds_ref(configs):
+    """Reference for a [N, BOUND_COLS] batch -> [N, BOUND_OUTS]."""
+    configs = np.asarray(configs, dtype=np.float64)
+    assert configs.shape[1] == BOUND_COLS
+    return np.stack([bounds_ref_row(row) for row in configs])
+
+
+# ---------------------------------------------------------------- Erlang --
+
+
+def _ln_ccdf_erlang(y, kappa, mu):
+    i = np.arange(KAPPA_MAX)[None, :]
+    mask = i < kappa
+    with np.errstate(divide="ignore"):
+        ln_muy = np.where(y > 0, np.log(np.maximum(mu * y, 1e-300)), 0.0)[:, None]
+    t = np.where(mask, i * ln_muy - _gammaln(i + 1.0), -np.inf)
+    tmax = t.max(axis=1, keepdims=True)
+    lse = tmax[:, 0] + np.log(np.exp(t - tmax).sum(axis=1))
+    ln_ccdf = -mu * y + lse
+    return np.where(y > 0, np.minimum(ln_ccdf, 0.0), 0.0)
+
+
+def _ln_one_minus_pow(ln_ccdf, l):
+    c = np.exp(ln_ccdf)
+    with np.errstate(divide="ignore"):
+        m = l * np.log1p(-np.minimum(c, 1 - 1e-300))
+    return np.log(np.maximum(-np.expm1(m), 1e-300))
+
+
+def _simpson_w(g, h):
+    w = np.where(np.arange(g) % 2 == 1, 4.0, 2.0)
+    w[0] = w[-1] = 1.0
+    return w * h / 3.0
+
+
+def erlang_ref_row(cfg):
+    """Reference for one erlang-kernel config row -> [ERLANG_OUTS]."""
+    l, kappa, lam, mu, eps = [float(x) for x in cfg]
+    ln_inv_eps = -np.log(eps)
+    y_hi = (kappa + 10.0 * np.sqrt(kappa) + 2.0 * np.log(l + 1.0) + 40.0) / mu * 2.0
+    h = y_hi / (QUAD - 1)
+    y = np.arange(QUAD) * h
+    w = _simpson_w(QUAD, h)
+
+    ln_tail = _ln_one_minus_pow(_ln_ccdf_erlang(y, kappa, mu), l)
+    mean_delta = float((w * np.exp(ln_tail)).sum())
+    rho_star = kappa / (mu * mean_delta)
+
+    frac = np.arange(THETA_ERL) / (THETA_ERL - 1)
+    sup = 0.9 * mu
+    theta = (sup * 1e-6) * (0.999999e6) ** frac
+    ln_integrand = np.minimum(ln_tail[None, :] + theta[:, None] * y[None, :], 700.0)
+    integral = (w[None, :] * np.exp(ln_integrand)).sum(axis=1)
+    mgf = 1.0 + theta * integral
+    rho_s = np.log(mgf) / theta
+    rho_a = _rho_arrival(lam, theta)
+
+    def tau_fn(th):
+        m = 1.0 + th * (w * np.exp(np.minimum(ln_tail + th * y, 700.0))).sum()
+        rs = np.log(m) / th
+        ra = (np.log(lam + th) - np.log(lam)) / th
+        return rs + ln_inv_eps / th if rs <= ra else np.inf
+
+    tau = _grid_refine(tau_fn, theta, rho_s + ln_inv_eps / theta, rho_s <= rho_a)
+    return np.array([mean_delta, rho_star, tau])
+
+
+def erlang_ref(configs):
+    """Reference for a [N, ERLANG_COLS] batch -> [N, ERLANG_OUTS]."""
+    configs = np.asarray(configs, dtype=np.float64)
+    assert configs.shape[1] == ERLANG_COLS
+    return np.stack([erlang_ref_row(row) for row in configs])
+
+
+# ------------------------------------------------------------ closed forms
+
+
+def harmonic(n):
+    """H_n, exact."""
+    return float(np.sum(1.0 / np.arange(1, int(n) + 1)))
+
+
+def sm_tiny_stability(l, k):
+    """Eq. 20."""
+    kappa = k / l
+    return 1.0 / (1.0 + (harmonic(l) - 1.0) / kappa)
+
+
+def mm1_sojourn_quantile(lam, mu, eps):
+    """Exact M/M/1 sojourn quantile: T ~ Exp(mu - lam)."""
+    return -np.log(eps) / (mu - lam)

@@ -1,0 +1,69 @@
+"""Layer 2: the JAX bound-sweep graphs composed from the Layer-1 Pallas
+kernels, plus the closed-form stability sweep. These are the computations
+that `aot.py` lowers to HLO text for the Rust runtime.
+
+Fixed batch shapes (AOT requires static shapes; the Rust side pads):
+
+  bounds_sweep    : f64[BATCH, 7]  -> f64[BATCH, 3]   (envelope kernel)
+  erlang_sweep    : f64[BATCH, 5]  -> f64[BATCH, 3]   (erlang-max kernel)
+  stability_sweep : f64[BATCH, 2]  -> f64[BATCH, 2]   (Eq. 20 closed form)
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels import bounds_pallas, erlang_sm_pallas  # noqa: E402
+
+# Batch size baked into every artifact; Rust pads sweeps to multiples.
+BATCH = 128
+
+
+def bounds_sweep(configs):
+    """Tiny-tasks bounds for a config batch (see kernels/envelope.py)."""
+    return (bounds_pallas(configs),)
+
+
+def erlang_sweep(configs):
+    """Big-tasks split-merge analysis (see kernels/erlang_max.py)."""
+    return (erlang_sm_pallas(configs),)
+
+
+def stability_sweep(configs):
+    """Closed-form stability regions.
+
+    Input columns: 0: k, 1: l. Output columns:
+      0: tiny-tasks split-merge max stable utilization (Eq. 20),
+      1: fork-join max stable utilization (= 1, Sec. 3.2.2).
+    The harmonic number is evaluated with a masked reciprocal sum over the
+    same L_MAX grid the envelope kernel uses.
+    """
+    from .kernels import L_MAX
+
+    k = configs[:, 0]
+    l = configs[:, 1]
+    i = 1.0 + jax.lax.broadcasted_iota(jnp.float64, (1, L_MAX), 1)
+    mask = i <= l[:, None]
+    harm = jnp.sum(jnp.where(mask, 1.0 / i, 0.0), axis=1)
+    kappa = k / l
+    sm = 1.0 / (1.0 + (harm - 1.0) / kappa)
+    fj = jnp.ones_like(sm)
+    return (jnp.stack([sm, fj], axis=1),)
+
+
+#: name -> (callable, list of input ShapeDtypeStructs)
+ARTIFACTS = {
+    "bounds": (
+        bounds_sweep,
+        [jax.ShapeDtypeStruct((BATCH, 7), jnp.float64)],
+    ),
+    "erlang_sm": (
+        erlang_sweep,
+        [jax.ShapeDtypeStruct((BATCH, 5), jnp.float64)],
+    ),
+    "stability": (
+        stability_sweep,
+        [jax.ShapeDtypeStruct((BATCH, 2), jnp.float64)],
+    ),
+}

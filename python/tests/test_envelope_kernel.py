@@ -1,0 +1,132 @@
+"""L1 correctness: the envelope Pallas kernel vs the pure-numpy oracle,
+plus closed-form anchors (M/M/1, Eq. 20 stability edge, paper shapes)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bounds_pallas
+from compile.kernels import ref
+
+
+def run(rows):
+    cfg = np.asarray(rows, dtype=np.float64)
+    return np.asarray(bounds_pallas(cfg)), ref.bounds_ref(cfg)
+
+
+class TestAgainstOracle:
+    def test_fig8_grid(self):
+        rows = []
+        for k in [50, 100, 200, 400, 1000, 2500]:
+            mu = k / 50.0
+            rows.append([k, 50, 0.5, mu, 0.0, 0.0, 0.01])
+            rows.append([k, 50, 0.5, mu, 3.1e-3, 0.02 + k * 7.4e-6, 0.01])
+        got, expect = run(rows)
+        assert_allclose(got, expect, rtol=1e-9)
+
+    def test_fig13_epsilon(self):
+        rows = [[k, 50, 0.5, k / 50.0, 0.0, 0.0, 1e-6] for k in [50, 200, 800, 3200]]
+        got, expect = run(rows)
+        assert_allclose(got, expect, rtol=1e-9)
+
+    def test_small_systems(self):
+        rows = [
+            [1, 1, 0.5, 1.0, 0.0, 0.0, 0.01],
+            [2, 2, 0.3, 1.0, 0.0, 0.0, 0.001],
+            [8, 2, 0.3, 4.0, 1e-3, 1e-2, 0.001],
+        ]
+        got, expect = run(rows)
+        assert_allclose(got, expect, rtol=1e-9)
+
+
+class TestClosedFormAnchors:
+    def test_mm1_dominates_exact(self):
+        # k = l = 1: every model is an M/M/1 queue; the Chernoff bound
+        # dominates the exact quantile but stays within 30%.
+        lam, mu, eps = 0.5, 1.0, 0.01
+        got, _ = run([[1, 1, lam, mu, 0.0, 0.0, eps]])
+        exact = ref.mm1_sojourn_quantile(lam, mu, eps)
+        for v in got[0]:
+            assert exact <= v <= 1.3 * exact
+
+    def test_sm_stability_edge(self):
+        # l = 50, rho = 0.5: SM infeasible at small kappa, feasible at
+        # kappa where Eq. 20 exceeds 0.5 (the Fig. 8(a) transition).
+        for k in [50, 100]:
+            got, _ = run([[k, 50, 0.5, k / 50.0, 0.0, 0.0, 0.01]])
+            assert got[0][0] == -1.0, f"k={k} should be unstable"
+            assert ref.sm_tiny_stability(50, k) < 0.5
+        for k in [400, 1000]:
+            got, _ = run([[k, 50, 0.5, k / 50.0, 0.0, 0.0, 0.01]])
+            assert got[0][0] > 0.0, f"k={k} should be stable"
+            assert ref.sm_tiny_stability(50, k) > 0.5
+
+    def test_tinyfication_monotone_towards_ideal(self):
+        # Paper Fig. 13: FJ bound decreases in k toward the ideal bound.
+        taus = []
+        ideals = []
+        for k in [50, 100, 400, 1600]:
+            got, _ = run([[k, 50, 0.5, k / 50.0, 0.0, 0.0, 1e-6]])
+            taus.append(got[0][1])
+            ideals.append(got[0][2])
+        assert all(a > b for a, b in zip(taus, taus[1:]))
+        # Ideal is invariant to k here (same workload distribution scaled).
+        assert taus[-1] > ideals[-1]
+        assert (taus[-1] - ideals[-1]) / ideals[-1] < 0.4
+
+    def test_overhead_increases_bounds(self):
+        clean, _ = run([[600, 50, 0.5, 12.0, 0.0, 0.0, 0.01]])
+        dirty, _ = run([[600, 50, 0.5, 12.0, 3.1e-3, 0.0244, 0.01]])
+        assert dirty[0][0] > clean[0][0]
+        assert dirty[0][1] > clean[0][1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    l=st.integers(min_value=1, max_value=64),
+    kappa=st.integers(min_value=1, max_value=16),
+    lam=st.floats(min_value=0.05, max_value=0.9),
+    eps=st.sampled_from([1e-2, 1e-4, 1e-6]),
+    eo=st.floats(min_value=0.0, max_value=5e-3),
+)
+def test_property_kernel_matches_oracle(l, kappa, lam, eps, eo):
+    """Hypothesis sweep: kernel == oracle across the parameter space, and
+    outputs are either -1 (infeasible) or positive and ordered
+    (ideal <= fork-join when both feasible)."""
+    k = kappa * l
+    mu = k / l  # E[L] = l as in the paper's sweeps
+    cpd = 0.02 + k * 7.4e-6 if eo > 0 else 0.0
+    got, expect = run([[k, l, lam, mu, eo, cpd, eps]])
+    assert_allclose(got, expect, rtol=1e-8, atol=1e-12)
+    sm, fj, ideal = got[0]
+    for v in (sm, fj, ideal):
+        assert v == -1.0 or v > 0.0
+    if fj > 0 and ideal > 0 and eo == 0.0:
+        assert ideal <= fj * (1 + 1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_property_batch_consistency(n, seed):
+    """Batched evaluation equals row-by-row evaluation (BlockSpec
+    correctness under varying batch sizes)."""
+    rng = np.random.default_rng(seed)
+    l = int(rng.integers(1, 32))
+    rows = []
+    for _ in range(n):
+        k = int(rng.integers(1, 20)) * l
+        rows.append([k, l, float(rng.uniform(0.1, 0.8)), k / l, 0.0, 0.0, 0.01])
+    batched = np.asarray(bounds_pallas(np.asarray(rows, dtype=np.float64)))
+    single = np.concatenate(
+        [np.asarray(bounds_pallas(np.asarray([r], dtype=np.float64))) for r in rows]
+    )
+    assert_allclose(batched, single, rtol=1e-12)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        bounds_pallas(np.zeros((4, 5)))

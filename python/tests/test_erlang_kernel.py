@@ -1,0 +1,65 @@
+"""L1 correctness: the Erlang-max (big-tasks) Pallas kernel vs the oracle
+and the closed forms of Secs. 4.2-4.3."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import erlang_sm_pallas
+from compile.kernels import ref
+
+
+def run(rows):
+    cfg = np.asarray(rows, dtype=np.float64)
+    return np.asarray(erlang_sm_pallas(cfg)), ref.erlang_ref(cfg)
+
+
+class TestAgainstOracle:
+    def test_fig12_grid(self):
+        # mu = kappa = 20 as in Fig. 12; utilization = lambda.
+        rows = [[l, 20, lam, 20.0, 1e-6] for l in [1, 2, 5, 10, 50] for lam in [0.5, 0.7]]
+        got, expect = run(rows)
+        assert_allclose(got, expect, rtol=1e-9)
+
+
+class TestClosedForms:
+    def test_kappa1_harmonic_mean(self):
+        # E[max_l Exp(mu)] = H_l / mu.
+        for l in [1, 4, 16, 64]:
+            got, _ = run([[l, 1, 0.2, 1.0, 1e-3]])
+            h = ref.harmonic(l)
+            assert_allclose(got[0][0], h, rtol=1e-6)
+            # Eq. 23 at kappa=1 equals 1/H_l.
+            assert_allclose(got[0][1], 1.0 / h, rtol=1e-6)
+
+    def test_single_server_erlang(self):
+        # l = 1: E[Delta] = kappa/mu; stability = 1.
+        got, _ = run([[1, 20, 0.5, 20.0, 1e-3]])
+        assert_allclose(got[0][0], 1.0, rtol=1e-7)
+        assert_allclose(got[0][1], 1.0, rtol=1e-7)
+
+    def test_stability_decreases_with_l(self):
+        vals = [run([[l, 20, 0.5, 20.0, 1e-3]])[0][0][1] for l in [2, 8, 32]]
+        assert vals[0] > vals[1] > vals[2]
+
+    def test_tiny_beats_big(self):
+        # Fig. 12(a): Eq. 20 (tiny) > Eq. 23 (big) for kappa = 20.
+        for l in [5, 20, 50]:
+            got, _ = run([[l, 20, 0.5, 20.0, 1e-3]])
+            assert ref.sm_tiny_stability(l, 20 * l) > got[0][1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.integers(min_value=1, max_value=50),
+    kappa=st.integers(min_value=1, max_value=40),
+    lam=st.floats(min_value=0.05, max_value=0.8),
+)
+def test_property_kernel_matches_oracle(l, kappa, lam):
+    mu = float(kappa)  # utilization = lam
+    got, expect = run([[l, kappa, lam, mu, 1e-3]])
+    assert_allclose(got, expect, rtol=1e-8)
+    mean_delta, rho_star, tau = got[0]
+    assert mean_delta >= kappa / mu - 1e-9  # max >= single draw mean
+    assert 0.0 < rho_star <= 1.0 + 1e-9
+    assert tau == -1.0 or tau > 0.0

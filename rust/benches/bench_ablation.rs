@@ -1,0 +1,101 @@
+//! Ablation studies on the modelling choices DESIGN.md calls out:
+//!
+//! 1. **In-order departures** — Th. 2 analyzes a variant of single-queue
+//!    fork-join where jobs depart in sequence; how much sojourn does that
+//!    constraint add over the free (Spark-like) system?
+//! 2. **Overhead placement** — task-service (blocking) vs pre-departure
+//!    (non-blocking) overhead have different system effects (Sec. 6);
+//!    isolate each component's contribution at fixed total overhead.
+//! 3. **Non-exponential tasks** — Lemma 1/Th. 2 need memorylessness; how
+//!    does the tiny-tasks *benefit* (simulated) change under lighter
+//!    (Weibull k=2), heavier (Pareto α=2.5) and deterministic tails?
+//!
+//! `cargo bench --bench bench_ablation`
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, OverheadConfig, ServiceConfig, SimulationConfig};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn base(l: usize, k: usize, exec: String, jobs: usize) -> SimulationConfig {
+    SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.5".into() },
+        service: ServiceConfig { execution: exec },
+        jobs,
+        warmup: jobs / 10,
+        seed: 99,
+        overhead: None,
+    }
+}
+
+fn p99(cfg: &SimulationConfig, opts: RunOptions) -> f64 {
+    sim::run(cfg, opts).unwrap().sojourn_quantile(0.99)
+}
+
+fn main() {
+    let (l, jobs) = (50usize, 40_000usize);
+
+    println!("== ablation 1: Th.2 in-order departure constraint (l=50) ==");
+    println!("{:>6} {:>12} {:>12} {:>8}", "k", "free p99", "inorder p99", "gap");
+    for k in [50usize, 200, 800] {
+        let cfg = base(l, k, format!("exp:{}", k as f64 / l as f64), jobs);
+        let free = p99(&cfg, RunOptions::default());
+        let ordered = p99(&cfg, RunOptions { in_order_departures: true, ..Default::default() });
+        println!(
+            "{k:>6} {free:>12.3} {ordered:>12.3} {:>7.2}%",
+            (ordered / free - 1.0) * 100.0
+        );
+    }
+
+    println!("\n== ablation 2: overhead placement at fixed total (k=600) ==");
+    let k = 600usize;
+    let mu = k as f64 / l as f64;
+    // Total overhead budget per task ≈ 3.1 ms; as pre-departure it is
+    // k·c_task_pd with the same per-task magnitude.
+    let variants: [(&str, OverheadConfig); 4] = [
+        ("none", OverheadConfig::zero()),
+        (
+            "task-service only",
+            OverheadConfig { c_task_ts: 3.1e-3, mu_task_ts: f64::INFINITY, c_job_pd: 0.0, c_task_pd: 0.0 },
+        ),
+        (
+            "pre-departure only",
+            OverheadConfig { c_task_ts: 0.0, mu_task_ts: f64::INFINITY, c_job_pd: 0.0, c_task_pd: 3.1e-3 },
+        ),
+        ("paper split", OverheadConfig::paper()),
+    ];
+    println!("{:<20} {:>12} {:>12}", "variant", "SM p99", "FJ p99");
+    for (name, oh) in variants {
+        let mut sm_cfg = base(l, k, format!("exp:{mu}"), jobs);
+        sm_cfg.model = ModelKind::SplitMerge;
+        sm_cfg.overhead = Some(oh);
+        let mut fj_cfg = base(l, k, format!("exp:{mu}"), jobs);
+        fj_cfg.overhead = Some(oh);
+        println!(
+            "{name:<20} {:>12.3} {:>12.3}",
+            p99(&sm_cfg, RunOptions::default()),
+            p99(&fj_cfg, RunOptions::default())
+        );
+    }
+    println!("(blocking task overhead hurts both; pre-departure only shifts FJ departures\n but *blocks* the SM pipeline — the Sec. 6.2 asymmetry)");
+
+    println!("\n== ablation 3: task-time distribution vs tinyfication benefit ==");
+    println!("{:>22} {:>10} {:>10} {:>10}", "distribution", "k=50", "k=600", "gain");
+    for (name, spec50, spec600) in [
+        ("exponential", "exp:1".to_string(), format!("exp:{}", 600.0 / 50.0)),
+        // Same mean task times: Weibull k=2 (light tail), Pareto α=2.5
+        // (heavy tail, mean = α·xm/(α−1)), deterministic.
+        ("weibull(2) light", "weibull:2:1.1284".into(), "weibull:2:0.09403".into()),
+        ("pareto(2.5) heavy", "pareto:2.5:0.6".into(), "pareto:2.5:0.05".into()),
+        ("deterministic", "det:1".into(), format!("det:{}", 50.0 / 600.0)),
+    ] {
+        let q50 = p99(&base(l, 50, spec50, jobs), RunOptions::default());
+        let q600 = p99(&base(l, 600, spec600, jobs), RunOptions::default());
+        println!(
+            "{name:>22} {q50:>10.3} {q600:>10.3} {:>9.1}%",
+            (1.0 - q600 / q50) * 100.0
+        );
+    }
+    println!("(the heavier the tail, the bigger the tiny-tasks win — variance reduction\n is the mechanism; deterministic tasks gain only queue-packing effects)");
+}

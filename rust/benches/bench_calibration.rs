@@ -1,0 +1,63 @@
+//! Table §2.6 bench: regenerate the overhead-parameter table by running
+//! the calibration pipeline against sparklite with the paper's overhead
+//! injected, and print fitted-vs-injected (the reproduction of the
+//! paper's four-parameter table).
+//!
+//! `cargo bench --bench bench_calibration`
+
+use std::time::Instant;
+use tiny_tasks::config::{EmulatorConfig, ModelKind, OverheadConfig};
+use tiny_tasks::coordinator::calibrate;
+
+fn main() {
+    let injected = OverheadConfig::paper();
+    // NB: `calibrate` reuses one execution spec across all k, so pick a
+    // task size small enough that the *largest* k stays stable
+    // (ρ = λ k E[exec] / l: 0.2 at k=64, 0.6 at k=192) and a time scale
+    // that respects the 1-core ~2000 tasks/s wall rate cap.
+    let base = EmulatorConfig {
+        executors: 8,
+        tasks_per_job: 64,
+        mode: ModelKind::ForkJoinSingleQueue,
+        interarrival: "exp:0.4".into(),
+        execution: "exp:16.0".into(),
+        time_scale: 0.06,
+        jobs: 150,
+        warmup: 15,
+        seed: 5,
+        inject_overhead: Some(injected),
+    };
+    let t0 = Instant::now();
+    let cal = calibrate::calibrate(&base, &[64, 192]).expect("calibration");
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("== Table (Sec. 2.6): overhead model parameters ==");
+    println!("{:<14} {:>14} {:>14}", "parameter", "injected", "fitted");
+    println!(
+        "{:<14} {:>11.3} ms {:>11.3} ms",
+        "c_task_ts",
+        injected.c_task_ts * 1e3,
+        cal.fitted.c_task_ts * 1e3
+    );
+    println!(
+        "{:<14} {:>10.0} 1/s {:>10.0} 1/s",
+        "mu_task_ts", injected.mu_task_ts, cal.fitted.mu_task_ts
+    );
+    println!(
+        "{:<14} {:>11.3} ms {:>11.3} ms",
+        "c_job_pd",
+        injected.c_job_pd * 1e3,
+        cal.fitted.c_job_pd * 1e3
+    );
+    println!(
+        "{:<14} {:>11.5} ms {:>11.5} ms",
+        "c_task_pd",
+        injected.c_task_pd * 1e3,
+        cal.fitted.c_task_pd * 1e3
+    );
+    println!(
+        "\nPP distance: no-overhead {:.4} -> fitted {:.4}  ({} tasks, {} jobs, {dt:.1}s)",
+        cal.pp_without_overhead, cal.pp_with_overhead, cal.tasks_measured, cal.jobs_measured
+    );
+    println!("note: fitted values include sparklite's intrinsic overhead on top of the injection.");
+}

@@ -1,0 +1,61 @@
+//! DES hot-path benchmark (§Perf L3 target: tasks/second through the
+//! simulator's heap recursion). One bench per model, plus the tiny-tasks
+//! sweep shapes from Fig. 8 to keep the perf numbers tied to the paper's
+//! workload.
+//!
+//! `cargo bench --bench bench_des`
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::util::bench::Bencher;
+
+fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.5".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs,
+        warmup: 0,
+        seed: 1,
+        overhead: None,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    // Each iteration simulates a fixed batch of jobs; report tasks/sec.
+    for (name, model, l, k, jobs) in [
+        ("sm_l50_k400", ModelKind::SplitMerge, 50usize, 400usize, 200usize),
+        ("sqfj_l50_k400", ModelKind::ForkJoinSingleQueue, 50, 400, 200),
+        ("sqfj_l50_k2500", ModelKind::ForkJoinSingleQueue, 50, 2500, 40),
+        ("fjps_l50", ModelKind::ForkJoinPerServer, 50, 50, 2000),
+        ("ideal_l50_k400", ModelKind::Ideal, 50, 400, 500),
+    ] {
+        let c = cfg(model, l, k, jobs);
+        let r = b.bench(name, || {
+            sim::run(&c, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        let tasks_per_iter = (jobs * k) as f64;
+        println!(
+            "    -> {:.1} M tasks/s",
+            tasks_per_iter / r.mean.as_secs_f64() / 1e6
+        );
+    }
+    // Overhead-model sampling cost on the hot path.
+    {
+        let c = SimulationConfig {
+            overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+            ..cfg(ModelKind::ForkJoinSingleQueue, 50, 400, 200)
+        };
+        let r = b.bench("sqfj_l50_k400_overhead", || {
+            sim::run(&c, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        println!(
+            "    -> {:.1} M tasks/s",
+            (200 * 400) as f64 / r.mean.as_secs_f64() / 1e6
+        );
+    }
+    b.finish();
+}

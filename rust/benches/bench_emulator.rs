@@ -1,0 +1,99 @@
+//! sparklite benchmark (§Perf L3): per-task dispatch overhead of the
+//! emulator stack (serialize → schedule → transmit → deserialize →
+//! execute(0) → result round-trip) and end-to-end throughput with real
+//! payloads — the intrinsic overhead floor that the calibration pipeline
+//! measures.
+//!
+//! `cargo bench --bench bench_emulator`
+
+use tiny_tasks::config::{EmulatorConfig, ModelKind};
+use tiny_tasks::emulator::{self, Cluster, Payload};
+use tiny_tasks::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new(
+        std::time::Duration::from_millis(300),
+        std::time::Duration::from_millis(1500),
+    );
+
+    // Dispatch overhead: near-zero-duration tasks, measure tasks/sec.
+    {
+        let cfg = EmulatorConfig {
+            executors: 4,
+            tasks_per_job: 64,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: "det:0.0001".into(),
+            execution: "det:0.000001".into(),
+            time_scale: 1.0,
+            jobs: 20,
+            warmup: 0,
+            seed: 1,
+            inject_overhead: None,
+        };
+        let r = b.bench("dispatch_1280_null_tasks", || {
+            emulator::run(&cfg).unwrap().listener.tasks.len()
+        });
+        let tasks = 20.0 * 64.0;
+        println!(
+            "    -> {:.0} tasks/s dispatch ({:.1} µs/task overhead floor)",
+            tasks / r.mean.as_secs_f64(),
+            r.mean.as_secs_f64() / tasks * 1e6
+        );
+    }
+
+    // Mean intrinsic per-task overhead measured by the listener.
+    {
+        let cfg = EmulatorConfig {
+            executors: 4,
+            tasks_per_job: 32,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: "exp:2.0".into(),
+            execution: "exp:4.0".into(),
+            time_scale: 0.01,
+            jobs: 60,
+            warmup: 6,
+            seed: 2,
+            inject_overhead: None,
+        };
+        let res = emulator::run(&cfg).unwrap();
+        let mean_oh: f64 = res.listener.tasks.iter().map(|t| t.overhead()).sum::<f64>()
+            / res.listener.tasks.len() as f64;
+        println!(
+            "intrinsic task overhead: mean {:.1} µs wall ({:.3} ms emulated), fraction {:.4}",
+            mean_oh * 1e6,
+            mean_oh / cfg.time_scale * 1e3,
+            res.listener.mean_overhead_fraction()
+        );
+    }
+
+    // Real-payload throughput (matmul + wordcount mix).
+    {
+        let cfg = EmulatorConfig {
+            executors: 4,
+            tasks_per_job: 16,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: "det:0.001".into(),
+            execution: "det:1".into(),
+            time_scale: 1.0,
+            jobs: 8,
+            warmup: 0,
+            seed: 3,
+            inject_overhead: None,
+        };
+        let r = b.bench("real_payload_128_tasks", || {
+            Cluster::run_with(&cfg, |job, task| {
+                if task % 2 == 0 {
+                    Payload::MatMul { n: 48, seed: job ^ task as u64 }
+                } else {
+                    Payload::WordCount { text: "a b c d e f g h ".repeat(64), top: 5 }
+                }
+            })
+            .unwrap()
+            .listener
+            .tasks
+            .len()
+        });
+        println!("    -> {:.0} real tasks/s", 128.0 / r.mean.as_secs_f64());
+    }
+    b.finish();
+}

@@ -1,0 +1,31 @@
+//! Figure-regeneration bench: runs every paper figure's pipeline at a
+//! miniature scale and reports wall time per figure. This is the
+//! "regenerate every table and figure" target (DESIGN.md §4); full-size
+//! CSVs come from `tiny-tasks figure all --scale quick|paper`.
+//!
+//! `cargo bench --bench bench_figures`
+
+use std::time::Instant;
+use tiny_tasks::coordinator::figures::{self, FigureCtx, Scale};
+use tiny_tasks::runtime::BoundsEngine;
+use tiny_tasks::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("reports/bench");
+    std::fs::create_dir_all(&out)?;
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::with_default_size();
+    let ctx = FigureCtx { out_dir: &out, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+
+    println!("== figure pipelines (quick scale) ==");
+    let mut total = 0.0;
+    for id in figures::ALL {
+        let t0 = Instant::now();
+        figures::run(id, &ctx)?;
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        println!("--- {id}: {dt:.2}s\n");
+    }
+    println!("all figures regenerated in {total:.1}s -> {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Artifact-engine benchmark (§Perf L1/L2 target): latency of one padded
+//! batch (128 configs) through the AOT bounds/erlang artifacts via PJRT,
+//! against the pure-Rust native engine on the same queries.
+//!
+//! `cargo bench --bench bench_runtime`
+
+use tiny_tasks::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
+use tiny_tasks::util::bench::Bencher;
+
+fn queries(n: usize) -> Vec<BoundQuery> {
+    (0..n)
+        .map(|i| {
+            let k = 50 + 50 * (i % 50);
+            BoundQuery {
+                k,
+                l: 50,
+                lambda: 0.5,
+                mu: k as f64 / 50.0,
+                epsilon: 0.01,
+                overhead: None,
+            }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::default();
+    let native = BoundsEngine::native();
+    let qs = queries(128);
+
+    let rn = b.bench("native_bounds_batch128", || native.bounds(&qs).unwrap().len()).mean;
+    println!("    -> {:.1} configs/s", 128.0 / rn.as_secs_f64());
+
+    match BoundsEngine::artifact() {
+        Ok(artifact) => {
+            let ra = b
+                .bench("artifact_bounds_batch128", || {
+                    artifact.bounds(&qs).unwrap().len()
+                })
+                .mean;
+            println!("    -> {:.1} configs/s", 128.0 / ra.as_secs_f64());
+            println!(
+                "    artifact/native latency ratio: {:.2}x",
+                ra.as_secs_f64() / rn.as_secs_f64()
+            );
+            let eq: Vec<ErlangQuery> = (0..128)
+                .map(|i| ErlangQuery {
+                    l: 1 + i % 50,
+                    kappa: 20,
+                    lambda: 0.5,
+                    mu: 20.0,
+                    epsilon: 1e-6,
+                })
+                .collect();
+            let re = b
+                .bench("artifact_erlang_batch128", || {
+                    artifact.erlang(&eq).unwrap().len()
+                })
+                .mean;
+            println!("    -> {:.1} configs/s", 128.0 / re.as_secs_f64());
+            let pairs: Vec<(usize, usize)> = (0..128).map(|i| (50 + i * 10, 50)).collect();
+            b.bench("artifact_stability_batch128", || {
+                artifact.stability(&pairs).unwrap().len()
+            });
+        }
+        Err(e) => println!("artifacts unavailable ({e}); native only"),
+    }
+    b.finish();
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! (σ,ρ) envelope rates (Def. 2) for the iid processes used throughout
+//! the paper. In the iid case σ = 0 and the envelopes are fully described
+//! by their rates ρ(θ).
+
+/// Arrival envelope rate for iid `Exp(lambda)` inter-arrival times
+/// (Eq. 5): `ρ_A(−θ) = −(1/θ) ln(λ / (λ + θ))`, θ > 0.
+#[inline]
+pub fn rho_arrival_exp(lambda: f64, theta: f64) -> f64 {
+    debug_assert!(lambda > 0.0 && theta > 0.0);
+    -(lambda / (lambda + theta)).ln() / theta
+}
+
+/// Service envelope rate for iid `Exp(mu)` service times (Eq. 6):
+/// `ρ_S(θ) = (1/θ) ln(μ / (μ − θ))`, valid for θ ∈ (0, μ).
+/// Returns `f64::INFINITY` outside the domain.
+#[inline]
+pub fn rho_service_exp(mu: f64, theta: f64) -> f64 {
+    debug_assert!(mu > 0.0 && theta > 0.0);
+    if theta >= mu {
+        return f64::INFINITY;
+    }
+    (mu / (mu - theta)).ln() / theta
+}
+
+/// Ideal-partition envelope rate (Eq. 10): jobs of k iid `Exp(mu)` tasks
+/// split into l equal shares give `Erlang(k, l·mu)` service times with
+/// `ρ_Q(θ) = (k/θ) ln(lμ / (lμ − θ))`, θ ∈ (0, lμ).
+#[inline]
+pub fn rho_ideal(k: usize, l: usize, mu: f64, theta: f64) -> f64 {
+    debug_assert!(theta > 0.0);
+    let lmu = l as f64 * mu;
+    if theta >= lmu {
+        return f64::INFINITY;
+    }
+    k as f64 * (lmu / (lmu - theta)).ln() / theta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ρ_A(−θ) decreases from the mean inter-arrival time toward zero;
+    /// ρ_S(θ) increases from the mean service time (Sec. 3.1 remark).
+    #[test]
+    fn limits_and_monotonicity() {
+        let lambda = 0.5;
+        let mu = 1.0;
+        // θ → 0 limits approach the means.
+        assert!((rho_arrival_exp(lambda, 1e-9) - 2.0).abs() < 1e-6);
+        assert!((rho_service_exp(mu, 1e-9) - 1.0).abs() < 1e-6);
+        let mut prev_a = f64::INFINITY;
+        let mut prev_s = 0.0;
+        for i in 1..100 {
+            let theta = i as f64 * 0.009;
+            let a = rho_arrival_exp(lambda, theta);
+            let s = rho_service_exp(mu, theta);
+            assert!(a < prev_a, "rho_A decreasing");
+            assert!(s > prev_s, "rho_S increasing");
+            prev_a = a;
+            prev_s = s;
+        }
+    }
+
+    #[test]
+    fn service_domain_edge() {
+        assert!(rho_service_exp(1.0, 1.0).is_infinite());
+        assert!(rho_service_exp(1.0, 0.999) < f64::INFINITY);
+    }
+
+    /// Ideal with k = l = 1 equals the plain exponential envelope.
+    #[test]
+    fn ideal_reduces_to_exponential() {
+        for theta in [0.1, 0.5, 0.9] {
+            let a = rho_ideal(1, 1, 1.0, theta);
+            let b = rho_service_exp(1.0, theta);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    /// MGF check: ρ_S(θ) = ln E[e^{θX}]/θ for X ~ Exp(mu), via Monte Carlo.
+    #[test]
+    fn matches_monte_carlo_mgf() {
+        use crate::rng::{Pcg64, Rng};
+        let mu = 2.0;
+        let theta = 0.8;
+        let mut rng = Pcg64::seed_from_u64(21);
+        let n = 2_000_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let x = -rng.next_f64_open().ln() / mu;
+            acc += (theta * x).exp();
+        }
+        let mc = (acc / n as f64).ln() / theta;
+        let exact = rho_service_exp(mu, theta);
+        assert!((mc - exact).abs() < 0.01, "{mc} vs {exact}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Big-tasks split-merge analysis (Secs. 4.2–4.3): jobs of k = l tasks
+//! with `Erlang(kappa, mu)` service times — the direct-refinement
+//! counterpart of the tiny-tasks model. Uses numeric integration of the
+//! Erlang-max CCDF for `E[Δ]` (Eq. 21) and of the max-MGF for ρ_S(θ)
+//! (Sec. 4.3).
+
+use crate::dist::Erlang;
+use crate::util::math::simpson;
+
+/// `E[Δ] = E[max_{i∈[1,l]} Q_i]`, `Q_i ~ Erlang(kappa, mu)` — Eq. 21,
+/// `∫_0^∞ 1 − F(x)^l dx` by Simpson quadrature with an adaptive upper
+/// limit chosen from the Erlang tail.
+pub fn mean_max_erlang(l: usize, kappa: u32, mu: f64) -> f64 {
+    assert!(l >= 1 && kappa >= 1 && mu > 0.0);
+    let erl = Erlang::new(kappa, mu);
+    // Upper limit: mean + sd scaled by ln(l) margin, then extended until
+    // the integrand is negligible.
+    let mean = kappa as f64 / mu;
+    let sd = (kappa as f64).sqrt() / mu;
+    let mut hi = mean + sd * (6.0 + 2.0 * (l as f64).ln());
+    while 1.0 - erl.cdf(hi).powi(l as i32) > 1e-13 {
+        hi *= 1.5;
+    }
+    simpson(|x| 1.0 - erl.cdf(x).powi(l as i32), 0.0, hi, 4096)
+}
+
+/// MGF of the Erlang-max: `E[e^{θ max_l Erlang(kappa,mu)}]` (Sec. 4.3).
+///
+/// Substituting `x = e^{θy}` in the paper's CCDF integral gives
+/// `E[e^{θS}] = 1 + θ ∫_0^∞ (1 − F(y)^l) e^{θy} dy`, convergent for
+/// θ ∈ (0, μ). Returns `f64::INFINITY` outside the domain.
+pub fn mgf_max_erlang(l: usize, kappa: u32, mu: f64, theta: f64) -> f64 {
+    assert!(theta > 0.0);
+    if theta >= mu {
+        return f64::INFINITY;
+    }
+    let erl = Erlang::new(kappa, mu);
+    // Integrand tail ~ l e^{-(mu-theta) y} y^{kappa-1}: pick the limit from
+    // the exponential decay rate.
+    let decay = mu - theta;
+    let mean = kappa as f64 / mu;
+    let mut hi = mean + (40.0 + 2.0 * (l as f64).ln() + 8.0 * kappa as f64) / decay;
+    let integrand = |y: f64| (1.0 - erl.cdf(y).powi(l as i32)) * (theta * y).exp();
+    while integrand(hi) > 1e-14 {
+        hi *= 1.3;
+    }
+    1.0 + theta * simpson(integrand, 0.0, hi, 8192)
+}
+
+/// Envelope rate of the big-tasks split-merge service process:
+/// `ρ_S(θ) = ln E[e^{θ max}] / θ`.
+pub fn rho_s_big_tasks(l: usize, kappa: u32, mu: f64, theta: f64) -> f64 {
+    let mgf = mgf_max_erlang(l, kappa, mu, theta);
+    if !mgf.is_finite() {
+        return f64::INFINITY;
+    }
+    mgf.ln() / theta
+}
+
+/// Big-tasks stability region (Eq. 23): `ρ* = κ / (μ · E[Δ])` with E[Δ]
+/// from Eq. 21 (utilization ρ = λ E[Q] = λκ/μ).
+pub fn max_utilization_big_tasks(l: usize, kappa: u32, mu: f64) -> f64 {
+    kappa as f64 / (mu * mean_max_erlang(l, kappa, mu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::harmonic;
+
+    /// κ = 1 reduces to max of exponentials: E[Δ] = H_l / μ.
+    #[test]
+    fn kappa1_mean_is_harmonic() {
+        for l in [1usize, 5, 20, 50] {
+            let got = mean_max_erlang(l, 1, 2.0);
+            let expect = harmonic(l as u64) / 2.0;
+            assert!(
+                (got - expect).abs() / expect < 1e-6,
+                "l={l}: {got} vs {expect}"
+            );
+        }
+    }
+
+    /// κ = 1 MGF reduces to the product identity (Eq. 17):
+    /// `E[e^{θ max_l Exp(mu)}] = Π_{i=1}^{l} iμ/(iμ−θ)`.
+    #[test]
+    fn kappa1_mgf_matches_product_identity() {
+        let (l, mu, theta) = (10usize, 1.0, 0.35);
+        let got = mgf_max_erlang(l, 1, mu, theta);
+        let expect: f64 = (1..=l)
+            .map(|i| {
+                let imu = i as f64 * mu;
+                imu / (imu - theta)
+            })
+            .product();
+        assert!((got - expect).abs() / expect < 1e-6, "{got} vs {expect}");
+    }
+
+    /// l = 1: E[Δ] = κ/μ exactly; MGF = (μ/(μ−θ))^κ.
+    #[test]
+    fn single_server_closed_forms() {
+        let (kappa, mu, theta) = (20u32, 20.0, 3.0);
+        let mean = mean_max_erlang(1, kappa, mu);
+        assert!((mean - 1.0).abs() < 1e-6, "{mean}");
+        let mgf = mgf_max_erlang(1, kappa, mu, theta);
+        let expect = (mu / (mu - theta)).powi(kappa as i32);
+        assert!((mgf - expect).abs() / expect < 1e-6, "{mgf} vs {expect}");
+    }
+
+    /// Eq. 23 vs Monte-Carlo from the simulator's stability module:
+    /// big-tasks stability for Erlang tasks.
+    #[test]
+    fn stability_matches_monte_carlo() {
+        use crate::sim::stability::sm_max_utilization;
+        use crate::sim::OverheadModel;
+        let (l, kappa, mu) = (10usize, 20u32, 20.0);
+        let analytic = max_utilization_big_tasks(l, kappa, mu);
+        let erl = crate::dist::Erlang::new(kappa, mu);
+        // Big tasks: k = l tasks with Erlang service.
+        let mc = sm_max_utilization(l, l, &erl, &OverheadModel::none(), 20_000, 6);
+        assert!(
+            (analytic - mc).abs() / analytic < 0.02,
+            "{analytic} vs {mc}"
+        );
+    }
+
+    /// Direct refinement dominance: tiny tasks (Eq. 20) strictly beat big
+    /// tasks (Eq. 23) for κ > 1 — the Fig. 12(a) relationship.
+    #[test]
+    fn tiny_beats_big() {
+        let kappa = 20u32;
+        let mu = 20.0;
+        for l in [5usize, 20, 50] {
+            let big = max_utilization_big_tasks(l, kappa, mu);
+            let tiny =
+                1.0 / (1.0 + (harmonic(l as u64) - 1.0) / kappa as f64); // Eq. 20
+            assert!(tiny > big, "l={l}: tiny {tiny} !> big {big}");
+        }
+    }
+}

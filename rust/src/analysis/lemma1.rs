@@ -1,0 +1,174 @@
+//! Lemma 1: the tiny-tasks split-merge model is a max-plus server whose
+//! iid-exponential service envelope decomposes as
+//! `ρ_S(θ) = ρ_X(θ) + (k−l) ρ_Z(θ)` where X is the merge residual (max of
+//! l residual exponentials) and Z the inter-start gap (min of l
+//! exponentials, i.e. `Exp(l·mu)`); plus the Sec.-6 overhead-augmented
+//! variants ρ_X°, ρ_Z° (Eqs. 26, 28, 31).
+
+use crate::config::OverheadConfig;
+use crate::util::math::harmonic;
+
+/// `ρ_X(θ) = (1/θ) Σ_{i=1}^{l} ln(iμ / (iμ − θ))`, θ ∈ (0, μ) — the MGF
+/// rate of `X = max_l Exp(mu)` via the order-statistics identity (Eq. 17).
+pub fn rho_x(l: usize, mu: f64, theta: f64) -> f64 {
+    debug_assert!(theta > 0.0);
+    if theta >= mu {
+        return f64::INFINITY;
+    }
+    let mut sum = 0.0;
+    for i in 1..=l {
+        let imu = i as f64 * mu;
+        sum += (imu / (imu - theta)).ln();
+    }
+    sum / theta
+}
+
+/// `ρ_Z(θ) = (1/θ) ln(lμ / (lμ − θ))`, θ ∈ (0, lμ) — the MGF rate of
+/// `Z = min_l Exp(mu) ~ Exp(lμ)`.
+pub fn rho_z(l: usize, mu: f64, theta: f64) -> f64 {
+    debug_assert!(theta > 0.0);
+    let lmu = l as f64 * mu;
+    if theta >= lmu {
+        return f64::INFINITY;
+    }
+    (lmu / (lmu - theta)).ln() / theta
+}
+
+/// Lemma 1 service envelope rate `ρ_S(θ) = ρ_X(θ) + (k−l) ρ_Z(θ)`.
+pub fn rho_s(l: usize, k: usize, mu: f64, theta: f64) -> f64 {
+    debug_assert!(k >= l);
+    rho_x(l, mu, theta) + (k - l) as f64 * rho_z(l, mu, theta)
+}
+
+/// Lemma 1 expected job service time
+/// `E[Δ] = (1/μ)(k/l + Σ_{i=2}^{l} 1/i)`.
+pub fn mean_service(l: usize, k: usize, mu: f64) -> f64 {
+    debug_assert!(k >= l && l >= 1);
+    (k as f64 / l as f64 + harmonic(l as u64) - 1.0) / mu
+}
+
+/// Overhead-augmented `ρ_X°(θ)` (fork-join form, Eq. 26): the mean task
+/// overhead (Eq. 24) is added as a constant to X.
+pub fn rho_x_overhead(l: usize, mu: f64, theta: f64, oh: &OverheadConfig) -> f64 {
+    oh.mean_task_overhead() + rho_x(l, mu, theta)
+}
+
+/// Overhead-augmented `ρ_X°(θ)` for split-merge (Eq. 31): the blocking
+/// pre-departure overhead `c_job^pd + k·c_task^pd` joins the constant.
+pub fn rho_x_overhead_sm(
+    l: usize,
+    k: usize,
+    mu: f64,
+    theta: f64,
+    oh: &OverheadConfig,
+) -> f64 {
+    oh.mean_task_overhead() + oh.pre_departure(k) + rho_x(l, mu, theta)
+}
+
+/// Overhead-augmented `ρ_Z°(θ)` (Eq. 28): each active task pays a `1/l`
+/// share of the task overhead per scheduling epoch.
+pub fn rho_z_overhead(l: usize, mu: f64, theta: f64, oh: &OverheadConfig) -> f64 {
+    oh.mean_task_overhead() / l as f64 + rho_z(l, mu, theta)
+}
+
+/// Split-merge service envelope with overhead:
+/// `ρ_S°(θ) = ρ_X°_sm(θ) + (k−l) ρ_Z°(θ)`.
+pub fn rho_s_overhead_sm(
+    l: usize,
+    k: usize,
+    mu: f64,
+    theta: f64,
+    oh: &OverheadConfig,
+) -> f64 {
+    rho_x_overhead_sm(l, k, mu, theta, oh) + (k - l) as f64 * rho_z_overhead(l, mu, theta, oh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// k = l recovers the conventional split-merge envelope (Eq. 8).
+    #[test]
+    fn reduces_to_eq8_for_big_tasks() {
+        let (l, mu, theta) = (50usize, 1.0, 0.4);
+        let expect: f64 = (1..=l)
+            .map(|i| {
+                let imu = i as f64 * mu;
+                (imu / (imu - theta)).ln()
+            })
+            .sum::<f64>()
+            / theta;
+        assert!((rho_s(l, l, mu, theta) - expect).abs() < 1e-12);
+    }
+
+    /// θ → 0 limit of ρ_S equals E[Δ] (the envelope rate starts at the
+    /// mean, Sec. 3.1).
+    #[test]
+    fn theta_zero_limit_is_mean_service() {
+        let (l, k, mu) = (10usize, 40usize, 2.0);
+        let rho0 = rho_s(l, k, mu, 1e-9);
+        let mean = mean_service(l, k, mu);
+        assert!((rho0 - mean).abs() < 1e-5, "{rho0} vs {mean}");
+    }
+
+    /// ρ_X via Monte Carlo: E[e^{θ max_l Exp(mu)}].
+    #[test]
+    fn rho_x_matches_monte_carlo() {
+        use crate::rng::{Pcg64, Rng};
+        let (l, mu, theta) = (5usize, 1.0, 0.3);
+        let mut rng = Pcg64::seed_from_u64(13);
+        let n = 1_000_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let mut mx = 0.0f64;
+            for _ in 0..l {
+                mx = mx.max(-rng.next_f64_open().ln() / mu);
+            }
+            acc += (theta * mx).exp();
+        }
+        let mc = (acc / n as f64).ln() / theta;
+        let exact = rho_x(l, mu, theta);
+        assert!((mc - exact).abs() < 0.02, "{mc} vs {exact}");
+    }
+
+    /// Monotonicity in k: more tiny tasks → larger total service envelope
+    /// (each extra task adds a ρ_Z term).
+    #[test]
+    fn monotone_in_k() {
+        let (l, mu, theta) = (10usize, 1.0, 0.2);
+        let mut prev = 0.0;
+        for k in [10, 20, 40, 80] {
+            let r = rho_s(l, k, mu, theta);
+            assert!(r > prev);
+            prev = r;
+        }
+    }
+
+    /// Overhead variants exceed their clean counterparts and collapse to
+    /// them when overhead is zero.
+    #[test]
+    fn overhead_variants_consistent() {
+        let (l, k, mu, theta) = (10usize, 30usize, 3.0, 0.5);
+        let oh = OverheadConfig::paper();
+        let zero = OverheadConfig::zero();
+        assert!(rho_x_overhead(l, mu, theta, &oh) > rho_x(l, mu, theta));
+        assert!(rho_z_overhead(l, mu, theta, &oh) > rho_z(l, mu, theta));
+        assert!(
+            (rho_x_overhead(l, mu, theta, &zero) - rho_x(l, mu, theta)).abs() < 1e-15
+        );
+        assert!(
+            (rho_s_overhead_sm(l, k, mu, theta, &zero) - rho_s(l, k, mu, theta)).abs()
+                < 1e-12
+        );
+        // SM form includes the blocking pre-departure term.
+        assert!(
+            rho_x_overhead_sm(l, k, mu, theta, &oh) > rho_x_overhead(l, mu, theta, &oh)
+        );
+    }
+
+    /// Mean service for l = 1: every task runs serially → E[Δ] = k/μ.
+    #[test]
+    fn single_server_mean() {
+        assert!((mean_service(1, 7, 2.0) - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,32 @@
+//! Stochastic network-calculus analysis (Secs. 3–6) in pure Rust.
+//!
+//! This module is the reference implementation of the paper's analytical
+//! results; the AOT-compiled JAX/Pallas artifacts (see `python/compile/`)
+//! evaluate the same math on the batched hot path and are cross-validated
+//! against this module in `rust/tests/artifact_cross_validation.rs`.
+//!
+//! Contents:
+//! * [`envelope`] — (σ,ρ) envelope rates for Exp arrivals/services
+//!   (Eqs. 5–6) and the Erlang/ideal-partition rate (Eq. 10);
+//! * [`lemma1`] — tiny-tasks split-merge service envelope
+//!   ρ_S(θ) = ρ_X(θ) + (k−l) ρ_Z(θ) and E[Δ] (Lemma 1), plus the Sec.-6
+//!   overhead-augmented variants (Eqs. 26, 28, 31);
+//! * [`theorem1`] — the statistical waiting/sojourn bound machinery with
+//!   θ-optimization (Theorem 1);
+//! * [`theorem2`] — tiny-tasks single-queue fork-join bounds (Theorem 2);
+//! * [`erlang`] — big-tasks split-merge via numeric integration of the
+//!   Erlang-max CCDF/MGF (Eqs. 21–23, Sec. 4.3);
+//! * [`stability`] — closed-form stability regions (Eqs. 20, 23);
+//! * [`bounds`] — the high-level [`bounds::BoundParams`] →
+//!   quantile-bound API used by the coordinator and figures.
+
+pub mod bounds;
+pub mod envelope;
+pub mod erlang;
+pub mod lemma1;
+pub mod moments;
+pub mod stability;
+pub mod theorem1;
+pub mod theorem2;
+
+pub use bounds::{sojourn_bound, waiting_bound, BoundModel, BoundParams};

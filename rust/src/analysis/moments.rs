@@ -1,0 +1,114 @@
+//! Mean-value bounds derived from the MGF machinery.
+//!
+//! Theorem 1 gives `P[T > τ] ≤ e^{θρ_S(θ)} e^{−θτ}`. Integrating the
+//! (capped) tail bound yields a mean-sojourn bound for any feasible θ:
+//!
+//!   E[T] = ∫₀^∞ P[T > τ] dτ ≤ τ₀ + e^{θρ_S(θ)} e^{−θτ₀} / θ
+//!
+//! minimized at `τ₀ = ρ_S(θ) (+ ln c / θ)` where the cap `min(1, ·)`
+//! binds, giving the clean form `E[T] ≤ ρ_S(θ) + 1/θ`. Optimizing over θ
+//! produces a mean bound companion to the quantile bounds — useful for
+//! quick capacity arithmetic in the advisor.
+
+use super::theorem1::optimize_theta;
+
+/// Mean-sojourn bound `min_θ { ρ_S(θ) + 1/θ }` s.t. `ρ_S(θ) ≤ ρ_A(−θ)`.
+pub fn mean_sojourn_bound<RS, RA>(theta_sup: f64, rho_s: RS, rho_a: RA) -> Option<f64>
+where
+    RS: Fn(f64) -> f64,
+    RA: Fn(f64) -> f64,
+{
+    optimize_theta(
+        theta_sup,
+        |th| rho_s(th) + 1.0 / th,
+        |th| rho_s(th) <= rho_a(th),
+    )
+    .map(|(_, v)| v)
+}
+
+/// Mean-waiting bound `min_θ { 1/θ }` over feasible θ.
+pub fn mean_waiting_bound<RS, RA>(theta_sup: f64, rho_s: RS, rho_a: RA) -> Option<f64>
+where
+    RS: Fn(f64) -> f64,
+    RA: Fn(f64) -> f64,
+{
+    optimize_theta(theta_sup, |th| 1.0 / th, |th| rho_s(th) <= rho_a(th))
+        .map(|(_, v)| v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::envelope::{rho_arrival_exp, rho_service_exp};
+    use crate::analysis::lemma1;
+
+    /// M/M/1: exact E[T] = 1/(μ−λ); the bound must dominate it and stay
+    /// within a small constant factor.
+    #[test]
+    fn mm1_mean_bound() {
+        let (lambda, mu) = (0.5, 1.0);
+        let exact = 1.0 / (mu - lambda);
+        let bound = mean_sojourn_bound(
+            mu,
+            |th| rho_service_exp(mu, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!(bound >= exact, "{bound} < exact {exact}");
+        assert!(bound < 3.5 * exact, "{bound} vs {exact}");
+    }
+
+    /// The mean bound dominates the simulated mean for tiny-tasks SM.
+    #[test]
+    fn sm_mean_bound_dominates_simulation() {
+        use crate::config::{ModelKind, SimulationConfig};
+        let (l, k, lambda) = (10usize, 60usize, 0.4);
+        let mu = k as f64 / l as f64;
+        let bound = mean_sojourn_bound(
+            mu,
+            |th| lemma1::rho_s(l, k, mu, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        let cfg = SimulationConfig {
+            model: ModelKind::SplitMerge,
+            servers: l,
+            tasks_per_job: k,
+            arrival: crate::config::ArrivalConfig { interarrival: format!("exp:{lambda}") },
+            service: crate::config::ServiceConfig { execution: format!("exp:{mu}") },
+            jobs: 20_000,
+            warmup: 2_000,
+            seed: 5,
+            overhead: None,
+        };
+        let res = crate::sim::run(&cfg, Default::default()).unwrap();
+        let sim_mean = res.sojourn_summary.mean();
+        assert!(sim_mean <= bound, "sim {sim_mean} > bound {bound}");
+        assert!(bound < sim_mean * 5.0, "vacuous bound {bound} vs {sim_mean}");
+    }
+
+    /// Waiting ≤ sojourn; unstable → None.
+    #[test]
+    fn consistency() {
+        let (lambda, mu) = (0.5, 1.0);
+        let s = mean_sojourn_bound(
+            mu,
+            |th| rho_service_exp(mu, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        let w = mean_waiting_bound(
+            mu,
+            |th| rho_service_exp(mu, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!(w < s);
+        assert!(mean_sojourn_bound(
+            1.0,
+            |th| rho_service_exp(1.0, th),
+            |th| rho_arrival_exp(2.0, th),
+        )
+        .is_none());
+    }
+}

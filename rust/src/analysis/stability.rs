@@ -1,0 +1,70 @@
+//! Closed-form stability regions (Sec. 4.2).
+
+use crate::util::math::harmonic;
+
+/// Tiny-tasks split-merge maximum stable utilization (Eq. 20):
+/// `ρ* = 1 / (1 + (1/κ) Σ_{i=2}^{l} 1/i)` with κ = k/l.
+pub fn sm_tiny_tasks(l: usize, k: usize) -> f64 {
+    assert!(k >= l && l >= 1);
+    let kappa = k as f64 / l as f64;
+    1.0 / (1.0 + (harmonic(l as u64) - 1.0) / kappa)
+}
+
+/// Conventional (k = l) split-merge maximum stable utilization:
+/// `ρ* = 1 / H_l` ([16, Eq. 21], recovered by Eq. 20 at κ = 1 only in the
+/// exponential case — for Erlang big tasks use
+/// [`crate::analysis::erlang::max_utilization_big_tasks`]).
+pub fn sm_big_tasks_exponential(l: usize) -> f64 {
+    1.0 / harmonic(l as u64)
+}
+
+/// Fork-join (any queueing discipline that is work-conserving) is stable
+/// up to utilization 1 (Sec. 3.2.2).
+pub fn fork_join() -> f64 {
+    1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq20_special_cases() {
+        // κ = 1 gives 1/H_l.
+        for l in [2usize, 10, 50] {
+            assert!((sm_tiny_tasks(l, l) - sm_big_tasks_exponential(l)).abs() < 1e-12);
+        }
+        // l = 1: always 1 (single server).
+        assert_eq!(sm_tiny_tasks(1, 10), 1.0);
+    }
+
+    #[test]
+    fn kappa_to_infinity_approaches_one() {
+        let l = 50;
+        let r10 = sm_tiny_tasks(l, 10 * l);
+        let r100 = sm_tiny_tasks(l, 100 * l);
+        let r1000 = sm_tiny_tasks(l, 1000 * l);
+        assert!(r10 < r100 && r100 < r1000);
+        assert!(r1000 > 0.995, "{r1000}");
+    }
+
+    /// The Fig.-12(a) effect: at κ = 20 the tiny-tasks region stays high
+    /// while the big-tasks (κ = 1 exponential) region decays like 1/ln l.
+    #[test]
+    fn decay_rates() {
+        let tiny_256 = sm_tiny_tasks(256, 20 * 256);
+        let big_256 = sm_big_tasks_exponential(256);
+        assert!(tiny_256 > 0.78, "{tiny_256}");
+        assert!(big_256 < 0.17, "{big_256}");
+    }
+
+    /// The Fig. 8(a) setting: l = 50, λ = 0.5, E[L] = 50 s. κ = 1 is
+    /// unstable (ρ = 0.5 > 1/H_50 ≈ 0.22); κ = 4 (k = 200) is stable.
+    #[test]
+    fn fig8a_stability_transitions() {
+        let l = 50;
+        let rho = 0.5; // λ·E[L]/l = 0.5·50/50
+        assert!(rho > sm_tiny_tasks(l, l), "big tasks unstable");
+        assert!(rho < sm_tiny_tasks(l, 200), "k=200 stable");
+    }
+}

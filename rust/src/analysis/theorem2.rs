@@ -1,0 +1,208 @@
+//! Theorem 2: tiny-tasks single-queue fork-join bounds.
+//!
+//! For l servers, k ≥ l iid `Exp(mu)` tasks per job, and iid inter-arrival
+//! times with envelope rate ρ_A(−θ), any θ ∈ (0, μ) with
+//! `k·ρ_Z(θ) ≤ ρ_A(−θ)` gives
+//!
+//! * task waiting:  `P[W_i(n) ≥ τ] ≤ e^{θ(i−1)ρ_Z(θ)} e^{−θτ}`
+//! * job sojourn:   `P[T(n) ≥ τ] ≤ e^{θ((k−1)ρ_Z(θ) + ρ_X(θ))} e^{−θτ}`
+//!
+//! with ρ_X, ρ_Z from Lemma 1. Solving for τ at violation ε and
+//! minimizing over θ yields the quantile bounds below; the Sec.-6
+//! overhead variants substitute ρ_X° and ρ_Z° and append the non-blocking
+//! pre-departure overhead directly to the sojourn quantile (Eq. 29).
+
+use super::lemma1::{rho_x, rho_x_overhead, rho_z, rho_z_overhead};
+use super::theorem1::optimize_theta;
+use crate::config::OverheadConfig;
+
+/// Job sojourn ε-quantile bound (no overhead):
+/// minimize `(k−1)ρ_Z(θ) + ρ_X(θ) + ln(1/ε)/θ` s.t. `kρ_Z(θ) ≤ ρ_A(−θ)`.
+pub fn sojourn_quantile<RA>(
+    l: usize,
+    k: usize,
+    mu: f64,
+    epsilon: f64,
+    mut rho_a: RA,
+) -> Option<f64>
+where
+    RA: FnMut(f64) -> f64,
+{
+    assert!(k >= l && l >= 1);
+    assert!(epsilon > 0.0 && epsilon < 1.0);
+    let ln_inv_eps = -epsilon.ln();
+    optimize_theta(
+        mu,
+        |th| (k - 1) as f64 * rho_z(l, mu, th) + rho_x(l, mu, th) + ln_inv_eps / th,
+        |th| k as f64 * rho_z(l, mu, th) <= rho_a(th),
+    )
+    .map(|(_, tau)| tau)
+}
+
+/// Waiting ε-quantile bound for task `i` (1-based; `i = k` gives the
+/// job's last task — the job-level waiting bound used in the figures):
+/// minimize `(i−1)ρ_Z(θ) + ln(1/ε)/θ` s.t. `kρ_Z(θ) ≤ ρ_A(−θ)`.
+pub fn waiting_quantile<RA>(
+    l: usize,
+    k: usize,
+    task_i: usize,
+    mu: f64,
+    epsilon: f64,
+    mut rho_a: RA,
+) -> Option<f64>
+where
+    RA: FnMut(f64) -> f64,
+{
+    assert!((1..=k).contains(&task_i));
+    let ln_inv_eps = -epsilon.ln();
+    optimize_theta(
+        mu,
+        |th| (task_i - 1) as f64 * rho_z(l, mu, th) + ln_inv_eps / th,
+        |th| k as f64 * rho_z(l, mu, th) <= rho_a(th),
+    )
+    .map(|(_, tau)| tau)
+}
+
+/// Sojourn ε-quantile **approximation with overhead** (Sec. 6.1):
+/// substitute ρ_X° (Eq. 26) and ρ_Z° (Eq. 28) into Th. 2, then append the
+/// non-blocking pre-departure overhead (Eq. 29):
+/// `τ° = τ + c_job^pd + k·c_task^pd`.
+pub fn sojourn_quantile_overhead<RA>(
+    l: usize,
+    k: usize,
+    mu: f64,
+    epsilon: f64,
+    oh: &OverheadConfig,
+    mut rho_a: RA,
+) -> Option<f64>
+where
+    RA: FnMut(f64) -> f64,
+{
+    assert!(k >= l && l >= 1);
+    let ln_inv_eps = -epsilon.ln();
+    let tau = optimize_theta(
+        mu,
+        |th| {
+            (k - 1) as f64 * rho_z_overhead(l, mu, th, oh)
+                + rho_x_overhead(l, mu, th, oh)
+                + ln_inv_eps / th
+        },
+        |th| k as f64 * rho_z_overhead(l, mu, th, oh) <= rho_a(th),
+    )
+    .map(|(_, tau)| tau)?;
+    Some(tau + oh.pre_departure(k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::envelope::{rho_arrival_exp, rho_service_exp};
+    use crate::analysis::theorem1;
+
+    /// k = l = 1 recovers the single-server Theorem 1 bound for
+    /// exponential jobs (the paper's stated special case).
+    #[test]
+    fn reduces_to_theorem1_single_server() {
+        let (lambda, mu, eps) = (0.4, 1.0, 0.001);
+        let th2 = sojourn_quantile(1, 1, mu, eps, |th| rho_arrival_exp(lambda, th)).unwrap();
+        let th1 = theorem1::sojourn_quantile(
+            mu,
+            eps,
+            |th| rho_service_exp(mu, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!((th2 - th1).abs() / th1 < 1e-6, "{th2} vs {th1}");
+    }
+
+    /// The paper's headline effect (Fig. 13): with E[L] held constant
+    /// (μ = k/l), the FJ bound *decreases* in k toward the ideal
+    /// partition's bound.
+    #[test]
+    fn tinyfication_improves_bound_towards_ideal() {
+        let l = 50usize;
+        let lambda = 0.5;
+        let eps = 1e-6;
+        let tau_at = |k: usize| {
+            let mu = k as f64 / l as f64;
+            sojourn_quantile(l, k, mu, eps, |th| rho_arrival_exp(lambda, th)).unwrap()
+        };
+        let t50 = tau_at(50);
+        let t100 = tau_at(100);
+        let t600 = tau_at(600);
+        let t3000 = tau_at(3000);
+        assert!(t100 < t50, "{t100} !< {t50}");
+        assert!(t600 < t100);
+        assert!(t3000 < t600);
+        // Ideal partition bound (Eq. 10 into Th. 1) as the k→∞ limit.
+        let ideal = theorem1::sojourn_quantile(
+            l as f64 * 3000.0 / l as f64,
+            eps,
+            |th| crate::analysis::envelope::rho_ideal(3000, l, 3000.0 / l as f64, th),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!(t3000 > ideal, "bound stays above ideal");
+        assert!((t3000 - ideal) / ideal < 0.35, "approaches ideal: {t3000} vs {ideal}");
+    }
+
+    /// Waiting bound grows with the task index i (later tasks wait
+    /// longer) and the job-level (i = k) bound exceeds the first task's.
+    #[test]
+    fn waiting_monotone_in_task_index() {
+        let (l, k, mu, lambda, eps) = (10usize, 40usize, 4.0, 0.5, 0.001);
+        let w1 = waiting_quantile(l, k, 1, mu, eps, |th| rho_arrival_exp(lambda, th)).unwrap();
+        let wk2 = waiting_quantile(l, k, k / 2, mu, eps, |th| rho_arrival_exp(lambda, th))
+            .unwrap();
+        let wk = waiting_quantile(l, k, k, mu, eps, |th| rho_arrival_exp(lambda, th)).unwrap();
+        assert!(w1 < wk2 && wk2 < wk, "{w1} {wk2} {wk}");
+    }
+
+    /// Overhead approximation exceeds the clean bound and collapses to it
+    /// (plus nothing) at zero overhead.
+    #[test]
+    fn overhead_consistency() {
+        let (l, k, lambda, eps) = (50usize, 500usize, 0.5, 0.01);
+        let mu = k as f64 / l as f64;
+        let clean = sojourn_quantile(l, k, mu, eps, |th| rho_arrival_exp(lambda, th)).unwrap();
+        let zero = sojourn_quantile_overhead(
+            l,
+            k,
+            mu,
+            eps,
+            &crate::config::OverheadConfig::zero(),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!((clean - zero).abs() / clean < 1e-9);
+        let oh = sojourn_quantile_overhead(
+            l,
+            k,
+            mu,
+            eps,
+            &crate::config::OverheadConfig::paper(),
+            |th| rho_arrival_exp(lambda, th),
+        )
+        .unwrap();
+        assert!(oh > clean);
+    }
+
+    /// Enough overhead makes the system infeasible (the Fig. 8 upturn).
+    #[test]
+    fn heavy_overhead_destabilizes() {
+        let (l, lambda, eps) = (50usize, 0.5, 0.01);
+        let k = 20_000usize; // extreme tinyfication
+        let mu = k as f64 / l as f64;
+        let got = sojourn_quantile_overhead(
+            l,
+            k,
+            mu,
+            eps,
+            &crate::config::OverheadConfig::paper(),
+            |th| rho_arrival_exp(lambda, th),
+        );
+        // At k = 20000 the mean task time is 2.5 ms but overhead is
+        // 3.1 ms/task — utilization exceeds 1 and no θ is feasible.
+        assert!(got.is_none());
+    }
+}

@@ -1,0 +1,189 @@
+//! Command-line interface: a small clap-style argv parser (subcommands,
+//! `--key value` / `--key=value` flags, `--bool` switches) plus help-text
+//! generation. The offline registry has no `clap`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand path, positional args, and flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// The subcommand, e.g. `"figure"`.
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+    /// `--key value` or `--key=value` pairs; bare `--switch` maps to "true".
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an argv iterator (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("stray --".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Flag as string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    /// Flag as string with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Flag as f64.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Flag as usize.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Flag as u64.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key}: {e}")),
+        }
+    }
+
+    /// Boolean switch (present, `=true`, or `=1`).
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag, e.g. `--ks 50,100,200`.
+    pub fn get_list_f64(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| p.trim().parse::<f64>().map_err(|e| format!("--{key}: {e}")))
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+tiny-tasks — reproduction of 'The Tiny-Tasks Granularity Trade-Off'
+
+USAGE:
+    tiny-tasks <COMMAND> [FLAGS]
+
+COMMANDS:
+    simulate    Run one DES simulation and print sojourn statistics
+                  --model sm|fj|fjps|ideal  --servers L --k K
+                  --lambda RATE --mu RATE  --jobs N --warmup N --seed S
+                  --overhead [--c-task-ts S --mu-task-ts R --c-job-pd S --c-task-pd S]
+    emulate     Run the sparklite cluster emulator
+                  --executors L --k K --mode sm|fj --jobs N
+                  --time-scale S --inject-overhead
+    bounds      Evaluate analytical bounds/approximations
+                  --model sm|fj|ideal|sm-big --servers L --k K
+                  --lambda RATE --mu RATE --epsilon E [--overhead]
+                  [--engine rust|artifact]
+    stability   Stability region scans (analytic + simulated)
+                  --model sm|fj --servers L --k-list 50,100,...
+    figure      Regenerate a paper figure's data as CSV
+                  fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|all
+                  [--out DIR] [--scale quick|paper]
+    calibrate   Fit the 4-parameter overhead model against sparklite
+                  [--jobs N] [--k K] [--executors L]
+    advisor     Recommend tasks-per-job for a cluster configuration
+                  --servers L --lambda RATE --workload SECONDS [--overhead]
+    selfcheck   Run artifact-vs-rust cross validation
+    help        Show this help
+
+Run 'tiny-tasks <COMMAND> --help' for details. Figure CSVs land in
+reports/ by default; every command honours --seed for reproducibility.
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        // NB: a bare switch followed by a non-flag token consumes it as a
+        // value (same ambiguity clap resolves via declared arity); put
+        // positionals first or use `--switch=true`.
+        let a = parse(&[
+            "simulate", "extra", "--servers", "50", "--k=200", "--overhead",
+        ]);
+        assert_eq!(a.command, "simulate");
+        assert_eq!(a.get_usize("servers", 0).unwrap(), 50);
+        assert_eq!(a.get_usize("k", 0).unwrap(), 200);
+        assert!(a.get_bool("overhead"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let a = parse(&["bounds"]);
+        assert_eq!(a.get_f64("lambda", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_or("model", "fj"), "fj");
+        assert!(!a.get_bool("overhead"));
+        assert_eq!(a.get_list_f64("ks").unwrap(), None);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["stability", "--k-list", "50, 100,200"]);
+        assert_eq!(
+            a.get_list_f64("k-list").unwrap().unwrap(),
+            vec![50.0, 100.0, 200.0]
+        );
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["simulate", "--servers", "fifty"]);
+        assert!(a.get_usize("servers", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "7"]);
+        assert!(a.get_bool("a"));
+        assert_eq!(a.get_u64("b", 0).unwrap(), 7);
+    }
+}

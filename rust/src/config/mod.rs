@@ -1,0 +1,16 @@
+//! Experiment configuration.
+//!
+//! A TOML-subset parser (`toml`) plus the typed experiment schema
+//! (`schema`) used by the CLI and launcher. The offline registry has no
+//! `toml`/`serde`, so parsing is hand-rolled; the supported subset covers
+//! `[section]`, `key = value` with strings, numbers, booleans and
+//! homogeneous arrays — everything our config files use.
+
+mod schema;
+mod toml;
+
+pub use schema::{
+    ArrivalConfig, EmulatorConfig, ExperimentConfig, ModelKind, OverheadConfig, ServiceConfig,
+    SimulationConfig,
+};
+pub use toml::{parse as parse_toml, TomlValue};

@@ -1,0 +1,459 @@
+//! Typed experiment configuration schema.
+
+use super::toml::{parse, TomlValue};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Which parallel-system model to run (Sec. 1.1 / Fig. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Blocking fork-join: next job starts only after the current departs.
+    SplitMerge,
+    /// Single task FIFO feeding all servers (Spark with a multi-threaded
+    /// driver); the tiny-tasks fork-join model of Th. 2.
+    ForkJoinSingleQueue,
+    /// Classic fork-join with per-server task queues (tasks bound to
+    /// servers on arrival); tiny tasks make no difference here — kept as
+    /// the k = l baseline of Fig. 3.
+    ForkJoinPerServer,
+    /// Ideal partition: each job split into exactly l equal tasks.
+    Ideal,
+}
+
+impl ModelKind {
+    /// Parse from config/CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "split-merge" | "sm" => Ok(Self::SplitMerge),
+            "fork-join" | "fj" | "single-queue-fork-join" | "sqfj" => {
+                Ok(Self::ForkJoinSingleQueue)
+            }
+            "fork-join-per-server" | "fjps" => Ok(Self::ForkJoinPerServer),
+            "ideal" => Ok(Self::Ideal),
+            _ => Err(format!("unknown model {s:?}")),
+        }
+    }
+}
+
+impl fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Self::SplitMerge => "split-merge",
+            Self::ForkJoinSingleQueue => "single-queue-fork-join",
+            Self::ForkJoinPerServer => "fork-join-per-server",
+            Self::Ideal => "ideal",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Arrival process configuration.
+#[derive(Clone, Debug)]
+pub struct ArrivalConfig {
+    /// Distribution spec for inter-arrival times, e.g. `"exp:0.5"`.
+    pub interarrival: String,
+}
+
+impl Default for ArrivalConfig {
+    fn default() -> Self {
+        Self { interarrival: "exp:0.5".into() }
+    }
+}
+
+/// Task service (execution) time configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Distribution spec for task execution times, e.g. `"exp:1.0"`.
+    pub execution: String,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { execution: "exp:1.0".into() }
+    }
+}
+
+/// The paper's four-parameter overhead model (Sec. 2.6).
+///
+/// Units are **seconds** (the paper's table is in ms; defaults below are
+/// the paper's fitted values converted).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OverheadConfig {
+    /// Constant task-service overhead `c_task^ts` added to every task.
+    pub c_task_ts: f64,
+    /// Rate of the exponential task-service overhead component
+    /// `mu_task^ts` (the outlier model); `Exp(mu)` mean is `1/mu`.
+    pub mu_task_ts: f64,
+    /// Constant per-job pre-departure overhead `c_job^pd`.
+    pub c_job_pd: f64,
+    /// Per-task pre-departure overhead rate `c_task^pd` (multiplied by k).
+    pub c_task_pd: f64,
+}
+
+impl OverheadConfig {
+    /// The paper's fitted Spark parameters (§2.6 table):
+    /// c_ts = 2.6 ms, mu_ts = 2000 s⁻¹, c_pd_job = 20 ms,
+    /// c_pd_task = 7.4e-3 ms.
+    pub fn paper() -> Self {
+        Self {
+            c_task_ts: 2.6e-3,
+            mu_task_ts: 2000.0,
+            c_job_pd: 20e-3,
+            c_task_pd: 7.4e-6,
+        }
+    }
+
+    /// All-zero overhead (the idealized models).
+    pub fn zero() -> Self {
+        Self { c_task_ts: 0.0, mu_task_ts: f64::INFINITY, c_job_pd: 0.0, c_task_pd: 0.0 }
+    }
+
+    /// Mean task-service overhead `E[O_i] = c_ts + 1/mu_ts` (Eq. 24).
+    pub fn mean_task_overhead(&self) -> f64 {
+        self.c_task_ts + if self.mu_task_ts.is_finite() { 1.0 / self.mu_task_ts } else { 0.0 }
+    }
+
+    /// Pre-departure overhead for a k-task job (Eq. 3).
+    pub fn pre_departure(&self, k: usize) -> f64 {
+        self.c_job_pd + k as f64 * self.c_task_pd
+    }
+
+    /// True when every component is zero.
+    pub fn is_zero(&self) -> bool {
+        self.c_task_ts == 0.0
+            && self.c_job_pd == 0.0
+            && self.c_task_pd == 0.0
+            && !self.mu_task_ts.is_finite()
+    }
+}
+
+/// One simulation run configuration.
+#[derive(Clone, Debug)]
+pub struct SimulationConfig {
+    /// Which model (split-merge, single-queue fork-join, ...).
+    pub model: ModelKind,
+    /// Number of workers l.
+    pub servers: usize,
+    /// Tasks per job k (≥ l in the tiny-tasks regime; the ideal model
+    /// ignores this and uses l equisized tasks).
+    pub tasks_per_job: usize,
+    /// Inter-arrival distribution.
+    pub arrival: ArrivalConfig,
+    /// Task execution-time distribution.
+    pub service: ServiceConfig,
+    /// Number of jobs to simulate (after warmup).
+    pub jobs: usize,
+    /// Jobs discarded as warmup transient.
+    pub warmup: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Overhead model; `None` = idealized (no overhead).
+    pub overhead: Option<OverheadConfig>,
+}
+
+impl Default for SimulationConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 50,
+            tasks_per_job: 50,
+            arrival: ArrivalConfig::default(),
+            service: ServiceConfig::default(),
+            jobs: 30_000,
+            warmup: 1_000,
+            seed: 1,
+            overhead: None,
+        }
+    }
+}
+
+impl SimulationConfig {
+    /// Validate parameter coherence.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.servers == 0 {
+            return Err("servers must be >= 1".into());
+        }
+        if self.tasks_per_job == 0 {
+            return Err("tasks_per_job must be >= 1".into());
+        }
+        if self.model != ModelKind::Ideal && self.tasks_per_job < self.servers {
+            return Err(format!(
+                "tiny-tasks regime requires k >= l (got k={}, l={})",
+                self.tasks_per_job, self.servers
+            ));
+        }
+        if self.jobs == 0 {
+            return Err("jobs must be >= 1".into());
+        }
+        crate::dist::parse_spec(&self.arrival.interarrival).map_err(|e| e.to_string())?;
+        crate::dist::parse_spec(&self.service.execution).map_err(|e| e.to_string())?;
+        Ok(())
+    }
+
+    /// Tinyfication factor κ = k / l.
+    pub fn kappa(&self) -> f64 {
+        self.tasks_per_job as f64 / self.servers as f64
+    }
+}
+
+/// sparklite emulator configuration.
+#[derive(Clone, Debug)]
+pub struct EmulatorConfig {
+    /// Number of executor threads (the paper's 50 dockerised executors).
+    pub executors: usize,
+    /// Tasks per job.
+    pub tasks_per_job: usize,
+    /// Submission mode (split-merge = single-threaded driver; single-queue
+    /// fork-join = multi-threaded driver).
+    pub mode: ModelKind,
+    /// Inter-arrival spec (in *emulated* seconds).
+    pub interarrival: String,
+    /// Task execution-time spec (emulated seconds).
+    pub execution: String,
+    /// Wall-clock seconds per emulated second (e.g. 0.01 = 100× speedup).
+    pub time_scale: f64,
+    /// Jobs to run.
+    pub jobs: usize,
+    /// Warmup jobs discarded from statistics.
+    pub warmup: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Inject the paper's measured Spark overhead components (Fig. 7
+    /// scale) on top of sparklite's intrinsic overhead.
+    pub inject_overhead: Option<OverheadConfig>,
+}
+
+impl Default for EmulatorConfig {
+    fn default() -> Self {
+        Self {
+            executors: 8,
+            tasks_per_job: 64,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: "exp:0.5".into(),
+            execution: "exp:1.0".into(),
+            time_scale: 0.01,
+            jobs: 200,
+            warmup: 20,
+            seed: 1,
+            inject_overhead: None,
+        }
+    }
+}
+
+impl EmulatorConfig {
+    /// Validate parameter coherence.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.executors == 0 {
+            return Err("executors must be >= 1".into());
+        }
+        if self.tasks_per_job == 0 {
+            return Err("tasks_per_job must be >= 1".into());
+        }
+        if !(self.time_scale > 0.0 && self.time_scale.is_finite()) {
+            return Err(format!("bad time_scale {}", self.time_scale));
+        }
+        if !matches!(self.mode, ModelKind::SplitMerge | ModelKind::ForkJoinSingleQueue) {
+            return Err(format!("emulator supports sm/sqfj, not {}", self.mode));
+        }
+        crate::dist::parse_spec(&self.interarrival).map_err(|e| e.to_string())?;
+        crate::dist::parse_spec(&self.execution).map_err(|e| e.to_string())?;
+        Ok(())
+    }
+}
+
+/// A whole experiment file: named simulation + emulator sections.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentConfig {
+    /// Experiment name (used for output paths).
+    pub name: String,
+    /// Simulation section, if present.
+    pub simulation: Option<SimulationConfig>,
+    /// Emulator section, if present.
+    pub emulator: Option<EmulatorConfig>,
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file.
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self, String> {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.as_ref().display()))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<Self, String> {
+        let doc = parse(text)?;
+        let name = doc
+            .get("")
+            .and_then(|s| s.get("name"))
+            .and_then(|v| v.as_str())
+            .unwrap_or("experiment")
+            .to_string();
+        let simulation = match doc.get("simulation") {
+            Some(sec) => Some(sim_from_section(sec)?),
+            None => None,
+        };
+        let emulator = match doc.get("emulator") {
+            Some(sec) => Some(emu_from_section(sec)?),
+            None => None,
+        };
+        let cfg = Self { name, simulation, emulator };
+        if let Some(s) = &cfg.simulation {
+            s.validate()?;
+        }
+        if let Some(e) = &cfg.emulator {
+            e.validate()?;
+        }
+        Ok(cfg)
+    }
+}
+
+type Section = BTreeMap<String, TomlValue>;
+
+fn get_f64(sec: &Section, key: &str, default: f64) -> Result<f64, String> {
+    match sec.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| format!("{key} must be a number")),
+    }
+}
+
+fn get_usize(sec: &Section, key: &str, default: usize) -> Result<usize, String> {
+    match sec.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| format!("{key} must be a non-negative integer")),
+    }
+}
+
+fn get_str(sec: &Section, key: &str, default: &str) -> Result<String, String> {
+    match sec.get(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("{key} must be a string")),
+    }
+}
+
+fn overhead_from(sec: &Section) -> Result<Option<OverheadConfig>, String> {
+    let enabled = match sec.get("overhead") {
+        Some(v) => v.as_bool().ok_or("overhead must be a bool")?,
+        None => false,
+    };
+    if !enabled {
+        return Ok(None);
+    }
+    let paper = OverheadConfig::paper();
+    Ok(Some(OverheadConfig {
+        c_task_ts: get_f64(sec, "c_task_ts", paper.c_task_ts)?,
+        mu_task_ts: get_f64(sec, "mu_task_ts", paper.mu_task_ts)?,
+        c_job_pd: get_f64(sec, "c_job_pd", paper.c_job_pd)?,
+        c_task_pd: get_f64(sec, "c_task_pd", paper.c_task_pd)?,
+    }))
+}
+
+fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
+    let d = SimulationConfig::default();
+    Ok(SimulationConfig {
+        model: ModelKind::parse(&get_str(sec, "model", "fork-join")?)?,
+        servers: get_usize(sec, "servers", d.servers)?,
+        tasks_per_job: get_usize(sec, "tasks_per_job", d.tasks_per_job)?,
+        arrival: ArrivalConfig { interarrival: get_str(sec, "interarrival", "exp:0.5")? },
+        service: ServiceConfig { execution: get_str(sec, "execution", "exp:1.0")? },
+        jobs: get_usize(sec, "jobs", d.jobs)?,
+        warmup: get_usize(sec, "warmup", d.warmup)?,
+        seed: get_usize(sec, "seed", 1)? as u64,
+        overhead: overhead_from(sec)?,
+    })
+}
+
+fn emu_from_section(sec: &Section) -> Result<EmulatorConfig, String> {
+    let d = EmulatorConfig::default();
+    Ok(EmulatorConfig {
+        executors: get_usize(sec, "executors", d.executors)?,
+        tasks_per_job: get_usize(sec, "tasks_per_job", d.tasks_per_job)?,
+        mode: ModelKind::parse(&get_str(sec, "mode", "fork-join")?)?,
+        interarrival: get_str(sec, "interarrival", &d.interarrival)?,
+        execution: get_str(sec, "execution", &d.execution)?,
+        time_scale: get_f64(sec, "time_scale", d.time_scale)?,
+        jobs: get_usize(sec, "jobs", d.jobs)?,
+        warmup: get_usize(sec, "warmup", d.warmup)?,
+        seed: get_usize(sec, "seed", 1)? as u64,
+        inject_overhead: overhead_from(sec)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_experiment() {
+        let cfg = ExperimentConfig::from_str(
+            r#"
+name = "fig8-point"
+[simulation]
+model = "split-merge"
+servers = 50
+tasks_per_job = 200
+interarrival = "exp:0.5"
+execution = "exp:4.0"
+jobs = 5000
+warmup = 500
+seed = 42
+overhead = true
+[emulator]
+executors = 8
+tasks_per_job = 64
+mode = "fork-join"
+time_scale = 0.005
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "fig8-point");
+        let sim = cfg.simulation.unwrap();
+        assert_eq!(sim.model, ModelKind::SplitMerge);
+        assert_eq!(sim.servers, 50);
+        assert_eq!(sim.tasks_per_job, 200);
+        assert_eq!(sim.kappa(), 4.0);
+        let oh = sim.overhead.unwrap();
+        assert!((oh.c_task_ts - 2.6e-3).abs() < 1e-12);
+        let emu = cfg.emulator.unwrap();
+        assert_eq!(emu.executors, 8);
+        assert_eq!(emu.time_scale, 0.005);
+    }
+
+    #[test]
+    fn rejects_k_below_l() {
+        let err = ExperimentConfig::from_str(
+            "[simulation]\nservers = 50\ntasks_per_job = 10\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("k >= l"), "{err}");
+    }
+
+    #[test]
+    fn model_kind_roundtrip() {
+        for (s, m) in [
+            ("split-merge", ModelKind::SplitMerge),
+            ("sm", ModelKind::SplitMerge),
+            ("fj", ModelKind::ForkJoinSingleQueue),
+            ("sqfj", ModelKind::ForkJoinSingleQueue),
+            ("fjps", ModelKind::ForkJoinPerServer),
+            ("ideal", ModelKind::Ideal),
+        ] {
+            assert_eq!(ModelKind::parse(s).unwrap(), m);
+        }
+        assert!(ModelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn overhead_helpers() {
+        let oh = OverheadConfig::paper();
+        assert!((oh.mean_task_overhead() - (2.6e-3 + 5e-4)).abs() < 1e-12);
+        assert!((oh.pre_departure(1000) - (20e-3 + 7.4e-3)).abs() < 1e-9);
+        assert!(OverheadConfig::zero().is_zero());
+        assert!(!oh.is_zero());
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[section]` headers (one level), `key = value`, values of
+//! type string (`"..."`), float/int, bool, and flat arrays `[a, b, c]`.
+//! Comments (`# ...`) and blank lines are ignored. This deliberately
+//! covers exactly what `configs/*.toml` use.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Any numeric literal (ints are widened).
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Flat homogeneous-ish array.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As f64, if numeric.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    /// As usize, if numeric and integral.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+    /// As str, if a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As bool, if boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As vec of f64, if an array of numbers.
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Array(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// `section -> key -> value`; top-level keys live under section `""`.
+pub type Document = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, String> {
+    let mut doc: Document = BTreeMap::new();
+    doc.insert(String::new(), BTreeMap::new());
+    let mut current = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: malformed section {raw:?}", lineno + 1));
+            }
+            current = line[1..line.len() - 1].trim().to_string();
+            doc.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value, got {raw:?}", lineno + 1))?;
+        let v = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&current)
+            .unwrap()
+            .insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string {s:?}"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(stripped) = s.strip_prefix('[') {
+        let inner = stripped
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array {s:?}"))?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+# experiment config
+name = "fig8"          # inline comment
+[simulation]
+servers = 50
+lambda = 0.5
+ks = [50, 100, 200]
+overhead = true
+label = "a # not-comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("fig8"));
+        assert_eq!(doc["simulation"]["servers"].as_usize(), Some(50));
+        assert_eq!(doc["simulation"]["lambda"].as_f64(), Some(0.5));
+        assert_eq!(
+            doc["simulation"]["ks"].as_f64_array(),
+            Some(vec![50.0, 100.0, 200.0])
+        );
+        assert_eq!(doc["simulation"]["overhead"].as_bool(), Some(true));
+        assert_eq!(doc["simulation"]["label"].as_str(), Some("a # not-comment"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("[oops").unwrap_err().contains("line 1"));
+        assert!(parse("x 5").unwrap_err().contains("key = value"));
+        assert!(parse("x = ").unwrap_err().contains("empty value"));
+        assert!(parse("x = \"abc").unwrap_err().contains("unterminated"));
+    }
+
+    #[test]
+    fn empty_array_and_trailing_comma() {
+        let doc = parse("a = []\nb = [1, 2,]\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlValue::Array(vec![]));
+        assert_eq!(doc[""]["b"].as_f64_array(), Some(vec![1.0, 2.0]));
+    }
+}

@@ -1,0 +1,120 @@
+//! Task-granularity advisor — the paper's concluding application: "our
+//! analytical approximation model which includes scheduling overhead can
+//! also be used to optimize task granularity on real systems" (Sec. 7).
+//!
+//! Given a cluster (l workers), an arrival rate, a mean job workload and
+//! an overhead model, sweep k over a log grid through the Sec.-6
+//! approximation and return the k minimizing the sojourn ε-quantile.
+
+use crate::config::{ModelKind, OverheadConfig};
+use crate::runtime::{BoundQuery, BoundsEngine};
+use anyhow::Result;
+
+/// Advisor output: the recommended k and the full curve for context.
+#[derive(Clone, Debug)]
+pub struct Recommendation {
+    /// `(k, τ_ε)` of the best stable point, if any.
+    pub best: Option<(usize, f64)>,
+    /// The evaluated `(k, τ_ε)` curve (None = unstable at that k).
+    pub curve: Vec<(usize, Option<f64>)>,
+}
+
+/// Sweep k ∈ {l, 2l, … } (log-ish grid) and pick the minimizer.
+pub fn recommend(
+    engine: &BoundsEngine,
+    model: ModelKind,
+    l: usize,
+    lambda: f64,
+    mean_workload: f64,
+    epsilon: f64,
+    overhead: OverheadConfig,
+) -> Result<Recommendation> {
+    // κ grid: 1..~200 in multiplicative steps.
+    let mut kappas: Vec<f64> = Vec::new();
+    let mut kappa = 1.0f64;
+    while kappa <= 200.0 {
+        kappas.push(kappa);
+        kappa *= 1.3;
+    }
+    let ks: Vec<usize> = kappas.iter().map(|&x| (x * l as f64).round() as usize).collect();
+
+    let queries: Vec<BoundQuery> = ks
+        .iter()
+        .map(|&k| BoundQuery {
+            k,
+            l,
+            lambda,
+            // Tasks sized so k·E[Q_exec] = mean workload.
+            mu: k as f64 / mean_workload,
+            epsilon,
+            overhead: Some(overhead),
+        })
+        .collect();
+    let rows = engine.bounds(&queries)?;
+    let mut curve = Vec::with_capacity(ks.len());
+    let mut best: Option<(usize, f64)> = None;
+    for (&k, row) in ks.iter().zip(&rows) {
+        let tau = match model {
+            ModelKind::SplitMerge => row.split_merge,
+            _ => row.fork_join,
+        };
+        if let Some(t) = tau {
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((k, t));
+            }
+        }
+        curve.push((k, tau));
+    }
+    Ok(Recommendation { best, curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// With paper overhead the advisor picks an interior k: larger than
+    /// l (tinyfication helps) but far from the maximum (overhead hurts)
+    /// — the existence of the trade-off optimum is the paper's thesis.
+    #[test]
+    fn recommends_interior_optimum() {
+        let engine = BoundsEngine::native();
+        let rec = recommend(
+            &engine,
+            ModelKind::ForkJoinSingleQueue,
+            50,
+            0.5,
+            50.0,
+            0.01,
+            OverheadConfig::paper(),
+        )
+        .unwrap();
+        let (k, _tau) = rec.best.expect("stable configuration exists");
+        assert!(k > 50, "tinyfication should help: k={k}");
+        let k_max = rec.curve.last().unwrap().0;
+        assert!(k < k_max / 2, "overhead should cap k: k={k} of {k_max}");
+        // Sanity: the curve is not monotone (has an interior minimum).
+        let feasible: Vec<f64> = rec.curve.iter().filter_map(|&(_, t)| t).collect();
+        let min = feasible.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(*feasible.last().unwrap() > min, "tail should rise");
+    }
+
+    /// Without overhead, more tinyfication is always better (the curve
+    /// is non-increasing), so the advisor picks the largest k.
+    #[test]
+    fn no_overhead_prefers_maximum_k() {
+        let engine = BoundsEngine::native();
+        let rec = recommend(
+            &engine,
+            ModelKind::ForkJoinSingleQueue,
+            20,
+            0.5,
+            20.0,
+            0.01,
+            OverheadConfig::zero(),
+        )
+        .unwrap();
+        let (k, _) = rec.best.unwrap();
+        let k_max = rec.curve.last().unwrap().0;
+        assert!(k as f64 > 0.5 * k_max as f64, "k={k} vs max {k_max}");
+    }
+}

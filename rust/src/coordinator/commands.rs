@@ -1,0 +1,367 @@
+//! CLI command implementations.
+
+use super::figures::{self, FigureCtx, Scale};
+use super::{advisor, calibrate};
+use crate::cli::Args;
+use crate::config::{EmulatorConfig, ModelKind, OverheadConfig, SimulationConfig};
+use crate::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
+use crate::sim::{self, RunOptions};
+use crate::util::threadpool::ThreadPool;
+use crate::{analysis, emulator};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+fn overhead_from_args(args: &Args) -> Result<Option<OverheadConfig>> {
+    if !args.get_bool("overhead") && args.get("c-task-ts").is_none() {
+        return Ok(None);
+    }
+    let paper = OverheadConfig::paper();
+    Ok(Some(OverheadConfig {
+        c_task_ts: args.get_f64("c-task-ts", paper.c_task_ts).map_err(anyhow::Error::msg)?,
+        mu_task_ts: args.get_f64("mu-task-ts", paper.mu_task_ts).map_err(anyhow::Error::msg)?,
+        c_job_pd: args.get_f64("c-job-pd", paper.c_job_pd).map_err(anyhow::Error::msg)?,
+        c_task_pd: args.get_f64("c-task-pd", paper.c_task_pd).map_err(anyhow::Error::msg)?,
+    }))
+}
+
+fn e(s: String) -> anyhow::Error {
+    anyhow::Error::msg(s)
+}
+
+/// `tiny-tasks simulate` — one DES run, statistics to stdout.
+pub fn cmd_simulate(args: &Args) -> Result<i32> {
+    // `--config file.toml` loads the [simulation] section; flags override
+    // nothing in that case (file is authoritative, as with sparkbench).
+    if let Some(path) = args.get("config") {
+        let exp = crate::config::ExperimentConfig::load(path).map_err(e)?;
+        let cfg = exp
+            .simulation
+            .ok_or_else(|| anyhow::anyhow!("{path}: no [simulation] section"))?;
+        let mut res = sim::run(&cfg, RunOptions::default()).map_err(e)?;
+        println!("experiment       {}", exp.name);
+        println!("model            {}", cfg.model);
+        println!("mean sojourn     {:.4} s", res.sojourn_summary.mean());
+        for q in [0.5, 0.9, 0.99] {
+            println!("sojourn p{:<6} {:.4} s", q * 100.0, res.sojourn_quantile(q));
+        }
+        return Ok(0);
+    }
+    let l = args.get_usize("servers", 50).map_err(e)?;
+    let k = args.get_usize("k", l).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+    let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+    let cfg = SimulationConfig {
+        model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
+        servers: l,
+        tasks_per_job: k,
+        arrival: crate::config::ArrivalConfig {
+            interarrival: args.get_or("interarrival", &format!("exp:{lambda}")),
+        },
+        service: crate::config::ServiceConfig {
+            execution: args.get_or("execution", &format!("exp:{mu}")),
+        },
+        jobs: args.get_usize("jobs", 30_000).map_err(e)?,
+        warmup: args.get_usize("warmup", 3_000).map_err(e)?,
+        seed: args.get_u64("seed", 1).map_err(e)?,
+        overhead: overhead_from_args(args)?,
+    };
+    let opts = RunOptions {
+        in_order_departures: args.get_bool("in-order"),
+        ..Default::default()
+    };
+    let mut res = sim::run(&cfg, opts).map_err(e)?;
+    println!("model            {}", cfg.model);
+    println!("servers l        {l}");
+    println!("tasks/job k      {k}  (kappa = {:.2})", cfg.kappa());
+    println!("jobs             {} (+{} warmup)", cfg.jobs, cfg.warmup);
+    println!("mean sojourn     {:.4} s", res.sojourn_summary.mean());
+    for q in [0.5, 0.9, 0.99, 0.999] {
+        println!("sojourn p{:<6} {:.4} s", q * 100.0, res.sojourn_quantile(q));
+    }
+    println!("mean waiting     {:.4} s", res.waiting_quantile(0.5));
+    println!("mean overhead/job {:.6} s", res.overhead_summary.mean());
+    println!("throughput       {:.0} jobs/s wall", res.jobs_per_second());
+    Ok(0)
+}
+
+/// `tiny-tasks emulate` — one sparklite run.
+pub fn cmd_emulate(args: &Args) -> Result<i32> {
+    let l = args.get_usize("executors", 8).map_err(e)?;
+    let k = args.get_usize("k", 4 * l).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+    let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+    let cfg = EmulatorConfig {
+        executors: l,
+        tasks_per_job: k,
+        mode: ModelKind::parse(&args.get_or("mode", "fj")).map_err(e)?,
+        interarrival: args.get_or("interarrival", &format!("exp:{lambda}")),
+        execution: args.get_or("execution", &format!("exp:{mu}")),
+        time_scale: args.get_f64("time-scale", 0.005).map_err(e)?,
+        jobs: args.get_usize("jobs", 300).map_err(e)?,
+        warmup: args.get_usize("warmup", 30).map_err(e)?,
+        seed: args.get_u64("seed", 1).map_err(e)?,
+        inject_overhead: if args.get_bool("inject-overhead") {
+            Some(OverheadConfig::paper())
+        } else {
+            None
+        },
+    };
+    let mut res = emulator::run(&cfg).map_err(e)?;
+    println!("mode             {}", cfg.mode);
+    println!("executors        {l}, tasks/job {k}");
+    println!(
+        "jobs             {} (+{} warmup), time_scale {}",
+        cfg.jobs, cfg.warmup, cfg.time_scale
+    );
+    for q in [0.5, 0.9, 0.99] {
+        println!("sojourn p{:<6} {:.4} s (emulated)", q * 100.0, res.sojourn_quantile(q));
+    }
+    println!("throughput       {:.3} jobs/s (emulated)", res.throughput());
+    println!(
+        "mean task overhead fraction {:.4}",
+        res.listener.mean_overhead_fraction()
+    );
+    println!("wall time        {:.1} s", res.wall_seconds);
+    Ok(0)
+}
+
+/// `tiny-tasks bounds` — analytic bounds/approximations for one config.
+pub fn cmd_bounds(args: &Args) -> Result<i32> {
+    let l = args.get_usize("servers", 50).map_err(e)?;
+    let k = args.get_usize("k", l).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+    let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+    let epsilon = args.get_f64("epsilon", 1e-6).map_err(e)?;
+    let overhead = overhead_from_args(args)?;
+    let engine = match args.get_or("engine", "auto").as_str() {
+        "artifact" => BoundsEngine::artifact()?,
+        "rust" | "native" => BoundsEngine::native(),
+        _ => BoundsEngine::auto(),
+    };
+    println!("engine: {:?}", engine.kind());
+
+    match args.get_or("model", "all").as_str() {
+        "sm-big" => {
+            let kappa = args.get_usize("kappa", 20).map_err(e)? as u32;
+            let rows = engine.erlang(&[ErlangQuery { l, kappa, lambda, mu, epsilon }])?;
+            let r = rows[0];
+            println!("big-tasks SM: E[Δ]={:.4}s  ρ*={:.4}", r.mean_service, r.max_utilization);
+            match r.sojourn {
+                Some(t) => println!("sojourn ε-quantile bound: {t:.4} s"),
+                None => println!("sojourn bound: INFEASIBLE (unstable)"),
+            }
+        }
+        _ => {
+            let rows =
+                engine.bounds(&[BoundQuery { k, l, lambda, mu, epsilon, overhead }])?;
+            let r = rows[0];
+            let show = |name: &str, v: Option<f64>| match v {
+                Some(t) => println!("{name:<22} {t:.4} s"),
+                None => println!("{name:<22} INFEASIBLE (unstable)"),
+            };
+            println!(
+                "l={l} k={k} lambda={lambda} mu={mu} eps={epsilon} overhead={}",
+                overhead.is_some()
+            );
+            show("split-merge", r.split_merge);
+            show("single-queue fork-join", r.fork_join);
+            show("ideal partition", r.ideal);
+        }
+    }
+    Ok(0)
+}
+
+/// `tiny-tasks stability` — stability scans.
+pub fn cmd_stability(args: &Args) -> Result<i32> {
+    let l = args.get_usize("servers", 50).map_err(e)?;
+    let ks: Vec<usize> = args
+        .get_list_f64("k-list")
+        .map_err(e)?
+        .unwrap_or_else(|| vec![50.0, 100.0, 200.0, 400.0, 1000.0, 2000.0, 4000.0])
+        .into_iter()
+        .map(|x| x as usize)
+        .collect();
+    let overhead = overhead_from_args(args)?;
+    println!("{:>8} {:>14} {:>14} {:>14}", "k", "sm_eq20", "sm_mc", "fj");
+    for k in ks {
+        let mu = k as f64 / l as f64;
+        let eq20 = analysis::stability::sm_tiny_tasks(l, k);
+        let mc = sim::stability::max_utilization(
+            ModelKind::SplitMerge,
+            l,
+            k,
+            mu,
+            overhead,
+            10_000,
+            args.get_u64("seed", 1).map_err(e)?,
+        );
+        let fj = sim::stability::max_utilization(
+            ModelKind::ForkJoinSingleQueue,
+            l,
+            k,
+            mu,
+            overhead,
+            10_000,
+            1,
+        );
+        println!("{k:>8} {eq20:>14.4} {mc:>14.4} {fj:>14.4}");
+    }
+    Ok(0)
+}
+
+/// `tiny-tasks figure` — regenerate a paper figure's data.
+pub fn cmd_figure(args: &Args) -> Result<i32> {
+    let Some(id) = args.positional.first() else {
+        bail!("usage: tiny-tasks figure <id>|all [--out DIR] [--scale quick|paper]");
+    };
+    let out_dir = PathBuf::from(args.get_or("out", "reports"));
+    std::fs::create_dir_all(&out_dir)?;
+    let scale = Scale::parse(&args.get_or("scale", "quick")).map_err(e)?;
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::with_default_size();
+    let ctx = FigureCtx {
+        out_dir: &out_dir,
+        scale,
+        seed: args.get_u64("seed", 1).map_err(e)?,
+        engine: &engine,
+        pool: &pool,
+    };
+    let t0 = std::time::Instant::now();
+    figures::run(id, &ctx)?;
+    println!("figure {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(0)
+}
+
+/// `tiny-tasks calibrate` — fit the 4-parameter overhead model.
+pub fn cmd_calibrate(args: &Args) -> Result<i32> {
+    let base = EmulatorConfig {
+        executors: args.get_usize("executors", 8).map_err(e)?,
+        tasks_per_job: 0, // overridden per k
+        mode: ModelKind::ForkJoinSingleQueue,
+        interarrival: args.get_or("interarrival", "exp:0.4"),
+        execution: String::new(), // set per k below
+        // Default respects the 1-core wall task-rate cap (DESIGN.md §2).
+        time_scale: args.get_f64("time-scale", 0.05).map_err(e)?,
+        jobs: args.get_usize("jobs", 200).map_err(e)?,
+        warmup: args.get_usize("warmup", 20).map_err(e)?,
+        seed: args.get_u64("seed", 1).map_err(e)?,
+        inject_overhead: if args.get_bool("inject-overhead") {
+            Some(OverheadConfig::paper())
+        } else {
+            None
+        },
+    };
+    let l = base.executors;
+    let ks: Vec<usize> = args
+        .get_list_f64("k-list")
+        .map_err(e)?
+        .unwrap_or_else(|| vec![4.0 * l as f64, 16.0 * l as f64])
+        .into_iter()
+        .map(|x| x as usize)
+        .collect();
+    // μ = k/l per point, constant E[L].
+    let mut cals = Vec::new();
+    for &k in &ks {
+        let cfg = EmulatorConfig {
+            tasks_per_job: k,
+            execution: format!("exp:{}", k as f64 / l as f64),
+            ..base.clone()
+        };
+        cals.push(cfg);
+    }
+    // Calibrate with the middle config's execution spec applied to all ks
+    // (the calibration runs one emulator per k internally).
+    let mid = cals[cals.len() / 2].clone();
+    let cal = calibrate::calibrate(&mid, &ks).map_err(e)?;
+    println!("measured {} tasks / {} jobs", cal.tasks_measured, cal.jobs_measured);
+    println!("fitted overhead model (paper §2.6 table analog, emulated seconds):");
+    println!("  c_task_ts  = {:.6} s ({:.3} ms)", cal.fitted.c_task_ts, cal.fitted.c_task_ts * 1e3);
+    println!("  mu_task_ts = {:.1} 1/s", cal.fitted.mu_task_ts);
+    println!("  c_job_pd   = {:.6} s ({:.3} ms)", cal.fitted.c_job_pd, cal.fitted.c_job_pd * 1e3);
+    println!("  c_task_pd  = {:.9} s ({:.6} ms)", cal.fitted.c_task_pd, cal.fitted.c_task_pd * 1e3);
+    println!(
+        "PP distance: without overhead {:.4} -> with fitted overhead {:.4}",
+        cal.pp_without_overhead, cal.pp_with_overhead
+    );
+    Ok(0)
+}
+
+/// `tiny-tasks advisor` — recommend k for a cluster (the paper's
+/// concluding use-case).
+pub fn cmd_advisor(args: &Args) -> Result<i32> {
+    let l = args.get_usize("servers", 50).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+    let workload = args.get_f64("workload", l as f64).map_err(e)?;
+    let epsilon = args.get_f64("epsilon", 0.01).map_err(e)?;
+    let model = ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?;
+    let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
+    let engine = BoundsEngine::auto();
+    let rec = advisor::recommend(&engine, model, l, lambda, workload, epsilon, oh)?;
+    println!(
+        "cluster: l={l}, lambda={lambda}/s, E[workload]={workload}s, model={model}, eps={epsilon}"
+    );
+    match rec.best {
+        Some((k, tau)) => {
+            println!("recommended tasks/job k = {k} (kappa = {:.1})", k as f64 / l as f64);
+            println!("predicted sojourn ε-quantile = {tau:.3} s");
+        }
+        None => println!("no stable k found — reduce load or add workers"),
+    }
+    println!("\n{:>8} {:>14}", "k", "tau_eps(s)");
+    for (k, tau) in &rec.curve {
+        match tau {
+            Some(t) => println!("{k:>8} {t:>14.3}"),
+            None => println!("{k:>8} {:>14}", "unstable"),
+        }
+    }
+    Ok(0)
+}
+
+/// `tiny-tasks selfcheck` — artifact vs native cross-validation.
+pub fn cmd_selfcheck(_args: &Args) -> Result<i32> {
+    let artifact = match BoundsEngine::artifact() {
+        Ok(eng) => eng,
+        Err(err) => {
+            println!("artifacts unavailable ({err}); run `make artifacts`.");
+            return Ok(1);
+        }
+    };
+    let native = BoundsEngine::native();
+    let queries: Vec<BoundQuery> = [(400usize, 50usize), (1000, 50), (64, 16), (1, 1)]
+        .iter()
+        .map(|&(k, l)| BoundQuery {
+            k,
+            l,
+            lambda: 0.5,
+            mu: k as f64 / l as f64,
+            epsilon: 0.01,
+            overhead: None,
+        })
+        .collect();
+    let a = artifact.bounds(&queries)?;
+    let n = native.bounds(&queries)?;
+    let mut worst: f64 = 0.0;
+    for (x, y) in a.iter().zip(&n) {
+        for (va, vn) in [
+            (x.split_merge, y.split_merge),
+            (x.fork_join, y.fork_join),
+            (x.ideal, y.ideal),
+        ] {
+            match (va, vn) {
+                (Some(va), Some(vn)) => {
+                    worst = worst.max((va - vn).abs() / vn.abs().max(1e-12))
+                }
+                (None, None) => {}
+                _ => bail!("feasibility disagreement between engines"),
+            }
+        }
+    }
+    println!("artifact vs native: max rel deviation {worst:.2e} over {} queries", queries.len());
+    if worst < 0.01 {
+        println!("selfcheck OK");
+        Ok(0)
+    } else {
+        println!("selfcheck FAILED (tolerance 1e-2)");
+        Ok(1)
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig. 10: PP plots validating the overhead model — simulated
+//! single-queue fork-join sojourn distributions (no overhead / task
+//! overhead only / task + pre-departure overhead) against the emulated
+//! cluster at k = 2500 tasks per job.
+
+use super::{FigureCtx, Scale};
+use crate::config::{EmulatorConfig, ModelKind, OverheadConfig, SimulationConfig};
+use crate::emulator;
+use crate::sim::{self, RunOptions};
+use crate::stats::{pp_distance, pp_points, Ecdf};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig10(ctx: &FigureCtx) -> Result<()> {
+    let l = 50usize;
+    let lambda = 0.5;
+    // k = 2500 at the rate-limited wall scale (see fig8.rs) runs ~0.63 s
+    // of wall time per job; quick scale trims the job count accordingly.
+    let (k, emu_jobs, sim_jobs) = match ctx.scale {
+        Scale::Quick => (2500usize, 250usize, 30_000usize),
+        Scale::Paper => (2500, 30_000, 300_000),
+    };
+    let time_scale = (k as f64 * 2.5e-4).max(0.002);
+    let mu = k as f64 / l as f64;
+    let oh = OverheadConfig::paper();
+
+    // The "Spark" measurement: sparklite with injected paper overhead.
+    let emu_cfg = EmulatorConfig {
+        executors: l,
+        tasks_per_job: k,
+        mode: ModelKind::ForkJoinSingleQueue,
+        interarrival: format!("exp:{lambda}"),
+        execution: format!("exp:{mu}"),
+        time_scale,
+        jobs: emu_jobs,
+        warmup: emu_jobs / 10,
+        seed: ctx.seed,
+        inject_overhead: Some(oh),
+    };
+    let emu_res = emulator::run(&emu_cfg).map_err(anyhow::Error::msg)?;
+    let emu_ecdf = Ecdf::new(emu_res.measured_jobs().map(|j| j.sojourn()).collect());
+
+    // Three simulation variants (the paper's blue / green / magenta).
+    let sim_ecdf = |overhead: Option<OverheadConfig>| -> Result<Ecdf> {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: l,
+            tasks_per_job: k,
+            arrival: crate::config::ArrivalConfig { interarrival: format!("exp:{lambda}") },
+            service: crate::config::ServiceConfig { execution: format!("exp:{mu}") },
+            jobs: sim_jobs,
+            warmup: sim_jobs / 10,
+            seed: ctx.seed ^ 0xF16,
+            overhead,
+        };
+        let res = sim::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })
+            .map_err(anyhow::Error::msg)?;
+        Ok(Ecdf::new(res.jobs.iter().map(|j| j.sojourn()).collect()))
+    };
+    let none = sim_ecdf(None)?;
+    let task_only = sim_ecdf(Some(OverheadConfig { c_job_pd: 0.0, c_task_pd: 0.0, ..oh }))?;
+    let full = sim_ecdf(Some(oh))?;
+
+    let n = 201;
+    let mut csv = Csv::new(vec![
+        "p_sim_no_overhead",
+        "p_emulator_0",
+        "p_sim_task_overhead",
+        "p_emulator_1",
+        "p_sim_full_overhead",
+        "p_emulator_2",
+    ]);
+    let a = pp_points(&none, &emu_ecdf, n);
+    let b = pp_points(&task_only, &emu_ecdf, n);
+    let c = pp_points(&full, &emu_ecdf, n);
+    for i in 0..n {
+        csv.push(&[
+            a[i].p_first, a[i].p_second, b[i].p_first, b[i].p_second, c[i].p_first,
+            c[i].p_second,
+        ]);
+    }
+    let path = ctx.out_dir.join("fig10_ppplot.csv");
+    csv.write_file(&path)?;
+
+    let d_none = pp_distance(&none, &emu_ecdf, n);
+    let d_task = pp_distance(&task_only, &emu_ecdf, n);
+    let d_full = pp_distance(&full, &emu_ecdf, n);
+    println!(
+        "fig10: PP distance no-overhead={d_none:.4} task-only={d_task:.4} full={d_full:.4} \
+         -> {}",
+        path.display()
+    );
+    Ok(())
+}

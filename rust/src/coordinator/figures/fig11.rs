@@ -1,0 +1,87 @@
+//! Fig. 11: stability regions vs. tasks per job for split-merge and
+//! fork-join, with and without the overhead model, l = 50. Split-merge's
+//! region climbs toward 1 with tinyfication, then falls past k ≈ 2000 as
+//! overhead dominates; fork-join starts at 1 and degrades gradually.
+
+use super::{FigureCtx, Scale};
+use crate::config::OverheadConfig;
+use crate::dist::{Distribution, Exponential};
+use crate::sim::stability::{fj_max_utilization, sm_max_utilization};
+use crate::sim::OverheadModel;
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig11(ctx: &FigureCtx) -> Result<()> {
+    let l = 50usize;
+    let (ks, samples): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (
+            vec![50, 100, 200, 400, 700, 1000, 1500, 2000, 3000, 4000, 6000],
+            4_000,
+        ),
+        Scale::Paper => (
+            vec![
+                50, 75, 100, 150, 200, 300, 400, 500, 700, 1000, 1300, 1600, 2000, 2500,
+                3000, 4000, 5000, 6000, 8000,
+            ],
+            40_000,
+        ),
+    };
+
+    let mut csv = Csv::new(vec![
+        "k",
+        "sm_no_overhead",
+        "sm_overhead",
+        "fj_no_overhead",
+        "fj_overhead",
+        "sm_eq20_closed_form",
+    ]);
+    // Closed-form Eq. 20 series through the engine (artifact hot path).
+    let eq20 = ctx
+        .engine
+        .stability(&ks.iter().map(|&k| (k, l)).collect::<Vec<_>>())?;
+
+    for (i, &k) in ks.iter().enumerate() {
+        // μ = k/l keeps E[L] = l·1s constant, as everywhere in the paper.
+        let mu = k as f64 / l as f64;
+        let exec = Exponential::new(mu);
+        let clean = OverheadModel::none();
+        let paper = OverheadModel::new(OverheadConfig::paper());
+        let sm_clean = sm_max_utilization(l, k, &exec, &clean, samples, ctx.seed ^ k as u64);
+        let sm_oh = sm_max_utilization(l, k, &exec, &paper, samples, ctx.seed ^ k as u64);
+        let fj_clean = fj_max_utilization(exec.mean(), &clean);
+        let fj_oh = fj_max_utilization(exec.mean(), &paper);
+        csv.push(&[k as f64, sm_clean, sm_oh, fj_clean, fj_oh, eq20[i]]);
+    }
+    let path = ctx.out_dir.join("fig11_stability.csv");
+    csv.write_file(&path)?;
+    println!("fig11: {} rows -> {}", ks.len(), path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Fig.-11 shape: SM-with-overhead peaks and then declines; FJ
+    /// with overhead declines monotonically from ~1.
+    #[test]
+    fn stability_shapes() {
+        let l = 50;
+        let paper = OverheadModel::new(OverheadConfig::paper());
+        let clean = OverheadModel::none();
+        let rho = |k: usize, oh: &OverheadModel| {
+            let mu = k as f64 / l as f64;
+            sm_max_utilization(l, k, &Exponential::new(mu), oh, 4_000, 9)
+        };
+        // Clean: monotone increasing in k.
+        assert!(rho(200, &clean) < rho(2000, &clean));
+        // With overhead: k=2000 is past the peak vs k=8000 declining.
+        let peak_region = rho(2000, &paper);
+        let tail = rho(8000, &paper);
+        assert!(tail < peak_region, "{tail} !< {peak_region}");
+        // FJ: overhead pushes below 1, worse at larger k.
+        let fj_2000 = fj_max_utilization(50.0 / 2000.0, &paper);
+        let fj_200 = fj_max_utilization(50.0 / 200.0, &paper);
+        assert!(fj_2000 < fj_200 && fj_200 < 1.0);
+    }
+}

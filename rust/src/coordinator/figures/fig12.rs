@@ -1,0 +1,93 @@
+//! Fig. 12: direct refinement of big tasks into tiny tasks (Sec. 4.1),
+//! μ = κ = 20 so utilization = λ. (a) stability regions vs. l — tiny
+//! (Eq. 20) vs. big (Eq. 23, Erlang-max integration); (b) sojourn-time
+//! bounds vs. l at utilizations 0.5/0.6/0.7.
+
+use super::{FigureCtx, Scale};
+use crate::runtime::{BoundQuery, ErlangQuery};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+const KAPPA: u32 = 20;
+const MU: f64 = 20.0;
+
+fn ls(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![1, 2, 4, 8, 16, 32, 64],
+        Scale::Paper => vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128],
+    }
+}
+
+pub fn fig12a(ctx: &FigureCtx) -> Result<()> {
+    let ls = ls(ctx.scale);
+    // Tiny: Eq. 20 closed form (stability artifact); big: Erlang artifact.
+    let tiny = ctx
+        .engine
+        .stability(&ls.iter().map(|&l| (KAPPA as usize * l, l)).collect::<Vec<_>>())?;
+    let big_rows = ctx.engine.erlang(
+        &ls.iter()
+            .map(|&l| ErlangQuery { l, kappa: KAPPA, lambda: 0.5, mu: MU, epsilon: 1e-6 })
+            .collect::<Vec<_>>(),
+    )?;
+
+    let mut csv = Csv::new(vec!["l", "tiny_tasks_eq20", "big_tasks_eq23"]);
+    for (i, &l) in ls.iter().enumerate() {
+        csv.push(&[l as f64, tiny[i], big_rows[i].max_utilization]);
+    }
+    let path = ctx.out_dir.join("fig12a_stability.csv");
+    csv.write_file(&path)?;
+    println!("fig12a: {} rows -> {}", ls.len(), path.display());
+    Ok(())
+}
+
+pub fn fig12b(ctx: &FigureCtx) -> Result<()> {
+    let ls = ls(ctx.scale);
+    let eps = 1e-6;
+    let utils = [0.5, 0.6, 0.7];
+
+    let mut csv = Csv::new(vec![
+        "l",
+        "tiny_rho_0.5",
+        "big_rho_0.5",
+        "tiny_rho_0.6",
+        "big_rho_0.6",
+        "tiny_rho_0.7",
+        "big_rho_0.7",
+    ]);
+
+    // Tiny bounds via the bounds artifact; big via the Erlang artifact.
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 6];
+    for (ui, &rho) in utils.iter().enumerate() {
+        let lambda = rho; // utilization = λκ/μ = λ at μ = κ = 20
+        let tiny_rows = ctx.engine.bounds(
+            &ls.iter()
+                .map(|&l| BoundQuery {
+                    k: KAPPA as usize * l,
+                    l,
+                    lambda,
+                    mu: MU,
+                    epsilon: eps,
+                    overhead: None,
+                })
+                .collect::<Vec<_>>(),
+        )?;
+        let big_rows = ctx.engine.erlang(
+            &ls.iter()
+                .map(|&l| ErlangQuery { l, kappa: KAPPA, lambda, mu: MU, epsilon: eps })
+                .collect::<Vec<_>>(),
+        )?;
+        for i in 0..ls.len() {
+            cols[2 * ui].push(tiny_rows[i].split_merge.unwrap_or(f64::NAN));
+            cols[2 * ui + 1].push(big_rows[i].sojourn.unwrap_or(f64::NAN));
+        }
+    }
+    for (i, &l) in ls.iter().enumerate() {
+        csv.push(&[
+            l as f64, cols[0][i], cols[1][i], cols[2][i], cols[3][i], cols[4][i], cols[5][i],
+        ]);
+    }
+    let path = ctx.out_dir.join("fig12b_bounds.csv");
+    csv.write_file(&path)?;
+    println!("fig12b: {} rows -> {}", ls.len(), path.display());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fig. 13: sojourn-time bounds vs. tasks per job at ε = 10⁻⁶ for the
+//! single-queue fork-join and split-merge models with l = 50 servers,
+//! against the ideal-partition reference. λ = 0.5, μ = k/l.
+
+use super::{FigureCtx, Scale};
+use crate::runtime::BoundQuery;
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig13(ctx: &FigureCtx) -> Result<()> {
+    let l = 50usize;
+    let lambda = 0.5;
+    let eps = 1e-6;
+    let ks: Vec<usize> = match ctx.scale {
+        Scale::Quick => vec![50, 100, 200, 400, 800, 1600, 3200],
+        Scale::Paper => {
+            // Dense log grid 50 … 5000.
+            let mut v = Vec::new();
+            let mut k = 50.0f64;
+            while k <= 5000.0 {
+                v.push(k.round() as usize);
+                k *= 1.15;
+            }
+            v
+        }
+    };
+
+    let rows = ctx.engine.bounds(
+        &ks.iter()
+            .map(|&k| BoundQuery {
+                k,
+                l,
+                lambda,
+                mu: k as f64 / l as f64,
+                epsilon: eps,
+                overhead: None,
+            })
+            .collect::<Vec<_>>(),
+    )?;
+
+    let mut csv = Csv::new(vec!["k", "fork_join", "split_merge", "ideal"]);
+    for (i, &k) in ks.iter().enumerate() {
+        csv.push(&[
+            k as f64,
+            rows[i].fork_join.unwrap_or(f64::NAN),
+            rows[i].split_merge.unwrap_or(f64::NAN),
+            rows[i].ideal.unwrap_or(f64::NAN),
+        ]);
+    }
+    let path = ctx.out_dir.join("fig13_bounds.csv");
+    csv.write_file(&path)?;
+    println!("fig13: {} rows -> {}", ks.len(), path.display());
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Fig. 8: the headline figure — 0.99 sojourn-time quantile vs. tasks per
+//! job for split-merge (a) and single-queue fork-join (b), l = 50,
+//! λ = 0.5 s⁻¹, μ = k/l (constant E[L] = 50 s). Five series per panel:
+//! sparklite ("Spark experiment"), simulation without/with overhead,
+//! the clean analytic bound, and the Sec.-6 analytic approximation with
+//! overhead.
+
+use super::{FigureCtx, Scale};
+use crate::config::{EmulatorConfig, ModelKind, OverheadConfig, SimulationConfig};
+use crate::coordinator::sweep::{run_sweep, SweepPoint};
+use crate::emulator;
+use crate::runtime::BoundQuery;
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig8(ctx: &FigureCtx) -> Result<()> {
+    let (l, lambda) = (50usize, 0.5);
+    let eps = 0.01; // the paper's 0.99 quantile
+    let oh = OverheadConfig::paper();
+
+    let (ks, sim_jobs, emu_jobs, emu_ks): (Vec<usize>, usize, usize, Vec<usize>) =
+        match ctx.scale {
+            Scale::Quick => (
+                vec![50, 100, 200, 400, 600, 1000, 1500, 2500],
+                30_000,
+                300,
+                vec![400, 1000],
+            ),
+            Scale::Paper => (
+                vec![50, 100, 150, 200, 300, 400, 600, 800, 1000, 1500, 2000, 2500, 3000],
+                200_000,
+                10_000,
+                vec![100, 200, 400, 600, 1000, 1500, 2500],
+            ),
+        };
+    // Per-k wall-time scale. The testbed has far fewer physical cores
+    // than the paper's 50 single-core executors, so the emulator must be
+    // sleep-dominated AND rate-limited: the wall task rate λ·k/scale is
+    // capped at ~2000/s (each task costs ~20-50 µs of real scheduler/
+    // serialization work) and mean task wall time stays ≥ 6 ms. See the
+    // DESIGN.md §2 substitution note.
+    let scale_for = |k: usize| (k as f64 * 2.5e-4).max(0.002);
+
+    for (panel, model) in [("a_split_merge", ModelKind::SplitMerge), ("b_fork_join", ModelKind::ForkJoinSingleQueue)]
+    {
+        // --- analytic series via the engine (artifact hot path) ---
+        let mk_query = |k: usize, overhead: Option<OverheadConfig>| BoundQuery {
+            k,
+            l,
+            lambda,
+            mu: k as f64 / l as f64,
+            epsilon: eps,
+            overhead,
+        };
+        let clean_rows = ctx
+            .engine
+            .bounds(&ks.iter().map(|&k| mk_query(k, None)).collect::<Vec<_>>())?;
+        let oh_rows = ctx
+            .engine
+            .bounds(&ks.iter().map(|&k| mk_query(k, Some(oh))).collect::<Vec<_>>())?;
+
+        // --- simulation series ---
+        let mk_sim = |k: usize, overhead: Option<OverheadConfig>| SweepPoint {
+            label: k as f64,
+            config: SimulationConfig {
+                model,
+                servers: l,
+                tasks_per_job: k,
+                arrival: crate::config::ArrivalConfig {
+                    interarrival: format!("exp:{lambda}"),
+                },
+                service: crate::config::ServiceConfig {
+                    execution: format!("exp:{}", k as f64 / l as f64),
+                },
+                jobs: sim_jobs,
+                warmup: sim_jobs / 10,
+                seed: 0,
+                overhead,
+            },
+        };
+        let q = 1.0 - eps;
+        let sim_clean = run_sweep(
+            ctx.pool,
+            ks.iter().map(|&k| mk_sim(k, None)).collect(),
+            q,
+            ctx.seed ^ 0x8a,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let sim_oh = run_sweep(
+            ctx.pool,
+            ks.iter().map(|&k| mk_sim(k, Some(oh))).collect(),
+            q,
+            ctx.seed ^ 0x8b,
+        )
+        .map_err(anyhow::Error::msg)?;
+
+        // --- sparklite ("Spark experiment") series at selected k ---
+        let mut emu_q: Vec<(usize, f64)> = Vec::new();
+        for &k in &emu_ks {
+            // Skip configurations that are unstable (quick scale would
+            // just measure the transient backlog).
+            let stable = crate::analysis::stability::sm_tiny_tasks(l, k) > 0.5
+                || model == ModelKind::ForkJoinSingleQueue;
+            if !stable {
+                emu_q.push((k, f64::NAN));
+                continue;
+            }
+            let cfg = EmulatorConfig {
+                executors: l,
+                tasks_per_job: k,
+                mode: model,
+                interarrival: format!("exp:{lambda}"),
+                execution: format!("exp:{}", k as f64 / l as f64),
+                time_scale: scale_for(k),
+                jobs: emu_jobs,
+                warmup: emu_jobs / 10,
+                seed: ctx.seed ^ k as u64,
+                inject_overhead: Some(oh),
+            };
+            let mut res = emulator::run(&cfg).map_err(anyhow::Error::msg)?;
+            emu_q.push((k, res.sojourn_quantile(q)));
+        }
+
+        let mut csv = Csv::new(vec![
+            "k",
+            "spark_emulator",
+            "sim_no_overhead",
+            "sim_overhead",
+            "bound",
+            "approx_overhead",
+        ]);
+        for (i, &k) in ks.iter().enumerate() {
+            let (clean_b, oh_b) = match model {
+                ModelKind::SplitMerge => (clean_rows[i].split_merge, oh_rows[i].split_merge),
+                _ => (clean_rows[i].fork_join, oh_rows[i].fork_join),
+            };
+            let emu = emu_q
+                .iter()
+                .find(|&&(ek, _)| ek == k)
+                .map(|&(_, v)| v)
+                .unwrap_or(f64::NAN);
+            // Mask simulated quantiles for unstable SM configurations.
+            let stable_clean = model != ModelKind::SplitMerge
+                || crate::analysis::stability::sm_tiny_tasks(l, k) > 0.5;
+            csv.push(&[
+                k as f64,
+                emu,
+                if stable_clean { sim_clean[i].sojourn_q } else { f64::NAN },
+                if stable_clean { sim_oh[i].sojourn_q } else { f64::NAN },
+                clean_b.unwrap_or(f64::NAN),
+                oh_b.unwrap_or(f64::NAN),
+            ]);
+        }
+        let path = ctx.out_dir.join(format!("fig8{panel}.csv"));
+        csv.write_file(&path)?;
+        println!("fig8{panel}: {} rows -> {}", ks.len(), path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Fig. 9: overhead statistics from the (emulated) cluster — (a) box
+//! plots of the per-task overhead fraction O_i/Q_i vs. k, (b) box plots
+//! of the total overhead per job Σ O_i vs. k. Both grow ~linearly in k,
+//! the mechanism behind the Fig. 8 upturn.
+
+use super::{FigureCtx, Scale};
+use crate::config::{EmulatorConfig, ModelKind, OverheadConfig};
+use crate::emulator;
+use crate::stats::BoxStats;
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig9(ctx: &FigureCtx) -> Result<()> {
+    let l = 50usize;
+    let lambda = 0.5;
+    let (ks, jobs): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (vec![100, 400, 1000], 120),
+        Scale::Paper => (vec![50, 100, 200, 400, 600, 1000, 1500, 2000, 2500], 5_000),
+    };
+    // Rate-limited wall scale (see fig8.rs: 1-core testbed).
+    let scale_for = |k: usize| (k as f64 * 2.5e-4).max(0.002);
+
+    let mut frac_csv = Csv::new(vec![
+        "k", "mean", "q1", "median", "q3", "whisker_lo", "whisker_hi", "outliers", "n",
+    ]);
+    let mut total_csv = Csv::new(vec![
+        "k", "mean", "q1", "median", "q3", "whisker_lo", "whisker_hi", "outliers", "n",
+    ]);
+
+    for &k in &ks {
+        let cfg = EmulatorConfig {
+            executors: l,
+            tasks_per_job: k,
+            // The paper's Fig. 9 uses the fork-join experiments.
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: format!("exp:{lambda}"),
+            execution: format!("exp:{}", k as f64 / l as f64),
+            time_scale: scale_for(k),
+            jobs,
+            warmup: jobs / 10,
+            seed: ctx.seed ^ (k as u64) << 1,
+            inject_overhead: Some(OverheadConfig::paper()),
+        };
+        let res = emulator::run(&cfg).map_err(anyhow::Error::msg)?;
+
+        let fracs: Vec<f64> = res
+            .listener
+            .tasks
+            .iter()
+            .map(|t| t.overhead_fraction())
+            .collect();
+        let totals: Vec<f64> = res
+            .measured_jobs()
+            .map(|j| j.total_task_overhead)
+            .collect();
+        push_box(&mut frac_csv, k, &BoxStats::from_samples(&fracs));
+        push_box(&mut total_csv, k, &BoxStats::from_samples(&totals));
+    }
+
+    let fp = ctx.out_dir.join("fig9a_overhead_fraction.csv");
+    frac_csv.write_file(&fp)?;
+    let tp = ctx.out_dir.join("fig9b_job_overhead.csv");
+    total_csv.write_file(&tp)?;
+    println!("fig9: {} k-points -> {} / {}", ks.len(), fp.display(), tp.display());
+    Ok(())
+}
+
+fn push_box(csv: &mut Csv, k: usize, b: &BoxStats) {
+    csv.push(&[
+        k as f64,
+        b.mean,
+        b.q1,
+        b.median,
+        b.q3,
+        b.whisker_lo,
+        b.whisker_hi,
+        b.outliers as f64,
+        b.n as f64,
+    ]);
+}

@@ -1,0 +1,86 @@
+//! Figure pipelines: one module per paper figure, each regenerating the
+//! figure's data as CSV under `reports/` (see DESIGN.md §4 for the
+//! experiment index).
+
+mod fig1_2;
+mod fig3;
+mod fig8;
+mod fig9;
+mod fig10;
+mod fig11;
+mod fig12;
+mod fig13;
+
+pub use fig1_2::fig1_2;
+pub use fig3::fig3;
+pub use fig8::fig8;
+pub use fig9::fig9;
+pub use fig10::fig10;
+pub use fig11::fig11;
+pub use fig12::{fig12a, fig12b};
+pub use fig13::fig13;
+
+use anyhow::Result;
+use std::path::Path;
+
+/// How heavy to run a pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Minutes-scale: reduced job counts / coarser grids; same shapes.
+    Quick,
+    /// Paper-scale parameters (hours on a laptop for some figures).
+    Paper,
+}
+
+impl Scale {
+    /// Parse from the CLI flag.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "quick" => Ok(Self::Quick),
+            "paper" => Ok(Self::Paper),
+            _ => Err(format!("unknown scale {s:?} (quick|paper)")),
+        }
+    }
+}
+
+/// Common context handed to each pipeline.
+pub struct FigureCtx<'a> {
+    /// Output directory for CSVs.
+    pub out_dir: &'a Path,
+    /// Quick or paper scale.
+    pub scale: Scale,
+    /// Master seed.
+    pub seed: u64,
+    /// Bounds engine (artifact-backed when available).
+    pub engine: &'a crate::runtime::BoundsEngine,
+    /// Thread pool for simulation sweeps.
+    pub pool: &'a crate::util::threadpool::ThreadPool,
+}
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1-2", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12a", "fig12b", "fig13",
+];
+
+/// Run one figure by id.
+pub fn run(id: &str, ctx: &FigureCtx) -> Result<()> {
+    match id {
+        "fig1-2" => fig1_2(ctx),
+        "fig3" => fig3(ctx),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9(ctx),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "fig12a" => fig12a(ctx),
+        "fig12b" => fig12b(ctx),
+        "fig13" => fig13(ctx),
+        "all" => {
+            for id in ALL {
+                println!("== {id} ==");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure {other:?}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,42 @@
+//! Coordinator — Layer 3's top: experiment harness (parallel sweeps),
+//! overhead calibration (Sec. 2.6 methodology), the per-figure
+//! regeneration pipelines (DESIGN.md §4), the granularity advisor, and
+//! CLI dispatch.
+
+pub mod advisor;
+pub mod calibrate;
+pub mod commands;
+pub mod figures;
+pub mod report;
+pub mod sweep;
+
+use crate::cli::Args;
+use anyhow::Result;
+
+/// Dispatch a parsed command line; returns the process exit code.
+pub fn dispatch(args: &Args) -> Result<i32> {
+    match args.command.as_str() {
+        "" | "help" => {
+            println!("{}", crate::cli::USAGE);
+            Ok(0)
+        }
+        "simulate" => commands::cmd_simulate(args),
+        "emulate" => commands::cmd_emulate(args),
+        "bounds" => commands::cmd_bounds(args),
+        "stability" => commands::cmd_stability(args),
+        "figure" => commands::cmd_figure(args),
+        "report" => {
+            let dir = std::path::PathBuf::from(args.get_or("out", "reports"));
+            let path = report::write(&dir)?;
+            println!("wrote {}", path.display());
+            Ok(0)
+        }
+        "calibrate" => commands::cmd_calibrate(args),
+        "advisor" => commands::cmd_advisor(args),
+        "selfcheck" => commands::cmd_selfcheck(args),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", crate::cli::USAGE);
+            Ok(2)
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Report generator: collate the figure CSVs in `reports/` into a single
+//! Markdown summary with headline statistics — the artifact a user reads
+//! after `tiny-tasks figure all`.
+
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Parsed CSV: header + numeric rows (NaN for blanks).
+pub struct Table {
+    /// Column names.
+    pub header: Vec<String>,
+    /// Row-major numeric data.
+    pub rows: Vec<Vec<f64>>,
+}
+
+/// Read a figure CSV back in.
+pub fn read_table(path: &Path) -> Result<Table> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut lines = text.lines();
+    let header: Vec<String> = lines
+        .next()
+        .context("empty csv")?
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let rows = lines
+        .map(|l| {
+            l.split(',')
+                .map(|c| c.parse::<f64>().unwrap_or(f64::NAN))
+                .collect()
+        })
+        .collect();
+    Ok(Table { header, rows })
+}
+
+impl Table {
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// All finite values of a column.
+    pub fn finite(&self, col: usize) -> Vec<f64> {
+        self.rows
+            .iter()
+            .map(|r| r[col])
+            .filter(|v| v.is_finite())
+            .collect()
+    }
+
+    /// Render as a Markdown table (up to `max_rows` rows).
+    pub fn to_markdown(&self, max_rows: usize) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---:").collect::<Vec<_>>().join("|")
+        );
+        for row in self.rows.iter().take(max_rows) {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|v| {
+                    if v.is_nan() {
+                        "—".to_string()
+                    } else if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.01) {
+                        format!("{v:.3e}")
+                    } else {
+                        format!("{v:.3}")
+                    }
+                })
+                .collect();
+            let _ = writeln!(out, "| {} |", cells.join(" | "));
+        }
+        if self.rows.len() > max_rows {
+            let _ = writeln!(out, "| … ({} more rows) |", self.rows.len() - max_rows);
+        }
+        out
+    }
+}
+
+/// Figures we know how to summarize: (id, csv files, one-line description).
+const SECTIONS: &[(&str, &[&str], &str)] = &[
+    ("Figs. 1–2", &["fig1_gantt.csv", "fig2_gantt.csv"], "executor activity traces (Gantt rows: job,task,server,start,end)"),
+    ("Fig. 3", &["fig3_scaling.csv"], "sojourn quantile scaling vs servers, k = l"),
+    ("Fig. 8(a)", &["fig8a_split_merge.csv"], "split-merge quantiles vs k: emulator / sim ±overhead / bound / approximation"),
+    ("Fig. 8(b)", &["fig8b_fork_join.csv"], "fork-join quantiles vs k"),
+    ("Fig. 9", &["fig9a_overhead_fraction.csv", "fig9b_job_overhead.csv"], "overhead fraction and per-job totals vs k"),
+    ("Fig. 10", &["fig10_ppplot.csv"], "PP plots of sim vs emulator sojourn CDFs"),
+    ("Fig. 11", &["fig11_stability.csv"], "stability regions vs k"),
+    ("Fig. 12(a)", &["fig12a_stability.csv"], "direct refinement: stability vs l"),
+    ("Fig. 12(b)", &["fig12b_bounds.csv"], "direct refinement: bounds vs l at three utilizations"),
+    ("Fig. 13", &["fig13_bounds.csv"], "bounds vs k at ε = 1e-6"),
+];
+
+/// Build `report.md` from whatever CSVs exist in `dir`.
+pub fn generate(dir: &Path) -> Result<String> {
+    let mut md = String::new();
+    let _ = writeln!(md, "# tiny-tasks figure report\n");
+    let _ = writeln!(
+        md,
+        "Generated from `{}`. Regenerate with `tiny-tasks figure all`.\n",
+        dir.display()
+    );
+    let mut found = 0;
+    for (name, files, desc) in SECTIONS {
+        let present: Vec<&str> =
+            files.iter().copied().filter(|f| dir.join(f).exists()).collect();
+        if present.is_empty() {
+            continue;
+        }
+        found += 1;
+        let _ = writeln!(md, "## {name}\n\n{desc}\n");
+        for f in present {
+            let table = read_table(&dir.join(f))?;
+            if *name == "Figs. 1–2" {
+                // Gantt CSVs are huge; summarize instead of inlining.
+                let _ = writeln!(md, "`{f}`: {} task executions.\n", table.rows.len());
+                continue;
+            }
+            let _ = writeln!(md, "`{f}` ({} rows):\n", table.rows.len());
+            let _ = writeln!(md, "{}", table.to_markdown(16));
+        }
+    }
+    if found == 0 {
+        let _ = writeln!(md, "_No figure CSVs found — run `tiny-tasks figure all` first._");
+    }
+    Ok(md)
+}
+
+/// Write the report and return its path.
+pub fn write(dir: &Path) -> Result<std::path::PathBuf> {
+    let md = generate(dir)?;
+    let path = dir.join("report.md");
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(&path, md)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::Csv;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("tt-report-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_table() {
+        let dir = tmp();
+        let mut csv = Csv::new(vec!["k", "value"]);
+        csv.push(&[100.0, 1.5]);
+        csv.push(&[200.0, f64::NAN]);
+        let p = dir.join("fig13_bounds.csv");
+        csv.write_file(&p).unwrap();
+        let t = read_table(&p).unwrap();
+        assert_eq!(t.header, vec!["k", "value"]);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows[1][1].is_nan());
+        assert_eq!(t.col("value"), Some(1));
+        assert_eq!(t.finite(1), vec![1.5]);
+        let md = t.to_markdown(10);
+        assert!(md.contains("| k | value |"));
+        assert!(md.contains('—'));
+    }
+
+    #[test]
+    fn generate_handles_empty_dir() {
+        let dir = tmp().join("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let md = generate(&dir).unwrap();
+        assert!(md.contains("No figure CSVs"));
+    }
+
+    #[test]
+    fn generate_includes_present_sections() {
+        let dir = tmp().join("partial");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut csv = Csv::new(vec!["k", "fork_join", "split_merge", "ideal"]);
+        csv.push(&[50.0, 22.5, f64::NAN, 12.3]);
+        csv.write_file(dir.join("fig13_bounds.csv")).unwrap();
+        let md = generate(&dir).unwrap();
+        assert!(md.contains("Fig. 13"));
+        assert!(!md.contains("Fig. 11"));
+        let path = write(&dir).unwrap();
+        assert!(path.exists());
+    }
+}

@@ -1,0 +1,284 @@
+//! Cluster assembly: spawn executors + scheduler + collector, run the
+//! driver, gather results.
+
+use super::driver::{collector_main, driver_main, JobMeta, JobOutcome};
+use super::executor::{executor_main, ExecutorConfig};
+use super::metrics::MetricsListener;
+use super::payload::Payload;
+use super::scheduler::{scheduler_main, CompletionRecord, SchedMsg};
+use crate::config::{EmulatorConfig, OverheadConfig};
+use crate::dist::parse_spec;
+use crate::rng::{Pcg64, Rng};
+use crate::stats::QuantileSketch;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Everything a sparklite run produces.
+pub struct EmulatorResult {
+    /// Echo of the configuration.
+    pub config: EmulatorConfig,
+    /// All metrics (tasks + jobs), including warmup.
+    pub listener: MetricsListener,
+    /// Job outcomes (merge results) in departure order.
+    pub outcomes: Vec<(u64, JobOutcome)>,
+    /// Post-warmup sojourn times (emulated seconds).
+    pub sojourn: QuantileSketch,
+    /// Wall seconds the run took.
+    pub wall_seconds: f64,
+}
+
+impl EmulatorResult {
+    /// Post-warmup sojourn quantile (emulated seconds).
+    pub fn sojourn_quantile(&mut self, q: f64) -> f64 {
+        self.sojourn.quantile(q)
+    }
+
+    /// Post-warmup job metrics.
+    pub fn measured_jobs(&self) -> impl Iterator<Item = &super::metrics::JobMetrics> {
+        let warmup = self.config.warmup as u64;
+        self.listener.jobs.iter().filter(move |j| j.job_id >= warmup)
+    }
+
+    /// Throughput over the measured window (jobs per emulated second).
+    pub fn throughput(&self) -> f64 {
+        let jobs: Vec<_> = self.measured_jobs().collect();
+        if jobs.len() < 2 {
+            return 0.0;
+        }
+        let t0 = jobs.iter().map(|j| j.arrival).fold(f64::INFINITY, f64::min);
+        let t1 = jobs.iter().map(|j| j.departure).fold(0.0f64, f64::max);
+        jobs.len() as f64 / (t1 - t0).max(1e-9)
+    }
+}
+
+/// The assembled cluster (constructable for custom payload runs).
+pub struct Cluster;
+
+impl Cluster {
+    /// Run `cfg` with the default BusySpin payloads whose durations are
+    /// drawn from `cfg.execution` (the controlled statistical workload of
+    /// Sec. 2.3).
+    pub fn run_synthetic(cfg: &EmulatorConfig) -> Result<EmulatorResult, String> {
+        cfg.validate()?;
+        let exec_dist = parse_spec(&cfg.execution)?;
+        let scale = cfg.time_scale;
+        let mut rng = Pcg64::seed_from_u64(cfg.seed ^ 0x5EED_7A5C);
+        let mut sampler = move || {
+            let mut f = || rng.next_f64_open();
+            exec_dist.sample(&mut f)
+        };
+        Self::run_with(cfg, move |_job, _task| Payload::BusySpin {
+            seconds: sampler() * scale,
+        })
+    }
+
+    /// Run `cfg` with custom payloads (`payloads(job, task)` — durations
+    /// inside must already be wall-scaled).
+    pub fn run_with<F: FnMut(u64, u32) -> Payload + Send>(
+        cfg: &EmulatorConfig,
+        payloads: F,
+    ) -> Result<EmulatorResult, String> {
+        cfg.validate()?;
+        let t_start = Instant::now();
+        let epoch = Instant::now();
+        let scale = cfg.time_scale;
+
+        // Arrival schedule (emulated seconds), generated up front for
+        // reproducibility.
+        let arr_dist = parse_spec(&cfg.interarrival)?;
+        let mut rng = Pcg64::seed_from_u64(cfg.seed);
+        let total_jobs = cfg.warmup + cfg.jobs;
+        let mut arrivals = Vec::with_capacity(total_jobs);
+        let mut t = 0.0;
+        for _ in 0..total_jobs {
+            let mut f = || rng.next_f64_open();
+            t += arr_dist.sample(&mut f);
+            arrivals.push(t);
+        }
+
+        // Channels.
+        let (sched_tx, sched_rx) = mpsc::channel::<SchedMsg>();
+        let (coll_tx, coll_rx) = mpsc::channel::<CompletionRecord>();
+        let (meta_tx, meta_rx) = mpsc::channel::<JobMeta>();
+        let (dep_tx, dep_rx) = mpsc::channel::<(u64, f64)>();
+
+        // Executors: injected overhead is specified in emulated seconds;
+        // scale to wall time for the busy-waits.
+        let inject_wall = cfg.inject_overhead.map(|oh| OverheadConfig {
+            c_task_ts: oh.c_task_ts * scale,
+            mu_task_ts: if oh.mu_task_ts.is_finite() { oh.mu_task_ts / scale } else { oh.mu_task_ts },
+            c_job_pd: oh.c_job_pd, // applied by the collector (emulated)
+            c_task_pd: oh.c_task_pd,
+        });
+        let mut exec_txs = Vec::with_capacity(cfg.executors);
+        let mut exec_handles = Vec::with_capacity(cfg.executors);
+        for id in 0..cfg.executors as u32 {
+            let (tx, rx) = mpsc::channel::<(f64, Vec<u8>)>();
+            exec_txs.push(tx);
+            let results = sched_tx.clone();
+            let ecfg = ExecutorConfig {
+                id,
+                // Task-binary fetch: 5 ms emulated, once per executor
+                // (Fig. 7) — negligible steady-state, visible on task 1.
+                binary_fetch: 0.005 * scale,
+                inject: inject_wall,
+                seed: cfg.seed ^ (0xE0 + id as u64),
+            };
+            exec_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sparklite-exec-{id}"))
+                    .spawn(move || executor_main(ecfg, rx, results, epoch))
+                    .map_err(|e| e.to_string())?,
+            );
+        }
+
+        // Scheduler.
+        let sched_handle = {
+            let coll = coll_tx.clone();
+            std::thread::Builder::new()
+                .name("sparklite-scheduler".into())
+                .spawn(move || scheduler_main(sched_rx, exec_txs, coll, epoch))
+                .map_err(|e| e.to_string())?
+        };
+        drop(coll_tx);
+
+        // Collector.
+        let coll_cfg = cfg.clone();
+        let coll_handle = std::thread::Builder::new()
+            .name("sparklite-collector".into())
+            .spawn(move || collector_main(coll_rx, meta_rx, dep_tx, coll_cfg, epoch))
+            .map_err(|e| e.to_string())?;
+
+        // Driver runs here.
+        driver_main(cfg, payloads, &arrivals, &sched_tx, &meta_tx, &dep_rx, epoch);
+
+        // Shutdown: scheduler stops, executor channels close, executors
+        // exit, completion channel closes, collector returns.
+        let _ = sched_tx.send(SchedMsg::Shutdown);
+        drop(sched_tx);
+        drop(meta_tx);
+        sched_handle.join().map_err(|_| "scheduler panicked")?;
+        for h in exec_handles {
+            h.join().map_err(|_| "executor panicked")?;
+        }
+        let (listener, outcomes) = coll_handle.join().map_err(|_| "collector panicked")?;
+
+        // Post-warmup sojourns.
+        let mut sojourn = QuantileSketch::with_capacity(cfg.jobs);
+        for j in &listener.jobs {
+            if j.job_id >= cfg.warmup as u64 {
+                sojourn.push(j.sojourn());
+            }
+        }
+
+        Ok(EmulatorResult {
+            config: cfg.clone(),
+            listener,
+            outcomes,
+            sojourn,
+            wall_seconds: t_start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Convenience wrapper: synthetic run.
+pub fn run(cfg: &EmulatorConfig) -> Result<EmulatorResult, String> {
+    Cluster::run_synthetic(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelKind;
+
+    fn quick_cfg() -> EmulatorConfig {
+        EmulatorConfig {
+            executors: 4,
+            tasks_per_job: 8,
+            mode: ModelKind::ForkJoinSingleQueue,
+            interarrival: "exp:2.0".into(),
+            execution: "exp:2.0".into(),
+            time_scale: 0.004,
+            jobs: 40,
+            warmup: 5,
+            seed: 11,
+            inject_overhead: None,
+        }
+    }
+
+    #[test]
+    fn fj_run_completes_all_jobs() {
+        let mut res = run(&quick_cfg()).unwrap();
+        assert_eq!(res.listener.jobs.len(), 45);
+        assert_eq!(res.sojourn.len(), 40);
+        assert_eq!(res.listener.tasks.len(), 45 * 8);
+        let p50 = res.sojourn_quantile(0.5);
+        assert!(p50 > 0.0, "p50={p50}");
+        // Every job's sojourn exceeds the parallel lower bound L/l is not
+        // guaranteed per-job, but departure must follow arrival.
+        for j in &res.listener.jobs {
+            assert!(j.departure > j.arrival);
+            assert!(j.total_execution > 0.0);
+        }
+    }
+
+    #[test]
+    fn sm_mode_departures_in_order_and_serial() {
+        let cfg = EmulatorConfig {
+            mode: ModelKind::SplitMerge,
+            jobs: 20,
+            warmup: 0,
+            ..quick_cfg()
+        };
+        let res = run(&cfg).unwrap();
+        assert_eq!(res.listener.jobs.len(), 20);
+        let mut jobs = res.listener.jobs.clone();
+        jobs.sort_by_key(|j| j.job_id);
+        for w in jobs.windows(2) {
+            // SM: job n+1 cannot be *submitted* before job n departs.
+            assert!(
+                w[1].submitted >= w[0].departure - 1e-6,
+                "job {} submitted {} before job {} departed {}",
+                w[1].job_id,
+                w[1].submitted,
+                w[0].job_id,
+                w[0].departure
+            );
+        }
+    }
+
+    #[test]
+    fn injected_overhead_shows_up_in_measurements() {
+        let base = quick_cfg();
+        let mut clean = run(&base).unwrap();
+        let mut dirty_cfg = base.clone();
+        // Exaggerated overhead so the effect dominates scheduling noise:
+        // 0.2 emulated-second constant per task.
+        dirty_cfg.inject_overhead = Some(OverheadConfig {
+            c_task_ts: 0.2,
+            mu_task_ts: f64::INFINITY,
+            c_job_pd: 0.5,
+            c_task_pd: 0.0,
+        });
+        dirty_cfg.seed = base.seed;
+        let mut dirty = run(&dirty_cfg).unwrap();
+        let c50 = clean.sojourn_quantile(0.5);
+        let d50 = dirty.sojourn_quantile(0.5);
+        assert!(d50 > c50 + 0.4, "overhead not visible: {c50} vs {d50}");
+        assert!(
+            dirty.listener.mean_overhead_fraction()
+                > clean.listener.mean_overhead_fraction()
+        );
+    }
+
+    #[test]
+    fn intrinsic_overhead_is_measured_and_small() {
+        let res = run(&quick_cfg()).unwrap();
+        let f = res.listener.mean_overhead_fraction();
+        // sparklite's own scheduling overhead exists but is far below the
+        // task service times at this scale.
+        assert!(f > 0.0, "no overhead measured");
+        assert!(f < 0.2, "overhead implausibly large: {f}");
+        let _ = res.throughput();
+    }
+}

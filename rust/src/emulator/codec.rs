@@ -1,0 +1,195 @@
+//! Binary codec for task descriptors and results.
+//!
+//! Hand-rolled (the offline registry has no serde) — which is a feature
+//! here: Spark's task serialization cost is a first-class overhead
+//! component (Fig. 7 "driver serialization time"), and an explicit codec
+//! makes the measured cost honest rather than an artifact of a generic
+//! framework.
+//!
+//! Wire format: little-endian fixed-width scalars, `u32`-length-prefixed
+//! byte strings, `u32`-length-prefixed sequences. A leading `u8` tag
+//! versions each message kind.
+
+/// Serializer writing into a reusable buffer.
+#[derive(Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    /// Fresh encoder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear and return the reusable buffer for a new message.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Finished bytes.
+    pub fn finish(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Append a u8.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    /// Append a u32 (LE).
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append a u64 (LE).
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append an f64 (LE bits).
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    /// Append length-prefixed bytes.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+    /// Append a length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+    /// Append a length-prefixed sequence of f64.
+    pub fn f64_seq(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+/// Deserializer over a byte slice.
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Decode error (truncated or malformed message).
+#[derive(Debug, thiserror::Error)]
+#[error("decode error at byte {pos}: {reason}")]
+pub struct DecodeError {
+    pos: usize,
+    reason: &'static str,
+}
+
+impl<'a> Decoder<'a> {
+    /// Decoder over `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, reason: &'static str) -> Result<&'a [u8], DecodeError> {
+        if self.pos + n > self.buf.len() {
+            return Err(DecodeError { pos: self.pos, reason });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a u8.
+    pub fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1, "u8")?[0])
+    }
+    /// Read a u32.
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4, "u32")?.try_into().unwrap()))
+    }
+    /// Read a u64.
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8, "u64")?.try_into().unwrap()))
+    }
+    /// Read an f64.
+    pub fn f64(&mut self) -> Result<f64, DecodeError> {
+        Ok(f64::from_le_bytes(self.take(8, "f64")?.try_into().unwrap()))
+    }
+    /// Read length-prefixed bytes.
+    pub fn bytes(&mut self) -> Result<&'a [u8], DecodeError> {
+        let n = self.u32()? as usize;
+        self.take(n, "bytes body")
+    }
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| DecodeError {
+            pos: self.pos,
+            reason: "invalid utf-8",
+        })
+    }
+    /// Read a length-prefixed f64 sequence.
+    pub fn f64_seq(&mut self) -> Result<Vec<f64>, DecodeError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+    /// Bytes remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_strings() {
+        let mut e = Encoder::new();
+        e.u8(7);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX);
+        e.f64(std::f64::consts::PI);
+        e.str("tiny tasks");
+        e.f64_seq(&[1.0, -2.5, 3.25]);
+        let bytes = e.finish();
+        let mut d = Decoder::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.str().unwrap(), "tiny tasks");
+        assert_eq!(d.f64_seq().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(d.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Encoder::new();
+        e.u64(42);
+        let bytes = e.finish();
+        let mut d = Decoder::new(&bytes[..5]);
+        assert!(d.u64().is_err());
+    }
+
+    #[test]
+    fn bad_utf8_rejected() {
+        let mut e = Encoder::new();
+        e.bytes(&[0xFF, 0xFE]);
+        let bytes = e.finish();
+        let mut d = Decoder::new(&bytes);
+        assert!(d.str().is_err());
+    }
+
+    #[test]
+    fn encoder_reuse() {
+        let mut e = Encoder::new();
+        e.u32(1);
+        let a = e.finish();
+        e.reset();
+        e.u32(2);
+        let b = e.finish();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), b.len());
+    }
+}

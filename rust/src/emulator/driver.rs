@@ -1,0 +1,260 @@
+//! The driver: job generation/submission (split-merge or single-queue
+//! fork-join mode) and the result collector that performs the merge step.
+
+use super::codec::Encoder;
+use super::metrics::{JobMetrics, MetricsListener, TaskMetrics};
+use super::payload::{Payload, PayloadResult};
+use super::scheduler::{decode_result, CompletionRecord, SchedMsg};
+use super::task::TaskDescriptor;
+use crate::config::{EmulatorConfig, ModelKind};
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Aggregated outcome of one job after the merge step.
+#[derive(Clone, Debug)]
+pub enum JobOutcome {
+    /// Sum of achieved busy seconds (BusySpin jobs).
+    TotalBusy(f64),
+    /// Sum of Frobenius norms (MatMul jobs).
+    NormSum(f64),
+    /// Global word counts merged across shards (WordCount jobs).
+    MergedCounts(Vec<(String, u64)>),
+    /// Mixed payload kinds.
+    Mixed,
+}
+
+/// Metadata the driver hands the collector at submission time.
+#[derive(Clone, Copy, Debug)]
+pub struct JobMeta {
+    /// Job id.
+    pub job_id: u64,
+    /// Emulated arrival time.
+    pub arrival_emu: f64,
+    /// Wall submission time.
+    pub submitted_wall: f64,
+    /// Tasks in the job.
+    pub tasks: u32,
+}
+
+/// Collector loop: receives completion records, decodes results (timed —
+/// this is driver-side processing), merges a job's results when all its
+/// tasks are in (timed — the measured pre-departure overhead), applies
+/// injected pre-departure overhead, and records [`JobMetrics`].
+#[allow(clippy::too_many_arguments)]
+pub fn collector_main(
+    completions: Receiver<CompletionRecord>,
+    meta_rx: Receiver<JobMeta>,
+    departures: Sender<(u64, f64)>,
+    cfg: EmulatorConfig,
+    epoch: Instant,
+) -> (MetricsListener, Vec<(u64, JobOutcome)>) {
+    let mut listener = MetricsListener::default();
+    let mut metas: HashMap<u64, JobMeta> = HashMap::new();
+    let mut partial: HashMap<u64, JobPartial> = HashMap::new();
+    let mut outcomes: Vec<(u64, JobOutcome)> = Vec::new();
+    let scale = cfg.time_scale;
+    let now_emu = |e: Instant| e.elapsed().as_secs_f64() / scale;
+    let inject_pd = cfg
+        .inject_overhead
+        .map(|oh| oh.pre_departure(cfg.tasks_per_job))
+        .unwrap_or(0.0);
+
+    while let Ok(rec) = completions.recv() {
+        // Drain any new job metadata first (non-blocking).
+        while let Ok(m) = meta_rx.try_recv() {
+            metas.insert(m.job_id, m);
+        }
+        // Driver-side result processing (timed): deserialize the result.
+        let t0 = Instant::now();
+        let Some(tr) = decode_result(&rec.bytes) else {
+            log::error!("collector: undecodable result");
+            continue;
+        };
+        let driver_process = t0.elapsed().as_secs_f64();
+
+        listener.tasks.push(TaskMetrics {
+            job_id: tr.job_id,
+            task_id: tr.task_id,
+            executor_id: tr.executor_id,
+            driver_serialize: rec.driver_serialize,
+            scheduler_process: rec.scheduler_process + driver_process,
+            transmission: rec.transmission,
+            deserialize: tr.deserialize,
+            binary_fetch: tr.binary_fetch,
+            execution: tr.execution,
+            result_serialize: tr.result_serialize,
+            occupancy: tr.occupancy,
+        });
+
+        let p = partial.entry(tr.job_id).or_default();
+        p.done += 1;
+        p.total_exec += tr.execution;
+        p.total_overhead += (tr.occupancy - tr.execution).max(0.0);
+        p.results.push(tr.result);
+        p.last_result_wall = rec.completed_wall;
+
+        let expect = metas.get(&tr.job_id).map(|m| m.tasks).unwrap_or(u32::MAX);
+        if p.done == expect {
+            let p = partial.remove(&tr.job_id).unwrap();
+            let meta = metas.remove(&tr.job_id).unwrap();
+            // Merge step (timed): the job's action result, like Spark's
+            // collect()/reduce() on the driver.
+            let t1 = Instant::now();
+            let outcome = merge(&p.results);
+            let mut merge_time = t1.elapsed().as_secs_f64();
+            if inject_pd > 0.0 {
+                // Paper-scale pre-departure overhead (Eq. 3), scaled.
+                std::thread::sleep(Duration::from_secs_f64(inject_pd * scale));
+                merge_time += inject_pd * scale;
+            }
+            let departure_emu = now_emu(epoch);
+            listener.jobs.push(JobMetrics {
+                job_id: meta.job_id,
+                arrival: meta.arrival_emu,
+                submitted: meta.submitted_wall / scale,
+                last_result: p.last_result_wall / scale,
+                departure: departure_emu,
+                tasks: meta.tasks,
+                total_execution: p.total_exec / scale,
+                total_task_overhead: p.total_overhead / scale,
+                merge_time: merge_time / scale,
+            });
+            outcomes.push((meta.job_id, outcome));
+            if departures.send((meta.job_id, departure_emu)).is_err() {
+                break;
+            }
+        }
+    }
+    (listener, outcomes)
+}
+
+#[derive(Default)]
+struct JobPartial {
+    done: u32,
+    total_exec: f64,
+    total_overhead: f64,
+    results: Vec<PayloadResult>,
+    last_result_wall: f64,
+}
+
+fn merge(results: &[PayloadResult]) -> JobOutcome {
+    let mut busy = 0.0;
+    let mut norms = 0.0;
+    let mut counts: HashMap<String, u64> = HashMap::new();
+    let (mut n_spun, mut n_norm, mut n_counts) = (0usize, 0usize, 0usize);
+    for r in results {
+        match r {
+            PayloadResult::Spun(s) => {
+                busy += s;
+                n_spun += 1;
+            }
+            PayloadResult::Norm(x) => {
+                norms += x;
+                n_norm += 1;
+            }
+            PayloadResult::Counts(v) => {
+                for (w, c) in v {
+                    *counts.entry(w.clone()).or_insert(0) += c;
+                }
+                n_counts += 1;
+            }
+        }
+    }
+    match (n_spun > 0, n_norm > 0, n_counts > 0) {
+        (true, false, false) => JobOutcome::TotalBusy(busy),
+        (false, true, false) => JobOutcome::NormSum(norms),
+        (false, false, true) => {
+            let mut v: Vec<(String, u64)> = counts.into_iter().collect();
+            v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+            v.truncate(20);
+            JobOutcome::MergedCounts(v)
+        }
+        _ => JobOutcome::Mixed,
+    }
+}
+
+/// Submission loop (runs on the caller thread). `payloads(job, task)`
+/// produces each task's payload. Returns when all jobs have departed.
+pub fn driver_main<F: FnMut(u64, u32) -> Payload>(
+    cfg: &EmulatorConfig,
+    mut payloads: F,
+    arrivals: &[f64],
+    scheduler: &Sender<SchedMsg>,
+    meta_tx: &Sender<JobMeta>,
+    departures: &Receiver<(u64, f64)>,
+    epoch: Instant,
+) {
+    let scale = cfg.time_scale;
+    let k = cfg.tasks_per_job as u32;
+    let mut encoder = Encoder::new();
+    let mut departed: u64 = 0;
+
+    for (job_idx, &arrival_emu) in arrivals.iter().enumerate() {
+        let job_id = job_idx as u64;
+        // Wait for the arrival instant (wall = emulated * scale).
+        let arrival_wall = arrival_emu * scale;
+        let now_wall = epoch.elapsed().as_secs_f64();
+        if arrival_wall > now_wall {
+            std::thread::sleep(Duration::from_secs_f64(arrival_wall - now_wall));
+        }
+        // Split-merge: single-threaded driver blocks until the previous
+        // job departs (Sec. 1.1's "any Spark program with a
+        // single-threaded driver").
+        if cfg.mode == ModelKind::SplitMerge {
+            while departed < job_id {
+                match departures.recv() {
+                    Ok(_) => departed += 1,
+                    Err(_) => return,
+                }
+            }
+        } else {
+            // Fork-join: drain departures opportunistically.
+            while let Ok(_d) = departures.try_recv() {
+                departed += 1;
+            }
+        }
+
+        // Serialize the job's tasks (timed per task: the driver
+        // serialization overhead of Fig. 7).
+        let mut tasks = Vec::with_capacity(k as usize);
+        for t in 0..k {
+            let t0 = Instant::now();
+            let desc = TaskDescriptor {
+                job_id,
+                task_id: t,
+                stage_id: 0,
+                executor_id: u32::MAX, // assigned at dispatch
+                attempt: 0,
+                payload: payloads(job_id, t),
+                job_arrival: arrival_emu,
+            };
+            encoder.reset();
+            desc.encode(&mut encoder);
+            let bytes = encoder.finish();
+            tasks.push((bytes, t0.elapsed().as_secs_f64()));
+        }
+        let submitted_wall = epoch.elapsed().as_secs_f64();
+        let _ = meta_tx.send(JobMeta {
+            job_id,
+            arrival_emu,
+            submitted_wall,
+            tasks: k,
+        });
+        if scheduler
+            .send(SchedMsg::Submit { job_id, tasks, submitted_wall })
+            .is_err()
+        {
+            return;
+        }
+    }
+
+    // Wait for all jobs to depart.
+    let total = arrivals.len() as u64;
+    while departed < total {
+        match departures.recv() {
+            Ok(_) => departed += 1,
+            Err(_) => break,
+        }
+    }
+}

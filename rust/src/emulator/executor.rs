@@ -1,0 +1,188 @@
+//! Executor threads — sparklite's single-core workers.
+//!
+//! Each executor owns a task channel; its loop mirrors a Spark executor
+//! core (Sec. 2.2): receive → deserialize → (first time) fetch the task
+//! binary → run → serialize the result → report. Everything except the
+//! payload execution is the task-service overhead the paper measures.
+
+use super::codec::{Decoder, Encoder};
+use super::scheduler::SchedMsg;
+use super::task::{TaskDescriptor, TaskResult};
+use crate::config::OverheadConfig;
+use crate::rng::Pcg64;
+use crate::sim::OverheadModel;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Configuration handed to each executor thread.
+pub struct ExecutorConfig {
+    /// This executor's id.
+    pub id: u32,
+    /// Simulated task-binary fetch duration (wall seconds) for the first
+    /// task on this executor (Fig. 7 "task binary fetching time").
+    pub binary_fetch: f64,
+    /// Injected per-task overhead (paper Eq. 2, pre-scaled to wall time),
+    /// if reproducing paper-scale overhead in scaled time.
+    pub inject: Option<OverheadConfig>,
+    /// RNG seed for the injected overhead sampling.
+    pub seed: u64,
+}
+
+/// Body of one executor thread. `tasks` delivers `(sent_wall, bytes)`
+/// pairs so transmission time can be measured at dequeue.
+pub fn executor_main(
+    cfg: ExecutorConfig,
+    tasks: Receiver<(f64, Vec<u8>)>,
+    results: Sender<SchedMsg>,
+    epoch: Instant,
+) {
+    let mut first_task = true;
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let inject = OverheadModel::from_option(cfg.inject);
+    let mut encoder = Encoder::new();
+    let now = |epoch: Instant| epoch.elapsed().as_secs_f64();
+
+    while let Ok((sent_wall, bytes)) = tasks.recv() {
+        let t_dequeue = now(epoch);
+        let transmission = (t_dequeue - sent_wall).max(0.0);
+
+        // Deserialize the task description (timed).
+        let t0 = Instant::now();
+        let desc = match TaskDescriptor::decode(&mut Decoder::new(&bytes)) {
+            Ok(d) => d,
+            Err(e) => {
+                log::error!("executor {}: bad task message: {e}", cfg.id);
+                continue;
+            }
+        };
+        let deserialize = t0.elapsed().as_secs_f64();
+
+        // One-time task-binary fetch (remote broadcast variable).
+        let binary_fetch = if first_task && cfg.binary_fetch > 0.0 {
+            first_task = false;
+            busy_wait(cfg.binary_fetch);
+            cfg.binary_fetch
+        } else {
+            first_task = false;
+            0.0
+        };
+
+        // Injected task-service overhead (Eq. 2), blocking the core.
+        let injected = inject.sample_task(&mut rng);
+        if injected > 0.0 {
+            busy_wait(injected);
+        }
+
+        // Run the payload (timed) — the task execution time E_i.
+        let t1 = Instant::now();
+        let result = desc.payload.execute();
+        let execution = t1.elapsed().as_secs_f64();
+
+        // Serialize the result (timed).
+        let t2 = Instant::now();
+        encoder.reset();
+        let mut tr = TaskResult {
+            job_id: desc.job_id,
+            task_id: desc.task_id,
+            executor_id: cfg.id,
+            result,
+            occupancy: 0.0,
+            execution,
+            deserialize,
+            binary_fetch,
+            result_serialize: 0.0,
+        };
+        tr.encode(&mut encoder);
+        let result_serialize = t2.elapsed().as_secs_f64();
+
+        // Occupancy: dequeue → now (the server-blocking Q_i of Eq. 1).
+        let occupancy = now(epoch) - t_dequeue;
+        // Re-encode with the final timings (cheap second pass).
+        tr.occupancy = occupancy;
+        tr.result_serialize = result_serialize;
+        encoder.reset();
+        tr.encode(&mut encoder);
+        let payload_bytes = encoder.finish();
+
+        if results
+            .send(SchedMsg::Completion {
+                executor_id: cfg.id,
+                sent_wall: now(epoch),
+                transmission,
+                bytes: payload_bytes,
+            })
+            .is_err()
+        {
+            break; // scheduler gone: shutting down
+        }
+    }
+}
+
+/// Sleep-then-spin to occupy the core for `seconds` without gross
+/// oversubscription (executors may outnumber physical cores).
+fn busy_wait(seconds: f64) {
+    let target = Duration::from_secs_f64(seconds);
+    let start = Instant::now();
+    if target > Duration::from_micros(300) {
+        std::thread::sleep(target - Duration::from_micros(200));
+    }
+    while start.elapsed() < target {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::emulator::payload::{Payload, PayloadResult};
+    use std::sync::mpsc;
+
+    #[test]
+    fn executor_runs_tasks_and_reports() {
+        let epoch = Instant::now();
+        let (task_tx, task_rx) = mpsc::channel();
+        let (res_tx, res_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            executor_main(
+                ExecutorConfig { id: 3, binary_fetch: 0.002, inject: None, seed: 1 },
+                task_rx,
+                res_tx,
+                epoch,
+            )
+        });
+        for i in 0..3u32 {
+            let desc = TaskDescriptor {
+                job_id: 1,
+                task_id: i,
+                stage_id: 0,
+                executor_id: 3,
+                attempt: 0,
+                payload: Payload::BusySpin { seconds: 0.003 },
+                job_arrival: 0.0,
+            };
+            let mut e = Encoder::new();
+            desc.encode(&mut e);
+            task_tx.send((epoch.elapsed().as_secs_f64(), e.finish())).unwrap();
+        }
+        drop(task_tx);
+        let mut fetches = 0;
+        for _ in 0..3 {
+            match res_rx.recv().unwrap() {
+                SchedMsg::Completion { executor_id, bytes, .. } => {
+                    assert_eq!(executor_id, 3);
+                    let tr = TaskResult::decode(&mut Decoder::new(&bytes)).unwrap();
+                    assert!(matches!(tr.result, PayloadResult::Spun(_)));
+                    assert!(tr.execution >= 0.003);
+                    assert!(tr.occupancy >= tr.execution);
+                    if tr.binary_fetch > 0.0 {
+                        fetches += 1;
+                    }
+                }
+                other => panic!("unexpected msg {other:?}"),
+            }
+        }
+        // Binary fetch happens exactly once (first task on the executor).
+        assert_eq!(fetches, 1);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,134 @@
+//! Metrics listener — sparklite's analog of the paper's extended Spark
+//! listener ("we added a Spark listener which stores more detailed task
+//! metrics than what is available by default", Sec. 2.3).
+//!
+//! All durations are **wall seconds**; the cluster converts to emulated
+//! seconds (dividing by `time_scale`) when assembling results.
+
+/// Per-task measurements, one per completed task (Fig. 7 taxonomy).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TaskMetrics {
+    /// Owning job.
+    pub job_id: u64,
+    /// Task index within the job.
+    pub task_id: u32,
+    /// Executor that ran it.
+    pub executor_id: u32,
+    /// Driver-side serialization time.
+    pub driver_serialize: f64,
+    /// Scheduler processing (dequeue → handed to the channel).
+    pub scheduler_process: f64,
+    /// Channel transit + queueing at the executor (send → dequeue).
+    pub transmission: f64,
+    /// Executor-side deserialization.
+    pub deserialize: f64,
+    /// Task-binary fetch (first task on the executor only).
+    pub binary_fetch: f64,
+    /// Pure payload execution time E_i.
+    pub execution: f64,
+    /// Result serialization on the executor.
+    pub result_serialize: f64,
+    /// Executor occupancy Q_i (dequeue → ready for the next task).
+    pub occupancy: f64,
+}
+
+impl TaskMetrics {
+    /// Task overhead O_i = Q_i − E_i (Eq. 1, executor-blocking part).
+    pub fn overhead(&self) -> f64 {
+        (self.occupancy - self.execution).max(0.0)
+    }
+
+    /// Overhead fraction O_i / Q_i (the Fig. 9(a) statistic).
+    pub fn overhead_fraction(&self) -> f64 {
+        if self.occupancy <= 0.0 {
+            0.0
+        } else {
+            self.overhead() / self.occupancy
+        }
+    }
+}
+
+/// Per-job measurements (emulated seconds where marked).
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    /// Job index.
+    pub job_id: u64,
+    /// Emulated arrival time A(n).
+    pub arrival: f64,
+    /// Emulated time the driver submitted the job to the scheduler.
+    pub submitted: f64,
+    /// Emulated time the last task result arrived at the driver.
+    pub last_result: f64,
+    /// Emulated departure time D(n) (after merge + pre-departure work).
+    pub departure: f64,
+    /// Tasks in the job.
+    pub tasks: u32,
+    /// Σ E_i (emulated seconds).
+    pub total_execution: f64,
+    /// Σ O_i (emulated seconds).
+    pub total_task_overhead: f64,
+    /// Driver-side merge/aggregation time (emulated seconds) — the
+    /// measured pre-departure overhead.
+    pub merge_time: f64,
+}
+
+impl JobMetrics {
+    /// Sojourn time T(n) = D(n) − A(n) in emulated seconds.
+    pub fn sojourn(&self) -> f64 {
+        self.departure - self.arrival
+    }
+}
+
+/// Collects task and job metrics across the run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsListener {
+    /// All task metrics in completion order.
+    pub tasks: Vec<TaskMetrics>,
+    /// All job metrics in departure order.
+    pub jobs: Vec<JobMetrics>,
+}
+
+impl MetricsListener {
+    /// Mean task-overhead fraction (Fig. 9(a) summary).
+    pub fn mean_overhead_fraction(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.iter().map(|t| t.overhead_fraction()).sum::<f64>() / self.tasks.len() as f64
+    }
+
+    /// Total overhead per job samples (Fig. 9(b)).
+    pub fn job_overheads(&self) -> Vec<f64> {
+        self.jobs.iter().map(|j| j.total_task_overhead).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhead_decomposition() {
+        let t = TaskMetrics {
+            occupancy: 1.2,
+            execution: 1.0,
+            ..Default::default()
+        };
+        assert!((t.overhead() - 0.2).abs() < 1e-12);
+        assert!((t.overhead_fraction() - 0.2 / 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sojourn_sign() {
+        let j = JobMetrics { arrival: 2.0, departure: 5.5, ..Default::default() };
+        assert!((j.sojourn() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn listener_aggregates() {
+        let mut l = MetricsListener::default();
+        l.tasks.push(TaskMetrics { occupancy: 1.0, execution: 0.5, ..Default::default() });
+        l.tasks.push(TaskMetrics { occupancy: 1.0, execution: 1.0, ..Default::default() });
+        assert!((l.mean_overhead_fraction() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,40 @@
+//! **sparklite** — a thread-based mini map-reduce engine standing in for
+//! the paper's Apache Spark cluster (DESIGN.md §2 substitution table).
+//!
+//! Architecture mirrors Fig. 6: a **driver** submits jobs of `k` tasks to
+//! a central **scheduler**, which serializes task descriptors and
+//! dispatches them over channels to `l` single-core **executor** threads;
+//! executors deserialize, run the task payload (real computation in real
+//! time), serialize the result, and report back. The driver aggregates
+//! results when all `k` tasks of a job complete (the merge/collect step —
+//! the source of *pre-departure* overhead), then the job departs.
+//!
+//! Every Fig.-7 overhead component is measured per task:
+//! driver serialization, scheduler processing, transmission (channel
+//! transit), executor deserialization + housekeeping, task-binary fetch
+//! (first task per executor), execution, and result round-trip. The
+//! calibration pipeline (Sec. 2.6 methodology) fits the four-parameter
+//! overhead model to these measurements plus PP-matching of sojourn
+//! distributions.
+//!
+//! Submission modes (Sec. 1.1): `SplitMerge` — single-threaded driver
+//! that blocks until the in-flight job departs; `ForkJoinSingleQueue` —
+//! multi-threaded driver submitting jobs as they arrive. All service
+//! times are scaled by `time_scale` so paper-scale workloads (1 s mean
+//! tasks) run in ~1/100 wall time.
+
+mod cluster;
+mod codec;
+mod driver;
+mod executor;
+mod metrics;
+mod payload;
+mod scheduler;
+mod task;
+
+pub use cluster::{run, Cluster, EmulatorResult};
+pub use codec::{Decoder, Encoder};
+pub use driver::JobOutcome;
+pub use metrics::{JobMetrics, MetricsListener, TaskMetrics};
+pub use payload::{Payload, PayloadResult};
+pub use task::{TaskDescriptor, TaskResult};

@@ -1,0 +1,295 @@
+//! Task payloads — what an executor actually runs.
+//!
+//! `BusySpin` provides the controlled service-time distributions of the
+//! paper's experiments (Sec. 2.3); `MatMul` and `WordCount` are real
+//! computations for the end-to-end example (examples/e2e_cluster.rs).
+
+use super::codec::{Decoder, Encoder};
+use std::time::{Duration, Instant};
+
+/// The work a task carries.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Occupy the core for exactly `seconds` (sleep + trailing spin) —
+    /// the controlled-service-time workload.
+    BusySpin {
+        /// Wall-clock seconds of (scaled) service time.
+        seconds: f64,
+    },
+    /// Multiply two `n × n` matrices seeded from `seed` and return the
+    /// Frobenius norm — CPU-bound real work.
+    MatMul {
+        /// Matrix dimension.
+        n: u32,
+        /// Seed for deterministic matrix content.
+        seed: u64,
+    },
+    /// Count words in the shipped text shard and return the counts of the
+    /// `top` most frequent words — data-bearing real work (the map side
+    /// of the canonical map-reduce example).
+    WordCount {
+        /// The text shard (serialized with the descriptor, so shard size
+        /// shows up in serialization/transmission overhead — as in
+        /// Spark).
+        text: String,
+        /// How many top words to return.
+        top: u32,
+    },
+    /// Run `inner`, then hold the core (sleeping) until `seconds` have
+    /// elapsed — models I/O-bound tasks whose compute kernel is real but
+    /// whose duration is dominated by (emulated) data access. Essential
+    /// on small testbeds: it lets `l` executors exceed the physical core
+    /// count without oversubscription (DESIGN.md §2).
+    Padded {
+        /// The real computation.
+        inner: Box<Payload>,
+        /// Total task duration in wall seconds.
+        seconds: f64,
+    },
+}
+
+/// The result an executor sends back.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PayloadResult {
+    /// BusySpin: the achieved busy duration (seconds).
+    Spun(f64),
+    /// MatMul: Frobenius norm of the product.
+    Norm(f64),
+    /// WordCount: (word, count) pairs, descending by count.
+    Counts(Vec<(String, u64)>),
+}
+
+impl Payload {
+    /// Execute the payload, returning the result. Runs on the executor
+    /// thread; duration is the *measured* task execution time.
+    pub fn execute(&self) -> PayloadResult {
+        match self {
+            Payload::BusySpin { seconds } => {
+                let target = Duration::from_secs_f64(*seconds);
+                let start = Instant::now();
+                // Sleep to within 200 µs, spin the remainder: precise
+                // without oversubscribing cores when l > #cores (the
+                // paper ran 50 executors on 12 nodes).
+                if target > Duration::from_micros(300) {
+                    std::thread::sleep(target - Duration::from_micros(200));
+                }
+                while start.elapsed() < target {
+                    std::hint::spin_loop();
+                }
+                PayloadResult::Spun(start.elapsed().as_secs_f64())
+            }
+            Payload::MatMul { n, seed } => {
+                let n = *n as usize;
+                let mut state = *seed | 1;
+                let mut next = || {
+                    // xorshift64* — cheap deterministic fill.
+                    state ^= state >> 12;
+                    state ^= state << 25;
+                    state ^= state >> 27;
+                    (state.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64
+                        / (1u64 << 53) as f64
+                };
+                let a: Vec<f64> = (0..n * n).map(|_| next()).collect();
+                let b: Vec<f64> = (0..n * n).map(|_| next()).collect();
+                let mut c = vec![0.0f64; n * n];
+                for i in 0..n {
+                    for kk in 0..n {
+                        let aik = a[i * n + kk];
+                        for j in 0..n {
+                            c[i * n + j] += aik * b[kk * n + j];
+                        }
+                    }
+                }
+                PayloadResult::Norm(c.iter().map(|x| x * x).sum::<f64>().sqrt())
+            }
+            Payload::WordCount { text, top } => {
+                let mut counts: std::collections::HashMap<&str, u64> =
+                    std::collections::HashMap::new();
+                for w in text.split_whitespace() {
+                    *counts.entry(w).or_insert(0) += 1;
+                }
+                let mut v: Vec<(String, u64)> =
+                    counts.into_iter().map(|(w, c)| (w.to_string(), c)).collect();
+                v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                v.truncate(*top as usize);
+                PayloadResult::Counts(v)
+            }
+            Payload::Padded { inner, seconds } => {
+                let start = Instant::now();
+                let result = inner.execute();
+                let target = Duration::from_secs_f64(*seconds);
+                let elapsed = start.elapsed();
+                if elapsed < target {
+                    std::thread::sleep(target - elapsed);
+                }
+                result
+            }
+        }
+    }
+
+    /// Serialize into the task descriptor stream.
+    pub fn encode(&self, e: &mut Encoder) {
+        match self {
+            Payload::BusySpin { seconds } => {
+                e.u8(0);
+                e.f64(*seconds);
+            }
+            Payload::MatMul { n, seed } => {
+                e.u8(1);
+                e.u32(*n);
+                e.u64(*seed);
+            }
+            Payload::WordCount { text, top } => {
+                e.u8(2);
+                e.str(text);
+                e.u32(*top);
+            }
+            Payload::Padded { inner, seconds } => {
+                e.u8(3);
+                e.f64(*seconds);
+                inner.encode(e);
+            }
+        }
+    }
+
+    /// Deserialize from the task descriptor stream.
+    pub fn decode(d: &mut Decoder) -> Result<Self, super::codec::DecodeError> {
+        Ok(match d.u8()? {
+            0 => Payload::BusySpin { seconds: d.f64()? },
+            1 => Payload::MatMul { n: d.u32()?, seed: d.u64()? },
+            3 => {
+                let seconds = d.f64()?;
+                let inner = Box::new(Payload::decode(d)?);
+                Payload::Padded { inner, seconds }
+            }
+            _ => Payload::WordCount { text: d.str()?, top: d.u32()? },
+        })
+    }
+}
+
+impl PayloadResult {
+    /// Serialize into the result stream.
+    pub fn encode(&self, e: &mut Encoder) {
+        match self {
+            PayloadResult::Spun(s) => {
+                e.u8(0);
+                e.f64(*s);
+            }
+            PayloadResult::Norm(x) => {
+                e.u8(1);
+                e.f64(*x);
+            }
+            PayloadResult::Counts(v) => {
+                e.u8(2);
+                e.u32(v.len() as u32);
+                for (w, c) in v {
+                    e.str(w);
+                    e.u64(*c);
+                }
+            }
+        }
+    }
+
+    /// Deserialize from the result stream.
+    pub fn decode(d: &mut Decoder) -> Result<Self, super::codec::DecodeError> {
+        Ok(match d.u8()? {
+            0 => PayloadResult::Spun(d.f64()?),
+            1 => PayloadResult::Norm(d.f64()?),
+            _ => {
+                let n = d.u32()? as usize;
+                let mut v = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    let w = d.str()?;
+                    let c = d.u64()?;
+                    v.push((w, c));
+                }
+                PayloadResult::Counts(v)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_spin_hits_duration() {
+        let t0 = std::time::Instant::now();
+        let r = Payload::BusySpin { seconds: 0.01 }.execute();
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(wall >= 0.01 && wall < 0.02, "wall={wall}");
+        matches!(r, PayloadResult::Spun(_));
+    }
+
+    #[test]
+    fn matmul_deterministic() {
+        let a = Payload::MatMul { n: 16, seed: 9 }.execute();
+        let b = Payload::MatMul { n: 16, seed: 9 }.execute();
+        assert_eq!(a, b);
+        if let PayloadResult::Norm(x) = a {
+            assert!(x > 0.0);
+        } else {
+            panic!("wrong result kind");
+        }
+    }
+
+    #[test]
+    fn wordcount_counts() {
+        let r = Payload::WordCount {
+            text: "a b a c a b".into(),
+            top: 2,
+        }
+        .execute();
+        assert_eq!(
+            r,
+            PayloadResult::Counts(vec![("a".into(), 3), ("b".into(), 2)])
+        );
+    }
+
+    #[test]
+    fn padded_holds_duration_and_computes() {
+        let t0 = std::time::Instant::now();
+        let r = Payload::Padded {
+            inner: Box::new(Payload::WordCount { text: "a a b".into(), top: 1 }),
+            seconds: 0.01,
+        }
+        .execute();
+        assert!(t0.elapsed().as_secs_f64() >= 0.01);
+        assert_eq!(r, PayloadResult::Counts(vec![("a".into(), 2)]));
+    }
+
+    #[test]
+    fn payload_roundtrip_codec() {
+        for p in [
+            Payload::BusySpin { seconds: 1.5 },
+            Payload::MatMul { n: 8, seed: 42 },
+            Payload::WordCount { text: "x y z".into(), top: 3 },
+            Payload::Padded {
+                inner: Box::new(Payload::MatMul { n: 4, seed: 1 }),
+                seconds: 0.5,
+            },
+        ] {
+            let mut e = Encoder::new();
+            p.encode(&mut e);
+            let bytes = e.finish();
+            let got = Payload::decode(&mut Decoder::new(&bytes)).unwrap();
+            assert_eq!(got, p);
+        }
+    }
+
+    #[test]
+    fn result_roundtrip_codec() {
+        for r in [
+            PayloadResult::Spun(0.5),
+            PayloadResult::Norm(12.25),
+            PayloadResult::Counts(vec![("hi".into(), 2)]),
+        ] {
+            let mut e = Encoder::new();
+            r.encode(&mut e);
+            let bytes = e.finish();
+            let got = PayloadResult::decode(&mut Decoder::new(&bytes)).unwrap();
+            assert_eq!(got, r);
+        }
+    }
+}

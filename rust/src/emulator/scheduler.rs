@@ -1,0 +1,137 @@
+//! The central scheduler — sparklite's TaskScheduler analog, and the
+//! component whose per-task cost is the crux of the tiny-tasks trade-off
+//! (Sec. 2.2: "In any cluster with a central scheduler ... there is
+//! overhead which cannot be avoided").
+//!
+//! Single thread, one global FIFO task queue (Spark's default FIFO
+//! scheduling within a job pool): free executors pull head-of-line tasks.
+//! Split-merge semantics come from the *driver* withholding the next job,
+//! not from the scheduler — exactly as with a single-threaded Spark
+//! driver program.
+
+use super::codec::Decoder;
+use super::task::TaskResult;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Messages into the scheduler. (`job_id`/`sent_wall` fields are carried
+/// for wire-compatibility with future tracing and read by tests.)
+#[derive(Debug)]
+#[allow(dead_code)]
+pub enum SchedMsg {
+    /// Driver submits one job's serialized tasks.
+    Submit {
+        /// Job id.
+        job_id: u64,
+        /// Serialized task descriptors (driver already timed their
+        /// serialization) and the per-task driver serialize cost.
+        tasks: Vec<(Vec<u8>, f64)>,
+        /// Wall time of submission.
+        submitted_wall: f64,
+    },
+    /// An executor finished a task.
+    Completion {
+        /// Executor now free.
+        executor_id: u32,
+        /// Wall time the executor sent this message.
+        sent_wall: f64,
+        /// Measured channel transit for the task message.
+        transmission: f64,
+        /// Serialized [`TaskResult`].
+        bytes: Vec<u8>,
+    },
+    /// Drain and stop.
+    Shutdown,
+}
+
+/// Per-completed-task record forwarded to the driver's collector.
+#[derive(Debug)]
+pub struct CompletionRecord {
+    /// The decoded result (decoding is timed on the driver side —
+    /// the collector does it; here we forward bytes).
+    pub bytes: Vec<u8>,
+    /// Driver serialization cost carried from submission.
+    pub driver_serialize: f64,
+    /// Scheduler processing time for this task (dispatch bookkeeping).
+    pub scheduler_process: f64,
+    /// Task-message transmission time.
+    pub transmission: f64,
+    /// Wall time the completion reached the scheduler.
+    pub completed_wall: f64,
+}
+
+struct PendingTask {
+    bytes: Vec<u8>,
+    driver_serialize: f64,
+}
+
+/// Body of the scheduler thread.
+pub fn scheduler_main(
+    inbox: Receiver<SchedMsg>,
+    executors: Vec<Sender<(f64, Vec<u8>)>>,
+    collector: Sender<CompletionRecord>,
+    epoch: Instant,
+) {
+    let mut queue: VecDeque<PendingTask> = VecDeque::new();
+    let mut free: Vec<u32> = (0..executors.len() as u32).rev().collect();
+    // driver_serialize is carried per task id; simplest is a side table
+    // keyed on (job, task) parsed lazily — instead we keep FIFO pairing:
+    // completions return the value we stowed at dispatch.
+    let mut in_flight: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    let now = |e: Instant| e.elapsed().as_secs_f64();
+
+    let dispatch = |queue: &mut VecDeque<PendingTask>,
+                        free: &mut Vec<u32>,
+                        in_flight: &mut std::collections::HashMap<u32, f64>| {
+        while !queue.is_empty() && !free.is_empty() {
+            let t0 = Instant::now();
+            let task = queue.pop_front().unwrap();
+            let exec = free.pop().unwrap();
+            let sched_cost = t0.elapsed().as_secs_f64();
+            in_flight.insert(exec, task.driver_serialize + sched_cost);
+            if executors[exec as usize]
+                .send((now(epoch), task.bytes))
+                .is_err()
+            {
+                log::error!("executor {exec} channel closed during dispatch");
+            }
+        }
+    };
+
+    while let Ok(msg) = inbox.recv() {
+        match msg {
+            SchedMsg::Submit { tasks, .. } => {
+                for (bytes, ser) in tasks {
+                    queue.push_back(PendingTask { bytes, driver_serialize: ser });
+                }
+                dispatch(&mut queue, &mut free, &mut in_flight);
+            }
+            SchedMsg::Completion { executor_id, transmission, bytes, .. } => {
+                let t0 = Instant::now();
+                let driver_serialize = in_flight.remove(&executor_id).unwrap_or(0.0);
+                free.push(executor_id);
+                let scheduler_process = t0.elapsed().as_secs_f64();
+                let record = CompletionRecord {
+                    bytes,
+                    driver_serialize,
+                    scheduler_process,
+                    transmission,
+                    completed_wall: now(epoch),
+                };
+                if collector.send(record).is_err() {
+                    break;
+                }
+                dispatch(&mut queue, &mut free, &mut in_flight);
+            }
+            SchedMsg::Shutdown => break,
+        }
+    }
+    // Dropping `executors` closes the task channels; executor threads
+    // drain and exit.
+}
+
+/// Decode a completion's [`TaskResult`] (driver-side, timed by caller).
+pub fn decode_result(bytes: &[u8]) -> Option<TaskResult> {
+    TaskResult::decode(&mut Decoder::new(bytes)).ok()
+}

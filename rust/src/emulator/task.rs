@@ -1,0 +1,160 @@
+//! Task descriptors and results — the messages on sparklite's wire.
+
+use super::codec::{DecodeError, Decoder, Encoder};
+use super::payload::{Payload, PayloadResult};
+
+/// What the driver serializes and the scheduler ships to an executor.
+///
+/// Mirrors Spark's two-part task serialization (Sec. 2.2 "driver
+/// serialization time"): the task body (payload + RDD identifiers) plus a
+/// description envelope with scheduling metadata — including some
+/// deliberately redundant fields, as the paper notes Spark includes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskDescriptor {
+    /// Job index.
+    pub job_id: u64,
+    /// Task index within the job.
+    pub task_id: u32,
+    /// Stage id (single-stage jobs in the statistical experiments).
+    pub stage_id: u32,
+    /// Executor the task is bound to (filled by the scheduler, like
+    /// Spark's TaskDescription.executorId).
+    pub executor_id: u32,
+    /// Attempt number (always 0 — no speculative execution).
+    pub attempt: u32,
+    /// The work itself.
+    pub payload: Payload,
+    /// Emulated-seconds arrival time of the owning job (for metrics).
+    pub job_arrival: f64,
+}
+
+impl TaskDescriptor {
+    /// Serialize (the driver-side cost the paper measures).
+    pub fn encode(&self, e: &mut Encoder) {
+        e.u8(1); // message tag/version
+        e.u64(self.job_id);
+        e.u32(self.task_id);
+        e.u32(self.stage_id);
+        e.u32(self.executor_id);
+        e.u32(self.attempt);
+        // Redundant envelope fields, as in Spark's TaskDescription.
+        e.u64(self.job_id);
+        e.u32(self.task_id);
+        e.f64(self.job_arrival);
+        self.payload.encode(e);
+    }
+
+    /// Deserialize (the executor-side cost the paper measures).
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let _tag = d.u8()?;
+        let job_id = d.u64()?;
+        let task_id = d.u32()?;
+        let stage_id = d.u32()?;
+        let executor_id = d.u32()?;
+        let attempt = d.u32()?;
+        let _redundant_job = d.u64()?;
+        let _redundant_task = d.u32()?;
+        let job_arrival = d.f64()?;
+        let payload = Payload::decode(d)?;
+        Ok(Self { job_id, task_id, stage_id, executor_id, attempt, payload, job_arrival })
+    }
+}
+
+/// What the executor sends back on completion.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TaskResult {
+    /// Job index.
+    pub job_id: u64,
+    /// Task index within the job.
+    pub task_id: u32,
+    /// Executor that ran the task.
+    pub executor_id: u32,
+    /// The payload's result.
+    pub result: PayloadResult,
+    /// Wall seconds: executor dequeue → ready for next task (the task
+    /// service time Q_i including all executor-side overhead).
+    pub occupancy: f64,
+    /// Wall seconds of pure payload execution (E_i).
+    pub execution: f64,
+    /// Wall seconds of executor-side deserialization.
+    pub deserialize: f64,
+    /// Wall seconds of task-binary fetch (first task per executor only).
+    pub binary_fetch: f64,
+    /// Wall seconds of result serialization.
+    pub result_serialize: f64,
+}
+
+impl TaskResult {
+    /// Serialize on the executor.
+    pub fn encode(&self, e: &mut Encoder) {
+        e.u8(2);
+        e.u64(self.job_id);
+        e.u32(self.task_id);
+        e.u32(self.executor_id);
+        e.f64(self.occupancy);
+        e.f64(self.execution);
+        e.f64(self.deserialize);
+        e.f64(self.binary_fetch);
+        e.f64(self.result_serialize);
+        self.result.encode(e);
+    }
+
+    /// Deserialize on the driver.
+    pub fn decode(d: &mut Decoder) -> Result<Self, DecodeError> {
+        let _tag = d.u8()?;
+        Ok(Self {
+            job_id: d.u64()?,
+            task_id: d.u32()?,
+            executor_id: d.u32()?,
+            occupancy: d.f64()?,
+            execution: d.f64()?,
+            deserialize: d.f64()?,
+            binary_fetch: d.f64()?,
+            result_serialize: d.f64()?,
+            result: PayloadResult::decode(d)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_roundtrip() {
+        let t = TaskDescriptor {
+            job_id: 17,
+            task_id: 3,
+            stage_id: 0,
+            executor_id: 5,
+            attempt: 0,
+            payload: Payload::BusySpin { seconds: 0.25 },
+            job_arrival: 12.5,
+        };
+        let mut e = Encoder::new();
+        t.encode(&mut e);
+        let bytes = e.finish();
+        let got = TaskDescriptor::decode(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(got, t);
+    }
+
+    #[test]
+    fn result_roundtrip() {
+        let r = TaskResult {
+            job_id: 17,
+            task_id: 3,
+            executor_id: 5,
+            result: PayloadResult::Spun(0.25),
+            occupancy: 0.26,
+            execution: 0.25,
+            deserialize: 0.004,
+            binary_fetch: 0.0,
+            result_serialize: 0.006,
+        };
+        let mut e = Encoder::new();
+        r.encode(&mut e);
+        let bytes = e.finish();
+        let got = TaskResult::decode(&mut Decoder::new(&bytes)).unwrap();
+        assert_eq!(got, r);
+    }
+}

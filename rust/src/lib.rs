@@ -1,0 +1,39 @@
+//! # tiny-tasks
+//!
+//! Reproduction of *"The Tiny-Tasks Granularity Trade-Off: Balancing
+//! overhead vs. performance in parallel systems"* (Bora, Walker, Fidler,
+//! 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate provides:
+//!
+//! * [`sim`] — an event-driven simulator for split-merge, single-queue
+//!   fork-join, per-server fork-join and ideal-partition parallel systems
+//!   with tiny tasks and the paper's four-parameter overhead model
+//!   (a reproduction of the *forkulator* simulator used in the paper).
+//! * [`emulator`] — **sparklite**, a thread-based mini map-reduce engine
+//!   (driver, central scheduler, executors, task serialization) standing in
+//!   for the paper's Apache Spark cluster, instrumented with the Fig.-7
+//!   overhead taxonomy.
+//! * [`analysis`] — the paper's stochastic network-calculus results in pure
+//!   Rust: (σ,ρ)-envelopes, Theorem 1, Lemma 1, Theorem 2, stability
+//!   regions, and the Sec.-6 overhead-augmented approximations.
+//! * [`runtime`] — a PJRT client that loads the AOT-compiled JAX/Pallas
+//!   bound-evaluation artifacts (`artifacts/*.hlo.txt`) and executes them
+//!   from the coordinator hot path (Python is never on the request path).
+//! * [`coordinator`] — experiment harness: parameter sweeps, overhead
+//!   calibration (Sec. 2.6 methodology), and one pipeline per paper figure.
+//! * [`dist`], [`rng`], [`stats`], [`config`], [`cli`], [`util`] —
+//!   supporting substrates (offline environment: no external crates beyond
+//!   `xla`/`anyhow`/`thiserror`/`log`; see DESIGN.md §2).
+
+pub mod analysis;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dist;
+pub mod emulator;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod util;

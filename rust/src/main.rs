@@ -1,0 +1,23 @@
+//! `tiny-tasks` CLI — the launcher for simulations, emulation, bound
+//! evaluation, calibration, and figure regeneration.
+
+use tiny_tasks::cli::Args;
+use tiny_tasks::coordinator;
+
+fn main() {
+    tiny_tasks::util::logging::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", tiny_tasks::cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    match coordinator::dispatch(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

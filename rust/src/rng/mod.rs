@@ -1,0 +1,112 @@
+//! Pseudo-random number generation.
+//!
+//! The offline toolchain has no `rand` crate, so we implement PCG64
+//! (O'Neill's permuted congruential generator, XSL-RR 128/64 variant) with
+//! SplitMix64 seeding. PCG64 passes BigCrush and is the default engine of
+//! the `rand` crate family, so simulation results are statistically
+//! comparable to what forkulator-style tooling would produce.
+
+mod pcg;
+mod splitmix;
+
+pub use pcg::Pcg64;
+pub use splitmix::SplitMix64;
+
+/// Uniform source of randomness used by every sampler in [`crate::dist`].
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform `f64` in the half-open interval `[0, 1)` with 53-bit
+    /// resolution.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits: they are the most well-mixed in PCG64's
+        // output permutation and give the full f64 mantissa resolution.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in the open interval `(0, 1]`; safe as an argument to
+    /// `ln()` when sampling exponentials.
+    #[inline]
+    fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` using Lemire's multiply-shift rejection.
+    #[inline]
+    fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+}
+
+/// Derive `count` statistically independent child seeds from a master seed.
+///
+/// Used by the sweep executor so each (configuration, replication) pair has
+/// a reproducible, non-overlapping stream.
+pub fn spawn_seeds(master: u64, count: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(master);
+    (0..count).map(|_| sm.next_u64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_range() {
+        let mut r = Pcg64::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f64_open();
+            assert!(y > 0.0 && y <= 1.0);
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues reachable");
+    }
+
+    #[test]
+    fn uniform_mean_and_var() {
+        let mut r = Pcg64::seed_from_u64(42);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_f64();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var={var}");
+    }
+
+    #[test]
+    fn spawn_seeds_distinct() {
+        let seeds = spawn_seeds(1, 64);
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j]);
+            }
+        }
+    }
+}

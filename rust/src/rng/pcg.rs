@@ -1,0 +1,112 @@
+//! PCG64 (XSL-RR 128/64): 128-bit LCG state with an xor-shift-low,
+//! random-rotate output permutation. Reference: M.E. O'Neill, "PCG: A
+//! Family of Simple Fast Space-Efficient Statistically Good Algorithms for
+//! Random Number Generation", HMC-CS-2014-0905.
+
+use super::{Rng, SplitMix64};
+
+const MULTIPLIER: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG64 generator — the workhorse RNG of the simulator and emulator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    /// Stream selector (must be odd); distinct increments give independent
+    /// sequences even from identical states.
+    increment: u128,
+}
+
+impl Pcg64 {
+    /// Construct from full 128-bit state and stream id.
+    pub fn new(state: u128, stream: u128) -> Self {
+        let increment = (stream << 1) | 1;
+        let mut pcg = Self { state: 0, increment };
+        pcg.state = pcg.state.wrapping_add(increment).wrapping_add(state);
+        pcg.step();
+        pcg
+    }
+
+    /// Seed from a single u64 via SplitMix64 expansion (the same approach
+    /// `rand_pcg` uses for `seed_from_u64`).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let a = sm.next_u64() as u128;
+        let b = sm.next_u64() as u128;
+        let c = sm.next_u64() as u128;
+        let d = sm.next_u64() as u128;
+        Self::new(a << 64 | b, c << 64 | d)
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self
+            .state
+            .wrapping_mul(MULTIPLIER)
+            .wrapping_add(self.increment);
+    }
+
+    #[inline]
+    fn output(state: u128) -> u64 {
+        // XSL-RR: xor the halves, rotate right by the top 6 bits.
+        let rot = (state >> 122) as u32;
+        let xored = ((state >> 64) as u64) ^ (state as u64);
+        xored.rotate_right(rot)
+    }
+}
+
+impl Rng for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let out = Self::output(self.state);
+        self.step();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::seed_from_u64(123);
+        let mut b = Pcg64::seed_from_u64(123);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::seed_from_u64(1);
+        let mut b = Pcg64::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn different_streams_diverge() {
+        let mut a = Pcg64::new(42, 0);
+        let mut b = Pcg64::new(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    /// Bit-balance sanity: each of the 64 output bits should be ~50% ones.
+    #[test]
+    fn bit_balance() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let n = 20_000;
+        let mut counts = [0u32; 64];
+        for _ in 0..n {
+            let x = r.next_u64();
+            for (i, c) in counts.iter_mut().enumerate() {
+                *c += ((x >> i) & 1) as u32;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 0.5).abs() < 0.02, "bit {i}: {frac}");
+        }
+    }
+}

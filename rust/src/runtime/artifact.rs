@@ -1,0 +1,121 @@
+//! Loading and executing individual HLO-text artifacts.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Batch size baked into the artifacts by `python/compile/model.py`.
+pub const BATCH: usize = 128;
+
+/// One compiled artifact: a PJRT executable taking a single
+/// `f64[BATCH, cols]` operand and returning a 1-tuple of
+/// `f64[BATCH, outs]`.
+pub struct Artifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    cols: usize,
+    outs: usize,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` and compile it on the shared client.
+    pub fn load(dir: &Path, name: &str, cols: usize, outs: usize) -> Result<Self> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = super::with_client(|client| Ok(client.compile(&comp)?))
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Self { name: name.to_string(), exe, cols, outs })
+    }
+
+    /// Artifact name (e.g. `"bounds"`).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Evaluate one padded batch: `flat` must hold exactly
+    /// `BATCH * cols` f64s (row-major). Returns `BATCH * outs` f64s.
+    pub fn run_batch(&self, flat: &[f64]) -> Result<Vec<f64>> {
+        if flat.len() != BATCH * self.cols {
+            bail!(
+                "artifact {}: expected {} values, got {}",
+                self.name,
+                BATCH * self.cols,
+                flat.len()
+            );
+        }
+        let input = xla::Literal::vec1(flat).reshape(&[BATCH as i64, self.cols as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        let out = result.to_vec::<f64>()?;
+        if out.len() != BATCH * self.outs {
+            bail!(
+                "artifact {}: expected {} outputs, got {}",
+                self.name,
+                BATCH * self.outs,
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Evaluate an arbitrary number of rows, padding the final batch by
+    /// repeating `pad_row` (must be a benign, feasible configuration).
+    pub fn run_rows(&self, rows: &[Vec<f64>], pad_row: &[f64]) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(pad_row.len(), self.cols, "pad row arity");
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(BATCH) {
+            let mut flat = Vec::with_capacity(BATCH * self.cols);
+            for row in chunk {
+                assert_eq!(row.len(), self.cols, "row arity for {}", self.name);
+                flat.extend_from_slice(row);
+            }
+            for _ in chunk.len()..BATCH {
+                flat.extend_from_slice(pad_row);
+            }
+            let res = self.run_batch(&flat)?;
+            for i in 0..chunk.len() {
+                out.push(res[i * self.outs..(i + 1) * self.outs].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The full artifact set an experiment needs.
+pub struct ArtifactSet {
+    /// Tiny-tasks bound sweep (envelope kernel).
+    pub bounds: Artifact,
+    /// Big-tasks Erlang analysis.
+    pub erlang_sm: Artifact,
+    /// Closed-form stability sweep.
+    pub stability: Artifact,
+    /// Directory the artifacts were loaded from.
+    pub dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Load all three artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self {
+            bounds: Artifact::load(dir, "bounds", 7, 3)?,
+            erlang_sm: Artifact::load(dir, "erlang_sm", 5, 3)?,
+            stability: Artifact::load(dir, "stability", 2, 2)?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::default_artifacts_dir())
+    }
+}

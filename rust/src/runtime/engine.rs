@@ -1,0 +1,276 @@
+//! The bounds engine: one API, two backends.
+//!
+//! * `Artifact` — the production path: batched evaluation through the
+//!   AOT-compiled JAX/Pallas HLO modules via PJRT.
+//! * `Native` — the pure-Rust `analysis` module, used as fallback when
+//!   artifacts are absent and as the cross-validation reference.
+
+use super::artifact::ArtifactSet;
+use crate::analysis::{self, BoundModel, BoundParams};
+use crate::config::OverheadConfig;
+use anyhow::Result;
+
+/// Which backend a [`BoundsEngine`] is using.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT artifact via PJRT.
+    Artifact,
+    /// Pure-Rust analysis module.
+    Native,
+}
+
+/// One bound query (the Fig. 8/12/13 sweep row).
+#[derive(Clone, Copy, Debug)]
+pub struct BoundQuery {
+    /// Tasks per job.
+    pub k: usize,
+    /// Servers.
+    pub l: usize,
+    /// Arrival rate λ.
+    pub lambda: f64,
+    /// Task service rate μ.
+    pub mu: f64,
+    /// Violation probability ε.
+    pub epsilon: f64,
+    /// Overhead parameters (None = clean bound).
+    pub overhead: Option<OverheadConfig>,
+}
+
+/// Result row: sojourn quantile bounds per model (None = infeasible).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BoundRow {
+    /// Tiny-tasks split-merge (Lemma 1 → Th. 1).
+    pub split_merge: Option<f64>,
+    /// Tiny-tasks single-queue fork-join (Th. 2).
+    pub fork_join: Option<f64>,
+    /// Ideal partition (Eq. 10 → Th. 1).
+    pub ideal: Option<f64>,
+}
+
+/// Big-tasks (Erlang) query for Fig. 12.
+#[derive(Clone, Copy, Debug)]
+pub struct ErlangQuery {
+    /// Servers (= tasks per job).
+    pub l: usize,
+    /// Erlang shape κ of each big task.
+    pub kappa: u32,
+    /// Arrival rate λ.
+    pub lambda: f64,
+    /// Stage rate μ.
+    pub mu: f64,
+    /// Violation probability ε.
+    pub epsilon: f64,
+}
+
+/// Big-tasks result row.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErlangRow {
+    /// E[Δ] (Eq. 21).
+    pub mean_service: f64,
+    /// Max stable utilization (Eq. 23).
+    pub max_utilization: f64,
+    /// Sojourn ε-quantile bound (None = infeasible).
+    pub sojourn: Option<f64>,
+}
+
+/// Bounds evaluation engine.
+pub struct BoundsEngine {
+    artifacts: Option<ArtifactSet>,
+}
+
+impl BoundsEngine {
+    /// Artifact-backed engine (errors if artifacts are missing/corrupt).
+    pub fn artifact() -> Result<Self> {
+        Ok(Self { artifacts: Some(ArtifactSet::load_default()?) })
+    }
+
+    /// Pure-Rust engine.
+    pub fn native() -> Self {
+        Self { artifacts: None }
+    }
+
+    /// Artifact engine when available, otherwise native (logged).
+    pub fn auto() -> Self {
+        match Self::artifact() {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!("note: falling back to native bounds engine ({err})");
+                Self::native()
+            }
+        }
+    }
+
+    /// Which backend is active.
+    pub fn kind(&self) -> EngineKind {
+        if self.artifacts.is_some() {
+            EngineKind::Artifact
+        } else {
+            EngineKind::Native
+        }
+    }
+
+    /// Evaluate tiny-tasks bounds for a query sweep.
+    pub fn bounds(&self, queries: &[BoundQuery]) -> Result<Vec<BoundRow>> {
+        match &self.artifacts {
+            Some(set) => {
+                let rows: Vec<Vec<f64>> = queries
+                    .iter()
+                    .map(|q| {
+                        let (eo, cpd) = match q.overhead {
+                            Some(oh) => (oh.mean_task_overhead(), oh.pre_departure(q.k)),
+                            None => (0.0, 0.0),
+                        };
+                        vec![
+                            q.k as f64,
+                            q.l as f64,
+                            q.lambda,
+                            q.mu,
+                            eo,
+                            cpd,
+                            q.epsilon,
+                        ]
+                    })
+                    .collect();
+                // Benign pad row: M/M/1 at utilization 0.5.
+                let pad = vec![1.0, 1.0, 0.5, 1.0, 0.0, 0.0, 0.01];
+                let out = set.bounds.run_rows(&rows, &pad)?;
+                Ok(out
+                    .into_iter()
+                    .map(|r| BoundRow {
+                        split_merge: positive(r[0]),
+                        fork_join: positive(r[1]),
+                        ideal: positive(r[2]),
+                    })
+                    .collect())
+            }
+            None => Ok(queries.iter().map(|q| native_row(q)).collect()),
+        }
+    }
+
+    /// Evaluate big-tasks Erlang analysis for a query sweep.
+    pub fn erlang(&self, queries: &[ErlangQuery]) -> Result<Vec<ErlangRow>> {
+        match &self.artifacts {
+            Some(set) => {
+                let rows: Vec<Vec<f64>> = queries
+                    .iter()
+                    .map(|q| {
+                        vec![q.l as f64, q.kappa as f64, q.lambda, q.mu, q.epsilon]
+                    })
+                    .collect();
+                let pad = vec![1.0, 1.0, 0.5, 1.0, 0.01];
+                let out = set.erlang_sm.run_rows(&rows, &pad)?;
+                Ok(out
+                    .into_iter()
+                    .map(|r| ErlangRow {
+                        mean_service: r[0],
+                        max_utilization: r[1],
+                        sojourn: positive(r[2]),
+                    })
+                    .collect())
+            }
+            None => Ok(queries
+                .iter()
+                .map(|q| ErlangRow {
+                    mean_service: analysis::erlang::mean_max_erlang(q.l, q.kappa, q.mu),
+                    max_utilization: analysis::erlang::max_utilization_big_tasks(
+                        q.l, q.kappa, q.mu,
+                    ),
+                    sojourn: analysis::sojourn_bound(
+                        BoundModel::SplitMergeBigErlang { kappa: q.kappa },
+                        &BoundParams {
+                            l: q.l,
+                            k: q.l,
+                            lambda: q.lambda,
+                            mu: q.mu,
+                            epsilon: q.epsilon,
+                            overhead: None,
+                        },
+                    ),
+                })
+                .collect()),
+        }
+    }
+
+    /// Tiny-tasks split-merge stability (Eq. 20) for (k, l) pairs.
+    pub fn stability(&self, pairs: &[(usize, usize)]) -> Result<Vec<f64>> {
+        match &self.artifacts {
+            Some(set) => {
+                let rows: Vec<Vec<f64>> =
+                    pairs.iter().map(|&(k, l)| vec![k as f64, l as f64]).collect();
+                let pad = vec![1.0, 1.0];
+                let out = set.stability.run_rows(&rows, &pad)?;
+                Ok(out.into_iter().map(|r| r[0]).collect())
+            }
+            None => Ok(pairs
+                .iter()
+                .map(|&(k, l)| analysis::stability::sm_tiny_tasks(l, k))
+                .collect()),
+        }
+    }
+}
+
+fn positive(x: f64) -> Option<f64> {
+    if x >= 0.0 {
+        Some(x)
+    } else {
+        None
+    }
+}
+
+fn native_row(q: &BoundQuery) -> BoundRow {
+    let p = BoundParams {
+        l: q.l,
+        k: q.k,
+        lambda: q.lambda,
+        mu: q.mu,
+        epsilon: q.epsilon,
+        overhead: q.overhead,
+    };
+    let clean = BoundParams { overhead: None, ..p };
+    BoundRow {
+        split_merge: analysis::sojourn_bound(BoundModel::SplitMergeTiny, &p),
+        fork_join: analysis::sojourn_bound(BoundModel::ForkJoinTiny, &p),
+        // Ideal ignores overhead by definition (reference curve).
+        ideal: analysis::sojourn_bound(BoundModel::Ideal, &clean),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_matches_analysis() {
+        let eng = BoundsEngine::native();
+        assert_eq!(eng.kind(), EngineKind::Native);
+        let q = BoundQuery {
+            k: 400,
+            l: 50,
+            lambda: 0.5,
+            mu: 8.0,
+            epsilon: 0.01,
+            overhead: None,
+        };
+        let rows = eng.bounds(&[q]).unwrap();
+        let direct = analysis::sojourn_bound(
+            BoundModel::ForkJoinTiny,
+            &BoundParams {
+                l: 50,
+                k: 400,
+                lambda: 0.5,
+                mu: 8.0,
+                epsilon: 0.01,
+                overhead: None,
+            },
+        )
+        .unwrap();
+        assert!((rows[0].fork_join.unwrap() - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_stability() {
+        let eng = BoundsEngine::native();
+        let s = eng.stability(&[(50, 50), (500, 50)]).unwrap();
+        assert!(s[0] < s[1]);
+    }
+}

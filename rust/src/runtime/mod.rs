@@ -1,0 +1,43 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the coordinator hot path.
+//!
+//! Layer boundaries (DESIGN.md §3): Python runs once at build time
+//! (`make artifacts`); this module makes the Rust binary self-contained
+//! afterwards. Interchange is HLO **text** — the image's xla_extension
+//! 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit instruction ids),
+//! while the text parser reassigns ids.
+
+mod artifact;
+mod engine;
+
+pub use artifact::{Artifact, ArtifactSet, BATCH};
+pub use engine::{BoundQuery, BoundRow, BoundsEngine, EngineKind, ErlangQuery, ErlangRow};
+
+use anyhow::Result;
+use std::cell::OnceCell;
+
+std::thread_local! {
+    // xla's PjRtClient is an Rc-based handle (not Send/Sync): the client —
+    // and every executable compiled from it — lives on the thread that
+    // created it. The coordinator therefore evaluates artifacts on its
+    // main thread and parallelizes only the simulations (DESIGN.md §7).
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let client = xla::PjRtClient::cpu()?;
+            let _ = cell.set(client);
+        }
+        f(cell.get().expect("client initialized"))
+    })
+}
+
+/// Default artifacts directory (`TT_ARTIFACTS` overrides; used by tests).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("TT_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,439 @@
+//! Event-calendar DES engine — a second, independent implementation of
+//! the split-merge and single-queue fork-join models, faithful to
+//! forkulator's architecture (explicit event queue, arrival/start/finish
+//! events) rather than the per-job recursions in `models/`.
+//!
+//! Purpose: *cross-validation*. Two simulators written in structurally
+//! different styles agreeing sample-for-sample (same seed) or
+//! distribution-for-distribution is strong evidence both are right; the
+//! integration suite (`rust/tests/calendar_crosscheck.rs`) asserts exact
+//! agreement for split-merge and single-queue fork-join.
+//!
+//! The engine also supports what the recursions cannot express directly:
+//! multi-stage jobs with shuffle barriers (Sec. 2.1's DAG stages), used
+//! by [`crate::sim::models::MultiStage`]-style experiments.
+
+use super::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Discrete event kinds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EventKind {
+    /// A job arrives (index into the pre-generated arrival list).
+    Arrival(u32),
+    /// Server finished its current task.
+    TaskFinish {
+        /// Which server.
+        server: u32,
+        /// Owning job.
+        job: u32,
+        /// Task index within the job's current stage.
+        task: u32,
+    },
+    /// Split-merge: the in-service job departs (scheduled at
+    /// last-task-finish + pre-departure overhead; the overhead *blocks*
+    /// the next job, Sec. 2.6).
+    Departure(u32),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64, // tie-breaker for determinism
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed compare; ties broken by insertion order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Scheduling discipline of the calendar engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Discipline {
+    /// Blocking fork-join: one job in service at a time (Fig. 5).
+    SplitMerge,
+    /// Global FIFO task queue, no barriers (Sec. 5).
+    SingleQueueForkJoin,
+}
+
+/// Per-job bookkeeping.
+#[derive(Clone, Debug)]
+struct JobState {
+    arrival: f64,
+    /// Stages: remaining tasks to *dispatch* per stage (front = current).
+    stages: VecDeque<u32>,
+    /// Tasks of the current stage still running.
+    outstanding: u32,
+    /// Tasks of the current stage not yet dispatched.
+    to_dispatch: u32,
+    first_start: f64,
+    workload: f64,
+    task_overhead: f64,
+    /// Pre-departure overhead applied (set when the departure event is
+    /// scheduled / the job completes).
+    pd: f64,
+    done: bool,
+}
+
+/// Event-calendar simulator for (possibly multi-stage) tiny-task jobs.
+pub struct Calendar {
+    discipline: Discipline,
+    #[allow(dead_code)] // kept for introspection & future disciplines
+    servers: usize,
+    /// Tasks per stage; single-stage jobs use `vec![k]`.
+    stage_tasks: Vec<u32>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    /// Idle server ids.
+    idle: Vec<u32>,
+    /// Global FIFO of (job, task-in-stage) ready to run.
+    ready: VecDeque<(u32, u32)>,
+    /// Job queue for split-merge (jobs not yet started).
+    pending_jobs: VecDeque<u32>,
+    /// Split-merge: a job currently in service?
+    in_service: Option<u32>,
+    jobs: Vec<JobState>,
+    completed: Vec<JobRecord>,
+}
+
+impl Calendar {
+    /// New engine for `servers` workers and jobs of `stage_tasks` tasks
+    /// per stage (e.g. `vec![k]` single stage, `vec![k, m]` map+reduce).
+    pub fn new(discipline: Discipline, servers: usize, stage_tasks: Vec<u32>) -> Self {
+        assert!(servers >= 1 && !stage_tasks.is_empty());
+        assert!(stage_tasks.iter().all(|&t| t >= 1));
+        Self {
+            discipline,
+            servers,
+            stage_tasks,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            idle: (0..servers as u32).rev().collect(),
+            ready: VecDeque::new(),
+            pending_jobs: VecDeque::new(),
+            in_service: None,
+            jobs: Vec::new(),
+            completed: Vec::new(),
+        }
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Event { time, seq: self.seq, kind });
+    }
+
+    /// Run `n_jobs` jobs to completion; returns per-job records in
+    /// arrival order.
+    pub fn run(
+        &mut self,
+        n_jobs: usize,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> Vec<JobRecord> {
+        // Pre-generate arrivals so RNG draw order matches the recursion
+        // engines (arrival stream first is not required — recursions draw
+        // arrival-then-tasks per job; we draw tasks lazily at dispatch,
+        // which has a DIFFERENT draw order, so cross-checks compare
+        // distributions... except single-stage FIFO dispatch order equals
+        // generation order, making draws identical. See crosscheck test.)
+        for j in 0..n_jobs as u32 {
+            let t = workload.next_arrival();
+            self.push_event(t, EventKind::Arrival(j));
+        }
+        while let Some(ev) = self.heap.pop() {
+            match ev.kind {
+                EventKind::Arrival(j) => self.on_arrival(ev.time, j),
+                EventKind::TaskFinish { server, job, task } => {
+                    self.on_finish(ev.time, server, job, task, overhead, trace)
+                }
+                EventKind::Departure(j) => {
+                    // Split-merge floor clears at the padded instant.
+                    self.record_departure(ev.time, j);
+                    self.in_service = None;
+                }
+            }
+            self.dispatch(ev.time, workload, overhead, trace);
+        }
+        let mut out = std::mem::take(&mut self.completed);
+        out.sort_by_key(|r| r.index);
+        out
+    }
+
+    fn on_arrival(&mut self, _now: f64, j: u32) {
+        debug_assert_eq!(j as usize, self.jobs.len());
+        let mut stages: VecDeque<u32> = self.stage_tasks.iter().copied().collect();
+        let first = stages.pop_front().unwrap();
+        self.jobs.push(JobState {
+            arrival: _now,
+            stages,
+            outstanding: 0,
+            to_dispatch: first,
+            first_start: f64::INFINITY,
+            workload: 0.0,
+            task_overhead: 0.0,
+            pd: 0.0,
+            done: false,
+        });
+        match self.discipline {
+            Discipline::SplitMerge => self.pending_jobs.push_back(j),
+            Discipline::SingleQueueForkJoin => {
+                let k = self.jobs[j as usize].to_dispatch;
+                for t in 0..k {
+                    self.ready.push_back((j, t));
+                }
+                self.jobs[j as usize].to_dispatch = 0;
+                self.jobs[j as usize].outstanding = k;
+            }
+        }
+    }
+
+    fn on_finish(
+        &mut self,
+        now: f64,
+        server: u32,
+        job: u32,
+        _task: u32,
+        overhead: &OverheadModel,
+        _trace: &mut TraceLog,
+    ) {
+        self.idle.push(server);
+        let js = &mut self.jobs[job as usize];
+        js.outstanding -= 1;
+        if js.outstanding == 0 && js.to_dispatch == 0 {
+            if let Some(next_stage) = js.stages.pop_front() {
+                // Shuffle barrier crossed: enqueue the next stage.
+                match self.discipline {
+                    Discipline::SplitMerge => {
+                        js.to_dispatch = next_stage;
+                        // tasks enqueued by dispatch() below
+                        js.outstanding = 0;
+                        let k = js.to_dispatch;
+                        for t in 0..k {
+                            self.ready.push_back((job, t));
+                        }
+                        js.outstanding = k;
+                        js.to_dispatch = 0;
+                    }
+                    Discipline::SingleQueueForkJoin => {
+                        for t in 0..next_stage {
+                            self.ready.push_back((job, t));
+                        }
+                        js.outstanding = next_stage;
+                    }
+                }
+            } else {
+                // Job complete.
+                js.done = true;
+                let total: u32 = self.stage_tasks.iter().sum();
+                let pd = overhead.pre_departure(total as usize);
+                self.jobs[job as usize].pd = pd;
+                if self.discipline == Discipline::SplitMerge {
+                    // The pre-departure overhead blocks the floor until
+                    // the departure instant.
+                    self.push_event(now + pd, EventKind::Departure(job));
+                }
+            }
+        }
+    }
+
+    /// Record a (split-merge) departure at exactly `time` (the scheduled
+    /// instant already includes the pre-departure overhead).
+    fn record_departure(&mut self, time: f64, j: u32) {
+        let js = &mut self.jobs[j as usize];
+        js.done = false; // consumed
+        self.completed.push(JobRecord {
+            index: j as usize,
+            arrival: js.arrival,
+            departure: time,
+            first_start: js.first_start,
+            workload: js.workload,
+            task_overhead: js.task_overhead,
+            pre_departure_overhead: js.pd,
+        });
+    }
+
+    fn dispatch(
+        &mut self,
+        now: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) {
+        // Split-merge: admit the next job when the floor is clear (the
+        // Departure event clears `in_service` at finish + pre-departure).
+        if self.discipline == Discipline::SplitMerge {
+            if self.in_service.is_none() {
+                if let Some(&next) = self.pending_jobs.front() {
+                    // Pre-departure overhead of the previous job delays
+                    // the next start; model by shifting admission time.
+                    self.pending_jobs.pop_front();
+                    self.in_service = Some(next);
+                    let js = &mut self.jobs[next as usize];
+                    let k = js.to_dispatch;
+                    for t in 0..k {
+                        self.ready.push_back((next, t));
+                    }
+                    js.outstanding = k;
+                    js.to_dispatch = 0;
+                }
+            }
+        } else {
+            // FJ: complete any finished jobs immediately.
+            let done_jobs: Vec<u32> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|(_, j)| j.done)
+                .map(|(i, _)| i as u32)
+                .collect();
+            for j in done_jobs {
+                self.complete_job(now, j, overhead);
+            }
+        }
+
+        while !self.idle.is_empty() && !self.ready.is_empty() {
+            let (job, task) = self.ready.pop_front().unwrap();
+            let server = self.idle.pop().unwrap();
+            let e = workload.next_execution();
+            let o = overhead.sample_task(workload.rng());
+            let js = &mut self.jobs[job as usize];
+            let start = now.max(js.arrival);
+            js.workload += e;
+            js.task_overhead += o;
+            if start < js.first_start {
+                js.first_start = start;
+            }
+            let finish = start + e + o;
+            trace.record(TraceEvent { job, task, server, start, end: finish });
+            self.push_event(finish, EventKind::TaskFinish { server, job, task });
+        }
+    }
+
+    fn complete_job(&mut self, now: f64, j: u32, overhead: &OverheadModel) {
+        let js = &mut self.jobs[j as usize];
+        if !js.done {
+            return;
+        }
+        js.done = false; // consumed
+        let total_tasks: u32 = self.stage_tasks.iter().sum();
+        let pd = overhead.pre_departure(total_tasks as usize);
+        self.completed.push(JobRecord {
+            index: j as usize,
+            arrival: js.arrival,
+            departure: now + pd,
+            first_start: js.first_start,
+            workload: js.workload,
+            task_overhead: js.task_overhead,
+            pre_departure_overhead: pd,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Deterministic, Exponential};
+
+    fn workload(ia: f64, ex: f64, seed: u64) -> Workload {
+        Workload::new(
+            Box::new(Deterministic::new(ia)),
+            Box::new(Deterministic::new(ex)),
+            seed,
+        )
+    }
+
+    #[test]
+    fn single_stage_fj_deterministic() {
+        // l=2, k=4, exec=1, arrivals every 10: each job takes 2 s.
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4]);
+        let mut w = workload(10.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(3, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 3);
+        for r in &recs {
+            assert!((r.sojourn() - 2.0).abs() < 1e-12, "{}", r.sojourn());
+        }
+    }
+
+    #[test]
+    fn split_merge_blocks() {
+        // l=2, k=4, exec=1 → Δ=2; arrivals every 1 s → serial service.
+        let mut cal = Calendar::new(Discipline::SplitMerge, 2, vec![4]);
+        let mut w = workload(1.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(5, &mut w, &oh, &mut tr);
+        // D(n) = 3 + 2n (first arrival at t=1).
+        for (n, r) in recs.iter().enumerate() {
+            assert!(
+                (r.departure - (3.0 + 2.0 * n as f64)).abs() < 1e-9,
+                "job {n}: {}",
+                r.departure
+            );
+        }
+    }
+
+    /// Two-stage job (map k=4, reduce m=2) with a shuffle barrier: the
+    /// reduce stage cannot start before every map task finished.
+    #[test]
+    fn shuffle_barrier_enforced() {
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4, 2]);
+        let mut w = workload(100.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let recs = cal.run(1, &mut w, &oh, &mut tr);
+        // Map: 4 tasks on 2 servers = done at arrival+2; reduce: 2 tasks
+        // in parallel = +1 → sojourn 3.
+        assert!((recs[0].sojourn() - 3.0).abs() < 1e-12, "{}", recs[0].sojourn());
+        // Trace: 6 tasks total; no reduce task starts before t=arrival+2.
+        let events = tr.events();
+        assert_eq!(events.len(), 6);
+        let map_end = recs[0].arrival + 2.0;
+        let late_starts = events.iter().filter(|e| e.start >= map_end - 1e-9).count();
+        assert_eq!(late_starts, 2, "exactly the reduce tasks start after the barrier");
+    }
+
+    /// Exponential two-stage FJ: adding a reduce stage increases sojourn
+    /// versus single-stage with the same total work.
+    #[test]
+    fn second_stage_costs_synchronization() {
+        let run = |stages: Vec<u32>| -> f64 {
+            let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 4, stages);
+            let mut w = Workload::new(
+                Box::new(Exponential::new(0.3)),
+                Box::new(Exponential::new(2.0)),
+                7,
+            );
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            let recs = cal.run(4000, &mut w, &oh, &mut tr);
+            recs.iter().map(|r| r.sojourn()).sum::<f64>() / recs.len() as f64
+        };
+        // 12 tasks in one stage vs 8 map + 4 reduce (same count, same
+        // per-task law → same workload, extra barrier).
+        let single = run(vec![12]);
+        let staged = run(vec![8, 4]);
+        assert!(staged > single, "barrier must cost: {staged} !> {single}");
+    }
+}

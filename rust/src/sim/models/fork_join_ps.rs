@@ -1,0 +1,131 @@
+//! Classic per-server fork-join (Fig. 4(a)): task i of each job is bound
+//! to server i on arrival; each server runs its own FIFO queue. This is
+//! the k = l baseline of Fig. 3 — tiny tasks make no difference here
+//! (Sec. 1.2), so the model requires k = l.
+
+use super::Model;
+use crate::sim::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+
+/// Per-server fork-join with l servers (k = l tasks per job).
+pub struct ForkJoinPerServer {
+    /// Per-server "free at" times (tail of each server's FIFO queue).
+    free: Vec<f64>,
+}
+
+impl ForkJoinPerServer {
+    /// New model with `l` servers.
+    pub fn new(l: usize) -> Self {
+        assert!(l >= 1);
+        Self { free: vec![0.0; l] }
+    }
+}
+
+impl Model for ForkJoinPerServer {
+    fn advance(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        let mut last_finish = f64::NEG_INFINITY;
+        let mut first_start = f64::INFINITY;
+        for (i, free) in self.free.iter_mut().enumerate() {
+            let e = workload.next_execution();
+            let o = overhead.sample_task(workload.rng());
+            workload_sum += e;
+            overhead_sum += o;
+            let start = free.max(arrival);
+            let finish = start + e + o;
+            *free = finish;
+            first_start = first_start.min(start);
+            last_finish = last_finish.max(finish);
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job: n as u32,
+                    task: i as u32,
+                    server: i as u32,
+                    start,
+                    end: finish,
+                });
+            }
+        }
+        let pd = overhead.pre_departure(self.free.len());
+        JobRecord {
+            index: n,
+            arrival,
+            departure: last_finish + pd,
+            first_start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "fork-join-per-server"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Deterministic, Exponential};
+
+    /// l = 1 reduces to the single-server Lindley recursion.
+    #[test]
+    fn single_server_case() {
+        let mut m = ForkJoinPerServer::new(1);
+        let mut w = Workload::new(
+            Box::new(Exponential::new(0.5)),
+            Box::new(Exponential::new(1.0)),
+            11,
+        );
+        let mut w2 = Workload::new(
+            Box::new(Exponential::new(0.5)),
+            Box::new(Exponential::new(1.0)),
+            11,
+        );
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let mut d_prev: f64 = 0.0;
+        for n in 0..2000 {
+            let a = w.next_arrival();
+            let r = m.advance(n, a, &mut w, &oh, &mut tr);
+            let a2 = w2.next_arrival();
+            let s2 = w2.next_execution();
+            d_prev = a2.max(d_prev) + s2;
+            assert!((r.departure - d_prev).abs() < 1e-9);
+        }
+    }
+
+    /// A straggler on one server blocks later jobs' tasks on that server
+    /// even while other servers idle — the defining FJ-per-server effect.
+    #[test]
+    fn straggler_blocks_per_server_queue() {
+        let mut m = ForkJoinPerServer::new(2);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        // Job 0: tasks (10, 10) — both servers busy until t = 10.
+        let mut w0 = Workload::new(
+            Box::new(Deterministic::new(0.0)),
+            Box::new(Deterministic::new(10.0)),
+            1,
+        );
+        let r0 = m.advance(0, 0.0, &mut w0, &oh, &mut tr);
+        assert!((r0.departure - 10.0).abs() < 1e-12);
+        // Job 1 arrives at t = 1 with short tasks; must wait until 10.
+        let mut w1 = Workload::new(
+            Box::new(Deterministic::new(1.0)),
+            Box::new(Deterministic::new(0.5)),
+            1,
+        );
+        let a1 = w1.next_arrival();
+        let r1 = m.advance(1, a1, &mut w1, &oh, &mut tr);
+        assert!((r1.first_start - 10.0).abs() < 1e-12);
+        assert!((r1.departure - 10.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,129 @@
+//! Ideal job partition (Sec. 3.2.4): each job's workload L(n) — generated
+//! as k task draws to keep the workload distribution identical to the
+//! other models — is divided into l *equisized* tasks. All l tasks start
+//! and finish in unison, so the system behaves exactly like a single
+//! FIFO server with service time `L(n)/l` (plus overhead).
+
+use super::Model;
+use crate::sim::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+
+/// Ideal partition over l servers; workload sampled as k task draws.
+pub struct IdealPartition {
+    l: usize,
+    k: usize,
+    prev_departure: f64,
+}
+
+impl IdealPartition {
+    /// New model: workload = sum of `k` execution draws, run as `l` equal
+    /// tasks on `l` servers.
+    pub fn new(l: usize, k: usize) -> Self {
+        assert!(l >= 1 && k >= 1);
+        Self { l, k, prev_departure: 0.0 }
+    }
+}
+
+impl Model for IdealPartition {
+    fn advance(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        let mut workload_sum = 0.0;
+        for _ in 0..self.k {
+            workload_sum += workload.next_execution();
+        }
+        // Each of the l equisized tasks pays task-service overhead; they
+        // run in lockstep so the job's service time is governed by the
+        // slowest (max overhead) share.
+        let mut max_overhead = 0.0f64;
+        let mut overhead_sum = 0.0;
+        for _ in 0..self.l {
+            let o = overhead.sample_task(workload.rng());
+            overhead_sum += o;
+            max_overhead = max_overhead.max(o);
+        }
+        let start = arrival.max(self.prev_departure);
+        let share = workload_sum / self.l as f64;
+        let finish = start + share + max_overhead;
+        let pd = overhead.pre_departure(self.l);
+        let departure = finish + pd;
+        self.prev_departure = departure;
+        if trace.is_enabled() {
+            for s in 0..self.l {
+                trace.record(TraceEvent {
+                    job: n as u32,
+                    task: s as u32,
+                    server: s as u32,
+                    start,
+                    end: finish,
+                });
+            }
+        }
+        JobRecord {
+            index: n,
+            arrival,
+            departure,
+            first_start: start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "ideal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Deterministic, Exponential};
+
+    #[test]
+    fn behaves_as_single_server_with_scaled_service() {
+        let (l, k) = (4usize, 4usize);
+        let mut m = IdealPartition::new(l, k);
+        let mut w = Workload::new(
+            Box::new(Deterministic::new(3.0)),
+            Box::new(Deterministic::new(1.0)),
+            1,
+        );
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let a = w.next_arrival();
+        let r = m.advance(0, a, &mut w, &oh, &mut tr);
+        // L = 4, share = 1 → sojourn 1.
+        assert!((r.sojourn() - 1.0).abs() < 1e-12);
+    }
+
+    /// The ideal partition's mean job service time is E[L]/l — strictly
+    /// smaller than split-merge's Lemma-1 value for the same workload.
+    #[test]
+    fn beats_split_merge_service_time() {
+        let (l, k) = (10usize, 10usize);
+        let mut m = IdealPartition::new(l, k);
+        let mut w = Workload::new(
+            Box::new(Deterministic::new(1e6)),
+            Box::new(Exponential::new(1.0)),
+            5,
+        );
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let n = 10_000;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let a = w.next_arrival();
+            sum += m.advance(i, a, &mut w, &oh, &mut tr).service_time();
+        }
+        let mean = sum / n as f64;
+        // E[L]/l = k/(mu l) = 1.
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        // Split-merge equivalent is H_10 ≈ 2.93 — ideal is far better.
+        assert!(mean < 1.5);
+    }
+}

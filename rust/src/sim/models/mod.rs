@@ -1,0 +1,33 @@
+//! The four parallel-system models, each as an exact per-job recursion.
+
+mod fork_join_ps;
+mod fork_join_sq;
+mod ideal;
+mod split_merge;
+
+pub use fork_join_ps::ForkJoinPerServer;
+pub use fork_join_sq::ForkJoinSingleQueue;
+pub use ideal::IdealPartition;
+pub use split_merge::SplitMerge;
+
+use super::{JobRecord, OverheadModel, TraceLog, Workload};
+
+/// A parallel-system model simulated job by job.
+///
+/// `advance` consumes the next job (its arrival time and its tasks drawn
+/// from `workload`) and returns the completed [`JobRecord`]. Models carry
+/// their cross-job state (server free times, previous departure) inside.
+pub trait Model {
+    /// Simulate job `n` arriving at `arrival`.
+    fn advance(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord;
+
+    /// Human-readable model name.
+    fn name(&self) -> &'static str;
+}

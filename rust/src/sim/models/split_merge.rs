@@ -1,0 +1,220 @@
+//! Tiny-tasks split-merge model (Fig. 5).
+//!
+//! Jobs queue FIFO; the head-of-line job is split into k tasks which feed
+//! the l servers from a task queue; when all k tasks finish (merge) plus
+//! the pre-departure overhead elapses, the job departs and the next one
+//! may start. All servers are idle at the start of each job (the defining
+//! barrier of the model), so the per-job makespan Δ(n) is computed on a
+//! freshly reset server heap — exactly Eq. 15/16's recursion
+//! `D(n) = max(A(n), D(n−1)) + Δ(n)`.
+
+use super::Model;
+use crate::sim::{JobRecord, OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+
+/// Split-merge with l servers and k tasks per job.
+pub struct SplitMerge {
+    k: usize,
+    heap: ServerHeap,
+    prev_departure: f64,
+}
+
+impl SplitMerge {
+    /// New model with `l` servers, `k ≥ l` tasks per job.
+    pub fn new(l: usize, k: usize) -> Self {
+        assert!(l >= 1 && k >= l, "split-merge requires k >= l >= 1");
+        Self { k, heap: ServerHeap::new(l, 0.0), prev_departure: 0.0 }
+    }
+}
+
+impl Model for SplitMerge {
+    fn advance(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        // Start barrier: job starts when it arrives AND the previous job
+        // has departed; all servers are idle at that instant.
+        let start = arrival.max(self.prev_departure);
+        self.heap.reset_all(start);
+
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        if trace.is_enabled() {
+            for i in 0..self.k {
+                let e = workload.next_execution();
+                let o = overhead.sample_task(workload.rng());
+                workload_sum += e;
+                overhead_sum += o;
+                let (t_free, server) = self.heap.peek();
+                let finish = t_free + e + o;
+                self.heap.assign(finish);
+                trace.record(TraceEvent {
+                    job: n as u32,
+                    task: i as u32,
+                    server,
+                    start: t_free,
+                    end: finish,
+                });
+            }
+        } else {
+            for _ in 0..self.k {
+                let e = workload.next_execution();
+                let o = overhead.sample_task(workload.rng());
+                workload_sum += e;
+                overhead_sum += o;
+                let (t_free, _) = self.heap.peek();
+                self.heap.assign(t_free + e + o);
+            }
+        }
+
+        let makespan_end = self.heap.max_time();
+        // Pre-departure overhead blocks the next job in split-merge.
+        let pd = overhead.pre_departure(self.k);
+        let departure = makespan_end + pd;
+        self.prev_departure = departure;
+
+        JobRecord {
+            index: n,
+            arrival,
+            departure,
+            first_start: start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "split-merge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{Deterministic, Exponential};
+
+    fn det_workload(interarrival: f64, exec: f64) -> Workload {
+        Workload::new(
+            Box::new(Deterministic::new(interarrival)),
+            Box::new(Deterministic::new(exec)),
+            1,
+        )
+    }
+
+    /// Deterministic sanity: l=2, k=4, exec=1 → each server runs 2 tasks,
+    /// Δ = 2; with inter-arrival 10 the system idles between jobs.
+    #[test]
+    fn deterministic_makespan() {
+        let mut m = SplitMerge::new(2, 4);
+        let mut w = det_workload(10.0, 1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let a1 = w.next_arrival();
+        let r1 = m.advance(0, a1, &mut w, &oh, &mut tr);
+        assert!((r1.sojourn() - 2.0).abs() < 1e-12);
+        assert!((r1.workload - 4.0).abs() < 1e-12);
+        let a2 = w.next_arrival();
+        let r2 = m.advance(1, a2, &mut w, &oh, &mut tr);
+        assert!((r2.arrival - 20.0).abs() < 1e-12);
+        assert!((r2.sojourn() - 2.0).abs() < 1e-12);
+    }
+
+    /// Blocking: with inter-arrival 1 and Δ=2, job n waits for job n−1.
+    #[test]
+    fn departure_barrier_blocks() {
+        let mut m = SplitMerge::new(2, 4);
+        let mut w = det_workload(1.0, 1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let mut last_departure = 0.0;
+        for n in 0..10 {
+            let a = w.next_arrival();
+            let r = m.advance(n, a, &mut w, &oh, &mut tr);
+            assert!(r.first_start >= last_departure - 1e-12, "start barrier");
+            assert!(r.departure >= last_departure, "FIFO departures");
+            last_departure = r.departure;
+        }
+        // First arrival at t = 1; D(n) = D(n−1) + 2 → D(9) = 3 + 18 = 21.
+        assert!((last_departure - 21.0).abs() < 1e-12);
+    }
+
+    /// k = l with exponential tasks: E[Δ] should approach the harmonic
+    /// mean-of-maximum identity E[max] = H_l / mu (Sec. 4.2).
+    #[test]
+    fn big_tasks_mean_makespan_matches_harmonic() {
+        let l = 10;
+        let mut m = SplitMerge::new(l, l);
+        let mut w = Workload::new(
+            Box::new(Deterministic::new(1000.0)), // no queueing
+            Box::new(Exponential::new(1.0)),
+            42,
+        );
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let n = 20_000;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let a = w.next_arrival();
+            sum += m.advance(i, a, &mut w, &oh, &mut tr).service_time();
+        }
+        let mean = sum / n as f64;
+        let expect = crate::util::math::harmonic(l as u64);
+        assert!(
+            (mean - expect).abs() / expect < 0.02,
+            "E[Δ]={mean} vs H_l={expect}"
+        );
+    }
+
+    /// Tiny-tasks mean service time matches Lemma 1:
+    /// E[Δ] = (k/l + Σ_{i=2}^{l} 1/i) / mu.
+    #[test]
+    fn tiny_tasks_mean_service_matches_lemma1() {
+        let (l, k) = (10usize, 50usize);
+        let mut m = SplitMerge::new(l, k);
+        let mut w = Workload::new(
+            Box::new(Deterministic::new(1000.0)),
+            Box::new(Exponential::new(1.0)),
+            7,
+        );
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let n = 20_000;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let a = w.next_arrival();
+            sum += m.advance(i, a, &mut w, &oh, &mut tr).service_time();
+        }
+        let mean = sum / n as f64;
+        let expect =
+            k as f64 / l as f64 + crate::util::math::harmonic(l as u64) - 1.0;
+        assert!(
+            (mean - expect).abs() / expect < 0.02,
+            "E[Δ]={mean} vs Lemma 1 {expect}"
+        );
+    }
+
+    /// Pre-departure overhead delays the next job (blocking).
+    #[test]
+    fn pre_departure_blocks_next_job() {
+        let oh = OverheadModel::new(crate::config::OverheadConfig {
+            c_task_ts: 0.0,
+            mu_task_ts: f64::INFINITY,
+            c_job_pd: 5.0,
+            c_task_pd: 0.0,
+        });
+        let mut m = SplitMerge::new(1, 1);
+        let mut w = det_workload(0.5, 1.0);
+        let mut tr = TraceLog::disabled();
+        let a1 = w.next_arrival();
+        let r1 = m.advance(0, a1, &mut w, &oh, &mut tr);
+        assert!((r1.departure - (0.5 + 1.0 + 5.0)).abs() < 1e-12);
+        let a2 = w.next_arrival();
+        let r2 = m.advance(1, a2, &mut w, &oh, &mut tr);
+        // Job 2 can only start at r1.departure.
+        assert!((r2.first_start - r1.departure).abs() < 1e-12);
+    }
+}

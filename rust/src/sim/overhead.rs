@@ -1,0 +1,116 @@
+//! The paper's four-parameter overhead model (Sec. 2.6).
+//!
+//! Task-service overhead (Eq. 2): `O_i(n) = c_task_ts + Exp(mu_task_ts)` —
+//! blocking, it extends the task's occupancy of its server.
+//! Pre-departure overhead (Eq. 3): `c_job_pd + k * c_task_pd` — delays the
+//! job's departure; in fork-join it does **not** block subsequent tasks,
+//! in split-merge it blocks the next job (Sec. 2.6, last paragraph).
+
+use crate::config::OverheadConfig;
+use crate::rng::{Pcg64, Rng};
+
+/// Sampler for the overhead model; `None`-like behaviour via
+/// [`OverheadModel::none`] keeps the hot path branch-light.
+#[derive(Clone, Debug)]
+pub struct OverheadModel {
+    cfg: OverheadConfig,
+    enabled: bool,
+}
+
+impl OverheadModel {
+    /// Overhead per the given parameters.
+    pub fn new(cfg: OverheadConfig) -> Self {
+        Self { cfg, enabled: true }
+    }
+
+    /// No overhead (idealized model).
+    pub fn none() -> Self {
+        Self { cfg: OverheadConfig::zero(), enabled: false }
+    }
+
+    /// From an optional config.
+    pub fn from_option(cfg: Option<OverheadConfig>) -> Self {
+        match cfg {
+            Some(c) => Self::new(c),
+            None => Self::none(),
+        }
+    }
+
+    /// Whether any overhead is being injected.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The parameters in use.
+    pub fn config(&self) -> &OverheadConfig {
+        &self.cfg
+    }
+
+    /// Sample one task-service overhead `O_i(n)` (Eq. 2).
+    #[inline]
+    pub fn sample_task(&self, rng: &mut Pcg64) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        let exp_part = if self.cfg.mu_task_ts.is_finite() {
+            -rng.next_f64_open().ln() / self.cfg.mu_task_ts
+        } else {
+            0.0
+        };
+        self.cfg.c_task_ts + exp_part
+    }
+
+    /// Deterministic pre-departure overhead for a k-task job (Eq. 3).
+    #[inline]
+    pub fn pre_departure(&self, k: usize) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        self.cfg.pre_departure(k)
+    }
+
+    /// Mean task-service overhead (Eq. 24) — used by the analytic layer.
+    pub fn mean_task(&self) -> f64 {
+        if !self.enabled {
+            return 0.0;
+        }
+        self.cfg.mean_task_overhead()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_zero() {
+        let m = OverheadModel::none();
+        let mut rng = Pcg64::seed_from_u64(1);
+        assert_eq!(m.sample_task(&mut rng), 0.0);
+        assert_eq!(m.pre_departure(1000), 0.0);
+        assert!(!m.enabled());
+    }
+
+    #[test]
+    fn task_overhead_moments() {
+        let m = OverheadModel::new(OverheadConfig::paper());
+        let mut rng = Pcg64::seed_from_u64(2);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| m.sample_task(&mut rng)).sum::<f64>() / n as f64;
+        // E[O] = 2.6 ms + 0.5 ms = 3.1 ms.
+        assert!((mean - 3.1e-3).abs() < 5e-5, "mean={mean}");
+        // Always at least the constant part.
+        for _ in 0..1000 {
+            assert!(m.sample_task(&mut rng) >= 2.6e-3);
+        }
+    }
+
+    #[test]
+    fn pre_departure_linear_in_k() {
+        let m = OverheadModel::new(OverheadConfig::paper());
+        let d1 = m.pre_departure(100);
+        let d2 = m.pre_departure(200);
+        assert!((d2 - d1 - 100.0 * 7.4e-6).abs() < 1e-12);
+        assert!((m.pre_departure(0) - 20e-3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Simulation runner: builds the model from a [`SimulationConfig`], runs
+//! warmup + measured jobs, and gathers statistics.
+
+use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
+use super::{JobRecord, OverheadModel, TraceLog, Workload};
+use crate::config::{ModelKind, SimulationConfig};
+use crate::stats::{QuantileSketch, Summary};
+
+/// Runner options beyond the experiment config.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunOptions {
+    /// Keep every [`JobRecord`] (needed for ECDF/PP analyses).
+    pub record_jobs: bool,
+    /// Record per-task trace events (Figs. 1–2; memory heavy).
+    pub trace: bool,
+    /// Enforce in-order departures in the single-queue fork-join model
+    /// (the Th.-2 analytic variant).
+    pub in_order_departures: bool,
+}
+
+/// Aggregated simulation output.
+pub struct SimResult {
+    /// Echo of the configuration that produced this result.
+    pub config: SimulationConfig,
+    /// Per-job records (empty unless `record_jobs`).
+    pub jobs: Vec<JobRecord>,
+    /// Sojourn-time samples (always collected).
+    pub sojourn: QuantileSketch,
+    /// Waiting-time samples (always collected).
+    pub waiting: QuantileSketch,
+    /// Sojourn summary statistics.
+    pub sojourn_summary: Summary,
+    /// Per-job total task overhead summary.
+    pub overhead_summary: Summary,
+    /// Trace log (empty unless `trace`).
+    pub trace: TraceLog,
+    /// Wall-clock seconds spent simulating.
+    pub wall_seconds: f64,
+}
+
+impl SimResult {
+    /// Sojourn-time quantile.
+    pub fn sojourn_quantile(&mut self, q: f64) -> f64 {
+        self.sojourn.quantile(q)
+    }
+    /// Waiting-time quantile.
+    pub fn waiting_quantile(&mut self, q: f64) -> f64 {
+        self.waiting.quantile(q)
+    }
+    /// Simulated jobs per wall second (events/sec proxy for §Perf).
+    pub fn jobs_per_second(&self) -> f64 {
+        let n = self.sojourn.len() + self.config.warmup;
+        n as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+fn build_model(cfg: &SimulationConfig, opts: &RunOptions) -> Box<dyn Model> {
+    match cfg.model {
+        ModelKind::SplitMerge => Box::new(SplitMerge::new(cfg.servers, cfg.tasks_per_job)),
+        ModelKind::ForkJoinSingleQueue => Box::new(
+            ForkJoinSingleQueue::new(cfg.servers, cfg.tasks_per_job)
+                .with_in_order_departures(opts.in_order_departures),
+        ),
+        ModelKind::ForkJoinPerServer => {
+            assert_eq!(
+                cfg.tasks_per_job, cfg.servers,
+                "per-server fork-join requires k = l"
+            );
+            Box::new(ForkJoinPerServer::new(cfg.servers))
+        }
+        ModelKind::Ideal => Box::new(IdealPartition::new(cfg.servers, cfg.tasks_per_job)),
+    }
+}
+
+/// Run one simulation to completion.
+pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String> {
+    cfg.validate()?;
+    let t0 = std::time::Instant::now();
+    let mut workload = Workload::from_config(cfg)?;
+    let overhead = OverheadModel::from_option(cfg.overhead);
+    let mut model = build_model(cfg, &opts);
+    let mut trace = if opts.trace { TraceLog::enabled() } else { TraceLog::disabled() };
+
+    let total = cfg.warmup + cfg.jobs;
+    let mut jobs = Vec::with_capacity(if opts.record_jobs { cfg.jobs } else { 0 });
+    let mut sojourn = QuantileSketch::with_capacity(cfg.jobs);
+    let mut waiting = QuantileSketch::with_capacity(cfg.jobs);
+    let mut sojourn_summary = Summary::new();
+    let mut overhead_summary = Summary::new();
+
+    for n in 0..total {
+        let arrival = workload.next_arrival();
+        let rec = model.advance(n, arrival, &mut workload, &overhead, &mut trace);
+        if n < cfg.warmup {
+            continue;
+        }
+        sojourn.push(rec.sojourn());
+        waiting.push(rec.waiting());
+        sojourn_summary.push(rec.sojourn());
+        overhead_summary.push(rec.task_overhead + rec.pre_departure_overhead);
+        if opts.record_jobs {
+            jobs.push(rec);
+        }
+    }
+
+    Ok(SimResult {
+        config: cfg.clone(),
+        jobs,
+        sojourn,
+        waiting,
+        sojourn_summary,
+        overhead_summary,
+        trace,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_cfg() -> SimulationConfig {
+        SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 4,
+            tasks_per_job: 8,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 2000,
+            warmup: 200,
+            seed: 9,
+            overhead: None,
+        }
+    }
+
+    #[test]
+    fn runs_and_collects() {
+        let mut res = run(&base_cfg(), RunOptions { record_jobs: true, ..Default::default() })
+            .unwrap();
+        assert_eq!(res.jobs.len(), 2000);
+        assert_eq!(res.sojourn.len(), 2000);
+        let p50 = res.sojourn_quantile(0.5);
+        let p99 = res.sojourn_quantile(0.99);
+        assert!(p50 > 0.0 && p99 >= p50);
+        // Sojourn ≥ waiting + max task time ≥ waiting.
+        for j in &res.jobs {
+            assert!(j.sojourn() >= j.waiting() - 1e-9);
+            assert!(j.departure >= j.arrival);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = run(&base_cfg(), RunOptions::default()).unwrap();
+        let mut b = run(&base_cfg(), RunOptions::default()).unwrap();
+        assert_eq!(a.sojourn_quantile(0.9), b.sojourn_quantile(0.9));
+    }
+
+    #[test]
+    fn all_models_run() {
+        for (model, k) in [
+            (ModelKind::SplitMerge, 8),
+            (ModelKind::ForkJoinSingleQueue, 8),
+            (ModelKind::ForkJoinPerServer, 4),
+            (ModelKind::Ideal, 8),
+        ] {
+            let cfg = SimulationConfig {
+                model,
+                tasks_per_job: k,
+                jobs: 500,
+                warmup: 50,
+                ..base_cfg()
+            };
+            let res = run(&cfg, RunOptions::default()).unwrap();
+            assert_eq!(res.sojourn.len(), 500, "{model}");
+        }
+    }
+
+    /// Overhead strictly increases sojourn times (coupling: same seed).
+    #[test]
+    fn overhead_increases_sojourn() {
+        let cfg = base_cfg();
+        let mut without = run(&cfg, RunOptions::default()).unwrap();
+        let cfg_oh = SimulationConfig {
+            overhead: Some(crate::config::OverheadConfig::paper()),
+            ..cfg
+        };
+        let mut with = run(&cfg_oh, RunOptions::default()).unwrap();
+        assert!(with.sojourn_quantile(0.5) > without.sojourn_quantile(0.5));
+    }
+
+    /// M/M/1 closed form: with k=l=1, P[T > τ] = e^{-(mu-lambda)τ};
+    /// the 0.99 sojourn quantile is ln(100)/(mu−lambda).
+    #[test]
+    fn mm1_quantile_closed_form() {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 1,
+            tasks_per_job: 1,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.5".into() },
+            service: crate::config::ServiceConfig { execution: "exp:1.0".into() },
+            jobs: 200_000,
+            warmup: 5_000,
+            seed: 17,
+            overhead: None,
+        };
+        let mut res = run(&cfg, RunOptions::default()).unwrap();
+        let expect = (100.0f64).ln() / (1.0 - 0.5);
+        let got = res.sojourn_quantile(0.99);
+        assert!(
+            (got - expect).abs() / expect < 0.05,
+            "M/M/1 p99: {got} vs {expect}"
+        );
+    }
+}

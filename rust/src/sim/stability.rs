@@ -1,0 +1,195 @@
+//! Stability-region estimation (Fig. 11).
+//!
+//! Split-merge is a single-server queue in disguise (service = job
+//! makespan Δ), so its maximum stable utilization is
+//! `ρ* = λ* · k · E[E] / l` with `λ* = 1/E[Δ]`; we estimate `E[Δ]` by
+//! Monte-Carlo over the same heap recursion the simulator uses, including
+//! the overhead model. Fork-join is work-conserving, so its stability is
+//! governed purely by the work arriving per server:
+//! `ρ* = E[E] / (E[E] + E[O])` (utilization measured in *useful* work, as
+//! in the paper where ρ is set via the task execution rate).
+//!
+//! A simulation-based stability *detector* is provided for validation:
+//! it flags divergence by comparing sojourn means across run thirds.
+
+use super::{OverheadModel, RunOptions, ServerHeap};
+use crate::config::{ModelKind, OverheadConfig, SimulationConfig};
+use crate::dist::Distribution;
+use crate::rng::Pcg64;
+
+/// Monte-Carlo estimate of the split-merge expected job service time
+/// E[Δ(n)] for l servers, k tasks, execution distribution `exec`, and the
+/// given overhead model (pre-departure included — it blocks in SM).
+pub fn sm_mean_service_mc(
+    l: usize,
+    k: usize,
+    exec: &dyn Distribution,
+    overhead: &OverheadModel,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    assert!(k >= l && l >= 1);
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut total = 0.0;
+    let mut heap = ServerHeap::new(l, 0.0);
+    for _ in 0..samples {
+        heap.reset_all(0.0);
+        for _ in 0..k {
+            let mut f = || crate::rng::Rng::next_f64_open(&mut rng);
+            let e = exec.sample(&mut f);
+            let o = overhead.sample_task(&mut rng);
+            let (t, _) = heap.peek();
+            heap.assign(t + e + o);
+        }
+        total += heap.max_time() + overhead.pre_departure(k);
+    }
+    total / samples as f64
+}
+
+/// Maximum stable utilization of the tiny-tasks split-merge system.
+///
+/// Utilization is measured in execution work per server:
+/// `ρ = λ · k · E[E] / l`, so `ρ* = k · E[E] / (l · E[Δ])`.
+/// With no overhead and Exp(µ) tasks this converges to Eq. 20.
+pub fn sm_max_utilization(
+    l: usize,
+    k: usize,
+    exec: &dyn Distribution,
+    overhead: &OverheadModel,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let mean_delta = sm_mean_service_mc(l, k, exec, overhead, samples, seed);
+    (k as f64 * exec.mean() / l as f64) / mean_delta
+}
+
+/// Maximum stable utilization of the (single-queue) fork-join system:
+/// work conservation gives `ρ* = E[E] / (E[E] + E[O_task])`; the
+/// pre-departure overhead is non-blocking and does not affect stability.
+pub fn fj_max_utilization(mean_exec: f64, overhead: &OverheadModel) -> f64 {
+    mean_exec / (mean_exec + overhead.mean_task())
+}
+
+/// Verdict of the simulation-based stability detector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stability {
+    /// Sojourn process looks stationary.
+    Stable,
+    /// Sojourn process drifts upward consistently.
+    Unstable,
+}
+
+/// Detect stability by simulating `jobs` jobs and comparing mean sojourn
+/// over the run's thirds: monotone growth by more than `factor` flags
+/// divergence. This is a *validation* tool (slow, heuristic); the MC
+/// estimators above are the product path.
+pub fn detect(cfg: &SimulationConfig, factor: f64) -> Result<Stability, String> {
+    let mut cfg = cfg.clone();
+    cfg.warmup = 0; // transient growth is the signal
+    let res = super::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })?;
+    let jobs = &res.jobs;
+    if jobs.len() < 300 {
+        return Err("need >= 300 jobs to detect stability".into());
+    }
+    let third = jobs.len() / 3;
+    let mean = |s: &[super::JobRecord]| -> f64 {
+        s.iter().map(|j| j.sojourn()).sum::<f64>() / s.len() as f64
+    };
+    let m1 = mean(&jobs[..third]);
+    let m2 = mean(&jobs[third..2 * third]);
+    let m3 = mean(&jobs[2 * third..]);
+    if m3 > m2 * factor && m2 > m1 * factor {
+        Ok(Stability::Unstable)
+    } else {
+        Ok(Stability::Stable)
+    }
+}
+
+/// Convenience: the maximum stable utilization for either model under
+/// `Exp(mu)` tasks, matching the Fig.-11 sweep axes.
+pub fn max_utilization(
+    model: ModelKind,
+    l: usize,
+    k: usize,
+    mu: f64,
+    overhead: Option<OverheadConfig>,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let exec = crate::dist::Exponential::new(mu);
+    let oh = OverheadModel::from_option(overhead);
+    match model {
+        ModelKind::SplitMerge => sm_max_utilization(l, k, &exec, &oh, samples, seed),
+        ModelKind::ForkJoinSingleQueue | ModelKind::ForkJoinPerServer => {
+            fj_max_utilization(exec.mean(), &oh)
+        }
+        ModelKind::Ideal => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Exponential;
+    use crate::util::math::harmonic;
+
+    /// k = l: ρ* = 1/H_l (paper Sec. 4.2, big-tasks stability).
+    #[test]
+    fn big_tasks_matches_harmonic() {
+        let l = 20;
+        let exec = Exponential::new(1.0);
+        let rho = sm_max_utilization(l, l, &exec, &OverheadModel::none(), 40_000, 3);
+        let expect = 1.0 / harmonic(l as u64);
+        assert!((rho - expect).abs() / expect < 0.02, "{rho} vs {expect}");
+    }
+
+    /// Tiny tasks: ρ* = 1 / (1 + (1/κ) Σ_{i=2}^{l} 1/i) (Eq. 20).
+    #[test]
+    fn tiny_tasks_matches_eq20() {
+        let (l, k) = (10usize, 80usize);
+        let kappa = k as f64 / l as f64;
+        let exec = Exponential::new(1.0);
+        let rho = sm_max_utilization(l, k, &exec, &OverheadModel::none(), 40_000, 4);
+        let expect = 1.0 / (1.0 + (harmonic(l as u64) - 1.0) / kappa);
+        assert!((rho - expect).abs() / expect < 0.02, "{rho} vs {expect}");
+    }
+
+    /// Overhead shrinks both stability regions.
+    #[test]
+    fn overhead_shrinks_region() {
+        let (l, k) = (10usize, 200usize);
+        let mu = k as f64 / l as f64; // mean exec = l/k (paper scaling)
+        let exec = Exponential::new(mu);
+        let none = OverheadModel::none();
+        let paper = OverheadModel::new(OverheadConfig::paper());
+        let without = sm_max_utilization(l, k, &exec, &none, 20_000, 5);
+        let with = sm_max_utilization(l, k, &exec, &paper, 20_000, 5);
+        assert!(with < without, "{with} !< {without}");
+        let fj_without = fj_max_utilization(exec.mean(), &none);
+        let fj_with = fj_max_utilization(exec.mean(), &paper);
+        assert!((fj_without - 1.0).abs() < 1e-12);
+        assert!(fj_with < 1.0);
+    }
+
+    /// Detector agrees with theory on a clearly stable and a clearly
+    /// unstable split-merge configuration (l = 50, λ = 0.5: unstable at
+    /// κ = 1, stable at κ = 8 — the Fig. 8(a) observation).
+    #[test]
+    fn detector_matches_fig8_observation() {
+        let mk = |k: usize| SimulationConfig {
+            model: ModelKind::SplitMerge,
+            servers: 50,
+            tasks_per_job: k,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.5".into() },
+            service: crate::config::ServiceConfig {
+                execution: format!("exp:{}", k as f64 / 50.0),
+            },
+            jobs: 3000,
+            warmup: 0,
+            seed: 8,
+            overhead: None,
+        };
+        assert_eq!(detect(&mk(50), 1.05).unwrap(), Stability::Unstable);
+        assert_eq!(detect(&mk(400), 1.05).unwrap(), Stability::Stable);
+    }
+}

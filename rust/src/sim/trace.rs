@@ -1,0 +1,118 @@
+//! Executor activity traces — the data behind Figs. 1 and 2 (Gantt-style
+//! diagrams of which executor ran which task when).
+
+use crate::util::csv::Csv;
+
+/// One task execution on one server.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Job index.
+    pub job: u32,
+    /// Task index within the job.
+    pub task: u32,
+    /// Server (executor) id.
+    pub server: u32,
+    /// Service start time.
+    pub start: f64,
+    /// Service end time (includes task overhead).
+    pub end: f64,
+}
+
+/// Collected trace of task executions.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    events: Vec<TraceEvent>,
+    enabled: bool,
+}
+
+impl TraceLog {
+    /// A recording trace log.
+    pub fn enabled() -> Self {
+        Self { events: Vec::new(), enabled: true }
+    }
+
+    /// A no-op trace log (hot paths skip recording).
+    pub fn disabled() -> Self {
+        Self { events: Vec::new(), enabled: false }
+    }
+
+    /// Whether events are being recorded.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event (no-op when disabled).
+    #[inline]
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.enabled {
+            self.events.push(ev);
+        }
+    }
+
+    /// All recorded events.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Busy fraction per server over `[t0, t1]` — the idle-time statistic
+    /// contrasted between Fig. 1 (coarse) and Fig. 2 (fine granularity).
+    pub fn utilization(&self, servers: usize, t0: f64, t1: f64) -> Vec<f64> {
+        assert!(t1 > t0);
+        let mut busy = vec![0.0; servers];
+        for ev in &self.events {
+            let s = ev.start.max(t0);
+            let e = ev.end.min(t1);
+            if e > s {
+                busy[ev.server as usize] += e - s;
+            }
+        }
+        busy.iter().map(|b| b / (t1 - t0)).collect()
+    }
+
+    /// Export as CSV (`job,task,server,start,end`).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(vec!["job", "task", "server", "start", "end"]);
+        for ev in &self.events {
+            csv.push(&[
+                ev.job as f64,
+                ev.task as f64,
+                ev.server as f64,
+                ev.start,
+                ev.end,
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = TraceLog::disabled();
+        t.record(TraceEvent { job: 0, task: 0, server: 0, start: 0.0, end: 1.0 });
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn utilization_window() {
+        let mut t = TraceLog::enabled();
+        t.record(TraceEvent { job: 0, task: 0, server: 0, start: 0.0, end: 1.0 });
+        t.record(TraceEvent { job: 0, task: 1, server: 1, start: 0.5, end: 2.0 });
+        let u = t.utilization(2, 0.0, 2.0);
+        assert!((u[0] - 0.5).abs() < 1e-12);
+        assert!((u[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut t = TraceLog::enabled();
+        for i in 0..5 {
+            t.record(TraceEvent { job: i, task: i, server: 0, start: 0.0, end: 1.0 });
+        }
+        assert_eq!(t.to_csv().len(), 5);
+    }
+}

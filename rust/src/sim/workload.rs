@@ -1,0 +1,141 @@
+//! Workload generation: job arrivals and task execution times drawn from
+//! the configured distributions (Sec. 2.3's controlled experiments).
+
+use crate::config::SimulationConfig;
+use crate::dist::{parse_spec, Distribution};
+use crate::rng::{Pcg64, Rng};
+
+/// A reproducible stream of job arrivals and task execution times.
+pub struct Workload {
+    interarrival: Box<dyn Distribution>,
+    execution: Box<dyn Distribution>,
+    /// Devirtualized fast path: exponential execution rate, if the
+    /// execution distribution is `Exp` (the paper's canonical case; §Perf
+    /// log — saves a dyn call + closure per task on the hot loop).
+    exec_exp_rate: Option<f64>,
+    rng: Pcg64,
+    clock: f64,
+}
+
+impl Workload {
+    /// Build from a simulation config (validated specs).
+    pub fn from_config(cfg: &SimulationConfig) -> Result<Self, String> {
+        Ok(Self::new(
+            parse_spec(&cfg.arrival.interarrival)?,
+            parse_spec(&cfg.service.execution)?,
+            cfg.seed,
+        ))
+    }
+
+    /// Build from explicit distributions and a seed.
+    pub fn new(
+        interarrival: Box<dyn Distribution>,
+        execution: Box<dyn Distribution>,
+        seed: u64,
+    ) -> Self {
+        // Recognize the exponential case for the devirtualized fast path
+        // (identical sampling formula, so results are bit-for-bit equal).
+        // TT_NO_FAST_EXP=1 disables it for §Perf A/B measurement.
+        let exec_exp_rate = if std::env::var_os("TT_NO_FAST_EXP").is_some() {
+            None
+        } else {
+            let label = execution.label();
+            label
+                .strip_prefix("Exp(")
+                .and_then(|s| s.strip_suffix(')'))
+                .and_then(|s| s.parse::<f64>().ok())
+        };
+        Self {
+            interarrival,
+            execution,
+            exec_exp_rate,
+            rng: Pcg64::seed_from_u64(seed),
+            clock: 0.0,
+        }
+    }
+
+    /// Advance to and return the next job arrival time.
+    #[inline]
+    pub fn next_arrival(&mut self) -> f64 {
+        let mut f = || self.rng.next_f64_open();
+        self.clock += self.interarrival.sample(&mut f);
+        self.clock
+    }
+
+    /// Draw one task execution time `E_i(n)`.
+    #[inline]
+    pub fn next_execution(&mut self) -> f64 {
+        if let Some(rate) = self.exec_exp_rate {
+            return -self.rng.next_f64_open().ln() / rate;
+        }
+        let mut f = || self.rng.next_f64_open();
+        self.execution.sample(&mut f)
+    }
+
+    /// Mean task execution time of the configured distribution.
+    pub fn mean_execution(&self) -> f64 {
+        self.execution.mean()
+    }
+
+    /// Mean inter-arrival time of the configured distribution.
+    pub fn mean_interarrival(&self) -> f64 {
+        self.interarrival.mean()
+    }
+
+    /// Mutable access to the underlying RNG (overhead sampling shares it).
+    #[inline]
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Exponential;
+
+    #[test]
+    fn arrivals_increase() {
+        let mut w = Workload::new(
+            Box::new(Exponential::new(0.5)),
+            Box::new(Exponential::new(1.0)),
+            7,
+        );
+        let mut prev = 0.0;
+        for _ in 0..1000 {
+            let a = w.next_arrival();
+            assert!(a > prev);
+            prev = a;
+        }
+        // Mean inter-arrival ≈ 2.
+        assert!((prev / 1000.0 - 2.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            Workload::new(
+                Box::new(Exponential::new(1.0)),
+                Box::new(Exponential::new(2.0)),
+                99,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..100 {
+            assert_eq!(a.next_arrival(), b.next_arrival());
+            assert_eq!(a.next_execution(), b.next_execution());
+        }
+    }
+
+    #[test]
+    fn from_config_honours_specs() {
+        let cfg = SimulationConfig {
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.25".into() },
+            service: crate::config::ServiceConfig { execution: "det:2.0".into() },
+            ..Default::default()
+        };
+        let mut w = Workload::from_config(&cfg).unwrap();
+        assert_eq!(w.mean_interarrival(), 4.0);
+        assert_eq!(w.next_execution(), 2.0);
+    }
+}

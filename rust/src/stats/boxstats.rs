@@ -1,0 +1,98 @@
+//! Box-plot statistics — for Fig. 9's overhead-fraction and
+//! total-overhead-per-job box plots.
+
+use super::quantile_of_sorted;
+
+/// Five-number summary + mean + whiskers (Tukey 1.5×IQR convention).
+#[derive(Clone, Copy, Debug)]
+pub struct BoxStats {
+    /// Number of samples.
+    pub n: usize,
+    /// Sample mean.
+    pub mean: f64,
+    /// Minimum observation.
+    pub min: f64,
+    /// Lower whisker (smallest sample ≥ Q1 − 1.5·IQR).
+    pub whisker_lo: f64,
+    /// First quartile.
+    pub q1: f64,
+    /// Median.
+    pub median: f64,
+    /// Third quartile.
+    pub q3: f64,
+    /// Upper whisker (largest sample ≤ Q3 + 1.5·IQR).
+    pub whisker_hi: f64,
+    /// Maximum observation.
+    pub max: f64,
+    /// Count of outliers beyond the whiskers.
+    pub outliers: usize,
+}
+
+impl BoxStats {
+    /// Compute from unsorted samples.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "box stats of empty set");
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let q1 = quantile_of_sorted(&v, 0.25);
+        let median = quantile_of_sorted(&v, 0.5);
+        let q3 = quantile_of_sorted(&v, 0.75);
+        let iqr = q3 - q1;
+        let lo_fence = q1 - 1.5 * iqr;
+        let hi_fence = q3 + 1.5 * iqr;
+        let whisker_lo = *v.iter().find(|&&x| x >= lo_fence).unwrap_or(&v[0]);
+        let whisker_hi = *v.iter().rev().find(|&&x| x <= hi_fence).unwrap_or(&v[v.len() - 1]);
+        let outliers = v.iter().filter(|&&x| x < lo_fence || x > hi_fence).count();
+        Self {
+            n: v.len(),
+            mean: v.iter().sum::<f64>() / v.len() as f64,
+            min: v[0],
+            whisker_lo,
+            q1,
+            median,
+            q3,
+            whisker_hi,
+            max: v[v.len() - 1],
+            outliers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quartiles_of_uniform_grid() {
+        let v: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let b = BoxStats::from_samples(&v);
+        assert_eq!(b.median, 50.0);
+        assert_eq!(b.q1, 25.0);
+        assert_eq!(b.q3, 75.0);
+        assert_eq!(b.outliers, 0);
+        assert_eq!(b.whisker_lo, 0.0);
+        assert_eq!(b.whisker_hi, 100.0);
+    }
+
+    #[test]
+    fn detects_outliers() {
+        let mut v: Vec<f64> = (0..100).map(|i| i as f64 * 0.01).collect();
+        v.push(50.0); // far outlier
+        let b = BoxStats::from_samples(&v);
+        assert!(b.outliers >= 1);
+        assert!(b.whisker_hi < 50.0);
+        assert_eq!(b.max, 50.0);
+    }
+
+    #[test]
+    fn ordering_invariant() {
+        let v = vec![5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0];
+        let b = BoxStats::from_samples(&v);
+        assert!(b.min <= b.whisker_lo);
+        assert!(b.whisker_lo <= b.q1);
+        assert!(b.q1 <= b.median);
+        assert!(b.median <= b.q3);
+        assert!(b.q3 <= b.whisker_hi);
+        assert!(b.whisker_hi <= b.max);
+    }
+}

@@ -1,0 +1,89 @@
+//! Empirical CDF.
+
+use super::quantile_of_sorted;
+
+/// Empirical cumulative distribution function over a sample set.
+#[derive(Clone, Debug)]
+pub struct Ecdf {
+    sorted: Vec<f64>,
+}
+
+impl Ecdf {
+    /// Build from samples (sorts internally; NaNs rejected).
+    pub fn new(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "ECDF of empty sample set");
+        assert!(samples.iter().all(|x| !x.is_nan()), "NaN sample");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self { sorted: samples }
+    }
+
+    /// `F(x)` — fraction of samples ≤ x.
+    pub fn eval(&self, x: f64) -> f64 {
+        // partition_point gives count of elements <= x via binary search.
+        let cnt = self.sorted.partition_point(|&v| v <= x);
+        cnt as f64 / self.sorted.len() as f64
+    }
+
+    /// Generalized inverse `F^{-1}(q)` with interpolation.
+    pub fn inverse(&self, q: f64) -> f64 {
+        quantile_of_sorted(&self.sorted, q)
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Sorted sample view.
+    pub fn sorted(&self) -> &[f64] {
+        &self.sorted
+    }
+
+    /// Two-sample Kolmogorov–Smirnov distance `sup |F(x) − G(x)|`.
+    pub fn ks_distance(&self, other: &Ecdf) -> f64 {
+        let mut max_dev = 0.0f64;
+        for &x in &self.sorted {
+            max_dev = max_dev.max((self.eval(x) - other.eval(x)).abs());
+        }
+        for &x in &other.sorted {
+            max_dev = max_dev.max((self.eval(x) - other.eval(x)).abs());
+        }
+        max_dev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_and_inverse() {
+        let e = Ecdf::new(vec![3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(e.eval(0.5), 0.0);
+        assert_eq!(e.eval(1.0), 0.25);
+        assert_eq!(e.eval(2.5), 0.5);
+        assert_eq!(e.eval(4.0), 1.0);
+        assert_eq!(e.eval(9.0), 1.0);
+        assert!((e.inverse(0.0) - 1.0).abs() < 1e-12);
+        assert!((e.inverse(1.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_identical_zero() {
+        let a = Ecdf::new(vec![1.0, 2.0, 3.0]);
+        let b = Ecdf::new(vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.ks_distance(&b), 0.0);
+    }
+
+    #[test]
+    fn ks_disjoint_one() {
+        let a = Ecdf::new(vec![1.0, 2.0]);
+        let b = Ecdf::new(vec![10.0, 20.0]);
+        assert!((a.ks_distance(&b) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Fixed-bin histogram — used for activity heat maps and quick-look
+//! distribution summaries in reports.
+
+/// Uniform-bin histogram over `[lo, hi)` with overflow/underflow tracking.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    /// Histogram over `[lo, hi)` with `bins` uniform bins.
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0, "bad histogram [{lo},{hi})x{bins}");
+        Self { lo, hi, bins: vec![0; bins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+
+    /// Bin counts.
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+    /// Observations below range.
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+    /// Observations at/above the upper edge.
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Midpoint of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (i as f64 + 0.5) * w
+    }
+
+    /// Normalized density estimate per bin (integrates to ≤ 1).
+    pub fn density(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        let n = self.count.max(1) as f64;
+        self.bins.iter().map(|&c| c as f64 / (n * w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_assignment() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-1.0);
+        h.push(0.0);
+        h.push(5.5);
+        h.push(9.999);
+        h.push(10.0);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert_eq!(h.bins()[0], 1);
+        assert_eq!(h.bins()[5], 1);
+        assert_eq!(h.bins()[9], 1);
+        assert_eq!(h.count(), 5);
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_normalizes() {
+        let mut h = Histogram::new(0.0, 1.0, 4);
+        for i in 0..1000 {
+            h.push((i % 100) as f64 / 100.0);
+        }
+        let total: f64 = h.density().iter().sum::<f64>() * 0.25;
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

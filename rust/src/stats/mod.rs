@@ -1,0 +1,19 @@
+//! Statistics: streaming summaries, quantiles, ECDFs, PP plots, box plots,
+//! and histograms — everything the evaluation pipelines need to turn raw
+//! sojourn/waiting/overhead samples into the paper's figures.
+
+mod boxstats;
+mod ci;
+mod ecdf;
+mod histogram;
+mod ppplot;
+mod quantile;
+mod summary;
+
+pub use boxstats::BoxStats;
+pub use ci::quantile_ci;
+pub use ecdf::Ecdf;
+pub use histogram::Histogram;
+pub use ppplot::{pp_distance, pp_points, PpPoint};
+pub use quantile::{quantile_of_sorted, P2Quantile, QuantileSketch};
+pub use summary::Summary;

@@ -1,0 +1,64 @@
+//! PP plots — the paper's tool (Fig. 10) for validating the overhead model:
+//! plot `F_sim(x)` against `F_spark(x)` over the pooled support; a perfect
+//! match lies on the diagonal, a support offset shows as a step.
+
+use super::Ecdf;
+
+/// One PP-plot point: the two CDFs evaluated at a common abscissa.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PpPoint {
+    /// CDF of the first (e.g. simulated) sample at x.
+    pub p_first: f64,
+    /// CDF of the second (e.g. measured) sample at x.
+    pub p_second: f64,
+}
+
+/// PP-plot points for two ECDFs evaluated on an evenly spaced probability
+/// grid of `n` points over the pooled sample range.
+pub fn pp_points(first: &Ecdf, second: &Ecdf, n: usize) -> Vec<PpPoint> {
+    assert!(n >= 2, "need at least 2 grid points");
+    let lo = first.sorted()[0].min(second.sorted()[0]);
+    let hi = first.sorted()[first.len() - 1].max(second.sorted()[second.len() - 1]);
+    (0..n)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (n - 1) as f64;
+            PpPoint { p_first: first.eval(x), p_second: second.eval(x) }
+        })
+        .collect()
+}
+
+/// Mean absolute deviation of the PP plot from the diagonal — the objective
+/// minimized by the overhead calibration (Sec. 2.6 "fit the experimental
+/// sojourn time distributions").
+pub fn pp_distance(first: &Ecdf, second: &Ecdf, n: usize) -> f64 {
+    let pts = pp_points(first, second, n);
+    pts.iter().map(|p| (p.p_first - p.p_second).abs()).sum::<f64>() / pts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_samples_on_diagonal() {
+        let a = Ecdf::new((1..=100).map(|i| i as f64).collect());
+        let b = Ecdf::new((1..=100).map(|i| i as f64).collect());
+        for p in pp_points(&a, &b, 50) {
+            assert!((p.p_first - p.p_second).abs() < 1e-12);
+        }
+        assert!(pp_distance(&a, &b, 50) < 1e-12);
+    }
+
+    /// A constant shift produces the step pattern the paper describes
+    /// ("support of one of the distributions is offset").
+    #[test]
+    fn shift_increases_distance() {
+        let a = Ecdf::new((1..=1000).map(|i| i as f64 * 0.01).collect());
+        let small = Ecdf::new((1..=1000).map(|i| i as f64 * 0.01 + 0.5).collect());
+        let large = Ecdf::new((1..=1000).map(|i| i as f64 * 0.01 + 5.0).collect());
+        let d_small = pp_distance(&a, &small, 200);
+        let d_large = pp_distance(&a, &large, 200);
+        assert!(d_small > 0.01);
+        assert!(d_large > d_small, "{d_large} vs {d_small}");
+    }
+}

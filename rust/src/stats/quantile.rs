@@ -1,0 +1,261 @@
+//! Quantile estimation.
+//!
+//! Two estimators: an exact store-and-sort sketch (used for figure
+//! pipelines, where we keep every sojourn time anyway) and the P² streaming
+//! estimator (Jain & Chlamtac 1985) for long stability scans where storing
+//! tens of millions of samples is wasteful.
+
+/// Quantile of an **ascending-sorted** slice with linear interpolation
+/// (type-7, the numpy default).
+pub fn quantile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    assert!((0.0..=1.0).contains(&q), "q out of range: {q}");
+    let h = (sorted.len() as f64 - 1.0) * q;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = h - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Exact quantile sketch: stores all samples, sorts lazily.
+#[derive(Clone, Debug, Default)]
+pub struct QuantileSketch {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl QuantileSketch {
+    /// Empty sketch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sketch pre-sized for `n` samples.
+    pub fn with_capacity(n: usize) -> Self {
+        Self { data: Vec::with_capacity(n), sorted: false }
+    }
+
+    /// Add one sample.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.data.push(x);
+        self.sorted = false;
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Merge another sketch's samples.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        self.data.extend_from_slice(&other.data);
+        self.sorted = false;
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample in sketch"));
+            self.sorted = true;
+        }
+    }
+
+    /// Quantile `q` ∈ [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        self.ensure_sorted();
+        quantile_of_sorted(&self.data, q)
+    }
+
+    /// Borrow the sorted samples (e.g. to build an ECDF without copying).
+    pub fn sorted_data(&mut self) -> &[f64] {
+        self.ensure_sorted();
+        &self.data
+    }
+}
+
+/// P² streaming quantile estimator (five markers, O(1) memory).
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    q: f64,
+    heights: [f64; 5],
+    positions: [f64; 5],
+    desired: [f64; 5],
+    increments: [f64; 5],
+    count: usize,
+    initial: Vec<f64>,
+}
+
+impl P2Quantile {
+    /// Estimator for quantile `q` ∈ (0, 1).
+    pub fn new(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "q must be in (0,1)");
+        Self {
+            q,
+            heights: [0.0; 5],
+            positions: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            increments: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            count: 0,
+            initial: Vec::with_capacity(5),
+        }
+    }
+
+    /// Observe one sample.
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if self.initial.len() < 5 {
+            self.initial.push(x);
+            if self.initial.len() == 5 {
+                self.initial
+                    .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+                self.heights.copy_from_slice(&self.initial);
+            }
+            return;
+        }
+        // Find cell k.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if self.heights[i] <= x && x < self.heights[i + 1] {
+                    k = i;
+                    break;
+                }
+            }
+            k
+        };
+        for p in self.positions.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.increments[i];
+        }
+        // Adjust interior markers with parabolic (fallback linear) moves.
+        for i in 1..4 {
+            let d = self.desired[i] - self.positions[i];
+            let np = self.positions[i + 1] - self.positions[i];
+            let pp = self.positions[i - 1] - self.positions[i];
+            if (d >= 1.0 && np > 1.0) || (d <= -1.0 && pp < -1.0) {
+                let s = d.signum();
+                let parab = self.heights[i]
+                    + s / (np - pp)
+                        * ((self.positions[i] - self.positions[i - 1] + s)
+                            * (self.heights[i + 1] - self.heights[i])
+                            / np
+                            + (self.positions[i + 1] - self.positions[i] - s)
+                                * (self.heights[i] - self.heights[i - 1])
+                                / -pp);
+                self.heights[i] = if self.heights[i - 1] < parab && parab < self.heights[i + 1] {
+                    parab
+                } else {
+                    // Linear fallback.
+                    let j = (i as f64 + s) as usize;
+                    self.heights[i]
+                        + s * (self.heights[j] - self.heights[i])
+                            / (self.positions[j] - self.positions[i])
+                };
+                self.positions[i] += s;
+            }
+        }
+    }
+
+    /// Current estimate (exact while ≤ 5 samples seen).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.initial.len() < 5 {
+            let mut v = self.initial.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            return quantile_of_sorted(&v, self.q);
+        }
+        self.heights[2]
+    }
+
+    /// Number of samples observed.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn sorted_quantiles_interpolate() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_of_sorted(&v, 0.0), 1.0);
+        assert_eq!(quantile_of_sorted(&v, 1.0), 4.0);
+        assert!((quantile_of_sorted(&v, 0.5) - 2.5).abs() < 1e-12);
+        assert!((quantile_of_sorted(&v, 1.0 / 3.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_matches_direct() {
+        let mut s = QuantileSketch::new();
+        for i in (0..101).rev() {
+            s.push(i as f64);
+        }
+        assert_eq!(s.quantile(0.5), 50.0);
+        assert_eq!(s.quantile(0.99), 99.0);
+        assert_eq!(s.len(), 101);
+    }
+
+    #[test]
+    fn sketch_merge() {
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for i in 0..50 {
+            a.push(i as f64);
+        }
+        for i in 50..100 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        assert!((a.quantile(0.5) - 49.5).abs() < 1e-12);
+    }
+
+    /// P² tracks the exponential 0.99 quantile within a few percent.
+    #[test]
+    fn p2_tracks_exponential_tail() {
+        let mut p2 = P2Quantile::new(0.99);
+        let mut rng = Pcg64::seed_from_u64(31);
+        let n = 500_000;
+        for _ in 0..n {
+            p2.push(-rng.next_f64_open().ln());
+        }
+        let exact = -(0.01f64).ln(); // ≈ 4.605
+        let est = p2.value();
+        assert!(
+            (est - exact).abs() / exact < 0.05,
+            "P² estimate {est} vs exact {exact}"
+        );
+        assert_eq!(p2.count(), n);
+    }
+
+    #[test]
+    fn p2_small_samples_exact() {
+        let mut p2 = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            p2.push(x);
+        }
+        assert!((p2.value() - 2.0).abs() < 1e-12);
+    }
+}

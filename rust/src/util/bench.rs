@@ -1,0 +1,148 @@
+//! Micro-benchmark harness — criterion substitute for the offline
+//! toolchain. Provides warmup, calibrated iteration counts, and robust
+//! summary statistics; used by every target under `rust/benches/`
+//! (`[[bench]] harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: wall-time statistics over measured iterations.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of measured iterations.
+    pub iters: u64,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Median time per iteration (per-batch estimate).
+    pub median: Duration,
+    /// 99th-percentile per-iteration time (per-batch estimate).
+    pub p99: Duration,
+    /// Minimum observed per-iteration time.
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Iterations per second based on the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+/// Benchmark runner with configurable time budgets.
+pub struct Bencher {
+    /// Warmup budget before measurement.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub measure: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(200), Duration::from_millis(800))
+    }
+}
+
+impl Bencher {
+    /// Runner with explicit warmup/measure budgets.
+    pub fn new(warmup: Duration, measure: Duration) -> Self {
+        // Allow quick CI runs: TT_BENCH_FAST=1 shrinks the budgets 10x.
+        let fast = std::env::var("TT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        let (warmup, measure) = if fast {
+            (warmup / 10, measure / 10)
+        } else {
+            (warmup, measure)
+        };
+        Self { warmup, measure, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, which performs **one** unit of work per call and
+    /// returns a value that is black-boxed to defeat dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup and per-call cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_call = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        // Batch so each sample is >= ~100 µs to dodge timer noise.
+        let batch = ((100e-6 / per_call.max(1e-12)).ceil() as u64).clamp(1, 1 << 22);
+
+        let mut samples: Vec<f64> = Vec::new(); // per-iteration secs per batch
+        let mut total_iters: u64 = 0;
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.measure || samples.len() < 5 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64() / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+            if samples.len() > 100_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pick = |q: f64| -> f64 {
+            let idx = ((samples.len() as f64 - 1.0) * q).round() as usize;
+            samples[idx]
+        };
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: Duration::from_secs_f64(mean),
+            median: Duration::from_secs_f64(pick(0.5)),
+            p99: Duration::from_secs_f64(pick(0.99)),
+            min: Duration::from_secs_f64(samples[0]),
+        };
+        println!(
+            "bench {:<44} mean {:>12?} median {:>12?} p99 {:>12?} ({} iters)",
+            result.name, result.mean, result.median, result.p99, result.iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a closing summary table.
+    pub fn finish(&self) {
+        println!("\n== bench summary ==");
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12?}/iter  {:>14.1} iter/s",
+                r.name,
+                r.mean,
+                r.throughput()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("TT_BENCH_FAST", "1");
+        let mut b = Bencher::new(Duration::from_millis(20), Duration::from_millis(50));
+        let r = b.bench("noop-ish", || 1 + 1);
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() < 1_000_000);
+        assert!(r.min <= r.median && r.median <= r.p99);
+    }
+}

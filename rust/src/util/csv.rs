@@ -1,0 +1,120 @@
+//! Minimal CSV writer for figure data and experiment reports.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    /// New table with the given column names.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row of already-formatted cells; must match the header arity.
+    pub fn push_raw(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "csv row arity");
+        self.rows.push(row);
+    }
+
+    /// Append a row of f64 cells (formatted with up to 9 significant
+    /// digits, NaN rendered as empty).
+    pub fn push(&mut self, row: &[f64]) {
+        self.push_raw(
+            row.iter()
+                .map(|v| {
+                    if v.is_nan() {
+                        String::new()
+                    } else {
+                        format!("{v:.9}")
+                    }
+                })
+                .collect(),
+        );
+    }
+
+    /// Render to CSV text (RFC-4180-style quoting for cells containing
+    /// commas, quotes, or newlines).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let write_row = |out: &mut String, cells: &[String]| {
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if cell.contains([',', '"', '\n']) {
+                    let escaped = cell.replace('"', "\"\"");
+                    let _ = write!(out, "\"{escaped}\"");
+                } else {
+                    out.push_str(cell);
+                }
+            }
+            out.push('\n');
+        };
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_quoting() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.push(&[1.0, 2.5]);
+        c.push_raw(vec!["he,llo".into(), "wo\"rld".into()]);
+        let s = c.to_string();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert!(lines[1].starts_with("1.0"));
+        assert_eq!(lines[2], "\"he,llo\",\"wo\"\"rld\"");
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn nan_rendered_empty() {
+        let mut c = Csv::new(vec!["x"]);
+        c.push(&[f64::NAN]);
+        assert_eq!(c.to_string().lines().nth(1).unwrap(), "");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut c = Csv::new(vec!["a", "b"]);
+        c.push(&[1.0]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Special functions used by the analysis layer.
+
+/// Natural log of the Gamma function (Lanczos approximation, g = 7,
+/// n = 9 coefficients; |rel err| < 1e-13 on the positive axis).
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos coefficients (g = 7).
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1−x) = π / sin(πx).
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// `ln(n!)` via `ln_gamma`.
+pub fn ln_factorial(n: u32) -> f64 {
+    ln_gamma(n as f64 + 1.0)
+}
+
+/// n-th harmonic number `H_n = sum_{i=1}^{n} 1/i`.
+///
+/// Exact summation for n ≤ 10^6, asymptotic expansion beyond (the paper's
+/// stability discussion uses `H_l ≈ γ + ln l`).
+pub fn harmonic(n: u64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    if n <= 1_000_000 {
+        (1..=n).map(|i| 1.0 / i as f64).sum()
+    } else {
+        const EULER_GAMMA: f64 = 0.577_215_664_901_532_9;
+        let nf = n as f64;
+        nf.ln() + EULER_GAMMA + 1.0 / (2.0 * nf) - 1.0 / (12.0 * nf * nf)
+    }
+}
+
+/// Numerically stable `ln(1 + x)`— thin wrapper kept for clarity at call
+/// sites in the envelope computations.
+#[inline]
+pub fn ln1p(x: f64) -> f64 {
+    x.ln_1p()
+}
+
+/// Golden-section minimization of a unimodal function on `[a, b]`.
+///
+/// Used to optimize the free MGF parameter θ in the network-calculus
+/// bounds; falls back gracefully for non-unimodal inputs by returning the
+/// best point probed.
+pub fn golden_section_min<F: FnMut(f64) -> f64>(
+    mut f: F,
+    mut a: f64,
+    mut b: f64,
+    tol: f64,
+    max_iter: usize,
+) -> (f64, f64) {
+    const INV_PHI: f64 = 0.618_033_988_749_894_8;
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    let mut best = if fc < fd { (c, fc) } else { (d, fd) };
+    for _ in 0..max_iter {
+        if (b - a).abs() < tol {
+            break;
+        }
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            fd = f(d);
+        }
+        if fc < best.1 {
+            best = (c, fc);
+        }
+        if fd < best.1 {
+            best = (d, fd);
+        }
+    }
+    best
+}
+
+/// Simpson-rule integration of `f` over `[a, b]` with `n` (even) panels.
+pub fn simpson<F: FnMut(f64) -> f64>(mut f: F, a: f64, b: f64, n: usize) -> f64 {
+    assert!(n >= 2 && n % 2 == 0, "n must be even and >= 2");
+    let h = (b - a) / n as f64;
+    let mut sum = f(a) + f(b);
+    for i in 1..n {
+        let x = a + i as f64 * h;
+        sum += f(x) * if i % 2 == 1 { 4.0 } else { 2.0 };
+    }
+    sum * h / 3.0
+}
+
+/// Bisection root-finding for a monotone predicate: returns the largest `x`
+/// in `[lo, hi]` for which `pred(x)` holds, to absolute tolerance `tol`.
+/// Returns `None` if `pred(lo)` is already false.
+pub fn bisect_sup<F: FnMut(f64) -> bool>(
+    mut pred: F,
+    mut lo: f64,
+    mut hi: f64,
+    tol: f64,
+) -> Option<f64> {
+    if !pred(lo) {
+        return None;
+    }
+    if pred(hi) {
+        return Some(hi);
+    }
+    while hi - lo > tol {
+        let mid = 0.5 * (lo + hi);
+        if pred(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..15u32 {
+            let exact: f64 = (1..=n as u64).map(|i| (i as f64).ln()).sum();
+            assert!(
+                (ln_factorial(n) - exact).abs() < 1e-10,
+                "n={n}: {} vs {exact}",
+                ln_factorial(n)
+            );
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Γ(1/2) = sqrt(π).
+        let expect = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn harmonic_values() {
+        assert_eq!(harmonic(0), 0.0);
+        assert!((harmonic(1) - 1.0).abs() < 1e-15);
+        assert!((harmonic(4) - (1.0 + 0.5 + 1.0 / 3.0 + 0.25)).abs() < 1e-14);
+        // Asymptotic branch continuous with exact branch.
+        let exact = harmonic(1_000_000);
+        let approx = {
+            let nf = 1_000_000f64;
+            nf.ln() + 0.577_215_664_901_532_9 + 1.0 / (2.0 * nf) - 1.0 / (12.0 * nf * nf)
+        };
+        assert!((exact - approx).abs() < 1e-9);
+    }
+
+    #[test]
+    fn golden_section_finds_parabola_min() {
+        let (x, fx) = golden_section_min(|x| (x - 1.7) * (x - 1.7) + 3.0, 0.0, 5.0, 1e-10, 200);
+        assert!((x - 1.7).abs() < 1e-6);
+        assert!((fx - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn simpson_integrates_polynomials_exactly() {
+        // Simpson is exact for cubics.
+        let i = simpson(|x| x * x * x - 2.0 * x + 1.0, 0.0, 2.0, 2);
+        let exact = 4.0 - 4.0 + 2.0;
+        assert!((i - exact).abs() < 1e-12);
+    }
+
+    #[test]
+    fn simpson_exp() {
+        let i = simpson(|x| (-x as f64).exp(), 0.0, 10.0, 1000);
+        assert!((i - (1.0 - (-10.0f64).exp())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_sup_monotone() {
+        let s = bisect_sup(|x| x * x <= 2.0, 0.0, 2.0, 1e-9).unwrap();
+        assert!((s - 2f64.sqrt()).abs() < 1e-7);
+        assert!(bisect_sup(|x| x < -1.0, 0.0, 1.0, 1e-9).is_none());
+        assert_eq!(bisect_sup(|_| true, 0.0, 3.0, 1e-9), Some(3.0));
+    }
+}

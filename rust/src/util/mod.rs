@@ -1,0 +1,11 @@
+//! Supporting utilities: special math functions, CSV output, a scoped
+//! thread pool, a micro-benchmark harness (criterion substitute — the
+//! offline registry has no `criterion`), and a miniature property-testing
+//! harness (`proptest` substitute).
+
+pub mod bench;
+pub mod csv;
+pub mod logging;
+pub mod math;
+pub mod quickcheck;
+pub mod threadpool;

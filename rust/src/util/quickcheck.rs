@@ -1,0 +1,114 @@
+//! Miniature property-testing harness (offline substitute for `proptest`).
+//!
+//! Generates seeded-random inputs, runs a property over many cases, and on
+//! failure reports the failing case number and seed so the case can be
+//! replayed deterministically. Used for the coordinator/simulator
+//! invariants listed in DESIGN.md §6.
+
+use crate::rng::{Pcg64, Rng};
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Master seed; each case derives `seed + case_index` streams.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0xC0FFEE }
+    }
+}
+
+/// Source of randomness handed to generators.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+    /// Uniform u64 in `[lo, hi)`.
+    pub fn u64_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.rng.next_below(hi - lo)
+    }
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_range(lo as u64, hi as u64) as usize
+    }
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+    /// A fresh child RNG (for handing into simulations).
+    pub fn rng(&mut self) -> Pcg64 {
+        Pcg64::seed_from_u64(self.rng.next_u64())
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the case index
+/// and seed on the first failure (returning `Err(reason)` fails the case).
+pub fn check<G, T, P>(cfg: Config, mut generate: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    T: std::fmt::Debug,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Pcg64::seed_from_u64(case_seed) };
+        let input = generate(&mut g);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {case_seed}): {reason}\ninput: {input:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_true_property() {
+        check(
+            Config { cases: 64, seed: 1 },
+            |g| (g.f64_range(0.0, 10.0), g.f64_range(0.0, 10.0)),
+            |&(a, b)| {
+                if a + b >= a.max(b) - 1e-12 {
+                    Ok(())
+                } else {
+                    Err("sum smaller than max".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        check(
+            Config { cases: 64, seed: 2 },
+            |g| g.u64_range(0, 100),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut g = Gen { rng: Pcg64::seed_from_u64(3) };
+        for _ in 0..1000 {
+            let x = g.f64_range(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&x));
+            let u = g.usize_range(3, 9);
+            assert!((3..9).contains(&u));
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Cross-validation: the AOT JAX/Pallas artifacts (via PJRT) must agree
+//! with the pure-Rust `analysis` reference. This is the load-bearing test
+//! of the three-layer architecture: it exercises
+//! `make artifacts` → `HloModuleProto::from_text_file` → compile → execute
+//! and checks numeric parity.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests are skipped with a
+//! note if the artifacts are missing so `cargo test` stays usable before
+//! the Python step.
+
+use tiny_tasks::analysis::{self, BoundModel, BoundParams};
+use tiny_tasks::config::OverheadConfig;
+use tiny_tasks::runtime::{BoundQuery, BoundsEngine, EngineKind, ErlangQuery};
+
+fn artifact_engine() -> Option<BoundsEngine> {
+    // Keep CWD-independent: tests run from the workspace root.
+    match BoundsEngine::artifact() {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP artifact cross-validation: {err}");
+            None
+        }
+    }
+}
+
+/// Grid-vs-golden-section optimizers differ slightly; τ is flat near the
+/// optimum so 1% relative tolerance is appropriate (DESIGN.md §3).
+const REL_TOL: f64 = 0.01;
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.abs().max(b.abs()).max(1e-12)
+}
+
+#[test]
+fn bounds_artifact_matches_native() {
+    let Some(eng) = artifact_engine() else { return };
+    assert_eq!(eng.kind(), EngineKind::Artifact);
+
+    // A spread of figure-relevant configurations: Fig. 8 (l=50, λ=0.5,
+    // μ=k/l), Fig. 13 (ε=1e-6), M/M/1, small clusters, with and without
+    // overhead.
+    let mut queries = Vec::new();
+    for &(k, l, lambda, eps) in &[
+        (400usize, 50usize, 0.5, 0.01),
+        (1000, 50, 0.5, 0.01),
+        (600, 50, 0.5, 1e-6),
+        (100, 10, 0.3, 0.001),
+        (1, 1, 0.5, 0.01),
+        (64, 16, 0.4, 0.01),
+    ] {
+        let mu = k as f64 / l as f64;
+        queries.push(BoundQuery { k, l, lambda, mu, epsilon: eps, overhead: None });
+        queries.push(BoundQuery {
+            k,
+            l,
+            lambda,
+            mu,
+            epsilon: eps,
+            overhead: Some(OverheadConfig::paper()),
+        });
+    }
+
+    let rows = eng.bounds(&queries).unwrap();
+    for (q, row) in queries.iter().zip(&rows) {
+        let p = BoundParams {
+            l: q.l,
+            k: q.k,
+            lambda: q.lambda,
+            mu: q.mu,
+            epsilon: q.epsilon,
+            overhead: q.overhead,
+        };
+        let clean = BoundParams { overhead: None, ..p };
+        let native_sm = analysis::sojourn_bound(BoundModel::SplitMergeTiny, &p);
+        let native_fj = analysis::sojourn_bound(BoundModel::ForkJoinTiny, &p);
+        let native_id = analysis::sojourn_bound(BoundModel::Ideal, &clean);
+        check_pair("sm", q, row.split_merge, native_sm);
+        check_pair("fj", q, row.fork_join, native_fj);
+        check_pair("ideal", q, row.ideal, native_id);
+    }
+}
+
+fn check_pair(tag: &str, q: &BoundQuery, artifact: Option<f64>, native: Option<f64>) {
+    match (artifact, native) {
+        (Some(a), Some(n)) => {
+            assert!(
+                close(a, n, REL_TOL),
+                "{tag} {q:?}: artifact {a} vs native {n}"
+            );
+        }
+        (None, None) => {}
+        (a, n) => panic!("{tag} {q:?}: feasibility disagrees: artifact {a:?} native {n:?}"),
+    }
+}
+
+#[test]
+fn erlang_artifact_matches_native() {
+    let Some(eng) = artifact_engine() else { return };
+    let queries: Vec<ErlangQuery> = [(5usize, 20u32), (10, 20), (20, 20), (1, 1), (10, 1)]
+        .iter()
+        .map(|&(l, kappa)| ErlangQuery {
+            l,
+            kappa,
+            lambda: 0.5,
+            mu: kappa as f64, // utilization λκ/μ = 0.5
+            epsilon: 1e-3,
+        })
+        .collect();
+    let rows = eng.erlang(&queries).unwrap();
+    for (q, row) in queries.iter().zip(&rows) {
+        let native_mean = analysis::erlang::mean_max_erlang(q.l, q.kappa, q.mu);
+        let native_rho = analysis::erlang::max_utilization_big_tasks(q.l, q.kappa, q.mu);
+        assert!(
+            close(row.mean_service, native_mean, 1e-3),
+            "{q:?}: E[Δ] {} vs {native_mean}",
+            row.mean_service
+        );
+        assert!(
+            close(row.max_utilization, native_rho, 1e-3),
+            "{q:?}: ρ* {} vs {native_rho}",
+            row.max_utilization
+        );
+        let native_tau = analysis::sojourn_bound(
+            BoundModel::SplitMergeBigErlang { kappa: q.kappa },
+            &BoundParams {
+                l: q.l,
+                k: q.l,
+                lambda: q.lambda,
+                mu: q.mu,
+                epsilon: q.epsilon,
+                overhead: None,
+            },
+        );
+        match (row.sojourn, native_tau) {
+            (Some(a), Some(n)) => assert!(
+                close(a, n, REL_TOL),
+                "{q:?}: τ {a} vs {n}"
+            ),
+            (None, None) => {}
+            (a, n) => panic!("{q:?}: feasibility disagrees: {a:?} vs {n:?}"),
+        }
+    }
+}
+
+#[test]
+fn stability_artifact_matches_eq20() {
+    let Some(eng) = artifact_engine() else { return };
+    let pairs: Vec<(usize, usize)> =
+        vec![(50, 50), (200, 50), (1000, 50), (3000, 50), (10, 10), (1, 1)];
+    let got = eng.stability(&pairs).unwrap();
+    for (&(k, l), &rho) in pairs.iter().zip(&got) {
+        let expect = analysis::stability::sm_tiny_tasks(l, k);
+        assert!(
+            close(rho, expect, 1e-9),
+            "(k={k}, l={l}): {rho} vs {expect}"
+        );
+    }
+}
+
+/// Exactness anchor: the artifact M/M/1 bound must dominate and stay
+/// within 30% of the exact M/M/1 0.99-quantile ln(100)/(μ−λ).
+#[test]
+fn artifact_mm1_anchor() {
+    let Some(eng) = artifact_engine() else { return };
+    let rows = eng
+        .bounds(&[BoundQuery {
+            k: 1,
+            l: 1,
+            lambda: 0.5,
+            mu: 1.0,
+            epsilon: 0.01,
+            overhead: None,
+        }])
+        .unwrap();
+    let exact = (100.0f64).ln() / 0.5;
+    let got = rows[0].fork_join.unwrap();
+    assert!(got >= exact, "bound below exact: {got} < {exact}");
+    assert!(got < exact * 1.3, "bound too loose: {got} vs {exact}");
+}

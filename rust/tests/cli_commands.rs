@@ -1,0 +1,114 @@
+//! CLI end-to-end: every command dispatches, parses its flags, and
+//! returns the documented exit codes.
+
+use tiny_tasks::cli::Args;
+use tiny_tasks::coordinator::dispatch;
+
+fn run(argv: &[&str]) -> i32 {
+    let args = Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
+    dispatch(&args).unwrap()
+}
+
+#[test]
+fn help_and_unknown() {
+    assert_eq!(run(&["help"]), 0);
+    assert_eq!(run(&[]), 0);
+    assert_eq!(run(&["frobnicate"]), 2);
+}
+
+#[test]
+fn simulate_quick() {
+    assert_eq!(
+        run(&[
+            "simulate", "--model", "fj", "--servers", "4", "--k", "8", "--lambda", "0.4",
+            "--jobs", "2000", "--warmup", "200",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn simulate_with_overhead_and_in_order() {
+    assert_eq!(
+        run(&[
+            "simulate", "--model", "sm", "--servers", "4", "--k", "32", "--lambda", "0.3",
+            "--jobs", "1000", "--warmup", "100", "--overhead", "--in-order",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn simulate_from_config_file() {
+    let dir = std::env::temp_dir().join(format!("tt-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "name = \"cli-test\"\n[simulation]\nmodel = \"fj\"\nservers = 4\n\
+         tasks_per_job = 8\ninterarrival = \"exp:0.4\"\nexecution = \"exp:2.0\"\n\
+         jobs = 500\nwarmup = 50\n",
+    )
+    .unwrap();
+    assert_eq!(run(&["simulate", "--config", path.to_str().unwrap()]), 0);
+}
+
+#[test]
+fn emulate_quick() {
+    assert_eq!(
+        run(&[
+            "emulate", "--executors", "3", "--k", "6", "--mode", "fj", "--jobs", "30",
+            "--warmup", "3", "--time-scale", "0.004",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn bounds_native_engine() {
+    assert_eq!(
+        run(&[
+            "bounds", "--engine", "rust", "--servers", "20", "--k", "100", "--lambda",
+            "0.4", "--epsilon", "0.001",
+        ]),
+        0
+    );
+    // Big-tasks variant.
+    assert_eq!(
+        run(&[
+            "bounds", "--engine", "rust", "--model", "sm-big", "--servers", "5", "--k",
+            "5", "--kappa", "10", "--lambda", "0.4", "--mu", "10",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn stability_scan() {
+    assert_eq!(
+        run(&["stability", "--servers", "10", "--k-list", "10,40,160"]),
+        0
+    );
+}
+
+#[test]
+fn advisor_native() {
+    assert_eq!(
+        run(&[
+            "advisor", "--servers", "10", "--lambda", "0.5", "--workload", "10",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn figure_rejects_unknown_id() {
+    let args = Args::parse(["figure", "figXX"].iter().map(|s| s.to_string())).unwrap();
+    assert!(dispatch(&args).is_err());
+}
+
+#[test]
+fn figure_requires_id() {
+    let args = Args::parse(["figure"].iter().map(|s| s.to_string())).unwrap();
+    assert!(dispatch(&args).is_err());
+}

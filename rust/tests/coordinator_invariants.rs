@@ -1,0 +1,205 @@
+//! Property tests (mini-quickcheck) on simulator/coordinator invariants —
+//! the DESIGN.md §6 list: work conservation, departure ordering,
+//! task-count conservation, trace consistency.
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::util::quickcheck::{check, Config};
+
+fn random_config(g: &mut tiny_tasks::util::quickcheck::Gen, model: ModelKind) -> SimulationConfig {
+    let l = g.usize_range(1, 20);
+    let kappa = g.usize_range(1, 8);
+    let k = if model == ModelKind::ForkJoinPerServer { l } else { l * kappa };
+    let lambda = g.f64_range(0.05, 0.8);
+    let mu = k as f64 / l as f64;
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: format!("exp:{lambda}") },
+        service: ServiceConfig { execution: format!("exp:{mu}") },
+        jobs: 300,
+        warmup: 0,
+        seed: g.u64_range(0, u64::MAX - 1),
+        overhead: if g.bool_with(0.5) {
+            Some(tiny_tasks::config::OverheadConfig::paper())
+        } else {
+            None
+        },
+    }
+}
+
+/// Split-merge: departures are FIFO, jobs never overlap in service, and
+/// each job's sojourn ≥ its workload / l.
+#[test]
+fn prop_split_merge_serialization() {
+    check(
+        Config { cases: 24, seed: 0xA11CE },
+        |g| random_config(g, ModelKind::SplitMerge),
+        |cfg| {
+            let res = sim::run(cfg, RunOptions { record_jobs: true, ..Default::default() })
+                .map_err(|e| e.to_string())?;
+            let mut prev_departure = 0.0f64;
+            for j in &res.jobs {
+                if j.departure < prev_departure - 1e-9 {
+                    return Err(format!("departure order violated at job {}", j.index));
+                }
+                if j.first_start < prev_departure - 1e-9 {
+                    return Err(format!("job {} started before predecessor departed", j.index));
+                }
+                let min_service = j.workload / cfg.servers as f64;
+                if j.service_time() < min_service - 1e-9 {
+                    return Err(format!(
+                        "job {} served faster than perfectly parallel: {} < {}",
+                        j.index,
+                        j.service_time(),
+                        min_service
+                    ));
+                }
+                prev_departure = j.departure;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every model: departure ≥ arrival + (max single contribution), task
+/// counts conserved, sojourn = departure − arrival ≥ 0.
+#[test]
+fn prop_basic_accounting_all_models() {
+    for model in [
+        ModelKind::SplitMerge,
+        ModelKind::ForkJoinSingleQueue,
+        ModelKind::ForkJoinPerServer,
+        ModelKind::Ideal,
+    ] {
+        check(
+            Config { cases: 12, seed: 0xB0B + model as u64 },
+            |g| random_config(g, model),
+            |cfg| {
+                let res = sim::run(cfg, RunOptions { record_jobs: true, ..Default::default() })
+                    .map_err(|e| e.to_string())?;
+                if res.jobs.len() != cfg.jobs {
+                    return Err(format!("job count {} != {}", res.jobs.len(), cfg.jobs));
+                }
+                for j in &res.jobs {
+                    if j.sojourn() <= 0.0 {
+                        return Err(format!("non-positive sojourn at job {}", j.index));
+                    }
+                    if j.workload <= 0.0 {
+                        return Err("non-positive workload".into());
+                    }
+                    if j.waiting() > j.sojourn() + 1e-9 {
+                        return Err("waiting exceeds sojourn".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Trace consistency (FJ + SM): per-server intervals never overlap, and
+/// per-job task counts match k (work conservation at the trace level).
+#[test]
+fn prop_trace_consistency() {
+    for model in [ModelKind::SplitMerge, ModelKind::ForkJoinSingleQueue] {
+        check(
+            Config { cases: 10, seed: 0x7234CE },
+            |g| {
+                let mut cfg = random_config(g, model);
+                cfg.jobs = 40; // traces are memory-heavy
+                cfg
+            },
+            |cfg| {
+                let res = sim::run(
+                    cfg,
+                    RunOptions { trace: true, record_jobs: true, ..Default::default() },
+                )
+                .map_err(|e| e.to_string())?;
+                // Group events per server, check non-overlap.
+                let mut per_server: Vec<Vec<(f64, f64)>> = vec![Vec::new(); cfg.servers];
+                let mut per_job: Vec<usize> = vec![0; cfg.jobs];
+                for ev in res.trace.events() {
+                    per_server[ev.server as usize].push((ev.start, ev.end));
+                    per_job[ev.job as usize] += 1;
+                    if ev.end < ev.start {
+                        return Err("event ends before it starts".into());
+                    }
+                }
+                for (s, intervals) in per_server.iter_mut().enumerate() {
+                    intervals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    for w in intervals.windows(2) {
+                        if w[1].0 < w[0].1 - 1e-9 {
+                            return Err(format!("server {s} runs two tasks at once"));
+                        }
+                    }
+                }
+                for (job, &count) in per_job.iter().enumerate() {
+                    if count != cfg.tasks_per_job {
+                        return Err(format!(
+                            "job {job} ran {count} tasks, expected {}",
+                            cfg.tasks_per_job
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Work conservation for the single-queue fork-join model: with a
+/// saturating backlog, total busy time across servers equals the total
+/// workload (no idling while work is queued).
+#[test]
+fn prop_work_conservation_under_saturation() {
+    check(
+        Config { cases: 12, seed: 0x5A7 },
+        |g| {
+            let l = g.usize_range(2, 12);
+            let k = l * g.usize_range(1, 6);
+            (l, k, g.u64_range(0, 1 << 40))
+        },
+        |&(l, k, seed)| {
+            let cfg = SimulationConfig {
+                model: ModelKind::ForkJoinSingleQueue,
+                servers: l,
+                tasks_per_job: k,
+                // Arrivals far faster than service: permanent backlog.
+                arrival: ArrivalConfig { interarrival: "det:0.0001".into() },
+                service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+                jobs: 60,
+                warmup: 0,
+                seed,
+                overhead: None,
+            };
+            let res = sim::run(
+                &cfg,
+                RunOptions { trace: true, record_jobs: true, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let total_work: f64 = res.jobs.iter().map(|j| j.workload).sum();
+            let makespan = res
+                .jobs
+                .iter()
+                .map(|j| j.departure)
+                .fold(0.0f64, f64::max);
+            // Ignore the tail ramp-down: check utilization over the busy
+            // window via the trace.
+            let busy: f64 = res
+                .trace
+                .utilization(l, 0.1 * makespan, 0.9 * makespan)
+                .iter()
+                .sum::<f64>()
+                / l as f64;
+            if busy < 0.999 {
+                return Err(format!("idle under saturation: busy={busy}"));
+            }
+            if total_work <= 0.0 {
+                return Err("no work".into());
+            }
+            Ok(())
+        },
+    );
+}

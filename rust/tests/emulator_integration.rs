@@ -1,0 +1,129 @@
+//! sparklite ⟷ simulator consistency: the emulator (real threads, real
+//! serialization, scaled wall-clock) and the DES (virtual time) must tell
+//! the same statistical story — the premise of the Sec.-2.6 calibration.
+
+use tiny_tasks::config::{
+    ArrivalConfig, EmulatorConfig, ModelKind, OverheadConfig, ServiceConfig, SimulationConfig,
+};
+use tiny_tasks::emulator;
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::stats::{pp_distance, Ecdf};
+
+fn emu_cfg(mode: ModelKind, jobs: usize) -> EmulatorConfig {
+    EmulatorConfig {
+        executors: 4,
+        tasks_per_job: 16,
+        mode,
+        interarrival: "exp:0.5".into(),
+        execution: "exp:4.0".into(), // mean 0.25 s emulated per task
+        time_scale: 0.01,            // 100x speedup
+        jobs,
+        warmup: jobs / 10,
+        seed: 21,
+        inject_overhead: None,
+    }
+}
+
+fn sim_cfg_from(e: &EmulatorConfig, jobs: usize) -> SimulationConfig {
+    SimulationConfig {
+        model: e.mode,
+        servers: e.executors,
+        tasks_per_job: e.tasks_per_job,
+        arrival: ArrivalConfig { interarrival: e.interarrival.clone() },
+        service: ServiceConfig { execution: e.execution.clone() },
+        jobs,
+        warmup: jobs / 10,
+        seed: 99,
+        overhead: None,
+    }
+}
+
+/// Fork-join: emulated and simulated sojourn distributions PP-match
+/// (the emulator's intrinsic overhead is ≪ the 0.25 s tasks).
+#[test]
+fn fj_emulator_matches_simulator_distribution() {
+    let ecfg = emu_cfg(ModelKind::ForkJoinSingleQueue, 250);
+    let eres = emulator::run(&ecfg).unwrap();
+    let emu = Ecdf::new(eres.measured_jobs().map(|j| j.sojourn()).collect());
+    let sres = sim::run(
+        &sim_cfg_from(&ecfg, 20_000),
+        RunOptions { record_jobs: true, ..Default::default() },
+    )
+    .unwrap();
+    let sim = Ecdf::new(sres.jobs.iter().map(|j| j.sojourn()).collect());
+    let d = pp_distance(&sim, &emu, 200);
+    assert!(d < 0.12, "PP distance too large: {d}");
+}
+
+/// Split-merge mode matches too, including the blocking barrier.
+#[test]
+fn sm_emulator_matches_simulator_distribution() {
+    // κ = 4 at utilization 0.5: stable for l = 4 (ρ* ≈ 0.785).
+    let ecfg = emu_cfg(ModelKind::SplitMerge, 250);
+    let eres = emulator::run(&ecfg).unwrap();
+    let emu = Ecdf::new(eres.measured_jobs().map(|j| j.sojourn()).collect());
+    let sres = sim::run(
+        &sim_cfg_from(&ecfg, 20_000),
+        RunOptions { record_jobs: true, ..Default::default() },
+    )
+    .unwrap();
+    let sim = Ecdf::new(sres.jobs.iter().map(|j| j.sojourn()).collect());
+    let d = pp_distance(&sim, &emu, 200);
+    assert!(d < 0.15, "PP distance too large: {d}");
+}
+
+/// Injected overhead moves the emulator exactly the way the DES overhead
+/// model moves the simulator (the Fig.-10 logic, inverted).
+#[test]
+fn injected_overhead_matches_des_overhead_model() {
+    let oh = OverheadConfig {
+        c_task_ts: 0.05, // 50 ms per 250 ms task: 20% — clearly visible
+        mu_task_ts: f64::INFINITY,
+        c_job_pd: 0.1,
+        c_task_pd: 0.0,
+    };
+    let mut ecfg = emu_cfg(ModelKind::ForkJoinSingleQueue, 250);
+    ecfg.inject_overhead = Some(oh);
+    let eres = emulator::run(&ecfg).unwrap();
+    let emu = Ecdf::new(eres.measured_jobs().map(|j| j.sojourn()).collect());
+
+    let mut scfg = sim_cfg_from(&ecfg, 20_000);
+    scfg.overhead = Some(oh);
+    let sres = sim::run(&scfg, RunOptions { record_jobs: true, ..Default::default() }).unwrap();
+    let sim_oh = Ecdf::new(sres.jobs.iter().map(|j| j.sojourn()).collect());
+
+    let mut scfg_clean = sim_cfg_from(&ecfg, 20_000);
+    scfg_clean.overhead = None;
+    let sres_clean =
+        sim::run(&scfg_clean, RunOptions { record_jobs: true, ..Default::default() }).unwrap();
+    let sim_clean = Ecdf::new(sres_clean.jobs.iter().map(|j| j.sojourn()).collect());
+
+    let d_with = pp_distance(&sim_oh, &emu, 200);
+    let d_without = pp_distance(&sim_clean, &emu, 200);
+    assert!(
+        d_with < d_without,
+        "overhead model should fit better: with={d_with} without={d_without}"
+    );
+    assert!(d_with < 0.12, "residual mismatch too large: {d_with}");
+}
+
+/// Task-count and executor-id sanity across the full emulator stack.
+#[test]
+fn emulator_accounting() {
+    let ecfg = emu_cfg(ModelKind::ForkJoinSingleQueue, 60);
+    let res = emulator::run(&ecfg).unwrap();
+    let total = ecfg.jobs + ecfg.warmup;
+    assert_eq!(res.listener.jobs.len(), total);
+    assert_eq!(res.listener.tasks.len(), total * ecfg.tasks_per_job);
+    for t in &res.listener.tasks {
+        assert!((t.executor_id as usize) < ecfg.executors);
+        assert!(t.occupancy >= t.execution);
+        assert!(t.execution > 0.0);
+    }
+    // Every executor did work (FIFO queue serves all).
+    let mut seen = vec![false; ecfg.executors];
+    for t in &res.listener.tasks {
+        seen[t.executor_id as usize] = true;
+    }
+    assert!(seen.iter().all(|&s| s));
+}

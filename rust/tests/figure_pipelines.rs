@@ -1,0 +1,119 @@
+//! Figure-pipeline integration: run the cheap pipelines end to end into
+//! a temp directory and check the CSVs exist and carry the paper's
+//! qualitative shapes.
+
+use std::fs;
+use std::path::PathBuf;
+use tiny_tasks::coordinator::figures::{self, FigureCtx, Scale};
+use tiny_tasks::runtime::BoundsEngine;
+use tiny_tasks::util::threadpool::ThreadPool;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt-figtest-{tag}-{}", std::process::id()));
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn read_csv(path: &PathBuf) -> Vec<Vec<f64>> {
+    let text = fs::read_to_string(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    text.lines()
+        .skip(1)
+        .map(|line| {
+            line.split(',')
+                .map(|c| c.parse::<f64>().unwrap_or(f64::NAN))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn fig13_shape_fj_decreasing_above_ideal() {
+    let dir = tmp_dir("fig13");
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::new(2);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    figures::fig13(&ctx).unwrap();
+    let rows = read_csv(&dir.join("fig13_bounds.csv"));
+    assert!(rows.len() >= 5);
+    // fork_join column decreases with k and stays above ideal.
+    for w in rows.windows(2) {
+        assert!(w[1][1] < w[0][1], "fj not decreasing: {w:?}");
+    }
+    for r in &rows {
+        assert!(r[1] > r[3], "fj below ideal: {r:?}");
+        // split-merge, when feasible, sits above fork-join.
+        if !r[2].is_nan() {
+            assert!(r[2] > r[1], "sm below fj: {r:?}");
+        }
+    }
+    // Small k: split-merge infeasible (NaN); large k: feasible.
+    assert!(rows[0][2].is_nan());
+    assert!(!rows.last().unwrap()[2].is_nan());
+}
+
+#[test]
+fn fig12a_tiny_dominates_big_and_decays() {
+    let dir = tmp_dir("fig12a");
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::new(2);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    figures::fig12a(&ctx).unwrap();
+    let rows = read_csv(&dir.join("fig12a_stability.csv"));
+    for r in &rows {
+        let (l, tiny, big) = (r[0], r[1], r[2]);
+        if l > 1.5 {
+            assert!(tiny > big, "l={l}: tiny {tiny} !> big {big}");
+        }
+        assert!((0.0..=1.0 + 1e-9).contains(&tiny));
+        assert!((0.0..=1.0 + 1e-9).contains(&big));
+    }
+    // Big-tasks region decays with l; tiny stays high (κ=20).
+    let first = &rows[0];
+    let last = rows.last().unwrap();
+    assert!(last[2] < first[2]);
+    assert!(last[1] > 0.75, "tiny region should stay high: {}", last[1]);
+}
+
+#[test]
+fn fig11_stability_csv_shapes() {
+    let dir = tmp_dir("fig11");
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::new(2);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    figures::fig11(&ctx).unwrap();
+    let rows = read_csv(&dir.join("fig11_stability.csv"));
+    // Columns: k, sm_no, sm_oh, fj_no, fj_oh, eq20.
+    for r in &rows {
+        assert!(r[2] <= r[1] + 0.02, "overhead must not improve SM: {r:?}");
+        assert!((r[3] - 1.0).abs() < 1e-9, "clean FJ stability is 1");
+        assert!(r[4] < 1.0, "FJ overhead strictly below 1");
+        // Monte-Carlo SM (clean) tracks Eq. 20 within a few percent.
+        assert!((r[1] - r[5]).abs() / r[5] < 0.05, "MC vs Eq20: {r:?}");
+    }
+    // SM-with-overhead rises then falls (peak interior) at quick scale.
+    let oh: Vec<f64> = rows.iter().map(|r| r[2]).collect();
+    let peak = oh.iter().cloned().fold(0.0f64, f64::max);
+    assert!(peak > oh[0] && peak > *oh.last().unwrap(), "no interior peak: {oh:?}");
+}
+
+#[test]
+fn fig1_2_traces_written() {
+    let dir = tmp_dir("fig12gantt");
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::new(2);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    figures::fig1_2(&ctx).unwrap();
+    let fig1 = read_csv(&dir.join("fig1_gantt.csv"));
+    let fig2 = read_csv(&dir.join("fig2_gantt.csv"));
+    assert_eq!(fig1.len(), 4 * 400, "fig1: one row per task");
+    assert_eq!(fig2.len(), 4 * 1500, "fig2: one row per task");
+}
+
+#[test]
+fn unknown_figure_id_is_an_error() {
+    let dir = tmp_dir("bad");
+    let engine = BoundsEngine::native();
+    let pool = ThreadPool::new(1);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    assert!(figures::run("fig99", &ctx).is_err());
+}
