@@ -19,6 +19,8 @@ fn main() -> anyhow::Result<()> {
             warmup: 0,
             seed: 3,
             overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+            workers: None,
+            redundancy: None,
         };
         let res = sim::run(
             &cfg,

@@ -1,0 +1,77 @@
+//! Heterogeneous workers & redundant tasks: where does the tiny-tasks
+//! sweet spot land when the cluster is skewed?
+//!
+//! Sweeps worker-speed skew σ × tasks-per-job k on a 10-worker
+//! single-queue fork-join cluster at constant aggregate capacity and
+//! paper overhead, then asks the simulated granularity advisor for the
+//! best k at each skew, with and without r = 2 first-finish-wins
+//! replication.
+//!
+//! Run: `cargo run --release --example heterogeneous`
+
+use tiny_tasks::config::{
+    ArrivalConfig, ModelKind, OverheadConfig, RedundancyConfig, ServiceConfig, SimulationConfig,
+    WorkersConfig,
+};
+use tiny_tasks::coordinator::advisor;
+use tiny_tasks::coordinator::figures::two_class_speeds;
+use tiny_tasks::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let epsilon = 0.05;
+    let mean_workload = l as f64; // E[L] = 10 s, so ρ = λ·E[L]/l = 0.4
+    let pool = ThreadPool::with_default_size();
+    let ks = advisor::k_grid(l, 32.0);
+
+    println!("l = {l}, lambda = {lambda}/s, E[workload] = {mean_workload} s, eps = {epsilon}");
+    println!("speeds: fast half 1+sigma, slow half 1-sigma (capacity fixed)\n");
+    println!(
+        "{:>6} {:>4} {:>10} {:>12} {:>14}",
+        "sigma", "r", "best k", "tau_eps(s)", "vs sigma=0"
+    );
+
+    let mut baseline: Option<f64> = None;
+    for &skew in &[0.0, 0.25, 0.5, 0.75] {
+        for replicas in [1usize, 2] {
+            let base = SimulationConfig {
+                model: ModelKind::ForkJoinSingleQueue,
+                servers: l,
+                tasks_per_job: l, // overridden per sweep point
+                arrival: ArrivalConfig { interarrival: format!("exp:{lambda}") },
+                service: ServiceConfig { execution: "exp:1.0".into() },
+                jobs: 6_000,
+                warmup: 600,
+                seed: 42,
+                overhead: Some(OverheadConfig::paper()),
+                workers: if skew > 0.0 {
+                    Some(WorkersConfig::Speeds(two_class_speeds(l, skew)))
+                } else {
+                    None
+                },
+                redundancy: if replicas > 1 {
+                    Some(RedundancyConfig { replicas })
+                } else {
+                    None
+                },
+            };
+            let rec = advisor::recommend_simulated(&pool, &base, mean_workload, epsilon, &ks)
+                .map_err(anyhow::Error::msg)?;
+            match rec.best {
+                Some((k, tau)) => {
+                    if skew == 0.0 && replicas == 1 {
+                        baseline = Some(tau);
+                    }
+                    let vs = baseline
+                        .map(|b| format!("{:+.1}%", (tau / b - 1.0) * 100.0))
+                        .unwrap_or_else(|| "-".into());
+                    println!("{skew:>6.2} {replicas:>4} {k:>10} {tau:>12.3} {vs:>14}");
+                }
+                None => println!("{skew:>6.2} {replicas:>4} {:>10} {:>12}", "-", "unstable"),
+            }
+        }
+    }
+    println!("\n(Columns: skew, replicas, advisor's k, simulated eps-quantile, vs homogeneous.)");
+    Ok(())
+}

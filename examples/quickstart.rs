@@ -56,6 +56,8 @@ fn main() -> anyhow::Result<()> {
                 warmup: 2_000,
                 seed: 7,
                 overhead: None,
+                workers: None,
+                redundancy: None,
             };
             let mut res = sim::run(&cfg, RunOptions::default()).map_err(anyhow::Error::msg)?;
             Ok(Some(res.sojourn_quantile(1.0 - eps)))

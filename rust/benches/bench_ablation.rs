@@ -26,6 +26,8 @@ fn base(l: usize, k: usize, exec: String, jobs: usize) -> SimulationConfig {
         warmup: jobs / 10,
         seed: 99,
         overhead: None,
+        workers: None,
+        redundancy: None,
     }
 }
 

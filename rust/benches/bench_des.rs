@@ -20,6 +20,8 @@ fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize) -> SimulationConfig {
         warmup: 0,
         seed: 1,
         overhead: None,
+        workers: None,
+        redundancy: None,
     }
 }
 

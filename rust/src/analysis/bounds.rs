@@ -264,6 +264,8 @@ mod tests {
                 warmup: 2_000,
                 seed: 77,
                 overhead: None,
+                workers: None,
+                redundancy: None,
             };
             let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
             let sim_q = res.sojourn_quantile(1.0 - eps);

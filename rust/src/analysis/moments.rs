@@ -80,6 +80,8 @@ mod tests {
             warmup: 2_000,
             seed: 5,
             overhead: None,
+            workers: None,
+            redundancy: None,
         };
         let res = crate::sim::run(&cfg, Default::default()).unwrap();
         let sim_mean = res.sojourn_summary.mean();

@@ -110,6 +110,8 @@ COMMANDS:
                   --model sm|fj|fjps|ideal  --servers L --k K
                   --lambda RATE --mu RATE  --jobs N --warmup N --seed S
                   --overhead [--c-task-ts S --mu-task-ts R --c-job-pd S --c-task-pd S]
+                  scenario: --speeds 1.0,0.5,.. | --speed-dist SPEC [--speed-seed S]
+                  --redundancy R   (r replicas per task, first-finish-wins)
     emulate     Run the sparklite cluster emulator
                   --executors L --k K --mode sm|fj --jobs N
                   --time-scale S --inject-overhead
@@ -120,12 +122,14 @@ COMMANDS:
     stability   Stability region scans (analytic + simulated)
                   --model sm|fj --servers L --k-list 50,100,...
     figure      Regenerate a paper figure's data as CSV
-                  fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|all
+                  fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|hetero|all
                   [--out DIR] [--scale quick|paper]
     calibrate   Fit the 4-parameter overhead model against sparklite
                   [--jobs N] [--k K] [--executors L]
     advisor     Recommend tasks-per-job for a cluster configuration
                   --servers L --lambda RATE --workload SECONDS [--overhead]
+                  with --speeds/--speed-dist/--redundancy the advice comes
+                  from simulation sweeps (skewed/redundant clusters)
     selfcheck   Run artifact-vs-rust cross validation
     help        Show this help
 

@@ -128,6 +128,84 @@ impl OverheadConfig {
     }
 }
 
+/// Heterogeneous-worker scenario: per-worker speed multipliers.
+///
+/// A worker with speed `s` serves a task of nominal size `e` in `e / s`
+/// seconds. Speeds of all 1.0 reduce bit-for-bit to the homogeneous
+/// model (enforced by `rust/tests/scenario_equivalence.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkersConfig {
+    /// Explicit per-worker speeds; length must equal `servers`.
+    Speeds(Vec<f64>),
+    /// Speeds drawn from a distribution spec (e.g. `"uniform:0.5:1.5"`),
+    /// seeded independently of the workload stream so the cluster shape
+    /// is fixed across sweep points and pool sizes.
+    Distribution {
+        /// Distribution spec for the speed draws.
+        spec: String,
+        /// Seed of the dedicated speed RNG stream.
+        seed: u64,
+    },
+}
+
+impl WorkersConfig {
+    /// Resolve to one speed per worker (validates positivity).
+    pub fn resolve(&self, servers: usize) -> Result<Vec<f64>, String> {
+        let speeds = match self {
+            Self::Speeds(s) => {
+                if s.len() != servers {
+                    return Err(format!(
+                        "workers.speeds has {} entries for {} servers",
+                        s.len(),
+                        servers
+                    ));
+                }
+                s.clone()
+            }
+            Self::Distribution { spec, seed } => {
+                let dist = crate::dist::parse_spec(spec)?;
+                let mut rng = crate::rng::Pcg64::seed_from_u64(*seed);
+                (0..servers)
+                    .map(|_| {
+                        let mut f = || crate::rng::Rng::next_f64_open(&mut rng);
+                        dist.sample(&mut f)
+                    })
+                    .collect()
+            }
+        };
+        for &s in &speeds {
+            if !(s > 0.0 && s.is_finite()) {
+                return Err(format!("worker speeds must be positive and finite, got {s}"));
+            }
+        }
+        Ok(speeds)
+    }
+
+    /// True when every resolved speed is exactly 1.0 (homogeneous).
+    pub fn is_homogeneous(&self, servers: usize) -> bool {
+        match self.resolve(servers) {
+            Ok(speeds) => speeds.iter().all(|&s| s == 1.0),
+            Err(_) => false,
+        }
+    }
+}
+
+/// Redundant-task scenario: run `replicas` copies of every task on
+/// distinct workers; the first replica to finish wins and the others are
+/// cancelled (first-finish-wins, as in the heterogeneous/redundant-jobs
+/// extensions of the barrier-system literature).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RedundancyConfig {
+    /// Copies per task, `>= 1`; `1` reduces to the base model.
+    pub replicas: usize,
+}
+
+impl Default for RedundancyConfig {
+    fn default() -> Self {
+        Self { replicas: 1 }
+    }
+}
+
 /// One simulation run configuration.
 #[derive(Clone, Debug)]
 pub struct SimulationConfig {
@@ -150,6 +228,10 @@ pub struct SimulationConfig {
     pub seed: u64,
     /// Overhead model; `None` = idealized (no overhead).
     pub overhead: Option<OverheadConfig>,
+    /// Heterogeneous worker speeds; `None` = homogeneous (all 1.0).
+    pub workers: Option<WorkersConfig>,
+    /// Task replication; `None` = no redundancy (r = 1).
+    pub redundancy: Option<RedundancyConfig>,
 }
 
 impl Default for SimulationConfig {
@@ -164,6 +246,8 @@ impl Default for SimulationConfig {
             warmup: 1_000,
             seed: 1,
             overhead: None,
+            workers: None,
+            redundancy: None,
         }
     }
 }
@@ -188,12 +272,46 @@ impl SimulationConfig {
         }
         crate::dist::parse_spec(&self.arrival.interarrival).map_err(|e| e.to_string())?;
         crate::dist::parse_spec(&self.service.execution).map_err(|e| e.to_string())?;
+        if let Some(w) = &self.workers {
+            w.resolve(self.servers)?;
+        }
+        if let Some(r) = &self.redundancy {
+            if r.replicas == 0 {
+                return Err("redundancy.replicas must be >= 1".into());
+            }
+            if r.replicas > self.servers {
+                return Err(format!(
+                    "redundancy.replicas ({}) cannot exceed servers ({})",
+                    r.replicas, self.servers
+                ));
+            }
+            if r.replicas > 1 && self.model == ModelKind::Ideal {
+                return Err(
+                    "redundancy has no effect under ideal equisized partitioning; \
+                     remove [redundancy] or pick sm/fj/fjps"
+                        .into(),
+                );
+            }
+        }
         Ok(())
     }
 
     /// Tinyfication factor κ = k / l.
     pub fn kappa(&self) -> f64 {
         self.tasks_per_job as f64 / self.servers as f64
+    }
+
+    /// Per-worker speeds resolved to a vector (all 1.0 when homogeneous).
+    pub fn resolved_speeds(&self) -> Result<Vec<f64>, String> {
+        match &self.workers {
+            Some(w) => w.resolve(self.servers),
+            None => Ok(vec![1.0; self.servers]),
+        }
+    }
+
+    /// Replicas per task (1 when no redundancy is configured).
+    pub fn replicas(&self) -> usize {
+        self.redundancy.map(|r| r.replicas).unwrap_or(1)
     }
 }
 
@@ -291,10 +409,25 @@ impl ExperimentConfig {
             .and_then(|v| v.as_str())
             .unwrap_or("experiment")
             .to_string();
-        let simulation = match doc.get("simulation") {
+        let mut simulation = match doc.get("simulation") {
             Some(sec) => Some(sim_from_section(sec)?),
             None => None,
         };
+        let workers = match doc.get("workers") {
+            Some(sec) => Some(workers_from_section(sec)?),
+            None => None,
+        };
+        let redundancy = match doc.get("redundancy") {
+            Some(sec) => Some(redundancy_from_section(sec)?),
+            None => None,
+        };
+        if workers.is_some() || redundancy.is_some() {
+            let sim = simulation
+                .as_mut()
+                .ok_or("[workers]/[redundancy] require a [simulation] section")?;
+            sim.workers = workers;
+            sim.redundancy = redundancy;
+        }
         let emulator = match doc.get("emulator") {
             Some(sec) => Some(emu_from_section(sec)?),
             None => None,
@@ -353,6 +486,45 @@ fn overhead_from(sec: &Section) -> Result<Option<OverheadConfig>, String> {
     }))
 }
 
+fn workers_from_section(sec: &Section) -> Result<WorkersConfig, String> {
+    let speeds = sec.get("speeds");
+    let spec = sec.get("speed_dist");
+    match (speeds, spec) {
+        (Some(v), None) => {
+            let speeds = v
+                .as_f64_array()
+                .ok_or("workers.speeds must be an array of numbers")?;
+            if speeds.is_empty() {
+                return Err("workers.speeds must not be empty".into());
+            }
+            Ok(WorkersConfig::Speeds(speeds))
+        }
+        (None, Some(v)) => {
+            let spec = v
+                .as_str()
+                .ok_or("workers.speed_dist must be a string spec")?
+                .to_string();
+            crate::dist::parse_spec(&spec)?;
+            Ok(WorkersConfig::Distribution {
+                spec,
+                seed: get_usize(sec, "speed_seed", 1)? as u64,
+            })
+        }
+        (Some(_), Some(_)) => {
+            Err("[workers]: give either speeds or speed_dist, not both".into())
+        }
+        (None, None) => Err("[workers] needs speeds = [..] or speed_dist = \"..\"".into()),
+    }
+}
+
+fn redundancy_from_section(sec: &Section) -> Result<RedundancyConfig, String> {
+    let replicas = get_usize(sec, "replicas", 1)?;
+    if replicas == 0 {
+        return Err("redundancy.replicas must be >= 1".into());
+    }
+    Ok(RedundancyConfig { replicas })
+}
+
 fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
     let d = SimulationConfig::default();
     Ok(SimulationConfig {
@@ -365,6 +537,8 @@ fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
         warmup: get_usize(sec, "warmup", d.warmup)?,
         seed: get_usize(sec, "seed", 1)? as u64,
         overhead: overhead_from(sec)?,
+        workers: None,
+        redundancy: None,
     })
 }
 
@@ -446,6 +620,88 @@ time_scale = 0.005
             assert_eq!(ModelKind::parse(s).unwrap(), m);
         }
         assert!(ModelKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_workers_and_redundancy_sections() {
+        let cfg = ExperimentConfig::from_str(
+            r#"
+[simulation]
+model = "fj"
+servers = 4
+tasks_per_job = 8
+[workers]
+speeds = [1.0, 1.0, 0.5, 2.0]
+[redundancy]
+replicas = 2
+"#,
+        )
+        .unwrap();
+        let sim = cfg.simulation.unwrap();
+        assert_eq!(
+            sim.workers,
+            Some(WorkersConfig::Speeds(vec![1.0, 1.0, 0.5, 2.0]))
+        );
+        assert_eq!(sim.replicas(), 2);
+        assert_eq!(sim.resolved_speeds().unwrap(), vec![1.0, 1.0, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn parse_workers_speed_distribution() {
+        let cfg = ExperimentConfig::from_str(
+            r#"
+[simulation]
+servers = 10
+tasks_per_job = 20
+[workers]
+speed_dist = "uniform:0.5:1.5"
+speed_seed = 7
+"#,
+        )
+        .unwrap();
+        let sim = cfg.simulation.unwrap();
+        let speeds = sim.resolved_speeds().unwrap();
+        assert_eq!(speeds.len(), 10);
+        assert!(speeds.iter().all(|&s| (0.5..1.5).contains(&s)));
+        // Resolution is deterministic in the speed seed.
+        assert_eq!(speeds, sim.resolved_speeds().unwrap());
+    }
+
+    #[test]
+    fn scenario_sections_are_validated() {
+        // Wrong speeds arity.
+        let err = ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n[workers]\nspeeds = [1.0, 2.0]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("4 servers"), "{err}");
+        // Non-positive speed.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[workers]\nspeeds = [1.0, 0.0]\n",
+        )
+        .is_err());
+        // r > l.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[redundancy]\nreplicas = 3\n",
+        )
+        .is_err());
+        // Scenario sections without a simulation.
+        assert!(ExperimentConfig::from_str("[redundancy]\nreplicas = 2\n").is_err());
+        // Redundancy is rejected for the ideal model (it would silently
+        // have no effect there).
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nmodel = \"ideal\"\nservers = 4\ntasks_per_job = 8\n\
+             [redundancy]\nreplicas = 2\n",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn homogeneity_detection() {
+        let w = WorkersConfig::Speeds(vec![1.0, 1.0, 1.0]);
+        assert!(w.is_homogeneous(3));
+        let w = WorkersConfig::Speeds(vec![1.0, 2.0, 1.0]);
+        assert!(!w.is_homogeneous(3));
     }
 
     #[test]

@@ -5,9 +5,15 @@
 //! Given a cluster (l workers), an arrival rate, a mean job workload and
 //! an overhead model, sweep k over a log grid through the Sec.-6
 //! approximation and return the k minimizing the sojourn ε-quantile.
+//!
+//! For scenarios the analytic layer does not cover — heterogeneous worker
+//! speeds and task redundancy — [`recommend_simulated`] answers the same
+//! question by sweeping k through the simulator on the thread pool.
 
-use crate::config::{ModelKind, OverheadConfig};
+use crate::config::{ModelKind, OverheadConfig, SimulationConfig};
+use crate::coordinator::sweep::{run_sweep, SweepPoint};
 use crate::runtime::{BoundQuery, BoundsEngine};
+use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 
 /// Advisor output: the recommended k and the full curve for context.
@@ -30,13 +36,7 @@ pub fn recommend(
     overhead: OverheadConfig,
 ) -> Result<Recommendation> {
     // κ grid: 1..~200 in multiplicative steps.
-    let mut kappas: Vec<f64> = Vec::new();
-    let mut kappa = 1.0f64;
-    while kappa <= 200.0 {
-        kappas.push(kappa);
-        kappa *= 1.3;
-    }
-    let ks: Vec<usize> = kappas.iter().map(|&x| (x * l as f64).round() as usize).collect();
+    let ks = k_grid(l, 200.0);
 
     let queries: Vec<BoundQuery> = ks
         .iter()
@@ -64,6 +64,76 @@ pub fn recommend(
             }
         }
         curve.push((k, tau));
+    }
+    Ok(Recommendation { best, curve })
+}
+
+/// The advisor's κ grid: k ∈ {l, 1.3·l, …} up to `kappa_max`·l.
+pub fn k_grid(l: usize, kappa_max: f64) -> Vec<usize> {
+    let mut ks = Vec::new();
+    let mut kappa = 1.0f64;
+    while kappa <= kappa_max {
+        let k = (kappa * l as f64).round() as usize;
+        if ks.last() != Some(&k) {
+            ks.push(k);
+        }
+        kappa *= 1.3;
+    }
+    ks
+}
+
+/// Simulation-backed recommendation for scenarios outside the analytic
+/// models' reach: heterogeneous worker speeds and task redundancy (the
+/// `base` config's `[workers]` / `[redundancy]` sections are honoured).
+///
+/// For each k in `ks`, tasks are sized so the mean job workload
+/// `k · E[exec]` equals `mean_workload`, the sweep runs on `pool` with
+/// per-point seeds derived from `base.seed`, and the k minimizing the
+/// simulated sojourn (1 − ε)-quantile wins.
+pub fn recommend_simulated(
+    pool: &ThreadPool,
+    base: &SimulationConfig,
+    mean_workload: f64,
+    epsilon: f64,
+    ks: &[usize],
+) -> Result<Recommendation, String> {
+    if !(mean_workload > 0.0 && mean_workload.is_finite()) {
+        return Err(format!("mean workload must be positive, got {mean_workload}"));
+    }
+    if base.model == ModelKind::ForkJoinPerServer {
+        return Err(
+            "the simulated advisor sweeps tasks-per-job, which the per-server \
+             fork-join model pins to k = l; use sm, fj, or ideal"
+                .into(),
+        );
+    }
+    let points: Vec<SweepPoint> = ks
+        .iter()
+        .map(|&k| SweepPoint {
+            label: k as f64,
+            config: SimulationConfig {
+                tasks_per_job: k,
+                service: crate::config::ServiceConfig {
+                    execution: format!("exp:{}", k as f64 / mean_workload),
+                },
+                ..base.clone()
+            },
+        })
+        .collect();
+    let outcomes = run_sweep(pool, points, 1.0 - epsilon, base.seed)?;
+    let mut curve = Vec::with_capacity(outcomes.len());
+    let mut best: Option<(usize, f64)> = None;
+    for o in &outcomes {
+        let k = o.label as usize;
+        let tau = o.sojourn_q;
+        if tau.is_finite() {
+            if best.map(|(_, bt)| tau < bt).unwrap_or(true) {
+                best = Some((k, tau));
+            }
+            curve.push((k, Some(tau)));
+        } else {
+            curve.push((k, None));
+        }
     }
     Ok(Recommendation { best, curve })
 }
@@ -96,6 +166,48 @@ mod tests {
         let feasible: Vec<f64> = rec.curve.iter().filter_map(|&(_, t)| t).collect();
         let min = feasible.iter().cloned().fold(f64::INFINITY, f64::min);
         assert!(*feasible.last().unwrap() > min, "tail should rise");
+    }
+
+    /// Simulated advisor on a skewed cluster: it returns a stable
+    /// recommendation, and with redundancy the recommended quantile at
+    /// the same k-grid stays finite. End-to-end sanity of the
+    /// heterogeneous path ("what k, given skewed workers?").
+    #[test]
+    fn simulated_advisor_handles_skewed_workers() {
+        use crate::config::{RedundancyConfig, WorkersConfig};
+        let l = 8usize;
+        let base = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: l,
+            tasks_per_job: l, // overridden per sweep point
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.4".into() },
+            service: crate::config::ServiceConfig { execution: "exp:1.0".into() },
+            jobs: 4_000,
+            warmup: 400,
+            seed: 11,
+            overhead: Some(OverheadConfig::paper()),
+            workers: Some(WorkersConfig::Speeds(vec![
+                1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5,
+            ])),
+            redundancy: Some(RedundancyConfig { replicas: 2 }),
+        };
+        let pool = ThreadPool::new(4);
+        let ks = k_grid(l, 16.0);
+        let rec = recommend_simulated(&pool, &base, l as f64, 0.05, &ks).unwrap();
+        let (k, tau) = rec.best.expect("stable recommendation");
+        assert!(ks.contains(&k));
+        assert!(tau.is_finite() && tau > 0.0);
+        assert_eq!(rec.curve.len(), ks.len());
+    }
+
+    #[test]
+    fn k_grid_is_increasing_and_deduped() {
+        let ks = k_grid(10, 200.0);
+        assert_eq!(ks[0], 10);
+        for w in ks.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(*ks.last().unwrap() >= 1500);
     }
 
     /// Without overhead, more tinyfication is always better (the curve

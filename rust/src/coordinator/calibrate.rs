@@ -123,6 +123,8 @@ pub fn calibrate(base: &EmulatorConfig, ks: &[usize]) -> Result<Calibration, Str
             warmup: ref_cfg.warmup * 10,
             seed: ref_cfg.seed ^ 0xCA11B,
             overhead: oh,
+            workers: None,
+            redundancy: None,
         };
         let res = sim::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })?;
         Ok(Ecdf::new(res.jobs.iter().map(|j| j.sojourn()).collect()))

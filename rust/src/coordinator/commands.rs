@@ -3,7 +3,9 @@
 use super::figures::{self, FigureCtx, Scale};
 use super::{advisor, calibrate};
 use crate::cli::Args;
-use crate::config::{EmulatorConfig, ModelKind, OverheadConfig, SimulationConfig};
+use crate::config::{
+    EmulatorConfig, ModelKind, OverheadConfig, RedundancyConfig, SimulationConfig, WorkersConfig,
+};
 use crate::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
 use crate::sim::{self, RunOptions};
 use crate::util::threadpool::ThreadPool;
@@ -28,6 +30,32 @@ fn e(s: String) -> anyhow::Error {
     anyhow::Error::msg(s)
 }
 
+/// Parse the heterogeneous-worker / redundancy scenario flags:
+/// `--speeds 1.0,0.5,...` or `--speed-dist uniform:0.5:1.5`
+/// (with `--speed-seed N`), plus `--redundancy R`.
+fn scenario_from_args(
+    args: &Args,
+) -> Result<(Option<WorkersConfig>, Option<RedundancyConfig>)> {
+    let workers = match (args.get_list_f64("speeds").map_err(e)?, args.get("speed-dist")) {
+        (Some(_), Some(_)) => bail!("give either --speeds or --speed-dist, not both"),
+        (Some(speeds), None) => Some(WorkersConfig::Speeds(speeds)),
+        (None, Some(spec)) => {
+            crate::dist::parse_spec(spec).map_err(e)?;
+            Some(WorkersConfig::Distribution {
+                spec: spec.to_string(),
+                seed: args.get_u64("speed-seed", 1).map_err(e)?,
+            })
+        }
+        (None, None) => None,
+    };
+    let redundancy = match args.get_usize("redundancy", 1).map_err(e)? {
+        0 => bail!("--redundancy must be >= 1"),
+        1 => None,
+        r => Some(RedundancyConfig { replicas: r }),
+    };
+    Ok((workers, redundancy))
+}
+
 /// `tiny-tasks simulate` — one DES run, statistics to stdout.
 pub fn cmd_simulate(args: &Args) -> Result<i32> {
     // `--config file.toml` loads the [simulation] section; flags override
@@ -50,6 +78,7 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     let k = args.get_usize("k", l).map_err(e)?;
     let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
     let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+    let (workers, redundancy) = scenario_from_args(args)?;
     let cfg = SimulationConfig {
         model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
         servers: l,
@@ -64,6 +93,8 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         warmup: args.get_usize("warmup", 3_000).map_err(e)?,
         seed: args.get_u64("seed", 1).map_err(e)?,
         overhead: overhead_from_args(args)?,
+        workers,
+        redundancy,
     };
     let opts = RunOptions {
         in_order_departures: args.get_bool("in-order"),
@@ -73,6 +104,16 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     println!("model            {}", cfg.model);
     println!("servers l        {l}");
     println!("tasks/job k      {k}  (kappa = {:.2})", cfg.kappa());
+    if cfg.workers.is_some() || cfg.redundancy.is_some() {
+        let speeds = cfg.resolved_speeds().map_err(e)?;
+        let min = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speeds.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "scenario         speeds in [{min:.3}, {max:.3}] (Σ = {:.3}), replicas r = {}",
+            speeds.iter().sum::<f64>(),
+            cfg.replicas()
+        );
+    }
     println!("jobs             {} (+{} warmup)", cfg.jobs, cfg.warmup);
     println!("mean sojourn     {:.4} s", res.sojourn_summary.mean());
     for q in [0.5, 0.9, 0.99, 0.999] {
@@ -80,6 +121,9 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     }
     println!("mean waiting     {:.4} s", res.waiting_quantile(0.5));
     println!("mean overhead/job {:.6} s", res.overhead_summary.mean());
+    if cfg.replicas() > 1 {
+        println!("mean redundant/job {:.6} s", res.redundant_summary.mean());
+    }
     println!("throughput       {:.0} jobs/s wall", res.jobs_per_second());
     Ok(0)
 }
@@ -287,7 +331,9 @@ pub fn cmd_calibrate(args: &Args) -> Result<i32> {
 }
 
 /// `tiny-tasks advisor` — recommend k for a cluster (the paper's
-/// concluding use-case).
+/// concluding use-case). With `--speeds`/`--speed-dist`/`--redundancy`
+/// the recommendation comes from simulation sweeps (the analytic models
+/// are homogeneous); otherwise from the analytic engine.
 pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let l = args.get_usize("servers", 50).map_err(e)?;
     let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
@@ -295,8 +341,39 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let epsilon = args.get_f64("epsilon", 0.01).map_err(e)?;
     let model = ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?;
     let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
-    let engine = BoundsEngine::auto();
-    let rec = advisor::recommend(&engine, model, l, lambda, workload, epsilon, oh)?;
+    let (workers, redundancy) = scenario_from_args(args)?;
+    let rec = if workers.is_some() || redundancy.is_some() {
+        if model == ModelKind::ForkJoinPerServer {
+            bail!(
+                "the simulated advisor sweeps tasks-per-job and needs a \
+                 tiny-tasks model (sm/fj/ideal); fjps is fixed at k = l"
+            );
+        }
+        let jobs = args.get_usize("jobs", 8_000).map_err(e)?;
+        let kappa_max = args.get_f64("kappa-max", 32.0).map_err(e)?;
+        let base = SimulationConfig {
+            model,
+            servers: l,
+            tasks_per_job: l, // overridden per sweep point
+            arrival: crate::config::ArrivalConfig {
+                interarrival: format!("exp:{lambda}"),
+            },
+            service: crate::config::ServiceConfig { execution: "exp:1.0".into() },
+            jobs,
+            warmup: jobs / 10,
+            seed: args.get_u64("seed", 1).map_err(e)?,
+            overhead: Some(oh),
+            workers,
+            redundancy,
+        };
+        let pool = ThreadPool::with_default_size();
+        let ks = advisor::k_grid(l, kappa_max);
+        println!("engine: simulation sweep (heterogeneous/redundant scenario)");
+        advisor::recommend_simulated(&pool, &base, workload, epsilon, &ks).map_err(e)?
+    } else {
+        let engine = BoundsEngine::auto();
+        advisor::recommend(&engine, model, l, lambda, workload, epsilon, oh)?
+    };
     println!(
         "cluster: l={l}, lambda={lambda}/s, E[workload]={workload}s, model={model}, eps={epsilon}"
     );

@@ -52,6 +52,8 @@ pub fn fig10(ctx: &FigureCtx) -> Result<()> {
             warmup: sim_jobs / 10,
             seed: ctx.seed ^ 0xF16,
             overhead,
+            workers: None,
+            redundancy: None,
         };
         let res = sim::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;

@@ -25,6 +25,8 @@ pub fn fig1_2(ctx: &FigureCtx) -> Result<()> {
             warmup: 0,
             seed: ctx.seed,
             overhead: Some(crate::config::OverheadConfig::paper()),
+            workers: None,
+            redundancy: None,
         };
         let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;
@@ -70,6 +72,8 @@ mod tests {
                 warmup: 0,
                 seed: 1,
                 overhead: None,
+                workers: None,
+                redundancy: None,
             };
             let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
                 .unwrap();

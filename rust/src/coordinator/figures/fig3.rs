@@ -60,6 +60,8 @@ pub fn fig3(ctx: &FigureCtx) -> Result<()> {
             warmup: jobs / 10,
             seed: 0,
             overhead: None,
+            workers: None,
+            redundancy: None,
         },
     };
     let q = 1.0 - eps;

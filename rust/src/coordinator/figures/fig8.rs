@@ -76,6 +76,8 @@ pub fn fig8(ctx: &FigureCtx) -> Result<()> {
                 warmup: sim_jobs / 10,
                 seed: 0,
                 overhead,
+                workers: None,
+                redundancy: None,
             },
         };
         let q = 1.0 - eps;

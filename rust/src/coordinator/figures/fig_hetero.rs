@@ -1,0 +1,137 @@
+//! Heterogeneous-worker panel (beyond the paper): where does the
+//! tiny-tasks sweet spot move when worker speeds are skewed, and how much
+//! of the skew penalty does first-finish-wins redundancy buy back?
+//!
+//! Sweeps speed skew σ × tasks-per-job k for the single-queue fork-join
+//! model at constant mean workload (μ = k/l) and paper overhead. Workers
+//! split into a fast half (speed 1 + σ) and a slow half (speed 1 − σ), so
+//! aggregate capacity Σ speeds = l is held fixed across σ — any quantile
+//! shift is pure skew, not capacity. One CSV row per (σ, k):
+//!
+//! `skew,k,q_r1,q_r2,mean_r1,mean_r2,redundant_r2`
+//!
+//! where `q_*` is the 0.99 sojourn quantile without (r = 1) and with
+//! (r = 2) redundancy and `redundant_r2` is the mean cancelled-replica
+//! server time per job.
+
+use super::{FigureCtx, Scale};
+use crate::config::{ModelKind, OverheadConfig, RedundancyConfig, SimulationConfig, WorkersConfig};
+use crate::coordinator::sweep::{run_sweep, SweepPoint};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+/// Two-class speed vector: half the workers at `1 + skew`, half at
+/// `1 − skew` (capacity-preserving for even l).
+pub fn two_class_speeds(l: usize, skew: f64) -> Vec<f64> {
+    assert!(l % 2 == 0, "two-class skew needs an even worker count");
+    assert!((0.0..1.0).contains(&skew), "skew must be in [0, 1)");
+    let mut speeds = vec![1.0 + skew; l / 2];
+    speeds.resize(l, 1.0 - skew);
+    speeds
+}
+
+pub fn fig_hetero(ctx: &FigureCtx) -> Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let eps = 0.01;
+    let (ks, jobs): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (vec![10, 20, 40, 80, 160], 8_000),
+        Scale::Paper => (vec![10, 20, 40, 80, 160, 320, 640, 1280], 60_000),
+    };
+    let skews = [0.0, 0.25, 0.5, 0.75];
+
+    let mk = |k: usize, skew: f64, replicas: usize| SweepPoint {
+        label: k as f64,
+        config: SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: l,
+            tasks_per_job: k,
+            arrival: crate::config::ArrivalConfig { interarrival: format!("exp:{lambda}") },
+            service: crate::config::ServiceConfig {
+                execution: format!("exp:{}", k as f64 / l as f64),
+            },
+            jobs,
+            warmup: jobs / 10,
+            seed: 0, // reseeded per point by run_sweep
+            overhead: Some(OverheadConfig::paper()),
+            workers: if skew > 0.0 {
+                Some(WorkersConfig::Speeds(two_class_speeds(l, skew)))
+            } else {
+                None
+            },
+            redundancy: if replicas > 1 {
+                Some(RedundancyConfig { replicas })
+            } else {
+                None
+            },
+        },
+    };
+
+    let mut csv = Csv::new(vec![
+        "skew",
+        "k",
+        "q_r1",
+        "q_r2",
+        "mean_r1",
+        "mean_r2",
+        "redundant_r2",
+    ]);
+    for &skew in &skews {
+        let r1 = run_sweep(
+            ctx.pool,
+            ks.iter().map(|&k| mk(k, skew, 1)).collect(),
+            1.0 - eps,
+            ctx.seed ^ 0x4e7e,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let r2 = run_sweep(
+            ctx.pool,
+            ks.iter().map(|&k| mk(k, skew, 2)).collect(),
+            1.0 - eps,
+            ctx.seed ^ 0x4e7f,
+        )
+        .map_err(anyhow::Error::msg)?;
+        for ((&k, a), b) in ks.iter().zip(&r1).zip(&r2) {
+            csv.push(&[
+                skew,
+                k as f64,
+                a.sojourn_q,
+                b.sojourn_q,
+                a.sojourn_mean,
+                b.sojourn_mean,
+                b.redundant_mean,
+            ]);
+        }
+    }
+    let path = ctx.out_dir.join("hetero_panel.csv");
+    csv.write_file(&path)?;
+    println!(
+        "hetero: {} rows ({} skews x {} ks) -> {}",
+        csv.len(),
+        skews.len(),
+        ks.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_class_speeds_preserve_capacity() {
+        for skew in [0.0, 0.25, 0.5, 0.75] {
+            let speeds = two_class_speeds(10, skew);
+            assert_eq!(speeds.len(), 10);
+            let sum: f64 = speeds.iter().sum();
+            assert!((sum - 10.0).abs() < 1e-12, "skew {skew}: Σ={sum}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even worker count")]
+    fn odd_worker_count_rejected() {
+        two_class_speeds(7, 0.5);
+    }
+}

@@ -10,6 +10,7 @@ mod fig10;
 mod fig11;
 mod fig12;
 mod fig13;
+mod fig_hetero;
 
 pub use fig1_2::fig1_2;
 pub use fig3::fig3;
@@ -19,6 +20,7 @@ pub use fig10::fig10;
 pub use fig11::fig11;
 pub use fig12::{fig12a, fig12b};
 pub use fig13::fig13;
+pub use fig_hetero::{fig_hetero, two_class_speeds};
 
 use anyhow::Result;
 use std::path::Path;
@@ -57,9 +59,11 @@ pub struct FigureCtx<'a> {
     pub pool: &'a crate::util::threadpool::ThreadPool,
 }
 
-/// All figure ids, in paper order.
+/// All figure ids: the paper's figures in paper order, then the
+/// beyond-the-paper scenario panels.
 pub const ALL: &[&str] = &[
     "fig1-2", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12a", "fig12b", "fig13",
+    "hetero",
 ];
 
 /// Run one figure by id.
@@ -74,6 +78,7 @@ pub fn run(id: &str, ctx: &FigureCtx) -> Result<()> {
         "fig12a" => fig12a(ctx),
         "fig12b" => fig12b(ctx),
         "fig13" => fig13(ctx),
+        "hetero" => fig_hetero(ctx),
         "all" => {
             for id in ALL {
                 println!("== {id} ==");

@@ -94,6 +94,7 @@ const SECTIONS: &[(&str, &[&str], &str)] = &[
     ("Fig. 12(a)", &["fig12a_stability.csv"], "direct refinement: stability vs l"),
     ("Fig. 12(b)", &["fig12b_bounds.csv"], "direct refinement: bounds vs l at three utilizations"),
     ("Fig. 13", &["fig13_bounds.csv"], "bounds vs k at ε = 1e-6"),
+    ("Heterogeneous panel", &["hetero_panel.csv"], "sojourn quantiles vs k under worker-speed skew, with and without r = 2 first-finish-wins redundancy"),
 ];
 
 /// Build `report.md` from whatever CSVs exist in `dir`.

@@ -26,6 +26,9 @@ pub struct SweepOutcome {
     pub sojourn_mean: f64,
     /// Mean total overhead per job.
     pub overhead_mean: f64,
+    /// Mean cancelled-replica server time per job (redundancy cost;
+    /// 0 outside redundancy scenarios).
+    pub redundant_mean: f64,
     /// Jobs simulated per wall second (perf telemetry).
     pub jobs_per_sec: f64,
 }
@@ -50,6 +53,7 @@ pub fn run_sweep(
             sojourn_q: res.sojourn_quantile(q),
             sojourn_mean: res.sojourn_summary.mean(),
             overhead_mean: res.overhead_summary.mean(),
+            redundant_mean: res.redundant_summary.mean(),
             jobs_per_sec: res.jobs_per_second(),
         })
     });
@@ -76,6 +80,8 @@ mod tests {
                 warmup: 100,
                 seed: 0,
                 overhead: None,
+                workers: None,
+                redundancy: None,
             },
         }
     }
@@ -90,6 +96,32 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.label, y.label);
             assert_eq!(x.sojourn_q, y.sojourn_q);
+        }
+    }
+
+    /// Scenario configs flow through the sweep machinery: pool-size
+    /// independence holds for heterogeneous + redundant points too, and
+    /// the redundancy cost column is populated.
+    #[test]
+    fn scenario_sweep_reproducible_and_costed() {
+        let mk = |k: usize| {
+            let mut p = point(k, 1500);
+            p.config.workers = Some(crate::config::WorkersConfig::Speeds(vec![
+                1.5, 1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5, 0.5,
+            ]));
+            p.config.redundancy =
+                Some(crate::config::RedundancyConfig { replicas: 2 });
+            p
+        };
+        let points: Vec<SweepPoint> = [10, 20].iter().map(|&k| mk(k)).collect();
+        let pool1 = ThreadPool::new(1);
+        let pool4 = ThreadPool::new(4);
+        let a = run_sweep(&pool1, points.clone(), 0.9, 21).unwrap();
+        let b = run_sweep(&pool4, points, 0.9, 21).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.sojourn_q, y.sojourn_q);
+            assert_eq!(x.redundant_mean, y.redundant_mean);
+            assert!(x.redundant_mean > 0.0, "redundancy cost missing");
         }
     }
 

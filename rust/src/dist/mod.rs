@@ -1,0 +1,464 @@
+//! Sampling distributions for inter-arrival times, task execution times,
+//! and worker speeds (Sec. 2.3's controlled experiments), parsed from
+//! compact `"name:param:..."` spec strings.
+//!
+//! The offline registry has no `rand_distr`; samplers are hand-rolled
+//! inverse-CDF transforms over a caller-supplied uniform source
+//! (`FnMut() -> f64` yielding values in `(0, 1]`, see
+//! [`crate::rng::Rng::next_f64_open`]). Keeping the uniform source
+//! external lets the simulator share one PCG64 stream between workload
+//! and overhead sampling, which is what makes runs bit-reproducible.
+
+use std::fmt::Debug;
+
+/// A sampling distribution over non-negative reals.
+///
+/// `rng` must yield uniform values in `(0, 1]` (safe for `ln`).
+pub trait Distribution: Send + Sync + Debug {
+    /// Draw one sample.
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64;
+    /// Distribution mean (possibly `f64::INFINITY`).
+    fn mean(&self) -> f64;
+    /// Distribution variance (possibly `f64::INFINITY`).
+    fn variance(&self) -> f64;
+    /// Human/machine-readable label, e.g. `"Exp(0.5)"`. The workload
+    /// fast path sniffs `"Exp(rate)"` to devirtualize exponential
+    /// sampling, so the label must round-trip the rate via `parse`.
+    fn label(&self) -> String;
+}
+
+/// Exponential with rate `mu` (mean `1/mu`).
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    /// New `Exp(rate)`.
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0 && rate.is_finite(), "exp rate must be positive");
+        Self { rate }
+    }
+
+    /// The rate parameter.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+}
+
+impl Distribution for Exponential {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // Must stay formula-identical to the devirtualized fast path in
+        // sim::workload (bit-for-bit reproducibility, TT_NO_FAST_EXP).
+        -rng().ln() / self.rate
+    }
+    fn mean(&self) -> f64 {
+        1.0 / self.rate
+    }
+    fn variance(&self) -> f64 {
+        1.0 / (self.rate * self.rate)
+    }
+    fn label(&self) -> String {
+        format!("Exp({})", self.rate)
+    }
+}
+
+/// Point mass at `value` (consumes no randomness).
+#[derive(Clone, Copy, Debug)]
+pub struct Deterministic {
+    value: f64,
+}
+
+impl Deterministic {
+    /// New point mass.
+    pub fn new(value: f64) -> Self {
+        assert!(value >= 0.0 && value.is_finite(), "det value must be >= 0");
+        Self { value }
+    }
+}
+
+impl Distribution for Deterministic {
+    fn sample(&self, _rng: &mut dyn FnMut() -> f64) -> f64 {
+        self.value
+    }
+    fn mean(&self) -> f64 {
+        self.value
+    }
+    fn variance(&self) -> f64 {
+        0.0
+    }
+    fn label(&self) -> String {
+        format!("Det({})", self.value)
+    }
+}
+
+/// Erlang with integer shape `kappa` and stage rate `mu`
+/// (sum of `kappa` iid `Exp(mu)` stages; mean `kappa/mu`).
+#[derive(Clone, Copy, Debug)]
+pub struct Erlang {
+    kappa: u32,
+    mu: f64,
+}
+
+impl Erlang {
+    /// New `Erlang(kappa, mu)`.
+    pub fn new(kappa: u32, mu: f64) -> Self {
+        assert!(kappa >= 1, "erlang shape must be >= 1");
+        assert!(mu > 0.0 && mu.is_finite(), "erlang rate must be positive");
+        Self { kappa, mu }
+    }
+
+    /// CDF `F(x) = 1 − e^{−μx} Σ_{i=0}^{κ−1} (μx)^i / i!`.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        let mx = self.mu * x;
+        // Term recurrence keeps the partial sum stable for κ up to ~1e3.
+        let mut term = 1.0f64;
+        let mut sum = 1.0f64;
+        for i in 1..self.kappa {
+            term *= mx / i as f64;
+            sum += term;
+        }
+        let ccdf = (-mx).exp() * sum;
+        (1.0 - ccdf).clamp(0.0, 1.0)
+    }
+}
+
+impl Distribution for Erlang {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // Sum of κ exponential stages (κ draws — dispatch order and draw
+        // counts are part of the reproducibility contract).
+        let mut total = 0.0;
+        for _ in 0..self.kappa {
+            total += -rng().ln() / self.mu;
+        }
+        total
+    }
+    fn mean(&self) -> f64 {
+        self.kappa as f64 / self.mu
+    }
+    fn variance(&self) -> f64 {
+        self.kappa as f64 / (self.mu * self.mu)
+    }
+    fn label(&self) -> String {
+        format!("Erlang({},{})", self.kappa, self.mu)
+    }
+}
+
+/// Pareto with tail index `alpha` and scale (minimum) `xm`.
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    alpha: f64,
+    xm: f64,
+}
+
+impl Pareto {
+    /// New `Pareto(alpha, xm)`.
+    pub fn new(alpha: f64, xm: f64) -> Self {
+        assert!(alpha > 0.0 && alpha.is_finite(), "pareto alpha must be positive");
+        assert!(xm > 0.0 && xm.is_finite(), "pareto xm must be positive");
+        Self { alpha, xm }
+    }
+}
+
+impl Distribution for Pareto {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // Inverse CDF with U in (0, 1]: x = xm · U^{−1/α}.
+        self.xm * rng().powf(-1.0 / self.alpha)
+    }
+    fn mean(&self) -> f64 {
+        if self.alpha > 1.0 {
+            self.alpha * self.xm / (self.alpha - 1.0)
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn variance(&self) -> f64 {
+        if self.alpha > 2.0 {
+            let a = self.alpha;
+            self.xm * self.xm * a / ((a - 1.0) * (a - 1.0) * (a - 2.0))
+        } else {
+            f64::INFINITY
+        }
+    }
+    fn label(&self) -> String {
+        format!("Pareto({},{})", self.alpha, self.xm)
+    }
+}
+
+/// Weibull with shape `k` and scale `lambda`.
+#[derive(Clone, Copy, Debug)]
+pub struct Weibull {
+    shape: f64,
+    scale: f64,
+}
+
+impl Weibull {
+    /// New `Weibull(shape, scale)`.
+    pub fn new(shape: f64, scale: f64) -> Self {
+        assert!(shape > 0.0 && shape.is_finite(), "weibull shape must be positive");
+        assert!(scale > 0.0 && scale.is_finite(), "weibull scale must be positive");
+        Self { shape, scale }
+    }
+}
+
+impl Distribution for Weibull {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // −ln U ~ Exp(1) for U in (0, 1]; x = λ (−ln U)^{1/k}.
+        self.scale * (-rng().ln()).powf(1.0 / self.shape)
+    }
+    fn mean(&self) -> f64 {
+        self.scale * crate::util::math::ln_gamma(1.0 + 1.0 / self.shape).exp()
+    }
+    fn variance(&self) -> f64 {
+        let g1 = crate::util::math::ln_gamma(1.0 + 1.0 / self.shape).exp();
+        let g2 = crate::util::math::ln_gamma(1.0 + 2.0 / self.shape).exp();
+        self.scale * self.scale * (g2 - g1 * g1)
+    }
+    fn label(&self) -> String {
+        format!("Weibull({},{})", self.shape, self.scale)
+    }
+}
+
+/// Uniform on `[lo, hi)` — used for worker-speed skew scenarios.
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    lo: f64,
+    hi: f64,
+}
+
+impl Uniform {
+    /// New `Uniform(lo, hi)`.
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(lo.is_finite() && hi.is_finite() && hi > lo, "uniform needs hi > lo");
+        Self { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // rng() is in (0, 1]; 1 − rng() is in [0, 1).
+        self.lo + (self.hi - self.lo) * (1.0 - rng())
+    }
+    fn mean(&self) -> f64 {
+        0.5 * (self.lo + self.hi)
+    }
+    fn variance(&self) -> f64 {
+        let w = self.hi - self.lo;
+        w * w / 12.0
+    }
+    fn label(&self) -> String {
+        format!("Uniform({},{})", self.lo, self.hi)
+    }
+}
+
+fn parse_params<'a>(spec: &'a str, name: &str, n: usize) -> Result<Vec<f64>, String> {
+    let parts: Vec<&'a str> = spec.split(':').collect();
+    if parts.len() != n + 1 {
+        return Err(format!("{name} spec needs {n} parameter(s): {spec:?}"));
+    }
+    parts[1..]
+        .iter()
+        .map(|p| {
+            p.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("bad number {p:?} in spec {spec:?}"))
+        })
+        .collect()
+}
+
+/// Parse a distribution spec string.
+///
+/// Supported: `exp:RATE`, `det:VALUE`, `erlang:SHAPE:RATE`,
+/// `pareto:ALPHA:XM`, `weibull:SHAPE:SCALE`, `uniform:LO:HI`.
+pub fn parse_spec(spec: &str) -> Result<Box<dyn Distribution>, String> {
+    let spec = spec.trim();
+    let name = spec.split(':').next().unwrap_or("");
+    match name {
+        "exp" => {
+            let p = parse_params(spec, "exp", 1)?;
+            if !(p[0] > 0.0 && p[0].is_finite()) {
+                return Err(format!("exp rate must be positive: {spec:?}"));
+            }
+            Ok(Box::new(Exponential::new(p[0])))
+        }
+        "det" => {
+            let p = parse_params(spec, "det", 1)?;
+            if !(p[0] >= 0.0 && p[0].is_finite()) {
+                return Err(format!("det value must be >= 0: {spec:?}"));
+            }
+            Ok(Box::new(Deterministic::new(p[0])))
+        }
+        "erlang" => {
+            let p = parse_params(spec, "erlang", 2)?;
+            if p[0] < 1.0 || p[0].fract() != 0.0 || p[0] > u32::MAX as f64 {
+                return Err(format!("erlang shape must be a positive integer: {spec:?}"));
+            }
+            if !(p[1] > 0.0 && p[1].is_finite()) {
+                return Err(format!("erlang rate must be positive: {spec:?}"));
+            }
+            Ok(Box::new(Erlang::new(p[0] as u32, p[1])))
+        }
+        "pareto" => {
+            let p = parse_params(spec, "pareto", 2)?;
+            if !(p[0] > 0.0 && p[1] > 0.0 && p[0].is_finite() && p[1].is_finite()) {
+                return Err(format!("pareto parameters must be positive: {spec:?}"));
+            }
+            Ok(Box::new(Pareto::new(p[0], p[1])))
+        }
+        "weibull" => {
+            let p = parse_params(spec, "weibull", 2)?;
+            if !(p[0] > 0.0 && p[1] > 0.0 && p[0].is_finite() && p[1].is_finite()) {
+                return Err(format!("weibull parameters must be positive: {spec:?}"));
+            }
+            Ok(Box::new(Weibull::new(p[0], p[1])))
+        }
+        "uniform" => {
+            let p = parse_params(spec, "uniform", 2)?;
+            if !(p[0].is_finite() && p[1].is_finite() && p[1] > p[0]) {
+                return Err(format!("uniform needs hi > lo: {spec:?}"));
+            }
+            Ok(Box::new(Uniform::new(p[0], p[1])))
+        }
+        _ => Err(format!(
+            "unknown distribution {spec:?} (exp|det|erlang|pareto|weibull|uniform)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn sample_mean(d: &dyn Distribution, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let mut f = || rng.next_f64_open();
+            let x = d.sample(&mut f);
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        (mean, s2 / n as f64 - mean * mean)
+    }
+
+    #[test]
+    fn exponential_moments_and_label() {
+        let d = Exponential::new(0.5);
+        assert_eq!(d.mean(), 2.0);
+        assert_eq!(d.variance(), 4.0);
+        assert_eq!(d.label(), "Exp(0.5)");
+        let (m, v) = sample_mean(&d, 200_000, 1);
+        assert!((m - 2.0).abs() < 0.03, "mean={m}");
+        assert!((v - 4.0).abs() < 0.2, "var={v}");
+    }
+
+    #[test]
+    fn deterministic_is_constant() {
+        let d = Deterministic::new(3.5);
+        let mut calls = 0usize;
+        let mut f = || {
+            calls += 1;
+            0.5
+        };
+        assert_eq!(d.sample(&mut f), 3.5);
+        assert_eq!(calls, 0, "det must not consume randomness");
+        assert_eq!(d.mean(), 3.5);
+        assert_eq!(d.variance(), 0.0);
+    }
+
+    #[test]
+    fn erlang_moments_and_cdf() {
+        let d = Erlang::new(4, 2.0);
+        assert_eq!(d.mean(), 2.0);
+        assert_eq!(d.variance(), 1.0);
+        let (m, v) = sample_mean(&d, 100_000, 2);
+        assert!((m - 2.0).abs() < 0.03, "mean={m}");
+        assert!((v - 1.0).abs() < 0.05, "var={v}");
+        // CDF sanity: monotone, F(0)=0, F(∞)→1, median near mean for κ=4.
+        assert_eq!(d.cdf(0.0), 0.0);
+        assert!(d.cdf(1.0) < d.cdf(2.0) && d.cdf(2.0) < d.cdf(4.0));
+        assert!(d.cdf(50.0) > 0.999999);
+        // Erlang(1, μ) is Exp(μ): F(x) = 1 − e^{−μx}.
+        let e1 = Erlang::new(1, 0.7);
+        for x in [0.1, 1.0, 3.0] {
+            let expect = 1.0 - (-0.7f64 * x).exp();
+            assert!((e1.cdf(x) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pareto_and_weibull_means() {
+        let p = Pareto::new(2.5, 0.6);
+        assert!((p.mean() - 1.0).abs() < 1e-12);
+        let (m, _) = sample_mean(&p, 400_000, 3);
+        assert!((m - 1.0).abs() < 0.05, "pareto mean={m}");
+        // Weibull(2, 1.1284): mean = 1.1284·Γ(1.5) ≈ 1.0.
+        let w = Weibull::new(2.0, 1.1284);
+        assert!((w.mean() - 1.0).abs() < 1e-3, "{}", w.mean());
+        let (m, _) = sample_mean(&w, 200_000, 4);
+        assert!((m - 1.0).abs() < 0.01, "weibull mean={m}");
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let u = Uniform::new(0.5, 1.5);
+        assert_eq!(u.mean(), 1.0);
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..10_000 {
+            let mut f = || rng.next_f64_open();
+            let x = u.sample(&mut f);
+            assert!((0.5..1.5).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn parse_spec_roundtrip() {
+        assert_eq!(parse_spec("exp:0.25").unwrap().mean(), 4.0);
+        assert_eq!(parse_spec("det:2.0").unwrap().mean(), 2.0);
+        assert_eq!(parse_spec("erlang:4:2.0").unwrap().mean(), 2.0);
+        assert!((parse_spec("pareto:2.5:0.6").unwrap().mean() - 1.0).abs() < 1e-12);
+        assert!(parse_spec("weibull:2:1.1284").unwrap().mean() > 0.9);
+        assert_eq!(parse_spec("uniform:0.5:1.5").unwrap().mean(), 1.0);
+        // The workload fast path depends on this label shape.
+        assert_eq!(parse_spec("exp:0.5").unwrap().label(), "Exp(0.5)");
+    }
+
+    #[test]
+    fn parse_spec_rejects_malformed() {
+        for bad in [
+            "zipf:1.1",
+            "exp",
+            "exp:0",
+            "exp:-1",
+            "exp:abc",
+            "det:-2",
+            "erlang:0:1",
+            "erlang:2.5:1",
+            "uniform:2:1",
+            "",
+        ] {
+            assert!(parse_spec(bad).is_err(), "{bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn exponential_matches_fast_path_formula() {
+        // Bit-for-bit: dist sampling equals the inlined formula on the
+        // same RNG stream.
+        let d = Exponential::new(1.7);
+        let mut a = Pcg64::seed_from_u64(9);
+        let mut b = Pcg64::seed_from_u64(9);
+        for _ in 0..1000 {
+            let mut f = || a.next_f64_open();
+            let x = d.sample(&mut f);
+            let y = -b.next_f64_open().ln() / 1.7;
+            assert!(x == y, "fast path diverges: {x} vs {y}");
+        }
+    }
+}

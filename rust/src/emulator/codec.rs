@@ -73,12 +73,19 @@ pub struct Decoder<'a> {
 }
 
 /// Decode error (truncated or malformed message).
-#[derive(Debug, thiserror::Error)]
-#[error("decode error at byte {pos}: {reason}")]
+#[derive(Debug)]
 pub struct DecodeError {
     pos: usize,
     reason: &'static str,
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "decode error at byte {}: {}", self.pos, self.reason)
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Decoder<'a> {
     /// Decoder over `buf`.

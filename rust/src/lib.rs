@@ -24,7 +24,7 @@
 //!   calibration (Sec. 2.6 methodology), and one pipeline per paper figure.
 //! * [`dist`], [`rng`], [`stats`], [`config`], [`cli`], [`util`] —
 //!   supporting substrates (offline environment: no external crates beyond
-//!   `xla`/`anyhow`/`thiserror`/`log`; see DESIGN.md §2).
+//!   the vendored `xla`/`anyhow`/`log`; see DESIGN.md §2).
 
 pub mod analysis;
 pub mod cli;

@@ -269,6 +269,7 @@ impl Calendar {
             workload: js.workload,
             task_overhead: js.task_overhead,
             pre_departure_overhead: js.pd,
+            redundant_work: 0.0,
         });
     }
 
@@ -345,6 +346,7 @@ impl Calendar {
             workload: js.workload,
             task_overhead: js.task_overhead,
             pre_departure_overhead: pd,
+            redundant_work: 0.0,
         });
     }
 }

@@ -49,6 +49,29 @@ impl ServerHeap {
         id
     }
 
+    /// Remove and return the earliest-free server. Used by the redundancy
+    /// dispatcher to reserve `r` distinct servers for one task's replicas;
+    /// every pop must be balanced by a [`ServerHeap::push`] before the
+    /// next task is dispatched.
+    #[inline]
+    pub fn pop(&mut self) -> (f64, u32) {
+        assert!(!self.slots.is_empty(), "pop from empty server heap");
+        let root = self.slots[0];
+        let last = self.slots.pop().expect("non-empty");
+        if !self.slots.is_empty() {
+            self.slots[0] = last;
+            self.sift_down(0);
+        }
+        root
+    }
+
+    /// Re-insert a server with its new free time.
+    #[inline]
+    pub fn push(&mut self, free_time: f64, server: u32) {
+        self.slots.push((free_time, server));
+        self.sift_up(self.slots.len() - 1);
+    }
+
     /// Reset every server's free time to `max(current, t)` — used at the
     /// start barrier of the split-merge model where idle servers wait for
     /// the next job's arrival.
@@ -81,6 +104,19 @@ impl ServerHeap {
     fn rebuild(&mut self) {
         for i in (0..self.slots.len() / 2).rev() {
             self.sift_down(i);
+        }
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.slots[i].0 < self.slots[parent].0 {
+                self.slots.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
         }
     }
 
@@ -161,6 +197,35 @@ mod tests {
         h.reset_all(7.0);
         assert_eq!(h.peek().0, 7.0);
         assert_eq!(h.max_time(), 7.0);
+    }
+
+    #[test]
+    fn pop_push_matches_peek_assign() {
+        // Popping r servers and pushing them back with new times must
+        // leave the heap equivalent to a peek/assign sequence.
+        let mut h = ServerHeap::new(6, 0.0);
+        let mut rng = Pcg64::seed_from_u64(11);
+        for _ in 0..5_000 {
+            let r = 1 + (rng.next_u64() % 3) as usize;
+            let mut picks = Vec::new();
+            for _ in 0..r {
+                picks.push(h.pop());
+            }
+            // Picks come out in nondecreasing free-time order.
+            for w in picks.windows(2) {
+                assert!(w[0].0 <= w[1].0);
+            }
+            for (t, id) in picks {
+                h.push(t + rng.next_f64() * 2.0, id);
+            }
+            assert_eq!(h.len(), 6);
+        }
+        // All ids still present exactly once.
+        let mut ids = std::collections::BTreeSet::new();
+        for _ in 0..6 {
+            ids.insert(h.pop().1);
+        }
+        assert_eq!(ids.len(), 6);
     }
 
     #[test]

@@ -18,12 +18,18 @@
 //! magnitude faster and bit-for-bit equivalent for these work-conserving
 //! FIFO models (validated against M/M/1 closed forms and the analytic
 //! bounds in the test suite).
+//!
+//! The [`scenario`] module extends every model with heterogeneous worker
+//! speeds and first-finish-wins task redundancy (`[workers]` /
+//! `[redundancy]` config sections); the degenerate scenario reduces
+//! bit-for-bit to the homogeneous models.
 
 pub mod calendar;
 mod heap;
 pub mod models;
 mod overhead;
 mod runner;
+pub mod scenario;
 pub mod stability;
 mod trace;
 mod workload;
@@ -32,6 +38,7 @@ pub use calendar::{Calendar, Discipline};
 pub use heap::ServerHeap;
 pub use overhead::OverheadModel;
 pub use runner::{run, RunOptions, SimResult};
+pub use scenario::{Scenario, TaskOutcome};
 pub use trace::{TraceEvent, TraceLog};
 pub use workload::Workload;
 
@@ -48,10 +55,13 @@ pub struct JobRecord {
     pub first_start: f64,
     /// Total workload L(n) = Σ task execution times (no overhead).
     pub workload: f64,
-    /// Total task-service overhead Σ O_i(n).
+    /// Total task-service overhead Σ O_i(n) (winning replicas only).
     pub task_overhead: f64,
     /// Pre-departure overhead applied to this job.
     pub pre_departure_overhead: f64,
+    /// Server time consumed by cancelled task replicas (0 unless a
+    /// redundancy scenario is active).
+    pub redundant_work: f64,
 }
 
 impl JobRecord {

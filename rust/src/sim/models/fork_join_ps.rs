@@ -4,19 +4,109 @@
 //! (Sec. 1.2), so the model requires k = l.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use crate::sim::{JobRecord, OverheadModel, Scenario, TraceEvent, TraceLog, Workload};
 
 /// Per-server fork-join with l servers (k = l tasks per job).
 pub struct ForkJoinPerServer {
     /// Per-server "free at" times (tail of each server's FIFO queue).
     free: Vec<f64>,
+    /// Heterogeneous-speed / redundancy scenario; `None` keeps the
+    /// homogeneous hot path bit-for-bit unchanged. Task `i`'s replicas
+    /// are bound to servers `i, i+1, …, i+r−1 (mod l)` — placement is
+    /// static (the defining property of this model), only widened.
+    scenario: Option<Scenario>,
 }
 
 impl ForkJoinPerServer {
     /// New model with `l` servers.
     pub fn new(l: usize) -> Self {
         assert!(l >= 1);
-        Self { free: vec![0.0; l] }
+        Self { free: vec![0.0; l], scenario: None }
+    }
+
+    /// Attach a heterogeneous-worker / redundancy scenario.
+    pub fn with_scenario(mut self, scenario: Option<Scenario>) -> Self {
+        if let Some(sc) = &scenario {
+            assert_eq!(sc.speeds().len(), self.free.len(), "scenario arity");
+        }
+        self.scenario = scenario;
+        self
+    }
+
+    fn advance_scenario(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        let sc = self.scenario.as_ref().expect("scenario path");
+        let l = self.free.len();
+        let r = sc.replicas().min(l);
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        let mut redundant_sum = 0.0;
+        let mut last_finish = f64::NEG_INFINITY;
+        let mut first_start = f64::INFINITY;
+        // (start, finish, exec, overhead) per replica of the current task.
+        let mut reps: Vec<(f64, f64, f64, f64)> = Vec::with_capacity(r);
+        for i in 0..l {
+            reps.clear();
+            for j in 0..r {
+                let s = (i + j) % l;
+                let e = workload.next_execution();
+                let o = overhead.sample_task(workload.rng());
+                let start = self.free[s].max(arrival);
+                // Term-by-term so speed 1.0 matches `start + e + o` bitwise.
+                let speed = sc.speed(s as u32);
+                let finish = start + e / speed + o / speed;
+                reps.push((start, finish, e, o));
+            }
+            let mut win = 0usize;
+            for (j, rep) in reps.iter().enumerate().skip(1) {
+                if rep.1 < reps[win].1 {
+                    win = j;
+                }
+            }
+            let t_win = reps[win].1;
+            workload_sum += reps[win].2;
+            overhead_sum += reps[win].3;
+            last_finish = last_finish.max(t_win);
+            for (j, &(start, finish, _, _)) in reps.iter().enumerate() {
+                let s = (i + j) % l;
+                let ran = j == win || start < t_win;
+                if !ran {
+                    continue; // never started: server queue unchanged
+                }
+                let freed = if j == win { finish } else { t_win };
+                self.free[s] = freed;
+                first_start = first_start.min(start);
+                if j != win {
+                    redundant_sum += t_win - start;
+                }
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job: n as u32,
+                        task: i as u32,
+                        server: s as u32,
+                        start,
+                        end: freed,
+                    });
+                }
+            }
+        }
+        let pd = overhead.pre_departure(l);
+        JobRecord {
+            index: n,
+            arrival,
+            departure: last_finish + pd,
+            first_start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+            redundant_work: redundant_sum,
+        }
     }
 }
 
@@ -29,6 +119,9 @@ impl Model for ForkJoinPerServer {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> JobRecord {
+        if self.scenario.is_some() {
+            return self.advance_scenario(n, arrival, workload, overhead, trace);
+        }
         let mut workload_sum = 0.0;
         let mut overhead_sum = 0.0;
         let mut last_finish = f64::NEG_INFINITY;
@@ -62,6 +155,7 @@ impl Model for ForkJoinPerServer {
             workload: workload_sum,
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
+            redundant_work: 0.0,
         }
     }
 

@@ -13,7 +13,7 @@
 //! apples-to-apples bound validation.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::sim::{JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog, Workload};
 
 /// Single-queue fork-join with l servers and k tasks per job.
 pub struct ForkJoinSingleQueue {
@@ -22,6 +22,9 @@ pub struct ForkJoinSingleQueue {
     /// Enforce `D(n) ≥ D(n−1)` as in the Th.-2 model (default false).
     in_order_departures: bool,
     prev_departure: f64,
+    /// Heterogeneous-speed / redundancy scenario; `None` keeps the
+    /// homogeneous hot path bit-for-bit unchanged.
+    scenario: Option<Scenario>,
 }
 
 impl ForkJoinSingleQueue {
@@ -33,12 +36,22 @@ impl ForkJoinSingleQueue {
             heap: ServerHeap::new(l, 0.0),
             in_order_departures: false,
             prev_departure: 0.0,
+            scenario: None,
         }
     }
 
     /// Enable the Th.-2 in-order departure constraint.
     pub fn with_in_order_departures(mut self, yes: bool) -> Self {
         self.in_order_departures = yes;
+        self
+    }
+
+    /// Attach a heterogeneous-worker / redundancy scenario.
+    pub fn with_scenario(mut self, scenario: Option<Scenario>) -> Self {
+        if let Some(sc) = &scenario {
+            assert_eq!(sc.speeds().len(), self.heap.len(), "scenario arity");
+        }
+        self.scenario = scenario;
         self
     }
 }
@@ -54,34 +67,58 @@ impl Model for ForkJoinSingleQueue {
     ) -> JobRecord {
         let mut workload_sum = 0.0;
         let mut overhead_sum = 0.0;
+        let mut redundant_sum = 0.0;
         let mut last_finish = f64::NEG_INFINITY;
         let mut first_start = f64::INFINITY;
 
-        for i in 0..self.k {
-            let e = workload.next_execution();
-            let o = overhead.sample_task(workload.rng());
-            workload_sum += e;
-            overhead_sum += o;
-            let (t_free, server) = self.heap.peek();
-            // A task cannot start before its job arrives; idle servers
-            // wait for the queue to refill.
-            let start = t_free.max(arrival);
-            let finish = start + e + o;
-            self.heap.assign(finish);
-            if start < first_start {
-                first_start = start;
+        if let Some(sc) = &mut self.scenario {
+            for i in 0..self.k {
+                let out = sc.dispatch_task(
+                    &mut self.heap,
+                    arrival,
+                    workload,
+                    overhead,
+                    n as u32,
+                    i as u32,
+                    trace,
+                );
+                workload_sum += out.work;
+                overhead_sum += out.overhead;
+                redundant_sum += out.redundant_time;
+                if out.first_start < first_start {
+                    first_start = out.first_start;
+                }
+                if out.finish > last_finish {
+                    last_finish = out.finish;
+                }
             }
-            if finish > last_finish {
-                last_finish = finish;
-            }
-            if trace.is_enabled() {
-                trace.record(TraceEvent {
-                    job: n as u32,
-                    task: i as u32,
-                    server,
-                    start,
-                    end: finish,
-                });
+        } else {
+            for i in 0..self.k {
+                let e = workload.next_execution();
+                let o = overhead.sample_task(workload.rng());
+                workload_sum += e;
+                overhead_sum += o;
+                let (t_free, server) = self.heap.peek();
+                // A task cannot start before its job arrives; idle servers
+                // wait for the queue to refill.
+                let start = t_free.max(arrival);
+                let finish = start + e + o;
+                self.heap.assign(finish);
+                if start < first_start {
+                    first_start = start;
+                }
+                if finish > last_finish {
+                    last_finish = finish;
+                }
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job: n as u32,
+                        task: i as u32,
+                        server,
+                        start,
+                        end: finish,
+                    });
+                }
             }
         }
 
@@ -102,6 +139,7 @@ impl Model for ForkJoinSingleQueue {
             workload: workload_sum,
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
+            redundant_work: redundant_sum,
         }
     }
 
@@ -218,6 +256,24 @@ mod tests {
         assert!(d1 < d0, "overtaking allowed: {d1} !< {d0}");
         let (d0o, d1o) = run(true);
         assert!(d1o >= d0o, "in-order enforced");
+    }
+
+    /// Redundancy masks a slow worker: with speeds (1, 0.1) a unit task
+    /// landing on the slow server takes 10 s at r = 1; at r = 2 the fast
+    /// replica wins and the job departs at 2 s.
+    #[test]
+    fn redundancy_masks_slow_worker() {
+        let run = |replicas: usize| {
+            let sc = Scenario::new(vec![1.0, 0.1], replicas);
+            let mut m = ForkJoinSingleQueue::new(2, 2).with_scenario(Some(sc));
+            let mut w = det_workload(100.0, 1.0);
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            let a = w.next_arrival();
+            m.advance(0, a, &mut w, &oh, &mut tr).sojourn()
+        };
+        assert!((run(1) - 10.0).abs() < 1e-12, "{}", run(1));
+        assert!((run(2) - 2.0).abs() < 1e-12, "{}", run(2));
     }
 
     /// Pre-departure overhead does NOT delay subsequent tasks in FJ.

@@ -5,12 +5,19 @@
 //! FIFO server with service time `L(n)/l` (plus overhead).
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use crate::sim::{JobRecord, OverheadModel, Scenario, TraceEvent, TraceLog, Workload};
 
 /// Ideal partition over l servers; workload sampled as k task draws.
 pub struct IdealPartition {
     l: usize,
     k: usize,
+    /// Aggregate service capacity: `l` for homogeneous workers, Σ speeds
+    /// for a heterogeneous scenario. The ideal partitioner is assumed to
+    /// know the speeds and split the workload proportionally, so the job
+    /// service share is `L(n) / total_speed`. Redundancy is meaningless
+    /// under perfect equisized partitioning; `SimulationConfig::validate`
+    /// rejects `replicas > 1` for this model.
+    total_speed: f64,
     prev_departure: f64,
 }
 
@@ -19,7 +26,16 @@ impl IdealPartition {
     /// tasks on `l` servers.
     pub fn new(l: usize, k: usize) -> Self {
         assert!(l >= 1 && k >= 1);
-        Self { l, k, prev_departure: 0.0 }
+        Self { l, k, total_speed: l as f64, prev_departure: 0.0 }
+    }
+
+    /// Attach a heterogeneous-worker scenario (speeds only).
+    pub fn with_scenario(mut self, scenario: Option<Scenario>) -> Self {
+        if let Some(sc) = &scenario {
+            assert_eq!(sc.speeds().len(), self.l, "scenario arity");
+            self.total_speed = sc.total_speed();
+        }
+        self
     }
 }
 
@@ -47,7 +63,7 @@ impl Model for IdealPartition {
             max_overhead = max_overhead.max(o);
         }
         let start = arrival.max(self.prev_departure);
-        let share = workload_sum / self.l as f64;
+        let share = workload_sum / self.total_speed;
         let finish = start + share + max_overhead;
         let pd = overhead.pre_departure(self.l);
         let departure = finish + pd;
@@ -71,6 +87,7 @@ impl Model for IdealPartition {
             workload: workload_sum,
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
+            redundant_work: 0.0,
         }
     }
 

@@ -9,20 +9,32 @@
 //! `D(n) = max(A(n), D(n−1)) + Δ(n)`.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::sim::{JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog, Workload};
 
 /// Split-merge with l servers and k tasks per job.
 pub struct SplitMerge {
     k: usize,
     heap: ServerHeap,
     prev_departure: f64,
+    /// Heterogeneous-speed / redundancy scenario; `None` keeps the
+    /// homogeneous hot path bit-for-bit unchanged.
+    scenario: Option<Scenario>,
 }
 
 impl SplitMerge {
     /// New model with `l` servers, `k ≥ l` tasks per job.
     pub fn new(l: usize, k: usize) -> Self {
         assert!(l >= 1 && k >= l, "split-merge requires k >= l >= 1");
-        Self { k, heap: ServerHeap::new(l, 0.0), prev_departure: 0.0 }
+        Self { k, heap: ServerHeap::new(l, 0.0), prev_departure: 0.0, scenario: None }
+    }
+
+    /// Attach a heterogeneous-worker / redundancy scenario.
+    pub fn with_scenario(mut self, scenario: Option<Scenario>) -> Self {
+        if let Some(sc) = &scenario {
+            assert_eq!(sc.speeds().len(), self.heap.len(), "scenario arity");
+        }
+        self.scenario = scenario;
+        self
     }
 }
 
@@ -42,7 +54,23 @@ impl Model for SplitMerge {
 
         let mut workload_sum = 0.0;
         let mut overhead_sum = 0.0;
-        if trace.is_enabled() {
+        let mut redundant_sum = 0.0;
+        if let Some(sc) = &mut self.scenario {
+            for i in 0..self.k {
+                let out = sc.dispatch_task(
+                    &mut self.heap,
+                    start,
+                    workload,
+                    overhead,
+                    n as u32,
+                    i as u32,
+                    trace,
+                );
+                workload_sum += out.work;
+                overhead_sum += out.overhead;
+                redundant_sum += out.redundant_time;
+            }
+        } else if trace.is_enabled() {
             for i in 0..self.k {
                 let e = workload.next_execution();
                 let o = overhead.sample_task(workload.rng());
@@ -84,6 +112,7 @@ impl Model for SplitMerge {
             workload: workload_sum,
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
+            redundant_work: redundant_sum,
         }
     }
 
@@ -195,6 +224,55 @@ mod tests {
             (mean - expect).abs() / expect < 0.02,
             "E[Δ]={mean} vs Lemma 1 {expect}"
         );
+    }
+
+    /// A fast worker shortens the deterministic makespan: with speeds
+    /// (1, 3) the fast server clears three unit tasks while the slow one
+    /// serves one, so Δ = 1 instead of the homogeneous 2.
+    #[test]
+    fn heterogeneous_speeds_shorten_makespan() {
+        let mut m = SplitMerge::new(2, 4)
+            .with_scenario(Some(Scenario::new(vec![1.0, 3.0], 1)));
+        let mut w = det_workload(10.0, 1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let a = w.next_arrival();
+        let r = m.advance(0, a, &mut w, &oh, &mut tr);
+        assert!((r.sojourn() - 1.0).abs() < 1e-12, "{}", r.sojourn());
+    }
+
+    /// First-finish-wins redundancy cuts the exponential makespan:
+    /// l = k = 2, r = 2 serializes the two tasks but each takes
+    /// min(Exp, Exp) — E[Δ] = 1 versus E[max(Exp, Exp)] = 1.5 at r = 1.
+    #[test]
+    fn redundancy_beats_stragglers_for_exponential_tasks() {
+        let run_mean = |replicas: usize| {
+            let sc = Scenario::new(vec![1.0, 1.0], replicas);
+            let mut m = SplitMerge::new(2, 2).with_scenario(Some(sc));
+            let mut w = Workload::new(
+                Box::new(Deterministic::new(1000.0)),
+                Box::new(Exponential::new(1.0)),
+                13,
+            );
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            let n = 20_000;
+            let mut sum = 0.0;
+            let mut redundant = 0.0;
+            for i in 0..n {
+                let a = w.next_arrival();
+                let r = m.advance(i, a, &mut w, &oh, &mut tr);
+                sum += r.service_time();
+                redundant += r.redundant_work;
+            }
+            (sum / n as f64, redundant / n as f64)
+        };
+        let (m1, red1) = run_mean(1);
+        let (m2, red2) = run_mean(2);
+        assert!((m1 - 1.5).abs() < 0.03, "r=1 E[Δ]={m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "r=2 E[Δ]={m2}");
+        assert_eq!(red1, 0.0);
+        assert!(red2 > 0.5, "cancelled replicas must be accounted: {red2}");
     }
 
     /// Pre-departure overhead delays the next job (blocking).

@@ -2,7 +2,7 @@
 //! warmup + measured jobs, and gathers statistics.
 
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
-use super::{JobRecord, OverheadModel, TraceLog, Workload};
+use super::{JobRecord, OverheadModel, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
 use crate::stats::{QuantileSketch, Summary};
 
@@ -32,6 +32,9 @@ pub struct SimResult {
     pub sojourn_summary: Summary,
     /// Per-job total task overhead summary.
     pub overhead_summary: Summary,
+    /// Per-job cancelled-replica server time (all zeros unless a
+    /// redundancy scenario is active).
+    pub redundant_summary: Summary,
     /// Trace log (empty unless `trace`).
     pub trace: TraceLog,
     /// Wall-clock seconds spent simulating.
@@ -54,22 +57,28 @@ impl SimResult {
     }
 }
 
-fn build_model(cfg: &SimulationConfig, opts: &RunOptions) -> Box<dyn Model> {
-    match cfg.model {
-        ModelKind::SplitMerge => Box::new(SplitMerge::new(cfg.servers, cfg.tasks_per_job)),
+fn build_model(cfg: &SimulationConfig, opts: &RunOptions) -> Result<Box<dyn Model>, String> {
+    let scenario = Scenario::from_config(cfg)?;
+    Ok(match cfg.model {
+        ModelKind::SplitMerge => Box::new(
+            SplitMerge::new(cfg.servers, cfg.tasks_per_job).with_scenario(scenario),
+        ),
         ModelKind::ForkJoinSingleQueue => Box::new(
             ForkJoinSingleQueue::new(cfg.servers, cfg.tasks_per_job)
-                .with_in_order_departures(opts.in_order_departures),
+                .with_in_order_departures(opts.in_order_departures)
+                .with_scenario(scenario),
         ),
         ModelKind::ForkJoinPerServer => {
             assert_eq!(
                 cfg.tasks_per_job, cfg.servers,
                 "per-server fork-join requires k = l"
             );
-            Box::new(ForkJoinPerServer::new(cfg.servers))
+            Box::new(ForkJoinPerServer::new(cfg.servers).with_scenario(scenario))
         }
-        ModelKind::Ideal => Box::new(IdealPartition::new(cfg.servers, cfg.tasks_per_job)),
-    }
+        ModelKind::Ideal => Box::new(
+            IdealPartition::new(cfg.servers, cfg.tasks_per_job).with_scenario(scenario),
+        ),
+    })
 }
 
 /// Run one simulation to completion.
@@ -78,7 +87,7 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
     let t0 = std::time::Instant::now();
     let mut workload = Workload::from_config(cfg)?;
     let overhead = OverheadModel::from_option(cfg.overhead);
-    let mut model = build_model(cfg, &opts);
+    let mut model = build_model(cfg, &opts)?;
     let mut trace = if opts.trace { TraceLog::enabled() } else { TraceLog::disabled() };
 
     let total = cfg.warmup + cfg.jobs;
@@ -87,6 +96,7 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
     let mut waiting = QuantileSketch::with_capacity(cfg.jobs);
     let mut sojourn_summary = Summary::new();
     let mut overhead_summary = Summary::new();
+    let mut redundant_summary = Summary::new();
 
     for n in 0..total {
         let arrival = workload.next_arrival();
@@ -98,6 +108,7 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         waiting.push(rec.waiting());
         sojourn_summary.push(rec.sojourn());
         overhead_summary.push(rec.task_overhead + rec.pre_departure_overhead);
+        redundant_summary.push(rec.redundant_work);
         if opts.record_jobs {
             jobs.push(rec);
         }
@@ -110,6 +121,7 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         waiting,
         sojourn_summary,
         overhead_summary,
+        redundant_summary,
         trace,
         wall_seconds: t0.elapsed().as_secs_f64(),
     })
@@ -130,6 +142,8 @@ mod tests {
             warmup: 200,
             seed: 9,
             overhead: None,
+            workers: None,
+            redundancy: None,
         }
     }
 
@@ -176,6 +190,52 @@ mod tests {
         }
     }
 
+    /// A heterogeneous + redundant scenario runs end to end through the
+    /// public runner for every model that supports it.
+    #[test]
+    fn scenario_configs_run_end_to_end() {
+        for model in [ModelKind::SplitMerge, ModelKind::ForkJoinSingleQueue] {
+            let cfg = SimulationConfig {
+                model,
+                workers: Some(crate::config::WorkersConfig::Speeds(vec![
+                    0.5, 1.0, 1.5, 2.0,
+                ])),
+                redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+                jobs: 1500,
+                warmup: 150,
+                ..base_cfg()
+            };
+            let res = run(&cfg, RunOptions { record_jobs: true, ..Default::default() })
+                .unwrap();
+            assert_eq!(res.sojourn.len(), 1500, "{model}");
+            // Redundancy burns server time on cancelled replicas.
+            let redundant: f64 = res.jobs.iter().map(|j| j.redundant_work).sum();
+            assert!(redundant > 0.0, "{model}: no cancelled replicas recorded");
+            for j in &res.jobs {
+                assert!(j.sojourn() > 0.0 && j.departure >= j.arrival);
+            }
+        }
+    }
+
+    /// Scenario runs are deterministic in the seed, like the base model.
+    #[test]
+    fn scenario_deterministic_given_seed() {
+        let cfg = SimulationConfig {
+            workers: Some(crate::config::WorkersConfig::Distribution {
+                spec: "uniform:0.5:1.5".into(),
+                seed: 3,
+            }),
+            redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+            jobs: 1000,
+            warmup: 100,
+            ..base_cfg()
+        };
+        let mut a = run(&cfg, RunOptions::default()).unwrap();
+        let mut b = run(&cfg, RunOptions::default()).unwrap();
+        assert_eq!(a.sojourn_quantile(0.9), b.sojourn_quantile(0.9));
+        assert_eq!(a.sojourn_summary.mean(), b.sojourn_summary.mean());
+    }
+
     /// Overhead strictly increases sojourn times (coupling: same seed).
     #[test]
     fn overhead_increases_sojourn() {
@@ -203,6 +263,8 @@ mod tests {
             warmup: 5_000,
             seed: 17,
             overhead: None,
+            workers: None,
+            redundancy: None,
         };
         let mut res = run(&cfg, RunOptions::default()).unwrap();
         let expect = (100.0f64).ln() / (1.0 - 0.5);

@@ -1,0 +1,287 @@
+//! Heterogeneous-worker & redundant-task scenarios.
+//!
+//! Two orthogonal extensions of the paper's homogeneous models, following
+//! the heterogeneous/redundant-jobs lineage of barrier-mode parallel
+//! systems (Walker & Fidler) and HeMT-style public-cloud skew:
+//!
+//! * **worker speeds** — worker `s` serves a task of nominal size `e`
+//!   (plus its task-service overhead `o`) in `(e + o) / speed[s]`
+//!   seconds; the FIFO dispatch rule is unchanged (the earliest-*free*
+//!   server takes the head-of-line task, which is how a real scheduler
+//!   that does not know task sizes behaves under skew);
+//! * **redundancy** — every logical task is dispatched as `r` replicas on
+//!   the `r` earliest-free distinct servers, each with an independent
+//!   execution/overhead draw; the first replica to finish wins and the
+//!   rest are cancelled at that instant (first-finish-wins). A replica
+//!   whose server would only have started it after the winner finished
+//!   never runs and releases its reservation.
+//!
+//! The degenerate scenario (all speeds 1.0, r = 1) follows exactly the
+//! same arithmetic as the homogeneous models — `x / 1.0 == x` bit-for-bit
+//! — which `rust/tests/scenario_equivalence.rs` enforces.
+
+use super::{OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::config::SimulationConfig;
+
+/// Per-replica bookkeeping for one task dispatch.
+#[derive(Clone, Copy, Debug)]
+struct Replica {
+    t_free: f64,
+    server: u32,
+    start: f64,
+    finish: f64,
+    exec: f64,
+    overhead: f64,
+}
+
+/// Outcome of dispatching one logical task (its winning replica).
+#[derive(Clone, Copy, Debug)]
+pub struct TaskOutcome {
+    /// Earliest instant any replica of this task began service.
+    pub first_start: f64,
+    /// Winner finish time (= the cancellation instant for the losers).
+    pub finish: f64,
+    /// Winning replica's execution draw (the useful work).
+    pub work: f64,
+    /// Winning replica's task-service overhead draw.
+    pub overhead: f64,
+    /// Server time consumed by cancelled replicas (redundancy cost).
+    pub redundant_time: f64,
+}
+
+/// A resolved scenario: per-worker speeds plus the replication factor.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    speeds: Vec<f64>,
+    replicas: usize,
+    scratch: Vec<Replica>,
+}
+
+impl Scenario {
+    /// Build from explicit speeds and a replication factor.
+    pub fn new(speeds: Vec<f64>, replicas: usize) -> Self {
+        assert!(!speeds.is_empty(), "scenario needs at least one worker");
+        assert!(
+            speeds.iter().all(|&s| s > 0.0 && s.is_finite()),
+            "speeds must be positive and finite"
+        );
+        assert!(
+            (1..=speeds.len()).contains(&replicas),
+            "replicas must be in 1..=l"
+        );
+        Self { speeds, replicas, scratch: Vec::with_capacity(replicas) }
+    }
+
+    /// Resolve a config's scenario. Returns `Ok(None)` when no scenario
+    /// sections are configured, so models keep the homogeneous fast path.
+    pub fn from_config(cfg: &SimulationConfig) -> Result<Option<Self>, String> {
+        if cfg.workers.is_none() && cfg.replicas() == 1 {
+            return Ok(None);
+        }
+        let speeds = cfg.resolved_speeds()?;
+        let replicas = cfg.replicas();
+        if replicas > speeds.len() {
+            return Err(format!(
+                "redundancy.replicas ({replicas}) cannot exceed servers ({})",
+                speeds.len()
+            ));
+        }
+        Ok(Some(Self::new(speeds, replicas)))
+    }
+
+    /// Per-worker speed multipliers.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+
+    /// Speed of one worker.
+    #[inline]
+    pub fn speed(&self, server: u32) -> f64 {
+        self.speeds[server as usize]
+    }
+
+    /// Replication factor r.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Aggregate service capacity Σ speeds (the ideal-partition divisor).
+    pub fn total_speed(&self) -> f64 {
+        self.speeds.iter().sum()
+    }
+
+    /// Dispatch one logical task: reserve the `r` earliest-free servers,
+    /// draw one execution + overhead sample per replica, resolve
+    /// first-finish-wins, release every server at its post-cancellation
+    /// free time, and record trace events for replicas that ran.
+    ///
+    /// `floor` is the earliest permissible start (the job arrival in
+    /// fork-join; the start barrier in split-merge, where it is a no-op
+    /// because the heap is already reset to the barrier).
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task(
+        &mut self,
+        heap: &mut ServerHeap,
+        floor: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        job: u32,
+        task: u32,
+        trace: &mut TraceLog,
+    ) -> TaskOutcome {
+        let r = self.replicas.min(heap.len());
+        self.scratch.clear();
+        for _ in 0..r {
+            let (t_free, server) = heap.pop();
+            let exec = workload.next_execution();
+            let oh = overhead.sample_task(workload.rng());
+            let start = if floor > t_free { floor } else { t_free };
+            // Summed term by term so that speed 1.0 reproduces the
+            // homogeneous `start + e + o` bit-for-bit (same rounding).
+            let speed = self.speeds[server as usize];
+            let finish = start + exec / speed + oh / speed;
+            self.scratch.push(Replica { t_free, server, start, finish, exec, overhead: oh });
+        }
+
+        let mut win = 0usize;
+        for (i, rep) in self.scratch.iter().enumerate().skip(1) {
+            if rep.finish < self.scratch[win].finish {
+                win = i;
+            }
+        }
+        let t_win = self.scratch[win].finish;
+
+        let mut first_start = f64::INFINITY;
+        let mut redundant = 0.0;
+        for (i, rep) in self.scratch.iter().enumerate() {
+            let ran = i == win || rep.start < t_win;
+            let freed = if i == win {
+                rep.finish
+            } else if ran {
+                // Cancelled mid-run when the winner finished.
+                t_win
+            } else {
+                // Never started: the reservation is released unchanged.
+                rep.t_free
+            };
+            if ran {
+                if rep.start < first_start {
+                    first_start = rep.start;
+                }
+                if i != win {
+                    redundant += t_win - rep.start;
+                }
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server: rep.server,
+                        start: rep.start,
+                        end: freed,
+                    });
+                }
+            }
+            heap.push(freed, rep.server);
+        }
+
+        TaskOutcome {
+            first_start,
+            finish: t_win,
+            work: self.scratch[win].exec,
+            overhead: self.scratch[win].overhead,
+            redundant_time: redundant,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Deterministic;
+
+    fn det_workload(exec: f64) -> Workload {
+        Workload::new(
+            Box::new(Deterministic::new(100.0)),
+            Box::new(Deterministic::new(exec)),
+            1,
+        )
+    }
+
+    #[test]
+    fn speed_scales_service_time() {
+        // Two workers, speeds 1 and 2; FIFO dispatch alternates between
+        // them, and the fast worker finishes its task in half the time.
+        let mut sc = Scenario::new(vec![1.0, 2.0], 1);
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let a = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        let b = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 1, &mut tr);
+        let mut finishes = [a.finish, b.finish];
+        finishes.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(finishes, [0.5, 1.0]);
+    }
+
+    #[test]
+    fn replicas_first_finish_wins() {
+        // Speeds 4 and 1, r = 2: both replicas start at 0; the fast
+        // worker wins at 0.25 and the slow replica is cancelled then.
+        let mut sc = Scenario::new(vec![4.0, 1.0], 2);
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert_eq!(out.finish, 0.25);
+        assert_eq!(out.first_start, 0.0);
+        assert_eq!(out.redundant_time, 0.25);
+        // Both servers are free again at 0.25.
+        assert_eq!(heap.peek().0, 0.25);
+        assert_eq!(heap.max_time(), 0.25);
+        // Both replicas left trace events ending at the winner's finish.
+        assert_eq!(trace_len(&tr), 2);
+    }
+
+    fn trace_len(tr: &TraceLog) -> usize {
+        tr.events().len()
+    }
+
+    #[test]
+    fn unstarted_replica_releases_reservation() {
+        // Worker 0 free at 0 (speed 10), worker 1 free at 5: the winner
+        // finishes at 0.1, long before worker 1 could start, so worker 1
+        // keeps its original free time.
+        let mut sc = Scenario::new(vec![10.0, 1.0], 2);
+        let mut heap = ServerHeap::new(2, 0.0);
+        // Occupy worker 1 until t = 5.
+        let (t0, s0) = heap.pop();
+        let (t1, s1) = heap.pop();
+        assert_eq!((t0, t1), (0.0, 0.0));
+        let (slow, fast) = if s0 == 1 { (s0, s1) } else { (s1, s0) };
+        heap.push(5.0, slow);
+        heap.push(0.0, fast);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert!((out.finish - 0.1).abs() < 1e-12);
+        assert_eq!(out.redundant_time, 0.0);
+        // Worker 1's reservation was released at its original free time.
+        assert_eq!(heap.peek().0, 0.1);
+        assert_eq!(heap.max_time(), 5.0);
+    }
+
+    #[test]
+    fn degenerate_config_resolves_to_none() {
+        let cfg = SimulationConfig::default();
+        assert!(Scenario::from_config(&cfg).unwrap().is_none());
+        let cfg = SimulationConfig {
+            redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+            ..SimulationConfig::default()
+        };
+        let sc = Scenario::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(sc.replicas(), 2);
+        assert!(sc.speeds().iter().all(|&s| s == 1.0));
+    }
+}

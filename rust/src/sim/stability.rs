@@ -188,6 +188,8 @@ mod tests {
             warmup: 0,
             seed: 8,
             overhead: None,
+            workers: None,
+            redundancy: None,
         };
         assert_eq!(detect(&mk(50), 1.05).unwrap(), Stability::Unstable);
         assert_eq!(detect(&mk(400), 1.05).unwrap(), Stability::Stable);

@@ -54,6 +54,61 @@ fn simulate_from_config_file() {
 }
 
 #[test]
+fn simulate_heterogeneous_with_redundancy() {
+    assert_eq!(
+        run(&[
+            "simulate", "--model", "fj", "--servers", "4", "--k", "8", "--lambda", "0.4",
+            "--jobs", "1000", "--warmup", "100", "--speeds", "1.5,1.5,0.5,0.5",
+            "--redundancy", "2",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn simulate_scenario_config_file() {
+    let dir = std::env::temp_dir().join(format!("tt-cli-hetero-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("hetero.toml");
+    std::fs::write(
+        &path,
+        "name = \"hetero\"\n[simulation]\nmodel = \"fj\"\nservers = 4\n\
+         tasks_per_job = 8\ninterarrival = \"exp:0.4\"\nexecution = \"exp:2.0\"\n\
+         jobs = 500\nwarmup = 50\n\
+         [workers]\nspeeds = [1.5, 1.5, 0.5, 0.5]\n\
+         [redundancy]\nreplicas = 2\n",
+    )
+    .unwrap();
+    assert_eq!(run(&["simulate", "--config", path.to_str().unwrap()]), 0);
+}
+
+#[test]
+fn simulate_rejects_contradictory_speed_flags() {
+    let args = Args::parse(
+        [
+            "simulate", "--servers", "2", "--k", "4", "--speeds", "1.0,1.0",
+            "--speed-dist", "uniform:0.5:1.5",
+        ]
+        .iter()
+        .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert!(dispatch(&args).is_err());
+}
+
+#[test]
+fn advisor_simulated_for_skewed_cluster() {
+    assert_eq!(
+        run(&[
+            "advisor", "--servers", "4", "--lambda", "0.4", "--workload", "4",
+            "--epsilon", "0.05", "--jobs", "1500", "--kappa-max", "8",
+            "--speed-dist", "uniform:0.5:1.5", "--redundancy", "2",
+        ]),
+        0
+    );
+}
+
+#[test]
 fn emulate_quick() {
     assert_eq!(
         run(&[

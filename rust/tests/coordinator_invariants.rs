@@ -26,6 +26,8 @@ fn random_config(g: &mut tiny_tasks::util::quickcheck::Gen, model: ModelKind) ->
         } else {
             None
         },
+        workers: None,
+        redundancy: None,
     }
 }
 
@@ -173,6 +175,8 @@ fn prop_work_conservation_under_saturation() {
                 warmup: 0,
                 seed,
                 overhead: None,
+                workers: None,
+                redundancy: None,
             };
             let res = sim::run(
                 &cfg,

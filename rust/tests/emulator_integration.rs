@@ -35,6 +35,8 @@ fn sim_cfg_from(e: &EmulatorConfig, jobs: usize) -> SimulationConfig {
         warmup: jobs / 10,
         seed: 99,
         overhead: None,
+        workers: None,
+        redundancy: None,
     }
 }
 

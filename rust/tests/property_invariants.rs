@@ -1,0 +1,180 @@
+//! Property tests (mini-quickcheck) for the simulator's two seed-bearing
+//! substrates: the server min-heap's ordering contract and the RNG
+//! seed-spawning used by the parallel sweep executor.
+
+use tiny_tasks::rng::{spawn_seeds, Pcg64, Rng};
+use tiny_tasks::sim::ServerHeap;
+use tiny_tasks::util::quickcheck::{check, Config};
+
+/// Heap pop order is nondecreasing in time, regardless of the assign /
+/// pop / push interleaving that produced the heap.
+#[test]
+fn prop_heap_pop_order_nondecreasing() {
+    check(
+        Config { cases: 96, seed: 0x48EA9 },
+        |g| {
+            let l = g.usize_range(1, 33);
+            let ops = g.usize_range(0, 200);
+            let seed = g.u64_range(0, u64::MAX - 1);
+            (l, ops, seed)
+        },
+        |&(l, ops, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mut heap = ServerHeap::new(l, 0.0);
+            // Random mix of root-assigns and pop/push pairs.
+            for _ in 0..ops {
+                if rng.next_below(2) == 0 {
+                    let (t, _) = heap.peek();
+                    heap.assign(t + rng.next_f64() * 3.0);
+                } else {
+                    let r = 1 + rng.next_below((l as u64).min(4)) as usize;
+                    let mut picks = Vec::new();
+                    for _ in 0..r {
+                        picks.push(heap.pop());
+                    }
+                    for (t, id) in picks {
+                        heap.push(t + rng.next_f64(), id);
+                    }
+                }
+            }
+            // Drain by popping: times must come out nondecreasing and
+            // every server id exactly once.
+            let mut prev = f64::NEG_INFINITY;
+            let mut ids = std::collections::BTreeSet::new();
+            for _ in 0..l {
+                let (t, id) = heap.pop();
+                if t < prev {
+                    return Err(format!("pop order decreased: {t} after {prev}"));
+                }
+                prev = t;
+                ids.insert(id);
+            }
+            if ids.len() != l {
+                return Err(format!("{} distinct ids for {l} servers", ids.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Peek/assign agrees with a naive min-scan under random durations
+/// (the heap is the simulator's innermost loop — this is the oracle).
+#[test]
+fn prop_heap_matches_naive_min_scan() {
+    check(
+        Config { cases: 48, seed: 0x9EA9 },
+        |g| {
+            let l = g.usize_range(1, 20);
+            let steps = g.usize_range(1, 300);
+            let seed = g.u64_range(0, u64::MAX - 1);
+            (l, steps, seed)
+        },
+        |&(l, steps, seed)| {
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mut heap = ServerHeap::new(l, 0.0);
+            let mut naive = vec![0.0f64; l];
+            for _ in 0..steps {
+                let dur = rng.next_f64() * 2.0;
+                let (t_heap, _) = heap.peek();
+                let &t_naive = naive
+                    .iter()
+                    .min_by(|a, b| a.partial_cmp(b).unwrap())
+                    .unwrap();
+                if t_heap != t_naive {
+                    return Err(format!("root {t_heap} != naive min {t_naive}"));
+                }
+                let idx = naive
+                    .iter()
+                    .position(|&t| t == t_naive)
+                    .unwrap();
+                heap.assign(t_heap + dur);
+                naive[idx] = t_naive + dur;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `spawn_seeds`: distinct seeds for any (master, count), prefix
+/// stability (the first n seeds do not depend on the requested count),
+/// and distinct masters give distinct seed sets.
+#[test]
+fn prop_spawn_seeds_distinct_and_prefix_stable() {
+    check(
+        Config { cases: 64, seed: 0x5EED5 },
+        |g| {
+            let master = g.u64_range(0, u64::MAX - 1);
+            let count = g.usize_range(1, 257);
+            (master, count)
+        },
+        |&(master, count)| {
+            let seeds = spawn_seeds(master, count);
+            if seeds.len() != count {
+                return Err("wrong count".into());
+            }
+            let set: std::collections::BTreeSet<u64> = seeds.iter().copied().collect();
+            if set.len() != count {
+                return Err(format!("collision among {count} seeds"));
+            }
+            // Prefix stability: adding points to a sweep must not reseed
+            // the existing points.
+            let longer = spawn_seeds(master, count + 8);
+            if longer[..count] != seeds[..] {
+                return Err("prefix not stable under larger count".into());
+            }
+            let other = spawn_seeds(master.wrapping_add(1), count);
+            if other == seeds {
+                return Err("adjacent masters produced identical seeds".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Stream independence: the PCG64 streams spawned from adjacent child
+/// seeds are decorrelated — their outputs differ immediately and their
+/// uniform means stay near 1/2 even when XORed pairwise (a cheap
+/// cross-correlation proxy).
+#[test]
+fn prop_spawned_streams_independent() {
+    check(
+        Config { cases: 24, seed: 0x17EA8 },
+        |g| g.u64_range(0, u64::MAX - 1),
+        |&master| {
+            let seeds = spawn_seeds(master, 2);
+            let mut a = Pcg64::seed_from_u64(seeds[0]);
+            let mut b = Pcg64::seed_from_u64(seeds[1]);
+            let n = 4_096;
+            let mut equal = 0usize;
+            let mut xor_bits = 0u32;
+            let mut sum_a = 0.0;
+            let mut sum_b = 0.0;
+            for _ in 0..n {
+                let x = a.next_u64();
+                let y = b.next_u64();
+                if x == y {
+                    equal += 1;
+                }
+                xor_bits += (x ^ y).count_ones();
+                sum_a += (x >> 11) as f64 / (1u64 << 53) as f64;
+                sum_b += (y >> 11) as f64 / (1u64 << 53) as f64;
+            }
+            if equal > 0 {
+                return Err(format!("{equal} identical outputs in lockstep"));
+            }
+            // XOR of independent uniform bit streams is uniform: expect
+            // ~32 set bits per word, far from 0 (identical) or 64.
+            let mean_bits = xor_bits as f64 / n as f64;
+            if !(28.0..36.0).contains(&mean_bits) {
+                return Err(format!("xor bit density {mean_bits} suggests correlation"));
+            }
+            for (tag, s) in [("a", sum_a), ("b", sum_b)] {
+                let mean = s / n as f64;
+                if (mean - 0.5).abs() > 0.03 {
+                    return Err(format!("stream {tag} mean {mean} off 1/2"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,128 @@
+//! Degenerate-scenario equivalence regressions: the heterogeneous /
+//! redundant machinery must collapse *exactly* onto the homogeneous
+//! models when its knobs are neutral, and the devirtualized exponential
+//! fast path must be a pure refactor.
+//!
+//! These are bit-for-bit (`assert_eq!` on f64) — not tolerance — tests:
+//! the scenario dispatcher divides by speed 1.0 and takes a 1-replica
+//! minimum, both of which are exact identities in IEEE-754.
+
+use tiny_tasks::config::{
+    ArrivalConfig, ModelKind, RedundancyConfig, ServiceConfig, SimulationConfig, WorkersConfig,
+};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs: 4_000,
+        warmup: 400,
+        seed: 2024,
+        overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+    }
+}
+
+fn quantiles(cfg: &SimulationConfig) -> (Vec<f64>, f64, f64) {
+    let mut res = sim::run(cfg, RunOptions::default()).unwrap();
+    let qs = [0.1, 0.5, 0.9, 0.99]
+        .iter()
+        .map(|&q| res.sojourn_quantile(q))
+        .collect();
+    (qs, res.sojourn_summary.mean(), res.waiting_quantile(0.9))
+}
+
+/// Speeds all 1.0 and r = 1 reproduce the homogeneous sojourn quantiles
+/// exactly, for every model.
+#[test]
+fn unit_speeds_r1_is_bitwise_homogeneous() {
+    for (model, l, k) in [
+        (ModelKind::SplitMerge, 5, 25),
+        (ModelKind::ForkJoinSingleQueue, 5, 25),
+        (ModelKind::ForkJoinPerServer, 5, 5),
+        (ModelKind::Ideal, 5, 25),
+    ] {
+        let homogeneous = base(model, l, k);
+        let degenerate = SimulationConfig {
+            workers: Some(WorkersConfig::Speeds(vec![1.0; l])),
+            redundancy: Some(RedundancyConfig { replicas: 1 }),
+            ..base(model, l, k)
+        };
+        let (qa, ma, wa) = quantiles(&homogeneous);
+        let (qb, mb, wb) = quantiles(&degenerate);
+        assert_eq!(qa, qb, "{model}: sojourn quantiles diverge");
+        assert_eq!(ma, mb, "{model}: sojourn mean diverges");
+        assert_eq!(wa, wb, "{model}: waiting quantile diverges");
+    }
+}
+
+/// The same holds without overhead (the branch-light hot path).
+#[test]
+fn unit_speeds_r1_is_bitwise_homogeneous_no_overhead() {
+    for model in [ModelKind::SplitMerge, ModelKind::ForkJoinSingleQueue] {
+        let mut homogeneous = base(model, 4, 16);
+        homogeneous.overhead = None;
+        let degenerate = SimulationConfig {
+            workers: Some(WorkersConfig::Speeds(vec![1.0; 4])),
+            redundancy: Some(RedundancyConfig { replicas: 1 }),
+            ..homogeneous.clone()
+        };
+        let (qa, ma, _) = quantiles(&homogeneous);
+        let (qb, mb, _) = quantiles(&degenerate);
+        assert_eq!(qa, qb, "{model}");
+        assert_eq!(ma, mb, "{model}");
+    }
+}
+
+/// `TT_NO_FAST_EXP=1` (dyn-dispatch sampling) matches the devirtualized
+/// exponential fast path bit-for-bit: same RNG stream, same formula —
+/// both for the homogeneous path and for a skewed + redundant scenario
+/// (which samples through the same `Workload`).
+///
+/// Both comparisons live in ONE test so the env-var set/remove cannot
+/// interleave with itself across test threads and silently compare
+/// slow-vs-slow. The env var is read at `Workload` construction; other
+/// tests in this binary that race with the flipped var would only take
+/// the slow path, whose equivalence is exactly what is proven here.
+#[test]
+fn no_fast_exp_env_matches_fast_path_bitwise() {
+    let homogeneous = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let scenario = SimulationConfig {
+        workers: Some(WorkersConfig::Speeds(vec![1.5, 1.5, 1.0, 0.5, 0.5])),
+        redundancy: Some(RedundancyConfig { replicas: 2 }),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    assert!(std::env::var_os("TT_NO_FAST_EXP").is_none(), "leaked env var");
+    let (qa, ma, wa) = quantiles(&homogeneous);
+    let (sa, sma, _) = quantiles(&scenario);
+    std::env::set_var("TT_NO_FAST_EXP", "1");
+    let (qb, mb, wb) = quantiles(&homogeneous);
+    let (sb, smb, _) = quantiles(&scenario);
+    std::env::remove_var("TT_NO_FAST_EXP");
+    assert_eq!(qa, qb, "sojourn quantiles diverge without the fast path");
+    assert_eq!(ma, mb);
+    assert_eq!(wa, wb);
+    assert_eq!(sa, sb, "scenario path diverges without the fast path");
+    assert_eq!(sma, smb);
+}
+
+/// Non-degenerate scenarios genuinely change the law (guards against the
+/// scenario plumbing silently not reaching the models).
+#[test]
+fn skewed_scenario_changes_the_distribution() {
+    let homogeneous = base(ModelKind::ForkJoinSingleQueue, 4, 16);
+    let skewed = SimulationConfig {
+        workers: Some(WorkersConfig::Speeds(vec![1.9, 1.9, 0.1, 0.1])),
+        ..homogeneous.clone()
+    };
+    let (qa, _, _) = quantiles(&homogeneous);
+    let (qb, _, _) = quantiles(&skewed);
+    assert_ne!(qa, qb, "skewed speeds must alter sojourn quantiles");
+    // Strong skew at fixed capacity hurts the tail.
+    assert!(qb[3] > qa[3], "p99 should degrade under skew: {} vs {}", qb[3], qa[3]);
+}

@@ -18,6 +18,8 @@ fn cfg(model: ModelKind, l: usize, k: usize, lambda: f64, mu: f64, jobs: usize) 
         warmup: jobs / 10,
         seed: 1234,
         overhead: None,
+        workers: None,
+        redundancy: None,
     }
 }
 

@@ -1,0 +1,234 @@
+//! Minimal offline implementation of the `anyhow` error-handling API —
+//! the surface tiny-tasks uses: [`Error`], [`Result`], [`Context`], and
+//! the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! `Error` is an erased boxed error plus a stack of context messages.
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on any
+//! error type) possible.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An erased error: the original cause plus outer context messages,
+/// most recent first.
+pub struct Error {
+    context: Vec<String>,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// Plain-message error used by [`Error::msg`] and the macros.
+#[derive(Debug)]
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { context: Vec::new(), source: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Create an error from any standard error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Self { context: Vec::new(), source: Box::new(error) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.insert(0, context.to_string());
+        self
+    }
+
+    /// The root cause (the innermost wrapped error).
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cause: &(dyn StdError + 'static) = self.source.as_ref();
+        while let Some(next) = cause.source() {
+            cause = next;
+        }
+        cause
+    }
+
+    /// Iterate over the full message chain, outermost first.
+    fn chain_messages(&self) -> Vec<String> {
+        let mut msgs: Vec<String> = self.context.clone();
+        msgs.push(self.source.to_string());
+        let mut cause: &(dyn StdError + 'static) = self.source.as_ref();
+        while let Some(next) = cause.source() {
+            msgs.push(next.to_string());
+            cause = next;
+        }
+        msgs
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_messages();
+        if f.alternate() {
+            // `{:#}` prints the whole chain, outermost first.
+            f.write_str(&msgs.join(": "))
+        } else {
+            f.write_str(&msgs[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msgs = self.chain_messages();
+        write!(f, "{}", msgs[0])?;
+        if msgs.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &msgs[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Self::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.context(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let res: std::result::Result<(), std::io::Error> = Err(io_err());
+        let err = res.with_context(|| "reading config").unwrap_err();
+        let err = Err::<(), Error>(err).context("loading experiment").unwrap_err();
+        assert_eq!(err.to_string(), "loading experiment");
+        let full = format!("{err:#}");
+        assert_eq!(full, "loading experiment: reading config: missing file");
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("empty csv").unwrap_err();
+        assert_eq!(err.to_string(), "empty csv");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("bad k = {}", 7);
+        assert_eq!(e.to_string(), "bad k = 7");
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(3).is_err());
+        assert!(f(11).is_err());
+    }
+}

@@ -1,0 +1,166 @@
+//! Stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! This build environment does not ship the native XLA library, so every
+//! entry point reports the backend as unavailable. The tiny-tasks bounds
+//! engine detects this at `PjRtClient::cpu()` / artifact-load time and
+//! falls back to the pure-Rust `analysis` implementation (see
+//! `rust/src/runtime/engine.rs::BoundsEngine::auto`). Replacing this stub
+//! with the real bindings re-enables the AOT artifact hot path without
+//! any change to the tiny-tasks sources.
+
+use std::fmt;
+
+/// Error raised by every stubbed entry point.
+#[derive(Debug)]
+pub struct Error {
+    what: &'static str,
+}
+
+impl Error {
+    fn unavailable(what: &'static str) -> Self {
+        Self { what }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "xla backend unavailable in this build ({}): native xla_extension not linked",
+            self.what
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// CPU client — always unavailable in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation — unreachable (no client can exist).
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute — unreachable (no executable can exist).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy back to host — unreachable.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// HLO module proto handle (stub: parsing always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    /// Parse an HLO-text file — always unavailable in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    /// Wrap a parsed proto (pure constructor; kept infallible like the
+    /// real bindings).
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self(())
+    }
+}
+
+/// Host literal (stub: carries the f64 payload so pure host-side
+/// construction keeps working).
+pub struct Literal {
+    data: Vec<f64>,
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1(data: &[f64]) -> Self {
+        Self { data: data.to_vec() }
+    }
+
+    /// Reshape — shape-compatible reshapes succeed host-side.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::unavailable("Literal::reshape"));
+        }
+        Ok(Literal { data: self.data.clone() })
+    }
+
+    /// Unwrap a 1-tuple — unreachable (device results never exist).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a typed vector — unreachable for device results.
+    pub fn to_vec<T: FromF64>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+}
+
+/// Conversion helper for [`Literal::to_vec`].
+pub trait FromF64 {
+    /// Convert from the stored f64 payload.
+    fn from_f64(x: f64) -> Self;
+}
+
+impl FromF64 for f64 {
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+}
+
+impl FromF64 for f32 {
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_host_side_ops() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(l.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}
