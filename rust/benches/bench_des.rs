@@ -6,7 +6,8 @@
 //! `cargo bench --bench bench_des`
 
 use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
-use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::dist::Exponential;
+use tiny_tasks::sim::{self, Calendar, Discipline, OverheadModel, RunOptions, TraceLog, Workload};
 use tiny_tasks::util::bench::Bencher;
 
 fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize) -> SimulationConfig {
@@ -57,6 +58,38 @@ fn main() {
         println!(
             "    -> {:.1} M tasks/s",
             (200 * 400) as f64 / r.mean.as_secs_f64() / 1e6
+        );
+    }
+    // Streaming-stats mode: quantiles via P², no sample storage.
+    {
+        let c = cfg(ModelKind::ForkJoinSingleQueue, 50, 400, 200);
+        let r = b.bench("sqfj_l50_k400_streaming", || {
+            sim::run(&c, RunOptions { streaming: true, ..Default::default() })
+                .unwrap()
+                .sojourn_summary
+                .count()
+        });
+        println!(
+            "    -> {:.1} M tasks/s",
+            (200 * 400) as f64 / r.mean.as_secs_f64() / 1e6
+        );
+    }
+    // Event-calendar engine, both disciplines (the O(events·log l) path).
+    for (name, disc, l, k, jobs) in [
+        ("cal_sm_l50_k400", Discipline::SplitMerge, 50usize, 400u32, 200usize),
+        ("cal_sqfj_l50_k400", Discipline::SingleQueueForkJoin, 50, 400, 200),
+    ] {
+        let mut cal = Calendar::new(disc, l, vec![k]);
+        let oh = OverheadModel::none();
+        let mu = k as f64 / l as f64;
+        let r = b.bench(name, || {
+            let mut w = Workload::new(Exponential::new(0.5).into(), Exponential::new(mu).into(), 1);
+            let mut tr = TraceLog::disabled();
+            cal.run(jobs, &mut w, &oh, &mut tr).len()
+        });
+        println!(
+            "    -> {:.1} M tasks/s",
+            (jobs * k as usize) as f64 / r.mean.as_secs_f64() / 1e6
         );
     }
     b.finish();

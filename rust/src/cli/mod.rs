@@ -112,6 +112,10 @@ COMMANDS:
                   --overhead [--c-task-ts S --mu-task-ts R --c-job-pd S --c-task-pd S]
                   scenario: --speeds 1.0,0.5,.. | --speed-dist SPEC [--speed-seed S]
                   --redundancy R   (r replicas per task, first-finish-wins)
+                  --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
+    bench       Run the deterministic perf suite and write BENCH.json
+                  [--out FILE] [--fast] [--seed S]
+                  jobs/sec + tasks/sec per model x k, both DES engines
     emulate     Run the sparklite cluster emulator
                   --executors L --k K --mode sm|fj --jobs N
                   --time-scale S --inject-overhead

@@ -98,6 +98,9 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     };
     let opts = RunOptions {
         in_order_departures: args.get_bool("in-order"),
+        // O(1)-memory mode for huge --jobs: P² quantiles on the default
+        // grid (covers every quantile printed below).
+        streaming: args.get_bool("streaming"),
         ..Default::default()
     };
     let mut res = sim::run(&cfg, opts).map_err(e)?;
@@ -391,6 +394,224 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
             None => println!("{k:>8} {:>14}", "unstable"),
         }
     }
+    Ok(0)
+}
+
+/// One measured row of the `bench` suite (serialized into BENCH.json).
+struct BenchRow {
+    name: String,
+    engine: &'static str,
+    model: String,
+    servers: usize,
+    k: usize,
+    jobs_per_iter: usize,
+    iters: u64,
+    mean_seconds: f64,
+    jobs_per_sec: f64,
+    tasks_per_sec: f64,
+}
+
+impl BenchRow {
+    fn new(
+        name: &str,
+        engine: &'static str,
+        model: &str,
+        servers: usize,
+        k: usize,
+        jobs_per_iter: usize,
+        result: &crate::util::bench::BenchResult,
+    ) -> Self {
+        let mean_seconds = result.mean.as_secs_f64().max(1e-12);
+        Self {
+            name: name.to_string(),
+            engine,
+            model: model.to_string(),
+            servers,
+            k,
+            jobs_per_iter,
+            iters: result.iters,
+            mean_seconds,
+            jobs_per_sec: jobs_per_iter as f64 / mean_seconds,
+            tasks_per_sec: (jobs_per_iter * k) as f64 / mean_seconds,
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize the suite to the BENCH.json schema (documented in the
+/// README's Performance section). Hand-rolled: the offline registry has
+/// no serde.
+fn bench_json(fast: bool, seed: u64, rows: &[BenchRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema_version\": 1,\n");
+    s.push_str(&format!("  \"fast\": {fast},\n"));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str("  \"entries\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"engine\": \"{}\", \"model\": \"{}\", \
+             \"servers\": {}, \"k\": {}, \"jobs_per_iter\": {}, \"iters\": {}, \
+             \"mean_seconds\": {}, \"jobs_per_sec\": {}, \"tasks_per_sec\": {}}}{}\n",
+            json_escape(&r.name),
+            r.engine,
+            json_escape(&r.model),
+            r.servers,
+            r.k,
+            r.jobs_per_iter,
+            r.iters,
+            r.mean_seconds,
+            r.jobs_per_sec,
+            r.tasks_per_sec,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn bench_sim_cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: crate::config::ArrivalConfig { interarrival: "exp:0.5".into() },
+        service: crate::config::ServiceConfig {
+            execution: format!("exp:{}", k as f64 / l as f64),
+        },
+        jobs,
+        warmup: 0,
+        seed,
+        overhead: None,
+        workers: None,
+        redundancy: None,
+    }
+}
+
+/// `tiny-tasks bench` — run the deterministic perf suite (jobs/sec and
+/// tasks/sec per model × k, both DES engines) and write BENCH.json, the
+/// repo's perf-trajectory artifact (every PR gets a comparable number).
+pub fn cmd_bench(args: &Args) -> Result<i32> {
+    use crate::dist::Exponential;
+    use crate::sim::{Calendar, Discipline, OverheadModel, TraceLog, Workload};
+    use crate::util::bench::Bencher;
+    use std::time::Duration;
+
+    let out_path = PathBuf::from(args.get_or("out", "BENCH.json"));
+    let fast = args.get_bool("fast");
+    let seed = args.get_u64("seed", 1).map_err(e)?;
+    let mut bencher = if fast {
+        // Smoke budgets for CI: enough iterations for a stable order of
+        // magnitude, small enough to keep the job cheap.
+        Bencher::new(Duration::from_millis(30), Duration::from_millis(120))
+    } else {
+        Bencher::default()
+    };
+    let mut rows: Vec<BenchRow> = Vec::new();
+
+    // Recursion engines: the four models on the Fig.-8 sweep shapes.
+    let suite: &[(&str, ModelKind, usize, usize, usize)] = &[
+        ("sim/sm/l50/k400", ModelKind::SplitMerge, 50, 400, 200),
+        ("sim/fj/l50/k400", ModelKind::ForkJoinSingleQueue, 50, 400, 200),
+        ("sim/fj/l50/k2500", ModelKind::ForkJoinSingleQueue, 50, 2500, 40),
+        ("sim/fjps/l50", ModelKind::ForkJoinPerServer, 50, 50, 2000),
+        ("sim/ideal/l50/k400", ModelKind::Ideal, 50, 400, 500),
+    ];
+    for &(name, model, l, k, jobs) in suite {
+        let cfg = bench_sim_cfg(model, l, k, jobs, seed);
+        let r = bencher.bench(name, || {
+            sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        rows.push(BenchRow::new(name, "recursion", &model.to_string(), l, k, jobs, r));
+    }
+
+    // Variants on the fork-join shape: overhead model, heterogeneous +
+    // redundant scenario, and the O(1)-memory streaming-stats mode.
+    {
+        let (l, k, jobs) = (50usize, 400usize, 200usize);
+        let cfg = SimulationConfig {
+            overhead: Some(OverheadConfig::paper()),
+            ..bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed)
+        };
+        let name = "sim/fj/l50/k400/overhead";
+        let r = bencher.bench(name, || {
+            sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        rows.push(BenchRow::new(name, "recursion", "fj+overhead", l, k, jobs, r));
+
+        let mut speeds = vec![1.5; l / 2];
+        speeds.extend(vec![0.5; l - l / 2]);
+        let cfg = SimulationConfig {
+            workers: Some(WorkersConfig::Speeds(speeds)),
+            redundancy: Some(RedundancyConfig { replicas: 2 }),
+            ..bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed)
+        };
+        let name = "sim/fj/l50/k400/scenario";
+        let r = bencher.bench(name, || {
+            sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        rows.push(BenchRow::new(name, "recursion", "fj+scenario", l, k, jobs, r));
+
+        let cfg = bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed);
+        let name = "sim/fj/l50/k400/streaming";
+        let r = bencher.bench(name, || {
+            sim::run(&cfg, RunOptions { streaming: true, ..Default::default() })
+                .unwrap()
+                .sojourn_summary
+                .count()
+        });
+        rows.push(BenchRow::new(name, "recursion", "fj+streaming", l, k, jobs, r));
+    }
+
+    // Event-calendar engine, both disciplines (cross-validation path).
+    for &(name, disc, tag, l, k, jobs) in &[
+        ("calendar/sm/l50/k400", Discipline::SplitMerge, "sm", 50usize, 400usize, 200usize),
+        ("calendar/fj/l50/k400", Discipline::SingleQueueForkJoin, "fj", 50, 400, 200),
+    ] {
+        let mut cal = Calendar::new(disc, l, vec![k as u32]);
+        let oh = OverheadModel::none();
+        let mu = k as f64 / l as f64;
+        let r = bencher.bench(name, || {
+            let mut w = Workload::new(
+                Exponential::new(0.5).into(),
+                Exponential::new(mu).into(),
+                seed,
+            );
+            let mut tr = TraceLog::disabled();
+            cal.run(jobs, &mut w, &oh, &mut tr).len()
+        });
+        rows.push(BenchRow::new(name, "calendar", tag, l, k, jobs, r));
+    }
+
+    // Headline: the 500k-job single-queue fork-join run through the
+    // calendar engine — the acceptance workload for the O(events·log l)
+    // overhaul (the pre-rewrite engine was O(jobs²) here).
+    {
+        let (l, k) = (10usize, 20usize);
+        let jobs = if fast { 20_000 } else { 500_000 };
+        let name = "calendar/fj/l10/k20/headline";
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, l, vec![k as u32]);
+        let oh = OverheadModel::none();
+        let mu = k as f64 / l as f64;
+        let r = bencher.bench(name, || {
+            let mut w = Workload::new(
+                Exponential::new(0.5).into(),
+                Exponential::new(mu).into(),
+                seed,
+            );
+            let mut tr = TraceLog::disabled();
+            cal.run(jobs, &mut w, &oh, &mut tr).len()
+        });
+        rows.push(BenchRow::new(name, "calendar", "fj", l, k, jobs, r));
+    }
+
+    bencher.finish();
+    let json = bench_json(fast, seed, &rows);
+    std::fs::write(&out_path, json)?;
+    println!("wrote {}", out_path.display());
     Ok(0)
 }
 

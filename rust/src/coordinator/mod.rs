@@ -31,6 +31,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
             println!("wrote {}", path.display());
             Ok(0)
         }
+        "bench" => commands::cmd_bench(args),
         "calibrate" => commands::cmd_calibrate(args),
         "advisor" => commands::cmd_advisor(args),
         "selfcheck" => commands::cmd_selfcheck(args),

@@ -33,6 +33,18 @@ pub struct SweepOutcome {
     pub jobs_per_sec: f64,
 }
 
+/// Sweep-wide options: the quantile to extract and the runner's memory
+/// mode.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepOptions {
+    /// Sojourn quantile extracted per point.
+    pub q: f64,
+    /// O(1)-memory mode: each point estimates its quantile with the P²
+    /// bank instead of storing every sojourn sample — million-job sweep
+    /// points stop costing O(jobs) memory each.
+    pub streaming: bool,
+}
+
 /// Run every point at quantile `q`, in parallel, reseeding each point
 /// from `master_seed` so sweeps are reproducible regardless of pool size.
 pub fn run_sweep(
@@ -41,12 +53,28 @@ pub fn run_sweep(
     q: f64,
     master_seed: u64,
 ) -> Result<Vec<SweepOutcome>, String> {
+    run_sweep_with(pool, points, SweepOptions { q, streaming: false }, master_seed)
+}
+
+/// [`run_sweep`] with explicit [`SweepOptions`].
+pub fn run_sweep_with(
+    pool: &ThreadPool,
+    points: Vec<SweepPoint>,
+    opts: SweepOptions,
+    master_seed: u64,
+) -> Result<Vec<SweepOutcome>, String> {
     let seeds = spawn_seeds(master_seed, points.len());
     let tagged: Vec<(SweepPoint, u64)> = points.into_iter().zip(seeds).collect();
+    let run_opts = RunOptions {
+        streaming: opts.streaming,
+        streaming_q: Some(opts.q),
+        ..Default::default()
+    };
+    let q = opts.q;
     let outcomes = pool.map(tagged, move |(point, seed)| {
         let mut cfg = point.config.clone();
         cfg.seed = seed;
-        let res = sim::run(&cfg, RunOptions::default())?;
+        let res = sim::run(&cfg, run_opts)?;
         let mut res: SimResult = res;
         Ok::<SweepOutcome, String>(SweepOutcome {
             label: point.label,
@@ -122,6 +150,35 @@ mod tests {
             assert_eq!(x.sojourn_q, y.sojourn_q);
             assert_eq!(x.redundant_mean, y.redundant_mean);
             assert!(x.redundant_mean > 0.0, "redundancy cost missing");
+        }
+    }
+
+    /// Streaming sweeps reproduce the exact sweep's means bitwise (same
+    /// sample stream) and its quantiles within P² tolerance, while
+    /// storing no samples.
+    #[test]
+    fn streaming_sweep_matches_exact() {
+        let points: Vec<SweepPoint> = [10, 20].iter().map(|&k| point(k, 12_000)).collect();
+        let pool = ThreadPool::new(2);
+        let exact = run_sweep(&pool, points.clone(), 0.99, 7).unwrap();
+        let stream = run_sweep_with(
+            &pool,
+            points,
+            SweepOptions { q: 0.99, streaming: true },
+            7,
+        )
+        .unwrap();
+        for (a, b) in exact.iter().zip(&stream) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.sojourn_mean, b.sojourn_mean, "mean must be bitwise equal");
+            assert_eq!(a.overhead_mean, b.overhead_mean);
+            assert!(
+                (a.sojourn_q - b.sojourn_q).abs() / a.sojourn_q < 0.2,
+                "k={}: exact {} vs P2 {}",
+                a.label,
+                a.sojourn_q,
+                b.sojourn_q
+            );
         }
     }
 

@@ -3,12 +3,27 @@
 //! compact `"name:param:..."` spec strings.
 //!
 //! The offline registry has no `rand_distr`; samplers are hand-rolled
-//! inverse-CDF transforms over a caller-supplied uniform source
-//! (`FnMut() -> f64` yielding values in `(0, 1]`, see
-//! [`crate::rng::Rng::next_f64_open`]). Keeping the uniform source
-//! external lets the simulator share one PCG64 stream between workload
-//! and overhead sampling, which is what makes runs bit-reproducible.
+//! inverse-CDF transforms over a uniform source in `(0, 1]` (see
+//! [`crate::rng::Rng::next_f64_open`]). The simulator shares one PCG64
+//! stream between workload and overhead sampling, which is what makes
+//! runs bit-reproducible.
+//!
+//! Two dispatch paths, one formula set:
+//!
+//! * [`Dist`] — a closed enum over the built-in laws with an `#[inline]`
+//!   [`Dist::draw`] taking the concrete RNG. This is the simulator's hot
+//!   path: the innermost task-sampling loop monomorphizes to straight
+//!   arithmetic, no vtable call and no `&mut dyn FnMut` closure.
+//! * [`Distribution`] — the open trait, kept for extension points
+//!   (scripted test distributions, analytic helpers that only need a
+//!   uniform source). `Dist::Custom` boxes a trait object, so nothing is
+//!   lost by the enum being closed.
+//!
+//! Every variant's `draw` uses the *same* formula and draw count as its
+//! trait `sample`, so enum and dyn dispatch are bit-for-bit identical on
+//! the same RNG stream (`TT_NO_FAST_EXP=1` A/B-tests exactly this).
 
+use crate::rng::{Pcg64, Rng};
 use std::fmt::Debug;
 
 /// A sampling distribution over non-negative reals.
@@ -21,9 +36,7 @@ pub trait Distribution: Send + Sync + Debug {
     fn mean(&self) -> f64;
     /// Distribution variance (possibly `f64::INFINITY`).
     fn variance(&self) -> f64;
-    /// Human/machine-readable label, e.g. `"Exp(0.5)"`. The workload
-    /// fast path sniffs `"Exp(rate)"` to devirtualize exponential
-    /// sampling, so the label must round-trip the rate via `parse`.
+    /// Human/machine-readable label, e.g. `"Exp(0.5)"`.
     fn label(&self) -> String;
 }
 
@@ -48,8 +61,8 @@ impl Exponential {
 
 impl Distribution for Exponential {
     fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
-        // Must stay formula-identical to the devirtualized fast path in
-        // sim::workload (bit-for-bit reproducibility, TT_NO_FAST_EXP).
+        // Must stay formula-identical to Dist::draw's Exp arm
+        // (bit-for-bit reproducibility, TT_NO_FAST_EXP).
         -rng().ln() / self.rate
     }
     fn mean(&self) -> f64 {
@@ -254,6 +267,148 @@ impl Distribution for Uniform {
     }
 }
 
+/// Enum-dispatched distribution — the simulator's hot-path sampler.
+///
+/// Each built-in law is a dedicated variant so [`Dist::draw`] compiles to
+/// a jump table over inlined formulas instead of a vtable call through
+/// `Box<dyn Distribution>` plus a `&mut dyn FnMut` uniform-source
+/// closure. [`Dist::Custom`] keeps the open trait usable where
+/// extensibility matters (scripted test distributions).
+///
+/// The inherent `sample`/`mean`/`variance`/`label` methods mirror the
+/// [`Distribution`] trait so existing `parse_spec(..).sample(&mut f)`
+/// call sites compile unchanged.
+#[derive(Debug)]
+pub enum Dist {
+    /// `Exp(rate)`.
+    Exp(Exponential),
+    /// Point mass.
+    Det(Deterministic),
+    /// `Erlang(kappa, mu)`.
+    Erlang(Erlang),
+    /// `Pareto(alpha, xm)`.
+    Pareto(Pareto),
+    /// `Weibull(shape, scale)`.
+    Weibull(Weibull),
+    /// `Uniform(lo, hi)`.
+    Uniform(Uniform),
+    /// Escape hatch: any [`Distribution`] implementation (dyn-dispatched).
+    Custom(Box<dyn Distribution>),
+}
+
+impl Dist {
+    /// Wrap an arbitrary trait object (dyn-dispatched sampling).
+    pub fn custom(d: Box<dyn Distribution>) -> Self {
+        Dist::Custom(d)
+    }
+
+    /// Draw one sample from the concrete RNG — the devirtualized hot
+    /// path. Formula- and draw-count-identical to the trait `sample`
+    /// (bit-for-bit on the same stream; test-enforced).
+    #[inline]
+    pub fn draw(&self, rng: &mut Pcg64) -> f64 {
+        match self {
+            Dist::Exp(d) => -rng.next_f64_open().ln() / d.rate,
+            Dist::Det(d) => d.value,
+            Dist::Erlang(d) => {
+                let mut total = 0.0;
+                for _ in 0..d.kappa {
+                    total += -rng.next_f64_open().ln() / d.mu;
+                }
+                total
+            }
+            Dist::Pareto(d) => d.xm * rng.next_f64_open().powf(-1.0 / d.alpha),
+            Dist::Weibull(d) => d.scale * (-rng.next_f64_open().ln()).powf(1.0 / d.shape),
+            Dist::Uniform(d) => d.lo + (d.hi - d.lo) * (1.0 - rng.next_f64_open()),
+            Dist::Custom(d) => {
+                let mut f = || rng.next_f64_open();
+                d.sample(&mut f)
+            }
+        }
+    }
+
+    /// The variant as a trait object (the one delegation match; every
+    /// non-hot accessor routes through it).
+    fn as_dyn(&self) -> &dyn Distribution {
+        match self {
+            Dist::Exp(d) => d,
+            Dist::Det(d) => d,
+            Dist::Erlang(d) => d,
+            Dist::Pareto(d) => d,
+            Dist::Weibull(d) => d,
+            Dist::Uniform(d) => d,
+            Dist::Custom(d) => &**d,
+        }
+    }
+
+    /// Draw one sample from a caller-supplied uniform source (the trait
+    /// path; used for A/B-measuring dispatch cost and by legacy callers).
+    pub fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        self.as_dyn().sample(rng)
+    }
+
+    /// Distribution mean (possibly `f64::INFINITY`).
+    pub fn mean(&self) -> f64 {
+        self.as_dyn().mean()
+    }
+
+    /// Distribution variance (possibly `f64::INFINITY`).
+    pub fn variance(&self) -> f64 {
+        self.as_dyn().variance()
+    }
+
+    /// Human/machine-readable label, e.g. `"Exp(0.5)"`.
+    pub fn label(&self) -> String {
+        self.as_dyn().label()
+    }
+}
+
+impl Distribution for Dist {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        Dist::sample(self, rng)
+    }
+    fn mean(&self) -> f64 {
+        Dist::mean(self)
+    }
+    fn variance(&self) -> f64 {
+        Dist::variance(self)
+    }
+    fn label(&self) -> String {
+        Dist::label(self)
+    }
+}
+
+impl From<Exponential> for Dist {
+    fn from(d: Exponential) -> Self {
+        Dist::Exp(d)
+    }
+}
+impl From<Deterministic> for Dist {
+    fn from(d: Deterministic) -> Self {
+        Dist::Det(d)
+    }
+}
+impl From<Erlang> for Dist {
+    fn from(d: Erlang) -> Self {
+        Dist::Erlang(d)
+    }
+}
+impl From<Pareto> for Dist {
+    fn from(d: Pareto) -> Self {
+        Dist::Pareto(d)
+    }
+}
+impl From<Weibull> for Dist {
+    fn from(d: Weibull) -> Self {
+        Dist::Weibull(d)
+    }
+}
+impl From<Uniform> for Dist {
+    fn from(d: Uniform) -> Self {
+        Dist::Uniform(d)
+    }
+}
+
 fn parse_params<'a>(spec: &'a str, name: &str, n: usize) -> Result<Vec<f64>, String> {
     let parts: Vec<&'a str> = spec.split(':').collect();
     if parts.len() != n + 1 {
@@ -269,11 +424,11 @@ fn parse_params<'a>(spec: &'a str, name: &str, n: usize) -> Result<Vec<f64>, Str
         .collect()
 }
 
-/// Parse a distribution spec string.
+/// Parse a distribution spec string into an enum-dispatched [`Dist`].
 ///
 /// Supported: `exp:RATE`, `det:VALUE`, `erlang:SHAPE:RATE`,
 /// `pareto:ALPHA:XM`, `weibull:SHAPE:SCALE`, `uniform:LO:HI`.
-pub fn parse_spec(spec: &str) -> Result<Box<dyn Distribution>, String> {
+pub fn parse_spec(spec: &str) -> Result<Dist, String> {
     let spec = spec.trim();
     let name = spec.split(':').next().unwrap_or("");
     match name {
@@ -282,14 +437,14 @@ pub fn parse_spec(spec: &str) -> Result<Box<dyn Distribution>, String> {
             if !(p[0] > 0.0 && p[0].is_finite()) {
                 return Err(format!("exp rate must be positive: {spec:?}"));
             }
-            Ok(Box::new(Exponential::new(p[0])))
+            Ok(Dist::Exp(Exponential::new(p[0])))
         }
         "det" => {
             let p = parse_params(spec, "det", 1)?;
             if !(p[0] >= 0.0 && p[0].is_finite()) {
                 return Err(format!("det value must be >= 0: {spec:?}"));
             }
-            Ok(Box::new(Deterministic::new(p[0])))
+            Ok(Dist::Det(Deterministic::new(p[0])))
         }
         "erlang" => {
             let p = parse_params(spec, "erlang", 2)?;
@@ -299,28 +454,28 @@ pub fn parse_spec(spec: &str) -> Result<Box<dyn Distribution>, String> {
             if !(p[1] > 0.0 && p[1].is_finite()) {
                 return Err(format!("erlang rate must be positive: {spec:?}"));
             }
-            Ok(Box::new(Erlang::new(p[0] as u32, p[1])))
+            Ok(Dist::Erlang(Erlang::new(p[0] as u32, p[1])))
         }
         "pareto" => {
             let p = parse_params(spec, "pareto", 2)?;
             if !(p[0] > 0.0 && p[1] > 0.0 && p[0].is_finite() && p[1].is_finite()) {
                 return Err(format!("pareto parameters must be positive: {spec:?}"));
             }
-            Ok(Box::new(Pareto::new(p[0], p[1])))
+            Ok(Dist::Pareto(Pareto::new(p[0], p[1])))
         }
         "weibull" => {
             let p = parse_params(spec, "weibull", 2)?;
             if !(p[0] > 0.0 && p[1] > 0.0 && p[0].is_finite() && p[1].is_finite()) {
                 return Err(format!("weibull parameters must be positive: {spec:?}"));
             }
-            Ok(Box::new(Weibull::new(p[0], p[1])))
+            Ok(Dist::Weibull(Weibull::new(p[0], p[1])))
         }
         "uniform" => {
             let p = parse_params(spec, "uniform", 2)?;
             if !(p[0].is_finite() && p[1].is_finite() && p[1] > p[0]) {
                 return Err(format!("uniform needs hi > lo: {spec:?}"));
             }
-            Ok(Box::new(Uniform::new(p[0], p[1])))
+            Ok(Dist::Uniform(Uniform::new(p[0], p[1])))
         }
         _ => Err(format!(
             "unknown distribution {spec:?} (exp|det|erlang|pareto|weibull|uniform)"
@@ -425,7 +580,6 @@ mod tests {
         assert!((parse_spec("pareto:2.5:0.6").unwrap().mean() - 1.0).abs() < 1e-12);
         assert!(parse_spec("weibull:2:1.1284").unwrap().mean() > 0.9);
         assert_eq!(parse_spec("uniform:0.5:1.5").unwrap().mean(), 1.0);
-        // The workload fast path depends on this label shape.
         assert_eq!(parse_spec("exp:0.5").unwrap().label(), "Exp(0.5)");
     }
 
@@ -459,6 +613,34 @@ mod tests {
             let x = d.sample(&mut f);
             let y = -b.next_f64_open().ln() / 1.7;
             assert!(x == y, "fast path diverges: {x} vs {y}");
+        }
+    }
+
+    /// The enum fast path (`Dist::draw`) is bit-for-bit identical to the
+    /// dyn-dispatch trait path (`Dist::sample`) for every variant — the
+    /// reproducibility contract behind the devirtualization refactor.
+    #[test]
+    fn enum_draw_matches_trait_sample_bitwise() {
+        let dists: Vec<Dist> = vec![
+            Exponential::new(0.7).into(),
+            Deterministic::new(2.5).into(),
+            Erlang::new(4, 2.0).into(),
+            Pareto::new(2.5, 0.6).into(),
+            Weibull::new(2.0, 1.1).into(),
+            Uniform::new(0.5, 1.5).into(),
+            Dist::custom(Box::new(Exponential::new(0.7))),
+        ];
+        for d in &dists {
+            let mut a = Pcg64::seed_from_u64(17);
+            let mut b = Pcg64::seed_from_u64(17);
+            for _ in 0..500 {
+                let x = d.draw(&mut a);
+                let mut f = || b.next_f64_open();
+                let y = Dist::sample(d, &mut f);
+                assert!(x == y, "{}: draw {x} vs sample {y}", d.label());
+            }
+            // Identical draw counts: both streams are in the same state.
+            assert_eq!(a.next_u64(), b.next_u64(), "{}", d.label());
         }
     }
 }

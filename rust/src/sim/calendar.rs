@@ -4,14 +4,46 @@
 //! events) rather than the per-job recursions in `models/`.
 //!
 //! Purpose: *cross-validation*. Two simulators written in structurally
-//! different styles agreeing sample-for-sample (same seed) or
-//! distribution-for-distribution is strong evidence both are right; the
-//! integration suite (`rust/tests/calendar_crosscheck.rs`) asserts exact
-//! agreement for split-merge and single-queue fork-join.
+//! different styles agreeing sample-for-sample (same seed) is strong
+//! evidence both are right; the integration suite
+//! (`rust/tests/calendar_crosscheck.rs`) asserts exact agreement for
+//! split-merge and single-queue fork-join.
 //!
 //! The engine also supports what the recursions cannot express directly:
-//! multi-stage jobs with shuffle barriers (Sec. 2.1's DAG stages), used
-//! by [`crate::sim::models::MultiStage`]-style experiments.
+//! multi-stage jobs with shuffle barriers (Sec. 2.1's DAG stages).
+//!
+//! # Hot-path design (§Perf)
+//!
+//! The engine is O(events · log h) with a heap of h ≤ l + 2 entries.
+//! Memory is O(l + queued tasks) — bounded by the jobs arrived but not
+//! yet departed (times k for their undispatched tasks, a deliberate cost
+//! of the draw-order contract below), never by the run length:
+//!
+//! * **lazy arrivals** — exactly one outstanding `Arrival` event at a
+//!   time instead of pre-heaping all n jobs, so the event heap stays
+//!   tiny and a 10⁸-job run does not allocate 10⁸ events up front;
+//! * **slab job states** — finished jobs are retired into a free list
+//!   and their slots reused, so memory is bounded by the number of jobs
+//!   *in flight*, not the number simulated;
+//! * **direct completion** — a job is recorded the instant its last
+//!   task finishes (the event handler knows which job that is), instead
+//!   of re-scanning every job ever created after each event (the old
+//!   engine's O(jobs²) disease);
+//! * **pre-drawn tasks** — each stage's execution/overhead samples are
+//!   drawn when the stage is enqueued and carried in the ready queue, so
+//!   the per-event path does no sampling closure setup and no per-job
+//!   allocation (`JobState` is plain-old-data; the old per-job
+//!   `VecDeque` of stages is gone).
+//!
+//! Pre-drawing also pins the RNG draw order to the recursion engines'
+//! (arrival, then k × (execution, overhead) per job, in arrival order),
+//! which upgrades the cross-check from distributional agreement to
+//! bit-for-bit equality for single-stage workloads — including with the
+//! overhead model enabled (`rust/tests/calendar_crosscheck.rs`). The
+//! price is that a backlogged split-merge floor holds every waiting
+//! job's k pre-drawn tasks in the ready queue (samples drawn at arrival
+//! must live until dispatch); the old engine drew at dispatch and kept
+//! O(1) per waiting job, but had no bitwise contract to honour.
 
 use super::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
 use std::cmp::Ordering;
@@ -20,16 +52,15 @@ use std::collections::{BinaryHeap, VecDeque};
 /// Discrete event kinds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum EventKind {
-    /// A job arrives (index into the pre-generated arrival list).
+    /// Job `index` (arrival order) arrives; the next arrival is drawn
+    /// and scheduled when this one fires (lazy arrival stream).
     Arrival(u32),
-    /// Server finished its current task.
+    /// Server finished its current task of the job in `slot`.
     TaskFinish {
         /// Which server.
         server: u32,
-        /// Owning job.
-        job: u32,
-        /// Task index within the job's current stage.
-        task: u32,
+        /// Owning job's slab slot.
+        slot: u32,
     },
     /// Split-merge: the in-service job departs (scheduled at
     /// last-task-finish + pre-departure overhead; the overhead *blocks*
@@ -75,43 +106,64 @@ pub enum Discipline {
     SingleQueueForkJoin,
 }
 
-/// Per-job bookkeeping.
-#[derive(Clone, Debug)]
+/// Per-job bookkeeping — plain old data, slab-allocated and reused.
+#[derive(Clone, Copy, Debug)]
 struct JobState {
+    /// Arrival-order job index (the `JobRecord.index`).
+    index: u32,
     arrival: f64,
-    /// Stages: remaining tasks to *dispatch* per stage (front = current).
-    stages: VecDeque<u32>,
-    /// Tasks of the current stage still running.
+    /// Current stage (index into `Calendar::stage_tasks`).
+    stage: u32,
+    /// Tasks of the current stage in service.
     outstanding: u32,
-    /// Tasks of the current stage not yet dispatched.
+    /// Tasks of the current stage queued but not yet started.
     to_dispatch: u32,
     first_start: f64,
     workload: f64,
     task_overhead: f64,
-    /// Pre-departure overhead applied (set when the departure event is
-    /// scheduled / the job completes).
+    /// Pre-departure overhead (set when the job completes; read when the
+    /// split-merge departure event fires).
     pd: f64,
-    done: bool,
+}
+
+/// One queued task with its pre-drawn samples.
+#[derive(Clone, Copy, Debug)]
+struct ReadyTask {
+    /// Owning job's slab slot.
+    slot: u32,
+    /// Task index within the job's current stage (trace label).
+    task: u32,
+    /// Pre-drawn execution time.
+    exec: f64,
+    /// Pre-drawn task-service overhead.
+    overhead: f64,
 }
 
 /// Event-calendar simulator for (possibly multi-stage) tiny-task jobs.
 pub struct Calendar {
     discipline: Discipline,
-    #[allow(dead_code)] // kept for introspection & future disciplines
     servers: usize,
     /// Tasks per stage; single-stage jobs use `vec![k]`.
     stage_tasks: Vec<u32>,
+    /// Σ stage tasks (the pre-departure overhead argument).
+    total_tasks: u32,
     heap: BinaryHeap<Event>,
     seq: u64,
-    /// Idle server ids.
+    /// Idle server ids (stack).
     idle: Vec<u32>,
-    /// Global FIFO of (job, task-in-stage) ready to run.
-    ready: VecDeque<(u32, u32)>,
-    /// Job queue for split-merge (jobs not yet started).
+    /// Global FIFO of pre-drawn tasks ready to run.
+    ready: VecDeque<ReadyTask>,
+    /// Scratch for barrier-stage front insertion (reused, no per-event
+    /// allocation).
+    scratch: Vec<ReadyTask>,
+    /// Split-merge: arrived jobs (slots) awaiting the floor.
     pending_jobs: VecDeque<u32>,
-    /// Split-merge: a job currently in service?
+    /// Split-merge: the slot currently holding the floor.
     in_service: Option<u32>,
+    /// Job slab; retired slots are recycled through `free_slots`.
     jobs: Vec<JobState>,
+    free_slots: Vec<u32>,
+    total_jobs: u32,
     completed: Vec<JobRecord>,
 }
 
@@ -121,17 +173,22 @@ impl Calendar {
     pub fn new(discipline: Discipline, servers: usize, stage_tasks: Vec<u32>) -> Self {
         assert!(servers >= 1 && !stage_tasks.is_empty());
         assert!(stage_tasks.iter().all(|&t| t >= 1));
+        let total_tasks = stage_tasks.iter().sum();
         Self {
             discipline,
             servers,
             stage_tasks,
+            total_tasks,
             heap: BinaryHeap::new(),
             seq: 0,
-            idle: (0..servers as u32).rev().collect(),
+            idle: Vec::with_capacity(servers),
             ready: VecDeque::new(),
+            scratch: Vec::new(),
             pending_jobs: VecDeque::new(),
             in_service: None,
             jobs: Vec::new(),
+            free_slots: Vec::new(),
+            total_jobs: 0,
             completed: Vec::new(),
         }
     }
@@ -142,7 +199,8 @@ impl Calendar {
     }
 
     /// Run `n_jobs` jobs to completion; returns per-job records in
-    /// arrival order.
+    /// arrival order. The engine is reusable: every call starts from an
+    /// empty system.
     pub fn run(
         &mut self,
         n_jobs: usize,
@@ -150,60 +208,124 @@ impl Calendar {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> Vec<JobRecord> {
-        // Pre-generate arrivals so RNG draw order matches the recursion
-        // engines (arrival stream first is not required — recursions draw
-        // arrival-then-tasks per job; we draw tasks lazily at dispatch,
-        // which has a DIFFERENT draw order, so cross-checks compare
-        // distributions... except single-stage FIFO dispatch order equals
-        // generation order, making draws identical. See crosscheck test.)
-        for j in 0..n_jobs as u32 {
-            let t = workload.next_arrival();
-            self.push_event(t, EventKind::Arrival(j));
+        // Reset to an empty system (slab and queues keep their capacity).
+        self.heap.clear();
+        self.idle.clear();
+        self.idle.extend((0..self.servers as u32).rev());
+        self.ready.clear();
+        self.pending_jobs.clear();
+        self.in_service = None;
+        self.jobs.clear();
+        self.free_slots.clear();
+        self.completed.clear();
+        self.total_jobs = n_jobs as u32;
+        if n_jobs == 0 {
+            return Vec::new();
         }
+
+        // Lazy arrival stream: draw only the first arrival here; each
+        // Arrival handler draws its successor. Together with pre-drawn
+        // stage tasks this yields the draw order A(0), tasks(0), A(1),
+        // tasks(1), … — identical to the recursion engines'.
+        let t0 = workload.next_arrival();
+        self.push_event(t0, EventKind::Arrival(0));
+
         while let Some(ev) = self.heap.pop() {
             match ev.kind {
-                EventKind::Arrival(j) => self.on_arrival(ev.time, j),
-                EventKind::TaskFinish { server, job, task } => {
-                    self.on_finish(ev.time, server, job, task, overhead, trace)
+                EventKind::Arrival(j) => self.on_arrival(ev.time, j, workload, overhead),
+                EventKind::TaskFinish { server, slot } => {
+                    self.on_finish(ev.time, server, slot, workload, overhead)
                 }
-                EventKind::Departure(j) => {
+                EventKind::Departure(slot) => {
                     // Split-merge floor clears at the padded instant.
-                    self.record_departure(ev.time, j);
+                    self.record_departure(ev.time, slot);
                     self.in_service = None;
                 }
             }
-            self.dispatch(ev.time, workload, overhead, trace);
+            self.dispatch(ev.time, trace);
         }
         let mut out = std::mem::take(&mut self.completed);
         out.sort_by_key(|r| r.index);
         out
     }
 
-    fn on_arrival(&mut self, _now: f64, j: u32) {
-        debug_assert_eq!(j as usize, self.jobs.len());
-        let mut stages: VecDeque<u32> = self.stage_tasks.iter().copied().collect();
-        let first = stages.pop_front().unwrap();
-        self.jobs.push(JobState {
-            arrival: _now,
-            stages,
+    /// Allocate a slab slot for a newly arrived job.
+    fn alloc_slot(&mut self, now: f64, index: u32) -> u32 {
+        let js = JobState {
+            index,
+            arrival: now,
+            stage: 0,
             outstanding: 0,
-            to_dispatch: first,
+            to_dispatch: 0,
             first_start: f64::INFINITY,
             workload: 0.0,
             task_overhead: 0.0,
             pd: 0.0,
-            done: false,
-        });
-        match self.discipline {
-            Discipline::SplitMerge => self.pending_jobs.push_back(j),
-            Discipline::SingleQueueForkJoin => {
-                let k = self.jobs[j as usize].to_dispatch;
-                for t in 0..k {
-                    self.ready.push_back((j, t));
-                }
-                self.jobs[j as usize].to_dispatch = 0;
-                self.jobs[j as usize].outstanding = k;
+        };
+        match self.free_slots.pop() {
+            Some(s) => {
+                self.jobs[s as usize] = js;
+                s
             }
+            None => {
+                self.jobs.push(js);
+                (self.jobs.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Draw `count` (execution, overhead) pairs for `slot`'s current
+    /// stage — in task order, the reproducibility contract — and enqueue
+    /// them. `front` inserts ahead of already-queued tasks (split-merge
+    /// barrier stages must run before the next pending job's tasks).
+    fn enqueue_stage(
+        &mut self,
+        slot: u32,
+        count: u32,
+        front: bool,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+    ) {
+        let js = &mut self.jobs[slot as usize];
+        js.to_dispatch = count;
+        if front {
+            self.scratch.clear();
+            for task in 0..count {
+                let exec = workload.next_execution();
+                let oh = overhead.sample_task(workload.rng());
+                js.workload += exec;
+                js.task_overhead += oh;
+                self.scratch.push(ReadyTask { slot, task, exec, overhead: oh });
+            }
+            for rt in self.scratch.drain(..).rev() {
+                self.ready.push_front(rt);
+            }
+        } else {
+            for task in 0..count {
+                let exec = workload.next_execution();
+                let oh = overhead.sample_task(workload.rng());
+                js.workload += exec;
+                js.task_overhead += oh;
+                self.ready.push_back(ReadyTask { slot, task, exec, overhead: oh });
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, now: f64, j: u32, workload: &mut Workload, overhead: &OverheadModel) {
+        let slot = self.alloc_slot(now, j);
+        // Draw this job's first-stage tasks immediately (recursion-engine
+        // draw order: arrival, then k × (execution, overhead)).
+        let k = self.stage_tasks[0];
+        self.enqueue_stage(slot, k, false, workload, overhead);
+        if self.discipline == Discipline::SplitMerge {
+            self.pending_jobs.push_back(slot);
+        }
+        // Lazily schedule the successor arrival: one outstanding arrival
+        // event instead of n pre-heaped ones.
+        let next = j + 1;
+        if next < self.total_jobs {
+            let t = workload.next_arrival();
+            self.push_event(t, EventKind::Arrival(next));
         }
     }
 
@@ -211,135 +333,48 @@ impl Calendar {
         &mut self,
         now: f64,
         server: u32,
-        job: u32,
-        _task: u32,
-        overhead: &OverheadModel,
-        _trace: &mut TraceLog,
-    ) {
-        self.idle.push(server);
-        let js = &mut self.jobs[job as usize];
-        js.outstanding -= 1;
-        if js.outstanding == 0 && js.to_dispatch == 0 {
-            if let Some(next_stage) = js.stages.pop_front() {
-                // Shuffle barrier crossed: enqueue the next stage.
-                match self.discipline {
-                    Discipline::SplitMerge => {
-                        js.to_dispatch = next_stage;
-                        // tasks enqueued by dispatch() below
-                        js.outstanding = 0;
-                        let k = js.to_dispatch;
-                        for t in 0..k {
-                            self.ready.push_back((job, t));
-                        }
-                        js.outstanding = k;
-                        js.to_dispatch = 0;
-                    }
-                    Discipline::SingleQueueForkJoin => {
-                        for t in 0..next_stage {
-                            self.ready.push_back((job, t));
-                        }
-                        js.outstanding = next_stage;
-                    }
-                }
-            } else {
-                // Job complete.
-                js.done = true;
-                let total: u32 = self.stage_tasks.iter().sum();
-                let pd = overhead.pre_departure(total as usize);
-                self.jobs[job as usize].pd = pd;
-                if self.discipline == Discipline::SplitMerge {
-                    // The pre-departure overhead blocks the floor until
-                    // the departure instant.
-                    self.push_event(now + pd, EventKind::Departure(job));
-                }
-            }
-        }
-    }
-
-    /// Record a (split-merge) departure at exactly `time` (the scheduled
-    /// instant already includes the pre-departure overhead).
-    fn record_departure(&mut self, time: f64, j: u32) {
-        let js = &mut self.jobs[j as usize];
-        js.done = false; // consumed
-        self.completed.push(JobRecord {
-            index: j as usize,
-            arrival: js.arrival,
-            departure: time,
-            first_start: js.first_start,
-            workload: js.workload,
-            task_overhead: js.task_overhead,
-            pre_departure_overhead: js.pd,
-            redundant_work: 0.0,
-        });
-    }
-
-    fn dispatch(
-        &mut self,
-        now: f64,
+        slot: u32,
         workload: &mut Workload,
         overhead: &OverheadModel,
-        trace: &mut TraceLog,
     ) {
-        // Split-merge: admit the next job when the floor is clear (the
-        // Departure event clears `in_service` at finish + pre-departure).
-        if self.discipline == Discipline::SplitMerge {
-            if self.in_service.is_none() {
-                if let Some(&next) = self.pending_jobs.front() {
-                    // Pre-departure overhead of the previous job delays
-                    // the next start; model by shifting admission time.
-                    self.pending_jobs.pop_front();
-                    self.in_service = Some(next);
-                    let js = &mut self.jobs[next as usize];
-                    let k = js.to_dispatch;
-                    for t in 0..k {
-                        self.ready.push_back((next, t));
-                    }
-                    js.outstanding = k;
-                    js.to_dispatch = 0;
-                }
-            }
-        } else {
-            // FJ: complete any finished jobs immediately.
-            let done_jobs: Vec<u32> = self
-                .jobs
-                .iter()
-                .enumerate()
-                .filter(|(_, j)| j.done)
-                .map(|(i, _)| i as u32)
-                .collect();
-            for j in done_jobs {
-                self.complete_job(now, j, overhead);
-            }
+        self.idle.push(server);
+        let js = &mut self.jobs[slot as usize];
+        js.outstanding -= 1;
+        if js.outstanding > 0 || js.to_dispatch > 0 {
+            return;
         }
-
-        while !self.idle.is_empty() && !self.ready.is_empty() {
-            let (job, task) = self.ready.pop_front().unwrap();
-            let server = self.idle.pop().unwrap();
-            let e = workload.next_execution();
-            let o = overhead.sample_task(workload.rng());
-            let js = &mut self.jobs[job as usize];
-            let start = now.max(js.arrival);
-            js.workload += e;
-            js.task_overhead += o;
-            if start < js.first_start {
-                js.first_start = start;
+        let next_stage = js.stage + 1;
+        if (next_stage as usize) < self.stage_tasks.len() {
+            // Shuffle barrier crossed: enqueue the next stage. In
+            // split-merge the in-service job's new stage must run ahead
+            // of pending jobs' queued tasks; in fork-join the stage joins
+            // the back of the global FIFO like any other work.
+            js.stage = next_stage;
+            let count = self.stage_tasks[next_stage as usize];
+            let front = self.discipline == Discipline::SplitMerge;
+            self.enqueue_stage(slot, count, front, workload, overhead);
+        } else {
+            // Job complete: record it right here (the handler knows the
+            // finishing job, so no scan over the job table is needed).
+            let pd = overhead.pre_departure(self.total_tasks as usize);
+            match self.discipline {
+                Discipline::SplitMerge => {
+                    // The pre-departure overhead blocks the floor until
+                    // the departure instant.
+                    self.jobs[slot as usize].pd = pd;
+                    self.push_event(now + pd, EventKind::Departure(slot));
+                }
+                Discipline::SingleQueueForkJoin => self.complete_job(now, slot, pd),
             }
-            let finish = start + e + o;
-            trace.record(TraceEvent { job, task, server, start, end: finish });
-            self.push_event(finish, EventKind::TaskFinish { server, job, task });
         }
     }
 
-    fn complete_job(&mut self, now: f64, j: u32, overhead: &OverheadModel) {
-        let js = &mut self.jobs[j as usize];
-        if !js.done {
-            return;
-        }
-        js.done = false; // consumed
-        let total_tasks: u32 = self.stage_tasks.iter().sum();
-        let pd = overhead.pre_departure(total_tasks as usize);
+    /// Record a completed fork-join job departing at `now + pd` and
+    /// retire its slot.
+    fn complete_job(&mut self, now: f64, slot: u32, pd: f64) {
+        let js = &self.jobs[slot as usize];
         self.completed.push(JobRecord {
-            index: j as usize,
+            index: js.index as usize,
             arrival: js.arrival,
             departure: now + pd,
             first_start: js.first_start,
@@ -348,6 +383,73 @@ impl Calendar {
             pre_departure_overhead: pd,
             redundant_work: 0.0,
         });
+        self.free_slots.push(slot);
+    }
+
+    /// Record a (split-merge) departure at exactly `time` (the scheduled
+    /// instant already includes the pre-departure overhead) and retire
+    /// the slot.
+    fn record_departure(&mut self, time: f64, slot: u32) {
+        let js = &self.jobs[slot as usize];
+        self.completed.push(JobRecord {
+            index: js.index as usize,
+            arrival: js.arrival,
+            departure: time,
+            first_start: js.first_start,
+            workload: js.workload,
+            task_overhead: js.task_overhead,
+            pre_departure_overhead: js.pd,
+            redundant_work: 0.0,
+        });
+        self.free_slots.push(slot);
+    }
+
+    fn dispatch(&mut self, now: f64, trace: &mut TraceLog) {
+        // Split-merge: admit the next job when the floor is clear (the
+        // Departure event clears `in_service` at finish + pre-departure).
+        if self.discipline == Discipline::SplitMerge && self.in_service.is_none() {
+            if let Some(slot) = self.pending_jobs.pop_front() {
+                self.in_service = Some(slot);
+            }
+        }
+        while !self.idle.is_empty() {
+            let Some(rt) = self.ready.front() else { break };
+            // Split-merge gate: only the in-service job's tasks may run;
+            // pending jobs' queued tasks wait behind the floor.
+            if self.discipline == Discipline::SplitMerge && Some(rt.slot) != self.in_service {
+                break;
+            }
+            let rt = *rt;
+            self.ready.pop_front();
+            let server = self.idle.pop().expect("checked non-empty");
+            let js = &mut self.jobs[rt.slot as usize];
+            js.to_dispatch -= 1;
+            js.outstanding += 1;
+            // A task cannot start before its job arrives; idle servers
+            // wait for the queue to refill.
+            let start = now.max(js.arrival);
+            if start < js.first_start {
+                js.first_start = start;
+            }
+            let finish = start + rt.exec + rt.overhead;
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job: js.index,
+                    task: rt.task,
+                    server,
+                    start,
+                    end: finish,
+                });
+            }
+            self.push_event(finish, EventKind::TaskFinish { server, slot: rt.slot });
+        }
+    }
+
+    /// Slab capacity (test hook: bounded by in-flight jobs, not run
+    /// length).
+    #[cfg(test)]
+    fn slab_len(&self) -> usize {
+        self.jobs.len()
     }
 }
 
@@ -357,11 +459,7 @@ mod tests {
     use crate::dist::{Deterministic, Exponential};
 
     fn workload(ia: f64, ex: f64, seed: u64) -> Workload {
-        Workload::new(
-            Box::new(Deterministic::new(ia)),
-            Box::new(Deterministic::new(ex)),
-            seed,
-        )
+        Workload::new(Deterministic::new(ia).into(), Deterministic::new(ex).into(), seed)
     }
 
     #[test]
@@ -416,6 +514,27 @@ mod tests {
         assert_eq!(late_starts, 2, "exactly the reduce tasks start after the barrier");
     }
 
+    /// Multi-stage split-merge: the in-service job's barrier stage runs
+    /// ahead of the next pending job's queued tasks (front insertion).
+    #[test]
+    fn split_merge_multi_stage_keeps_floor() {
+        let mut cal = Calendar::new(Discipline::SplitMerge, 2, vec![2, 2]);
+        // Arrivals every 1 s, exec 1 s: job 0 holds the floor over
+        // [1, 3) (two stages × 1 s) while job 1 waits.
+        let mut w = workload(1.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(3, &mut w, &oh, &mut tr);
+        for (n, r) in recs.iter().enumerate() {
+            assert!(
+                (r.departure - (3.0 + 2.0 * n as f64)).abs() < 1e-9,
+                "job {n}: {}",
+                r.departure
+            );
+            assert!((r.workload - 4.0).abs() < 1e-12);
+        }
+    }
+
     /// Exponential two-stage FJ: adding a reduce stage increases sojourn
     /// versus single-stage with the same total work.
     #[test]
@@ -423,8 +542,8 @@ mod tests {
         let run = |stages: Vec<u32>| -> f64 {
             let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 4, stages);
             let mut w = Workload::new(
-                Box::new(Exponential::new(0.3)),
-                Box::new(Exponential::new(2.0)),
+                Exponential::new(0.3).into(),
+                Exponential::new(2.0).into(),
                 7,
             );
             let oh = OverheadModel::none();
@@ -437,5 +556,38 @@ mod tests {
         let single = run(vec![12]);
         let staged = run(vec![8, 4]);
         assert!(staged > single, "barrier must cost: {staged} !> {single}");
+    }
+
+    /// Retired job slots are recycled: a long lightly-loaded run keeps
+    /// the slab at the in-flight width, not the run length.
+    #[test]
+    fn slab_stays_bounded_by_in_flight_jobs() {
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4]);
+        // Arrivals every 10 s, service 2 s: at most one job in flight.
+        let mut w = workload(10.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(500, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 500);
+        assert!(cal.slab_len() <= 2, "slab grew to {} for a 1-in-flight run", cal.slab_len());
+    }
+
+    /// The engine is reusable: back-to-back runs from the same instance
+    /// give identical results to a fresh instance.
+    #[test]
+    fn reusable_across_runs() {
+        let mk_w = || Workload::new(Exponential::new(0.4).into(), Exponential::new(2.0).into(), 7);
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6]);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let first = cal.run(300, &mut mk_w(), &oh, &mut tr);
+        let second = cal.run(300, &mut mk_w(), &oh, &mut tr);
+        let mut fresh_cal = Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6]);
+        let fresh = fresh_cal.run(300, &mut mk_w(), &oh, &mut tr);
+        assert_eq!(first.len(), 300);
+        for ((a, b), c) in first.iter().zip(&second).zip(&fresh) {
+            assert_eq!(a.departure, b.departure);
+            assert_eq!(a.departure, c.departure);
+        }
     }
 }

@@ -37,7 +37,7 @@ mod workload;
 pub use calendar::{Calendar, Discipline};
 pub use heap::ServerHeap;
 pub use overhead::OverheadModel;
-pub use runner::{run, RunOptions, SimResult};
+pub use runner::{run, RunOptions, SimResult, STREAMING_QS};
 pub use scenario::{Scenario, TaskOutcome};
 pub use trace::{TraceEvent, TraceLog};
 pub use workload::Workload;

@@ -173,16 +173,8 @@ mod tests {
     #[test]
     fn single_server_case() {
         let mut m = ForkJoinPerServer::new(1);
-        let mut w = Workload::new(
-            Box::new(Exponential::new(0.5)),
-            Box::new(Exponential::new(1.0)),
-            11,
-        );
-        let mut w2 = Workload::new(
-            Box::new(Exponential::new(0.5)),
-            Box::new(Exponential::new(1.0)),
-            11,
-        );
+        let mut w = Workload::new(Exponential::new(0.5).into(), Exponential::new(1.0).into(), 11);
+        let mut w2 = Workload::new(Exponential::new(0.5).into(), Exponential::new(1.0).into(), 11);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
         let mut d_prev: f64 = 0.0;
@@ -205,16 +197,16 @@ mod tests {
         let mut tr = TraceLog::disabled();
         // Job 0: tasks (10, 10) — both servers busy until t = 10.
         let mut w0 = Workload::new(
-            Box::new(Deterministic::new(0.0)),
-            Box::new(Deterministic::new(10.0)),
+            Deterministic::new(0.0).into(),
+            Deterministic::new(10.0).into(),
             1,
         );
         let r0 = m.advance(0, 0.0, &mut w0, &oh, &mut tr);
         assert!((r0.departure - 10.0).abs() < 1e-12);
         // Job 1 arrives at t = 1 with short tasks; must wait until 10.
         let mut w1 = Workload::new(
-            Box::new(Deterministic::new(1.0)),
-            Box::new(Deterministic::new(0.5)),
+            Deterministic::new(1.0).into(),
+            Deterministic::new(0.5).into(),
             1,
         );
         let a1 = w1.next_arrival();

@@ -154,11 +154,7 @@ mod tests {
     use crate::dist::{Deterministic, Exponential};
 
     fn det_workload(interarrival: f64, exec: f64) -> Workload {
-        Workload::new(
-            Box::new(Deterministic::new(interarrival)),
-            Box::new(Deterministic::new(exec)),
-            1,
-        )
+        Workload::new(Deterministic::new(interarrival).into(), Deterministic::new(exec).into(), 1)
     }
 
     /// No start barrier: with saturating arrivals the servers never idle,
@@ -187,19 +183,11 @@ mod tests {
     #[test]
     fn reduces_to_single_server() {
         let mut m = ForkJoinSingleQueue::new(1, 1);
-        let mut w = Workload::new(
-            Box::new(Exponential::new(0.5)),
-            Box::new(Exponential::new(1.0)),
-            3,
-        );
+        let mut w = Workload::new(Exponential::new(0.5).into(), Exponential::new(1.0).into(), 3);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
         // Re-derive the Lindley recursion independently and compare.
-        let mut w2 = Workload::new(
-            Box::new(Exponential::new(0.5)),
-            Box::new(Exponential::new(1.0)),
-            3,
-        );
+        let mut w2 = Workload::new(Exponential::new(0.5).into(), Exponential::new(1.0).into(), 3);
         let mut d_prev = 0.0f64;
         for n in 0..5000 {
             let a = w.next_arrival();
@@ -243,8 +231,11 @@ mod tests {
             let oh = OverheadModel::none();
             let mut tr = TraceLog::disabled();
             let mut w = Workload::new(
-                Box::new(Deterministic::new(0.05)),
-                Box::new(Script(vec![10.0, 0.1, 0.1, 0.1], AtomicUsize::new(0))),
+                Deterministic::new(0.05).into(),
+                crate::dist::Dist::custom(Box::new(Script(
+                    vec![10.0, 0.1, 0.1, 0.1],
+                    AtomicUsize::new(0),
+                ))),
                 1,
             );
             let r0 = m.advance(0, 0.0, &mut w, &oh, &mut tr);

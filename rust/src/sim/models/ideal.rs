@@ -106,8 +106,8 @@ mod tests {
         let (l, k) = (4usize, 4usize);
         let mut m = IdealPartition::new(l, k);
         let mut w = Workload::new(
-            Box::new(Deterministic::new(3.0)),
-            Box::new(Deterministic::new(1.0)),
+            Deterministic::new(3.0).into(),
+            Deterministic::new(1.0).into(),
             1,
         );
         let oh = OverheadModel::none();
@@ -124,11 +124,7 @@ mod tests {
     fn beats_split_merge_service_time() {
         let (l, k) = (10usize, 10usize);
         let mut m = IdealPartition::new(l, k);
-        let mut w = Workload::new(
-            Box::new(Deterministic::new(1e6)),
-            Box::new(Exponential::new(1.0)),
-            5,
-        );
+        let mut w = Workload::new(Deterministic::new(1e6).into(), Exponential::new(1.0).into(), 5);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
         let n = 10_000;

@@ -127,11 +127,7 @@ mod tests {
     use crate::dist::{Deterministic, Exponential};
 
     fn det_workload(interarrival: f64, exec: f64) -> Workload {
-        Workload::new(
-            Box::new(Deterministic::new(interarrival)),
-            Box::new(Deterministic::new(exec)),
-            1,
-        )
+        Workload::new(Deterministic::new(interarrival).into(), Deterministic::new(exec).into(), 1)
     }
 
     /// Deterministic sanity: l=2, k=4, exec=1 → each server runs 2 tasks,
@@ -178,8 +174,8 @@ mod tests {
         let l = 10;
         let mut m = SplitMerge::new(l, l);
         let mut w = Workload::new(
-            Box::new(Deterministic::new(1000.0)), // no queueing
-            Box::new(Exponential::new(1.0)),
+            Deterministic::new(1000.0).into(), // no queueing
+            Exponential::new(1.0).into(),
             42,
         );
         let oh = OverheadModel::none();
@@ -205,8 +201,8 @@ mod tests {
         let (l, k) = (10usize, 50usize);
         let mut m = SplitMerge::new(l, k);
         let mut w = Workload::new(
-            Box::new(Deterministic::new(1000.0)),
-            Box::new(Exponential::new(1.0)),
+            Deterministic::new(1000.0).into(),
+            Exponential::new(1.0).into(),
             7,
         );
         let oh = OverheadModel::none();
@@ -250,8 +246,8 @@ mod tests {
             let sc = Scenario::new(vec![1.0, 1.0], replicas);
             let mut m = SplitMerge::new(2, 2).with_scenario(Some(sc));
             let mut w = Workload::new(
-                Box::new(Deterministic::new(1000.0)),
-                Box::new(Exponential::new(1.0)),
+                Deterministic::new(1000.0).into(),
+                Exponential::new(1.0).into(),
                 13,
             );
             let oh = OverheadModel::none();

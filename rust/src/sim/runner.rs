@@ -4,7 +4,11 @@
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
 use super::{JobRecord, OverheadModel, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
-use crate::stats::{QuantileSketch, Summary};
+use crate::stats::{QuantileEstimator, Summary};
+
+/// Quantiles tracked by the streaming (P²) runner mode — the grid every
+/// consumer prints (`simulate`, sweeps, the advisor curve).
+pub const STREAMING_QS: [f64; 5] = [0.5, 0.9, 0.95, 0.99, 0.999];
 
 /// Runner options beyond the experiment config.
 #[derive(Clone, Copy, Debug, Default)]
@@ -16,6 +20,14 @@ pub struct RunOptions {
     /// Enforce in-order departures in the single-queue fork-join model
     /// (the Th.-2 analytic variant).
     pub in_order_departures: bool,
+    /// O(1)-memory mode: estimate quantiles with the P² bank
+    /// ([`STREAMING_QS`] plus `streaming_q`) instead of storing every
+    /// sample — stability scans and million-job sweep points no longer
+    /// cost O(jobs) memory per point.
+    pub streaming: bool,
+    /// Extra quantile to track in streaming mode (e.g. a sweep's target
+    /// quantile when it is not on the default grid).
+    pub streaming_q: Option<f64>,
 }
 
 /// Aggregated simulation output.
@@ -24,10 +36,10 @@ pub struct SimResult {
     pub config: SimulationConfig,
     /// Per-job records (empty unless `record_jobs`).
     pub jobs: Vec<JobRecord>,
-    /// Sojourn-time samples (always collected).
-    pub sojourn: QuantileSketch,
-    /// Waiting-time samples (always collected).
-    pub waiting: QuantileSketch,
+    /// Sojourn-time quantiles (exact samples, or P² in streaming mode).
+    pub sojourn: QuantileEstimator,
+    /// Waiting-time quantiles (exact samples, or P² in streaming mode).
+    pub waiting: QuantileEstimator,
     /// Sojourn summary statistics.
     pub sojourn_summary: Summary,
     /// Per-job total task overhead summary.
@@ -35,6 +47,9 @@ pub struct SimResult {
     /// Per-job cancelled-replica server time (all zeros unless a
     /// redundancy scenario is active).
     pub redundant_summary: Summary,
+    /// Sojourn summaries over the run's thirds (in measured-job order) —
+    /// the stability detector's divergence signal, O(1) memory.
+    pub thirds: [Summary; 3],
     /// Trace log (empty unless `trace`).
     pub trace: TraceLog,
     /// Wall-clock seconds spent simulating.
@@ -81,6 +96,19 @@ fn build_model(cfg: &SimulationConfig, opts: &RunOptions) -> Result<Box<dyn Mode
     })
 }
 
+/// Build the quantile estimator for one run: exact by default, the P²
+/// bank (default grid + the caller's extra quantile) in streaming mode.
+fn make_estimator(cfg: &SimulationConfig, opts: &RunOptions) -> QuantileEstimator {
+    if !opts.streaming {
+        return QuantileEstimator::exact_with_capacity(cfg.jobs);
+    }
+    let mut qs: Vec<f64> = STREAMING_QS.to_vec();
+    if let Some(q) = opts.streaming_q {
+        qs.push(q); // duplicates within 1e-12 are merged by the bank
+    }
+    QuantileEstimator::streaming(&qs)
+}
+
 /// Run one simulation to completion.
 pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String> {
     cfg.validate()?;
@@ -92,11 +120,15 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
 
     let total = cfg.warmup + cfg.jobs;
     let mut jobs = Vec::with_capacity(if opts.record_jobs { cfg.jobs } else { 0 });
-    let mut sojourn = QuantileSketch::with_capacity(cfg.jobs);
-    let mut waiting = QuantileSketch::with_capacity(cfg.jobs);
+    let mut sojourn = make_estimator(cfg, &opts);
+    let mut waiting = make_estimator(cfg, &opts);
     let mut sojourn_summary = Summary::new();
     let mut overhead_summary = Summary::new();
     let mut redundant_summary = Summary::new();
+    let mut thirds = [Summary::new(), Summary::new(), Summary::new()];
+    // Same partition as slicing measured jobs at [..t], [t..2t], [2t..]:
+    // the remainder lands in the last third.
+    let third = cfg.jobs / 3;
 
     for n in 0..total {
         let arrival = workload.next_arrival();
@@ -104,11 +136,17 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         if n < cfg.warmup {
             continue;
         }
+        let measured = n - cfg.warmup;
         sojourn.push(rec.sojourn());
         waiting.push(rec.waiting());
         sojourn_summary.push(rec.sojourn());
         overhead_summary.push(rec.task_overhead + rec.pre_departure_overhead);
         redundant_summary.push(rec.redundant_work);
+        if third > 0 {
+            thirds[(measured / third).min(2)].push(rec.sojourn());
+        } else {
+            thirds[2].push(rec.sojourn());
+        }
         if opts.record_jobs {
             jobs.push(rec);
         }
@@ -122,6 +160,7 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         sojourn_summary,
         overhead_summary,
         redundant_summary,
+        thirds,
         trace,
         wall_seconds: t0.elapsed().as_secs_f64(),
     })
@@ -234,6 +273,33 @@ mod tests {
         let mut b = run(&cfg, RunOptions::default()).unwrap();
         assert_eq!(a.sojourn_quantile(0.9), b.sojourn_quantile(0.9));
         assert_eq!(a.sojourn_summary.mean(), b.sojourn_summary.mean());
+    }
+
+    /// Streaming mode: identical simulation (bitwise-equal summaries,
+    /// since the sample stream is untouched), P² quantiles close to the
+    /// exact ones, and no sample storage.
+    #[test]
+    fn streaming_mode_matches_exact_run() {
+        let cfg = SimulationConfig { jobs: 20_000, warmup: 2_000, ..base_cfg() };
+        let mut exact = run(&cfg, RunOptions::default()).unwrap();
+        let mut stream = run(
+            &cfg,
+            RunOptions { streaming: true, streaming_q: Some(0.75), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(exact.sojourn_summary.mean(), stream.sojourn_summary.mean());
+        assert_eq!(exact.sojourn.len(), stream.sojourn.len());
+        for q in [0.5, 0.9, 0.99] {
+            let (a, b) = (exact.sojourn_quantile(q), stream.sojourn_quantile(q));
+            assert!((a - b).abs() / a < 0.15, "q={q}: exact {a} vs P2 {b}");
+        }
+        // The extra tracked quantile is served too.
+        let extra = stream.sojourn_quantile(0.75);
+        let exact75 = exact.sojourn_quantile(0.75);
+        assert!((extra - exact75).abs() / exact75 < 0.15);
+        // Thirds partition covers every measured job exactly once.
+        let n: u64 = stream.thirds.iter().map(|t| t.count()).sum();
+        assert_eq!(n, 20_000);
     }
 
     /// Overhead strictly increases sojourn times (coupling: same seed).

@@ -200,11 +200,7 @@ mod tests {
     use crate::dist::Deterministic;
 
     fn det_workload(exec: f64) -> Workload {
-        Workload::new(
-            Box::new(Deterministic::new(100.0)),
-            Box::new(Deterministic::new(exec)),
-            1,
-        )
+        Workload::new(Deterministic::new(100.0).into(), Deterministic::new(exec).into(), 1)
     }
 
     #[test]

@@ -83,21 +83,18 @@ pub enum Stability {
 /// over the run's thirds: monotone growth by more than `factor` flags
 /// divergence. This is a *validation* tool (slow, heuristic); the MC
 /// estimators above are the product path.
+///
+/// Runs in streaming mode: the runner accumulates the per-third sojourn
+/// summaries on the fly, so long scans cost O(1) memory instead of
+/// storing every [`super::JobRecord`].
 pub fn detect(cfg: &SimulationConfig, factor: f64) -> Result<Stability, String> {
     let mut cfg = cfg.clone();
     cfg.warmup = 0; // transient growth is the signal
-    let res = super::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })?;
-    let jobs = &res.jobs;
-    if jobs.len() < 300 {
+    let res = super::run(&cfg, RunOptions { streaming: true, ..Default::default() })?;
+    if res.sojourn.len() < 300 {
         return Err("need >= 300 jobs to detect stability".into());
     }
-    let third = jobs.len() / 3;
-    let mean = |s: &[super::JobRecord]| -> f64 {
-        s.iter().map(|j| j.sojourn()).sum::<f64>() / s.len() as f64
-    };
-    let m1 = mean(&jobs[..third]);
-    let m2 = mean(&jobs[third..2 * third]);
-    let m3 = mean(&jobs[2 * third..]);
+    let [m1, m2, m3] = [res.thirds[0].mean(), res.thirds[1].mean(), res.thirds[2].mean()];
     if m3 > m2 * factor && m2 > m1 * factor {
         Ok(Stability::Unstable)
     } else {

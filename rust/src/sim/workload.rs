@@ -2,17 +2,23 @@
 //! the configured distributions (Sec. 2.3's controlled experiments).
 
 use crate::config::SimulationConfig;
-use crate::dist::{parse_spec, Distribution};
+use crate::dist::{parse_spec, Dist, Distribution};
 use crate::rng::{Pcg64, Rng};
 
 /// A reproducible stream of job arrivals and task execution times.
+///
+/// Sampling is enum-dispatched through [`Dist::draw`] — the innermost
+/// loop of every simulator engine monomorphizes to straight arithmetic
+/// with no vtable call and no `&mut dyn FnMut` closure (§Perf log).
+/// `TT_NO_FAST_EXP=1` routes execution draws through dyn dispatch
+/// instead, for A/B-measuring the dispatch cost; both paths use the same
+/// formulas on the same stream, so results are bit-for-bit identical
+/// (enforced by `rust/tests/scenario_equivalence.rs`).
 pub struct Workload {
-    interarrival: Box<dyn Distribution>,
-    execution: Box<dyn Distribution>,
-    /// Devirtualized fast path: exponential execution rate, if the
-    /// execution distribution is `Exp` (the paper's canonical case; §Perf
-    /// log — saves a dyn call + closure per task on the hot loop).
-    exec_exp_rate: Option<f64>,
+    interarrival: Dist,
+    execution: Dist,
+    /// `TT_NO_FAST_EXP=1`: force the dyn-dispatch sampling path.
+    force_dyn: bool,
     rng: Pcg64,
     clock: f64,
 }
@@ -28,27 +34,11 @@ impl Workload {
     }
 
     /// Build from explicit distributions and a seed.
-    pub fn new(
-        interarrival: Box<dyn Distribution>,
-        execution: Box<dyn Distribution>,
-        seed: u64,
-    ) -> Self {
-        // Recognize the exponential case for the devirtualized fast path
-        // (identical sampling formula, so results are bit-for-bit equal).
-        // TT_NO_FAST_EXP=1 disables it for §Perf A/B measurement.
-        let exec_exp_rate = if std::env::var_os("TT_NO_FAST_EXP").is_some() {
-            None
-        } else {
-            let label = execution.label();
-            label
-                .strip_prefix("Exp(")
-                .and_then(|s| s.strip_suffix(')'))
-                .and_then(|s| s.parse::<f64>().ok())
-        };
+    pub fn new(interarrival: Dist, execution: Dist, seed: u64) -> Self {
         Self {
             interarrival,
             execution,
-            exec_exp_rate,
+            force_dyn: std::env::var_os("TT_NO_FAST_EXP").is_some(),
             rng: Pcg64::seed_from_u64(seed),
             clock: 0.0,
         }
@@ -57,19 +47,19 @@ impl Workload {
     /// Advance to and return the next job arrival time.
     #[inline]
     pub fn next_arrival(&mut self) -> f64 {
-        let mut f = || self.rng.next_f64_open();
-        self.clock += self.interarrival.sample(&mut f);
+        self.clock += self.interarrival.draw(&mut self.rng);
         self.clock
     }
 
     /// Draw one task execution time `E_i(n)`.
     #[inline]
     pub fn next_execution(&mut self) -> f64 {
-        if let Some(rate) = self.exec_exp_rate {
-            return -self.rng.next_f64_open().ln() / rate;
+        if self.force_dyn {
+            let mut f = || self.rng.next_f64_open();
+            let d: &dyn Distribution = &self.execution;
+            return d.sample(&mut f);
         }
-        let mut f = || self.rng.next_f64_open();
-        self.execution.sample(&mut f)
+        self.execution.draw(&mut self.rng)
     }
 
     /// Mean task execution time of the configured distribution.
@@ -96,11 +86,7 @@ mod tests {
 
     #[test]
     fn arrivals_increase() {
-        let mut w = Workload::new(
-            Box::new(Exponential::new(0.5)),
-            Box::new(Exponential::new(1.0)),
-            7,
-        );
+        let mut w = Workload::new(Exponential::new(0.5).into(), Exponential::new(1.0).into(), 7);
         let mut prev = 0.0;
         for _ in 0..1000 {
             let a = w.next_arrival();
@@ -113,13 +99,7 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let mk = || {
-            Workload::new(
-                Box::new(Exponential::new(1.0)),
-                Box::new(Exponential::new(2.0)),
-                99,
-            )
-        };
+        let mk = || Workload::new(Exponential::new(1.0).into(), Exponential::new(2.0).into(), 99);
         let (mut a, mut b) = (mk(), mk());
         for _ in 0..100 {
             assert_eq!(a.next_arrival(), b.next_arrival());

@@ -15,5 +15,7 @@ pub use ci::quantile_ci;
 pub use ecdf::Ecdf;
 pub use histogram::Histogram;
 pub use ppplot::{pp_distance, pp_points, PpPoint};
-pub use quantile::{quantile_of_sorted, P2Quantile, QuantileSketch};
+pub use quantile::{
+    quantile_of_sorted, P2Quantile, QuantileEstimator, QuantileSketch, StreamingQuantiles,
+};
 pub use summary::Summary;

@@ -92,6 +92,9 @@ pub struct P2Quantile {
     desired: [f64; 5],
     increments: [f64; 5],
     count: usize,
+    /// First five samples, kept **sorted** by insertion position so the
+    /// small-sample `value()` path reads it directly (no clone + re-sort
+    /// per call).
     initial: Vec<f64>,
 }
 
@@ -110,14 +113,22 @@ impl P2Quantile {
         }
     }
 
+    /// The tracked quantile.
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
     /// Observe one sample.
     pub fn push(&mut self, x: f64) {
         self.count += 1;
         if self.initial.len() < 5 {
-            self.initial.push(x);
+            // Sorted insertion keeps the buffer query-ready. NaN would
+            // silently corrupt the order (the old sort panicked) — keep
+            // the failure loud.
+            assert!(!x.is_nan(), "NaN sample");
+            let pos = self.initial.partition_point(|&v| v <= x);
+            self.initial.insert(pos, x);
             if self.initial.len() == 5 {
-                self.initial
-                    .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
                 self.heights.copy_from_slice(&self.initial);
             }
             return;
@@ -180,9 +191,8 @@ impl P2Quantile {
             return f64::NAN;
         }
         if self.initial.len() < 5 {
-            let mut v = self.initial.clone();
-            v.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
-            return quantile_of_sorted(&v, self.q);
+            // `initial` is maintained sorted; read it in place.
+            return quantile_of_sorted(&self.initial, self.q);
         }
         self.heights[2]
     }
@@ -190,6 +200,125 @@ impl P2Quantile {
     /// Number of samples observed.
     pub fn count(&self) -> usize {
         self.count
+    }
+}
+
+/// A bank of [`P2Quantile`] estimators sharing one streaming pass —
+/// O(1) memory regardless of sample count.
+#[derive(Clone, Debug)]
+pub struct StreamingQuantiles {
+    estimators: Vec<P2Quantile>,
+    count: usize,
+}
+
+impl StreamingQuantiles {
+    /// Track the given quantiles (duplicates within 1e-12 are merged).
+    pub fn new(qs: &[f64]) -> Self {
+        let mut estimators: Vec<P2Quantile> = Vec::with_capacity(qs.len());
+        for &q in qs {
+            if !estimators.iter().any(|e| (e.q() - q).abs() < 1e-12) {
+                estimators.push(P2Quantile::new(q));
+            }
+        }
+        assert!(!estimators.is_empty(), "need at least one quantile");
+        Self { estimators, count: 0 }
+    }
+
+    /// Observe one sample (feeds every tracked estimator).
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        for e in &mut self.estimators {
+            e.push(x);
+        }
+        self.count += 1;
+    }
+
+    /// Number of samples observed.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// True when no samples were observed.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Estimate for a tracked quantile; `None` if `q` is not tracked.
+    pub fn value(&self, q: f64) -> Option<f64> {
+        self.estimators.iter().find(|e| (e.q() - q).abs() < 1e-12).map(|e| e.value())
+    }
+
+    /// The tracked quantiles.
+    pub fn tracked(&self) -> Vec<f64> {
+        self.estimators.iter().map(|e| e.q()).collect()
+    }
+}
+
+/// Quantile estimator with a run-time choice of memory/accuracy trade:
+/// exact store-and-sort (figures, ECDFs) or the P² bank (stability scans
+/// and million-job sweep points in O(1) memory).
+#[derive(Clone, Debug)]
+pub enum QuantileEstimator {
+    /// Stores every sample; any quantile, exact.
+    Exact(QuantileSketch),
+    /// O(1)-memory streaming bank; only pre-registered quantiles.
+    Streaming(StreamingQuantiles),
+}
+
+impl QuantileEstimator {
+    /// Exact estimator pre-sized for `n` samples.
+    pub fn exact_with_capacity(n: usize) -> Self {
+        Self::Exact(QuantileSketch::with_capacity(n))
+    }
+
+    /// Streaming estimator tracking `qs`.
+    pub fn streaming(qs: &[f64]) -> Self {
+        Self::Streaming(StreamingQuantiles::new(qs))
+    }
+
+    /// Add one sample.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        match self {
+            Self::Exact(s) => s.push(x),
+            Self::Streaming(s) => s.push(x),
+        }
+    }
+
+    /// Number of samples observed.
+    pub fn len(&self) -> usize {
+        match self {
+            Self::Exact(s) => s.len(),
+            Self::Streaming(s) => s.len(),
+        }
+    }
+
+    /// True when no samples were observed.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Quantile `q`. Exact mode serves any `q`; streaming mode serves
+    /// only tracked quantiles and panics otherwise (a programming error:
+    /// the caller chose streaming mode without registering `q`).
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        match self {
+            Self::Exact(s) => s.quantile(q),
+            Self::Streaming(s) => s.value(q).unwrap_or_else(|| {
+                panic!(
+                    "quantile {q} not tracked in streaming mode (tracked: {:?})",
+                    s.tracked()
+                )
+            }),
+        }
+    }
+
+    /// Borrow the exact sketch, if this estimator stores samples.
+    pub fn as_exact_mut(&mut self) -> Option<&mut QuantileSketch> {
+        match self {
+            Self::Exact(s) => Some(s),
+            Self::Streaming(_) => None,
+        }
     }
 }
 
@@ -257,5 +386,45 @@ mod tests {
             p2.push(x);
         }
         assert!((p2.value() - 2.0).abs() < 1e-12);
+        // The sorted-insert path is queryable after every push.
+        let mut p = P2Quantile::new(0.5);
+        p.push(5.0);
+        assert_eq!(p.value(), 5.0);
+        p.push(1.0);
+        assert!((p.value() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_bank_tracks_and_dedups() {
+        let mut s = StreamingQuantiles::new(&[0.5, 0.9, 0.9, 0.99]);
+        assert_eq!(s.tracked().len(), 3, "duplicate q merged");
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..200_000 {
+            s.push(-rng.next_f64_open().ln());
+        }
+        assert_eq!(s.len(), 200_000);
+        let med = s.value(0.5).unwrap();
+        let exact = -(0.5f64).ln();
+        assert!((med - exact).abs() / exact < 0.05, "{med} vs {exact}");
+        assert!(s.value(0.123).is_none());
+    }
+
+    #[test]
+    fn estimator_modes_agree_within_tolerance() {
+        let mut exact = QuantileEstimator::exact_with_capacity(100_000);
+        let mut stream = QuantileEstimator::streaming(&[0.5, 0.99]);
+        let mut rng = Pcg64::seed_from_u64(13);
+        for _ in 0..100_000 {
+            let x = -rng.next_f64_open().ln();
+            exact.push(x);
+            stream.push(x);
+        }
+        assert_eq!(exact.len(), stream.len());
+        for q in [0.5, 0.99] {
+            let (a, b) = (exact.quantile(q), stream.quantile(q));
+            assert!((a - b).abs() / a < 0.05, "q={q}: exact {a} vs P2 {b}");
+        }
+        assert!(exact.as_exact_mut().is_some());
+        assert!(stream.as_exact_mut().is_none());
     }
 }

@@ -3,110 +3,145 @@
 //! engine (`sim::calendar`). Structural agreement between independently
 //! written simulators is the strongest correctness evidence we can get
 //! without the original forkulator.
+//!
+//! The calendar engine draws each job's tasks at its arrival event and
+//! schedules arrivals lazily, so its RNG draw order is identical to the
+//! recursion engines' (arrival, then k × (execution, overhead), per job
+//! in arrival order). For single-stage workloads the cross-check is
+//! therefore **bit-for-bit** — including with the overhead model enabled
+//! and at k not divisible by l — not merely distributional.
 
 use tiny_tasks::config::OverheadConfig;
-use tiny_tasks::dist::Exponential;
+use tiny_tasks::dist::{Deterministic, Exponential};
 use tiny_tasks::sim::models::{ForkJoinSingleQueue, Model, SplitMerge};
-use tiny_tasks::sim::{Calendar, Discipline, OverheadModel, TraceLog, Workload};
+use tiny_tasks::sim::{Calendar, Discipline, JobRecord, OverheadModel, TraceLog, Workload};
 
 fn mk_workload(lambda: f64, mu: f64, seed: u64) -> Workload {
-    Workload::new(
-        Box::new(Exponential::new(lambda)),
-        Box::new(Exponential::new(mu)),
-        seed,
-    )
+    Workload::new(Exponential::new(lambda).into(), Exponential::new(mu).into(), seed)
 }
 
-/// Single-queue fork-join: identical seeds ⇒ identical departure times.
-/// (Both engines draw arrival-then-k-tasks in FIFO dispatch order, so the
-/// RNG streams align exactly.)
+/// Drive a recursion-engine model through `n` jobs, mirroring the
+/// public runner's loop.
+fn run_recursion<M: Model>(
+    model: &mut M,
+    n: usize,
+    workload: &mut Workload,
+    overhead: &OverheadModel,
+) -> Vec<JobRecord> {
+    let mut tr = TraceLog::disabled();
+    (0..n)
+        .map(|j| {
+            let a = workload.next_arrival();
+            model.advance(j, a, workload, overhead, &mut tr)
+        })
+        .collect()
+}
+
+fn assert_bitwise_equal(rec: &[JobRecord], cal: &[JobRecord], tag: &str) {
+    assert_eq!(rec.len(), cal.len(), "{tag}: record counts");
+    for (j, (a, b)) in rec.iter().zip(cal).enumerate() {
+        assert!(a.arrival == b.arrival, "{tag} job {j}: arrival {} vs {}", a.arrival, b.arrival);
+        assert!(
+            a.departure == b.departure,
+            "{tag} job {j}: departure {} vs {}",
+            a.departure,
+            b.departure
+        );
+        assert!(
+            a.workload == b.workload,
+            "{tag} job {j}: workload {} vs {}",
+            a.workload,
+            b.workload
+        );
+        assert!(
+            a.task_overhead == b.task_overhead,
+            "{tag} job {j}: overhead {} vs {}",
+            a.task_overhead,
+            b.task_overhead
+        );
+        assert!(
+            a.pre_departure_overhead == b.pre_departure_overhead,
+            "{tag} job {j}: pre-departure {} vs {}",
+            a.pre_departure_overhead,
+            b.pre_departure_overhead
+        );
+    }
+}
+
+/// Single-queue fork-join: identical seeds ⇒ identical records, bitwise.
 #[test]
-fn fj_engines_agree_exactly() {
+fn fj_engines_agree_bitwise() {
     for &(l, k, lambda, seed) in &[
         (2usize, 6usize, 0.4, 11u64),
         (10, 40, 0.5, 12),
         (25, 25, 0.3, 13),
         (5, 50, 0.6, 14),
+        (7, 25, 0.45, 15), // k not divisible by l
     ] {
         let mu = k as f64 / l as f64;
         let n = 2000;
-        // Recursion engine.
-        let mut w1 = mk_workload(lambda, mu, seed);
         let oh = OverheadModel::none();
-        let mut tr = TraceLog::disabled();
+        let mut w1 = mk_workload(lambda, mu, seed);
         let mut model = ForkJoinSingleQueue::new(l, k);
-        let mut rec_departures = Vec::with_capacity(n);
-        for j in 0..n {
-            let a = w1.next_arrival();
-            rec_departures.push(model.advance(j, a, &mut w1, &oh, &mut tr).departure);
-        }
-        // Calendar engine. NB: it pre-generates ALL arrivals before task
-        // draws, so raw streams differ; regenerate with a workload whose
-        // arrival stream is pre-drawn the same way. Instead, compare via
-        // a deterministic arrival schedule: use the same exponential but
-        // check distributional equality is too weak — so replay exact
-        // arrivals through a deterministic spacing trick is complex;
-        // here we exploit that the calendar draws tasks in the same FIFO
-        // order, and drive BOTH engines from identical pre-drawn streams
-        // by re-seeding: run calendar with its own draw order and assert
-        // quantile agreement to Monte-Carlo precision below, plus exact
-        // mean-workload conservation.
+        let rec = run_recursion(&mut model, n, &mut w1, &oh);
         let mut w2 = mk_workload(lambda, mu, seed);
         let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, l, vec![k as u32]);
-        let recs = cal.run(n, &mut w2, &oh, &mut tr);
-        assert_eq!(recs.len(), n);
-        // Distributional agreement: mean and p99 within MC tolerance.
-        let mean1 = rec_departures
-            .iter()
-            .zip(0..)
-            .map(|(d, _)| d)
-            .sum::<f64>();
-        let _ = mean1;
-        let soj1: Vec<f64> = {
-            // Recompute sojourns from the recursion run.
-            let mut w = mk_workload(lambda, mu, seed);
-            let mut m = ForkJoinSingleQueue::new(l, k);
-            (0..n)
-                .map(|j| {
-                    let a = w.next_arrival();
-                    m.advance(j, a, &mut w, &oh, &mut TraceLog::disabled()).sojourn()
-                })
-                .collect()
-        };
-        let soj2: Vec<f64> = recs.iter().map(|r| r.sojourn()).collect();
-        let mean_a = soj1.iter().sum::<f64>() / n as f64;
-        let mean_b = soj2.iter().sum::<f64>() / n as f64;
-        assert!(
-            (mean_a - mean_b).abs() / mean_a < 0.08,
-            "l={l},k={k}: mean sojourn {mean_a} vs {mean_b}"
-        );
-        let q = |v: &mut Vec<f64>| {
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            v[(n as f64 * 0.95) as usize]
-        };
-        let (mut a, mut b) = (soj1.clone(), soj2.clone());
-        let (qa, qb) = (q(&mut a), q(&mut b));
-        assert!(
-            (qa - qb).abs() / qa < 0.15,
-            "l={l},k={k}: p95 {qa} vs {qb}"
-        );
+        let mut tr = TraceLog::disabled();
+        let cal_recs = cal.run(n, &mut w2, &oh, &mut tr);
+        assert_bitwise_equal(&rec, &cal_recs, &format!("fj l={l} k={k}"));
     }
 }
 
-/// Split-merge: both engines implement D(n) = max(A(n), D(n−1)) + Δ(n);
-/// with deterministic service there is no draw-order ambiguity, so the
-/// agreement is exact.
+/// Fork-join with the paper's overhead model (an extra exponential draw
+/// per task, deterministic pre-departure): still bitwise-identical, at a
+/// k not divisible by l.
+#[test]
+fn fj_engines_agree_bitwise_with_overhead() {
+    let (l, k, lambda, seed) = (7usize, 25usize, 0.45, 21u64);
+    let mu = k as f64 / l as f64;
+    let n = 1500;
+    let oh = OverheadModel::new(OverheadConfig::paper());
+    let mut w1 = mk_workload(lambda, mu, seed);
+    let mut model = ForkJoinSingleQueue::new(l, k);
+    let rec = run_recursion(&mut model, n, &mut w1, &oh);
+    let mut w2 = mk_workload(lambda, mu, seed);
+    let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, l, vec![k as u32]);
+    let mut tr = TraceLog::disabled();
+    let cal_recs = cal.run(n, &mut w2, &oh, &mut tr);
+    assert_bitwise_equal(&rec, &cal_recs, "fj+overhead");
+    // The overhead model genuinely fired.
+    assert!(rec.iter().all(|r| r.task_overhead > 0.0));
+    assert!(rec.iter().all(|r| r.pre_departure_overhead > 0.0));
+}
+
+/// Split-merge with exponential service AND the overhead model: the
+/// shared draw order upgrades the old deterministic-service-only exact
+/// check to fully random workloads, again at k not divisible by l.
+#[test]
+fn sm_engines_agree_bitwise_with_overhead() {
+    for &(l, k, seed) in &[(3usize, 9usize, 77u64), (7, 25, 78), (10, 64, 79)] {
+        let mu = k as f64 / l as f64;
+        let n = 800;
+        let oh = OverheadModel::new(OverheadConfig::paper());
+        let mut w1 = mk_workload(0.4, mu, seed);
+        let mut model = SplitMerge::new(l, k);
+        let rec = run_recursion(&mut model, n, &mut w1, &oh);
+        let mut w2 = mk_workload(0.4, mu, seed);
+        let mut cal = Calendar::new(Discipline::SplitMerge, l, vec![k as u32]);
+        let mut tr = TraceLog::disabled();
+        let cal_recs = cal.run(n, &mut w2, &oh, &mut tr);
+        assert_bitwise_equal(&rec, &cal_recs, &format!("sm l={l} k={k}"));
+    }
+}
+
+/// Split-merge with deterministic service: the original exact agreement
+/// regression (no draw-order ambiguity at all).
 #[test]
 fn sm_engines_agree_deterministic_service() {
-    use tiny_tasks::dist::Deterministic;
     let (l, k) = (3usize, 9usize);
     let n = 500;
     let mk = |seed: u64| {
-        Workload::new(
-            Box::new(Exponential::new(0.4)),
-            Box::new(Deterministic::new(0.5)),
-            seed,
-        )
+        Workload::new(Exponential::new(0.4).into(), Deterministic::new(0.5).into(), seed)
     };
     let oh = OverheadModel::new(OverheadConfig {
         c_task_ts: 0.01,
@@ -133,33 +168,6 @@ fn sm_engines_agree_deterministic_service() {
             r.departure
         );
     }
-}
-
-/// Split-merge with exponential service: distributional agreement.
-#[test]
-fn sm_engines_agree_distributionally() {
-    let (l, k, lambda) = (10usize, 60usize, 0.4);
-    let mu = k as f64 / l as f64;
-    let n = 4000;
-    let oh = OverheadModel::none();
-    let mut tr = TraceLog::disabled();
-    let mut w1 = mk_workload(lambda, mu, 5);
-    let mut model = SplitMerge::new(l, k);
-    let mean_a: f64 = (0..n)
-        .map(|j| {
-            let a = w1.next_arrival();
-            model.advance(j, a, &mut w1, &oh, &mut tr).sojourn()
-        })
-        .sum::<f64>()
-        / n as f64;
-    let mut w2 = mk_workload(lambda, mu, 5);
-    let mut cal = Calendar::new(Discipline::SplitMerge, l, vec![k as u32]);
-    let recs = cal.run(n, &mut w2, &oh, &mut tr);
-    let mean_b: f64 = recs.iter().map(|r| r.sojourn()).sum::<f64>() / n as f64;
-    assert!(
-        (mean_a - mean_b).abs() / mean_a < 0.05,
-        "mean sojourn {mean_a} vs {mean_b}"
-    );
 }
 
 /// Multi-stage extension sanity at system level: a map+reduce job stream

@@ -109,6 +109,45 @@ fn advisor_simulated_for_skewed_cluster() {
 }
 
 #[test]
+fn simulate_streaming_mode() {
+    assert_eq!(
+        run(&[
+            "simulate", "--model", "fj", "--servers", "4", "--k", "8", "--lambda", "0.4",
+            "--jobs", "2000", "--warmup", "200", "--streaming=true",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn bench_writes_bench_json() {
+    let dir = std::env::temp_dir().join(format!("tt-bench-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH.json");
+    // --fast already selects the explicit smoke budgets; no env flips
+    // (this binary's tests run in parallel).
+    assert_eq!(run(&["bench", "--fast=true", "--out", path.to_str().unwrap()]), 0);
+    let body = std::fs::read_to_string(&path).unwrap();
+    assert!(body.contains("\"schema_version\": 1"));
+    // All four models plus both calendar disciplines are present.
+    for name in [
+        "sim/sm/l50/k400",
+        "sim/fj/l50/k400",
+        "sim/fjps/l50",
+        "sim/ideal/l50/k400",
+        "calendar/sm/l50/k400",
+        "calendar/fj/l50/k400",
+        "calendar/fj/l10/k20/headline",
+    ] {
+        assert!(body.contains(name), "BENCH.json missing {name}:\n{body}");
+    }
+    assert!(body.contains("jobs_per_sec"));
+    assert!(body.contains("tasks_per_sec"));
+    // Sanity: it parses as a JSON object to a naive bracket check.
+    assert!(body.trim_start().starts_with('{') && body.trim_end().ends_with('}'));
+}
+
+#[test]
 fn emulate_quick() {
     assert_eq!(
         run(&[

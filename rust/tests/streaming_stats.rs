@@ -1,0 +1,114 @@
+//! Streaming-vs-exact runner equivalence: the O(1)-memory mode (P²
+//! quantile bank + Welford summaries, no sample storage) must leave the
+//! simulation itself untouched — bitwise-equal means, sample counts, and
+//! per-third summaries — and estimate quantiles within P² tolerance.
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::coordinator::sweep::{run_sweep, run_sweep_with, SweepOptions, SweepPoint};
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::util::threadpool::ThreadPool;
+
+fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs,
+        warmup: jobs / 10,
+        seed,
+        overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+    }
+}
+
+/// Same seed, both memory modes, every model: bitwise-equal streaming
+/// summaries, quantiles within tolerance.
+#[test]
+fn streaming_runner_equivalent_to_exact() {
+    for (model, k) in [
+        (ModelKind::SplitMerge, 32),
+        (ModelKind::ForkJoinSingleQueue, 32),
+        (ModelKind::ForkJoinPerServer, 8),
+        (ModelKind::Ideal, 32),
+    ] {
+        let c = cfg(model, 8, k, 30_000, 5);
+        let mut exact = sim::run(&c, RunOptions::default()).unwrap();
+        let mut stream = sim::run(
+            &c,
+            RunOptions { streaming: true, streaming_q: Some(0.8), ..Default::default() },
+        )
+        .unwrap();
+        // The sample stream is identical, so the exact accumulators are
+        // bitwise equal.
+        assert_eq!(exact.sojourn_summary.mean(), stream.sojourn_summary.mean(), "{model}: mean");
+        assert_eq!(
+            exact.sojourn_summary.variance(),
+            stream.sojourn_summary.variance(),
+            "{model}: variance"
+        );
+        assert_eq!(exact.overhead_summary.mean(), stream.overhead_summary.mean());
+        assert_eq!(exact.sojourn.len(), stream.sojourn.len(), "{model}: count");
+        for i in 0..3 {
+            assert_eq!(
+                exact.thirds[i].count(),
+                stream.thirds[i].count(),
+                "{model}: third {i} count"
+            );
+            assert_eq!(exact.thirds[i].mean(), stream.thirds[i].mean(), "{model}: third {i} mean");
+        }
+        // P² tracks the exact quantiles within a few percent at 30k
+        // samples (default grid + the explicitly registered 0.8).
+        for q in [0.5, 0.8, 0.9, 0.99] {
+            let (a, b) = (exact.sojourn_quantile(q), stream.sojourn_quantile(q));
+            assert!((a - b).abs() / a < 0.15, "{model} q={q}: exact {a} vs P2 {b}");
+        }
+        // Combined abs+rel tolerance: low-load waiting quantiles can be
+        // exactly 0 in the exact sketch while P² interpolates near 0.
+        let (a, b) = (exact.waiting_quantile(0.9), stream.waiting_quantile(0.9));
+        assert!((a - b).abs() <= 0.15 * a + 0.05, "{model} waiting: {a} vs {b}");
+    }
+}
+
+/// Streaming mode records no per-job samples unless asked to.
+#[test]
+fn streaming_mode_stores_no_jobs() {
+    let c = cfg(ModelKind::ForkJoinSingleQueue, 8, 32, 5_000, 9);
+    let mut res = sim::run(&c, RunOptions { streaming: true, ..Default::default() }).unwrap();
+    assert!(res.jobs.is_empty());
+    assert_eq!(res.sojourn.len(), 5_000);
+    assert!(res.sojourn.as_exact_mut().is_none(), "streaming must not store samples");
+}
+
+/// The sweep layer threads streaming through to every point: bitwise
+/// means, tolerant quantiles, pool-size independence preserved.
+#[test]
+fn streaming_sweep_equivalent_and_pool_independent() {
+    let mk = |k: usize| SweepPoint {
+        label: k as f64,
+        config: cfg(ModelKind::ForkJoinSingleQueue, 8, k, 12_000, 0),
+    };
+    let points: Vec<SweepPoint> = [16, 32, 64].iter().map(|&k| mk(k)).collect();
+    let opts = SweepOptions { q: 0.99, streaming: true };
+    let pool1 = ThreadPool::new(1);
+    let pool4 = ThreadPool::new(4);
+    let s1 = run_sweep_with(&pool1, points.clone(), opts, 7).unwrap();
+    let s4 = run_sweep_with(&pool4, points.clone(), opts, 7).unwrap();
+    for (a, b) in s1.iter().zip(&s4) {
+        assert_eq!(a.sojourn_q, b.sojourn_q, "pool-size dependence");
+        assert_eq!(a.sojourn_mean, b.sojourn_mean);
+    }
+    let exact = run_sweep(&pool4, points, 0.99, 7).unwrap();
+    for (a, b) in exact.iter().zip(&s1) {
+        assert_eq!(a.sojourn_mean, b.sojourn_mean, "k={}", a.label);
+        assert!(
+            (a.sojourn_q - b.sojourn_q).abs() / a.sojourn_q < 0.2,
+            "k={}: exact {} vs P2 {}",
+            a.label,
+            a.sojourn_q,
+            b.sojourn_q
+        );
+    }
+}
