@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             warmup,
             seed: 42,
             inject_overhead: Some(OverheadConfig::paper()),
+            workers: None,
         };
         let mut res = Cluster::run_with(&cfg, move |job, task| {
             // Exp-distributed task duration (capped at 20x mean).

@@ -1,13 +1,60 @@
 //! Executor activity traces (Figs. 1–2): render an ASCII Gantt strip of a
-//! split-merge run at coarse vs. fine task granularity and write the
-//! full traces as CSV.
+//! split-merge run at coarse vs. fine task granularity — from a *saved
+//! trace file*, not only an in-memory run.
 //!
 //! Run: `cargo run --release --example gantt`
+//!   — records both runs to `reports/gantt_k{400,1500}.trace.ndjson`,
+//!     reloads them, and renders from the reloaded traces.
+//!
+//! Run: `cargo run --release --example gantt -- path/to/trace.ndjson`
+//!   — renders any previously recorded trace file (e.g. one written by
+//!     `tiny-tasks trace record`), no simulation at all.
 
 use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
 use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::trace::Trace;
+
+/// ASCII strip + utilization line, straight off a trace's task rows.
+fn render(label: &str, trace: &Trace) {
+    println!("\n=== {label} ===");
+    // 12 executors x 100 columns over the first 5 s; digit = job index
+    // running, '.' = idle.
+    let horizon = 5.0;
+    let cols = 100usize;
+    let servers = trace.meta.servers.min(12);
+    for server in 0..servers {
+        let mut row = vec!['.'; cols];
+        for ev in trace.tasks.iter().filter(|t| t.server == server) {
+            let c0 = ((ev.start / horizon) * cols as f64) as usize;
+            let c1 = ((ev.end / horizon) * cols as f64).ceil() as usize;
+            for cell in row.iter_mut().take(c1.min(cols)).skip(c0.min(cols)) {
+                *cell = char::from_digit(ev.job % 10, 10).unwrap_or('#');
+            }
+        }
+        println!("exec {server:>2} |{}|", row.iter().collect::<String>());
+    }
+    // Busy fraction per executor over [0, horizon].
+    let util = trace.utilization(0.0, horizon);
+    let mean_util = util.iter().sum::<f64>() / util.len() as f64;
+    let last_departure = trace
+        .jobs
+        .iter()
+        .map(|j| j.departure)
+        .fold(f64::NAN, f64::max);
+    println!(
+        "mean utilization over first {horizon}s: {:.1}% | last job departs at {last_departure:.2}s",
+        100.0 * mean_util
+    );
+}
 
 fn main() -> anyhow::Result<()> {
+    // A trace file argument skips simulation entirely: load and render.
+    if let Some(path) = std::env::args().nth(1) {
+        let trace = Trace::read_file(&path).map_err(anyhow::Error::msg)?;
+        render(&path, &trace);
+        return Ok(());
+    }
+
     for (label, k) in [("COARSE (k=400, Fig. 1)", 400usize), ("FINE (k=1500, Fig. 2)", 1500)] {
         let cfg = SimulationConfig {
             model: ModelKind::SplitMerge,
@@ -28,31 +75,17 @@ fn main() -> anyhow::Result<()> {
         )
         .map_err(anyhow::Error::msg)?;
 
-        println!("\n=== {label} ===");
-        // ASCII strip: 12 executors x 100 columns over the first 5 s;
-        // digit = job index running, '.' = idle.
-        let horizon = 5.0;
-        let cols = 100usize;
-        for server in 0..12u32 {
-            let mut row = vec!['.'; cols];
-            for ev in res.trace.events().iter().filter(|e| e.server == server) {
-                let c0 = ((ev.start / horizon) * cols as f64) as usize;
-                let c1 = ((ev.end / horizon) * cols as f64).ceil() as usize;
-                for cell in row.iter_mut().take(c1.min(cols)).skip(c0.min(cols)) {
-                    *cell = char::from_digit(ev.job % 10, 10).unwrap_or('#');
-                }
-            }
-            println!("exec {server:>2} |{}|", row.iter().collect::<String>());
-        }
-        let util = res.trace.utilization(50, 0.0, horizon);
-        println!(
-            "mean utilization over first {horizon}s: {:.1}% | 4th job departs at {:.2}s",
-            100.0 * util.iter().sum::<f64>() / util.len() as f64,
-            res.jobs.last().unwrap().departure
-        );
-        let path = format!("reports/gantt_k{k}.csv");
-        res.trace.to_csv().write_file(&path)?;
-        println!("full trace -> {path}");
+        // Persist, reload, and render from the *reloaded* trace — the
+        // same path `tiny-tasks trace record` + this example's file-arg
+        // mode exercise.
+        let path = format!("reports/gantt_k{k}.trace.ndjson");
+        let trace = Trace::from_sim(&res).map_err(anyhow::Error::msg)?;
+        trace.write_file(&path, None).map_err(anyhow::Error::msg)?;
+        let reloaded = Trace::read_file(&path).map_err(anyhow::Error::msg)?;
+        render(label, &reloaded);
+        println!("saved trace -> {path} (render it again: cargo run --example gantt -- {path})");
+        // The legacy CSV export stays available for spreadsheet users.
+        res.trace.to_csv().write_file(format!("reports/gantt_k{k}.csv"))?;
     }
     println!(
         "\nFiner granularity fills the merge-barrier idle gaps — the visual\n\

@@ -26,6 +26,7 @@ fn main() {
         warmup: 15,
         seed: 5,
         inject_overhead: Some(injected),
+        workers: None,
     };
     let t0 = Instant::now();
     let cal = calibrate::calibrate(&base, &[64, 192]).expect("calibration");

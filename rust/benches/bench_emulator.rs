@@ -29,6 +29,7 @@ fn main() {
             warmup: 0,
             seed: 1,
             inject_overhead: None,
+            workers: None,
         };
         let r = b.bench("dispatch_1280_null_tasks", || {
             emulator::run(&cfg).unwrap().listener.tasks.len()
@@ -54,6 +55,7 @@ fn main() {
             warmup: 6,
             seed: 2,
             inject_overhead: None,
+            workers: None,
         };
         let res = emulator::run(&cfg).unwrap();
         let mean_oh: f64 = res.listener.tasks.iter().map(|t| t.overhead()).sum::<f64>()
@@ -79,6 +81,7 @@ fn main() {
             warmup: 0,
             seed: 3,
             inject_overhead: None,
+            workers: None,
         };
         let r = b.bench("real_payload_128_tasks", || {
             Cluster::run_with(&cfg, |job, task| {

@@ -115,10 +115,24 @@ COMMANDS:
                   --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
     bench       Run the deterministic perf suite and write BENCH.json
                   [--out FILE] [--fast] [--seed S]
-                  jobs/sec + tasks/sec per model x k, both DES engines
+                  [--baseline BENCH_BASELINE.json [--max-regression F]]
+                  jobs/sec + tasks/sec per model x k, both DES engines;
+                  with --baseline, exit 1 when the headline row regresses
     emulate     Run the sparklite cluster emulator
                   --executors L --k K --mode sm|fj --jobs N
                   --time-scale S --inject-overhead
+                  --speeds 1.0,0.5,.. | --speed-dist SPEC  (slowdown-only
+                  executor pinning, factors in (0,1])
+    trace       Persistent task traces (schema v1, ndjson or binary)
+                  record    --source sim|emulator --out FILE [--format ndjson|bin]
+                            + the simulate/emulate flag sets (--model, --k, ...)
+                  replay    --in FILE [--model sm|fj|fjps|ideal] [--servers L]
+                            [--overhead ...] [--in-order] [--seed S]
+                  summarize --in FILE
+                  convert   --in FILE --out FILE [--format ndjson|bin]
+                  replay feeds recorded arrivals + task sizes through any
+                  model; 'empirical:FILE' distribution specs sample task
+                  sizes straight from a recorded trace
     bounds      Evaluate analytical bounds/approximations
                   --model sm|fj|ideal|sm-big --servers L --k K
                   --lambda RATE --mu RATE --epsilon E [--overhead]
@@ -128,8 +142,9 @@ COMMANDS:
     figure      Regenerate a paper figure's data as CSV
                   fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|hetero|all
                   [--out DIR] [--scale quick|paper]
-    calibrate   Fit the 4-parameter overhead model against sparklite
-                  [--jobs N] [--k K] [--executors L]
+    calibrate   Fit the 4-parameter overhead model (Sec. 2.6)
+                  [--jobs N] [--k K] [--executors L]   (live sparklite)
+                  --from-trace FILE                    (recorded trace)
     advisor     Recommend tasks-per-job for a cluster configuration
                   --servers L --lambda RATE --workload SECONDS [--overhead]
                   with --speeds/--speed-dist/--redundancy the advice comes

@@ -340,6 +340,12 @@ pub struct EmulatorConfig {
     /// Inject the paper's measured Spark overhead components (Fig. 7
     /// scale) on top of sparklite's intrinsic overhead.
     pub inject_overhead: Option<OverheadConfig>,
+    /// Heterogeneous executor speeds; `None` = homogeneous. Executors
+    /// can only be *slowed* (factors in `(0, 1]`): an executor with
+    /// speed `s` dilates each task's execution by `1/s` with extra busy
+    /// work — pinning slow executors the way the DES scenario does, but
+    /// in real threads (real payloads cannot be sped up).
+    pub workers: Option<WorkersConfig>,
 }
 
 impl Default for EmulatorConfig {
@@ -355,6 +361,7 @@ impl Default for EmulatorConfig {
             warmup: 20,
             seed: 1,
             inject_overhead: None,
+            workers: None,
         }
     }
 }
@@ -376,7 +383,22 @@ impl EmulatorConfig {
         }
         crate::dist::parse_spec(&self.interarrival).map_err(|e| e.to_string())?;
         crate::dist::parse_spec(&self.execution).map_err(|e| e.to_string())?;
+        for s in self.resolved_speeds()? {
+            if s > 1.0 {
+                return Err(format!(
+                    "emulator worker speeds must be in (0, 1] (slowdown only), got {s}"
+                ));
+            }
+        }
         Ok(())
+    }
+
+    /// Per-executor speed factors (all 1.0 when homogeneous).
+    pub fn resolved_speeds(&self) -> Result<Vec<f64>, String> {
+        match &self.workers {
+            Some(w) => w.resolve(self.executors),
+            None => Ok(vec![1.0; self.executors]),
+        }
     }
 }
 
@@ -544,6 +566,13 @@ fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
 
 fn emu_from_section(sec: &Section) -> Result<EmulatorConfig, String> {
     let d = EmulatorConfig::default();
+    // Executor speeds piggy-back on the [workers] key set, inline in the
+    // [emulator] section (slowdown-only; validated below).
+    let workers = if sec.contains_key("speeds") || sec.contains_key("speed_dist") {
+        Some(workers_from_section(sec)?)
+    } else {
+        None
+    };
     Ok(EmulatorConfig {
         executors: get_usize(sec, "executors", d.executors)?,
         tasks_per_job: get_usize(sec, "tasks_per_job", d.tasks_per_job)?,
@@ -555,6 +584,7 @@ fn emu_from_section(sec: &Section) -> Result<EmulatorConfig, String> {
         warmup: get_usize(sec, "warmup", d.warmup)?,
         seed: get_usize(sec, "seed", 1)? as u64,
         inject_overhead: overhead_from(sec)?,
+        workers,
     })
 }
 
@@ -692,6 +722,28 @@ speed_seed = 7
         assert!(ExperimentConfig::from_str(
             "[simulation]\nmodel = \"ideal\"\nservers = 4\ntasks_per_job = 8\n\
              [redundancy]\nreplicas = 2\n",
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn emulator_speeds_parse_and_validate() {
+        let cfg = ExperimentConfig::from_str(
+            "[emulator]\nexecutors = 4\ntasks_per_job = 8\n\
+             speeds = [1.0, 1.0, 0.5, 0.25]\n",
+        )
+        .unwrap();
+        let emu = cfg.emulator.unwrap();
+        assert_eq!(emu.resolved_speeds().unwrap(), vec![1.0, 1.0, 0.5, 0.25]);
+        // Speedups are rejected: real payloads cannot run faster.
+        let err = ExperimentConfig::from_str(
+            "[emulator]\nexecutors = 2\ntasks_per_job = 4\nspeeds = [1.0, 1.5]\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("slowdown only"), "{err}");
+        // Arity is checked against executors.
+        assert!(ExperimentConfig::from_str(
+            "[emulator]\nexecutors = 3\ntasks_per_job = 4\nspeeds = [1.0, 0.5]\n",
         )
         .is_err());
     }

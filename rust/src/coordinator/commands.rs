@@ -131,13 +131,18 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `tiny-tasks emulate` — one sparklite run.
-pub fn cmd_emulate(args: &Args) -> Result<i32> {
+/// Build an [`EmulatorConfig`] from `emulate`-style flags (shared with
+/// `trace record --source emulator`).
+fn emulator_cfg_from_args(args: &Args) -> Result<EmulatorConfig> {
     let l = args.get_usize("executors", 8).map_err(e)?;
     let k = args.get_usize("k", 4 * l).map_err(e)?;
     let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
     let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
-    let cfg = EmulatorConfig {
+    let (workers, redundancy) = scenario_from_args(args)?;
+    if redundancy.is_some() {
+        bail!("sparklite does not emulate task redundancy; drop --redundancy");
+    }
+    Ok(EmulatorConfig {
         executors: l,
         tasks_per_job: k,
         mode: ModelKind::parse(&args.get_or("mode", "fj")).map_err(e)?,
@@ -152,10 +157,26 @@ pub fn cmd_emulate(args: &Args) -> Result<i32> {
         } else {
             None
         },
-    };
+        workers,
+    })
+}
+
+/// `tiny-tasks emulate` — one sparklite run.
+pub fn cmd_emulate(args: &Args) -> Result<i32> {
+    let cfg = emulator_cfg_from_args(args)?;
+    cfg.validate().map_err(e)?;
+    let (l, k) = (cfg.executors, cfg.tasks_per_job);
     let mut res = emulator::run(&cfg).map_err(e)?;
     println!("mode             {}", cfg.mode);
     println!("executors        {l}, tasks/job {k}");
+    if cfg.workers.is_some() {
+        let speeds = cfg.resolved_speeds().map_err(e)?;
+        let min = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!(
+            "pinned speeds    in [{min:.3}, 1.000] (Σ = {:.3})",
+            speeds.iter().sum::<f64>()
+        );
+    }
     println!(
         "jobs             {} (+{} warmup), time_scale {}",
         cfg.jobs, cfg.warmup, cfg.time_scale
@@ -279,8 +300,34 @@ pub fn cmd_figure(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `tiny-tasks calibrate` — fit the 4-parameter overhead model.
+fn print_calibration(cal: &calibrate::Calibration) {
+    println!("measured {} tasks / {} jobs", cal.tasks_measured, cal.jobs_measured);
+    println!("fitted overhead model (paper §2.6 table analog, emulated seconds):");
+    println!("  c_task_ts  = {:.6} s ({:.3} ms)", cal.fitted.c_task_ts, cal.fitted.c_task_ts * 1e3);
+    println!("  mu_task_ts = {:.1} 1/s", cal.fitted.mu_task_ts);
+    println!("  c_job_pd   = {:.6} s ({:.3} ms)", cal.fitted.c_job_pd, cal.fitted.c_job_pd * 1e3);
+    println!("  c_task_pd  = {:.9} s ({:.6} ms)", cal.fitted.c_task_pd, cal.fitted.c_task_pd * 1e3);
+    println!(
+        "PP distance: without overhead {:.4} -> with fitted overhead {:.4}",
+        cal.pp_without_overhead, cal.pp_with_overhead
+    );
+}
+
+/// `tiny-tasks calibrate` — fit the 4-parameter overhead model, against
+/// a live sparklite run or (`--from-trace FILE`) a recorded trace.
 pub fn cmd_calibrate(args: &Args) -> Result<i32> {
+    if let Some(path) = args.get("from-trace") {
+        let trace = crate::trace::Trace::read_file(path).map_err(e)?;
+        println!(
+            "trace            {path} ({} source, {} jobs / {} task rows)",
+            trace.meta.source,
+            trace.jobs.len(),
+            trace.tasks.len()
+        );
+        let cal = calibrate::calibrate_from_trace(&trace).map_err(e)?;
+        print_calibration(&cal);
+        return Ok(0);
+    }
     let base = EmulatorConfig {
         executors: args.get_usize("executors", 8).map_err(e)?,
         tasks_per_job: 0, // overridden per k
@@ -297,6 +344,7 @@ pub fn cmd_calibrate(args: &Args) -> Result<i32> {
         } else {
             None
         },
+        workers: None,
     };
     let l = base.executors;
     let ks: Vec<usize> = args
@@ -320,16 +368,7 @@ pub fn cmd_calibrate(args: &Args) -> Result<i32> {
     // (the calibration runs one emulator per k internally).
     let mid = cals[cals.len() / 2].clone();
     let cal = calibrate::calibrate(&mid, &ks).map_err(e)?;
-    println!("measured {} tasks / {} jobs", cal.tasks_measured, cal.jobs_measured);
-    println!("fitted overhead model (paper §2.6 table analog, emulated seconds):");
-    println!("  c_task_ts  = {:.6} s ({:.3} ms)", cal.fitted.c_task_ts, cal.fitted.c_task_ts * 1e3);
-    println!("  mu_task_ts = {:.1} 1/s", cal.fitted.mu_task_ts);
-    println!("  c_job_pd   = {:.6} s ({:.3} ms)", cal.fitted.c_job_pd, cal.fitted.c_job_pd * 1e3);
-    println!("  c_task_pd  = {:.9} s ({:.6} ms)", cal.fitted.c_task_pd, cal.fitted.c_task_pd * 1e3);
-    println!(
-        "PP distance: without overhead {:.4} -> with fitted overhead {:.4}",
-        cal.pp_without_overhead, cal.pp_with_overhead
-    );
+    print_calibration(&cal);
     Ok(0)
 }
 
@@ -610,8 +649,278 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
 
     bencher.finish();
     let json = bench_json(fast, seed, &rows);
-    std::fs::write(&out_path, json)?;
+    std::fs::write(&out_path, &json)?;
     println!("wrote {}", out_path.display());
+
+    // Regression gate: compare the headline row against a committed
+    // baseline (CI fails the job when it regresses by more than
+    // --max-regression, default 2x — integer-factor slowdowns of the
+    // calendar hot path, not noise).
+    if let Some(baseline_path) = args.get("baseline") {
+        let factor = args.get_f64("max-regression", 2.0).map_err(e)?;
+        let headline = "calendar/fj/l10/k20/headline";
+        let baseline_json = std::fs::read_to_string(baseline_path)?;
+        let Some(base) = extract_jobs_per_sec(&baseline_json, headline) else {
+            bail!("{baseline_path}: no jobs_per_sec entry for {headline:?}");
+        };
+        let Some(cur) = extract_jobs_per_sec(&json, headline) else {
+            bail!("BENCH.json: no jobs_per_sec entry for {headline:?}");
+        };
+        println!(
+            "bench gate: {headline} {cur:.0} jobs/s vs baseline {base:.0} \
+             (floor {:.0} = baseline/{factor})",
+            base / factor
+        );
+        if cur * factor < base {
+            println!("bench gate: FAIL — headline regressed by more than {factor}x");
+            return Ok(1);
+        }
+        println!("bench gate: OK");
+    }
+    Ok(0)
+}
+
+/// Pull `jobs_per_sec` for the named entry out of a BENCH.json document
+/// (hand-rolled, no serde). Whitespace-insensitive and tolerant of key
+/// order / pretty-printing, so a jq-reformatted baseline still gates:
+/// the entry is the innermost `{...}` containing the name match.
+fn extract_jobs_per_sec(json: &str, name: &str) -> Option<f64> {
+    let compact: String = json.chars().filter(|c| !c.is_whitespace()).collect();
+    let needle = format!("\"name\":\"{name}\"");
+    let at = compact.find(&needle)?;
+    let obj_start = compact[..at].rfind('{').map(|i| i + 1).unwrap_or(0);
+    let obj_end = compact[at..].find('}').map(|i| at + i).unwrap_or(compact.len());
+    let entry = &compact[obj_start..obj_end];
+    let idx = entry.find("\"jobs_per_sec\":")?;
+    let rest = &entry[idx + "\"jobs_per_sec\":".len()..];
+    let token: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_digit() || matches!(c, '.' | 'e' | 'E' | '+' | '-'))
+        .collect();
+    token.parse().ok()
+}
+
+/// `tiny-tasks trace record|replay|summarize|convert` — the persistent
+/// trace workflows (record from either engine, drive any model from a
+/// file, inspect, transcode).
+pub fn cmd_trace(args: &Args) -> Result<i32> {
+    let Some(sub) = args.positional.first() else {
+        bail!(
+            "usage: tiny-tasks trace <record|replay|summarize|convert> [flags]\n\
+             run 'tiny-tasks help' for the flag list"
+        );
+    };
+    match sub.as_str() {
+        "record" => trace_record(args),
+        "replay" => trace_replay(args),
+        "summarize" => trace_summarize(args),
+        "convert" => trace_convert(args),
+        other => bail!("unknown trace subcommand {other:?} (record|replay|summarize|convert)"),
+    }
+}
+
+fn trace_format_flag(args: &Args) -> Result<Option<crate::trace::TraceFormat>> {
+    match args.get("format") {
+        Some(s) => Ok(Some(crate::trace::TraceFormat::parse(s).map_err(e)?)),
+        None => Ok(None),
+    }
+}
+
+/// `trace record`: run one experiment with job + task capture on and
+/// persist the trace (`--source sim|emulator`).
+fn trace_record(args: &Args) -> Result<i32> {
+    let out = args.get_or("out", "trace.ndjson");
+    let format = trace_format_flag(args)?;
+    let trace = match args.get_or("source", "sim").as_str() {
+        "sim" | "des" => {
+            let l = args.get_usize("servers", 8).map_err(e)?;
+            let k = args.get_usize("k", 4 * l).map_err(e)?;
+            let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+            let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+            let (workers, redundancy) = scenario_from_args(args)?;
+            if workers.is_some() || redundancy.is_some() {
+                // Schema v1 carries no scenario shape: a trace recorded
+                // under pinned speeds or task redundancy would replay and
+                // calibrate as if homogeneous — silently wrong — and the
+                // winning replica of a redundant task is not recoverable
+                // from the task rows (cancelled replicas free their server
+                // at the winner's finish instant).
+                bail!(
+                    "trace record does not capture --speeds/--speed-dist/--redundancy \
+                     (schema v1 has no scenario fields; replay and calibrate \
+                     --from-trace would silently assume homogeneous workers)"
+                );
+            }
+            let cfg = SimulationConfig {
+                model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
+                servers: l,
+                tasks_per_job: k,
+                arrival: crate::config::ArrivalConfig {
+                    interarrival: args.get_or("interarrival", &format!("exp:{lambda}")),
+                },
+                service: crate::config::ServiceConfig {
+                    execution: args.get_or("execution", &format!("exp:{mu}")),
+                },
+                jobs: args.get_usize("jobs", 2_000).map_err(e)?,
+                warmup: args.get_usize("warmup", 200).map_err(e)?,
+                seed: args.get_u64("seed", 1).map_err(e)?,
+                overhead: overhead_from_args(args)?,
+                workers,
+                redundancy,
+            };
+            let res = sim::run(
+                &cfg,
+                RunOptions { record_jobs: true, trace: true, ..Default::default() },
+            )
+            .map_err(e)?;
+            crate::trace::Trace::from_sim(&res).map_err(e)?
+        }
+        "emulator" | "emu" | "sparklite" => {
+            let cfg = emulator_cfg_from_args(args)?;
+            if cfg.workers.is_some() {
+                // Pinned speeds are real measured behavior (fine to
+                // record), but schema v1 meta cannot carry them: warn
+                // that downstream consumers see a homogeneous config.
+                println!(
+                    "note: executor speeds are not recorded in the trace meta; \
+                     replay and calibrate --from-trace will assume homogeneous \
+                     workers against the skewed measurements"
+                );
+            }
+            let res = emulator::run(&cfg).map_err(e)?;
+            crate::trace::Trace::from_emulator(&res).map_err(e)?
+        }
+        other => bail!("unknown --source {other:?} (sim|emulator)"),
+    };
+    trace.write_file(&out, format).map_err(e)?;
+    println!(
+        "recorded {} jobs / {} task rows ({} source) -> {out}",
+        trace.jobs.len(),
+        trace.tasks.len(),
+        trace.meta.source
+    );
+    Ok(0)
+}
+
+/// `trace replay`: drive a model with a recorded trace's arrivals and
+/// task sizes; report replayed sojourns and the PP distance to the
+/// recorded ones.
+fn trace_replay(args: &Args) -> Result<i32> {
+    let Some(path) = args.get("in") else {
+        bail!("trace replay needs --in FILE");
+    };
+    let trace = crate::trace::Trace::read_file(path).map_err(e)?;
+    let opts = crate::trace::ReplayOptions {
+        model: match args.get("model") {
+            Some(m) => Some(ModelKind::parse(m).map_err(e)?),
+            None => None,
+        },
+        servers: match args.get("servers") {
+            Some(_) => Some(args.get_usize("servers", 0).map_err(e)?),
+            None => None,
+        },
+        overhead: overhead_from_args(args)?,
+        in_order_departures: args.get_bool("in-order"),
+        seed: args.get_u64("seed", 1).map_err(e)?,
+    };
+    let rep = crate::trace::replay(&trace, &opts).map_err(e)?;
+    let recorded = trace.sojourns();
+    let replayed = rep.sojourns();
+    println!(
+        "replayed {} jobs ({} tasks each) through {} on l={}",
+        rep.jobs.len(),
+        rep.tasks_per_job,
+        rep.model,
+        rep.servers
+    );
+    let mut sorted = replayed.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "mean sojourn     {:.4} s (recorded {:.4} s)",
+        replayed.iter().sum::<f64>() / replayed.len() as f64,
+        recorded.iter().sum::<f64>() / recorded.len() as f64
+    );
+    for q in [0.5, 0.9, 0.99] {
+        println!(
+            "sojourn p{:<6} {:.4} s",
+            q * 100.0,
+            crate::stats::quantile_of_sorted(&sorted, q)
+        );
+    }
+    let d = crate::stats::pp_distance(
+        &crate::stats::Ecdf::new(replayed),
+        &crate::stats::Ecdf::new(recorded),
+        256,
+    );
+    println!("PP distance vs recorded sojourns: {d:.4}");
+    Ok(0)
+}
+
+/// `trace summarize`: header, row counts, and phase-timing summaries.
+fn trace_summarize(args: &Args) -> Result<i32> {
+    let Some(path) = args.get("in") else {
+        bail!("trace summarize needs --in FILE");
+    };
+    let trace = crate::trace::Trace::read_file(path).map_err(e)?;
+    let m = &trace.meta;
+    println!("schema           v{} ({} source)", m.schema, m.source);
+    println!("model            {} (l={}, k={})", m.model, m.servers, m.tasks_per_job);
+    println!("workload         {} / {}", m.interarrival, m.execution);
+    println!(
+        "rows             {} jobs ({} measured, warmup {}), {} tasks",
+        trace.jobs.len(),
+        trace.measured_jobs().count(),
+        m.warmup,
+        trace.tasks.len()
+    );
+    println!("seed             {} (time_scale {})", m.seed, m.time_scale);
+    let summarize = |label: &str, xs: Vec<f64>| {
+        if xs.is_empty() {
+            return;
+        }
+        let mut s = crate::stats::Summary::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        println!("{label:<17}mean {:.6} s, min {:.6}, max {:.6}", s.mean(), s.min(), s.max());
+    };
+    summarize("schedule delay", trace.measured_jobs().map(|j| j.schedule_delay()).collect());
+    summarize("task service", trace.task_services());
+    summarize("task overhead", trace.task_overheads());
+    summarize(
+        "pre-departure",
+        trace.measured_jobs().map(|j| j.pre_departure_overhead).collect(),
+    );
+    let mut sojourns = trace.sojourns();
+    if !sojourns.is_empty() {
+        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99] {
+            println!(
+                "sojourn p{:<6} {:.4} s",
+                q * 100.0,
+                crate::stats::quantile_of_sorted(&sojourns, q)
+            );
+        }
+    }
+    Ok(0)
+}
+
+/// `trace convert`: transcode between the NDJSON and binary formats.
+fn trace_convert(args: &Args) -> Result<i32> {
+    let Some(input) = args.get("in") else {
+        bail!("trace convert needs --in FILE");
+    };
+    let Some(out) = args.get("out") else {
+        bail!("trace convert needs --out FILE (.bin/.tbin -> binary, else ndjson)");
+    };
+    let format = trace_format_flag(args)?;
+    let trace = crate::trace::Trace::read_file(input).map_err(e)?;
+    trace.write_file(out, format).map_err(e)?;
+    println!(
+        "converted {input} -> {out} ({} jobs, {} tasks)",
+        trace.jobs.len(),
+        trace.tasks.len()
+    );
     Ok(0)
 }
 

@@ -36,6 +36,7 @@ pub fn fig10(ctx: &FigureCtx) -> Result<()> {
         warmup: emu_jobs / 10,
         seed: ctx.seed,
         inject_overhead: Some(oh),
+        workers: None,
     };
     let emu_res = emulator::run(&emu_cfg).map_err(anyhow::Error::msg)?;
     let emu_ecdf = Ecdf::new(emu_res.measured_jobs().map(|j| j.sojourn()).collect());

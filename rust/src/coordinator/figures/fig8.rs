@@ -118,6 +118,7 @@ pub fn fig8(ctx: &FigureCtx) -> Result<()> {
                 warmup: emu_jobs / 10,
                 seed: ctx.seed ^ k as u64,
                 inject_overhead: Some(oh),
+                workers: None,
             };
             let mut res = emulator::run(&cfg).map_err(anyhow::Error::msg)?;
             emu_q.push((k, res.sojourn_quantile(q)));

@@ -40,6 +40,7 @@ pub fn fig9(ctx: &FigureCtx) -> Result<()> {
             warmup: jobs / 10,
             seed: ctx.seed ^ (k as u64) << 1,
             inject_overhead: Some(OverheadConfig::paper()),
+            workers: None,
         };
         let res = emulator::run(&cfg).map_err(anyhow::Error::msg)?;
 

@@ -32,6 +32,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
             Ok(0)
         }
         "bench" => commands::cmd_bench(args),
+        "trace" => commands::cmd_trace(args),
         "calibrate" => commands::cmd_calibrate(args),
         "advisor" => commands::cmd_advisor(args),
         "selfcheck" => commands::cmd_selfcheck(args),

@@ -235,6 +235,103 @@ impl Distribution for Weibull {
     }
 }
 
+/// Empirical distribution over a recorded sample bank: inverse-transform
+/// sampling off the sorted samples (type-7 interpolated quantiles, so a
+/// draw at uniform `u` equals [`crate::stats::Ecdf::inverse`]`(u)` on the
+/// same bank). This is how recorded task-size traces drive the
+/// simulators *empirically* instead of through a fitted parametric law
+/// (spec: `empirical:<file>`).
+#[derive(Clone, Debug)]
+pub struct Empirical {
+    /// Ascending-sorted sample bank.
+    sorted: Vec<f64>,
+    mean: f64,
+    variance: f64,
+}
+
+impl Empirical {
+    /// Build from raw samples (sorted internally; needs ≥ 1 finite,
+    /// non-negative sample).
+    pub fn new(mut samples: Vec<f64>) -> Result<Self, String> {
+        if samples.is_empty() {
+            return Err("empirical distribution needs at least one sample".into());
+        }
+        for &s in &samples {
+            if !(s >= 0.0 && s.is_finite()) {
+                return Err(format!("empirical samples must be finite and >= 0, got {s}"));
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let variance = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Ok(Self { sorted: samples, mean, variance })
+    }
+
+    /// Load a sample bank from a file: a recorded trace (binary or
+    /// NDJSON; the bank is its per-task service times) or a plain text
+    /// file of one sample per line (`#` comments and blanks skipped).
+    pub fn load<P: AsRef<std::path::Path>>(path: P) -> Result<Self, String> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let looks_like_trace = crate::trace::is_binary(&bytes)
+            || bytes.iter().find(|b| !b.is_ascii_whitespace()) == Some(&b'{');
+        let samples = if looks_like_trace {
+            let trace = crate::trace::Trace::from_bytes(&bytes)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            trace.task_services()
+        } else {
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|_| format!("{}: not UTF-8 text", path.display()))?;
+            let mut out = Vec::new();
+            for (i, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                out.push(line.parse::<f64>().map_err(|_| {
+                    format!("{}:{}: bad sample {line:?}", path.display(), i + 1)
+                })?);
+            }
+            out
+        };
+        Self::new(samples).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Number of samples in the bank.
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// True when the bank is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Interpolated quantile at `u` ∈ [0, 1] — the inverse transform.
+    #[inline]
+    pub fn quantile(&self, u: f64) -> f64 {
+        crate::stats::quantile_of_sorted(&self.sorted, u)
+    }
+}
+
+impl Distribution for Empirical {
+    fn sample(&self, rng: &mut dyn FnMut() -> f64) -> f64 {
+        // Must stay formula-identical to Dist::draw's Empirical arm.
+        self.quantile(rng())
+    }
+    fn mean(&self) -> f64 {
+        self.mean
+    }
+    fn variance(&self) -> f64 {
+        self.variance
+    }
+    fn label(&self) -> String {
+        format!("Empirical(n={})", self.sorted.len())
+    }
+}
+
 /// Uniform on `[lo, hi)` — used for worker-speed skew scenarios.
 #[derive(Clone, Copy, Debug)]
 pub struct Uniform {
@@ -292,6 +389,8 @@ pub enum Dist {
     Weibull(Weibull),
     /// `Uniform(lo, hi)`.
     Uniform(Uniform),
+    /// Inverse-transform sampling off a recorded sample bank.
+    Empirical(Empirical),
     /// Escape hatch: any [`Distribution`] implementation (dyn-dispatched).
     Custom(Box<dyn Distribution>),
 }
@@ -320,6 +419,7 @@ impl Dist {
             Dist::Pareto(d) => d.xm * rng.next_f64_open().powf(-1.0 / d.alpha),
             Dist::Weibull(d) => d.scale * (-rng.next_f64_open().ln()).powf(1.0 / d.shape),
             Dist::Uniform(d) => d.lo + (d.hi - d.lo) * (1.0 - rng.next_f64_open()),
+            Dist::Empirical(d) => d.quantile(rng.next_f64_open()),
             Dist::Custom(d) => {
                 let mut f = || rng.next_f64_open();
                 d.sample(&mut f)
@@ -337,6 +437,7 @@ impl Dist {
             Dist::Pareto(d) => d,
             Dist::Weibull(d) => d,
             Dist::Uniform(d) => d,
+            Dist::Empirical(d) => d,
             Dist::Custom(d) => &**d,
         }
     }
@@ -408,6 +509,11 @@ impl From<Uniform> for Dist {
         Dist::Uniform(d)
     }
 }
+impl From<Empirical> for Dist {
+    fn from(d: Empirical) -> Self {
+        Dist::Empirical(d)
+    }
+}
 
 fn parse_params<'a>(spec: &'a str, name: &str, n: usize) -> Result<Vec<f64>, String> {
     let parts: Vec<&'a str> = spec.split(':').collect();
@@ -427,11 +533,22 @@ fn parse_params<'a>(spec: &'a str, name: &str, n: usize) -> Result<Vec<f64>, Str
 /// Parse a distribution spec string into an enum-dispatched [`Dist`].
 ///
 /// Supported: `exp:RATE`, `det:VALUE`, `erlang:SHAPE:RATE`,
-/// `pareto:ALPHA:XM`, `weibull:SHAPE:SCALE`, `uniform:LO:HI`.
+/// `pareto:ALPHA:XM`, `weibull:SHAPE:SCALE`, `uniform:LO:HI`, and
+/// `empirical:FILE` (a recorded trace or a text file of samples — note
+/// this spec performs file I/O at parse time).
 pub fn parse_spec(spec: &str) -> Result<Dist, String> {
     let spec = spec.trim();
     let name = spec.split(':').next().unwrap_or("");
     match name {
+        "empirical" => {
+            // The whole remainder is the path (it may itself contain ':').
+            let path = spec
+                .split_once(':')
+                .map(|(_, p)| p.trim())
+                .filter(|p| !p.is_empty())
+                .ok_or_else(|| format!("empirical spec needs a file: {spec:?}"))?;
+            Ok(Dist::Empirical(Empirical::load(path)?))
+        }
         "exp" => {
             let p = parse_params(spec, "exp", 1)?;
             if !(p[0] > 0.0 && p[0].is_finite()) {
@@ -478,7 +595,7 @@ pub fn parse_spec(spec: &str) -> Result<Dist, String> {
             Ok(Dist::Uniform(Uniform::new(p[0], p[1])))
         }
         _ => Err(format!(
-            "unknown distribution {spec:?} (exp|det|erlang|pareto|weibull|uniform)"
+            "unknown distribution {spec:?} (exp|det|erlang|pareto|weibull|uniform|empirical)"
         )),
     }
 }
@@ -595,10 +712,53 @@ mod tests {
             "erlang:0:1",
             "erlang:2.5:1",
             "uniform:2:1",
+            "empirical",
+            "empirical:",
+            "empirical:/no/such/file-i-hope",
             "",
         ] {
             assert!(parse_spec(bad).is_err(), "{bad:?} should be rejected");
         }
+    }
+
+    /// `Dist::Empirical` draws are exactly `Ecdf::inverse` at the same
+    /// uniform — the inverse-transform contract the trace subsystem's
+    /// tests lean on.
+    #[test]
+    fn empirical_draws_match_ecdf_quantiles() {
+        let samples = vec![3.0, 1.0, 4.0, 1.5, 9.0, 2.6, 5.3];
+        let d: Dist = Empirical::new(samples.clone()).unwrap().into();
+        let ecdf = crate::stats::Ecdf::new(samples.clone());
+        let mut a = Pcg64::seed_from_u64(21);
+        let mut b = Pcg64::seed_from_u64(21);
+        let (lo, hi) = (1.0, 9.0);
+        for _ in 0..2000 {
+            let x = d.draw(&mut a);
+            let u = b.next_f64_open();
+            assert!(x == ecdf.inverse(u), "draw {x} != Ecdf inverse at {u}");
+            assert!((lo..=hi).contains(&x));
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((d.mean() - mean).abs() < 1e-12);
+        assert_eq!(d.label(), "Empirical(n=7)");
+    }
+
+    #[test]
+    fn empirical_spec_loads_text_file() {
+        let dir = std::env::temp_dir().join(format!("tt-dist-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bank.txt");
+        std::fs::write(&path, "# samples\n1.0\n2.0\n\n3.0\n").unwrap();
+        let d = parse_spec(&format!("empirical:{}", path.display())).unwrap();
+        assert_eq!(d.mean(), 2.0);
+        let mut rng = Pcg64::seed_from_u64(5);
+        for _ in 0..100 {
+            let x = d.draw(&mut rng);
+            assert!((1.0..=3.0).contains(&x), "{x}");
+        }
+        // Malformed sample lines are reported, not panicked on.
+        std::fs::write(&path, "1.0\nnot-a-number\n").unwrap();
+        assert!(parse_spec(&format!("empirical:{}", path.display())).is_err());
     }
 
     #[test]
@@ -628,6 +788,7 @@ mod tests {
             Pareto::new(2.5, 0.6).into(),
             Weibull::new(2.0, 1.1).into(),
             Uniform::new(0.5, 1.5).into(),
+            Empirical::new(vec![0.25, 1.0, 2.5, 4.0]).unwrap().into(),
             Dist::custom(Box::new(Exponential::new(0.7))),
         ];
         for d in &dists {

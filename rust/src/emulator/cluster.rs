@@ -110,6 +110,7 @@ impl Cluster {
             c_job_pd: oh.c_job_pd, // applied by the collector (emulated)
             c_task_pd: oh.c_task_pd,
         });
+        let speeds = cfg.resolved_speeds()?;
         let mut exec_txs = Vec::with_capacity(cfg.executors);
         let mut exec_handles = Vec::with_capacity(cfg.executors);
         for id in 0..cfg.executors as u32 {
@@ -123,6 +124,7 @@ impl Cluster {
                 binary_fetch: 0.005 * scale,
                 inject: inject_wall,
                 seed: cfg.seed ^ (0xE0 + id as u64),
+                speed: speeds[id as usize],
             };
             exec_handles.push(
                 std::thread::Builder::new()
@@ -203,6 +205,7 @@ mod tests {
             warmup: 5,
             seed: 11,
             inject_overhead: None,
+            workers: None,
         }
     }
 
@@ -269,6 +272,36 @@ mod tests {
             dirty.listener.mean_overhead_fraction()
                 > clean.listener.mean_overhead_fraction()
         );
+    }
+
+    /// Pinned slow executors (the ROADMAP scenario item): tasks landing
+    /// on the slow half report dilated execution, and the dilation shows
+    /// up as service, not overhead.
+    #[test]
+    fn pinned_slow_executors_dilate_their_tasks() {
+        let cfg = EmulatorConfig {
+            executors: 2,
+            tasks_per_job: 8,
+            execution: "det:2.0".into(), // 8 ms wall at scale 0.004
+            jobs: 25,
+            warmup: 0,
+            workers: Some(crate::config::WorkersConfig::Speeds(vec![1.0, 0.5])),
+            ..quick_cfg()
+        };
+        let res = run(&cfg).unwrap();
+        let mean_exec = |srv: u32| {
+            let ts: Vec<_> =
+                res.listener.tasks.iter().filter(|t| t.executor_id == srv).collect();
+            assert!(!ts.is_empty(), "executor {srv} never ran a task");
+            ts.iter().map(|t| t.execution).sum::<f64>() / ts.len() as f64
+        };
+        let (fast, slow) = (mean_exec(0), mean_exec(1));
+        assert!(
+            slow > fast * 1.5,
+            "slow executor not dilated: fast {fast} vs slow {slow}"
+        );
+        // Dilation is service, not overhead: the fraction stays modest.
+        assert!(res.listener.mean_overhead_fraction() < 0.2);
     }
 
     #[test]

@@ -85,6 +85,7 @@ pub fn collector_main(
             execution: tr.execution,
             result_serialize: tr.result_serialize,
             occupancy: tr.occupancy,
+            finished: rec.completed_wall,
         });
 
         let p = partial.entry(tr.job_id).or_default();

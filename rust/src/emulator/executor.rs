@@ -26,6 +26,11 @@ pub struct ExecutorConfig {
     pub inject: Option<OverheadConfig>,
     /// RNG seed for the injected overhead sampling.
     pub seed: u64,
+    /// Speed factor in `(0, 1]`: a slow executor (`speed < 1`) dilates
+    /// each task's execution to `E_i / speed` with extra busy work —
+    /// the sparklite analog of the DES heterogeneous-worker scenario
+    /// (slowdown only; real payloads cannot be sped up).
+    pub speed: f64,
 }
 
 /// Body of one executor thread. `tasks` delivers `(sent_wall, bytes)`
@@ -76,7 +81,17 @@ pub fn executor_main(
         // Run the payload (timed) — the task execution time E_i.
         let t1 = Instant::now();
         let result = desc.payload.execute();
-        let execution = t1.elapsed().as_secs_f64();
+        let mut execution = t1.elapsed().as_secs_f64();
+
+        // Slow executor: stretch the service to E_i / speed. The padding
+        // counts as *execution* (service dilation), not overhead — a slow
+        // core runs the same work for longer, it does not scheduler-chat
+        // more.
+        if cfg.speed < 1.0 {
+            let extra = execution * (1.0 / cfg.speed - 1.0);
+            busy_wait(extra);
+            execution += extra;
+        }
 
         // Serialize the result (timed).
         let t2 = Instant::now();
@@ -144,7 +159,7 @@ mod tests {
         let (res_tx, res_rx) = mpsc::channel();
         let handle = std::thread::spawn(move || {
             executor_main(
-                ExecutorConfig { id: 3, binary_fetch: 0.002, inject: None, seed: 1 },
+                ExecutorConfig { id: 3, binary_fetch: 0.002, inject: None, seed: 1, speed: 1.0 },
                 task_rx,
                 res_tx,
                 epoch,
@@ -183,6 +198,46 @@ mod tests {
         }
         // Binary fetch happens exactly once (first task on the executor).
         assert_eq!(fetches, 1);
+        handle.join().unwrap();
+    }
+
+    /// A speed-0.5 executor reports roughly doubled execution times (the
+    /// dilation is busy work counted as service, not overhead).
+    #[test]
+    fn slow_executor_dilates_execution() {
+        let epoch = Instant::now();
+        let (task_tx, task_rx) = mpsc::channel();
+        let (res_tx, res_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            executor_main(
+                ExecutorConfig { id: 0, binary_fetch: 0.0, inject: None, seed: 1, speed: 0.5 },
+                task_rx,
+                res_tx,
+                epoch,
+            )
+        });
+        let desc = TaskDescriptor {
+            job_id: 0,
+            task_id: 0,
+            stage_id: 0,
+            executor_id: 0,
+            attempt: 0,
+            payload: Payload::BusySpin { seconds: 0.01 },
+            job_arrival: 0.0,
+        };
+        let mut e = Encoder::new();
+        desc.encode(&mut e);
+        task_tx.send((epoch.elapsed().as_secs_f64(), e.finish())).unwrap();
+        drop(task_tx);
+        match res_rx.recv().unwrap() {
+            SchedMsg::Completion { bytes, .. } => {
+                let tr = TaskResult::decode(&mut Decoder::new(&bytes)).unwrap();
+                // 10 ms of payload stretched towards 20 ms of service.
+                assert!(tr.execution >= 0.018, "no dilation: {}", tr.execution);
+                assert!(tr.occupancy >= tr.execution);
+            }
+            other => panic!("unexpected msg {other:?}"),
+        }
         handle.join().unwrap();
     }
 }

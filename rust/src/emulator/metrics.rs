@@ -30,6 +30,10 @@ pub struct TaskMetrics {
     pub result_serialize: f64,
     /// Executor occupancy Q_i (dequeue → ready for the next task).
     pub occupancy: f64,
+    /// Wall instant the completion reached the scheduler — the timestamp
+    /// that anchors this task on the cluster timeline (trace capture
+    /// derives `start ≈ finished − occupancy` from it).
+    pub finished: f64,
 }
 
 impl TaskMetrics {

@@ -33,7 +33,7 @@ mod scheduler;
 mod task;
 
 pub use cluster::{run, Cluster, EmulatorResult};
-pub use codec::{Decoder, Encoder};
+pub use codec::{DecodeError, Decoder, Encoder};
 pub use driver::JobOutcome;
 pub use metrics::{JobMetrics, MetricsListener, TaskMetrics};
 pub use payload::{Payload, PayloadResult};

@@ -22,6 +22,9 @@
 //!   from the coordinator hot path (Python is never on the request path).
 //! * [`coordinator`] — experiment harness: parameter sweeps, overhead
 //!   calibration (Sec. 2.6 methodology), and one pipeline per paper figure.
+//! * [`trace`] — persistent task traces: a versioned on-disk format
+//!   (NDJSON + compact binary), capture from both engines, trace-driven
+//!   replay, and empirical-distribution extraction.
 //! * [`dist`], [`rng`], [`stats`], [`config`], [`cli`], [`util`] —
 //!   supporting substrates (offline environment: no external crates beyond
 //!   the vendored `xla`/`anyhow`/`log`; see DESIGN.md §2).
@@ -36,4 +39,5 @@ pub mod rng;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod trace;
 pub mod util;

@@ -439,6 +439,7 @@ impl Calendar {
                     server,
                     start,
                     end: finish,
+                    overhead: rt.overhead,
                 });
             }
             self.push_event(finish, EventKind::TaskFinish { server, slot: rt.slot });

@@ -31,7 +31,6 @@ mod overhead;
 mod runner;
 pub mod scenario;
 pub mod stability;
-mod trace;
 mod workload;
 
 pub use calendar::{Calendar, Discipline};
@@ -39,7 +38,9 @@ pub use heap::ServerHeap;
 pub use overhead::OverheadModel;
 pub use runner::{run, RunOptions, SimResult, STREAMING_QS};
 pub use scenario::{Scenario, TaskOutcome};
-pub use trace::{TraceEvent, TraceLog};
+// The trace log lives in the top-level `crate::trace` subsystem now;
+// re-exported here so `sim::{TraceEvent, TraceLog}` call sites stand.
+pub use crate::trace::{TraceEvent, TraceLog};
 pub use workload::Workload;
 
 /// Per-job outcome record.

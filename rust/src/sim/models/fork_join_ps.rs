@@ -73,7 +73,7 @@ impl ForkJoinPerServer {
             workload_sum += reps[win].2;
             overhead_sum += reps[win].3;
             last_finish = last_finish.max(t_win);
-            for (j, &(start, finish, _, _)) in reps.iter().enumerate() {
+            for (j, &(start, finish, _, oh)) in reps.iter().enumerate() {
                 let s = (i + j) % l;
                 let ran = j == win || start < t_win;
                 if !ran {
@@ -92,6 +92,9 @@ impl ForkJoinPerServer {
                         server: s as u32,
                         start,
                         end: freed,
+                        // Wall overhead on this worker, clipped for
+                        // replicas cancelled before finishing theirs.
+                        overhead: (oh / sc.speed(s as u32)).min(freed - start),
                     });
                 }
             }
@@ -143,6 +146,7 @@ impl Model for ForkJoinPerServer {
                     server: i as u32,
                     start,
                     end: finish,
+                    overhead: o,
                 });
             }
         }

@@ -117,6 +117,7 @@ impl Model for ForkJoinSingleQueue {
                         server,
                         start,
                         end: finish,
+                        overhead: o,
                     });
                 }
             }

@@ -76,6 +76,8 @@ impl Model for IdealPartition {
                     server: s as u32,
                     start,
                     end: finish,
+                    // All l equisized shares stall on the slowest draw.
+                    overhead: max_overhead,
                 });
             }
         }

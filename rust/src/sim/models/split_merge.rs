@@ -85,6 +85,7 @@ impl Model for SplitMerge {
                     server,
                     start: t_free,
                     end: finish,
+                    overhead: o,
                 });
             }
         } else {

@@ -178,6 +178,10 @@ impl Scenario {
                         server: rep.server,
                         start: rep.start,
                         end: freed,
+                        // Wall overhead on this worker, clipped for
+                        // replicas cancelled before finishing theirs.
+                        overhead: (rep.overhead / self.speeds[rep.server as usize])
+                            .min(freed - rep.start),
                     });
                 }
             }

@@ -1,5 +1,6 @@
-//! Executor activity traces — the data behind Figs. 1 and 2 (Gantt-style
-//! diagrams of which executor ran which task when).
+//! In-memory executor activity traces — the data behind Figs. 1 and 2
+//! (Gantt-style diagrams of which executor ran which task when) and the
+//! capture source for the persistent trace format in [`super::record`].
 
 use crate::util::csv::Csv;
 
@@ -16,6 +17,11 @@ pub struct TraceEvent {
     pub start: f64,
     /// Service end time (includes task overhead).
     pub end: f64,
+    /// Task-service overhead portion of `[start, end]` (wall duration on
+    /// the worker; under a heterogeneous scenario this is the nominal
+    /// overhead draw divided by the worker speed). The observed execution
+    /// duration is `end − start − overhead`.
+    pub overhead: f64,
 }
 
 /// Collected trace of task executions.
@@ -70,9 +76,9 @@ impl TraceLog {
         busy.iter().map(|b| b / (t1 - t0)).collect()
     }
 
-    /// Export as CSV (`job,task,server,start,end`).
+    /// Export as CSV (`job,task,server,start,end,overhead`).
     pub fn to_csv(&self) -> Csv {
-        let mut csv = Csv::new(vec!["job", "task", "server", "start", "end"]);
+        let mut csv = Csv::new(vec!["job", "task", "server", "start", "end", "overhead"]);
         for ev in &self.events {
             csv.push(&[
                 ev.job as f64,
@@ -80,6 +86,7 @@ impl TraceLog {
                 ev.server as f64,
                 ev.start,
                 ev.end,
+                ev.overhead,
             ]);
         }
         csv
@@ -90,18 +97,22 @@ impl TraceLog {
 mod tests {
     use super::*;
 
+    fn ev(job: u32, task: u32, server: u32, start: f64, end: f64) -> TraceEvent {
+        TraceEvent { job, task, server, start, end, overhead: 0.0 }
+    }
+
     #[test]
     fn disabled_records_nothing() {
         let mut t = TraceLog::disabled();
-        t.record(TraceEvent { job: 0, task: 0, server: 0, start: 0.0, end: 1.0 });
+        t.record(ev(0, 0, 0, 0.0, 1.0));
         assert!(t.events().is_empty());
     }
 
     #[test]
     fn utilization_window() {
         let mut t = TraceLog::enabled();
-        t.record(TraceEvent { job: 0, task: 0, server: 0, start: 0.0, end: 1.0 });
-        t.record(TraceEvent { job: 0, task: 1, server: 1, start: 0.5, end: 2.0 });
+        t.record(ev(0, 0, 0, 0.0, 1.0));
+        t.record(ev(0, 1, 1, 0.5, 2.0));
         let u = t.utilization(2, 0.0, 2.0);
         assert!((u[0] - 0.5).abs() < 1e-12);
         assert!((u[1] - 0.75).abs() < 1e-12);
@@ -111,7 +122,7 @@ mod tests {
     fn csv_has_all_rows() {
         let mut t = TraceLog::enabled();
         for i in 0..5 {
-            t.record(TraceEvent { job: i, task: i, server: 0, start: 0.0, end: 1.0 });
+            t.record(ev(i, i, 0, 0.0, 1.0));
         }
         assert_eq!(t.to_csv().len(), 5);
     }

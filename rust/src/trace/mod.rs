@@ -1,0 +1,156 @@
+//! Trace capture & replay subsystem.
+//!
+//! The paper fit its four-parameter overhead model from *recorded Spark
+//! task traces* (Sec. 2.6); this module gives the reproduction the same
+//! persistent substrate. A [`Trace`] is a versioned record of one run —
+//! per-job arrival/departure rows plus per-task rows with phase timing
+//! (schedule delay, service, task overhead, pre-departure) — captured
+//! from either DES engine or the sparklite emulator through the
+//! [`TraceLog`] hook, and stored in two interchangeable codecs:
+//!
+//! * **NDJSON** ([`to_ndjson`]/[`from_ndjson`]) — one flat JSON object
+//!   per line, greppable and pandas/jq-friendly;
+//! * **binary** ([`to_binary`]/[`from_binary`]) — fixed-width rows behind
+//!   a magic header, ~5× smaller, for million-task traces.
+//!
+//! Both round-trip bit-exactly (floats travel as shortest round-trip
+//! text or raw IEEE-754 bits; `rust/tests/trace_roundtrip.rs` enforces
+//! it). On top of the format sit the consumers:
+//!
+//! * [`replay`] — feed a recorded trace's arrivals and task sizes back
+//!   through any of the four models (trace-driven simulation);
+//! * [`crate::dist::Empirical`] — `empirical:<trace-file>` samples task
+//!   sizes from a recorded trace instead of a parametric law;
+//! * [`crate::coordinator::calibrate::calibrate_from_trace`] — the
+//!   Sec.-2.6 moment-fit + PP-refine pipeline against a file instead of
+//!   a live emulator.
+
+mod binary;
+mod log;
+mod ndjson;
+mod record;
+mod replay;
+
+pub use self::log::{TraceEvent, TraceLog};
+pub use binary::{from_binary, is_binary, to_binary, MAGIC};
+pub use ndjson::{from_ndjson, to_ndjson};
+pub use record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_VERSION};
+pub use replay::{replay, ReplayOptions, Replayed};
+
+use std::path::Path;
+
+/// On-disk trace encoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One flat JSON object per line.
+    Ndjson,
+    /// Compact fixed-width binary rows.
+    Binary,
+}
+
+impl TraceFormat {
+    /// Parse a CLI token (`ndjson` | `bin`/`binary`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "ndjson" | "json" => Ok(Self::Ndjson),
+            "bin" | "binary" => Ok(Self::Binary),
+            _ => Err(format!("unknown trace format {s:?} (ndjson|bin)")),
+        }
+    }
+
+    /// Infer from a file extension: `.bin`/`.tbin` → binary, else NDJSON.
+    pub fn from_path<P: AsRef<Path>>(path: P) -> Self {
+        match path.as_ref().extension().and_then(|e| e.to_str()) {
+            Some("bin") | Some("tbin") => Self::Binary,
+            _ => Self::Ndjson,
+        }
+    }
+}
+
+impl Trace {
+    /// Serialize in the given format.
+    pub fn to_bytes(&self, format: TraceFormat) -> Vec<u8> {
+        match format {
+            TraceFormat::Ndjson => to_ndjson(self).into_bytes(),
+            TraceFormat::Binary => to_binary(self),
+        }
+    }
+
+    /// Parse from bytes, sniffing the format (binary magic vs text).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        let trace = if is_binary(bytes) {
+            from_binary(bytes)?
+        } else {
+            let text = std::str::from_utf8(bytes)
+                .map_err(|_| "trace is neither binary (bad magic) nor UTF-8 text")?;
+            from_ndjson(text)?
+        };
+        trace.validate()?;
+        // Externally-authored NDJSON may arrive in any row order; every
+        // read path hands consumers canonical (sorted) rows.
+        Ok(trace.normalize())
+    }
+
+    /// Write to a file; `format` of `None` is inferred from the extension.
+    pub fn write_file<P: AsRef<Path>>(
+        &self,
+        path: P,
+        format: Option<TraceFormat>,
+    ) -> Result<(), String> {
+        let path = path.as_ref();
+        let format = format.unwrap_or_else(|| TraceFormat::from_path(path));
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("create {}: {e}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_bytes(format))
+            .map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Read from a file, sniffing the format.
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Self, String> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_inference() {
+        assert_eq!(TraceFormat::from_path("a/trace.bin"), TraceFormat::Binary);
+        assert_eq!(TraceFormat::from_path("a/trace.tbin"), TraceFormat::Binary);
+        assert_eq!(TraceFormat::from_path("a/trace.ndjson"), TraceFormat::Ndjson);
+        assert_eq!(TraceFormat::from_path("trace"), TraceFormat::Ndjson);
+        assert_eq!(TraceFormat::parse("bin").unwrap(), TraceFormat::Binary);
+        assert!(TraceFormat::parse("csv").is_err());
+    }
+
+    #[test]
+    fn bytes_round_trip_both_formats() {
+        let cfg = crate::config::SimulationConfig {
+            servers: 2,
+            tasks_per_job: 4,
+            jobs: 20,
+            warmup: 2,
+            ..Default::default()
+        };
+        let res = crate::sim::run(
+            &cfg,
+            crate::sim::RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        let tr = Trace::from_sim(&res).unwrap();
+        for fmt in [TraceFormat::Ndjson, TraceFormat::Binary] {
+            let bytes = tr.to_bytes(fmt);
+            let back = Trace::from_bytes(&bytes).unwrap();
+            assert_eq!(tr, back, "{fmt:?}");
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! NDJSON trace codec — one flat JSON object per line, human-greppable
+//! and trivially ingested by pandas/jq. The first line is the meta
+//! header; `job` and `task` rows follow in canonical order.
+//!
+//! Round-trip exactness: floats are written with Rust's shortest
+//! round-trip formatting and parsed back with `str::parse::<f64>`, which
+//! recovers the identical bits; integers (`seed` may exceed 2⁵³) are
+//! parsed as `u64` directly from the token text, never through `f64`.
+//! The parser is hand-rolled (the offline registry has no serde) and
+//! accepts exactly the flat shape this writer emits.
+
+use super::record::{JobRow, TaskRow, Trace, TraceMeta};
+use std::fmt::Write as _;
+
+/// Serialize a trace to NDJSON text.
+pub fn to_ndjson(trace: &Trace) -> String {
+    let mut out = String::new();
+    let m = &trace.meta;
+    let _ = writeln!(
+        out,
+        "{{\"type\":\"meta\",\"schema\":{},\"source\":{},\"model\":{},\"servers\":{},\
+         \"tasks_per_job\":{},\"warmup\":{},\"seed\":{},\"time_scale\":{},\
+         \"interarrival\":{},\"execution\":{}}}",
+        m.schema,
+        quote(&m.source),
+        quote(&m.model),
+        m.servers,
+        m.tasks_per_job,
+        m.warmup,
+        m.seed,
+        fmt_f64(m.time_scale),
+        quote(&m.interarrival),
+        quote(&m.execution),
+    );
+    for j in &trace.jobs {
+        let _ = writeln!(
+            out,
+            "{{\"type\":\"job\",\"index\":{},\"tasks\":{},\"arrival\":{},\"departure\":{},\
+             \"first_start\":{},\"workload\":{},\"task_overhead\":{},\
+             \"pre_departure_overhead\":{},\"redundant_work\":{}}}",
+            j.index,
+            j.tasks,
+            fmt_f64(j.arrival),
+            fmt_f64(j.departure),
+            fmt_f64(j.first_start),
+            fmt_f64(j.workload),
+            fmt_f64(j.task_overhead),
+            fmt_f64(j.pre_departure_overhead),
+            fmt_f64(j.redundant_work),
+        );
+    }
+    for t in &trace.tasks {
+        let _ = writeln!(
+            out,
+            "{{\"type\":\"task\",\"job\":{},\"task\":{},\"server\":{},\"start\":{},\
+             \"end\":{},\"overhead\":{}}}",
+            t.job,
+            t.task,
+            t.server,
+            fmt_f64(t.start),
+            fmt_f64(t.end),
+            fmt_f64(t.overhead),
+        );
+    }
+    out
+}
+
+/// Parse a trace from NDJSON text.
+pub fn from_ndjson(text: &str) -> Result<Trace, String> {
+    let mut meta: Option<TraceMeta> = None;
+    let mut jobs: Vec<JobRow> = Vec::new();
+    let mut tasks: Vec<TaskRow> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let obj = parse_flat_object(line)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let kind = obj.get_str("type")?;
+        match kind.as_str() {
+            "meta" => {
+                if meta.is_some() {
+                    return Err(format!("line {}: duplicate meta row", lineno + 1));
+                }
+                meta = Some(TraceMeta {
+                    schema: obj.get_u64("schema")? as u32,
+                    source: obj.get_str("source")?,
+                    model: obj.get_str("model")?,
+                    servers: obj.get_u64("servers")? as u32,
+                    tasks_per_job: obj.get_u64("tasks_per_job")? as u32,
+                    warmup: obj.get_u64("warmup")? as u32,
+                    seed: obj.get_u64("seed")?,
+                    time_scale: obj.get_f64("time_scale")?,
+                    interarrival: obj.get_str("interarrival")?,
+                    execution: obj.get_str("execution")?,
+                });
+            }
+            "job" => jobs.push(JobRow {
+                index: obj.get_u64("index")? as u32,
+                tasks: obj.get_u64("tasks")? as u32,
+                arrival: obj.get_f64("arrival")?,
+                departure: obj.get_f64("departure")?,
+                first_start: obj.get_f64("first_start")?,
+                workload: obj.get_f64("workload")?,
+                task_overhead: obj.get_f64("task_overhead")?,
+                pre_departure_overhead: obj.get_f64("pre_departure_overhead")?,
+                redundant_work: obj.get_f64("redundant_work")?,
+            }),
+            "task" => tasks.push(TaskRow {
+                job: obj.get_u64("job")? as u32,
+                task: obj.get_u64("task")? as u32,
+                server: obj.get_u64("server")? as u32,
+                start: obj.get_f64("start")?,
+                end: obj.get_f64("end")?,
+                overhead: obj.get_f64("overhead")?,
+            }),
+            other => return Err(format!("line {}: unknown row type {other:?}", lineno + 1)),
+        }
+    }
+    let meta = meta.ok_or("trace has no meta row")?;
+    Ok(Trace { meta, jobs, tasks })
+}
+
+/// Shortest round-trip float formatting ("inf"/"NaN" parse back too).
+fn fmt_f64(v: f64) -> String {
+    v.to_string()
+}
+
+/// JSON string quoting (only `"` and `\` need escaping in our payloads).
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A parsed flat JSON object: raw number tokens and unescaped strings.
+struct FlatObject {
+    fields: Vec<(String, FlatValue)>,
+}
+
+enum FlatValue {
+    /// Unparsed numeric token text (exactness: parse as the target type).
+    Raw(String),
+    Str(String),
+}
+
+impl FlatObject {
+    fn get(&self, key: &str) -> Result<&FlatValue, String> {
+        self.fields
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+            .ok_or_else(|| format!("missing field {key:?}"))
+    }
+
+    fn get_str(&self, key: &str) -> Result<String, String> {
+        match self.get(key)? {
+            FlatValue::Str(s) => Ok(s.clone()),
+            FlatValue::Raw(_) => Err(format!("field {key:?} is not a string")),
+        }
+    }
+
+    fn get_f64(&self, key: &str) -> Result<f64, String> {
+        match self.get(key)? {
+            FlatValue::Raw(t) => t
+                .parse::<f64>()
+                .map_err(|_| format!("field {key:?}: bad number {t:?}")),
+            FlatValue::Str(_) => Err(format!("field {key:?} is not a number")),
+        }
+    }
+
+    fn get_u64(&self, key: &str) -> Result<u64, String> {
+        match self.get(key)? {
+            FlatValue::Raw(t) => t
+                .parse::<u64>()
+                .map_err(|_| format!("field {key:?}: bad integer {t:?}")),
+            FlatValue::Str(_) => Err(format!("field {key:?} is not a number")),
+        }
+    }
+}
+
+/// Parse one `{"k":v,...}` line with string or numeric values (no
+/// nesting, no arrays — exactly the shape `to_ndjson` writes).
+fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
+    let bytes = line.as_bytes();
+    let mut pos = 0usize;
+    let skip_ws = |pos: &mut usize| {
+        while *pos < bytes.len() && (bytes[*pos] as char).is_ascii_whitespace() {
+            *pos += 1;
+        }
+    };
+    let expect = |pos: &mut usize, c: u8| -> Result<(), String> {
+        if *pos < bytes.len() && bytes[*pos] == c {
+            *pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, *pos))
+        }
+    };
+    let parse_string = |pos: &mut usize| -> Result<String, String> {
+        expect(pos, b'"')?;
+        let mut out = String::new();
+        while *pos < bytes.len() {
+            match bytes[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    *pos += 1;
+                    let esc = *bytes.get(*pos).ok_or("dangling escape")?;
+                    out.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        other => return Err(format!("unsupported escape \\{}", other as char)),
+                    });
+                    *pos += 1;
+                }
+                _ => {
+                    // Multi-byte UTF-8 is copied through verbatim.
+                    let s = &line[*pos..];
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    *pos += c.len_utf8();
+                }
+            }
+        }
+        Err("unterminated string".into())
+    };
+
+    skip_ws(&mut pos);
+    expect(&mut pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(&mut pos);
+    if pos < bytes.len() && bytes[pos] == b'}' {
+        return Ok(FlatObject { fields });
+    }
+    loop {
+        skip_ws(&mut pos);
+        let key = parse_string(&mut pos)?;
+        skip_ws(&mut pos);
+        expect(&mut pos, b':')?;
+        skip_ws(&mut pos);
+        let value = if pos < bytes.len() && bytes[pos] == b'"' {
+            FlatValue::Str(parse_string(&mut pos)?)
+        } else {
+            let start = pos;
+            while pos < bytes.len() && !matches!(bytes[pos], b',' | b'}') {
+                pos += 1;
+            }
+            let token = line[start..pos].trim();
+            if token.is_empty() {
+                return Err(format!("empty value for key {key:?}"));
+            }
+            FlatValue::Raw(token.to_string())
+        };
+        fields.push((key, value));
+        skip_ws(&mut pos);
+        if pos < bytes.len() && bytes[pos] == b',' {
+            pos += 1;
+            continue;
+        }
+        expect(&mut pos, b'}')?;
+        break;
+    }
+    Ok(FlatObject { fields })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::record::SCHEMA_VERSION;
+
+    fn tiny_trace() -> Trace {
+        Trace {
+            meta: TraceMeta {
+                schema: SCHEMA_VERSION,
+                source: "sim".into(),
+                model: "single-queue-fork-join".into(),
+                servers: 2,
+                tasks_per_job: 2,
+                warmup: 0,
+                seed: u64::MAX - 3, // exceeds 2^53: must not round-trip via f64
+                time_scale: 1.0,
+                interarrival: "exp:0.5".into(),
+                execution: "exp:1.0".into(),
+            },
+            jobs: vec![JobRow {
+                index: 0,
+                tasks: 2,
+                arrival: 0.1 + 0.2, // deliberately non-representable
+                departure: 2.0_f64.sqrt(),
+                first_start: 0.30000000000000004,
+                workload: 1e-300,
+                task_overhead: 2.6e-3,
+                pre_departure_overhead: 0.02,
+                redundant_work: 0.0,
+            }],
+            tasks: vec![
+                TaskRow { job: 0, task: 0, server: 0, start: 0.3, end: 1.7, overhead: 1e-3 },
+                TaskRow { job: 0, task: 1, server: 1, start: 0.3, end: 1.4, overhead: 0.0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn ndjson_round_trip_is_exact() {
+        let tr = tiny_trace();
+        let text = to_ndjson(&tr);
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(back.meta.seed, u64::MAX - 3);
+        assert_eq!(
+            tr.jobs[0].arrival.to_bits(),
+            back.jobs[0].arrival.to_bits(),
+            "float bits must survive the text round trip"
+        );
+        // Idempotent: re-serializing the parsed trace gives identical text.
+        assert_eq!(text, to_ndjson(&back));
+    }
+
+    #[test]
+    fn missing_meta_is_an_error() {
+        assert!(from_ndjson("{\"type\":\"job\"}").is_err());
+        assert!(from_ndjson("").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_are_errors_not_panics() {
+        for bad in [
+            "{",
+            "{\"type\":}",
+            "{\"type\":\"meta\"",
+            "not json at all",
+            "{\"type\":\"wat\"}",
+        ] {
+            assert!(from_ndjson(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let mut tr = tiny_trace();
+        tr.meta.execution = "custom \"spec\" with \\ and \n newline".into();
+        let back = from_ndjson(&to_ndjson(&tr)).unwrap();
+        assert_eq!(tr.meta.execution, back.meta.execution);
+    }
+}

@@ -1,0 +1,436 @@
+//! The persistent trace schema (v1): one [`TraceMeta`] header, per-job
+//! arrival/departure rows, and per-task rows with phase timing.
+//!
+//! All times are in the run's native unit — virtual seconds for DES
+//! traces, *emulated* seconds for sparklite traces (wall measurements are
+//! divided by `time_scale` at capture so traces from both sources are
+//! directly comparable and replayable).
+
+use crate::config::ModelKind;
+use crate::emulator::EmulatorResult;
+use crate::sim::SimResult;
+
+/// Current on-disk schema version (NDJSON and binary carry the same one).
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Trace header: where the trace came from and under which parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    /// Schema version (see [`SCHEMA_VERSION`]).
+    pub schema: u32,
+    /// Producing engine: `"sim"` (DES) or `"emulator"` (sparklite).
+    pub source: String,
+    /// Model token, parseable by [`ModelKind::parse`].
+    pub model: String,
+    /// Workers / executors l.
+    pub servers: u32,
+    /// Tasks per job k the run was configured with.
+    pub tasks_per_job: u32,
+    /// Jobs with `index < warmup` are transient (kept in task rows, but
+    /// excluded from `measured_jobs`).
+    pub warmup: u32,
+    /// RNG seed of the producing run.
+    pub seed: u64,
+    /// Wall seconds per trace second at capture (1.0 for DES traces).
+    pub time_scale: f64,
+    /// Inter-arrival distribution spec of the producing run.
+    pub interarrival: String,
+    /// Task execution-time distribution spec of the producing run.
+    pub execution: String,
+}
+
+/// One job's arrival/departure row.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobRow {
+    /// Job index (arrival order, warmup included in the numbering).
+    pub index: u32,
+    /// Tasks in the job.
+    pub tasks: u32,
+    /// Arrival time A(n).
+    pub arrival: f64,
+    /// Departure time D(n) (includes pre-departure overhead).
+    pub departure: f64,
+    /// First task service start (driver submission for emulator traces).
+    pub first_start: f64,
+    /// Total workload Σ execution times (no overhead).
+    pub workload: f64,
+    /// Total task-service overhead Σ O_i.
+    pub task_overhead: f64,
+    /// Measured pre-departure overhead (merge + bookkeeping).
+    pub pre_departure_overhead: f64,
+    /// Server time burned by cancelled replicas (redundancy scenarios).
+    pub redundant_work: f64,
+}
+
+impl JobRow {
+    /// Sojourn time T(n) = D(n) − A(n).
+    pub fn sojourn(&self) -> f64 {
+        self.departure - self.arrival
+    }
+
+    /// Schedule delay: arrival until the first task starts service.
+    pub fn schedule_delay(&self) -> f64 {
+        (self.first_start - self.arrival).max(0.0)
+    }
+}
+
+/// One task's row with phase timing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaskRow {
+    /// Owning job index.
+    pub job: u32,
+    /// Task index within the job.
+    pub task: u32,
+    /// Server (executor) that ran it.
+    pub server: u32,
+    /// Service start instant.
+    pub start: f64,
+    /// Service end instant (occupancy release).
+    pub end: f64,
+    /// Task-service overhead portion of `[start, end]`.
+    pub overhead: f64,
+}
+
+impl TaskRow {
+    /// Observed execution duration (occupancy minus overhead).
+    pub fn service(&self) -> f64 {
+        (self.end - self.start - self.overhead).max(0.0)
+    }
+
+    /// Server occupancy Q_i (execution + overhead).
+    pub fn occupancy(&self) -> f64 {
+        (self.end - self.start).max(0.0)
+    }
+}
+
+/// A complete captured trace: header + job rows + task rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    /// Header describing the producing run.
+    pub meta: TraceMeta,
+    /// Per-job rows, sorted by `index`.
+    pub jobs: Vec<JobRow>,
+    /// Per-task rows, sorted by `(job, task, server)`.
+    pub tasks: Vec<TaskRow>,
+}
+
+impl Trace {
+    /// Canonicalize row order (capture and every read path go through
+    /// this so a write → read round trip is exactly the identity, and so
+    /// consumers can rely on sorted rows even for hand-authored NDJSON).
+    pub(crate) fn normalize(mut self) -> Self {
+        self.jobs.sort_by_key(|j| j.index);
+        self.tasks.sort_by_key(|t| (t.job, t.task, t.server));
+        self
+    }
+
+    /// Capture a trace from a finished DES run. The run must have used
+    /// `RunOptions { record_jobs: true, trace: true, .. }`; job rows cover
+    /// the measured (post-warmup) jobs, task rows cover every job.
+    pub fn from_sim(res: &SimResult) -> Result<Self, String> {
+        if res.jobs.is_empty() {
+            return Err("simulation kept no job records (RunOptions.record_jobs)".into());
+        }
+        if res.trace.events().is_empty() {
+            return Err("simulation kept no task trace (RunOptions.trace)".into());
+        }
+        let cfg = &res.config;
+        let meta = TraceMeta {
+            schema: SCHEMA_VERSION,
+            source: "sim".into(),
+            model: cfg.model.to_string(),
+            servers: cfg.servers as u32,
+            tasks_per_job: cfg.tasks_per_job as u32,
+            warmup: cfg.warmup as u32,
+            seed: cfg.seed,
+            time_scale: 1.0,
+            interarrival: cfg.arrival.interarrival.clone(),
+            execution: cfg.service.execution.clone(),
+        };
+        let k = cfg.tasks_per_job as u32;
+        let jobs = res
+            .jobs
+            .iter()
+            .map(|r| JobRow {
+                index: r.index as u32,
+                tasks: k,
+                arrival: r.arrival,
+                departure: r.departure,
+                first_start: r.first_start,
+                workload: r.workload,
+                task_overhead: r.task_overhead,
+                pre_departure_overhead: r.pre_departure_overhead,
+                redundant_work: r.redundant_work,
+            })
+            .collect();
+        let tasks = res
+            .trace
+            .events()
+            .iter()
+            .map(|e| TaskRow {
+                job: e.job,
+                task: e.task,
+                server: e.server,
+                start: e.start,
+                end: e.end,
+                overhead: e.overhead,
+            })
+            .collect();
+        Ok(Trace { meta, jobs, tasks }.normalize())
+    }
+
+    /// Capture a trace from a finished sparklite run. Wall measurements
+    /// are converted to emulated seconds (`/ time_scale`); the executor
+    /// finish timestamp anchors each task row, so `start` is derived as
+    /// `finished − occupancy`.
+    pub fn from_emulator(res: &EmulatorResult) -> Result<Self, String> {
+        if res.listener.jobs.is_empty() {
+            return Err("emulator run recorded no jobs".into());
+        }
+        let cfg = &res.config;
+        let scale = cfg.time_scale;
+        let meta = TraceMeta {
+            schema: SCHEMA_VERSION,
+            source: "emulator".into(),
+            model: cfg.mode.to_string(),
+            servers: cfg.executors as u32,
+            tasks_per_job: cfg.tasks_per_job as u32,
+            warmup: cfg.warmup as u32,
+            seed: cfg.seed,
+            time_scale: scale,
+            interarrival: cfg.interarrival.clone(),
+            execution: cfg.execution.clone(),
+        };
+        let jobs = res
+            .listener
+            .jobs
+            .iter()
+            .map(|j| JobRow {
+                index: j.job_id as u32,
+                tasks: j.tasks,
+                arrival: j.arrival,
+                departure: j.departure,
+                first_start: j.submitted,
+                workload: j.total_execution,
+                task_overhead: j.total_task_overhead,
+                pre_departure_overhead: (j.departure - j.last_result).max(0.0),
+                redundant_work: 0.0,
+            })
+            .collect();
+        let tasks = res
+            .listener
+            .tasks
+            .iter()
+            .map(|t| TaskRow {
+                job: t.job_id as u32,
+                task: t.task_id,
+                server: t.executor_id,
+                start: (t.finished - t.occupancy) / scale,
+                end: t.finished / scale,
+                overhead: t.overhead() / scale,
+            })
+            .collect();
+        Ok(Trace { meta, jobs, tasks }.normalize())
+    }
+
+    /// The recorded model kind.
+    pub fn model(&self) -> Result<ModelKind, String> {
+        ModelKind::parse(&self.meta.model)
+    }
+
+    /// Post-warmup job rows (the measurement window).
+    pub fn measured_jobs(&self) -> impl Iterator<Item = &JobRow> {
+        let warmup = self.meta.warmup;
+        self.jobs.iter().filter(move |j| j.index >= warmup)
+    }
+
+    /// Measured-job sojourn times, in index order.
+    pub fn sojourns(&self) -> Vec<f64> {
+        self.measured_jobs().map(|j| j.sojourn()).collect()
+    }
+
+    /// All per-task service (execution) durations, in row order — the
+    /// sample bank behind `empirical:<trace-file>` distributions.
+    pub fn task_services(&self) -> Vec<f64> {
+        self.tasks.iter().map(|t| t.service()).collect()
+    }
+
+    /// All per-task overhead samples, in row order (the calibration
+    /// pipeline's `O_i` measurements).
+    pub fn task_overheads(&self) -> Vec<f64> {
+        self.tasks.iter().map(|t| t.overhead).collect()
+    }
+
+    /// Busy fraction per server over `[t0, t1]` — the Fig.-1/2 idle-time
+    /// statistic, computed from the persisted task rows (the file-based
+    /// analog of [`crate::trace::TraceLog::utilization`]).
+    pub fn utilization(&self, t0: f64, t1: f64) -> Vec<f64> {
+        assert!(t1 > t0);
+        let mut busy = vec![0.0; self.meta.servers as usize];
+        for t in &self.tasks {
+            let s = t.start.max(t0);
+            let e = t.end.min(t1);
+            if e > s {
+                busy[t.server as usize] += e - s;
+            }
+        }
+        busy.iter().map(|b| b / (t1 - t0)).collect()
+    }
+
+    /// Measured `(k, pre-departure)` samples for the Sec.-2.6 regression.
+    pub fn pre_departure_samples(&self) -> Vec<(f64, f64)> {
+        self.measured_jobs()
+            .map(|j| (j.tasks as f64, j.pre_departure_overhead))
+            .collect()
+    }
+
+    /// Structural validation: schema version, sane meta, finite rows.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.meta.schema != SCHEMA_VERSION {
+            return Err(format!(
+                "unsupported trace schema {} (this build reads {SCHEMA_VERSION})",
+                self.meta.schema
+            ));
+        }
+        if self.meta.servers == 0 {
+            return Err("trace meta: servers must be >= 1".into());
+        }
+        ModelKind::parse(&self.meta.model)?;
+        for j in &self.jobs {
+            if !(j.arrival.is_finite() && j.departure.is_finite()) {
+                return Err(format!("job {}: non-finite arrival/departure", j.index));
+            }
+            if j.departure < j.arrival {
+                return Err(format!("job {}: departure before arrival", j.index));
+            }
+        }
+        for t in &self.tasks {
+            if !(t.start.is_finite() && t.end.is_finite() && t.overhead.is_finite()) {
+                return Err(format!("task ({}, {}): non-finite timing", t.job, t.task));
+            }
+            if t.end < t.start {
+                return Err(format!("task ({}, {}): end before start", t.job, t.task));
+            }
+            if t.server >= self.meta.servers {
+                return Err(format!(
+                    "task ({}, {}): server {} out of range (trace has {} servers)",
+                    t.job, t.task, t.server, self.meta.servers
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelKind, SimulationConfig};
+    use crate::sim::{self, RunOptions};
+
+    fn captured() -> Trace {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 2,
+            tasks_per_job: 4,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.4".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 50,
+            warmup: 5,
+            seed: 3,
+            overhead: Some(crate::config::OverheadConfig::paper()),
+            workers: None,
+            redundancy: None,
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        Trace::from_sim(&res).unwrap()
+    }
+
+    #[test]
+    fn capture_from_sim_has_expected_shape() {
+        let tr = captured();
+        assert_eq!(tr.meta.schema, SCHEMA_VERSION);
+        assert_eq!(tr.meta.source, "sim");
+        assert_eq!(tr.jobs.len(), 50);
+        // Task rows include warmup jobs (55 × 4 tasks).
+        assert_eq!(tr.tasks.len(), 55 * 4);
+        assert_eq!(tr.measured_jobs().count(), 50);
+        assert_eq!(tr.model().unwrap(), ModelKind::ForkJoinSingleQueue);
+        tr.validate().unwrap();
+        // Overhead was on: every task row carries at least the constant.
+        assert!(tr.task_overheads().iter().all(|&o| o >= 2.6e-3 - 1e-12));
+        // Service excludes the overhead portion.
+        for t in &tr.tasks {
+            assert!(t.service() <= t.occupancy());
+        }
+    }
+
+    #[test]
+    fn capture_requires_recorded_jobs_and_trace() {
+        let cfg = SimulationConfig {
+            servers: 2,
+            tasks_per_job: 4,
+            jobs: 10,
+            warmup: 0,
+            ..SimulationConfig::default()
+        };
+        let res = sim::run(&cfg, RunOptions::default()).unwrap();
+        assert!(Trace::from_sim(&res).is_err());
+    }
+
+    #[test]
+    fn schema_mismatch_rejected() {
+        let mut tr = captured();
+        tr.meta.schema = 99;
+        assert!(tr.validate().is_err());
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        let mut tr = captured();
+        tr.tasks[0].server = 99; // captured trace has 2 servers
+        assert!(tr.validate().is_err());
+
+        let mut tr = captured();
+        tr.jobs[0].departure = tr.jobs[0].arrival - 1.0;
+        assert!(tr.validate().is_err());
+
+        let mut tr = captured();
+        tr.tasks[0].end = tr.tasks[0].start - 1.0;
+        assert!(tr.validate().is_err());
+    }
+
+    #[test]
+    fn utilization_matches_live_trace_log() {
+        let tr = captured();
+        let live = {
+            let cfg = SimulationConfig {
+                model: ModelKind::ForkJoinSingleQueue,
+                servers: 2,
+                tasks_per_job: 4,
+                arrival: crate::config::ArrivalConfig { interarrival: "exp:0.4".into() },
+                service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+                jobs: 50,
+                warmup: 5,
+                seed: 3,
+                overhead: Some(crate::config::OverheadConfig::paper()),
+                workers: None,
+                redundancy: None,
+            };
+            let res = sim::run(
+                &cfg,
+                RunOptions { record_jobs: true, trace: true, ..Default::default() },
+            )
+            .unwrap();
+            res.trace.utilization(2, 0.0, 10.0)
+        };
+        let persisted = tr.utilization(0.0, 10.0);
+        for (a, b) in live.iter().zip(&persisted) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+}

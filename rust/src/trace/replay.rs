@@ -1,0 +1,349 @@
+//! Trace-driven replay: feed a recorded trace's job arrivals and task
+//! service times back through any of the four DES models.
+//!
+//! The replay workload is deterministic — the inter-arrival and execution
+//! "distributions" are scripted sequences that consume no randomness — so
+//! replaying the same trace twice is bitwise identical. An optional
+//! overhead model resamples fresh `O_i` draws from the workload's seeded
+//! RNG on top of the recorded (overhead-free) service times, which is
+//! exactly the Sec.-2.6 validation loop: record → fit → replay → compare
+//! sojourn distributions.
+
+use super::record::{JobRow, Trace};
+use crate::config::{ModelKind, OverheadConfig};
+use crate::dist::{Dist, Distribution};
+use crate::sim::models::{
+    ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge,
+};
+use crate::sim::{JobRecord, OverheadModel, TraceLog, Workload};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Options for a replay run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplayOptions {
+    /// Model to drive; `None` replays through the recorded model.
+    pub model: Option<ModelKind>,
+    /// Worker count; `None` uses the recorded server count.
+    pub servers: Option<usize>,
+    /// Overhead model resampled on top of the recorded service times
+    /// (`None` = replay the pure task sizes).
+    pub overhead: Option<OverheadConfig>,
+    /// Enforce in-order departures in the single-queue fork-join model.
+    pub in_order_departures: bool,
+    /// Seed for the overhead resampling stream.
+    pub seed: u64,
+}
+
+/// Outcome of a replay run.
+#[derive(Clone, Debug)]
+pub struct Replayed {
+    /// Model the trace was replayed through.
+    pub model: ModelKind,
+    /// Worker count used.
+    pub servers: usize,
+    /// Tasks per job consumed from the trace.
+    pub tasks_per_job: usize,
+    /// Per-job records in arrival order, one per recorded measured job.
+    pub jobs: Vec<JobRecord>,
+}
+
+impl Replayed {
+    /// Replayed sojourn times, in job order.
+    pub fn sojourns(&self) -> Vec<f64> {
+        self.jobs.iter().map(|j| j.sojourn()).collect()
+    }
+}
+
+/// Scripted "distribution" replaying a fixed sample sequence; consumes no
+/// randomness (like `Deterministic`), so the shared RNG stream is left to
+/// the overhead model alone.
+#[derive(Debug)]
+struct ReplaySequence {
+    values: Vec<f64>,
+    next: AtomicUsize,
+}
+
+impl ReplaySequence {
+    fn new(values: Vec<f64>) -> Self {
+        Self { values, next: AtomicUsize::new(0) }
+    }
+}
+
+impl Distribution for ReplaySequence {
+    fn sample(&self, _rng: &mut dyn FnMut() -> f64) -> f64 {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        // Clamp at the end: models never over-draw on a well-formed
+        // trace, and a stuck last value beats a panic in release runs.
+        self.values[i.min(self.values.len() - 1)]
+    }
+    fn mean(&self) -> f64 {
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+    fn variance(&self) -> f64 {
+        let m = self.mean();
+        self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / self.values.len() as f64
+    }
+    fn label(&self) -> String {
+        format!("Replay(n={})", self.values.len())
+    }
+}
+
+/// Commit the current (job, task) winner's service time to its job's
+/// sequence; warmup jobs' task rows are skipped.
+fn flush_winner(
+    cur: &mut Option<(u32, u32, f64, f64)>,
+    services: &mut [Vec<f64>],
+    jobs: &[&JobRow],
+    warmup: u32,
+) -> Result<(), String> {
+    if let Some((job, task, _, service)) = cur.take() {
+        if job >= warmup {
+            let ji = jobs
+                .binary_search_by_key(&job, |j| j.index)
+                .map_err(|_| format!("task row for unknown job {job}"))?;
+            if services[ji].len() != task as usize {
+                return Err(format!(
+                    "job {job}: task rows are not contiguous at task {task}"
+                ));
+            }
+            services[ji].push(service);
+        }
+    }
+    Ok(())
+}
+
+/// Replay `trace`'s measured jobs through a model.
+///
+/// Task sizes come from the task rows; arrivals come from the job rows.
+/// Every measured job must carry the same task count. Traces recorded by
+/// this crate carry exactly one row per `(job, task)`; if a foreign trace
+/// carries replicas, the earliest-finishing row is used, with ties broken
+/// deterministically by row order — an approximation, since schema v1
+/// cannot distinguish a winner from a replica cancelled at the same
+/// instant (`tiny-tasks trace record` rejects redundancy scenarios for
+/// this reason).
+pub fn replay(trace: &Trace, opts: &ReplayOptions) -> Result<Replayed, String> {
+    trace.validate()?;
+    let model_kind = match opts.model {
+        Some(m) => m,
+        None => trace.model()?,
+    };
+    let servers = opts.servers.unwrap_or(trace.meta.servers as usize);
+    if servers == 0 {
+        return Err("replay needs at least one server".into());
+    }
+
+    // Measured jobs in arrival order.
+    let jobs: Vec<_> = trace.measured_jobs().collect();
+    if jobs.is_empty() {
+        return Err("trace has no measured jobs to replay".into());
+    }
+
+    // Winning task rows per (job, task): rows are sorted, so scan and
+    // keep the earliest finish among replicas of the same logical task.
+    let warmup = trace.meta.warmup;
+    let mut services: Vec<Vec<f64>> = vec![Vec::new(); jobs.len()];
+    let mut cur: Option<(u32, u32, f64, f64)> = None; // (job, task, end, service)
+    for t in &trace.tasks {
+        match &mut cur {
+            Some((job, task, end, service)) if *job == t.job && *task == t.task => {
+                // Another replica of the same logical task: winner = the
+                // earliest finisher.
+                if t.end < *end {
+                    *end = t.end;
+                    *service = t.service();
+                }
+            }
+            _ => {
+                flush_winner(&mut cur, &mut services, &jobs, warmup)?;
+                cur = Some((t.job, t.task, t.end, t.service()));
+            }
+        }
+    }
+    flush_winner(&mut cur, &mut services, &jobs, warmup)?;
+
+    let k = services[0].len();
+    if k == 0 {
+        return Err("trace has no task rows for its measured jobs".into());
+    }
+    for (j, s) in jobs.iter().zip(&services) {
+        if s.len() != k {
+            return Err(format!(
+                "job {} has {} recorded tasks but job {} has {k}; replay needs a \
+                 uniform task count",
+                j.index,
+                s.len(),
+                jobs[0].index
+            ));
+        }
+    }
+    if model_kind == ModelKind::ForkJoinPerServer && k != servers {
+        return Err(format!(
+            "per-server fork-join replay requires k = l (trace has k={k}, l={servers})"
+        ));
+    }
+    if model_kind != ModelKind::Ideal && k < servers {
+        return Err(format!(
+            "tiny-tasks replay requires k >= l (trace has k={k}, l={servers})"
+        ));
+    }
+
+    // Inter-arrival gaps reproduce the recorded arrival instants (up to
+    // float re-accumulation, far below any distributional tolerance).
+    let mut gaps = Vec::with_capacity(jobs.len());
+    let mut prev = 0.0;
+    for j in &jobs {
+        if j.arrival < prev {
+            return Err(format!("job {}: arrivals are not monotone", j.index));
+        }
+        gaps.push(j.arrival - prev);
+        prev = j.arrival;
+    }
+    let execs: Vec<f64> = services.iter().flatten().copied().collect();
+
+    let mut workload = Workload::new(
+        Dist::custom(Box::new(ReplaySequence::new(gaps))),
+        Dist::custom(Box::new(ReplaySequence::new(execs))),
+        opts.seed,
+    );
+    let overhead = OverheadModel::from_option(opts.overhead);
+    let mut model: Box<dyn Model> = match model_kind {
+        ModelKind::SplitMerge => Box::new(SplitMerge::new(servers, k)),
+        ModelKind::ForkJoinSingleQueue => Box::new(
+            ForkJoinSingleQueue::new(servers, k)
+                .with_in_order_departures(opts.in_order_departures),
+        ),
+        ModelKind::ForkJoinPerServer => Box::new(ForkJoinPerServer::new(servers)),
+        ModelKind::Ideal => Box::new(IdealPartition::new(servers, k)),
+    };
+    let mut tr = TraceLog::disabled();
+    let mut out = Vec::with_capacity(jobs.len());
+    for n in 0..jobs.len() {
+        let arrival = workload.next_arrival();
+        out.push(model.advance(n, arrival, &mut workload, &overhead, &mut tr));
+    }
+    Ok(Replayed { model: model_kind, servers, tasks_per_job: k, jobs: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SimulationConfig;
+    use crate::sim::{self, RunOptions};
+
+    fn record(model: ModelKind, overhead: bool, warmup: usize) -> Trace {
+        let cfg = SimulationConfig {
+            model,
+            servers: 3,
+            tasks_per_job: if model == ModelKind::ForkJoinPerServer { 3 } else { 6 },
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 400,
+            warmup,
+            seed: 11,
+            overhead: overhead.then(crate::config::OverheadConfig::paper),
+            workers: None,
+            redundancy: None,
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        Trace::from_sim(&res).unwrap()
+    }
+
+    /// Replaying an overhead-free trace through its own model reproduces
+    /// the recorded sojourns (up to float re-accumulation of arrivals).
+    /// Recorded with warmup = 0 so the replay's empty initial system
+    /// matches the recorded one job for job.
+    #[test]
+    fn replay_reproduces_recorded_sojourns() {
+        for model in [
+            ModelKind::SplitMerge,
+            ModelKind::ForkJoinSingleQueue,
+            ModelKind::ForkJoinPerServer,
+            ModelKind::Ideal,
+        ] {
+            let tr = record(model, false, 0);
+            let rep = replay(&tr, &ReplayOptions::default()).unwrap();
+            assert_eq!(rep.model, model);
+            let recorded = tr.sojourns();
+            assert_eq!(rep.jobs.len(), recorded.len(), "{model}");
+            for (got, want) in rep.sojourns().iter().zip(&recorded) {
+                assert!(
+                    (got - want).abs() < 1e-6,
+                    "{model}: replayed {got} vs recorded {want}"
+                );
+            }
+        }
+    }
+
+    /// Replay is bitwise deterministic across invocations.
+    #[test]
+    fn replay_is_deterministic() {
+        let tr = record(ModelKind::ForkJoinSingleQueue, true, 40);
+        let opts = ReplayOptions {
+            overhead: Some(crate::config::OverheadConfig::paper()),
+            seed: 7,
+            ..Default::default()
+        };
+        let a = replay(&tr, &opts).unwrap();
+        let b = replay(&tr, &opts).unwrap();
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.departure.to_bits(), y.departure.to_bits());
+            assert_eq!(x.workload.to_bits(), y.workload.to_bits());
+        }
+    }
+
+    /// Cross-model replay: the same recorded workload is legal input for
+    /// a different model, and split-merge blocking dominates fork-join.
+    #[test]
+    fn cross_model_replay_orders_models() {
+        let tr = record(ModelKind::ForkJoinSingleQueue, false, 40);
+        let fj = replay(&tr, &ReplayOptions::default()).unwrap();
+        let sm = replay(
+            &tr,
+            &ReplayOptions { model: Some(ModelKind::SplitMerge), ..Default::default() },
+        )
+        .unwrap();
+        let mean = |r: &Replayed| {
+            r.jobs.iter().map(|j| j.sojourn()).sum::<f64>() / r.jobs.len() as f64
+        };
+        assert!(mean(&sm) >= mean(&fj), "SM {} !>= FJ {}", mean(&sm), mean(&fj));
+    }
+
+    /// Overhead resampling on replay strictly increases sojourns.
+    #[test]
+    fn replay_with_overhead_increases_sojourn() {
+        let tr = record(ModelKind::ForkJoinSingleQueue, false, 40);
+        let clean = replay(&tr, &ReplayOptions::default()).unwrap();
+        let dirty = replay(
+            &tr,
+            &ReplayOptions {
+                overhead: Some(crate::config::OverheadConfig::paper()),
+                seed: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mean = |r: &Replayed| {
+            r.jobs.iter().map(|j| j.sojourn()).sum::<f64>() / r.jobs.len() as f64
+        };
+        assert!(mean(&dirty) > mean(&clean));
+    }
+
+    #[test]
+    fn fjps_replay_requires_k_equals_l() {
+        let tr = record(ModelKind::ForkJoinSingleQueue, false, 40); // k=6, l=3
+        let err = replay(
+            &tr,
+            &ReplayOptions {
+                model: Some(ModelKind::ForkJoinPerServer),
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(err.contains("k = l"), "{err}");
+    }
+}

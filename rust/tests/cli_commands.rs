@@ -147,6 +147,130 @@ fn bench_writes_bench_json() {
     assert!(body.trim_start().starts_with('{') && body.trim_end().ends_with('}'));
 }
 
+/// The full trace CLI family: record (sim source) → summarize → convert
+/// (ndjson → binary) → replay → calibrate --from-trace, all through the
+/// dispatcher.
+#[test]
+fn trace_family_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("tt-cli-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let nd = dir.join("t.ndjson");
+    let bin = dir.join("t.bin");
+    assert_eq!(
+        run(&[
+            "trace", "record", "--source", "sim", "--model", "fj", "--servers", "4",
+            "--k", "8", "--lambda", "0.4", "--jobs", "500", "--warmup", "50",
+            "--overhead", "--out", nd.to_str().unwrap(),
+        ]),
+        0
+    );
+    assert!(nd.exists());
+    assert_eq!(run(&["trace", "summarize", "--in", nd.to_str().unwrap()]), 0);
+    assert_eq!(
+        run(&[
+            "trace", "convert", "--in", nd.to_str().unwrap(), "--out",
+            bin.to_str().unwrap(),
+        ]),
+        0
+    );
+    assert!(bin.exists());
+    // Binary is the compact codec: strictly smaller than the NDJSON.
+    assert!(
+        std::fs::metadata(&bin).unwrap().len() < std::fs::metadata(&nd).unwrap().len()
+    );
+    // Replay the binary copy through a different model.
+    assert_eq!(
+        run(&[
+            "trace", "replay", "--in", bin.to_str().unwrap(), "--model", "sm",
+        ]),
+        0
+    );
+    // Offline calibration against the recorded file.
+    assert_eq!(run(&["calibrate", "--from-trace", nd.to_str().unwrap()]), 0);
+    // An empirical execution spec drawn from the trace drives simulate.
+    assert_eq!(
+        run(&[
+            "simulate", "--model", "fj", "--servers", "4", "--k", "8", "--lambda",
+            "0.3", "--jobs", "1000", "--warmup", "100", "--execution",
+            &format!("empirical:{}", bin.display()),
+        ]),
+        0
+    );
+}
+
+#[test]
+fn trace_subcommand_errors_are_clean() {
+    for argv in [
+        vec!["trace"],
+        vec!["trace", "frob"],
+        vec!["trace", "replay"],
+        vec!["trace", "convert", "--in", "/no/such/trace.ndjson"],
+        vec!["calibrate", "--from-trace", "/no/such/trace.ndjson"],
+        // Schema v1 cannot represent scenario shape; recording one must
+        // be rejected, not silently captured as homogeneous.
+        vec!["trace", "record", "--source", "sim", "--redundancy", "2"],
+        vec!["trace", "record", "--source", "sim", "--speeds", "1.0,0.5"],
+    ] {
+        let args = Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
+        assert!(dispatch(&args).is_err(), "{argv:?} should error");
+    }
+}
+
+#[test]
+fn emulate_with_pinned_slow_executors() {
+    assert_eq!(
+        run(&[
+            "emulate", "--executors", "2", "--k", "4", "--mode", "fj", "--jobs", "20",
+            "--warmup", "2", "--time-scale", "0.004", "--speeds", "1.0,0.5",
+        ]),
+        0
+    );
+    // Speedups are rejected for the emulator (real payloads).
+    let args = Args::parse(
+        ["emulate", "--executors", "2", "--k", "4", "--speeds", "1.0,2.0"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert!(dispatch(&args).is_err());
+}
+
+#[test]
+fn bench_baseline_gate() {
+    let dir = std::env::temp_dir().join(format!("tt-bench-gate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH.json");
+    let baseline = dir.join("BASE.json");
+    // A permissive baseline passes...
+    std::fs::write(
+        &baseline,
+        "{\n  \"entries\": [\n    {\"name\": \"calendar/fj/l10/k20/headline\", \
+         \"jobs_per_sec\": 1}\n  ]\n}\n",
+    )
+    .unwrap();
+    assert_eq!(
+        run(&[
+            "bench", "--fast=true", "--out", out.to_str().unwrap(), "--baseline",
+            baseline.to_str().unwrap(),
+        ]),
+        0
+    );
+    // ...an absurdly high baseline fails with exit code 1.
+    std::fs::write(
+        &baseline,
+        "{\n  \"entries\": [\n    {\"name\": \"calendar/fj/l10/k20/headline\", \
+         \"jobs_per_sec\": 1e18}\n  ]\n}\n",
+    )
+    .unwrap();
+    assert_eq!(
+        run(&[
+            "bench", "--fast=true", "--out", out.to_str().unwrap(), "--baseline",
+            baseline.to_str().unwrap(),
+        ]),
+        1
+    );
+}
+
 #[test]
 fn emulate_quick() {
     assert_eq!(

@@ -21,6 +21,7 @@ fn emu_cfg(mode: ModelKind, jobs: usize) -> EmulatorConfig {
         warmup: jobs / 10,
         seed: 21,
         inject_overhead: None,
+        workers: None,
     }
 }
 

@@ -1,0 +1,340 @@
+//! Trace subsystem integration: codec round-trip exactness (property
+//! test over randomized traces), record → write → read → replay bitwise
+//! determinism for both codecs, `Dist::Empirical` vs `stats::Ecdf`
+//! agreement, and the end-to-end record → calibrate-from-trace →
+//! replay pipeline of the Sec.-2.6 methodology.
+
+use tiny_tasks::config::{ModelKind, OverheadConfig, SimulationConfig};
+use tiny_tasks::dist::{parse_spec, Empirical};
+use tiny_tasks::rng::{Pcg64, Rng};
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::stats::{pp_distance, Ecdf};
+use tiny_tasks::trace::{
+    from_binary, from_ndjson, replay, to_binary, to_ndjson, JobRow, ReplayOptions, TaskRow,
+    Trace, TraceFormat, TraceMeta, SCHEMA_VERSION,
+};
+
+fn tmp_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tt-trace-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A randomized (but valid) trace exercising awkward float values.
+fn random_trace(seed: u64) -> Trace {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let n_jobs = 1 + (rng.next_below(40) as usize);
+    let k = 1 + (rng.next_below(6) as u32);
+    let mut jobs = Vec::new();
+    let mut tasks = Vec::new();
+    let mut t = 0.0;
+    for index in 0..n_jobs as u32 {
+        // Mix of scales: subnormal-ish, tiny, and large magnitudes.
+        t += rng.next_f64_open() * 10f64.powi(rng.next_below(7) as i32 - 3);
+        let sojourn = rng.next_f64_open() * 5.0;
+        jobs.push(JobRow {
+            index,
+            tasks: k,
+            arrival: t,
+            departure: t + sojourn,
+            first_start: t + rng.next_f64() * 0.1,
+            workload: rng.next_f64_open() * 4.0,
+            task_overhead: rng.next_f64() * 1e-2,
+            pre_departure_overhead: rng.next_f64() * 1e-2,
+            redundant_work: 0.0,
+        });
+        for task in 0..k {
+            let start = t + rng.next_f64();
+            let dur = rng.next_f64_open();
+            tasks.push(TaskRow {
+                job: index,
+                task,
+                server: rng.next_below(8) as u32,
+                start,
+                end: start + dur,
+                overhead: dur * rng.next_f64() * 0.1,
+            });
+        }
+    }
+    Trace {
+        meta: TraceMeta {
+            schema: SCHEMA_VERSION,
+            source: "sim".into(),
+            model: "single-queue-fork-join".into(),
+            servers: 8,
+            tasks_per_job: k,
+            warmup: 0,
+            seed: rng.next_u64(), // full u64 range: > 2^53 likely
+            time_scale: 1.0,
+            interarrival: "exp:0.5".into(),
+            execution: "exp:1.0".into(),
+        },
+        jobs,
+        tasks,
+    }
+}
+
+fn assert_bitwise_eq(a: &Trace, b: &Trace, codec: &str) {
+    assert_eq!(a.meta, b.meta, "{codec}: meta");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{codec}");
+    assert_eq!(a.tasks.len(), b.tasks.len(), "{codec}");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.index, y.index, "{codec}");
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits(), "{codec}: job arrival bits");
+        assert_eq!(x.departure.to_bits(), y.departure.to_bits(), "{codec}");
+        assert_eq!(x.workload.to_bits(), y.workload.to_bits(), "{codec}");
+    }
+    for (x, y) in a.tasks.iter().zip(&b.tasks) {
+        assert_eq!(x.start.to_bits(), y.start.to_bits(), "{codec}: task start bits");
+        assert_eq!(x.end.to_bits(), y.end.to_bits(), "{codec}");
+        assert_eq!(x.overhead.to_bits(), y.overhead.to_bits(), "{codec}");
+    }
+}
+
+/// Property test: 50 randomized traces round-trip bitwise through both
+/// codecs, and re-encoding is byte-stable (write ∘ read = identity).
+#[test]
+fn codecs_round_trip_randomized_traces_exactly() {
+    for seed in 0..50 {
+        let tr = random_trace(seed);
+        let text = to_ndjson(&tr);
+        let back = from_ndjson(&text).unwrap();
+        assert_bitwise_eq(&tr, &back, "ndjson");
+        assert_eq!(text, to_ndjson(&back), "ndjson re-encode must be byte-stable");
+
+        let bytes = to_binary(&tr);
+        let back = from_binary(&bytes).unwrap();
+        assert_bitwise_eq(&tr, &back, "binary");
+        assert_eq!(bytes, to_binary(&back), "binary re-encode must be byte-stable");
+    }
+}
+
+fn record_run(jobs: usize, warmup: usize, overhead: bool) -> Trace {
+    let cfg = SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: 4,
+        tasks_per_job: 8,
+        arrival: tiny_tasks::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+        service: tiny_tasks::config::ServiceConfig { execution: "exp:2.0".into() },
+        jobs,
+        warmup,
+        seed: 9,
+        overhead: overhead.then(OverheadConfig::paper),
+        workers: None,
+        redundancy: None,
+    };
+    let res = sim::run(
+        &cfg,
+        RunOptions { record_jobs: true, trace: true, ..Default::default() },
+    )
+    .unwrap();
+    Trace::from_sim(&res).unwrap()
+}
+
+/// The satellite acceptance: record → write → read → replay is bitwise
+/// deterministic for both codecs — the two loaded copies and the
+/// in-memory original all replay to identical job records.
+#[test]
+fn record_write_read_replay_is_bitwise_deterministic() {
+    let tr = record_run(600, 60, true);
+    let dir = tmp_dir();
+    let nd_path = dir.join("det.ndjson");
+    let bin_path = dir.join("det.bin");
+    tr.write_file(&nd_path, None).unwrap();
+    tr.write_file(&bin_path, None).unwrap();
+    let nd = Trace::read_file(&nd_path).unwrap();
+    let bin = Trace::read_file(&bin_path).unwrap();
+    assert_bitwise_eq(&tr, &nd, "ndjson file");
+    assert_bitwise_eq(&tr, &bin, "binary file");
+
+    let opts = ReplayOptions {
+        overhead: Some(OverheadConfig::paper()),
+        seed: 4,
+        ..Default::default()
+    };
+    let a = replay(&tr, &opts).unwrap();
+    let b = replay(&nd, &opts).unwrap();
+    let c = replay(&bin, &opts).unwrap();
+    assert_eq!(a.jobs.len(), b.jobs.len());
+    for ((x, y), z) in a.jobs.iter().zip(&b.jobs).zip(&c.jobs) {
+        assert_eq!(x.departure.to_bits(), y.departure.to_bits());
+        assert_eq!(x.departure.to_bits(), z.departure.to_bits());
+        assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+        assert_eq!(x.workload.to_bits(), z.workload.to_bits());
+    }
+}
+
+/// `Dist::Empirical` inverse-transform draws agree with `stats::Ecdf`
+/// quantiles at the same uniforms, including when the bank is loaded
+/// from a recorded trace file via the `empirical:<file>` spec.
+#[test]
+fn empirical_dist_matches_ecdf_quantiles() {
+    let tr = record_run(300, 30, false);
+    let dir = tmp_dir();
+    let path = dir.join("bank.bin");
+    tr.write_file(&path, Some(TraceFormat::Binary)).unwrap();
+    let d = parse_spec(&format!("empirical:{}", path.display())).unwrap();
+    let ecdf = Ecdf::new(tr.task_services());
+    let mut a = Pcg64::seed_from_u64(33);
+    let mut b = Pcg64::seed_from_u64(33);
+    for _ in 0..5000 {
+        let x = d.draw(&mut a);
+        let u = b.next_f64_open();
+        assert_eq!(x.to_bits(), ecdf.inverse(u).to_bits());
+    }
+    // Moments of the bank are the moments of the dist.
+    let direct = Empirical::new(tr.task_services()).unwrap();
+    assert_eq!(d.mean().to_bits(), direct.mean().to_bits());
+    // An empirical-execution simulation runs end to end.
+    let cfg = SimulationConfig {
+        servers: 4,
+        tasks_per_job: 8,
+        arrival: tiny_tasks::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+        service: tiny_tasks::config::ServiceConfig {
+            execution: format!("empirical:{}", path.display()),
+        },
+        jobs: 500,
+        warmup: 50,
+        ..Default::default()
+    };
+    let res = sim::run(&cfg, RunOptions::default()).unwrap();
+    assert_eq!(res.sojourn.len(), 500);
+}
+
+/// End-to-end acceptance: a recorded fork-join trace replayed through
+/// the fork-join model reproduces the recorded sojourn ECDF (PP distance
+/// far below the Fig.-10 with-overhead threshold), and cross-model
+/// replay stays well-defined.
+#[test]
+fn replay_reproduces_sojourn_ecdf_within_pp_threshold() {
+    let tr = record_run(1500, 150, false);
+    let rep = replay(&tr, &ReplayOptions::default()).unwrap();
+    let recorded = Ecdf::new(tr.sojourns());
+    let replayed = Ecdf::new(rep.sojourns());
+    let d = pp_distance(&replayed, &recorded, 256);
+    // Fig.-10's with-overhead fit sits around a few percent; exact
+    // replay of the same model must be essentially zero.
+    assert!(d < 0.02, "replay PP distance too large: {d}");
+}
+
+/// Emulator capture: wall measurements land in emulated seconds, the
+/// rows are replayable, and the file round trip stays exact.
+#[test]
+fn emulator_capture_round_trips_and_replays() {
+    let cfg = tiny_tasks::config::EmulatorConfig {
+        executors: 4,
+        tasks_per_job: 8,
+        mode: ModelKind::ForkJoinSingleQueue,
+        interarrival: "exp:2.0".into(),
+        execution: "exp:2.0".into(),
+        time_scale: 0.004,
+        jobs: 40,
+        warmup: 5,
+        seed: 11,
+        inject_overhead: None,
+        workers: None,
+    };
+    let res = tiny_tasks::emulator::run(&cfg).unwrap();
+    let tr = Trace::from_emulator(&res).unwrap();
+    tr.validate().unwrap();
+    assert_eq!(tr.meta.source, "emulator");
+    assert_eq!(tr.jobs.len(), 45);
+    assert_eq!(tr.tasks.len(), 45 * 8);
+    // Emulated seconds: mean service should sit near E[exec] = 0.5 s,
+    // not near the 2 ms wall value.
+    let services = tr.task_services();
+    let mean = services.iter().sum::<f64>() / services.len() as f64;
+    assert!(mean > 0.2 && mean < 1.0, "service not in emulated seconds: {mean}");
+    let dir = tmp_dir();
+    let path = dir.join("emu.bin");
+    tr.write_file(&path, None).unwrap();
+    let back = Trace::read_file(&path).unwrap();
+    assert_bitwise_eq(&tr, &back, "emulator binary file");
+    // Replay through the recorded model: same job count, similar scale.
+    let rep = replay(&back, &ReplayOptions::default()).unwrap();
+    assert_eq!(rep.jobs.len(), 40);
+    let rep_mean =
+        rep.jobs.iter().map(|j| j.sojourn()).sum::<f64>() / rep.jobs.len() as f64;
+    let rec_mean = back.sojourns().iter().sum::<f64>() / 40.0;
+    assert!(
+        rep_mean > 0.3 * rec_mean && rep_mean < 3.0 * rec_mean,
+        "replayed mean {rep_mean} far from recorded {rec_mean}"
+    );
+}
+
+/// From-trace calibration agrees with the live pipeline's acceptance:
+/// parameters recovered near injected truth on the same seed, and the
+/// fitted model PP-beats no-overhead. Uses a simulator-recorded trace so
+/// the whole loop (record → calibrate --from-trace → replay) is
+/// wall-clock cheap and deterministic.
+#[test]
+fn calibrate_from_trace_end_to_end() {
+    let injected = OverheadConfig {
+        c_task_ts: 40e-3,
+        mu_task_ts: 150.0,
+        c_job_pd: 0.15,
+        c_task_pd: 0.0,
+    };
+    let cfg = SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: 4,
+        tasks_per_job: 32,
+        arrival: tiny_tasks::config::ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: tiny_tasks::config::ServiceConfig { execution: "exp:8.0".into() },
+        jobs: 600,
+        warmup: 60,
+        seed: 7,
+        overhead: Some(injected),
+        workers: None,
+        redundancy: None,
+    };
+    let res = sim::run(
+        &cfg,
+        RunOptions { record_jobs: true, trace: true, ..Default::default() },
+    )
+    .unwrap();
+    let tr = Trace::from_sim(&res).unwrap();
+    let dir = tmp_dir();
+    let path = dir.join("calib.ndjson");
+    tr.write_file(&path, None).unwrap();
+    let loaded = Trace::read_file(&path).unwrap();
+
+    let cal = tiny_tasks::coordinator::calibrate::calibrate_from_trace(&loaded).unwrap();
+    assert!(
+        (cal.fitted.c_task_ts - 40e-3).abs() < 15e-3,
+        "c_ts={}",
+        cal.fitted.c_task_ts
+    );
+    assert!((cal.fitted.c_job_pd - 0.15).abs() < 0.05, "c_pd={}", cal.fitted.c_job_pd);
+    assert!(
+        cal.pp_with_overhead < cal.pp_without_overhead,
+        "PP: with={} without={}",
+        cal.pp_with_overhead,
+        cal.pp_without_overhead
+    );
+
+    // Replay the trace with the *fitted* model on top of the recorded
+    // overhead-free task sizes: the sojourn ECDF must PP-match the
+    // recorded one below the with-overhead threshold (Fig. 10 logic).
+    let rep = replay(
+        &loaded,
+        &ReplayOptions { overhead: Some(cal.fitted), seed: 13, ..Default::default() },
+    )
+    .unwrap();
+    let d_fitted = pp_distance(
+        &Ecdf::new(rep.sojourns()),
+        &Ecdf::new(loaded.sojourns()),
+        256,
+    );
+    let rep_clean = replay(&loaded, &ReplayOptions::default()).unwrap();
+    let d_clean = pp_distance(
+        &Ecdf::new(rep_clean.sojourns()),
+        &Ecdf::new(loaded.sojourns()),
+        256,
+    );
+    assert!(
+        d_fitted < d_clean,
+        "fitted-overhead replay must fit better: {d_fitted} vs {d_clean}"
+    );
+    assert!(d_fitted < 0.1, "fitted replay PP distance too large: {d_fitted}");
+}
