@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
                     None
                 },
                 redundancy: if replicas > 1 {
-                    Some(RedundancyConfig { replicas })
+                    Some(RedundancyConfig::new(replicas))
                 } else {
                     None
                 },

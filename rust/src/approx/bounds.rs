@@ -1,0 +1,329 @@
+//! Sojourn / waiting ε-quantile approximations for skewed & redundant
+//! clusters — Theorem 1/2 evaluated over the effective cluster's rate
+//! envelopes, with the replica-aware overhead terms.
+//!
+//! Degenerate scenarios delegate to [`crate::analysis::bounds`], so the
+//! homogeneous results are reproduced bit-for-bit (tested in
+//! `rust/tests/approx_equivalence.rs`). Non-degenerate scenarios follow
+//! the same θ-optimization with:
+//!
+//! * `ρ_X`, `ρ_Z` from [`EffectiveCluster`] (prefix-sum rate envelopes);
+//! * overhead constants from [`super::effective_overhead`]: the winner's
+//!   critical-path overhead joins `ρ_X°` (Eq.-26 analog), the per-task
+//!   capacity burn `r·(E[O]+c_launch)` shares over the L effective slots
+//!   in `ρ_Z°` (Eq.-28 analog), and split-merge additionally blocks on
+//!   the pre-departure term (Eq.-31 analog) while fork-join appends it
+//!   non-blocking (Eq. 29).
+
+use super::{effective_overhead, ApproxParams, ClusterSpec, EffectiveCluster};
+use crate::analysis::envelope::rho_arrival_exp;
+use crate::analysis::theorem1::{self, optimize_theta};
+use crate::analysis::{self, BoundModel, BoundParams};
+use crate::config::ModelKind;
+
+/// Which model family to approximate (the tiny-tasks pair the scenario
+/// subsystem supports analytically).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApproxModel {
+    /// Blocking split-merge (Lemma 1 → Theorem 1 shape).
+    SplitMerge,
+    /// Single-queue fork-join (Theorem 2 shape).
+    ForkJoin,
+}
+
+impl ApproxModel {
+    /// Map a config/CLI model token; per-server fork-join and the ideal
+    /// partition have no heterogeneous approximation.
+    pub fn from_model_kind(model: ModelKind) -> Result<Self, String> {
+        match model {
+            ModelKind::SplitMerge => Ok(Self::SplitMerge),
+            ModelKind::ForkJoinSingleQueue => Ok(Self::ForkJoin),
+            other => Err(format!(
+                "no heterogeneous approximation for {other}; use sm or fj"
+            )),
+        }
+    }
+
+    fn bound_model(self) -> BoundModel {
+        match self {
+            Self::SplitMerge => BoundModel::SplitMergeTiny,
+            Self::ForkJoin => BoundModel::ForkJoinTiny,
+        }
+    }
+}
+
+fn bound_params(spec: &ClusterSpec, p: &ApproxParams) -> BoundParams {
+    BoundParams {
+        l: spec.len(),
+        k: p.k,
+        lambda: p.lambda,
+        mu: p.mu,
+        epsilon: p.epsilon,
+        overhead: p.overhead,
+    }
+}
+
+/// The overhead constants entering the envelopes: (critical-path term,
+/// per-slot capacity share, pre-departure).
+fn overhead_terms(spec: &ClusterSpec, p: &ApproxParams, slots: usize) -> (f64, f64, f64) {
+    match &p.overhead {
+        None => (0.0, 0.0, 0.0),
+        Some(oh) => {
+            let eff = effective_overhead(oh, &spec.speeds, spec.replicas, spec.replica_launch);
+            (eff.critical, eff.capacity / slots as f64, oh.pre_departure(p.k))
+        }
+    }
+}
+
+/// Sojourn ε-quantile approximation. `None` = no feasible θ (unstable
+/// under the approximation's stability condition).
+pub fn sojourn_quantile(model: ApproxModel, spec: &ClusterSpec, p: &ApproxParams) -> Option<f64> {
+    p.validate(spec);
+    if spec.is_degenerate() {
+        return analysis::sojourn_bound(model.bound_model(), &bound_params(spec, p));
+    }
+    let cluster = EffectiveCluster::from_spec(spec, p.mu).ok()?;
+    let le = cluster.len();
+    if p.k < le {
+        return None;
+    }
+    let (crit, cap_share, pd) = overhead_terms(spec, p, le);
+    let rho_a = |th: f64| rho_arrival_exp(p.lambda, th);
+    match model {
+        ApproxModel::SplitMerge => theorem1::sojourn_quantile(
+            cluster.min_rate(),
+            p.epsilon,
+            // ρ_S°(θ) = [E[O°] + c^pd(k) + ρ_X] + (k−L)[E[O°]_cap/L + ρ_Z]
+            |th| {
+                crit + pd
+                    + cluster.rho_x(th)
+                    + (p.k - le) as f64 * (cap_share + cluster.rho_z(th))
+            },
+            rho_a,
+        ),
+        ApproxModel::ForkJoin => {
+            let ln_inv_eps = -p.epsilon.ln();
+            let tau = optimize_theta(
+                cluster.min_rate(),
+                |th| {
+                    (p.k - 1) as f64 * (cap_share + cluster.rho_z(th))
+                        + crit
+                        + cluster.rho_x(th)
+                        + ln_inv_eps / th
+                },
+                |th| p.k as f64 * (cap_share + cluster.rho_z(th)) <= rho_a(th),
+            )
+            .map(|(_, tau)| tau)?;
+            // Pre-departure is non-blocking in fork-join (Eq. 29).
+            Some(tau + pd)
+        }
+    }
+}
+
+/// Waiting ε-quantile approximation.
+pub fn waiting_quantile(model: ApproxModel, spec: &ClusterSpec, p: &ApproxParams) -> Option<f64> {
+    p.validate(spec);
+    if spec.is_degenerate() {
+        return analysis::waiting_bound(model.bound_model(), &bound_params(spec, p));
+    }
+    let cluster = EffectiveCluster::from_spec(spec, p.mu).ok()?;
+    let le = cluster.len();
+    if p.k < le {
+        return None;
+    }
+    let (crit, cap_share, pd) = overhead_terms(spec, p, le);
+    let rho_a = |th: f64| rho_arrival_exp(p.lambda, th);
+    let ln_inv_eps = -p.epsilon.ln();
+    match model {
+        ApproxModel::SplitMerge => theorem1::waiting_quantile(
+            cluster.min_rate(),
+            p.epsilon,
+            |th| {
+                crit + pd
+                    + cluster.rho_x(th)
+                    + (p.k - le) as f64 * (cap_share + cluster.rho_z(th))
+            },
+            rho_a,
+        ),
+        ApproxModel::ForkJoin => optimize_theta(
+            cluster.min_rate(),
+            |th| (p.k - 1) as f64 * (cap_share + cluster.rho_z(th)) + ln_inv_eps / th,
+            |th| p.k as f64 * (cap_share + cluster.rho_z(th)) <= rho_a(th),
+        )
+        .map(|(_, tau)| tau),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverheadConfig;
+
+    fn params(k: usize, mu: f64) -> ApproxParams {
+        ApproxParams { k, lambda: 0.4, mu, epsilon: 0.01, overhead: None }
+    }
+
+    fn two_class(l: usize, skew: f64) -> ClusterSpec {
+        let mut speeds = vec![1.0 + skew; l / 2];
+        speeds.extend(vec![1.0 - skew; l - l / 2]);
+        ClusterSpec::new(speeds, 1, 0.0).unwrap()
+    }
+
+    /// Degenerate scenario: bitwise equal to the homogeneous bounds for
+    /// both models, with and without overhead.
+    #[test]
+    fn degenerate_is_bitwise_homogeneous() {
+        let (l, k) = (10usize, 80usize);
+        let mu = k as f64 / l as f64;
+        let spec = ClusterSpec::homogeneous(l);
+        for overhead in [None, Some(OverheadConfig::paper())] {
+            let p = ApproxParams { k, lambda: 0.4, mu, epsilon: 0.01, overhead };
+            let bp = BoundParams { l, k, lambda: 0.4, mu, epsilon: 0.01, overhead };
+            for (am, bm) in [
+                (ApproxModel::ForkJoin, BoundModel::ForkJoinTiny),
+                (ApproxModel::SplitMerge, BoundModel::SplitMergeTiny),
+            ] {
+                let a = sojourn_quantile(am, &spec, &p);
+                let b = analysis::sojourn_bound(bm, &bp);
+                assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits), "{am:?} sojourn");
+                let a = waiting_quantile(am, &spec, &p);
+                let b = analysis::waiting_bound(bm, &bp);
+                assert_eq!(a.map(f64::to_bits), b.map(f64::to_bits), "{am:?} waiting");
+            }
+        }
+    }
+
+    /// Skew at constant aggregate capacity worsens the approximation
+    /// (larger quantile), for both models.
+    #[test]
+    fn skew_worsens_quantiles() {
+        let (l, k) = (10usize, 80usize);
+        let mu = k as f64 / l as f64;
+        for model in [ApproxModel::ForkJoin, ApproxModel::SplitMerge] {
+            let flat = sojourn_quantile(model, &ClusterSpec::homogeneous(l), &params(k, mu))
+                .expect("stable homogeneous");
+            let skewed = sojourn_quantile(model, &two_class(l, 0.5), &params(k, mu))
+                .expect("stable skewed");
+            assert!(skewed > flat, "{model:?}: {skewed} !> {flat}");
+        }
+    }
+
+    /// For pure skew (r = 1) the approximation is a genuine upper bound
+    /// on a simulated run — every envelope step is a stochastic
+    /// domination — and is not vacuous. (Replica grouping idealizes the
+    /// dynamic dispatch, so under redundancy the CI gate uses a
+    /// two-sided tracking window instead.)
+    #[test]
+    fn dominates_skewed_simulation() {
+        use crate::config::{ModelKind, SimulationConfig, WorkersConfig};
+        let (l, k) = (8usize, 32usize);
+        let mu = k as f64 / l as f64;
+        let speeds = vec![1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5];
+        let spec = ClusterSpec::new(speeds.clone(), 1, 0.0).unwrap();
+        let p = ApproxParams { k, lambda: 0.4, mu, epsilon: 0.01, overhead: None };
+        let approx = sojourn_quantile(ApproxModel::ForkJoin, &spec, &p).unwrap();
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: l,
+            tasks_per_job: k,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.4".into() },
+            service: crate::config::ServiceConfig { execution: format!("exp:{mu}") },
+            jobs: 20_000,
+            warmup: 2_000,
+            seed: 5,
+            overhead: None,
+            workers: Some(WorkersConfig::Speeds(speeds)),
+            redundancy: None,
+        };
+        let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
+        let sim_q = res.sojourn_quantile(0.99);
+        assert!(sim_q <= approx, "sim {sim_q} exceeds approximation {approx}");
+        assert!(approx < sim_q * 12.0, "approximation {approx} vacuous vs {sim_q}");
+    }
+
+    /// Overhead raises the quantile; zero overhead collapses to clean.
+    #[test]
+    fn overhead_consistency_under_skew() {
+        let (l, k) = (10usize, 200usize);
+        let mu = k as f64 / l as f64;
+        let spec = two_class(l, 0.5);
+        let clean = sojourn_quantile(ApproxModel::ForkJoin, &spec, &params(k, mu)).unwrap();
+        let zero = sojourn_quantile(
+            ApproxModel::ForkJoin,
+            &spec,
+            &ApproxParams { overhead: Some(OverheadConfig::zero()), ..params(k, mu) },
+        )
+        .unwrap();
+        assert!((clean - zero).abs() / clean < 1e-9, "{clean} vs {zero}");
+        let oh = sojourn_quantile(
+            ApproxModel::ForkJoin,
+            &spec,
+            &ApproxParams { overhead: Some(OverheadConfig::paper()), ..params(k, mu) },
+        )
+        .unwrap();
+        assert!(oh > clean);
+    }
+
+    /// Redundancy (free throughput, faster drain) beats the skewed
+    /// non-redundant approximation in the straggler-bound regime, and the
+    /// replica-launch cost pushes it back up.
+    #[test]
+    fn redundancy_and_launch_cost_ordering() {
+        let (l, k) = (8usize, 64usize);
+        let mu = k as f64 / l as f64;
+        let speeds = vec![1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5];
+        let p = ApproxParams {
+            k,
+            lambda: 0.3,
+            mu,
+            epsilon: 0.01,
+            overhead: Some(OverheadConfig::paper()),
+        };
+        let r1 = ClusterSpec::new(speeds.clone(), 1, 0.0).unwrap();
+        let r2 = ClusterSpec::new(speeds.clone(), 2, 0.0).unwrap();
+        let r2_launch = ClusterSpec::new(speeds, 2, 0.05).unwrap();
+        let q1 = sojourn_quantile(ApproxModel::SplitMerge, &r1, &p).unwrap();
+        let q2 = sojourn_quantile(ApproxModel::SplitMerge, &r2, &p).unwrap();
+        let q2l = sojourn_quantile(ApproxModel::SplitMerge, &r2_launch, &p).unwrap();
+        assert!(q2 < q1, "redundancy should mask stragglers: {q2} !< {q1}");
+        assert!(q2l > q2, "launch cost must hurt: {q2l} !> {q2}");
+    }
+
+    /// Overload has no feasible θ.
+    #[test]
+    fn unstable_returns_none() {
+        let (l, k) = (4usize, 16usize);
+        let mu = k as f64 / l as f64;
+        let spec = two_class(l, 0.5);
+        let p = ApproxParams { k, lambda: 1.5, mu, epsilon: 0.01, overhead: None };
+        assert!(sojourn_quantile(ApproxModel::ForkJoin, &spec, &p).is_none());
+        assert!(waiting_quantile(ApproxModel::SplitMerge, &spec, &p).is_none());
+    }
+
+    /// Waiting ≤ sojourn under skew.
+    #[test]
+    fn waiting_below_sojourn() {
+        let (l, k) = (10usize, 80usize);
+        let mu = k as f64 / l as f64;
+        let spec = two_class(l, 0.5);
+        for model in [ApproxModel::ForkJoin, ApproxModel::SplitMerge] {
+            let s = sojourn_quantile(model, &spec, &params(k, mu)).unwrap();
+            let w = waiting_quantile(model, &spec, &params(k, mu)).unwrap();
+            assert!(w > 0.0 && w < s, "{model:?}: w={w} s={s}");
+        }
+    }
+
+    #[test]
+    fn model_kind_mapping() {
+        assert_eq!(
+            ApproxModel::from_model_kind(ModelKind::SplitMerge).unwrap(),
+            ApproxModel::SplitMerge
+        );
+        assert_eq!(
+            ApproxModel::from_model_kind(ModelKind::ForkJoinSingleQueue).unwrap(),
+            ApproxModel::ForkJoin
+        );
+        assert!(ApproxModel::from_model_kind(ModelKind::Ideal).is_err());
+        assert!(ApproxModel::from_model_kind(ModelKind::ForkJoinPerServer).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! The heterogeneous service model: non-identical exponential stage
+//! rates with prefix-sum rate envelopes.
+//!
+//! For effective per-slot rates `r_1, …, r_L` (already folded over
+//! replica groups by [`super::redundancy::effective_rates`]), sort
+//! ascending and form prefix sums `R_i = r_(1) + … + r_(i)`. Then:
+//!
+//! * the **inter-start gap** `Z` while all L slots are busy is exactly
+//!   `min_j Exp(r_j) = Exp(R_L)` (competing exponentials);
+//! * the **merge residual** `X = max_j Exp(r_j)` satisfies the rate
+//!   envelope `X ≤_st Σ_{i=1}^{L} Exp(R_i)`: while i tasks remain, they
+//!   occupy *some* i slots whose total hazard is at least the sum of the
+//!   i smallest rates, so each drain gap is dominated by `Exp(R_i)`.
+//!
+//! With identical rates `R_i = i·mu` and both reduce to the
+//! order-statistics identities behind Lemma 1 (Eq. 17) *exactly* — the
+//! envelope is tight in the homogeneous limit, conservative under skew.
+
+use crate::approx::ClusterSpec;
+
+/// A resolved effective cluster: ascending rates plus prefix sums.
+#[derive(Clone, Debug)]
+pub struct EffectiveCluster {
+    /// Effective per-slot rates, ascending.
+    rates: Vec<f64>,
+    /// `prefix[i] = rates[0] + … + rates[i]` (sum of the i+1 smallest).
+    prefix: Vec<f64>,
+}
+
+impl EffectiveCluster {
+    /// Build from raw effective rates (sorted internally).
+    pub fn new(mut rates: Vec<f64>) -> Result<Self, String> {
+        if rates.is_empty() {
+            return Err("effective cluster needs at least one slot".into());
+        }
+        for &r in &rates {
+            if !(r > 0.0 && r.is_finite()) {
+                return Err(format!("effective rates must be positive and finite, got {r}"));
+            }
+        }
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prefix = Vec::with_capacity(rates.len());
+        let mut acc = 0.0;
+        for &r in &rates {
+            acc += r;
+            prefix.push(acc);
+        }
+        Ok(Self { rates, prefix })
+    }
+
+    /// Build from a scenario spec at nominal task rate `mu` (replica
+    /// groups folded into super-server rates).
+    pub fn from_spec(spec: &ClusterSpec, mu: f64) -> Result<Self, String> {
+        Self::new(super::redundancy::effective_rates(&spec.speeds, mu, spec.replicas)?)
+    }
+
+    /// Effective slot count L.
+    pub fn len(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// True when there are no slots (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.rates.is_empty()
+    }
+
+    /// Smallest effective rate `r_(1)` — the θ-domain edge of `rho_x`.
+    pub fn min_rate(&self) -> f64 {
+        self.rates[0]
+    }
+
+    /// Total rate `R_L = Σ r_j` — the saturated completion hazard.
+    pub fn total_rate(&self) -> f64 {
+        *self.prefix.last().unwrap()
+    }
+
+    /// Ascending effective rates.
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Merge-residual envelope rate
+    /// `ρ_X(θ) = (1/θ) Σ_{i=1}^{L} ln(R_i / (R_i − θ))`, θ ∈ (0, R_1).
+    /// Returns `f64::INFINITY` outside the domain.
+    pub fn rho_x(&self, theta: f64) -> f64 {
+        debug_assert!(theta > 0.0);
+        if theta >= self.rates[0] {
+            return f64::INFINITY;
+        }
+        let mut sum = 0.0;
+        for &ri in &self.prefix {
+            sum += (ri / (ri - theta)).ln();
+        }
+        sum / theta
+    }
+
+    /// Inter-start gap rate `ρ_Z(θ) = (1/θ) ln(R_L / (R_L − θ))`,
+    /// θ ∈ (0, R_L). Returns `f64::INFINITY` outside the domain.
+    pub fn rho_z(&self, theta: f64) -> f64 {
+        debug_assert!(theta > 0.0);
+        let total = self.total_rate();
+        if theta >= total {
+            return f64::INFINITY;
+        }
+        (total / (total - theta)).ln() / theta
+    }
+
+    /// Split-merge service envelope `ρ_S(θ) = ρ_X(θ) + (k−L) ρ_Z(θ)`
+    /// (the Lemma-1 decomposition over the effective cluster).
+    pub fn rho_s(&self, k: usize, theta: f64) -> f64 {
+        debug_assert!(k >= self.len());
+        self.rho_x(theta) + (k - self.len()) as f64 * self.rho_z(theta)
+    }
+
+    /// Mean job service envelope
+    /// `E[Δ] ≤ (k−L)/R_L + Σ_{i=1}^{L} 1/R_i` (the θ→0 limit of ρ_S).
+    pub fn mean_service(&self, k: usize) -> f64 {
+        debug_assert!(k >= self.len());
+        let drain: f64 = self.prefix.iter().map(|&ri| 1.0 / ri).sum();
+        (k - self.len()) as f64 / self.total_rate() + drain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lemma1;
+
+    #[test]
+    fn rejects_bad_rates() {
+        assert!(EffectiveCluster::new(vec![]).is_err());
+        assert!(EffectiveCluster::new(vec![1.0, 0.0]).is_err());
+        assert!(EffectiveCluster::new(vec![1.0, f64::NAN]).is_err());
+    }
+
+    /// Identical rates recover the homogeneous Lemma-1 envelopes to
+    /// numerical accuracy (the envelope is exact there).
+    #[test]
+    fn homogeneous_rates_match_lemma1() {
+        let (l, mu, k) = (10usize, 2.0, 40usize);
+        let c = EffectiveCluster::new(vec![mu; l]).unwrap();
+        for theta in [1e-6, 0.3, 1.2, 1.9] {
+            let x = c.rho_x(theta);
+            let x_ref = lemma1::rho_x(l, mu, theta);
+            assert!((x - x_ref).abs() / x_ref < 1e-12, "theta={theta}: {x} vs {x_ref}");
+            let z = c.rho_z(theta);
+            let z_ref = lemma1::rho_z(l, mu, theta);
+            assert!((z - z_ref).abs() / z_ref < 1e-12);
+            let s = c.rho_s(k, theta);
+            let s_ref = lemma1::rho_s(l, k, mu, theta);
+            assert!((s - s_ref).abs() / s_ref < 1e-12);
+        }
+        let m = c.mean_service(k);
+        let m_ref = lemma1::mean_service(l, k, mu);
+        assert!((m - m_ref).abs() / m_ref < 1e-12, "{m} vs {m_ref}");
+    }
+
+    /// Domain edges: ρ_X blows up at the smallest rate, ρ_Z at the total.
+    #[test]
+    fn domain_edges() {
+        let c = EffectiveCluster::new(vec![0.5, 1.5, 2.0]).unwrap();
+        assert_eq!(c.min_rate(), 0.5);
+        assert!((c.total_rate() - 4.0).abs() < 1e-12);
+        assert!(c.rho_x(0.5).is_infinite());
+        assert!(c.rho_x(0.49) < f64::INFINITY);
+        assert!(c.rho_z(4.0).is_infinite());
+        assert!(c.rho_z(3.9) < f64::INFINITY);
+    }
+
+    /// The envelope dominates a Monte-Carlo estimate of the true max MGF
+    /// under skew (validity), and θ→0 of ρ_X bounds E[max].
+    #[test]
+    fn envelope_dominates_monte_carlo_max() {
+        use crate::rng::{Pcg64, Rng};
+        let rates = vec![0.5, 1.0, 2.0, 4.0];
+        let c = EffectiveCluster::new(rates.clone()).unwrap();
+        let theta = 0.3;
+        let mut rng = Pcg64::seed_from_u64(7);
+        let n = 400_000;
+        let mut acc = 0.0;
+        let mut mean_acc = 0.0;
+        for _ in 0..n {
+            let mut mx = 0.0f64;
+            for &r in &rates {
+                mx = mx.max(-rng.next_f64_open().ln() / r);
+            }
+            acc += (theta * mx).exp();
+            mean_acc += mx;
+        }
+        let mc_rho = (acc / n as f64).ln() / theta;
+        let env = c.rho_x(theta);
+        assert!(env >= mc_rho - 1e-2, "envelope {env} below MC {mc_rho}");
+        // Not wildly loose either at this modest skew.
+        assert!(env < 2.0 * mc_rho, "envelope {env} vacuous vs MC {mc_rho}");
+        let mc_mean = mean_acc / n as f64;
+        let env_mean = c.rho_x(1e-9);
+        assert!(env_mean >= mc_mean - 1e-2);
+    }
+
+    /// Mean service decomposition: k = L is pure drain; each extra task
+    /// adds 1/R_L.
+    #[test]
+    fn mean_service_increments() {
+        let c = EffectiveCluster::new(vec![1.0, 3.0]).unwrap();
+        let drain = 1.0 / 1.0 + 1.0 / 4.0;
+        assert!((c.mean_service(2) - drain).abs() < 1e-12);
+        assert!((c.mean_service(5) - (drain + 3.0 / 4.0)).abs() < 1e-12);
+    }
+}

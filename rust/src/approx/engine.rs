@@ -1,0 +1,118 @@
+//! The approximation engine: k-sweep curves at constant mean workload —
+//! the composition layer the advisor, the `tiny-tasks approx` CLI, and
+//! the `figure hetero-approx` panel share.
+//!
+//! Each point sizes tasks so the mean job workload `k · E[exec]` stays
+//! at `mean_workload` (`mu = k / mean_workload`), mirroring the Fig.-8
+//! sweep parameterization and the simulated advisor, so analytic and
+//! simulated curves are directly comparable point by point.
+
+use super::{sojourn_quantile, ApproxModel, ApproxParams, ClusterSpec};
+use crate::config::OverheadConfig;
+
+/// One point of an analytic k-curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// Tasks per job.
+    pub k: usize,
+    /// Nominal task rate at this point (`k / mean_workload`).
+    pub mu: f64,
+    /// Sojourn ε-quantile approximation (`None` = unstable).
+    pub sojourn: Option<f64>,
+}
+
+/// Evaluate the sojourn approximation over a k grid at constant mean
+/// workload.
+pub fn sojourn_curve(
+    model: ApproxModel,
+    spec: &ClusterSpec,
+    lambda: f64,
+    mean_workload: f64,
+    epsilon: f64,
+    overhead: Option<OverheadConfig>,
+    ks: &[usize],
+) -> Vec<CurvePoint> {
+    assert!(mean_workload > 0.0 && mean_workload.is_finite());
+    ks.iter()
+        .map(|&k| {
+            let mu = k as f64 / mean_workload;
+            let p = ApproxParams { k, lambda, mu, epsilon, overhead };
+            CurvePoint { k, mu, sojourn: sojourn_quantile(model, spec, &p) }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// With paper overhead and skew, the curve still shows the paper's
+    /// thesis: an interior optimum (tinyfication helps, overhead caps it).
+    #[test]
+    fn skewed_curve_has_interior_optimum() {
+        let l = 10usize;
+        let mut speeds = vec![1.5; l / 2];
+        speeds.extend(vec![0.5; l / 2]);
+        let spec = ClusterSpec::new(speeds, 1, 0.0).unwrap();
+        let ks: Vec<usize> = (0..14).map(|i| l << i).collect(); // l .. l·2^13
+        let curve = sojourn_curve(
+            ApproxModel::ForkJoin,
+            &spec,
+            0.4,
+            l as f64,
+            0.01,
+            Some(OverheadConfig::paper()),
+            &ks,
+        );
+        assert_eq!(curve.len(), ks.len());
+        let feasible: Vec<(usize, f64)> =
+            curve.iter().filter_map(|c| c.sojourn.map(|t| (c.k, t))).collect();
+        assert!(feasible.len() >= 5, "curve mostly infeasible: {curve:?}");
+        let mut best = (0usize, f64::INFINITY);
+        for &(k, t) in &feasible {
+            if t < best.1 {
+                best = (k, t);
+            }
+        }
+        let (best_k, best_tau) = best;
+        assert!(best_k > l, "tinyfication should help: best k = {best_k}");
+        // The tail rises (or goes infeasible) past the optimum.
+        let last_feasible = feasible.last().unwrap();
+        let tail_rises = last_feasible.1 > best_tau || curve.last().unwrap().sojourn.is_none();
+        assert!(tail_rises, "overhead should cap tinyfication: {curve:?}");
+    }
+
+    /// The degenerate curve equals the homogeneous analysis curve
+    /// bitwise at every k (the advisor's delegation guarantee).
+    #[test]
+    fn degenerate_curve_matches_analysis_bitwise() {
+        use crate::analysis::{self, BoundModel, BoundParams};
+        let l = 20usize;
+        let spec = ClusterSpec::homogeneous(l);
+        let ks = [20usize, 60, 200, 1000];
+        let oh = OverheadConfig::paper();
+        let curve = sojourn_curve(
+            ApproxModel::ForkJoin,
+            &spec,
+            0.5,
+            l as f64,
+            0.01,
+            Some(oh),
+            &ks,
+        );
+        for c in &curve {
+            let direct = analysis::sojourn_bound(
+                BoundModel::ForkJoinTiny,
+                &BoundParams {
+                    l,
+                    k: c.k,
+                    lambda: 0.5,
+                    mu: c.mu,
+                    epsilon: 0.01,
+                    overhead: Some(oh),
+                },
+            );
+            assert_eq!(c.sojourn.map(f64::to_bits), direct.map(f64::to_bits), "k={}", c.k);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! `approx` — analytic approximations for heterogeneous & redundant
+//! tiny-tasks systems.
+//!
+//! The paper's analysis (Secs. 3–6, implemented in [`crate::analysis`])
+//! assumes l *identical* workers and no task replication, while the
+//! simulation side has shipped skewed worker speeds and first-finish-wins
+//! replicas since the scenario subsystem landed. This module closes the
+//! gap in the spirit of HeMT-style macrotasking for public-cloud skew
+//! (Shan et al., arXiv:1810.00988) and the replica-aware barrier-system
+//! follow-ups (arXiv:2512.14445): every scenario the simulator supports
+//! can now be answered in microseconds instead of sweep-minutes.
+//!
+//! Three ingredients, composed by [`bounds`] and [`engine`]:
+//!
+//! 1. **Heterogeneous service model** ([`EffectiveCluster`]): per-worker
+//!    speed multipliers map `Exp(mu)` nominal task sizes onto
+//!    non-identical exponential rates `r_j = mu·s_j`. The inter-start gap
+//!    is *exactly* `Exp(Σ r_j)` (min of independent exponentials), and
+//!    the merge residual is bounded by a per-worker **rate envelope**:
+//!    with rates sorted ascending and prefix sums `R_i = r_(1)+…+r_(i)`,
+//!    any drain state with i tasks left completes at hazard ≥ `R_i`, so
+//!    `max_j Exp(r_j) ≤_st Σ_{i=1}^{l} Exp(R_i)` — the non-i.i.d.
+//!    generalization of the order-statistics identity behind Lemma 1
+//!    (homogeneous rates make `R_i = i·mu` and recover it exactly).
+//! 2. **Redundancy model** ([`redundancy`]): `r` first-finish-wins
+//!    replicas of a task on workers with rates `r_j` finish at the min —
+//!    `Exp(Σ r_j)` exactly — so an r-replicated cluster maps onto
+//!    `⌊l/r⌋` effective super-servers whose rate is the group sum. A
+//!    replica-launch cost term extends the Sec.-2.6 four-parameter
+//!    overhead fit: each replica pays its own overhead plus a launch
+//!    cost, burning `r×` overhead capacity while only the winner's
+//!    overhead sits on the critical path. (The static grouping idealizes
+//!    the simulator's dynamic earliest-free replica placement, so with
+//!    r > 1 the result is an *approximation* that tracks — rather than
+//!    strictly dominates — the simulated quantiles; pure skew keeps the
+//!    full upper-bound property.)
+//! 3. **Stability & bounds** ([`stability`], [`bounds`]): the tiny-tasks
+//!    stability regions (Eq.-20 analog) and Theorem-1/2-style sojourn /
+//!    waiting ε-quantile approximations over the effective cluster.
+//!
+//! **Degeneracy contract:** every public entry point detects the
+//! degenerate scenario (all speeds exactly 1.0, replicas = 1) and
+//! delegates to the homogeneous [`crate::analysis`] implementation, so
+//! results are **bit-for-bit** equal to `analysis::{stability, theorem1,
+//! theorem2}` there — enforced by `rust/tests/approx_equivalence.rs`.
+
+mod bounds;
+mod cluster;
+mod engine;
+mod redundancy;
+mod stability;
+
+pub use bounds::{sojourn_quantile, waiting_quantile, ApproxModel};
+pub use cluster::EffectiveCluster;
+pub use engine::{sojourn_curve, CurvePoint};
+pub use redundancy::{effective_overhead, effective_rates, EffectiveOverhead};
+pub use stability::{fork_join_max_utilization, sm_max_utilization};
+
+use crate::config::{OverheadConfig, SimulationConfig};
+
+/// The scenario shape an approximation is evaluated for: per-worker
+/// speeds plus the replication factor and its launch cost.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// Per-worker speed multipliers (length = worker count l).
+    pub speeds: Vec<f64>,
+    /// First-finish-wins replicas per task (1 = no redundancy).
+    pub replicas: usize,
+    /// Per-replica launch overhead in seconds, charged to every replica
+    /// of a redundant dispatch (`replicas > 1`) on top of the Sec.-2.6
+    /// task-service overhead. Ignored at `replicas = 1`.
+    pub replica_launch: f64,
+}
+
+impl ClusterSpec {
+    /// A homogeneous l-worker cluster (the degenerate scenario).
+    pub fn homogeneous(l: usize) -> Self {
+        Self { speeds: vec![1.0; l], replicas: 1, replica_launch: 0.0 }
+    }
+
+    /// Build a validated spec.
+    pub fn new(speeds: Vec<f64>, replicas: usize, replica_launch: f64) -> Result<Self, String> {
+        let spec = Self { speeds, replicas, replica_launch };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Resolve the scenario shape of a simulation config (speeds drawn
+    /// from a distribution are resolved with the config's speed seed, so
+    /// the analytic and simulated sides see the same cluster).
+    pub fn from_sim_config(cfg: &SimulationConfig) -> Result<Self, String> {
+        Self::new(cfg.resolved_speeds()?, cfg.replicas(), cfg.launch_overhead())
+    }
+
+    /// Resolve parsed scenario sections/flags (the CLI's
+    /// `--speeds`/`--speed-dist` + `--redundancy [--replica-launch]`
+    /// pair) into a spec; `None` workers means a homogeneous cluster.
+    pub fn from_scenario(
+        servers: usize,
+        workers: Option<&crate::config::WorkersConfig>,
+        redundancy: Option<crate::config::RedundancyConfig>,
+    ) -> Result<Self, String> {
+        let speeds = match workers {
+            Some(w) => w.resolve(servers)?,
+            None => vec![1.0; servers],
+        };
+        let replicas = redundancy.map(|r| r.replicas).unwrap_or(1);
+        let launch = redundancy.map(|r| r.launch_overhead).unwrap_or(0.0);
+        Self::new(speeds, replicas, launch)
+    }
+
+    /// Structural validation.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.speeds.is_empty() {
+            return Err("cluster spec needs at least one worker".into());
+        }
+        for &s in &self.speeds {
+            if !(s > 0.0 && s.is_finite()) {
+                return Err(format!("worker speeds must be positive and finite, got {s}"));
+            }
+        }
+        if !(1..=self.speeds.len()).contains(&self.replicas) {
+            return Err(format!(
+                "replicas ({}) must be in 1..=workers ({})",
+                self.replicas,
+                self.speeds.len()
+            ));
+        }
+        if !(self.replica_launch >= 0.0 && self.replica_launch.is_finite()) {
+            return Err(format!(
+                "replica launch overhead must be finite and >= 0, got {}",
+                self.replica_launch
+            ));
+        }
+        Ok(())
+    }
+
+    /// Worker count l.
+    pub fn len(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// True when there are no workers (never, for a validated spec).
+    pub fn is_empty(&self) -> bool {
+        self.speeds.is_empty()
+    }
+
+    /// True for the degenerate scenario — all speeds exactly 1.0 and no
+    /// redundancy — where every approximation delegates to the
+    /// homogeneous `analysis` implementation bit-for-bit.
+    pub fn is_degenerate(&self) -> bool {
+        self.replicas == 1 && self.speeds.iter().all(|&s| s == 1.0)
+    }
+
+    /// Effective parallelism: l at r = 1, else ⌊l/r⌋ replica groups
+    /// (leftover workers are dropped — a conservative approximation).
+    pub fn effective_servers(&self) -> usize {
+        if self.replicas == 1 {
+            self.speeds.len()
+        } else {
+            self.speeds.len() / self.replicas
+        }
+    }
+
+    /// Aggregate raw capacity Σ speeds (the utilization normalizer).
+    pub fn total_speed(&self) -> f64 {
+        self.speeds.iter().sum()
+    }
+}
+
+/// Per-query parameters shared by the bound/approximation entry points
+/// (the scenario shape travels separately as [`ClusterSpec`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxParams {
+    /// Tasks per job k (`≥ l`).
+    pub k: usize,
+    /// Poisson arrival rate λ.
+    pub lambda: f64,
+    /// Nominal task service rate μ (an `Exp(mu)` task on a speed-1
+    /// worker; worker j serves at `mu·s_j`).
+    pub mu: f64,
+    /// Violation probability ε of the quantile approximation.
+    pub epsilon: f64,
+    /// Sec.-2.6 overhead parameters (`None` = clean bound). Replication
+    /// burn and the launch cost come from the [`ClusterSpec`].
+    pub overhead: Option<OverheadConfig>,
+}
+
+impl ApproxParams {
+    pub(crate) fn validate(&self, spec: &ClusterSpec) {
+        assert!(self.k >= spec.len(), "tiny tasks require k >= l");
+        assert!(self.lambda > 0.0 && self.mu > 0.0, "rates must be positive");
+        assert!(
+            self.epsilon > 0.0 && self.epsilon < 1.0,
+            "epsilon must be in (0, 1)"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation() {
+        assert!(ClusterSpec::new(vec![1.0, 2.0], 1, 0.0).is_ok());
+        assert!(ClusterSpec::new(vec![], 1, 0.0).is_err());
+        assert!(ClusterSpec::new(vec![1.0, 0.0], 1, 0.0).is_err());
+        assert!(ClusterSpec::new(vec![1.0, 1.0], 3, 0.0).is_err());
+        assert!(ClusterSpec::new(vec![1.0, 1.0], 2, -1.0).is_err());
+        assert!(ClusterSpec::new(vec![1.0, 1.0], 2, f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn degeneracy_detection() {
+        assert!(ClusterSpec::homogeneous(4).is_degenerate());
+        assert!(!ClusterSpec::new(vec![1.0, 1.5], 1, 0.0).unwrap().is_degenerate());
+        assert!(!ClusterSpec::new(vec![1.0, 1.0], 2, 0.0).unwrap().is_degenerate());
+    }
+
+    #[test]
+    fn effective_servers_grouping() {
+        assert_eq!(ClusterSpec::homogeneous(7).effective_servers(), 7);
+        let spec = ClusterSpec::new(vec![1.0; 7], 2, 0.0).unwrap();
+        assert_eq!(spec.effective_servers(), 3); // one leftover worker dropped
+        let spec = ClusterSpec::new(vec![1.0; 8], 4, 0.0).unwrap();
+        assert_eq!(spec.effective_servers(), 2);
+    }
+
+    #[test]
+    fn from_sim_config_resolves_scenario() {
+        let cfg = SimulationConfig {
+            servers: 4,
+            tasks_per_job: 8,
+            workers: Some(crate::config::WorkersConfig::Speeds(vec![1.5, 1.5, 0.5, 0.5])),
+            redundancy: Some(crate::config::RedundancyConfig {
+                replicas: 2,
+                launch_overhead: 1e-3,
+            }),
+            ..SimulationConfig::default()
+        };
+        let spec = ClusterSpec::from_sim_config(&cfg).unwrap();
+        assert_eq!(spec.speeds, vec![1.5, 1.5, 0.5, 0.5]);
+        assert_eq!(spec.replicas, 2);
+        assert_eq!(spec.replica_launch, 1e-3);
+        assert_eq!(spec.total_speed(), 4.0);
+        // Default config is the degenerate scenario.
+        let spec = ClusterSpec::from_sim_config(&SimulationConfig::default()).unwrap();
+        assert!(spec.is_degenerate());
+    }
+}

@@ -1,0 +1,164 @@
+//! Redundancy model: first-finish-wins replica groups and the
+//! replica-aware overhead extension of the Sec.-2.6 fit.
+//!
+//! `r` replicas of one task on workers with rates `r_j` finish at
+//! `min_j Exp(r_j) = Exp(Σ_j r_j)` — *exactly*, by competing
+//! exponentials. An r-replicated cluster therefore maps onto `⌊l/r⌋`
+//! effective super-servers whose rate is the group's summed rate. The
+//! simulator picks the r earliest-free workers dynamically; the static
+//! grouping here (snake-dealt so fastest pair with slowest, leftovers
+//! dropped) is a conservative approximation of that work-conserving
+//! placement.
+//!
+//! Overhead under replication: every replica pays its own task-service
+//! overhead draw plus a per-replica launch cost, so a logical task burns
+//! `r·(E[O] + c_launch)` of server time while only the winner's
+//! `E[O] + c_launch` sits on the job's critical path. Overhead is wall
+//! time on a worker, so it dilates with `1/speed`; the cluster-mean
+//! inverse speed folds that in.
+
+use crate::config::OverheadConfig;
+
+/// Map per-worker speeds at nominal rate `mu` onto effective per-slot
+/// service rates, folding `replicas`-sized first-finish-wins groups into
+/// single super-server rates.
+pub fn effective_rates(speeds: &[f64], mu: f64, replicas: usize) -> Result<Vec<f64>, String> {
+    if speeds.is_empty() {
+        return Err("effective_rates needs at least one worker".into());
+    }
+    if !(mu > 0.0 && mu.is_finite()) {
+        return Err(format!("nominal rate mu must be positive, got {mu}"));
+    }
+    if !(1..=speeds.len()).contains(&replicas) {
+        return Err(format!(
+            "replicas ({replicas}) must be in 1..=workers ({})",
+            speeds.len()
+        ));
+    }
+    for &s in speeds {
+        if !(s > 0.0 && s.is_finite()) {
+            return Err(format!("worker speeds must be positive and finite, got {s}"));
+        }
+    }
+    if replicas == 1 {
+        return Ok(speeds.iter().map(|&s| mu * s).collect());
+    }
+    // Deal the r·⌊l/r⌋ fastest workers into ⌊l/r⌋ groups of r in snake
+    // (boustrophedon) order — descending speeds, direction alternating
+    // each row — which pairs fastest with slowest and maximizes the
+    // smallest group rate (every downstream envelope tightens with it).
+    // Leftover workers (l mod r) are dropped — conservative.
+    let groups = speeds.len() / replicas;
+    let mut sorted = speeds.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut sums = vec![0.0f64; groups];
+    for (i, &s) in sorted.iter().take(groups * replicas).enumerate() {
+        let (row, col) = (i / groups, i % groups);
+        let g = if row % 2 == 0 { col } else { groups - 1 - col };
+        sums[g] += s;
+    }
+    Ok(sums.into_iter().map(|g| mu * g).collect())
+}
+
+/// Replica-aware effective overhead (the Sec.-2.6 extension): mean
+/// overhead on the winner's critical path and the total overhead burn
+/// per logical task across all replicas.
+#[derive(Clone, Copy, Debug)]
+pub struct EffectiveOverhead {
+    /// Mean overhead on the winning replica's critical path (seconds).
+    pub critical: f64,
+    /// Mean server time burned on overhead per logical task across all
+    /// `r` replicas (the capacity-side term entering `ρ_Z°`).
+    pub capacity: f64,
+}
+
+/// Compute the replica-aware overhead terms for a cluster.
+///
+/// `launch` is the per-replica launch cost (seconds) charged to every
+/// replica of a redundant dispatch; at `replicas = 1` it is ignored and
+/// both terms equal the plain Eq.-24 mean scaled by the mean inverse
+/// speed (overhead is wall time on a worker and dilates with `1/s`).
+pub fn effective_overhead(
+    oh: &OverheadConfig,
+    speeds: &[f64],
+    replicas: usize,
+    launch: f64,
+) -> EffectiveOverhead {
+    debug_assert!(!speeds.is_empty());
+    let inv = speeds.iter().map(|&s| 1.0 / s).sum::<f64>() / speeds.len() as f64;
+    let base = oh.mean_task_overhead() * inv;
+    if replicas == 1 {
+        return EffectiveOverhead { critical: base, capacity: base };
+    }
+    let per_replica = base + launch * inv;
+    EffectiveOverhead {
+        critical: per_replica,
+        capacity: replicas as f64 * per_replica,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn r1_is_identity_scaling() {
+        let rates = effective_rates(&[1.0, 0.5, 2.0], 3.0, 1).unwrap();
+        assert_eq!(rates, vec![3.0, 1.5, 6.0]);
+    }
+
+    #[test]
+    fn grouping_balances_and_preserves_rate() {
+        // l = 4, r = 2: sorted desc [2.0, 1.5, 1.0, 0.5]; snake dealing
+        // pairs {2.0, 0.5} and {1.5, 1.0}: both groups sum to 2.5.
+        let rates = effective_rates(&[1.5, 0.5, 2.0, 1.0], 1.0, 2).unwrap();
+        assert_eq!(rates, vec![2.5, 2.5]);
+        // Total rate is preserved when r divides l (redundancy is free in
+        // throughput for exponential tasks).
+        assert!((rates.iter().sum::<f64>() - 5.0).abs() < 1e-12);
+        // r = 3, l = 6: rows [3, 2.5, 2] then reversed [1.5, 1, 0.5]
+        // snake to groups {3, 0.5, 1} and {2.5, 1, ..}: check the min
+        // group rate beats naive row-major dealing.
+        let rates =
+            effective_rates(&[3.0, 2.5, 2.0, 1.5, 1.0, 0.5], 1.0, 3).unwrap();
+        assert_eq!(rates.len(), 2);
+        assert!((rates.iter().sum::<f64>() - 10.5).abs() < 1e-12);
+        assert!(rates[0] >= 5.0, "snake dealing should balance: {rates:?}");
+    }
+
+    #[test]
+    fn leftover_workers_dropped() {
+        // l = 5, r = 2: ⌊5/2⌋ = 2 groups over the 4 fastest; the slowest
+        // worker (0.1) is dropped.
+        let rates = effective_rates(&[1.0, 1.0, 1.0, 1.0, 0.1], 1.0, 2).unwrap();
+        assert_eq!(rates.len(), 2);
+        assert!((rates.iter().sum::<f64>() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(effective_rates(&[], 1.0, 1).is_err());
+        assert!(effective_rates(&[1.0], 0.0, 1).is_err());
+        assert!(effective_rates(&[1.0, -1.0], 1.0, 1).is_err());
+        assert!(effective_rates(&[1.0, 1.0], 1.0, 3).is_err());
+    }
+
+    #[test]
+    fn overhead_terms() {
+        let oh = OverheadConfig::paper();
+        let base = oh.mean_task_overhead();
+        // Homogeneous, r = 1: both terms are the plain Eq.-24 mean.
+        let e = effective_overhead(&oh, &[1.0, 1.0], 1, 0.5);
+        assert_eq!(e.critical, base);
+        assert_eq!(e.capacity, base);
+        // Skew scales by the mean inverse speed.
+        let e = effective_overhead(&oh, &[2.0, 0.5], 1, 0.0);
+        let inv = (0.5 + 2.0) / 2.0;
+        assert!((e.critical - base * inv).abs() < 1e-15);
+        // r = 2 with launch: winner pays one launch, capacity pays r of
+        // everything.
+        let e = effective_overhead(&oh, &[1.0, 1.0], 2, 0.01);
+        assert!((e.critical - (base + 0.01)).abs() < 1e-15);
+        assert!((e.capacity - 2.0 * (base + 0.01)).abs() < 1e-15);
+    }
+}

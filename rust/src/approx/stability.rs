@@ -1,0 +1,124 @@
+//! Tiny-tasks stability regions for skewed & redundant clusters — the
+//! Eq.-20/Sec.-3.2.2 analogs over the effective cluster.
+//!
+//! Utilization is normalized by the **raw aggregate capacity**
+//! `μ · Σ_j s_j`, so a number below 1 can reflect either the split-merge
+//! barrier (as in the homogeneous Eq. 20) or capacity stranded by
+//! replica grouping (leftover workers at `l mod r ≠ 0`).
+//!
+//! Degenerate scenarios (all speeds 1.0, r = 1) delegate to
+//! [`crate::analysis::stability`] so the results are bit-for-bit equal
+//! to the homogeneous closed forms.
+
+use super::{ClusterSpec, EffectiveCluster};
+use crate::analysis;
+
+/// Tiny-tasks split-merge maximum stable utilization for a scenario —
+/// the heterogeneous/redundant generalization of Eq. 20.
+///
+/// Stability requires `λ · E[Δ] < 1` with the effective-cluster mean
+/// service envelope `E[Δ] = (k−L)/R_L + Σ_i 1/R_i`; dividing the
+/// offered per-job load `k/(μ Σ s_j)` by `μ·E[Δ]` (μ cancels) gives the
+/// maximum utilization.
+pub fn sm_max_utilization(spec: &ClusterSpec, k: usize) -> f64 {
+    assert!(k >= spec.len(), "tiny tasks require k >= l");
+    if spec.is_degenerate() {
+        return analysis::stability::sm_tiny_tasks(spec.len(), k);
+    }
+    let cluster = EffectiveCluster::from_spec(spec, 1.0).expect("validated spec");
+    let e_delta = cluster.mean_service(k); // at μ = 1: μ·E[Δ] for any μ
+    (k as f64 / spec.total_speed()) / e_delta
+}
+
+/// Fork-join (work-conserving) maximum stable utilization for a
+/// scenario. Under first-finish-wins replication of exponential tasks
+/// the group completes at the summed rate — redundancy is *free* in
+/// throughput — so the region only shrinks by the capacity stranded in
+/// leftover workers when `r` does not divide `l`.
+pub fn fork_join_max_utilization(spec: &ClusterSpec) -> f64 {
+    if spec.is_degenerate() {
+        return analysis::stability::fork_join();
+    }
+    let cluster = EffectiveCluster::from_spec(spec, 1.0).expect("validated spec");
+    cluster.total_rate() / spec.total_speed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Degenerate scenario is bitwise the homogeneous Eq. 20 / Sec. 3.2.2.
+    #[test]
+    fn degenerate_is_bitwise_homogeneous() {
+        for (l, k) in [(2usize, 4usize), (10, 50), (50, 1000)] {
+            let spec = ClusterSpec::homogeneous(l);
+            assert_eq!(
+                sm_max_utilization(&spec, k).to_bits(),
+                analysis::stability::sm_tiny_tasks(l, k).to_bits()
+            );
+            assert_eq!(
+                fork_join_max_utilization(&spec).to_bits(),
+                analysis::stability::fork_join().to_bits()
+            );
+        }
+    }
+
+    /// Uniform non-unit speeds leave the (speed-normalized) region at the
+    /// homogeneous value: μ scaling cancels.
+    #[test]
+    fn uniform_speed_scaling_cancels() {
+        let (l, k) = (10usize, 80usize);
+        let spec = ClusterSpec::new(vec![2.5; l], 1, 0.0).unwrap();
+        let got = sm_max_utilization(&spec, k);
+        let expect = analysis::stability::sm_tiny_tasks(l, k);
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+    }
+
+    /// Skew shrinks the split-merge region at fixed aggregate capacity
+    /// (the slow workers stretch the drain phase).
+    #[test]
+    fn skew_shrinks_sm_region() {
+        let (l, k) = (10usize, 80usize);
+        let homogeneous = sm_max_utilization(&ClusterSpec::homogeneous(l), k);
+        let mut speeds = vec![1.5; l / 2];
+        speeds.extend(vec![0.5; l / 2]);
+        let skewed = sm_max_utilization(&ClusterSpec::new(speeds, 1, 0.0).unwrap(), k);
+        assert!(skewed < homogeneous, "{skewed} !< {homogeneous}");
+        assert!(skewed > 0.0);
+    }
+
+    /// Tinyfication grows the region under skew too (the Fig.-12a effect
+    /// survives heterogeneity).
+    #[test]
+    fn tinyfication_grows_skewed_region() {
+        let l = 10usize;
+        let mut speeds = vec![1.5; l / 2];
+        speeds.extend(vec![0.5; l / 2]);
+        let spec = ClusterSpec::new(speeds, 1, 0.0).unwrap();
+        let r1 = sm_max_utilization(&spec, l);
+        let r4 = sm_max_utilization(&spec, 4 * l);
+        let r20 = sm_max_utilization(&spec, 20 * l);
+        assert!(r1 < r4 && r4 < r20, "{r1} {r4} {r20}");
+    }
+
+    /// Redundancy with r | l keeps fork-join at full capacity (free for
+    /// exponential tasks); a leftover worker strands its share.
+    #[test]
+    fn redundancy_throughput_accounting() {
+        let spec = ClusterSpec::new(vec![1.0; 8], 2, 0.0).unwrap();
+        assert!((fork_join_max_utilization(&spec) - 1.0).abs() < 1e-12);
+        let spec = ClusterSpec::new(vec![1.0; 9], 2, 0.0).unwrap();
+        let got = fork_join_max_utilization(&spec);
+        assert!((got - 8.0 / 9.0).abs() < 1e-12, "{got}");
+    }
+
+    /// Redundancy *helps* the split-merge drain (min beats max on the
+    /// stragglers) when r divides l.
+    #[test]
+    fn redundancy_helps_sm_drain() {
+        let (l, k) = (8usize, 64usize);
+        let r1 = sm_max_utilization(&ClusterSpec::new(vec![1.0; l], 1, 0.0).unwrap(), k);
+        let r2 = sm_max_utilization(&ClusterSpec::new(vec![1.0; l], 2, 0.0).unwrap(), k);
+        assert!(r2 > r1, "redundant drain should beat homogeneous: {r2} !> {r1}");
+    }
+}

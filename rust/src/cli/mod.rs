@@ -112,7 +112,18 @@ COMMANDS:
                   --overhead [--c-task-ts S --mu-task-ts R --c-job-pd S --c-task-pd S]
                   scenario: --speeds 1.0,0.5,.. | --speed-dist SPEC [--speed-seed S]
                   --redundancy R   (r replicas per task, first-finish-wins)
+                  [--replica-launch S]  (per-replica launch cost, seconds)
                   --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
+    approx      Analytic approximation for skewed/redundant clusters,
+                cross-validated against a simulation sweep (CSV per k)
+                  --servers L --lambda RATE --workload SECONDS --epsilon E
+                  --model sm|fj  [--k-list 10,20,..| --kappa-max F]
+                  --speeds .. | --speed-dist ..  --redundancy R
+                  [--replica-launch S] [--jobs N] [--out FILE.csv]
+                  [--no-sim]  (pure analytics, microseconds)
+                  [--check [--floor F] [--tolerance F]]  (exit 1 unless
+                  analytic/sim lands in [floor, tolerance] at every
+                  stable k -- the CI smoke gate)
     bench       Run the deterministic perf suite and write BENCH.json
                   [--out FILE] [--fast] [--seed S]
                   [--baseline BENCH_BASELINE.json [--max-regression F]]
@@ -123,9 +134,12 @@ COMMANDS:
                   --time-scale S --inject-overhead
                   --speeds 1.0,0.5,.. | --speed-dist SPEC  (slowdown-only
                   executor pinning, factors in (0,1])
-    trace       Persistent task traces (schema v1, ndjson or binary)
+    trace       Persistent task traces (schema v1/v2, ndjson or binary;
+                scenario runs record worker speeds, replicas and
+                replica-winner flags as schema v2)
                   record    --source sim|emulator --out FILE [--format ndjson|bin]
-                            + the simulate/emulate flag sets (--model, --k, ...)
+                            + the simulate/emulate flag sets (--model, --k,
+                            --speeds, --redundancy, ...)
                   replay    --in FILE [--model sm|fj|fjps|ideal] [--servers L]
                             [--overhead ...] [--in-order] [--seed S]
                   summarize --in FILE
@@ -140,7 +154,8 @@ COMMANDS:
     stability   Stability region scans (analytic + simulated)
                   --model sm|fj --servers L --k-list 50,100,...
     figure      Regenerate a paper figure's data as CSV
-                  fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|hetero|all
+                  fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|
+                  hetero|hetero-approx|all
                   [--out DIR] [--scale quick|paper]
     calibrate   Fit the 4-parameter overhead model (Sec. 2.6)
                   [--jobs N] [--k K] [--executors L]   (live sparklite)
@@ -148,7 +163,8 @@ COMMANDS:
     advisor     Recommend tasks-per-job for a cluster configuration
                   --servers L --lambda RATE --workload SECONDS [--overhead]
                   with --speeds/--speed-dist/--redundancy the advice comes
-                  from simulation sweeps (skewed/redundant clusters)
+                  from the approx analytic engine (microseconds); add
+                  --simulate to fall back to simulation sweeps
     selfcheck   Run artifact-vs-rust cross validation
     help        Show this help
 

@@ -194,15 +194,27 @@ impl WorkersConfig {
 /// distinct workers; the first replica to finish wins and the others are
 /// cancelled (first-finish-wins, as in the heterogeneous/redundant-jobs
 /// extensions of the barrier-system literature).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RedundancyConfig {
     /// Copies per task, `>= 1`; `1` reduces to the base model.
     pub replicas: usize,
+    /// Per-replica launch overhead in seconds — the replica-launch cost
+    /// term extending the Sec.-2.6 four-parameter fit. Charged to every
+    /// replica of a redundant dispatch (`replicas > 1`); ignored at
+    /// `replicas = 1` so the degenerate scenario stays bit-exact.
+    pub launch_overhead: f64,
+}
+
+impl RedundancyConfig {
+    /// `replicas` copies per task with no launch cost.
+    pub fn new(replicas: usize) -> Self {
+        Self { replicas, launch_overhead: 0.0 }
+    }
 }
 
 impl Default for RedundancyConfig {
     fn default() -> Self {
-        Self { replicas: 1 }
+        Self { replicas: 1, launch_overhead: 0.0 }
     }
 }
 
@@ -285,6 +297,19 @@ impl SimulationConfig {
                     r.replicas, self.servers
                 ));
             }
+            if !(r.launch_overhead >= 0.0 && r.launch_overhead.is_finite()) {
+                return Err(format!(
+                    "redundancy.launch_overhead must be finite and >= 0, got {}",
+                    r.launch_overhead
+                ));
+            }
+            if r.replicas == 1 && r.launch_overhead > 0.0 {
+                return Err(
+                    "redundancy.launch_overhead needs replicas >= 2 (it is charged \
+                     per replica of a redundant dispatch)"
+                        .into(),
+                );
+            }
             if r.replicas > 1 && self.model == ModelKind::Ideal {
                 return Err(
                     "redundancy has no effect under ideal equisized partitioning; \
@@ -312,6 +337,11 @@ impl SimulationConfig {
     /// Replicas per task (1 when no redundancy is configured).
     pub fn replicas(&self) -> usize {
         self.redundancy.map(|r| r.replicas).unwrap_or(1)
+    }
+
+    /// Per-replica launch overhead (0 when no redundancy is configured).
+    pub fn launch_overhead(&self) -> f64 {
+        self.redundancy.map(|r| r.launch_overhead).unwrap_or(0.0)
     }
 }
 
@@ -544,7 +574,8 @@ fn redundancy_from_section(sec: &Section) -> Result<RedundancyConfig, String> {
     if replicas == 0 {
         return Err("redundancy.replicas must be >= 1".into());
     }
-    Ok(RedundancyConfig { replicas })
+    let launch_overhead = get_f64(sec, "launch_overhead", 0.0)?;
+    Ok(RedundancyConfig { replicas, launch_overhead })
 }
 
 fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
@@ -664,6 +695,7 @@ tasks_per_job = 8
 speeds = [1.0, 1.0, 0.5, 2.0]
 [redundancy]
 replicas = 2
+launch_overhead = 0.005
 "#,
         )
         .unwrap();
@@ -673,7 +705,26 @@ replicas = 2
             Some(WorkersConfig::Speeds(vec![1.0, 1.0, 0.5, 2.0]))
         );
         assert_eq!(sim.replicas(), 2);
+        assert_eq!(sim.launch_overhead(), 0.005);
         assert_eq!(sim.resolved_speeds().unwrap(), vec![1.0, 1.0, 0.5, 2.0]);
+        // Launch overhead defaults to zero and must be non-negative.
+        let cfg = ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[redundancy]\nreplicas = 2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.simulation.unwrap().launch_overhead(), 0.0);
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n\
+             [redundancy]\nreplicas = 2\nlaunch_overhead = -1.0\n",
+        )
+        .is_err());
+        // A launch cost without replication is meaningless (and would
+        // strand the trace subsystem between schema versions).
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n\
+             [redundancy]\nreplicas = 1\nlaunch_overhead = 0.01\n",
+        )
+        .is_err());
     }
 
     #[test]

@@ -6,10 +6,14 @@
 //! an overhead model, sweep k over a log grid through the Sec.-6
 //! approximation and return the k minimizing the sojourn ε-quantile.
 //!
-//! For scenarios the analytic layer does not cover — heterogeneous worker
-//! speeds and task redundancy — [`recommend_simulated`] answers the same
-//! question by sweeping k through the simulator on the thread pool.
+//! Heterogeneous / redundant clusters are answered analytically by
+//! [`recommend_approx`] through the [`crate::approx`] subsystem
+//! (microseconds per query; bit-for-bit the homogeneous answer in the
+//! degenerate scenario), and by [`recommend_simulated`], which sweeps k
+//! through the simulator on the thread pool — kept as the ground-truth
+//! fallback (`advisor --simulate`).
 
+use crate::approx::{self, ApproxModel, ClusterSpec};
 use crate::config::{ModelKind, OverheadConfig, SimulationConfig};
 use crate::coordinator::sweep::{run_sweep, SweepPoint};
 use crate::runtime::{BoundQuery, BoundsEngine};
@@ -64,6 +68,52 @@ pub fn recommend(
             }
         }
         curve.push((k, tau));
+    }
+    Ok(Recommendation { best, curve })
+}
+
+/// Analytic recommendation for a heterogeneous / redundant cluster: the
+/// κ grid (up to `kappa_max`, [`recommend`] uses 200) and task sizing of
+/// [`recommend`], evaluated through the [`crate::approx`] sojourn
+/// approximation instead of the homogeneous bounds engine. In the
+/// degenerate scenario (all speeds 1.0, r = 1, `kappa_max` 200) the
+/// curve — and therefore the pick — equals [`recommend`] on the native
+/// engine bit-for-bit.
+pub fn recommend_approx(
+    model: ModelKind,
+    spec: &ClusterSpec,
+    lambda: f64,
+    mean_workload: f64,
+    epsilon: f64,
+    overhead: OverheadConfig,
+    kappa_max: f64,
+) -> Result<Recommendation, String> {
+    if !(mean_workload > 0.0 && mean_workload.is_finite()) {
+        return Err(format!("mean workload must be positive, got {mean_workload}"));
+    }
+    if !(kappa_max >= 1.0 && kappa_max.is_finite()) {
+        return Err(format!("kappa_max must be >= 1, got {kappa_max}"));
+    }
+    let am = ApproxModel::from_model_kind(model)?;
+    let ks = k_grid(spec.len(), kappa_max);
+    let points = approx::sojourn_curve(
+        am,
+        spec,
+        lambda,
+        mean_workload,
+        epsilon,
+        Some(overhead),
+        &ks,
+    );
+    let mut curve = Vec::with_capacity(points.len());
+    let mut best: Option<(usize, f64)> = None;
+    for p in &points {
+        if let Some(t) = p.sojourn {
+            if best.map(|(_, bt)| t < bt).unwrap_or(true) {
+                best = Some((p.k, t));
+            }
+        }
+        curve.push((p.k, p.sojourn));
     }
     Ok(Recommendation { best, curve })
 }
@@ -189,7 +239,7 @@ mod tests {
             workers: Some(WorkersConfig::Speeds(vec![
                 1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5,
             ])),
-            redundancy: Some(RedundancyConfig { replicas: 2 }),
+            redundancy: Some(RedundancyConfig::new(2)),
         };
         let pool = ThreadPool::new(4);
         let ks = k_grid(l, 16.0);
@@ -198,6 +248,78 @@ mod tests {
         assert!(ks.contains(&k));
         assert!(tau.is_finite() && tau > 0.0);
         assert_eq!(rec.curve.len(), ks.len());
+    }
+
+    /// Degenerate-scenario delegation: the analytic scenario advisor is
+    /// bitwise the homogeneous advisor on the native engine — same
+    /// curve, same pick.
+    #[test]
+    fn approx_advisor_degenerates_to_homogeneous() {
+        let l = 20usize;
+        let engine = BoundsEngine::native();
+        for model in [ModelKind::ForkJoinSingleQueue, ModelKind::SplitMerge] {
+            let reference =
+                recommend(&engine, model, l, 0.5, l as f64, 0.01, OverheadConfig::paper())
+                    .unwrap();
+            let approx = recommend_approx(
+                model,
+                &ClusterSpec::homogeneous(l),
+                0.5,
+                l as f64,
+                0.01,
+                OverheadConfig::paper(),
+                200.0,
+            )
+            .unwrap();
+            assert_eq!(reference.curve.len(), approx.curve.len());
+            for ((ka, ta), (kb, tb)) in reference.curve.iter().zip(&approx.curve) {
+                assert_eq!(ka, kb);
+                assert_eq!(ta.map(f64::to_bits), tb.map(f64::to_bits), "{model} k={ka}");
+            }
+            assert_eq!(
+                reference.best.map(|(k, t)| (k, t.to_bits())),
+                approx.best.map(|(k, t)| (k, t.to_bits())),
+                "{model}"
+            );
+        }
+    }
+
+    /// The analytic scenario advisor handles a skewed redundant cluster
+    /// and still finds the interior optimum.
+    #[test]
+    fn approx_advisor_handles_skewed_cluster() {
+        let l = 10usize;
+        let mut speeds = vec![1.5; l / 2];
+        speeds.extend(vec![0.5; l / 2]);
+        let spec = ClusterSpec::new(speeds, 2, 1e-3).unwrap();
+        let rec = recommend_approx(
+            ModelKind::ForkJoinSingleQueue,
+            &spec,
+            0.4,
+            l as f64,
+            0.01,
+            OverheadConfig::paper(),
+            200.0,
+        )
+        .unwrap();
+        // --kappa-max reaches the analytic grid (the simulated advisor's
+        // contract, honored here too).
+        let capped = recommend_approx(
+            ModelKind::ForkJoinSingleQueue,
+            &spec,
+            0.4,
+            l as f64,
+            0.01,
+            OverheadConfig::paper(),
+            8.0,
+        )
+        .unwrap();
+        assert!(capped.curve.last().unwrap().0 <= 8 * l);
+        let (k, tau) = rec.best.expect("stable recommendation");
+        assert!(k > l, "tinyfication should help: k={k}");
+        assert!(tau.is_finite() && tau > 0.0);
+        let k_max = rec.curve.last().unwrap().0;
+        assert!(k < k_max, "overhead should cap k");
     }
 
     #[test]

@@ -175,6 +175,8 @@ pub fn calibrate(base: &EmulatorConfig, ks: &[usize]) -> Result<Calibration, Str
         ref_res.measured_jobs().count(),
         ref_cfg.warmup,
         ref_cfg.seed,
+        ref_cfg.workers.clone(),
+        None,
     );
     fit_and_refine(all_task_overheads, pd_samples, &sim_base, &emu_ecdf)
 }
@@ -189,6 +191,14 @@ pub fn calibrate_from_trace(trace: &Trace) -> Result<Calibration, String> {
     }
     let reference = Ecdf::new(sojourns);
     let meta = &trace.meta;
+    // Schema-v2 traces carry the scenario shape: the candidate
+    // simulations refine against the same skewed/redundant cluster the
+    // reference sojourns were measured on.
+    let workers = meta.speeds.clone().map(crate::config::WorkersConfig::Speeds);
+    let redundancy = (meta.replicas > 1).then(|| crate::config::RedundancyConfig {
+        replicas: meta.replicas as usize,
+        launch_overhead: meta.launch_overhead,
+    });
     let sim_base = sim_base_for(
         trace.model()?,
         meta.servers as usize,
@@ -198,6 +208,8 @@ pub fn calibrate_from_trace(trace: &Trace) -> Result<Calibration, String> {
         trace.measured_jobs().count(),
         meta.warmup as usize,
         meta.seed,
+        workers,
+        redundancy,
     );
     fit_and_refine(
         trace.task_overheads(),
@@ -208,8 +220,8 @@ pub fn calibrate_from_trace(trace: &Trace) -> Result<Calibration, String> {
 }
 
 /// The candidate-simulation config shared by the live and from-trace
-/// paths: same shape as the reference run, 10× the jobs for a smooth
-/// ECDF, a decorrelated seed.
+/// paths: same shape as the reference run (including any recorded
+/// scenario), 10× the jobs for a smooth ECDF, a decorrelated seed.
 #[allow(clippy::too_many_arguments)]
 fn sim_base_for(
     model: crate::config::ModelKind,
@@ -220,6 +232,8 @@ fn sim_base_for(
     measured_jobs: usize,
     warmup: usize,
     seed: u64,
+    workers: Option<crate::config::WorkersConfig>,
+    redundancy: Option<crate::config::RedundancyConfig>,
 ) -> SimulationConfig {
     SimulationConfig {
         model,
@@ -231,8 +245,8 @@ fn sim_base_for(
         warmup: warmup * 10,
         seed: seed ^ 0xCA11B,
         overhead: None,
-        workers: None,
-        redundancy: None,
+        workers,
+        redundancy,
     }
 }
 

@@ -32,7 +32,7 @@ fn e(s: String) -> anyhow::Error {
 
 /// Parse the heterogeneous-worker / redundancy scenario flags:
 /// `--speeds 1.0,0.5,...` or `--speed-dist uniform:0.5:1.5`
-/// (with `--speed-seed N`), plus `--redundancy R`.
+/// (with `--speed-seed N`), plus `--redundancy R [--replica-launch S]`.
 fn scenario_from_args(
     args: &Args,
 ) -> Result<(Option<WorkersConfig>, Option<RedundancyConfig>)> {
@@ -48,10 +48,19 @@ fn scenario_from_args(
         }
         (None, None) => None,
     };
+    let launch_overhead = args.get_f64("replica-launch", 0.0).map_err(e)?;
+    if !(launch_overhead >= 0.0 && launch_overhead.is_finite()) {
+        bail!("--replica-launch must be finite and >= 0");
+    }
     let redundancy = match args.get_usize("redundancy", 1).map_err(e)? {
         0 => bail!("--redundancy must be >= 1"),
-        1 => None,
-        r => Some(RedundancyConfig { replicas: r }),
+        1 => {
+            if launch_overhead > 0.0 {
+                bail!("--replica-launch needs --redundancy >= 2");
+            }
+            None
+        }
+        replicas => Some(RedundancyConfig { replicas, launch_overhead }),
     };
     Ok((workers, redundancy))
 }
@@ -374,8 +383,9 @@ pub fn cmd_calibrate(args: &Args) -> Result<i32> {
 
 /// `tiny-tasks advisor` — recommend k for a cluster (the paper's
 /// concluding use-case). With `--speeds`/`--speed-dist`/`--redundancy`
-/// the recommendation comes from simulation sweeps (the analytic models
-/// are homogeneous); otherwise from the analytic engine.
+/// the recommendation comes from the `approx` analytic engine
+/// (microseconds instead of sweep-minutes); `--simulate` falls back to
+/// simulation sweeps. Homogeneous clusters use the bounds engine.
 pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let l = args.get_usize("servers", 50).map_err(e)?;
     let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
@@ -387,31 +397,40 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let rec = if workers.is_some() || redundancy.is_some() {
         if model == ModelKind::ForkJoinPerServer {
             bail!(
-                "the simulated advisor sweeps tasks-per-job and needs a \
-                 tiny-tasks model (sm/fj/ideal); fjps is fixed at k = l"
+                "the scenario advisor sweeps tasks-per-job and needs a \
+                 tiny-tasks model (sm/fj); fjps is fixed at k = l"
             );
         }
-        let jobs = args.get_usize("jobs", 8_000).map_err(e)?;
-        let kappa_max = args.get_f64("kappa-max", 32.0).map_err(e)?;
-        let base = SimulationConfig {
-            model,
-            servers: l,
-            tasks_per_job: l, // overridden per sweep point
-            arrival: crate::config::ArrivalConfig {
-                interarrival: format!("exp:{lambda}"),
-            },
-            service: crate::config::ServiceConfig { execution: "exp:1.0".into() },
-            jobs,
-            warmup: jobs / 10,
-            seed: args.get_u64("seed", 1).map_err(e)?,
-            overhead: Some(oh),
-            workers,
-            redundancy,
-        };
-        let pool = ThreadPool::with_default_size();
-        let ks = advisor::k_grid(l, kappa_max);
-        println!("engine: simulation sweep (heterogeneous/redundant scenario)");
-        advisor::recommend_simulated(&pool, &base, workload, epsilon, &ks).map_err(e)?
+        if args.get_bool("simulate") {
+            let jobs = args.get_usize("jobs", 8_000).map_err(e)?;
+            let kappa_max = args.get_f64("kappa-max", 32.0).map_err(e)?;
+            let base = SimulationConfig {
+                model,
+                servers: l,
+                tasks_per_job: l, // overridden per sweep point
+                arrival: crate::config::ArrivalConfig {
+                    interarrival: format!("exp:{lambda}"),
+                },
+                service: crate::config::ServiceConfig { execution: "exp:1.0".into() },
+                jobs,
+                warmup: jobs / 10,
+                seed: args.get_u64("seed", 1).map_err(e)?,
+                overhead: Some(oh),
+                workers,
+                redundancy,
+            };
+            let pool = ThreadPool::with_default_size();
+            let ks = advisor::k_grid(l, kappa_max);
+            println!("engine: simulation sweep (heterogeneous/redundant scenario)");
+            advisor::recommend_simulated(&pool, &base, workload, epsilon, &ks).map_err(e)?
+        } else {
+            let spec = crate::approx::ClusterSpec::from_scenario(l, workers.as_ref(), redundancy)
+                .map_err(e)?;
+            let kappa_max = args.get_f64("kappa-max", 200.0).map_err(e)?;
+            println!("engine: analytic approximation (heterogeneous/redundant scenario)");
+            advisor::recommend_approx(model, &spec, lambda, workload, epsilon, oh, kappa_max)
+                .map_err(e)?
+        }
     } else {
         let engine = BoundsEngine::auto();
         advisor::recommend(&engine, model, l, lambda, workload, epsilon, oh)?
@@ -431,6 +450,154 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
         match tau {
             Some(t) => println!("{k:>8} {t:>14.3}"),
             None => println!("{k:>8} {:>14}", "unstable"),
+        }
+    }
+    Ok(0)
+}
+
+/// `tiny-tasks approx` — the analytic approximation for heterogeneous /
+/// redundant clusters, cross-validated against a simulation sweep: one
+/// row per k with the analytic sojourn ε-quantile next to the simulated
+/// (1−ε)-quantile. `--no-sim` skips the sweep (pure analytics,
+/// microseconds); `--check` turns the comparison into a pass/fail gate
+/// (the CI smoke check): every comparable point's `analytic / simulated`
+/// ratio must land in `[--floor, --tolerance]` (defaults 0.75 and 12).
+/// The approximation is a genuine upper bound for pure skew; replica
+/// grouping idealizes the dynamic first-finish-wins dispatch, so under
+/// redundancy it may undershoot slightly — hence a tracking window, not
+/// a one-sided dominance test.
+pub fn cmd_approx(args: &Args) -> Result<i32> {
+    use crate::approx::{self, ApproxModel, ClusterSpec};
+    use crate::coordinator::sweep::{constant_workload_points, run_sweep};
+    use crate::util::csv::Csv;
+
+    let l = args.get_usize("servers", 8).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.4).map_err(e)?;
+    let workload = args.get_f64("workload", l as f64).map_err(e)?;
+    let epsilon = args.get_f64("epsilon", 0.01).map_err(e)?;
+    let model = ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?;
+    let am = ApproxModel::from_model_kind(model).map_err(e)?;
+    let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
+    let (workers, redundancy) = scenario_from_args(args)?;
+    let spec = ClusterSpec::from_scenario(l, workers.as_ref(), redundancy).map_err(e)?;
+    let ks: Vec<usize> = match args.get_list_f64("k-list").map_err(e)? {
+        Some(list) => list.into_iter().map(|x| x as usize).collect(),
+        None => advisor::k_grid(l, args.get_f64("kappa-max", 16.0).map_err(e)?),
+    };
+    if ks.iter().any(|&k| k < l) {
+        bail!("tiny-tasks approximation needs k >= l for every k");
+    }
+
+    let curve = approx::sojourn_curve(am, &spec, lambda, workload, epsilon, Some(oh), &ks);
+    let sims = if args.get_bool("no-sim") {
+        None
+    } else {
+        let jobs = args.get_usize("jobs", 6_000).map_err(e)?;
+        let points = constant_workload_points(
+            model,
+            l,
+            lambda,
+            workload,
+            jobs,
+            Some(oh),
+            workers,
+            redundancy,
+            &ks,
+        );
+        let pool = ThreadPool::with_default_size();
+        Some(
+            run_sweep(&pool, points, 1.0 - epsilon, args.get_u64("seed", 1).map_err(e)?)
+                .map_err(e)?,
+        )
+    };
+
+    println!(
+        "cluster: l={l}, lambda={lambda}/s, E[workload]={workload}s, model={model}, \
+         eps={epsilon}"
+    );
+    println!(
+        "scenario: speeds in [{:.3}, {:.3}] (Σ = {:.3}), replicas r = {}, launch = {}s",
+        spec.speeds.iter().cloned().fold(f64::INFINITY, f64::min),
+        spec.speeds.iter().cloned().fold(0.0f64, f64::max),
+        spec.total_speed(),
+        spec.replicas,
+        spec.replica_launch,
+    );
+    println!(
+        "stability: sm rho* = {:.4} (at largest k), fj rho* = {:.4}",
+        approx::sm_max_utilization(&spec, *ks.last().unwrap()),
+        approx::fork_join_max_utilization(&spec),
+    );
+    let mut csv = Csv::new(vec!["k", "mu", "analytic_q", "sim_q"]);
+    println!("\n{:>8} {:>14} {:>14} {:>8}", "k", "analytic(s)", "sim(s)", "ratio");
+    for (i, pt) in curve.iter().enumerate() {
+        let sim_q = sims.as_ref().map(|s| s[i].sojourn_q);
+        let a_txt = pt
+            .sojourn
+            .map(|t| format!("{t:.3}"))
+            .unwrap_or_else(|| "unstable".into());
+        let s_txt = sim_q.map(|q| format!("{q:.3}")).unwrap_or_else(|| "-".into());
+        let ratio = match (pt.sojourn, sim_q) {
+            (Some(a), Some(s)) if s > 0.0 => format!("{:.2}", a / s),
+            _ => "-".into(),
+        };
+        println!("{:>8} {a_txt:>14} {s_txt:>14} {ratio:>8}", pt.k);
+        csv.push(&[
+            pt.k as f64,
+            pt.mu,
+            pt.sojourn.unwrap_or(f64::NAN),
+            sim_q.unwrap_or(f64::NAN),
+        ]);
+    }
+    if let Some(out) = args.get("out") {
+        csv.write_file(out)?;
+        println!("wrote {out}");
+    }
+
+    if args.get_bool("check") {
+        let Some(sims) = &sims else {
+            bail!("--check needs the simulation sweep; drop --no-sim");
+        };
+        let tolerance = args.get_f64("tolerance", 12.0).map_err(e)?;
+        let floor = args.get_f64("floor", 0.75).map_err(e)?;
+        let mut compared = 0usize;
+        let mut failures = Vec::new();
+        for (pt, sim) in curve.iter().zip(sims) {
+            let (Some(a), s) = (pt.sojourn, sim.sojourn_q) else { continue };
+            if !s.is_finite() || s <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let ratio = a / s;
+            if ratio < floor {
+                failures.push(format!(
+                    "k={}: analytic {a:.3}s undershoots simulated {s:.3}s \
+                     (ratio {ratio:.2} < {floor})",
+                    pt.k
+                ));
+            }
+            if ratio > tolerance {
+                failures.push(format!(
+                    "k={}: analytic {a:.3}s vacuous vs simulated {s:.3}s \
+                     (ratio {ratio:.2} > {tolerance})",
+                    pt.k
+                ));
+            }
+        }
+        if compared == 0 {
+            failures.push("no stable point to compare".into());
+        }
+        if failures.is_empty() {
+            println!(
+                "\napprox check: OK ({compared} points, analytic/sim within \
+                 [{floor}, {tolerance}])"
+            );
+        } else {
+            println!("\napprox check: FAIL");
+            for f in &failures {
+                println!("  {f}");
+            }
+            return Ok(1);
         }
     }
     Ok(0)
@@ -585,7 +752,7 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         speeds.extend(vec![0.5; l - l / 2]);
         let cfg = SimulationConfig {
             workers: Some(WorkersConfig::Speeds(speeds)),
-            redundancy: Some(RedundancyConfig { replicas: 2 }),
+            redundancy: Some(RedundancyConfig::new(2)),
             ..bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed)
         };
         let name = "sim/fj/l50/k400/scenario";
@@ -737,20 +904,10 @@ fn trace_record(args: &Args) -> Result<i32> {
             let k = args.get_usize("k", 4 * l).map_err(e)?;
             let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
             let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+            // Scenario runs record as schema v2 (meta speeds/replicas +
+            // per-row winner flags), so replay and calibrate --from-trace
+            // see the real cluster shape.
             let (workers, redundancy) = scenario_from_args(args)?;
-            if workers.is_some() || redundancy.is_some() {
-                // Schema v1 carries no scenario shape: a trace recorded
-                // under pinned speeds or task redundancy would replay and
-                // calibrate as if homogeneous — silently wrong — and the
-                // winning replica of a redundant task is not recoverable
-                // from the task rows (cancelled replicas free their server
-                // at the winner's finish instant).
-                bail!(
-                    "trace record does not capture --speeds/--speed-dist/--redundancy \
-                     (schema v1 has no scenario fields; replay and calibrate \
-                     --from-trace would silently assume homogeneous workers)"
-                );
-            }
             let cfg = SimulationConfig {
                 model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
                 servers: l,
@@ -777,16 +934,6 @@ fn trace_record(args: &Args) -> Result<i32> {
         }
         "emulator" | "emu" | "sparklite" => {
             let cfg = emulator_cfg_from_args(args)?;
-            if cfg.workers.is_some() {
-                // Pinned speeds are real measured behavior (fine to
-                // record), but schema v1 meta cannot carry them: warn
-                // that downstream consumers see a homogeneous config.
-                println!(
-                    "note: executor speeds are not recorded in the trace meta; \
-                     replay and calibrate --from-trace will assume homogeneous \
-                     workers against the skewed measurements"
-                );
-            }
             let res = emulator::run(&cfg).map_err(e)?;
             crate::trace::Trace::from_emulator(&res).map_err(e)?
         }
@@ -866,6 +1013,19 @@ fn trace_summarize(args: &Args) -> Result<i32> {
     println!("schema           v{} ({} source)", m.schema, m.source);
     println!("model            {} (l={}, k={})", m.model, m.servers, m.tasks_per_job);
     println!("workload         {} / {}", m.interarrival, m.execution);
+    if m.speeds.is_some() || m.replicas > 1 {
+        let speeds = m.speeds.clone().unwrap_or_else(|| vec![1.0; m.servers as usize]);
+        let min = speeds.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speeds.iter().cloned().fold(0.0f64, f64::max);
+        let losers = trace.tasks.iter().filter(|t| !t.winner).count();
+        println!(
+            "scenario         speeds in [{min:.3}, {max:.3}] (Σ = {:.3}), replicas r = {} \
+             (launch {}s, {losers} cancelled-replica rows)",
+            speeds.iter().sum::<f64>(),
+            m.replicas,
+            m.launch_overhead
+        );
+    }
     println!(
         "rows             {} jobs ({} measured, warmup {}), {} tasks",
         trace.jobs.len(),

@@ -60,7 +60,7 @@ pub fn fig_hetero(ctx: &FigureCtx) -> Result<()> {
                 None
             },
             redundancy: if replicas > 1 {
-                Some(RedundancyConfig { replicas })
+                Some(RedundancyConfig::new(replicas))
             } else {
                 None
             },

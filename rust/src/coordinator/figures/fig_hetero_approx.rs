@@ -1,0 +1,93 @@
+//! Heterogeneous-approximation panel (beyond the paper): how well does
+//! the `approx` subsystem's analytic sojourn quantile track the
+//! simulated quantile across skewed-speed and redundancy scenarios?
+//!
+//! Three configurations — two skew levels of the capacity-preserving
+//! two-class cluster (r = 1) and one redundant variant (r = 2) — are
+//! swept over tasks-per-job k at constant mean workload (μ = k/l) with
+//! the paper overhead model. One CSV row per (config, k):
+//!
+//! `config,skew,replicas,k,analytic_q,sim_q`
+//!
+//! where `analytic_q` is the [`crate::approx`] sojourn ε-quantile (NaN
+//! when the approximation's stability condition fails) and `sim_q` the
+//! simulated (1−ε)-quantile of the same scenario.
+
+use super::{two_class_speeds, FigureCtx, Scale};
+use crate::approx::{self, ApproxModel, ClusterSpec};
+use crate::config::{ModelKind, OverheadConfig, RedundancyConfig, WorkersConfig};
+use crate::coordinator::sweep::{constant_workload_points, run_sweep};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+pub fn fig_hetero_approx(ctx: &FigureCtx) -> Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let eps = 0.01;
+    let oh = OverheadConfig::paper();
+    let (ks, jobs): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (vec![10, 20, 40, 80, 160], 8_000),
+        Scale::Paper => (vec![10, 20, 40, 80, 160, 320, 640, 1280], 60_000),
+    };
+    // (label, skew, replicas): two skewed-speed panels + one redundancy
+    // panel, the acceptance set of the hetero-approx pipeline.
+    let configs: [(&str, f64, usize); 3] =
+        [("skew25", 0.25, 1), ("skew50", 0.5, 1), ("skew50-r2", 0.5, 2)];
+
+    let mut csv = Csv::new(vec!["config", "skew", "replicas", "k", "analytic_q", "sim_q"]);
+    for (cfg_i, &(label, skew, replicas)) in configs.iter().enumerate() {
+        let speeds = two_class_speeds(l, skew);
+        let spec = ClusterSpec::new(speeds.clone(), replicas, 0.0)
+            .map_err(anyhow::Error::msg)?;
+        let analytic = approx::sojourn_curve(
+            ApproxModel::ForkJoin,
+            &spec,
+            lambda,
+            l as f64,
+            eps,
+            Some(oh),
+            &ks,
+        );
+        let points = constant_workload_points(
+            ModelKind::ForkJoinSingleQueue,
+            l,
+            lambda,
+            l as f64,
+            jobs,
+            Some(oh),
+            Some(WorkersConfig::Speeds(speeds.clone())),
+            if replicas > 1 {
+                Some(RedundancyConfig::new(replicas))
+            } else {
+                None
+            },
+            &ks,
+        );
+        let sims = run_sweep(ctx.pool, points, 1.0 - eps, ctx.seed ^ (0xa99 + cfg_i as u64))
+            .map_err(anyhow::Error::msg)?;
+        for (pt, sim) in analytic.iter().zip(&sims) {
+            let analytic_txt = pt
+                .sojourn
+                .map(|t| t.to_string())
+                .unwrap_or_else(|| "nan".into());
+            csv.push_raw(vec![
+                label.to_string(),
+                skew.to_string(),
+                replicas.to_string(),
+                pt.k.to_string(),
+                analytic_txt,
+                sim.sojourn_q.to_string(),
+            ]);
+        }
+    }
+    let path = ctx.out_dir.join("hetero_approx_panel.csv");
+    csv.write_file(&path)?;
+    println!(
+        "hetero-approx: {} rows ({} configs x {} ks) -> {}",
+        csv.len(),
+        configs.len(),
+        ks.len(),
+        path.display()
+    );
+    Ok(())
+}

@@ -11,6 +11,7 @@ mod fig11;
 mod fig12;
 mod fig13;
 mod fig_hetero;
+mod fig_hetero_approx;
 
 pub use fig1_2::fig1_2;
 pub use fig3::fig3;
@@ -21,6 +22,7 @@ pub use fig11::fig11;
 pub use fig12::{fig12a, fig12b};
 pub use fig13::fig13;
 pub use fig_hetero::{fig_hetero, two_class_speeds};
+pub use fig_hetero_approx::fig_hetero_approx;
 
 use anyhow::Result;
 use std::path::Path;
@@ -63,7 +65,7 @@ pub struct FigureCtx<'a> {
 /// beyond-the-paper scenario panels.
 pub const ALL: &[&str] = &[
     "fig1-2", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12a", "fig12b", "fig13",
-    "hetero",
+    "hetero", "hetero-approx",
 ];
 
 /// Run one figure by id.
@@ -79,6 +81,7 @@ pub fn run(id: &str, ctx: &FigureCtx) -> Result<()> {
         "fig12b" => fig12b(ctx),
         "fig13" => fig13(ctx),
         "hetero" => fig_hetero(ctx),
+        "hetero-approx" => fig_hetero_approx(ctx),
         "all" => {
             for id in ALL {
                 println!("== {id} ==");

@@ -35,6 +35,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
         "trace" => commands::cmd_trace(args),
         "calibrate" => commands::cmd_calibrate(args),
         "advisor" => commands::cmd_advisor(args),
+        "approx" => commands::cmd_approx(args),
         "selfcheck" => commands::cmd_selfcheck(args),
         other => {
             eprintln!("unknown command {other:?}\n\n{}", crate::cli::USAGE);

@@ -1,7 +1,10 @@
 //! Parallel simulation sweeps: run many simulator configurations across
 //! the thread pool, with per-point seeding derived from a master seed.
 
-use crate::config::SimulationConfig;
+use crate::config::{
+    ArrivalConfig, ModelKind, OverheadConfig, RedundancyConfig, ServiceConfig,
+    SimulationConfig, WorkersConfig,
+};
 use crate::rng::spawn_seeds;
 use crate::sim::{self, RunOptions, SimResult};
 use crate::util::threadpool::ThreadPool;
@@ -43,6 +46,48 @@ pub struct SweepOptions {
     /// bank instead of storing every sojourn sample — million-job sweep
     /// points stop costing O(jobs) memory each.
     pub streaming: bool,
+}
+
+/// One [`SweepPoint`] per k at constant mean job workload: Poisson
+/// arrivals at `lambda`, tasks sized so `k · E[exec] = mean_workload`
+/// (`exp:{k/mean_workload}`), warmup = jobs/10, seeds left to
+/// [`run_sweep`]'s per-point reseeding. Shared by the approx
+/// cross-validation surfaces (`tiny-tasks approx`, `figure
+/// hetero-approx`) so the analytic and simulated curves stay comparable
+/// point by point.
+#[allow(clippy::too_many_arguments)]
+pub fn constant_workload_points(
+    model: ModelKind,
+    servers: usize,
+    lambda: f64,
+    mean_workload: f64,
+    jobs: usize,
+    overhead: Option<OverheadConfig>,
+    workers: Option<WorkersConfig>,
+    redundancy: Option<RedundancyConfig>,
+    ks: &[usize],
+) -> Vec<SweepPoint> {
+    assert!(mean_workload > 0.0 && mean_workload.is_finite());
+    ks.iter()
+        .map(|&k| SweepPoint {
+            label: k as f64,
+            config: SimulationConfig {
+                model,
+                servers,
+                tasks_per_job: k,
+                arrival: ArrivalConfig { interarrival: format!("exp:{lambda}") },
+                service: ServiceConfig {
+                    execution: format!("exp:{}", k as f64 / mean_workload),
+                },
+                jobs,
+                warmup: jobs / 10,
+                seed: 0, // reseeded per point by run_sweep
+                overhead,
+                workers: workers.clone(),
+                redundancy,
+            },
+        })
+        .collect()
 }
 
 /// Run every point at quantile `q`, in parallel, reseeding each point
@@ -138,7 +183,7 @@ mod tests {
                 1.5, 1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5, 0.5,
             ]));
             p.config.redundancy =
-                Some(crate::config::RedundancyConfig { replicas: 2 });
+                Some(crate::config::RedundancyConfig::new(2));
             p
         };
         let points: Vec<SweepPoint> = [10, 20].iter().map(|&k| mk(k)).collect();

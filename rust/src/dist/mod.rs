@@ -235,24 +235,19 @@ impl Distribution for Weibull {
     }
 }
 
-/// Empirical distribution over a recorded sample bank: inverse-transform
-/// sampling off the sorted samples (type-7 interpolated quantiles, so a
-/// draw at uniform `u` equals [`crate::stats::Ecdf::inverse`]`(u)` on the
-/// same bank). This is how recorded task-size traces drive the
-/// simulators *empirically* instead of through a fitted parametric law
-/// (spec: `empirical:<file>`).
-#[derive(Clone, Debug)]
-pub struct Empirical {
+/// An immutable, shareable sample bank (ascending-sorted samples plus
+/// moments). Banks loaded from files are cached process-wide and shared
+/// across [`Empirical`] instances via `Arc`.
+#[derive(Debug)]
+struct SampleBank {
     /// Ascending-sorted sample bank.
     sorted: Vec<f64>,
     mean: f64,
     variance: f64,
 }
 
-impl Empirical {
-    /// Build from raw samples (sorted internally; needs ≥ 1 finite,
-    /// non-negative sample).
-    pub fn new(mut samples: Vec<f64>) -> Result<Self, String> {
+impl SampleBank {
+    fn new(mut samples: Vec<f64>) -> Result<Self, String> {
         if samples.is_empty() {
             return Err("empirical distribution needs at least one sample".into());
         }
@@ -267,12 +262,59 @@ impl Empirical {
         let variance = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
         Ok(Self { sorted: samples, mean, variance })
     }
+}
+
+/// Cache key for file-loaded banks: canonical path plus the file's size
+/// and mtime, so rewriting a file (different content) reloads instead of
+/// serving the stale bank.
+type BankKey = (std::path::PathBuf, u64, Option<std::time::SystemTime>);
+
+/// The process-wide bank cache table.
+type BankMap = std::collections::HashMap<BankKey, std::sync::Arc<SampleBank>>;
+
+fn bank_cache() -> &'static std::sync::Mutex<BankMap> {
+    static CACHE: std::sync::OnceLock<std::sync::Mutex<BankMap>> = std::sync::OnceLock::new();
+    CACHE.get_or_init(Default::default)
+}
+
+/// Empirical distribution over a recorded sample bank: inverse-transform
+/// sampling off the sorted samples (type-7 interpolated quantiles, so a
+/// draw at uniform `u` equals [`crate::stats::Ecdf::inverse`]`(u)` on the
+/// same bank). This is how recorded task-size traces drive the
+/// simulators *empirically* instead of through a fitted parametric law
+/// (spec: `empirical:<file>`).
+///
+/// File-backed banks are **cached across [`parse_spec`] calls**, keyed
+/// by canonical path (+ file size and mtime): re-validating and re-using
+/// the same `empirical:<file>` spec — e.g. once at `validate()` and once
+/// per sweep point — shares one sorted bank instead of re-reading and
+/// re-sorting the file each time.
+#[derive(Clone, Debug)]
+pub struct Empirical {
+    bank: std::sync::Arc<SampleBank>,
+}
+
+impl Empirical {
+    /// Build from raw samples (sorted internally; needs ≥ 1 finite,
+    /// non-negative sample). Not cached — only file loads are.
+    pub fn new(samples: Vec<f64>) -> Result<Self, String> {
+        Ok(Self { bank: std::sync::Arc::new(SampleBank::new(samples)?) })
+    }
 
     /// Load a sample bank from a file: a recorded trace (binary or
     /// NDJSON; the bank is its per-task service times) or a plain text
     /// file of one sample per line (`#` comments and blanks skipped).
+    /// Served from the process-wide cache when the same file (same
+    /// canonical path, size, and mtime) was loaded before.
     pub fn load<P: AsRef<std::path::Path>>(path: P) -> Result<Self, String> {
         let path = path.as_ref();
+        let meta = std::fs::metadata(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let canonical = std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+        let key: BankKey = (canonical, meta.len(), meta.modified().ok());
+        if let Some(bank) = bank_cache().lock().unwrap().get(&key) {
+            return Ok(Self { bank: std::sync::Arc::clone(bank) });
+        }
         let bytes =
             std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
         let looks_like_trace = crate::trace::is_binary(&bytes)
@@ -296,23 +338,33 @@ impl Empirical {
             }
             out
         };
-        Self::new(samples).map_err(|e| format!("{}: {e}", path.display()))
+        let bank = std::sync::Arc::new(
+            SampleBank::new(samples).map_err(|e| format!("{}: {e}", path.display()))?,
+        );
+        bank_cache().lock().unwrap().insert(key, std::sync::Arc::clone(&bank));
+        Ok(Self { bank })
     }
 
     /// Number of samples in the bank.
     pub fn len(&self) -> usize {
-        self.sorted.len()
+        self.bank.sorted.len()
     }
 
     /// True when the bank is empty (never, by construction).
     pub fn is_empty(&self) -> bool {
-        self.sorted.is_empty()
+        self.bank.sorted.is_empty()
     }
 
     /// Interpolated quantile at `u` ∈ [0, 1] — the inverse transform.
     #[inline]
     pub fn quantile(&self, u: f64) -> f64 {
-        crate::stats::quantile_of_sorted(&self.sorted, u)
+        crate::stats::quantile_of_sorted(&self.bank.sorted, u)
+    }
+
+    /// True when two instances share one cached bank allocation (the
+    /// observable effect of the `empirical:<file>` cache).
+    pub fn shares_bank(&self, other: &Empirical) -> bool {
+        std::sync::Arc::ptr_eq(&self.bank, &other.bank)
     }
 }
 
@@ -322,13 +374,13 @@ impl Distribution for Empirical {
         self.quantile(rng())
     }
     fn mean(&self) -> f64 {
-        self.mean
+        self.bank.mean
     }
     fn variance(&self) -> f64 {
-        self.variance
+        self.bank.variance
     }
     fn label(&self) -> String {
-        format!("Empirical(n={})", self.sorted.len())
+        format!("Empirical(n={})", self.bank.sorted.len())
     }
 }
 
@@ -759,6 +811,37 @@ mod tests {
         // Malformed sample lines are reported, not panicked on.
         std::fs::write(&path, "1.0\nnot-a-number\n").unwrap();
         assert!(parse_spec(&format!("empirical:{}", path.display())).is_err());
+    }
+
+    /// The satellite acceptance: two `parse_spec` calls on the same
+    /// `empirical:<file>` spec hit the cache (one shared bank, proven by
+    /// pointer identity) and draw identically; rewriting the file with
+    /// different content invalidates the entry.
+    #[test]
+    fn empirical_cache_shares_banks_across_parses() {
+        let dir = std::env::temp_dir().join(format!("tt-dist-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cached-bank.txt");
+        std::fs::write(&path, "1.0\n2.0\n3.0\n4.0\n").unwrap();
+        let spec = format!("empirical:{}", path.display());
+        let a = parse_spec(&spec).unwrap();
+        let b = parse_spec(&spec).unwrap();
+        let (Dist::Empirical(ea), Dist::Empirical(eb)) = (&a, &b) else {
+            panic!("empirical spec must parse to Dist::Empirical");
+        };
+        assert!(ea.shares_bank(eb), "second parse must hit the cache");
+        // Cache hits draw identically (same bank, same RNG stream).
+        let mut ra = Pcg64::seed_from_u64(11);
+        let mut rb = Pcg64::seed_from_u64(11);
+        for _ in 0..500 {
+            assert_eq!(a.draw(&mut ra).to_bits(), b.draw(&mut rb).to_bits());
+        }
+        // A rewrite with different content must not serve the stale bank.
+        std::fs::write(&path, "10.0\n20.0\n30.0\n40.0\n50.0\n").unwrap();
+        let c = parse_spec(&spec).unwrap();
+        let Dist::Empirical(ec) = &c else { unreachable!() };
+        assert!(!ea.shares_bank(ec), "rewritten file must reload");
+        assert_eq!(c.mean(), 30.0);
     }
 
     #[test]

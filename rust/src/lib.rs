@@ -17,6 +17,11 @@
 //! * [`analysis`] — the paper's stochastic network-calculus results in pure
 //!   Rust: (σ,ρ)-envelopes, Theorem 1, Lemma 1, Theorem 2, stability
 //!   regions, and the Sec.-6 overhead-augmented approximations.
+//! * [`approx`] — analytic approximations beyond the paper's homogeneous
+//!   setting: heterogeneous worker speeds via non-i.i.d. rate envelopes,
+//!   first-finish-wins redundancy via replica groups, and the
+//!   replica-launch extension of the Sec.-2.6 overhead model; degenerate
+//!   scenarios delegate bit-for-bit to [`analysis`].
 //! * [`runtime`] — a PJRT client that loads the AOT-compiled JAX/Pallas
 //!   bound-evaluation artifacts (`artifacts/*.hlo.txt`) and executes them
 //!   from the coordinator hot path (Python is never on the request path).
@@ -30,6 +35,7 @@
 //!   the vendored `xla`/`anyhow`/`log`; see DESIGN.md §2).
 
 pub mod analysis;
+pub mod approx;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -440,6 +440,7 @@ impl Calendar {
                     start,
                     end: finish,
                     overhead: rt.overhead,
+                    winner: true,
                 });
             }
             self.push_event(finish, EventKind::TaskFinish { server, slot: rt.slot });

@@ -95,6 +95,7 @@ impl ForkJoinPerServer {
                         // Wall overhead on this worker, clipped for
                         // replicas cancelled before finishing theirs.
                         overhead: (oh / sc.speed(s as u32)).min(freed - start),
+                        winner: j == win,
                     });
                 }
             }
@@ -147,6 +148,7 @@ impl Model for ForkJoinPerServer {
                     start,
                     end: finish,
                     overhead: o,
+                    winner: true,
                 });
             }
         }

@@ -118,6 +118,7 @@ impl Model for ForkJoinSingleQueue {
                         start,
                         end: finish,
                         overhead: o,
+                        winner: true,
                     });
                 }
             }

@@ -78,6 +78,7 @@ impl Model for IdealPartition {
                     end: finish,
                     // All l equisized shares stall on the slowest draw.
                     overhead: max_overhead,
+                    winner: true,
                 });
             }
         }

@@ -86,6 +86,7 @@ impl Model for SplitMerge {
                     start: t_free,
                     end: finish,
                     overhead: o,
+                    winner: true,
                 });
             }
         } else {

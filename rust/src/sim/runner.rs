@@ -239,7 +239,7 @@ mod tests {
                 workers: Some(crate::config::WorkersConfig::Speeds(vec![
                     0.5, 1.0, 1.5, 2.0,
                 ])),
-                redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+                redundancy: Some(crate::config::RedundancyConfig::new(2)),
                 jobs: 1500,
                 warmup: 150,
                 ..base_cfg()
@@ -264,7 +264,7 @@ mod tests {
                 spec: "uniform:0.5:1.5".into(),
                 seed: 3,
             }),
-            redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+            redundancy: Some(crate::config::RedundancyConfig::new(2)),
             jobs: 1000,
             warmup: 100,
             ..base_cfg()

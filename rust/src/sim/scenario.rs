@@ -49,11 +49,16 @@ pub struct TaskOutcome {
     pub redundant_time: f64,
 }
 
-/// A resolved scenario: per-worker speeds plus the replication factor.
+/// A resolved scenario: per-worker speeds plus the replication factor
+/// and its per-replica launch cost.
 #[derive(Clone, Debug)]
 pub struct Scenario {
     speeds: Vec<f64>,
     replicas: usize,
+    /// Per-replica launch overhead (seconds), charged to every replica
+    /// of a redundant dispatch (`replicas > 1` only, so r = 1 scenarios
+    /// stay bit-exact with the homogeneous models).
+    launch_overhead: f64,
     scratch: Vec<Replica>,
 }
 
@@ -69,7 +74,17 @@ impl Scenario {
             (1..=speeds.len()).contains(&replicas),
             "replicas must be in 1..=l"
         );
-        Self { speeds, replicas, scratch: Vec::with_capacity(replicas) }
+        Self { speeds, replicas, launch_overhead: 0.0, scratch: Vec::with_capacity(replicas) }
+    }
+
+    /// Attach a per-replica launch cost (seconds).
+    pub fn with_launch_overhead(mut self, launch_overhead: f64) -> Self {
+        assert!(
+            launch_overhead >= 0.0 && launch_overhead.is_finite(),
+            "launch overhead must be finite and >= 0"
+        );
+        self.launch_overhead = launch_overhead;
+        self
     }
 
     /// Resolve a config's scenario. Returns `Ok(None)` when no scenario
@@ -86,7 +101,7 @@ impl Scenario {
                 speeds.len()
             ));
         }
-        Ok(Some(Self::new(speeds, replicas)))
+        Ok(Some(Self::new(speeds, replicas).with_launch_overhead(cfg.launch_overhead())))
     }
 
     /// Per-worker speed multipliers.
@@ -103,6 +118,11 @@ impl Scenario {
     /// Replication factor r.
     pub fn replicas(&self) -> usize {
         self.replicas
+    }
+
+    /// Per-replica launch overhead (seconds; 0 outside redundancy).
+    pub fn launch_overhead(&self) -> f64 {
+        self.launch_overhead
     }
 
     /// Aggregate service capacity Σ speeds (the ideal-partition divisor).
@@ -130,11 +150,14 @@ impl Scenario {
         trace: &mut TraceLog,
     ) -> TaskOutcome {
         let r = self.replicas.min(heap.len());
+        // Redundant dispatch charges the replica-launch cost to every
+        // replica; r = 1 adds literal 0.0, preserving bit-exactness.
+        let launch = if self.replicas > 1 { self.launch_overhead } else { 0.0 };
         self.scratch.clear();
         for _ in 0..r {
             let (t_free, server) = heap.pop();
             let exec = workload.next_execution();
-            let oh = overhead.sample_task(workload.rng());
+            let oh = overhead.sample_task(workload.rng()) + launch;
             let start = if floor > t_free { floor } else { t_free };
             // Summed term by term so that speed 1.0 reproduces the
             // homogeneous `start + e + o` bit-for-bit (same rounding).
@@ -182,6 +205,7 @@ impl Scenario {
                         // replicas cancelled before finishing theirs.
                         overhead: (rep.overhead / self.speeds[rep.server as usize])
                             .min(freed - rep.start),
+                        winner: i == win,
                     });
                 }
             }
@@ -239,8 +263,33 @@ mod tests {
         // Both servers are free again at 0.25.
         assert_eq!(heap.peek().0, 0.25);
         assert_eq!(heap.max_time(), 0.25);
-        // Both replicas left trace events ending at the winner's finish.
+        // Both replicas left trace events ending at the winner's finish,
+        // and exactly one is flagged as the winner.
         assert_eq!(trace_len(&tr), 2);
+        assert_eq!(tr.events().iter().filter(|e| e.winner).count(), 1);
+        assert!(tr.events().iter().find(|e| e.winner).unwrap().end == 0.25);
+    }
+
+    /// The per-replica launch cost stretches every replica's service
+    /// (scaled by its worker's speed) and is a no-op at r = 1.
+    #[test]
+    fn launch_overhead_charged_per_replica() {
+        // r = 2, speeds (1, 1), exec 1.0, launch 0.5: both replicas
+        // finish at 1.5 (winner ties resolved by scratch order).
+        let mut sc = Scenario::new(vec![1.0, 1.0], 2).with_launch_overhead(0.5);
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert_eq!(out.finish, 1.5);
+        // r = 1: launch cost is ignored (degenerate scenarios bit-exact).
+        let mut sc = Scenario::new(vec![1.0, 1.0], 1).with_launch_overhead(0.5);
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let mut tr = TraceLog::disabled();
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert_eq!(out.finish, 1.0);
     }
 
     fn trace_len(tr: &TraceLog) -> usize {
@@ -277,7 +326,7 @@ mod tests {
         let cfg = SimulationConfig::default();
         assert!(Scenario::from_config(&cfg).unwrap().is_none());
         let cfg = SimulationConfig {
-            redundancy: Some(crate::config::RedundancyConfig { replicas: 2 }),
+            redundancy: Some(crate::config::RedundancyConfig::new(2)),
             ..SimulationConfig::default()
         };
         let sc = Scenario::from_config(&cfg).unwrap().unwrap();

@@ -4,21 +4,32 @@
 //! construction; a job row costs 64 bytes and a task row 36 bytes versus
 //! ~200 bytes of NDJSON, which is what makes million-task traces
 //! practical to keep.
+//!
+//! Schema versioning: the fifth magic byte carries the trace's schema
+//! (1 or 2) and must agree with the `schema` field that follows. A v1
+//! trace is written in the v1 wire layout byte-for-byte; schema 2
+//! appends the scenario shape (meta `replicas` + optional speeds, task
+//! `winner` bytes).
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_VERSION};
+use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2};
 use crate::emulator::{Decoder, Encoder};
 
-/// File magic: `TTRC` + the schema version byte (derived from
-/// [`SCHEMA_VERSION`] so the two cannot drift when the schema is bumped).
-pub const MAGIC: [u8; 5] = [b'T', b'T', b'R', b'C', SCHEMA_VERSION as u8];
+/// File magic prefix shared by every schema version.
+pub const MAGIC_PREFIX: [u8; 4] = [b'T', b'T', b'R', b'C'];
+
+/// The v1 file magic: `TTRC` + schema byte 1 (kept for compatibility
+/// with pre-v2 callers; v2 files carry schema byte 2).
+pub const MAGIC: [u8; 5] = [b'T', b'T', b'R', b'C', SCHEMA_V1 as u8];
 
 /// Serialize a trace to the binary format.
 pub fn to_binary(trace: &Trace) -> Vec<u8> {
     let mut e = Encoder::new();
-    for b in MAGIC {
+    let m = &trace.meta;
+    let v1 = m.schema == SCHEMA_V1;
+    for b in MAGIC_PREFIX {
         e.u8(b);
     }
-    let m = &trace.meta;
+    e.u8(m.schema as u8);
     e.u32(m.schema);
     e.str(&m.source);
     e.str(&m.model);
@@ -29,6 +40,17 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
     e.f64(m.time_scale);
     e.str(&m.interarrival);
     e.str(&m.execution);
+    if !v1 {
+        e.u32(m.replicas);
+        e.f64(m.launch_overhead);
+        match &m.speeds {
+            Some(speeds) => {
+                e.u8(1);
+                e.f64_seq(speeds);
+            }
+            None => e.u8(0),
+        }
+    }
     e.u32(trace.jobs.len() as u32);
     for j in &trace.jobs {
         e.u32(j.index);
@@ -49,6 +71,9 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
         e.f64(t.start);
         e.f64(t.end);
         e.f64(t.overhead);
+        if !v1 {
+            e.u8(u8::from(t.winner));
+        }
     }
     e.finish()
 }
@@ -58,15 +83,17 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
     if !is_binary(bytes) {
         return Err("not a binary tiny-tasks trace (bad magic)".into());
     }
+    let magic_schema = bytes[4] as u32;
     let mut d = Decoder::new(&bytes[MAGIC.len()..]);
     let err = |e: crate::emulator::DecodeError| format!("binary trace: {e}");
     let schema = d.u32().map_err(err)?;
-    if schema != SCHEMA_VERSION {
+    if schema != magic_schema {
         return Err(format!(
-            "unsupported trace schema {schema} (this build reads {SCHEMA_VERSION})"
+            "binary trace: magic version byte {magic_schema} disagrees with schema {schema}"
         ));
     }
-    let meta = TraceMeta {
+    let v1 = schema == SCHEMA_V1;
+    let mut meta = TraceMeta {
         schema,
         source: d.str().map_err(err)?,
         model: d.str().map_err(err)?,
@@ -77,7 +104,17 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
         time_scale: d.f64().map_err(err)?,
         interarrival: d.str().map_err(err)?,
         execution: d.str().map_err(err)?,
+        speeds: None,
+        replicas: 1,
+        launch_overhead: 0.0,
     };
+    if !v1 {
+        meta.replicas = d.u32().map_err(err)?;
+        meta.launch_overhead = d.f64().map_err(err)?;
+        if d.u8().map_err(err)? != 0 {
+            meta.speeds = Some(d.f64_seq().map_err(err)?);
+        }
+    }
     let n_jobs = d.u32().map_err(err)? as usize;
     let mut jobs = Vec::with_capacity(n_jobs.min(1 << 24));
     for _ in 0..n_jobs {
@@ -103,6 +140,7 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
             start: d.f64().map_err(err)?,
             end: d.f64().map_err(err)?,
             overhead: d.f64().map_err(err)?,
+            winner: if v1 { true } else { d.u8().map_err(err)? != 0 },
         });
     }
     if d.remaining() != 0 {
@@ -111,9 +149,12 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
     Ok(Trace { meta, jobs, tasks })
 }
 
-/// True when `bytes` starts with the binary trace magic.
+/// True when `bytes` starts with a binary trace magic of a schema this
+/// build reads.
 pub fn is_binary(bytes: &[u8]) -> bool {
-    bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] == MAGIC
+    bytes.len() >= 5
+        && bytes[..4] == MAGIC_PREFIX
+        && (SCHEMA_V1..=SCHEMA_V2).contains(&(bytes[4] as u32))
 }
 
 #[cfg(test)]
@@ -123,7 +164,7 @@ mod tests {
     fn tiny_trace() -> Trace {
         Trace {
             meta: TraceMeta {
-                schema: SCHEMA_VERSION,
+                schema: SCHEMA_V1,
                 source: "emulator".into(),
                 model: "split-merge".into(),
                 servers: 4,
@@ -133,6 +174,9 @@ mod tests {
                 time_scale: 0.01,
                 interarrival: "exp:0.5".into(),
                 execution: "exp:4.0".into(),
+                speeds: None,
+                replicas: 1,
+                launch_overhead: 0.0,
             },
             jobs: vec![JobRow {
                 index: 2,
@@ -152,8 +196,27 @@ mod tests {
                 start: 1.5,
                 end: 1.75,
                 overhead: 0.003,
+                winner: true,
             }],
         }
+    }
+
+    fn tiny_trace_v2() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.speeds = Some(vec![1.5, 0.5, 1.0, 1.0]);
+        tr.meta.replicas = 2;
+        tr.meta.launch_overhead = 5e-3;
+        tr.tasks.push(TaskRow {
+            job: 2,
+            task: 0,
+            server: 1,
+            start: 1.5,
+            end: 1.75,
+            overhead: 0.001,
+            winner: false,
+        });
+        tr
     }
 
     #[test]
@@ -167,20 +230,54 @@ mod tests {
         assert_eq!(bytes, to_binary(&back));
     }
 
+    /// The v1 wire layout is unchanged: no scenario bytes at all, and the
+    /// historical 5-byte magic still matches.
+    #[test]
+    fn v1_layout_is_stable() {
+        let bytes = to_binary(&tiny_trace());
+        assert_eq!(&bytes[..MAGIC.len()], &MAGIC);
+        // Header + meta (4 + 1 + 4 + (4+8) + (4+11) + 4·3 + 8 + 8 +
+        // (4+7) + (4+7)) + job count/row (4 + 64) + task count/row
+        // (4 + 36): fully fixed for this payload.
+        let expect = 5 + 4 + 12 + 15 + 12 + 16 + 11 + 11 + 4 + 64 + 4 + 36;
+        assert_eq!(bytes.len(), expect);
+    }
+
+    #[test]
+    fn v2_round_trip_is_exact() {
+        let tr = tiny_trace_v2();
+        let bytes = to_binary(&tr);
+        assert!(is_binary(&bytes));
+        assert_eq!(bytes[4], 2);
+        let back = from_binary(&bytes).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(bytes, to_binary(&back));
+        // v2 without speeds (redundancy only) also round-trips.
+        let mut tr = tiny_trace_v2();
+        tr.meta.speeds = None;
+        let back = from_binary(&to_binary(&tr)).unwrap();
+        assert_eq!(tr, back);
+    }
+
     #[test]
     fn truncation_and_garbage_are_errors() {
-        let bytes = to_binary(&tiny_trace());
-        assert!(from_binary(&bytes[..bytes.len() - 3]).is_err());
+        for tr in [tiny_trace(), tiny_trace_v2()] {
+            let bytes = to_binary(&tr);
+            assert!(from_binary(&bytes[..bytes.len() - 3]).is_err());
+            let mut trailing = bytes.clone();
+            trailing.push(0);
+            assert!(from_binary(&trailing).is_err());
+        }
         assert!(from_binary(b"not a trace").is_err());
-        let mut trailing = bytes.clone();
-        trailing.push(0);
-        assert!(from_binary(&trailing).is_err());
     }
 
     #[test]
     fn wrong_schema_byte_rejected() {
         let mut bytes = to_binary(&tiny_trace());
-        bytes[4] = 2; // future magic version
+        bytes[4] = 3; // future magic version: not a readable trace
+        assert!(from_binary(&bytes).is_err());
+        let mut bytes = to_binary(&tiny_trace());
+        bytes[4] = 2; // readable version, but disagrees with the body
         assert!(from_binary(&bytes).is_err());
     }
 }

@@ -22,6 +22,10 @@ pub struct TraceEvent {
     /// overhead draw divided by the worker speed). The observed execution
     /// duration is `end − start − overhead`.
     pub overhead: f64,
+    /// True for the replica whose result counted. Always true outside
+    /// redundancy scenarios; under first-finish-wins dispatch the losing
+    /// replicas record `false` (their rows measure cancelled work).
+    pub winner: bool,
 }
 
 /// Collected trace of task executions.
@@ -98,7 +102,7 @@ mod tests {
     use super::*;
 
     fn ev(job: u32, task: u32, server: u32, start: f64, end: f64) -> TraceEvent {
-        TraceEvent { job, task, server, start, end, overhead: 0.0 }
+        TraceEvent { job, task, server, start, end, overhead: 0.0, winner: true }
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!
 //! Both round-trip bit-exactly (floats travel as shortest round-trip
 //! text or raw IEEE-754 bits; `rust/tests/trace_roundtrip.rs` enforces
-//! it). On top of the format sit the consumers:
+//! it). Schema v2 adds the scenario shape — per-worker speeds and the
+//! replication factor in the meta, replica-winner flags on task rows —
+//! so heterogeneous/redundant runs record instead of being rejected;
+//! scenario-free captures stay on the v1 wire format byte-for-byte.
+//! On top of the format sit the consumers:
 //!
 //! * [`replay`] — feed a recorded trace's arrivals and task sizes back
 //!   through any of the four models (trace-driven simulation);
@@ -32,9 +36,9 @@ mod record;
 mod replay;
 
 pub use self::log::{TraceEvent, TraceLog};
-pub use binary::{from_binary, is_binary, to_binary, MAGIC};
+pub use binary::{from_binary, is_binary, to_binary, MAGIC, MAGIC_PREFIX};
 pub use ndjson::{from_ndjson, to_ndjson};
-pub use record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_VERSION};
+pub use record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_VERSION};
 pub use replay::{replay, ReplayOptions, Replayed};
 
 use std::path::Path;

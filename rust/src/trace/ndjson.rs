@@ -7,20 +7,27 @@
 //! recovers the identical bits; integers (`seed` may exceed 2⁵³) are
 //! parsed as `u64` directly from the token text, never through `f64`.
 //! The parser is hand-rolled (the offline registry has no serde) and
-//! accepts exactly the flat shape this writer emits.
+//! accepts exactly the flat shapes this writer emits (scalar values plus
+//! flat numeric arrays for the v2 `speeds` field).
+//!
+//! Schema versioning: the writer emits the v1 line shapes byte-for-byte
+//! when `meta.schema == 1` — pre-v2 files re-serialize identically — and
+//! appends the scenario fields (`speeds`, `replicas` on the meta row;
+//! `winner` on task rows) only for schema 2.
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta};
+use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1};
 use std::fmt::Write as _;
 
 /// Serialize a trace to NDJSON text.
 pub fn to_ndjson(trace: &Trace) -> String {
     let mut out = String::new();
     let m = &trace.meta;
-    let _ = writeln!(
+    let v1 = m.schema == SCHEMA_V1;
+    let _ = write!(
         out,
         "{{\"type\":\"meta\",\"schema\":{},\"source\":{},\"model\":{},\"servers\":{},\
          \"tasks_per_job\":{},\"warmup\":{},\"seed\":{},\"time_scale\":{},\
-         \"interarrival\":{},\"execution\":{}}}",
+         \"interarrival\":{},\"execution\":{}",
         m.schema,
         quote(&m.source),
         quote(&m.model),
@@ -32,6 +39,21 @@ pub fn to_ndjson(trace: &Trace) -> String {
         quote(&m.interarrival),
         quote(&m.execution),
     );
+    if !v1 {
+        let _ = write!(out, ",\"replicas\":{}", m.replicas);
+        let _ = write!(out, ",\"launch_overhead\":{}", fmt_f64(m.launch_overhead));
+        if let Some(speeds) = &m.speeds {
+            out.push_str(",\"speeds\":[");
+            for (i, &s) in speeds.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&fmt_f64(s));
+            }
+            out.push(']');
+        }
+    }
+    out.push_str("}\n");
     for j in &trace.jobs {
         let _ = writeln!(
             out,
@@ -50,10 +72,10 @@ pub fn to_ndjson(trace: &Trace) -> String {
         );
     }
     for t in &trace.tasks {
-        let _ = writeln!(
+        let _ = write!(
             out,
             "{{\"type\":\"task\",\"job\":{},\"task\":{},\"server\":{},\"start\":{},\
-             \"end\":{},\"overhead\":{}}}",
+             \"end\":{},\"overhead\":{}",
             t.job,
             t.task,
             t.server,
@@ -61,6 +83,10 @@ pub fn to_ndjson(trace: &Trace) -> String {
             fmt_f64(t.end),
             fmt_f64(t.overhead),
         );
+        if !v1 {
+            let _ = write!(out, ",\"winner\":{}", t.winner);
+        }
+        out.push_str("}\n");
     }
     out
 }
@@ -94,6 +120,9 @@ pub fn from_ndjson(text: &str) -> Result<Trace, String> {
                     time_scale: obj.get_f64("time_scale")?,
                     interarrival: obj.get_str("interarrival")?,
                     execution: obj.get_str("execution")?,
+                    speeds: obj.get_f64_array_opt("speeds")?,
+                    replicas: obj.get_u64_or("replicas", 1)? as u32,
+                    launch_overhead: obj.get_f64_or("launch_overhead", 0.0)?,
                 });
             }
             "job" => jobs.push(JobRow {
@@ -114,6 +143,7 @@ pub fn from_ndjson(text: &str) -> Result<Trace, String> {
                 start: obj.get_f64("start")?,
                 end: obj.get_f64("end")?,
                 overhead: obj.get_f64("overhead")?,
+                winner: obj.get_bool_or("winner", true)?,
             }),
             other => return Err(format!("line {}: unknown row type {other:?}", lineno + 1)),
         }
@@ -144,15 +174,19 @@ fn quote(s: &str) -> String {
     out
 }
 
-/// A parsed flat JSON object: raw number tokens and unescaped strings.
+/// A parsed flat JSON object: raw number tokens, unescaped strings, and
+/// flat arrays of raw number tokens.
 struct FlatObject {
     fields: Vec<(String, FlatValue)>,
 }
 
 enum FlatValue {
-    /// Unparsed numeric token text (exactness: parse as the target type).
+    /// Unparsed numeric/boolean token text (exactness: parse as the
+    /// target type).
     Raw(String),
     Str(String),
+    /// Flat array of unparsed numeric tokens (the v2 `speeds` field).
+    Arr(Vec<String>),
 }
 
 impl FlatObject {
@@ -164,10 +198,14 @@ impl FlatObject {
             .ok_or_else(|| format!("missing field {key:?}"))
     }
 
+    fn get_opt(&self, key: &str) -> Option<&FlatValue> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
     fn get_str(&self, key: &str) -> Result<String, String> {
         match self.get(key)? {
             FlatValue::Str(s) => Ok(s.clone()),
-            FlatValue::Raw(_) => Err(format!("field {key:?} is not a string")),
+            _ => Err(format!("field {key:?} is not a string")),
         }
     }
 
@@ -176,7 +214,7 @@ impl FlatObject {
             FlatValue::Raw(t) => t
                 .parse::<f64>()
                 .map_err(|_| format!("field {key:?}: bad number {t:?}")),
-            FlatValue::Str(_) => Err(format!("field {key:?} is not a number")),
+            _ => Err(format!("field {key:?} is not a number")),
         }
     }
 
@@ -185,13 +223,59 @@ impl FlatObject {
             FlatValue::Raw(t) => t
                 .parse::<u64>()
                 .map_err(|_| format!("field {key:?}: bad integer {t:?}")),
-            FlatValue::Str(_) => Err(format!("field {key:?} is not a number")),
+            _ => Err(format!("field {key:?} is not a number")),
+        }
+    }
+
+    /// Optional integer with a default (absent in v1 rows).
+    fn get_u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get_opt(key) {
+            None => Ok(default),
+            Some(_) => self.get_u64(key),
+        }
+    }
+
+    /// Optional float with a default (absent in v1 rows).
+    fn get_f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get_opt(key) {
+            None => Ok(default),
+            Some(_) => self.get_f64(key),
+        }
+    }
+
+    /// Optional boolean with a default (absent in v1 rows).
+    fn get_bool_or(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.get_opt(key) {
+            None => Ok(default),
+            Some(FlatValue::Raw(t)) => match t.as_str() {
+                "true" => Ok(true),
+                "false" => Ok(false),
+                other => Err(format!("field {key:?}: bad boolean {other:?}")),
+            },
+            Some(_) => Err(format!("field {key:?} is not a boolean")),
+        }
+    }
+
+    /// Optional flat numeric array (absent in v1 meta rows).
+    fn get_f64_array_opt(&self, key: &str) -> Result<Option<Vec<f64>>, String> {
+        match self.get_opt(key) {
+            None => Ok(None),
+            Some(FlatValue::Arr(tokens)) => tokens
+                .iter()
+                .map(|t| {
+                    t.parse::<f64>()
+                        .map_err(|_| format!("field {key:?}: bad number {t:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+            Some(_) => Err(format!("field {key:?} is not an array")),
         }
     }
 }
 
-/// Parse one `{"k":v,...}` line with string or numeric values (no
-/// nesting, no arrays — exactly the shape `to_ndjson` writes).
+/// Parse one `{"k":v,...}` line with string, numeric/boolean, or flat
+/// numeric-array values (no nesting — exactly the shapes `to_ndjson`
+/// writes).
 fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
     let bytes = line.as_bytes();
     let mut pos = 0usize;
@@ -240,6 +324,17 @@ fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
         }
         Err("unterminated string".into())
     };
+    let parse_raw = |pos: &mut usize| -> Result<String, String> {
+        let start = *pos;
+        while *pos < bytes.len() && !matches!(bytes[*pos], b',' | b'}' | b']') {
+            *pos += 1;
+        }
+        let token = line[start..*pos].trim();
+        if token.is_empty() {
+            return Err(format!("empty value at byte {start}"));
+        }
+        Ok(token.to_string())
+    };
 
     skip_ws(&mut pos);
     expect(&mut pos, b'{')?;
@@ -256,16 +351,28 @@ fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
         skip_ws(&mut pos);
         let value = if pos < bytes.len() && bytes[pos] == b'"' {
             FlatValue::Str(parse_string(&mut pos)?)
-        } else {
-            let start = pos;
-            while pos < bytes.len() && !matches!(bytes[pos], b',' | b'}') {
+        } else if pos < bytes.len() && bytes[pos] == b'[' {
+            pos += 1;
+            let mut tokens = Vec::new();
+            skip_ws(&mut pos);
+            if pos < bytes.len() && bytes[pos] == b']' {
                 pos += 1;
+            } else {
+                loop {
+                    skip_ws(&mut pos);
+                    tokens.push(parse_raw(&mut pos)?);
+                    skip_ws(&mut pos);
+                    if pos < bytes.len() && bytes[pos] == b',' {
+                        pos += 1;
+                        continue;
+                    }
+                    expect(&mut pos, b']')?;
+                    break;
+                }
             }
-            let token = line[start..pos].trim();
-            if token.is_empty() {
-                return Err(format!("empty value for key {key:?}"));
-            }
-            FlatValue::Raw(token.to_string())
+            FlatValue::Arr(tokens)
+        } else {
+            FlatValue::Raw(parse_raw(&mut pos)?)
         };
         fields.push((key, value));
         skip_ws(&mut pos);
@@ -282,12 +389,12 @@ fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::record::SCHEMA_VERSION;
+    use crate::trace::record::{SCHEMA_V1, SCHEMA_V2};
 
     fn tiny_trace() -> Trace {
         Trace {
             meta: TraceMeta {
-                schema: SCHEMA_VERSION,
+                schema: SCHEMA_V1,
                 source: "sim".into(),
                 model: "single-queue-fork-join".into(),
                 servers: 2,
@@ -297,6 +404,9 @@ mod tests {
                 time_scale: 1.0,
                 interarrival: "exp:0.5".into(),
                 execution: "exp:1.0".into(),
+                speeds: None,
+                replicas: 1,
+                launch_overhead: 0.0,
             },
             jobs: vec![JobRow {
                 index: 0,
@@ -310,10 +420,36 @@ mod tests {
                 redundant_work: 0.0,
             }],
             tasks: vec![
-                TaskRow { job: 0, task: 0, server: 0, start: 0.3, end: 1.7, overhead: 1e-3 },
-                TaskRow { job: 0, task: 1, server: 1, start: 0.3, end: 1.4, overhead: 0.0 },
+                TaskRow {
+                    job: 0,
+                    task: 0,
+                    server: 0,
+                    start: 0.3,
+                    end: 1.7,
+                    overhead: 1e-3,
+                    winner: true,
+                },
+                TaskRow {
+                    job: 0,
+                    task: 1,
+                    server: 1,
+                    start: 0.3,
+                    end: 1.4,
+                    overhead: 0.0,
+                    winner: true,
+                },
             ],
         }
+    }
+
+    fn tiny_trace_v2() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.speeds = Some(vec![1.5, 0.1 + 0.4]); // non-representable bits
+        tr.meta.replicas = 2;
+        tr.meta.launch_overhead = 0.1 + 0.02; // non-representable bits
+        tr.tasks[1].winner = false;
+        tr
     }
 
     #[test]
@@ -332,6 +468,36 @@ mod tests {
         assert_eq!(text, to_ndjson(&back));
     }
 
+    /// v1 lines carry no scenario keys (byte-compat with pre-v2 files);
+    /// parsing fills the defaults.
+    #[test]
+    fn v1_wire_format_has_no_scenario_fields() {
+        let text = to_ndjson(&tiny_trace());
+        assert!(!text.contains("speeds"), "{text}");
+        assert!(!text.contains("replicas"), "{text}");
+        assert!(!text.contains("launch_overhead"), "{text}");
+        assert!(!text.contains("winner"), "{text}");
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(back.meta.speeds, None);
+        assert_eq!(back.meta.replicas, 1);
+        assert_eq!(back.meta.launch_overhead, 0.0);
+        assert!(back.tasks.iter().all(|t| t.winner));
+    }
+
+    #[test]
+    fn v2_round_trip_is_exact() {
+        let tr = tiny_trace_v2();
+        let text = to_ndjson(&tr);
+        assert!(text.contains("\"replicas\":2"), "{text}");
+        assert!(text.contains("\"winner\":false"), "{text}");
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(tr, back);
+        let a = tr.meta.speeds.as_ref().unwrap()[1];
+        let b = back.meta.speeds.unwrap()[1];
+        assert_eq!(a.to_bits(), b.to_bits(), "speed bits must survive");
+        assert_eq!(text, to_ndjson(&tiny_trace_v2()));
+    }
+
     #[test]
     fn missing_meta_is_an_error() {
         assert!(from_ndjson("{\"type\":\"job\"}").is_err());
@@ -346,6 +512,8 @@ mod tests {
             "{\"type\":\"meta\"",
             "not json at all",
             "{\"type\":\"wat\"}",
+            "{\"type\":\"meta\",\"speeds\":[}",
+            "{\"type\":\"meta\",\"speeds\":[1.0,}",
         ] {
             assert!(from_ndjson(bad).is_err(), "{bad:?}");
         }
@@ -357,5 +525,12 @@ mod tests {
         tr.meta.execution = "custom \"spec\" with \\ and \n newline".into();
         let back = from_ndjson(&to_ndjson(&tr)).unwrap();
         assert_eq!(tr.meta.execution, back.meta.execution);
+    }
+
+    #[test]
+    fn empty_speeds_array_parses() {
+        let obj = parse_flat_object("{\"speeds\":[],\"x\":1}").unwrap();
+        assert_eq!(obj.get_f64_array_opt("speeds").unwrap(), Some(vec![]));
+        assert_eq!(obj.get_u64("x").unwrap(), 1);
     }
 }

@@ -1,17 +1,30 @@
-//! The persistent trace schema (v1): one [`TraceMeta`] header, per-job
-//! arrival/departure rows, and per-task rows with phase timing.
+//! The persistent trace schema (v1 + v2): one [`TraceMeta`] header,
+//! per-job arrival/departure rows, and per-task rows with phase timing.
 //!
 //! All times are in the run's native unit — virtual seconds for DES
 //! traces, *emulated* seconds for sparklite traces (wall measurements are
 //! divided by `time_scale` at capture so traces from both sources are
 //! directly comparable and replayable).
+//!
+//! **Schema v2** adds the scenario shape: optional per-worker speeds and
+//! the replication factor in the meta header, plus a per-task
+//! replica-winner flag — so heterogeneous/redundant runs can be recorded
+//! instead of rejected at `trace record`. Capture picks the lowest
+//! schema that carries the run (homogeneous non-redundant runs stay v1),
+//! and v1 files round-trip bit-exactly through both codecs: a v1 trace
+//! is written back in the v1 wire format, byte for byte.
 
 use crate::config::ModelKind;
 use crate::emulator::EmulatorResult;
 use crate::sim::SimResult;
 
-/// Current on-disk schema version (NDJSON and binary carry the same one).
-pub const SCHEMA_VERSION: u32 = 1;
+/// The original scenario-free schema.
+pub const SCHEMA_V1: u32 = 1;
+/// Scenario-aware schema: meta speeds/replicas + task winner flags.
+pub const SCHEMA_V2: u32 = 2;
+/// Highest on-disk schema version this build reads and writes (NDJSON
+/// and binary carry the same one).
+pub const SCHEMA_VERSION: u32 = SCHEMA_V2;
 
 /// Trace header: where the trace came from and under which parameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -37,6 +50,15 @@ pub struct TraceMeta {
     pub interarrival: String,
     /// Task execution-time distribution spec of the producing run.
     pub execution: String,
+    /// Per-worker speed multipliers of the producing run (schema ≥ 2;
+    /// `None` = homogeneous cluster).
+    pub speeds: Option<Vec<f64>>,
+    /// First-finish-wins replicas per task (schema ≥ 2; 1 = none).
+    pub replicas: u32,
+    /// Per-replica launch overhead in seconds (schema ≥ 2; the
+    /// replica-launch cost term of the redundancy-aware overhead model;
+    /// 0 when not configured).
+    pub launch_overhead: f64,
 }
 
 /// One job's arrival/departure row.
@@ -89,6 +111,10 @@ pub struct TaskRow {
     pub end: f64,
     /// Task-service overhead portion of `[start, end]`.
     pub overhead: f64,
+    /// Replica-winner flag (schema ≥ 2): true for the replica whose
+    /// result counted; false rows measure cancelled redundant work.
+    /// Always true in v1 traces.
+    pub winner: bool,
 }
 
 impl TaskRow {
@@ -135,8 +161,16 @@ impl Trace {
             return Err("simulation kept no task trace (RunOptions.trace)".into());
         }
         let cfg = &res.config;
+        // Scenario runs need the v2 fields; scenario-free runs stay v1
+        // so their files remain byte-identical to pre-v2 captures.
+        let speeds = match &cfg.workers {
+            Some(w) => Some(w.resolve(cfg.servers)?),
+            None => None,
+        };
+        let replicas = cfg.replicas() as u32;
+        let schema = if speeds.is_some() || replicas > 1 { SCHEMA_V2 } else { SCHEMA_V1 };
         let meta = TraceMeta {
-            schema: SCHEMA_VERSION,
+            schema,
             source: "sim".into(),
             model: cfg.model.to_string(),
             servers: cfg.servers as u32,
@@ -146,6 +180,12 @@ impl Trace {
             time_scale: 1.0,
             interarrival: cfg.arrival.interarrival.clone(),
             execution: cfg.service.execution.clone(),
+            speeds,
+            replicas,
+            // Ignored by the simulator at r = 1 (and rejected by config
+            // validation there); the clamp keeps a hand-built r = 1
+            // config from producing an unreadable v1 trace.
+            launch_overhead: if replicas > 1 { cfg.launch_overhead() } else { 0.0 },
         };
         let k = cfg.tasks_per_job as u32;
         let jobs = res
@@ -174,6 +214,7 @@ impl Trace {
                 start: e.start,
                 end: e.end,
                 overhead: e.overhead,
+                winner: e.winner,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -189,8 +230,15 @@ impl Trace {
         }
         let cfg = &res.config;
         let scale = cfg.time_scale;
+        // Pinned executor speeds are real measured behavior: record them
+        // in the v2 meta so replay/calibration see the skewed cluster.
+        let speeds = match &cfg.workers {
+            Some(w) => Some(w.resolve(cfg.executors)?),
+            None => None,
+        };
+        let schema = if speeds.is_some() { SCHEMA_V2 } else { SCHEMA_V1 };
         let meta = TraceMeta {
-            schema: SCHEMA_VERSION,
+            schema,
             source: "emulator".into(),
             model: cfg.mode.to_string(),
             servers: cfg.executors as u32,
@@ -200,6 +248,9 @@ impl Trace {
             time_scale: scale,
             interarrival: cfg.interarrival.clone(),
             execution: cfg.execution.clone(),
+            speeds,
+            replicas: 1,
+            launch_overhead: 0.0,
         };
         let jobs = res
             .listener
@@ -228,6 +279,7 @@ impl Trace {
                 start: (t.finished - t.occupancy) / scale,
                 end: t.finished / scale,
                 overhead: t.overhead() / scale,
+                winner: true,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -249,16 +301,20 @@ impl Trace {
         self.measured_jobs().map(|j| j.sojourn()).collect()
     }
 
-    /// All per-task service (execution) durations, in row order — the
-    /// sample bank behind `empirical:<trace-file>` distributions.
+    /// Winning-replica service (execution) durations, in row order — the
+    /// sample bank behind `empirical:<trace-file>` distributions. Rows of
+    /// cancelled replicas (schema v2 redundancy) carry clipped, partial
+    /// timings and are excluded; v1 traces are all winners, so this is
+    /// every row there.
     pub fn task_services(&self) -> Vec<f64> {
-        self.tasks.iter().map(|t| t.service()).collect()
+        self.tasks.iter().filter(|t| t.winner).map(|t| t.service()).collect()
     }
 
-    /// All per-task overhead samples, in row order (the calibration
-    /// pipeline's `O_i` measurements).
+    /// Winning-replica overhead samples, in row order (the calibration
+    /// pipeline's `O_i` measurements; cancelled replicas excluded as in
+    /// [`Trace::task_services`]).
     pub fn task_overheads(&self) -> Vec<f64> {
-        self.tasks.iter().map(|t| t.overhead).collect()
+        self.tasks.iter().filter(|t| t.winner).map(|t| t.overhead).collect()
     }
 
     /// Busy fraction per server over `[t0, t1]` — the Fig.-1/2 idle-time
@@ -286,9 +342,9 @@ impl Trace {
 
     /// Structural validation: schema version, sane meta, finite rows.
     pub fn validate(&self) -> Result<(), String> {
-        if self.meta.schema != SCHEMA_VERSION {
+        if !(SCHEMA_V1..=SCHEMA_VERSION).contains(&self.meta.schema) {
             return Err(format!(
-                "unsupported trace schema {} (this build reads {SCHEMA_VERSION})",
+                "unsupported trace schema {} (this build reads 1..={SCHEMA_VERSION})",
                 self.meta.schema
             ));
         }
@@ -296,6 +352,53 @@ impl Trace {
             return Err("trace meta: servers must be >= 1".into());
         }
         ModelKind::parse(&self.meta.model)?;
+        if self.meta.schema == SCHEMA_V1 {
+            // v1 carries no scenario shape; a v1 trace claiming one would
+            // silently drop it on the v1 wire format.
+            if self.meta.speeds.is_some()
+                || self.meta.replicas != 1
+                || self.meta.launch_overhead != 0.0
+            {
+                return Err(
+                    "schema v1 cannot carry worker speeds, replicas, or launch \
+                     overhead; use schema 2"
+                        .into(),
+                );
+            }
+            if self.tasks.iter().any(|t| !t.winner) {
+                return Err(
+                    "schema v1 cannot carry replica-winner flags; use schema 2".into()
+                );
+            }
+        }
+        if let Some(speeds) = &self.meta.speeds {
+            if speeds.len() != self.meta.servers as usize {
+                return Err(format!(
+                    "trace meta: {} speeds for {} servers",
+                    speeds.len(),
+                    self.meta.servers
+                ));
+            }
+            for &s in speeds {
+                if !(s > 0.0 && s.is_finite()) {
+                    return Err(format!(
+                        "trace meta: speeds must be positive and finite, got {s}"
+                    ));
+                }
+            }
+        }
+        if self.meta.replicas == 0 || self.meta.replicas > self.meta.servers {
+            return Err(format!(
+                "trace meta: replicas ({}) must be in 1..=servers ({})",
+                self.meta.replicas, self.meta.servers
+            ));
+        }
+        if !(self.meta.launch_overhead >= 0.0 && self.meta.launch_overhead.is_finite()) {
+            return Err(format!(
+                "trace meta: launch overhead must be finite and >= 0, got {}",
+                self.meta.launch_overhead
+            ));
+        }
         for j in &self.jobs {
             if !(j.arrival.is_finite() && j.departure.is_finite()) {
                 return Err(format!("job {}: non-finite arrival/departure", j.index));
@@ -353,7 +456,10 @@ mod tests {
     #[test]
     fn capture_from_sim_has_expected_shape() {
         let tr = captured();
-        assert_eq!(tr.meta.schema, SCHEMA_VERSION);
+        // Scenario-free runs stay on the v1 wire format.
+        assert_eq!(tr.meta.schema, SCHEMA_V1);
+        assert_eq!(tr.meta.speeds, None);
+        assert_eq!(tr.meta.replicas, 1);
         assert_eq!(tr.meta.source, "sim");
         assert_eq!(tr.jobs.len(), 50);
         // Task rows include warmup jobs (55 × 4 tasks).
@@ -386,6 +492,77 @@ mod tests {
     fn schema_mismatch_rejected() {
         let mut tr = captured();
         tr.meta.schema = 99;
+        assert!(tr.validate().is_err());
+    }
+
+    /// Scenario runs capture the v2 shape: speeds + replicas in the
+    /// meta, one winner per logical task, losers flagged.
+    #[test]
+    fn scenario_capture_is_v2_with_winners() {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 4,
+            tasks_per_job: 8,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 40,
+            warmup: 4,
+            seed: 5,
+            overhead: None,
+            workers: Some(crate::config::WorkersConfig::Speeds(vec![1.5, 1.5, 0.5, 0.5])),
+            redundancy: Some(crate::config::RedundancyConfig {
+                replicas: 2,
+                launch_overhead: 2e-3,
+            }),
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        let tr = Trace::from_sim(&res).unwrap();
+        tr.validate().unwrap();
+        assert_eq!(tr.meta.schema, SCHEMA_V2);
+        assert_eq!(tr.meta.speeds, Some(vec![1.5, 1.5, 0.5, 0.5]));
+        assert_eq!(tr.meta.replicas, 2);
+        assert_eq!(tr.meta.launch_overhead, 2e-3);
+        // Every logical (job, task) has exactly one winner row.
+        let mut winners = std::collections::BTreeMap::new();
+        for t in &tr.tasks {
+            *winners.entry((t.job, t.task)).or_insert(0u32) += u32::from(t.winner);
+        }
+        assert!(winners.values().all(|&w| w == 1), "one winner per task");
+        assert!(tr.tasks.iter().any(|t| !t.winner), "losers must be recorded");
+        // The sample banks exclude cancelled replicas.
+        assert_eq!(tr.task_services().len(), 44 * 8);
+        // A v1 claim over this payload is rejected.
+        let mut bad = tr.clone();
+        bad.meta.schema = SCHEMA_V1;
+        assert!(bad.validate().is_err());
+    }
+
+    /// Speeds arity/positivity and replica range are validated.
+    #[test]
+    fn scenario_meta_validation() {
+        let mut tr = captured();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.speeds = Some(vec![1.0]); // 2 servers
+        assert!(tr.validate().is_err());
+        let mut tr = captured();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.speeds = Some(vec![1.0, 0.0]);
+        assert!(tr.validate().is_err());
+        let mut tr = captured();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.replicas = 3; // 2 servers
+        assert!(tr.validate().is_err());
+        let mut tr = captured();
+        tr.meta.schema = SCHEMA_V2;
+        tr.meta.launch_overhead = -1.0;
+        assert!(tr.validate().is_err());
+        // v1 cannot claim a launch cost either.
+        let mut tr = captured();
+        tr.meta.launch_overhead = 0.5;
         assert!(tr.validate().is_err());
     }
 

@@ -88,25 +88,45 @@ impl Distribution for ReplaySequence {
     }
 }
 
+/// The replica row currently winning one logical (job, task) during the
+/// task-row scan.
+struct Winning {
+    job: u32,
+    task: u32,
+    end: f64,
+    service: f64,
+    winner: bool,
+}
+
+impl Winning {
+    /// Replica resolution: a flagged winner (schema v2) beats any
+    /// unflagged row; among equal flags the earliest finisher wins (the
+    /// pre-v2 heuristic for foreign traces, ties broken by row order).
+    fn beaten_by(&self, t: &crate::trace::TaskRow) -> bool {
+        (t.winner && !self.winner) || (t.winner == self.winner && t.end < self.end)
+    }
+}
+
 /// Commit the current (job, task) winner's service time to its job's
 /// sequence; warmup jobs' task rows are skipped.
 fn flush_winner(
-    cur: &mut Option<(u32, u32, f64, f64)>,
+    cur: &mut Option<Winning>,
     services: &mut [Vec<f64>],
     jobs: &[&JobRow],
     warmup: u32,
 ) -> Result<(), String> {
-    if let Some((job, task, _, service)) = cur.take() {
-        if job >= warmup {
+    if let Some(w) = cur.take() {
+        if w.job >= warmup {
             let ji = jobs
-                .binary_search_by_key(&job, |j| j.index)
-                .map_err(|_| format!("task row for unknown job {job}"))?;
-            if services[ji].len() != task as usize {
+                .binary_search_by_key(&w.job, |j| j.index)
+                .map_err(|_| format!("task row for unknown job {}", w.job))?;
+            if services[ji].len() != w.task as usize {
                 return Err(format!(
-                    "job {job}: task rows are not contiguous at task {task}"
+                    "job {}: task rows are not contiguous at task {}",
+                    w.job, w.task
                 ));
             }
-            services[ji].push(service);
+            services[ji].push(w.service);
         }
     }
     Ok(())
@@ -115,13 +135,12 @@ fn flush_winner(
 /// Replay `trace`'s measured jobs through a model.
 ///
 /// Task sizes come from the task rows; arrivals come from the job rows.
-/// Every measured job must carry the same task count. Traces recorded by
-/// this crate carry exactly one row per `(job, task)`; if a foreign trace
-/// carries replicas, the earliest-finishing row is used, with ties broken
-/// deterministically by row order — an approximation, since schema v1
-/// cannot distinguish a winner from a replica cancelled at the same
-/// instant (`tiny-tasks trace record` rejects redundancy scenarios for
-/// this reason).
+/// Every measured job must carry the same task count. Redundant traces
+/// (schema v2) carry one row per replica: the recorded winner flag picks
+/// the replica whose service time drives the replay. Foreign traces
+/// without flags fall back to the earliest-finishing row, ties broken
+/// deterministically by row order — an approximation, since a winner is
+/// then indistinguishable from a replica cancelled at the same instant.
 pub fn replay(trace: &Trace, opts: &ReplayOptions) -> Result<Replayed, String> {
     trace.validate()?;
     let model_kind = match opts.model {
@@ -140,23 +159,30 @@ pub fn replay(trace: &Trace, opts: &ReplayOptions) -> Result<Replayed, String> {
     }
 
     // Winning task rows per (job, task): rows are sorted, so scan and
-    // keep the earliest finish among replicas of the same logical task.
+    // resolve replicas of the same logical task — by the recorded winner
+    // flag when the trace carries one (schema v2), by earliest finish
+    // otherwise.
     let warmup = trace.meta.warmup;
     let mut services: Vec<Vec<f64>> = vec![Vec::new(); jobs.len()];
-    let mut cur: Option<(u32, u32, f64, f64)> = None; // (job, task, end, service)
+    let mut cur: Option<Winning> = None;
     for t in &trace.tasks {
         match &mut cur {
-            Some((job, task, end, service)) if *job == t.job && *task == t.task => {
-                // Another replica of the same logical task: winner = the
-                // earliest finisher.
-                if t.end < *end {
-                    *end = t.end;
-                    *service = t.service();
+            Some(w) if w.job == t.job && w.task == t.task => {
+                if w.beaten_by(t) {
+                    w.end = t.end;
+                    w.service = t.service();
+                    w.winner = t.winner;
                 }
             }
             _ => {
                 flush_winner(&mut cur, &mut services, &jobs, warmup)?;
-                cur = Some((t.job, t.task, t.end, t.service()));
+                cur = Some(Winning {
+                    job: t.job,
+                    task: t.task,
+                    end: t.end,
+                    service: t.service(),
+                    winner: t.winner,
+                });
             }
         }
     }

@@ -1,0 +1,153 @@
+//! Degeneracy property tests for the `approx` subsystem: with all
+//! worker speeds exactly 1.0 and replicas = 1, every approximation must
+//! equal the homogeneous `analysis::{stability, theorem1, theorem2}`
+//! output **bit for bit** — the delegation contract that makes `approx`
+//! a strict superset of the paper's analysis rather than a parallel
+//! implementation that could drift.
+//!
+//! Randomized mini-quickcheck style (as in `property_invariants.rs`):
+//! parameters are drawn from a seeded PCG stream, assertions are
+//! `to_bits` equality, not tolerance.
+
+use tiny_tasks::analysis::{self, BoundModel, BoundParams};
+use tiny_tasks::approx::{self, ApproxModel, ClusterSpec};
+use tiny_tasks::config::{ModelKind, OverheadConfig};
+use tiny_tasks::coordinator::advisor;
+use tiny_tasks::rng::{Pcg64, Rng};
+use tiny_tasks::runtime::BoundsEngine;
+
+/// 200 random (l, k) pairs: degenerate stability equals Eq. 20 / the
+/// fork-join constant bitwise.
+#[test]
+fn stability_degenerates_bitwise() {
+    let mut rng = Pcg64::seed_from_u64(41);
+    for _ in 0..200 {
+        let l = 1 + rng.next_below(64) as usize;
+        let k = l * (1 + rng.next_below(40) as usize);
+        let spec = ClusterSpec::homogeneous(l);
+        assert_eq!(
+            approx::sm_max_utilization(&spec, k).to_bits(),
+            analysis::stability::sm_tiny_tasks(l, k).to_bits(),
+            "sm stability diverges at l={l}, k={k}"
+        );
+        assert_eq!(
+            approx::fork_join_max_utilization(&spec).to_bits(),
+            analysis::stability::fork_join().to_bits(),
+            "fj stability diverges at l={l}"
+        );
+    }
+}
+
+/// 60 random parameter sets × 2 models × overhead on/off: degenerate
+/// sojourn and waiting approximations equal the Theorem-1/2 bounds
+/// bitwise, including infeasibility (None) agreement.
+#[test]
+fn bounds_degenerate_bitwise() {
+    let mut rng = Pcg64::seed_from_u64(42);
+    for round in 0..60 {
+        let l = 1 + rng.next_below(32) as usize;
+        let k = l * (1 + rng.next_below(30) as usize);
+        let lambda = 0.05 + rng.next_f64_open();
+        // Mix stable and overloaded regimes: μ from well below to well
+        // above the k·λ/l stability edge.
+        let mu = (k as f64 / l as f64) * (0.2 + 2.0 * rng.next_f64_open());
+        let epsilon = 10f64.powi(-(1 + rng.next_below(6) as i32));
+        let overhead = if round % 2 == 0 { None } else { Some(OverheadConfig::paper()) };
+        let spec = ClusterSpec::homogeneous(l);
+        let p = approx::ApproxParams { k, lambda, mu, epsilon, overhead };
+        let bp = BoundParams { l, k, lambda, mu, epsilon, overhead };
+        for (am, bm) in [
+            (ApproxModel::ForkJoin, BoundModel::ForkJoinTiny),
+            (ApproxModel::SplitMerge, BoundModel::SplitMergeTiny),
+        ] {
+            assert_eq!(
+                approx::sojourn_quantile(am, &spec, &p).map(f64::to_bits),
+                analysis::sojourn_bound(bm, &bp).map(f64::to_bits),
+                "{am:?} sojourn diverges at l={l} k={k} lambda={lambda} mu={mu} \
+                 eps={epsilon} overhead={}",
+                overhead.is_some()
+            );
+            assert_eq!(
+                approx::waiting_quantile(am, &spec, &p).map(f64::to_bits),
+                analysis::waiting_bound(bm, &bp).map(f64::to_bits),
+                "{am:?} waiting diverges at l={l} k={k} lambda={lambda} mu={mu}"
+            );
+        }
+    }
+}
+
+/// The advisor pick: the degenerate analytic scenario advisor returns
+/// the homogeneous advisor's curve and recommendation bitwise, for both
+/// tiny-tasks models and several cluster sizes.
+#[test]
+fn advisor_pick_degenerates_bitwise() {
+    let engine = BoundsEngine::native();
+    for l in [5usize, 16, 50] {
+        for model in [ModelKind::ForkJoinSingleQueue, ModelKind::SplitMerge] {
+            let reference = advisor::recommend(
+                &engine,
+                model,
+                l,
+                0.5,
+                l as f64,
+                0.01,
+                OverheadConfig::paper(),
+            )
+            .unwrap();
+            let approx_rec = advisor::recommend_approx(
+                model,
+                &ClusterSpec::homogeneous(l),
+                0.5,
+                l as f64,
+                0.01,
+                OverheadConfig::paper(),
+                200.0,
+            )
+            .unwrap();
+            assert_eq!(reference.curve.len(), approx_rec.curve.len(), "{model} l={l}");
+            for ((ka, ta), (kb, tb)) in reference.curve.iter().zip(&approx_rec.curve) {
+                assert_eq!(ka, kb);
+                assert_eq!(
+                    ta.map(f64::to_bits),
+                    tb.map(f64::to_bits),
+                    "{model} l={l} k={ka}: advisor curve diverges"
+                );
+            }
+            assert_eq!(
+                reference.best.map(|(k, t)| (k, t.to_bits())),
+                approx_rec.best.map(|(k, t)| (k, t.to_bits())),
+                "{model} l={l}: advisor pick diverges"
+            );
+        }
+    }
+}
+
+/// Guard against silent delegation-everywhere: non-degenerate scenarios
+/// must actually change the answer (the approx layer is not a no-op).
+#[test]
+fn non_degenerate_scenarios_change_answers() {
+    let l = 10usize;
+    let k = 80usize;
+    let mu = k as f64 / l as f64;
+    let p = approx::ApproxParams {
+        k,
+        lambda: 0.4,
+        mu,
+        epsilon: 0.01,
+        overhead: Some(OverheadConfig::paper()),
+    };
+    let flat = ClusterSpec::homogeneous(l);
+    let mut speeds = vec![1.5; l / 2];
+    speeds.extend(vec![0.5; l / 2]);
+    let skewed = ClusterSpec::new(speeds, 1, 0.0).unwrap();
+    for model in [ApproxModel::ForkJoin, ApproxModel::SplitMerge] {
+        let a = approx::sojourn_quantile(model, &flat, &p).unwrap();
+        let b = approx::sojourn_quantile(model, &skewed, &p).unwrap();
+        assert_ne!(a.to_bits(), b.to_bits(), "{model:?}: skew must change the bound");
+        assert!(b > a, "{model:?}: skew at equal capacity must hurt: {b} !> {a}");
+    }
+    assert!(
+        approx::sm_max_utilization(&skewed, k) < approx::sm_max_utilization(&flat, k),
+        "skew must shrink the split-merge stability region"
+    );
+}

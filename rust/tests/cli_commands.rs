@@ -97,15 +97,73 @@ fn simulate_rejects_contradictory_speed_flags() {
 }
 
 #[test]
-fn advisor_simulated_for_skewed_cluster() {
+fn advisor_analytic_for_skewed_cluster() {
+    // Scenario flags route through the approx engine by default.
+    assert_eq!(
+        run(&[
+            "advisor", "--servers", "4", "--lambda", "0.4", "--workload", "4",
+            "--epsilon", "0.05", "--speed-dist", "uniform:0.5:1.5", "--redundancy", "2",
+        ]),
+        0
+    );
+}
+
+#[test]
+fn advisor_simulated_fallback_for_skewed_cluster() {
     assert_eq!(
         run(&[
             "advisor", "--servers", "4", "--lambda", "0.4", "--workload", "4",
             "--epsilon", "0.05", "--jobs", "1500", "--kappa-max", "8",
-            "--speed-dist", "uniform:0.5:1.5", "--redundancy", "2",
+            "--speed-dist", "uniform:0.5:1.5", "--redundancy", "2", "--simulate=true",
         ]),
         0
     );
+}
+
+/// The `approx` command: pure analytics, CSV output, and the
+/// cross-validation gate (generous window — the tight window is the CI
+/// smoke job's business; this verifies the wiring and exit codes).
+#[test]
+fn approx_command_and_check_gate() {
+    let dir = std::env::temp_dir().join(format!("tt-approx-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv = dir.join("approx.csv");
+    assert_eq!(
+        run(&[
+            "approx", "--servers", "4", "--lambda", "0.4", "--workload", "4",
+            "--speeds", "1.5,1.5,0.5,0.5", "--no-sim=true", "--out",
+            csv.to_str().unwrap(),
+        ]),
+        0
+    );
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.starts_with("k,mu,analytic_q,sim_q"), "{body}");
+    assert!(body.lines().count() > 3);
+    // With the sweep: the tracking gate passes inside a generous window.
+    assert_eq!(
+        run(&[
+            "approx", "--servers", "4", "--lambda", "0.4", "--workload", "4",
+            "--speeds", "1.5,1.5,0.5,0.5", "--redundancy", "2", "--k-list", "4,8,16",
+            "--jobs", "1500", "--check=true", "--floor", "0.4", "--tolerance", "25",
+        ]),
+        0
+    );
+    // --check without a sweep is a usage error.
+    let args = Args::parse(
+        ["approx", "--servers", "4", "--no-sim=true", "--check=true"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert!(dispatch(&args).is_err());
+    // fjps has no heterogeneous approximation.
+    let args = Args::parse(
+        ["approx", "--servers", "4", "--model", "fjps"]
+            .iter()
+            .map(|s| s.to_string()),
+    )
+    .unwrap();
+    assert!(dispatch(&args).is_err());
 }
 
 #[test]
@@ -206,14 +264,42 @@ fn trace_subcommand_errors_are_clean() {
         vec!["trace", "replay"],
         vec!["trace", "convert", "--in", "/no/such/trace.ndjson"],
         vec!["calibrate", "--from-trace", "/no/such/trace.ndjson"],
-        // Schema v1 cannot represent scenario shape; recording one must
-        // be rejected, not silently captured as homogeneous.
-        vec!["trace", "record", "--source", "sim", "--redundancy", "2"],
-        vec!["trace", "record", "--source", "sim", "--speeds", "1.0,0.5"],
     ] {
         let args = Args::parse(argv.iter().map(|s| s.to_string())).unwrap();
         assert!(dispatch(&args).is_err(), "{argv:?} should error");
     }
+}
+
+/// Scenario runs record as schema v2 through the CLI and flow through
+/// summarize, convert, replay, and calibrate — the workflows that used
+/// to reject `--speeds`/`--redundancy` at `trace record`.
+#[test]
+fn trace_record_scenario_as_v2() {
+    let dir = std::env::temp_dir().join(format!("tt-cli-trace-v2-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let nd = dir.join("v2.ndjson");
+    let bin = dir.join("v2.bin");
+    assert_eq!(
+        run(&[
+            "trace", "record", "--source", "sim", "--model", "fj", "--servers", "4",
+            "--k", "8", "--lambda", "0.4", "--jobs", "300", "--warmup", "30",
+            "--overhead", "--speeds", "1.5,1.5,0.5,0.5", "--redundancy", "2",
+            "--replica-launch", "0.001", "--out", nd.to_str().unwrap(),
+        ]),
+        0
+    );
+    let tr = tiny_tasks::trace::Trace::read_file(&nd).unwrap();
+    assert_eq!(tr.meta.schema, tiny_tasks::trace::SCHEMA_V2);
+    assert_eq!(tr.meta.replicas, 2);
+    assert_eq!(tr.meta.speeds, Some(vec![1.5, 1.5, 0.5, 0.5]));
+    assert_eq!(tr.meta.launch_overhead, 0.001);
+    assert_eq!(run(&["trace", "summarize", "--in", nd.to_str().unwrap()]), 0);
+    assert_eq!(
+        run(&["trace", "convert", "--in", nd.to_str().unwrap(), "--out", bin.to_str().unwrap()]),
+        0
+    );
+    assert_eq!(run(&["trace", "replay", "--in", bin.to_str().unwrap()]), 0);
+    assert_eq!(run(&["calibrate", "--from-trace", bin.to_str().unwrap()]), 0);
 }
 
 #[test]

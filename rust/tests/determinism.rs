@@ -85,7 +85,7 @@ fn scenario_sweep_rows_identical_across_pool_sizes() {
                     spec: "uniform:0.5:1.5".into(),
                     seed: 5,
                 });
-                p.config.redundancy = Some(RedundancyConfig { replicas: 2 });
+                p.config.redundancy = Some(RedundancyConfig::new(2));
                 p
             })
             .collect()

@@ -109,6 +109,37 @@ fn fig1_2_traces_written() {
     assert_eq!(fig2.len(), 4 * 1500, "fig2: one row per task");
 }
 
+/// The hetero-approx acceptance: the analytic approximation tracks the
+/// simulated sojourn quantiles across two skewed-speed configurations
+/// and one redundancy configuration.
+#[test]
+fn hetero_approx_panel_tracks_simulation() {
+    let dir = tmp_dir("hetapprox");
+    let engine = BoundsEngine::auto();
+    let pool = ThreadPool::new(2);
+    let ctx = FigureCtx { out_dir: &dir, scale: Scale::Quick, seed: 1, engine: &engine, pool: &pool };
+    figures::fig_hetero_approx(&ctx).unwrap();
+    // Columns: config (label, NaN to the f64 reader), skew, replicas, k,
+    // analytic_q, sim_q.
+    let rows = read_csv(&dir.join("hetero_approx_panel.csv"));
+    assert_eq!(rows.len(), 3 * 5, "3 configs x 5 ks at quick scale");
+    let mut compared = 0usize;
+    for r in &rows {
+        let (analytic, sim) = (r[4], r[5]);
+        assert!(sim.is_finite() && sim > 0.0, "bad simulated quantile: {r:?}");
+        if analytic.is_nan() {
+            continue; // approximation infeasible at this point
+        }
+        compared += 1;
+        let ratio = analytic / sim;
+        assert!(
+            (0.4..=25.0).contains(&ratio),
+            "approximation far from simulation (ratio {ratio}): {r:?}"
+        );
+    }
+    assert!(compared >= 12, "too few comparable points: {compared}");
+}
+
 #[test]
 fn unknown_figure_id_is_an_error() {
     let dir = tmp_dir("bad");

@@ -50,7 +50,7 @@ fn unit_speeds_r1_is_bitwise_homogeneous() {
         let homogeneous = base(model, l, k);
         let degenerate = SimulationConfig {
             workers: Some(WorkersConfig::Speeds(vec![1.0; l])),
-            redundancy: Some(RedundancyConfig { replicas: 1 }),
+            redundancy: Some(RedundancyConfig::new(1)),
             ..base(model, l, k)
         };
         let (qa, ma, wa) = quantiles(&homogeneous);
@@ -69,7 +69,7 @@ fn unit_speeds_r1_is_bitwise_homogeneous_no_overhead() {
         homogeneous.overhead = None;
         let degenerate = SimulationConfig {
             workers: Some(WorkersConfig::Speeds(vec![1.0; 4])),
-            redundancy: Some(RedundancyConfig { replicas: 1 }),
+            redundancy: Some(RedundancyConfig::new(1)),
             ..homogeneous.clone()
         };
         let (qa, ma, _) = quantiles(&homogeneous);
@@ -94,7 +94,7 @@ fn no_fast_exp_env_matches_fast_path_bitwise() {
     let homogeneous = base(ModelKind::ForkJoinSingleQueue, 5, 25);
     let scenario = SimulationConfig {
         workers: Some(WorkersConfig::Speeds(vec![1.5, 1.5, 1.0, 0.5, 0.5])),
-        redundancy: Some(RedundancyConfig { replicas: 2 }),
+        redundancy: Some(RedundancyConfig::new(2)),
         ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
     };
     assert!(std::env::var_os("TT_NO_FAST_EXP").is_none(), "leaked env var");

@@ -11,7 +11,7 @@ use tiny_tasks::sim::{self, RunOptions};
 use tiny_tasks::stats::{pp_distance, Ecdf};
 use tiny_tasks::trace::{
     from_binary, from_ndjson, replay, to_binary, to_ndjson, JobRow, ReplayOptions, TaskRow,
-    Trace, TraceFormat, TraceMeta, SCHEMA_VERSION,
+    Trace, TraceFormat, TraceMeta, SCHEMA_V1, SCHEMA_V2,
 };
 
 fn tmp_dir() -> std::path::PathBuf {
@@ -21,8 +21,12 @@ fn tmp_dir() -> std::path::PathBuf {
 }
 
 /// A randomized (but valid) trace exercising awkward float values.
+/// Even seeds build v1 traces; odd seeds build v2 traces with random
+/// scenario fields (speeds, replicas, loser rows), so the codec
+/// property test covers both wire formats.
 fn random_trace(seed: u64) -> Trace {
     let mut rng = Pcg64::seed_from_u64(seed);
+    let v2 = seed % 2 == 1;
     let n_jobs = 1 + (rng.next_below(40) as usize);
     let k = 1 + (rng.next_below(6) as u32);
     let mut jobs = Vec::new();
@@ -53,12 +57,20 @@ fn random_trace(seed: u64) -> Trace {
                 start,
                 end: start + dur,
                 overhead: dur * rng.next_f64() * 0.1,
+                // v2 rows may be cancelled replicas; v1 rows must all be
+                // winners (enforced by Trace::validate).
+                winner: !v2 || rng.next_below(4) != 0,
             });
         }
     }
+    let speeds = if v2 && rng.next_below(2) == 0 {
+        Some((0..8).map(|_| 0.25 + rng.next_f64_open() * 2.0).collect())
+    } else {
+        None
+    };
     Trace {
         meta: TraceMeta {
-            schema: SCHEMA_VERSION,
+            schema: if v2 { SCHEMA_V2 } else { SCHEMA_V1 },
             source: "sim".into(),
             model: "single-queue-fork-join".into(),
             servers: 8,
@@ -68,6 +80,9 @@ fn random_trace(seed: u64) -> Trace {
             time_scale: 1.0,
             interarrival: "exp:0.5".into(),
             execution: "exp:1.0".into(),
+            speeds,
+            replicas: if v2 { 1 + rng.next_below(3) as u32 } else { 1 },
+            launch_overhead: if v2 { rng.next_f64() * 1e-2 } else { 0.0 },
         },
         jobs,
         tasks,
@@ -88,6 +103,7 @@ fn assert_bitwise_eq(a: &Trace, b: &Trace, codec: &str) {
         assert_eq!(x.start.to_bits(), y.start.to_bits(), "{codec}: task start bits");
         assert_eq!(x.end.to_bits(), y.end.to_bits(), "{codec}");
         assert_eq!(x.overhead.to_bits(), y.overhead.to_bits(), "{codec}");
+        assert_eq!(x.winner, y.winner, "{codec}: winner flag");
     }
 }
 
@@ -162,6 +178,64 @@ fn record_write_read_replay_is_bitwise_deterministic() {
         assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
         assert_eq!(x.workload.to_bits(), z.workload.to_bits());
     }
+}
+
+/// Schema v2 end to end: a skewed + redundant run records its scenario
+/// shape, survives both codecs bitwise, replays off the winner rows, and
+/// keeps cancelled replicas out of the sample banks.
+#[test]
+fn scenario_trace_records_as_v2_and_replays() {
+    let cfg = SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: 4,
+        tasks_per_job: 8,
+        arrival: tiny_tasks::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+        service: tiny_tasks::config::ServiceConfig { execution: "exp:2.0".into() },
+        jobs: 300,
+        warmup: 0,
+        seed: 9,
+        overhead: Some(OverheadConfig::paper()),
+        workers: Some(tiny_tasks::config::WorkersConfig::Speeds(vec![1.5, 1.5, 0.5, 0.5])),
+        redundancy: Some(tiny_tasks::config::RedundancyConfig {
+            replicas: 2,
+            launch_overhead: 1e-3,
+        }),
+    };
+    let res = sim::run(
+        &cfg,
+        RunOptions { record_jobs: true, trace: true, ..Default::default() },
+    )
+    .unwrap();
+    let tr = Trace::from_sim(&res).unwrap();
+    assert_eq!(tr.meta.schema, SCHEMA_V2);
+    assert_eq!(tr.meta.speeds, Some(vec![1.5, 1.5, 0.5, 0.5]));
+    assert_eq!(tr.meta.replicas, 2);
+    assert_eq!(tr.meta.launch_overhead, 1e-3);
+    assert!(tr.tasks.iter().any(|t| !t.winner), "losers must be recorded");
+    // Winner-only sample banks: one service sample per logical task.
+    assert_eq!(tr.task_services().len(), 300 * 8);
+
+    let dir = tmp_dir();
+    for (name, fmt) in [("v2.ndjson", None), ("v2.bin", Some(TraceFormat::Binary))] {
+        let path = dir.join(name);
+        tr.write_file(&path, fmt).unwrap();
+        let back = Trace::read_file(&path).unwrap();
+        assert_bitwise_eq(&tr, &back, name);
+        assert_eq!(back.meta.speeds, tr.meta.speeds);
+    }
+
+    // Replay resolves each logical task to its recorded winner: the
+    // replayed mean sojourn lands within a scenario-sized factor of the
+    // recorded one (the replay model itself is homogeneous).
+    let rep = replay(&tr, &ReplayOptions::default()).unwrap();
+    assert_eq!(rep.jobs.len(), 300);
+    assert_eq!(rep.tasks_per_job, 8);
+    let rep_mean = rep.sojourns().iter().sum::<f64>() / 300.0;
+    let rec_mean = tr.sojourns().iter().sum::<f64>() / 300.0;
+    assert!(
+        rep_mean > 0.2 * rec_mean && rep_mean < 5.0 * rec_mean,
+        "replayed mean {rep_mean} far from recorded {rec_mean}"
+    );
 }
 
 /// `Dist::Empirical` inverse-transform draws agree with `stats::Ecdf`
