@@ -114,21 +114,27 @@ COMMANDS:
                   --redundancy R   (r replicas per task, first-finish-wins)
                   [--replica-launch S]  (per-replica launch cost, seconds)
                   --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
+                  --threads N      (split the run into N replication shards
+                  on N workers; merged Welford/P2 stats. Deterministic per
+                  (seed, shard count); --shards M decouples the shard count
+                  from the worker count -- thread count never changes results)
     approx      Analytic approximation for skewed/redundant clusters,
                 cross-validated against a simulation sweep (CSV per k)
                   --servers L --lambda RATE --workload SECONDS --epsilon E
                   --model sm|fj  [--k-list 10,20,..| --kappa-max F]
                   --speeds .. | --speed-dist ..  --redundancy R
                   [--replica-launch S] [--jobs N] [--out FILE.csv]
+                  [--threads N]  (sweep pool size; default: all cores)
                   [--no-sim]  (pure analytics, microseconds)
                   [--check [--floor F] [--tolerance F]]  (exit 1 unless
                   analytic/sim lands in [floor, tolerance] at every
                   stable k -- the CI smoke gate)
     bench       Run the deterministic perf suite and write BENCH.json
-                  [--out FILE] [--fast] [--seed S]
+                  [--out FILE] [--fast] [--seed S] [--threads N]
                   [--baseline BENCH_BASELINE.json [--max-regression F]]
-                  jobs/sec + tasks/sec per model x k, both DES engines;
-                  with --baseline, exit 1 when the headline row regresses
+                  jobs/sec + tasks/sec per model x k, both DES engines,
+                  plus the sharded multicore headline row (headline-mt);
+                  with --baseline, exit 1 when a gated row regresses
     emulate     Run the sparklite cluster emulator
                   --executors L --k K --mode sm|fj --jobs N
                   --time-scale S --inject-overhead
@@ -156,7 +162,7 @@ COMMANDS:
     figure      Regenerate a paper figure's data as CSV
                   fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|
                   hetero|hetero-approx|all
-                  [--out DIR] [--scale quick|paper]
+                  [--out DIR] [--scale quick|paper] [--threads N]
     calibrate   Fit the 4-parameter overhead model (Sec. 2.6)
                   [--jobs N] [--k K] [--executors L]   (live sparklite)
                   --from-trace FILE                    (recorded trace)
@@ -165,6 +171,7 @@ COMMANDS:
                   with --speeds/--speed-dist/--redundancy the advice comes
                   from the approx analytic engine (microseconds); add
                   --simulate to fall back to simulation sweeps
+                  ([--threads N] sizes the sweep pool)
     selfcheck   Run artifact-vs-rust cross validation
     help        Show this help
 

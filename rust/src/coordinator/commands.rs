@@ -65,6 +65,14 @@ fn scenario_from_args(
     Ok((workers, redundancy))
 }
 
+/// Sweep pool sized by `--threads` (absent or 0 = machine default).
+fn pool_from_args(args: &Args) -> Result<ThreadPool> {
+    Ok(match args.get_usize("threads", 0).map_err(e)? {
+        0 => ThreadPool::with_default_size(),
+        n => ThreadPool::new(n),
+    })
+}
+
 /// `tiny-tasks simulate` — one DES run, statistics to stdout.
 pub fn cmd_simulate(args: &Args) -> Result<i32> {
     // `--config file.toml` loads the [simulation] section; flags override
@@ -110,6 +118,11 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         // O(1)-memory mode for huge --jobs: P² quantiles on the default
         // grid (covers every quantile printed below).
         streaming: args.get_bool("streaming"),
+        // Replication sharding: `--threads N` splits the run into N
+        // shards on N workers; `--shards M` decouples the shard count
+        // (the sample stream) from the worker count (never observable).
+        threads: args.get_usize("threads", 1).map_err(e)?,
+        shards: args.get_usize("shards", 0).map_err(e)?,
         ..Default::default()
     };
     let mut res = sim::run(&cfg, opts).map_err(e)?;
@@ -127,6 +140,14 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         );
     }
     println!("jobs             {} (+{} warmup)", cfg.jobs, cfg.warmup);
+    if opts.shards > 1 || opts.threads > 1 {
+        let shards = if opts.shards == 0 { opts.threads.max(1) } else { opts.shards };
+        println!(
+            "shards           {} on {} thread(s) (per-shard seeds + warmup)",
+            shards.min(cfg.jobs),
+            opts.threads.max(1)
+        );
+    }
     println!("mean sojourn     {:.4} s", res.sojourn_summary.mean());
     for q in [0.5, 0.9, 0.99, 0.999] {
         println!("sojourn p{:<6} {:.4} s", q * 100.0, res.sojourn_quantile(q));
@@ -295,7 +316,7 @@ pub fn cmd_figure(args: &Args) -> Result<i32> {
     std::fs::create_dir_all(&out_dir)?;
     let scale = Scale::parse(&args.get_or("scale", "quick")).map_err(e)?;
     let engine = BoundsEngine::auto();
-    let pool = ThreadPool::with_default_size();
+    let pool = pool_from_args(args)?;
     let ctx = FigureCtx {
         out_dir: &out_dir,
         scale,
@@ -419,7 +440,7 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
                 workers,
                 redundancy,
             };
-            let pool = ThreadPool::with_default_size();
+            let pool = pool_from_args(args)?;
             let ks = advisor::k_grid(l, kappa_max);
             println!("engine: simulation sweep (heterogeneous/redundant scenario)");
             advisor::recommend_simulated(&pool, &base, workload, epsilon, &ks).map_err(e)?
@@ -503,8 +524,9 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
             workers,
             redundancy,
             &ks,
-        );
-        let pool = ThreadPool::with_default_size();
+        )
+        .map_err(e)?;
+        let pool = pool_from_args(args)?;
         Some(
             run_sweep(&pool, points, 1.0 - epsilon, args.get_u64("seed", 1).map_err(e)?)
                 .map_err(e)?,
@@ -814,6 +836,50 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         rows.push(BenchRow::new(name, "calendar", "fj", l, k, jobs, r));
     }
 
+    // Multithreaded headline: the same workload split into replication
+    // shards (per-shard seed/engine/workload, merged totals) across the
+    // thread pool — the sharded-run execution model, measured end to
+    // end. `--threads` overrides the worker count (default: machine
+    // parallelism, clamped to the headline's useful range).
+    {
+        use crate::rng::spawn_seeds;
+        let (l, k) = (10usize, 20usize);
+        let jobs = if fast { 20_000 } else { 500_000 };
+        let threads = match args.get_usize("threads", 0).map_err(e)? {
+            0 => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 8),
+            n => n.max(1),
+        };
+        let name = "calendar/fj/l10/k20/headline-mt";
+        let pool = ThreadPool::new(threads);
+        let mu = k as f64 / l as f64;
+        let (base, rem) = (jobs / threads, jobs % threads);
+        let work: Vec<(usize, u64)> = spawn_seeds(seed, threads)
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| (base + usize::from(i < rem), s))
+            .collect();
+        let r = bencher.bench(name, || {
+            pool.map(work.clone(), move |(share, s)| {
+                let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, l, vec![k as u32]);
+                let oh = OverheadModel::none();
+                let mut w = Workload::new(
+                    Exponential::new(0.5).into(),
+                    Exponential::new(mu).into(),
+                    s,
+                );
+                let mut tr = TraceLog::disabled();
+                cal.run(share, &mut w, &oh, &mut tr).len()
+            })
+            .expect("bench shard panicked")
+            .into_iter()
+            .sum::<usize>()
+        });
+        rows.push(BenchRow::new(name, "calendar", "fj-mt", l, k, jobs, r));
+    }
+
     bencher.finish();
     let json = bench_json(fast, seed, &rows);
     std::fs::write(&out_path, &json)?;
@@ -825,21 +891,37 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
     // calendar hot path, not noise).
     if let Some(baseline_path) = args.get("baseline") {
         let factor = args.get_f64("max-regression", 2.0).map_err(e)?;
-        let headline = "calendar/fj/l10/k20/headline";
         let baseline_json = std::fs::read_to_string(baseline_path)?;
-        let Some(base) = extract_jobs_per_sec(&baseline_json, headline) else {
-            bail!("{baseline_path}: no jobs_per_sec entry for {headline:?}");
-        };
-        let Some(cur) = extract_jobs_per_sec(&json, headline) else {
-            bail!("BENCH.json: no jobs_per_sec entry for {headline:?}");
-        };
-        println!(
-            "bench gate: {headline} {cur:.0} jobs/s vs baseline {base:.0} \
-             (floor {:.0} = baseline/{factor})",
-            base / factor
-        );
-        if cur * factor < base {
-            println!("bench gate: FAIL — headline regressed by more than {factor}x");
+        // The single-core headline row is mandatory; the multithreaded
+        // row gates once the baseline has ratcheted to include it (so an
+        // old baseline file still works).
+        let gated: &[(&str, bool)] = &[
+            ("calendar/fj/l10/k20/headline", true),
+            ("calendar/fj/l10/k20/headline-mt", false),
+        ];
+        let mut failed = false;
+        for &(row, required) in gated {
+            let base = match extract_jobs_per_sec(&baseline_json, row) {
+                Some(b) => b,
+                None if required => {
+                    bail!("{baseline_path}: no jobs_per_sec entry for {row:?}")
+                }
+                None => continue,
+            };
+            let Some(cur) = extract_jobs_per_sec(&json, row) else {
+                bail!("BENCH.json: no jobs_per_sec entry for {row:?}");
+            };
+            println!(
+                "bench gate: {row} {cur:.0} jobs/s vs baseline {base:.0} \
+                 (floor {:.0} = baseline/{factor})",
+                base / factor
+            );
+            if cur * factor < base {
+                println!("bench gate: FAIL — {row} regressed by more than {factor}x");
+                failed = true;
+            }
+        }
+        if failed {
             return Ok(1);
         }
         println!("bench gate: OK");

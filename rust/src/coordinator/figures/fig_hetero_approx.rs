@@ -62,7 +62,8 @@ pub fn fig_hetero_approx(ctx: &FigureCtx) -> Result<()> {
                 None
             },
             &ks,
-        );
+        )
+        .map_err(anyhow::Error::msg)?;
         let sims = run_sweep(ctx.pool, points, 1.0 - eps, ctx.seed ^ (0xa99 + cfg_i as u64))
             .map_err(anyhow::Error::msg)?;
         for (pt, sim) in analytic.iter().zip(&sims) {

@@ -55,6 +55,9 @@ pub struct SweepOptions {
 /// cross-validation surfaces (`tiny-tasks approx`, `figure
 /// hetero-approx`) so the analytic and simulated curves stay comparable
 /// point by point.
+///
+/// `mean_workload` and `lambda` arrive straight from CLI flags, so bad
+/// values are `Err`s (surfaced as usage errors), not panics.
 #[allow(clippy::too_many_arguments)]
 pub fn constant_workload_points(
     model: ModelKind,
@@ -66,9 +69,16 @@ pub fn constant_workload_points(
     workers: Option<WorkersConfig>,
     redundancy: Option<RedundancyConfig>,
     ks: &[usize],
-) -> Vec<SweepPoint> {
-    assert!(mean_workload > 0.0 && mean_workload.is_finite());
-    ks.iter()
+) -> Result<Vec<SweepPoint>, String> {
+    if !(mean_workload > 0.0 && mean_workload.is_finite()) {
+        return Err(format!(
+            "mean workload must be positive and finite, got {mean_workload}"
+        ));
+    }
+    if !(lambda > 0.0 && lambda.is_finite()) {
+        return Err(format!("arrival rate must be positive and finite, got {lambda}"));
+    }
+    Ok(ks.iter()
         .map(|&k| SweepPoint {
             label: k as f64,
             config: SimulationConfig {
@@ -87,7 +97,7 @@ pub fn constant_workload_points(
                 redundancy,
             },
         })
-        .collect()
+        .collect())
 }
 
 /// Run every point at quantile `q`, in parallel, reseeding each point
@@ -117,19 +127,19 @@ pub fn run_sweep_with(
     };
     let q = opts.q;
     let outcomes = pool.map(tagged, move |(point, seed)| {
-        let mut cfg = point.config.clone();
+        // The point is owned here — reseed it in place, no config clone.
+        let SweepPoint { label, config: mut cfg } = point;
         cfg.seed = seed;
-        let res = sim::run(&cfg, run_opts)?;
-        let mut res: SimResult = res;
+        let mut res: SimResult = sim::run(&cfg, run_opts)?;
         Ok::<SweepOutcome, String>(SweepOutcome {
-            label: point.label,
+            label,
             sojourn_q: res.sojourn_quantile(q),
             sojourn_mean: res.sojourn_summary.mean(),
             overhead_mean: res.overhead_summary.mean(),
             redundant_mean: res.redundant_summary.mean(),
             jobs_per_sec: res.jobs_per_second(),
         })
-    });
+    })?;
     outcomes.into_iter().collect()
 }
 
@@ -225,6 +235,51 @@ mod tests {
                 b.sojourn_q
             );
         }
+    }
+
+    /// CLI-reachable bad inputs are errors, not panics (a user typing
+    /// `--workload 0` used to assert).
+    #[test]
+    fn constant_workload_points_rejects_bad_inputs() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let r = constant_workload_points(
+                ModelKind::ForkJoinSingleQueue,
+                10,
+                0.5,
+                bad,
+                1000,
+                None,
+                None,
+                None,
+                &[10, 20],
+            );
+            assert!(r.is_err(), "workload {bad} must be rejected");
+        }
+        let r = constant_workload_points(
+            ModelKind::ForkJoinSingleQueue,
+            10,
+            0.0,
+            10.0,
+            1000,
+            None,
+            None,
+            None,
+            &[10],
+        );
+        assert!(r.is_err(), "lambda 0 must be rejected");
+        let ok = constant_workload_points(
+            ModelKind::ForkJoinSingleQueue,
+            10,
+            0.5,
+            10.0,
+            1000,
+            None,
+            None,
+            None,
+            &[10, 20],
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 2);
     }
 
     /// The paper's core effect, end to end through the sweep machinery:

@@ -156,6 +156,9 @@ pub struct Calendar {
     /// Scratch for barrier-stage front insertion (reused, no per-event
     /// allocation).
     scratch: Vec<ReadyTask>,
+    /// Scratch for batched stage execution draws (reused, no per-stage
+    /// allocation).
+    exec_buf: Vec<f64>,
     /// Split-merge: arrived jobs (slots) awaiting the floor.
     pending_jobs: VecDeque<u32>,
     /// Split-merge: the slot currently holding the floor.
@@ -184,6 +187,7 @@ impl Calendar {
             idle: Vec::with_capacity(servers),
             ready: VecDeque::new(),
             scratch: Vec::new(),
+            exec_buf: Vec::new(),
             pending_jobs: VecDeque::new(),
             in_service: None,
             jobs: Vec::new(),
@@ -288,6 +292,32 @@ impl Calendar {
     ) {
         let js = &mut self.jobs[slot as usize];
         js.to_dispatch = count;
+        if !overhead.enabled() {
+            // Batched fast path: with overhead off, `sample_task` draws
+            // nothing, so the per-task stream is execution draws only —
+            // one `draw_batch` produces the identical stream with the
+            // distribution match hoisted out of the loop.
+            self.exec_buf.resize(count as usize, 0.0);
+            workload.next_executions(&mut self.exec_buf);
+            if front {
+                self.scratch.clear();
+                for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
+                    js.workload += exec;
+                    self.scratch.push(ReadyTask { slot, task, exec, overhead: 0.0 });
+                }
+                for rt in self.scratch.drain(..).rev() {
+                    self.ready.push_front(rt);
+                }
+            } else {
+                for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
+                    js.workload += exec;
+                    self.ready.push_back(ReadyTask { slot, task, exec, overhead: 0.0 });
+                }
+            }
+            return;
+        }
+        // Overhead on: execution and overhead draws interleave per task
+        // (the reproducibility contract), so no batching is possible.
         if front {
             self.scratch.clear();
             for task in 0..count {

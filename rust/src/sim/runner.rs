@@ -4,7 +4,9 @@
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
 use super::{JobRecord, OverheadModel, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
+use crate::rng::spawn_seeds;
 use crate::stats::{QuantileEstimator, Summary};
+use crate::util::threadpool::ThreadPool;
 
 /// Quantiles tracked by the streaming (P²) runner mode — the grid every
 /// consumer prints (`simulate`, sweeps, the advisor curve).
@@ -28,6 +30,19 @@ pub struct RunOptions {
     /// Extra quantile to track in streaming mode (e.g. a sweep's target
     /// quantile when it is not on the default grid).
     pub streaming_q: Option<f64>,
+    /// Replication shards: split the run into `shards` independent
+    /// replications of `jobs/shards` measured jobs each (per-shard seeds
+    /// from [`spawn_seeds`], per-shard warmup) and merge their
+    /// statistics. Sharding is a **replication scheme**: the shard count
+    /// changes the sample stream, so determinism is per
+    /// (seed, shard count). `0` means "match `threads`"; `0`/`1` with
+    /// `threads ≤ 1` is exactly the unsharded engine.
+    pub shards: usize,
+    /// Worker threads executing the shards (`0` = one per shard, capped
+    /// at the machine's parallelism). The thread count never affects
+    /// results — shards merge in shard-index order regardless of which
+    /// worker finished first.
+    pub threads: usize,
 }
 
 /// Aggregated simulation output.
@@ -109,19 +124,108 @@ fn make_estimator(cfg: &SimulationConfig, opts: &RunOptions) -> QuantileEstimato
     QuantileEstimator::streaming(&qs)
 }
 
-/// Run one simulation to completion.
+/// Run one simulation to completion. With `opts.shards`/`opts.threads`
+/// > 1 the run is split into independent replication shards executed on
+/// a thread pool and merged (see [`RunOptions::shards`]); otherwise this
+/// is the plain single-stream engine.
 pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String> {
+    // `shards = 0` means "match threads"; a single shard takes the
+    // unsharded path bit-for-bit.
+    let shards = match opts.shards {
+        0 => opts.threads.max(1),
+        n => n,
+    };
+    if shards <= 1 {
+        return run_single(cfg, &opts);
+    }
+    run_sharded(cfg, &opts, shards)
+}
+
+/// Split `jobs` into `shards` near-equal shares (the remainder lands on
+/// the first shards, so every share differs by at most one job).
+fn shard_shares(jobs: usize, shards: usize) -> Vec<usize> {
+    let base = jobs / shards;
+    let rem = jobs % shards;
+    (0..shards).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Replication-sharded run: `shards` independent simulations with seeds
+/// from [`spawn_seeds`]`(cfg.seed, shards)` — each with the full warmup,
+/// a `jobs/shards` share of the measured jobs, and its own RNG stream —
+/// merged in shard-index order. Merged means are therefore stable in the
+/// *thread* count (bitwise: the Welford merge order is fixed) and stable
+/// in the *shard* count to fp-summation order.
+fn run_sharded(
+    cfg: &SimulationConfig,
+    opts: &RunOptions,
+    shards: usize,
+) -> Result<SimResult, String> {
+    cfg.validate()?;
+    if opts.record_jobs || opts.trace {
+        return Err(
+            "per-job records and traces are single-stream outputs; \
+             run with shards = threads = 1 to record them"
+                .into(),
+        );
+    }
+    let t0 = std::time::Instant::now();
+    // Never spin up more shards than measured jobs.
+    let shards = shards.min(cfg.jobs).max(1);
+    let seeds = spawn_seeds(cfg.seed, shards);
+    let shard_cfgs: Vec<SimulationConfig> = shard_shares(cfg.jobs, shards)
+        .into_iter()
+        .zip(seeds)
+        .map(|(share, seed)| SimulationConfig { jobs: share, seed, ..cfg.clone() })
+        .collect();
+    let shard_opts = RunOptions { shards: 1, threads: 1, ..*opts };
+    let workers = match opts.threads {
+        0 => {
+            let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            shards.min(avail)
+        }
+        n => n.min(shards),
+    }
+    .max(1);
+    let pool = ThreadPool::new(workers);
+    let results = pool.map(shard_cfgs, move |scfg| run_single(&scfg, &shard_opts))?;
+    let mut merged: Option<SimResult> = None;
+    for res in results {
+        let res = res?;
+        match &mut merged {
+            None => merged = Some(res),
+            Some(acc) => {
+                acc.sojourn.merge(&res.sojourn)?;
+                acc.waiting.merge(&res.waiting)?;
+                acc.sojourn_summary.merge(&res.sojourn_summary);
+                acc.overhead_summary.merge(&res.overhead_summary);
+                acc.redundant_summary.merge(&res.redundant_summary);
+                for (a, b) in acc.thirds.iter_mut().zip(&res.thirds) {
+                    a.merge(b);
+                }
+            }
+        }
+    }
+    let mut out = merged.expect("at least one shard");
+    // Echo the caller's config (not shard 0's slice) and report the
+    // orchestration wall time, warmups included via the per-shard runs.
+    out.config = cfg.clone();
+    out.wall_seconds = t0.elapsed().as_secs_f64();
+    Ok(out)
+}
+
+/// Run one unsharded simulation to completion.
+fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, String> {
     cfg.validate()?;
     let t0 = std::time::Instant::now();
     let mut workload = Workload::from_config(cfg)?;
     let overhead = OverheadModel::from_option(cfg.overhead);
-    let mut model = build_model(cfg, &opts)?;
+    let mut model = build_model(cfg, opts)?;
     let mut trace = if opts.trace { TraceLog::enabled() } else { TraceLog::disabled() };
 
     let total = cfg.warmup + cfg.jobs;
     let mut jobs = Vec::with_capacity(if opts.record_jobs { cfg.jobs } else { 0 });
-    let mut sojourn = make_estimator(cfg, &opts);
-    let mut waiting = make_estimator(cfg, &opts);
+    let mut sojourn = make_estimator(cfg, opts);
+    let mut waiting = make_estimator(cfg, opts);
     let mut sojourn_summary = Summary::new();
     let mut overhead_summary = Summary::new();
     let mut redundant_summary = Summary::new();
@@ -300,6 +404,43 @@ mod tests {
         // Thirds partition covers every measured job exactly once.
         let n: u64 = stream.thirds.iter().map(|t| t.count()).sum();
         assert_eq!(n, 20_000);
+    }
+
+    #[test]
+    fn shard_shares_partition_jobs() {
+        assert_eq!(shard_shares(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(shard_shares(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(shard_shares(3, 4), vec![1, 1, 1, 0]);
+        for (jobs, shards) in [(1_000_001, 7), (5, 5), (2, 3)] {
+            let shares = shard_shares(jobs, shards);
+            assert_eq!(shares.iter().sum::<usize>(), jobs);
+            assert!(shares.iter().max().unwrap() - shares.iter().min().unwrap() <= 1);
+        }
+    }
+
+    /// Sharded runs refuse single-stream outputs instead of silently
+    /// returning one shard's records.
+    #[test]
+    fn sharded_rejects_per_job_outputs() {
+        let opts = RunOptions { shards: 2, record_jobs: true, ..Default::default() };
+        let err = run(&base_cfg(), opts).unwrap_err();
+        assert!(err.contains("single-stream"), "{err}");
+        let opts = RunOptions { shards: 2, trace: true, ..Default::default() };
+        assert!(run(&base_cfg(), opts).is_err());
+    }
+
+    /// A sharded run partitions the measured jobs exactly and stays
+    /// deterministic in (seed, shard count).
+    #[test]
+    fn sharded_run_counts_and_determinism() {
+        let cfg = base_cfg();
+        let opts = RunOptions { shards: 3, threads: 2, ..Default::default() };
+        let a = run(&cfg, opts).unwrap();
+        assert_eq!(a.sojourn.len(), cfg.jobs);
+        assert_eq!(a.sojourn_summary.count(), cfg.jobs as u64);
+        let b = run(&cfg, opts).unwrap();
+        assert_eq!(a.sojourn_summary.mean(), b.sojourn_summary.mean());
+        assert_eq!(a.sojourn_summary.variance(), b.sojourn_summary.variance());
     }
 
     /// Overhead strictly increases sojourn times (coupling: same seed).

@@ -62,6 +62,23 @@ impl Workload {
         self.execution.draw(&mut self.rng)
     }
 
+    /// Draw one execution time per slot of `out` — the batch hot path
+    /// for pre-drawn stage tasks. Identical stream to calling
+    /// [`Workload::next_execution`] `out.len()` times (bit-for-bit);
+    /// `TT_NO_FAST_EXP=1` forces the dyn-dispatch loop here too.
+    #[inline]
+    pub fn next_executions(&mut self, out: &mut [f64]) {
+        if self.force_dyn {
+            for o in out {
+                let mut f = || self.rng.next_f64_open();
+                let d: &dyn Distribution = &self.execution;
+                *o = d.sample(&mut f);
+            }
+            return;
+        }
+        self.execution.draw_batch(&mut self.rng, out)
+    }
+
     /// Mean task execution time of the configured distribution.
     pub fn mean_execution(&self) -> f64 {
         self.execution.mean()

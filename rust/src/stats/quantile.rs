@@ -185,6 +185,69 @@ impl P2Quantile {
         }
     }
 
+    /// Merge another estimator for the **same** quantile (parallel-shard
+    /// reduction).
+    ///
+    /// While either side is still in its exact small-sample phase its
+    /// samples are simply replayed into the other — an exact, order-free
+    /// operation at ≤ 5 samples. Once both sides carry converged marker
+    /// states, markers are combined count-weighted: interior heights as
+    /// weighted averages, the extreme markers as true min/max, and the
+    /// marker positions reset to their ideal values for the combined
+    /// count (the standard parallel-P² approximation; the estimate
+    /// quality matches a single-pass P² on tail quantiles, which the
+    /// sharding tests enforce against exact pooled quantiles).
+    pub fn merge(&mut self, other: &P2Quantile) {
+        assert!(
+            (self.q - other.q).abs() < 1e-12,
+            "merging P2 estimators of different quantiles: {} vs {}",
+            self.q,
+            other.q
+        );
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        if other.initial.len() < 5 {
+            for &x in &other.initial {
+                self.push(x);
+            }
+            return;
+        }
+        if self.initial.len() < 5 {
+            let mut merged = other.clone();
+            for &x in &self.initial {
+                merged.push(x);
+            }
+            *self = merged;
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let n = n1 + n2;
+        self.heights[0] = self.heights[0].min(other.heights[0]);
+        for i in 1..4 {
+            self.heights[i] = (self.heights[i] * n1 + other.heights[i] * n2) / n;
+        }
+        self.heights[4] = self.heights[4].max(other.heights[4]);
+        self.count += other.count;
+        // Re-anchor marker positions on the ideal grid for the combined
+        // count; future pushes adjust from there as usual.
+        let q = self.q;
+        let m = self.count as f64;
+        self.positions = [
+            1.0,
+            1.0 + (m - 1.0) * q / 2.0,
+            1.0 + (m - 1.0) * q,
+            1.0 + (m - 1.0) * (1.0 + q) / 2.0,
+            m,
+        ];
+        self.desired = self.positions;
+    }
+
     /// Current estimate (exact while ≤ 5 samples seen).
     pub fn value(&self) -> f64 {
         if self.count == 0 {
@@ -252,6 +315,30 @@ impl StreamingQuantiles {
     pub fn tracked(&self) -> Vec<f64> {
         self.estimators.iter().map(|e| e.q()).collect()
     }
+
+    /// Merge another bank tracking the **same** quantile set (parallel-
+    /// shard reduction); errors on a tracked-set mismatch instead of
+    /// silently mispairing estimators.
+    pub fn merge(&mut self, other: &StreamingQuantiles) -> Result<(), String> {
+        if self.estimators.len() != other.estimators.len()
+            || self
+                .estimators
+                .iter()
+                .zip(&other.estimators)
+                .any(|(a, b)| (a.q() - b.q()).abs() >= 1e-12)
+        {
+            return Err(format!(
+                "cannot merge streaming banks tracking different quantiles: {:?} vs {:?}",
+                self.tracked(),
+                other.tracked()
+            ));
+        }
+        for (a, b) in self.estimators.iter_mut().zip(&other.estimators) {
+            a.merge(b);
+        }
+        self.count += other.count;
+        Ok(())
+    }
 }
 
 /// Quantile estimator with a run-time choice of memory/accuracy trade:
@@ -310,6 +397,22 @@ impl QuantileEstimator {
                     s.tracked()
                 )
             }),
+        }
+    }
+
+    /// Merge another estimator of the **same mode** (parallel-shard
+    /// reduction): exact sketches pool their samples (merged quantiles
+    /// stay exact), streaming banks combine their P² marker states.
+    /// Mode or tracked-set mismatches are errors, not panics — they can
+    /// arise from caller configuration.
+    pub fn merge(&mut self, other: &QuantileEstimator) -> Result<(), String> {
+        match (self, other) {
+            (Self::Exact(a), Self::Exact(b)) => {
+                a.merge(b);
+                Ok(())
+            }
+            (Self::Streaming(a), Self::Streaming(b)) => a.merge(b),
+            _ => Err("cannot merge exact and streaming quantile estimators".into()),
         }
     }
 
@@ -407,6 +510,94 @@ mod tests {
         let exact = -(0.5f64).ln();
         assert!((med - exact).abs() / exact < 0.05, "{med} vs {exact}");
         assert!(s.value(0.123).is_none());
+    }
+
+    /// Merging P² shards tracks the pooled exact quantile about as well
+    /// as a single-pass P² does.
+    #[test]
+    fn p2_merge_tracks_pooled_quantile() {
+        let mut rng = Pcg64::seed_from_u64(97);
+        let mut shards: Vec<P2Quantile> = (0..4).map(|_| P2Quantile::new(0.99)).collect();
+        let mut exact = QuantileSketch::new();
+        for i in 0..400_000 {
+            let x = -rng.next_f64_open().ln();
+            shards[i % 4].push(x);
+            exact.push(x);
+        }
+        let mut merged = shards.remove(0);
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), 400_000);
+        let (est, truth) = (merged.value(), exact.quantile(0.99));
+        assert!(
+            (est - truth).abs() / truth < 0.05,
+            "merged P² {est} vs pooled exact {truth}"
+        );
+        // Merged state keeps accepting samples.
+        merged.push(1.0);
+        assert_eq!(merged.count(), 400_001);
+    }
+
+    /// Small-sample shards merge exactly (the ≤5-sample replay path).
+    #[test]
+    fn p2_merge_small_shards_exact() {
+        let mut a = P2Quantile::new(0.5);
+        let mut b = P2Quantile::new(0.5);
+        for x in [1.0, 5.0] {
+            a.push(x);
+        }
+        for x in [2.0, 4.0, 3.0] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert!((a.value() - 3.0).abs() < 1e-12);
+        // Empty merges are identities in both directions.
+        let mut empty = P2Quantile::new(0.5);
+        empty.merge(&a);
+        assert_eq!(empty.count(), 5);
+        a.merge(&P2Quantile::new(0.5));
+        assert_eq!(a.count(), 5);
+    }
+
+    #[test]
+    fn streaming_bank_merge_and_mismatch() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let mut a = StreamingQuantiles::new(&[0.5, 0.99]);
+        let mut b = StreamingQuantiles::new(&[0.5, 0.99]);
+        for i in 0..100_000 {
+            let x = -rng.next_f64_open().ln();
+            if i % 2 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.len(), 100_000);
+        let med = a.value(0.5).unwrap();
+        let exact = -(0.5f64).ln();
+        assert!((med - exact).abs() / exact < 0.05, "{med} vs {exact}");
+        let other = StreamingQuantiles::new(&[0.5, 0.9]);
+        assert!(a.merge(&other).is_err(), "tracked-set mismatch must error");
+    }
+
+    #[test]
+    fn estimator_merge_modes() {
+        let mut a = QuantileEstimator::exact_with_capacity(4);
+        let mut b = QuantileEstimator::exact_with_capacity(4);
+        for x in [1.0, 2.0] {
+            a.push(x);
+        }
+        for x in [3.0, 4.0] {
+            b.push(x);
+        }
+        a.merge(&b).unwrap();
+        assert_eq!(a.len(), 4);
+        assert!((a.quantile(0.5) - 2.5).abs() < 1e-12);
+        let s = QuantileEstimator::streaming(&[0.5]);
+        assert!(a.merge(&s).is_err(), "mode mismatch must error");
     }
 
     #[test]

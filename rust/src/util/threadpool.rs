@@ -1,9 +1,16 @@
-//! A small fixed-size thread pool used by the sweep executor.
+//! A small fixed-size thread pool used by the sweep executor and the
+//! sharded single-run executor.
 //!
 //! The offline registry has no `rayon`/`tokio`; sweeps are embarrassingly
 //! parallel (one simulation per configuration × replication), so a simple
 //! channel-fed pool is all the coordinator needs.
+//!
+//! Panic policy: a panicking job must not shrink the pool. Each job runs
+//! under `catch_unwind`, so the worker survives and keeps draining the
+//! queue; [`ThreadPool::map`] additionally captures the panic payload and
+//! surfaces it to the caller as an `Err` instead of a dead slot.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -14,6 +21,18 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     sender: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Render a `catch_unwind` payload as the panic message (the common
+/// `&str` / `String` payloads; anything else gets a generic label).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 impl ThreadPool {
@@ -28,9 +47,24 @@ impl ThreadPool {
                 thread::Builder::new()
                     .name(format!("tt-pool-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = {
+                            // The guard is dropped before the job runs, so
+                            // the lock can no longer be poisoned by a job
+                            // panic — but recover anyway rather than
+                            // cascade one poisoned worker into a dead pool.
+                            let guard =
+                                rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                            guard.recv()
+                        };
                         match job {
-                            Ok(job) => job(),
+                            // A panicking job must not take this worker
+                            // down with it: swallow the unwind and keep
+                            // serving the queue. `map` observes panics
+                            // through its own per-job catch; bare
+                            // `execute` jobs have no return channel.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break, // channel closed: shut down
                         }
                     })
@@ -56,29 +90,47 @@ impl ThreadPool {
     }
 
     /// Map `f` over `items` in parallel, preserving order of results.
-    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    ///
+    /// A panicking job yields `Err` carrying the first panic's payload
+    /// (remaining jobs still run to completion; the pool stays usable).
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Result<Vec<U>, String>
     where
         T: Send + 'static,
         U: Send + 'static,
         F: Fn(T) -> U + Send + Sync + 'static,
     {
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, U)>();
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<U>)>();
         let n = items.len();
         for (i, item) in items.into_iter().enumerate() {
             let tx = tx.clone();
             let f = Arc::clone(&f);
             self.execute(move || {
-                let out = f(item);
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
                 let _ = tx.send((i, out));
             });
         }
         drop(tx);
         let mut slots: Vec<Option<U>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, String)> = None;
         for (i, out) in rx {
-            slots[i] = Some(out);
+            match out {
+                Ok(v) => slots[i] = Some(v),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some((i, panic_message(payload.as_ref())));
+                    }
+                }
+            }
         }
-        slots.into_iter().map(|s| s.expect("worker completed")).collect()
+        if let Some((i, msg)) = first_panic {
+            return Err(format!("pool job {i} panicked: {msg}"));
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| s.ok_or_else(|| format!("pool job {i} produced no result")))
+            .collect()
     }
 }
 
@@ -113,14 +165,55 @@ mod tests {
     #[test]
     fn map_preserves_order() {
         let pool = ThreadPool::new(8);
-        let out = pool.map((0..64).collect::<Vec<i32>>(), |x| x * x);
+        let out = pool.map((0..64).collect::<Vec<i32>>(), |x| x * x).unwrap();
         assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<i32>>());
     }
 
     #[test]
     fn map_empty() {
         let pool = ThreadPool::new(2);
-        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x).unwrap();
         assert!(out.is_empty());
+    }
+
+    /// A panicking map job surfaces as an error — with its payload — and
+    /// the pool keeps working afterwards (the regression this module's
+    /// panic policy exists for: no silently dead workers, no poisoned
+    /// receiver, no bare `expect` blowup in `map`).
+    #[test]
+    fn panicking_map_job_is_an_error_not_a_dead_worker() {
+        let pool = ThreadPool::new(2);
+        let err = pool
+            .map(vec![1i32, 2, 3], |x| {
+                if x == 2 {
+                    panic!("boom on {x}");
+                }
+                x * 10
+            })
+            .unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("boom on 2"), "payload lost: {err}");
+        // Every worker is still alive: a full follow-up map succeeds even
+        // on a pool with as many panics behind it as workers.
+        let err2 = pool.map(vec![0i32, 0], |_| -> i32 { panic!("again") }).unwrap_err();
+        assert!(err2.contains("again"), "{err2}");
+        let out = pool.map((0..16).collect::<Vec<i32>>(), |x| x + 1).unwrap();
+        assert_eq!(out, (1..17).collect::<Vec<i32>>());
+    }
+
+    /// A panicking fire-and-forget job doesn't kill later jobs either.
+    #[test]
+    fn panicking_execute_job_keeps_worker_alive() {
+        let pool = ThreadPool::new(1); // single worker: a dead one would hang us
+        pool.execute(|| panic!("detached boom"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
     }
 }

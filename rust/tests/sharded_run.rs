@@ -1,0 +1,187 @@
+//! Sharded single-run execution regressions.
+//!
+//! Sharding is a replication scheme: the shard count changes the sample
+//! stream (per-shard seeds from `spawn_seeds`), so determinism is per
+//! (seed, shard count). What must NEVER change results is the *thread*
+//! count — shards merge in shard-index order regardless of completion
+//! order — and a single shard must be the unsharded engine bit for bit.
+
+use tiny_tasks::config::{ArrivalConfig, ModelKind, ServiceConfig, SimulationConfig};
+use tiny_tasks::dist::{Dist, Erlang, Exponential};
+use tiny_tasks::sim::{self, RunOptions, Workload};
+
+fn base(jobs: usize) -> SimulationConfig {
+    SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: 4,
+        tasks_per_job: 8,
+        arrival: ArrivalConfig { interarrival: "exp:0.3".into() },
+        service: ServiceConfig { execution: "exp:2.0".into() },
+        jobs,
+        warmup: jobs / 10,
+        seed: 77,
+        overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+    }
+}
+
+/// `threads = 1` (and a single shard on any pool size) is bit-for-bit
+/// today's unsharded engine.
+#[test]
+fn single_shard_is_bitwise_unsharded() {
+    let cfg = base(4_000);
+    let mut plain = sim::run(&cfg, RunOptions::default()).unwrap();
+    for opts in [
+        RunOptions { threads: 1, ..Default::default() },
+        RunOptions { shards: 1, threads: 8, ..Default::default() },
+    ] {
+        let mut sharded = sim::run(&cfg, opts).unwrap();
+        assert_eq!(plain.sojourn_summary.mean(), sharded.sojourn_summary.mean());
+        assert_eq!(
+            plain.sojourn_summary.variance(),
+            sharded.sojourn_summary.variance()
+        );
+        assert_eq!(plain.overhead_summary.mean(), sharded.overhead_summary.mean());
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(plain.sojourn_quantile(q), sharded.sojourn_quantile(q));
+            assert_eq!(plain.waiting_quantile(q), sharded.waiting_quantile(q));
+        }
+    }
+}
+
+/// At a fixed shard count the thread count is unobservable: merged
+/// summaries and quantiles are bitwise identical for 1 vs 4 workers
+/// (the Welford/sketch merge order is shard-index order, not completion
+/// order).
+#[test]
+fn thread_count_never_changes_results() {
+    let cfg = base(6_000);
+    let mut serial =
+        sim::run(&cfg, RunOptions { shards: 4, threads: 1, ..Default::default() }).unwrap();
+    let mut parallel =
+        sim::run(&cfg, RunOptions { shards: 4, threads: 4, ..Default::default() }).unwrap();
+    assert_eq!(serial.sojourn_summary.mean(), parallel.sojourn_summary.mean());
+    assert_eq!(
+        serial.sojourn_summary.variance(),
+        parallel.sojourn_summary.variance()
+    );
+    assert_eq!(serial.sojourn_summary.min(), parallel.sojourn_summary.min());
+    assert_eq!(serial.sojourn_summary.max(), parallel.sojourn_summary.max());
+    assert_eq!(serial.overhead_summary.mean(), parallel.overhead_summary.mean());
+    assert_eq!(
+        serial.redundant_summary.count(),
+        parallel.redundant_summary.count()
+    );
+    for (a, b) in serial.thirds.iter().zip(&parallel.thirds) {
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+    }
+    for q in [0.5, 0.9, 0.99] {
+        assert_eq!(serial.sojourn_quantile(q), parallel.sojourn_quantile(q));
+    }
+}
+
+/// Different shard counts draw different sample streams, but they sample
+/// the same law: merged means agree with the unsharded run within
+/// statistical tolerance, and every measured job is accounted for.
+#[test]
+fn shard_count_changes_stream_not_the_law() {
+    let cfg = base(20_000);
+    let plain = sim::run(&cfg, RunOptions::default()).unwrap();
+    let m0 = plain.sojourn_summary.mean();
+    for shards in [2usize, 4, 7] {
+        let opts = RunOptions { shards, threads: 2, ..Default::default() };
+        let res = sim::run(&cfg, opts).unwrap();
+        assert_eq!(res.sojourn.len(), cfg.jobs, "shards={shards}");
+        assert_eq!(res.sojourn_summary.count(), cfg.jobs as u64);
+        let m = res.sojourn_summary.mean();
+        assert!(
+            (m - m0).abs() / m0 < 0.10,
+            "shards={shards}: merged mean {m} vs unsharded {m0}"
+        );
+        // Same (seed, shard count) → same result.
+        let res2 = sim::run(&cfg, opts).unwrap();
+        assert_eq!(m, res2.sojourn_summary.mean());
+    }
+}
+
+/// Streaming shards merge their P² banks: identical sample streams to
+/// the exact sharded run (bitwise-equal summaries), quantiles within P²
+/// tolerance of the exact merged sketch.
+#[test]
+fn streaming_shards_match_exact_shards() {
+    let cfg = base(24_000);
+    let opts_exact = RunOptions { shards: 4, threads: 2, ..Default::default() };
+    let opts_stream = RunOptions {
+        shards: 4,
+        threads: 2,
+        streaming: true,
+        streaming_q: Some(0.75),
+        ..Default::default()
+    };
+    let mut exact = sim::run(&cfg, opts_exact).unwrap();
+    let mut stream = sim::run(&cfg, opts_stream).unwrap();
+    assert_eq!(exact.sojourn_summary.mean(), stream.sojourn_summary.mean());
+    assert_eq!(exact.sojourn.len(), stream.sojourn.len());
+    for q in [0.5, 0.9, 0.99, 0.75] {
+        let (a, b) = (exact.sojourn_quantile(q), stream.sojourn_quantile(q));
+        assert!(
+            (a - b).abs() / a < 0.15,
+            "q={q}: exact sharded {a} vs P²-merged {b}"
+        );
+    }
+}
+
+/// Per-job records and traces are single-stream outputs: sharded runs
+/// refuse them loudly instead of returning one shard's slice.
+#[test]
+fn sharded_run_rejects_record_and_trace() {
+    let cfg = base(1_000);
+    for opts in [
+        RunOptions { shards: 2, record_jobs: true, ..Default::default() },
+        RunOptions { threads: 2, trace: true, ..Default::default() },
+    ] {
+        assert!(sim::run(&cfg, opts).is_err());
+    }
+}
+
+/// `Dist::draw_batch` through the `Workload` layer: the batch path is
+/// bit-for-bit the one-at-a-time path, and `TT_NO_FAST_EXP=1` (dyn
+/// dispatch) produces the identical stream.
+///
+/// Both comparisons live in ONE test so the env-var set/remove cannot
+/// interleave with itself across test threads (the var is read at
+/// `Workload` construction; see scenario_equivalence.rs for the same
+/// pattern).
+#[test]
+fn draw_batch_bitwise_with_and_without_fast_path() {
+    assert!(std::env::var_os("TT_NO_FAST_EXP").is_none(), "leaked env var");
+    let dists: Vec<(Dist, Dist)> = vec![
+        (Exponential::new(1.6).into(), Exponential::new(1.6).into()),
+        (Erlang::new(4, 2.0).into(), Erlang::new(4, 2.0).into()),
+    ];
+    let mut fast_batches: Vec<Vec<f64>> = Vec::new();
+    for (da, db) in dists {
+        let mut one = Workload::new(Exponential::new(0.5).into(), da, 123);
+        let mut batch = Workload::new(Exponential::new(0.5).into(), db, 123);
+        let singles: Vec<f64> = (0..513).map(|_| one.next_execution()).collect();
+        let mut buf = vec![0.0; 513];
+        batch.next_executions(&mut buf);
+        assert_eq!(singles, buf, "batch path diverges from single draws");
+        // Interleaving arrivals keeps the shared stream aligned.
+        assert_eq!(one.next_arrival(), batch.next_arrival());
+        fast_batches.push(buf);
+    }
+    // Same draws with the fast path disabled: dyn dispatch, same stream.
+    std::env::set_var("TT_NO_FAST_EXP", "1");
+    let dyn_dists: Vec<Dist> =
+        vec![Exponential::new(1.6).into(), Erlang::new(4, 2.0).into()];
+    for (d, fast) in dyn_dists.into_iter().zip(&fast_batches) {
+        let mut w = Workload::new(Exponential::new(0.5).into(), d, 123);
+        let mut buf = vec![0.0; 513];
+        w.next_executions(&mut buf);
+        assert_eq!(&buf, fast, "TT_NO_FAST_EXP batch diverges from fast path");
+    }
+    std::env::remove_var("TT_NO_FAST_EXP");
+}
