@@ -1,0 +1,76 @@
+//! Fault injection: tiny tasks as a fault-tolerance mechanism.
+//!
+//! Sweeps task granularity k at constant mean job workload on a cluster
+//! with Markov worker crashes (MTBF 50 s, MTTR 1 s) and a 2% per-attempt
+//! task failure probability, and prints what each failure event costs.
+//! The tiny-tasks argument extends beyond stragglers: a crash or failed
+//! attempt wastes at most one task's worth of service, so the work lost
+//! per failure shrinks as ~1/k while the total overhead bill (Sec. 2.6)
+//! grows — the same trade-off, now with recovery in the balance.
+//!
+//! Run: `cargo run --release --example faults`
+
+use tiny_tasks::config::{
+    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, ServiceConfig, SimulationConfig,
+};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn main() -> anyhow::Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let workload = l as f64; // E[L] = 10 s per job, utilization 0.4
+    let eps = 0.01;
+    let faults = FaultsConfig {
+        mtbf: 50.0,
+        mttr: 1.0,
+        task_fail_p: 0.02,
+        max_retries: 3,
+        backoff_base: 0.01,
+        ..FaultsConfig::default()
+    };
+
+    println!(
+        "{:>6} | {:>12} {:>12} | {:>12} {:>12} {:>14}",
+        "k", "p99 clean", "p99 faulty", "lost/job", "retries/job", "lost/failure"
+    );
+    for &k in &[10usize, 20, 40, 80, 160] {
+        let base = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: l,
+            tasks_per_job: k,
+            arrival: ArrivalConfig { interarrival: format!("exp:{lambda}") },
+            service: ServiceConfig { execution: format!("exp:{}", k as f64 / workload) },
+            jobs: 8_000,
+            warmup: 800,
+            seed: 7,
+            overhead: Some(OverheadConfig::paper()),
+            workers: None,
+            redundancy: None,
+            faults: None,
+        };
+        let mut clean = sim::run(&base, RunOptions::default()).map_err(anyhow::Error::msg)?;
+        let faulty_cfg = SimulationConfig { faults: Some(faults), ..base };
+        let mut faulty =
+            sim::run(&faulty_cfg, RunOptions::default()).map_err(anyhow::Error::msg)?;
+        let lost = faulty.lost_summary.mean();
+        let retries = faulty.retry_summary.mean();
+        let per_failure = if retries > 0.0 { lost / retries } else { f64::NAN };
+        println!(
+            "{:>6} | {:>12.2} {:>12.2} | {:>12.3} {:>12.3} {:>14.4}",
+            k,
+            clean.sojourn_quantile(1.0 - eps),
+            faulty.sojourn_quantile(1.0 - eps),
+            lost,
+            retries,
+            per_failure,
+        );
+    }
+    println!(
+        "\nFiner granularity bounds the blast radius of a failure: the work\n\
+         lost per failure event falls as ~1/k (one task, however small),\n\
+         while crashes and retries only nudge the sojourn tail once tasks\n\
+         are tiny. See `tiny-tasks figure faults` for the CSV pipeline and\n\
+         configs/faults.toml for the config-file form of this scenario."
+    );
+    Ok(())
+}

@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
             overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = sim::run(
             &cfg,

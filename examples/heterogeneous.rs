@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
                 } else {
                     None
                 },
+                faults: None,
             };
             let rec = advisor::recommend_simulated(&pool, &base, mean_workload, epsilon, &ks)
                 .map_err(anyhow::Error::msg)?;

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                 overhead: None,
                 workers: None,
                 redundancy: None,
+                faults: None,
             };
             let mut res = sim::run(&cfg, RunOptions::default()).map_err(anyhow::Error::msg)?;
             Ok(Some(res.sojourn_quantile(1.0 - eps)))

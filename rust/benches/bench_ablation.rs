@@ -28,6 +28,7 @@ fn base(l: usize, k: usize, exec: String, jobs: usize) -> SimulationConfig {
         overhead: None,
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

@@ -23,6 +23,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize) -> SimulationConfig {
         overhead: None,
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

@@ -266,6 +266,7 @@ mod tests {
                 overhead: None,
                 workers: None,
                 redundancy: None,
+                faults: None,
             };
             let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
             let sim_q = res.sojourn_quantile(1.0 - eps);

@@ -82,6 +82,7 @@ mod tests {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = crate::sim::run(&cfg, Default::default()).unwrap();
         let sim_mean = res.sojourn_summary.mean();

@@ -234,6 +234,7 @@ mod tests {
             overhead: None,
             workers: Some(WorkersConfig::Speeds(speeds)),
             redundancy: None,
+            faults: None,
         };
         let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
         let sim_q = res.sojourn_quantile(0.99);

@@ -113,6 +113,12 @@ COMMANDS:
                   scenario: --speeds 1.0,0.5,.. | --speed-dist SPEC [--speed-seed S]
                   --redundancy R   (r replicas per task, first-finish-wins)
                   [--replica-launch S]  (per-replica launch cost, seconds)
+                  faults: --mtbf S --mttr S  (Markov worker crashes)
+                  --task-fail-p P --max-retries N  (per-attempt failures,
+                  bounded retries; --fault-backoff fixed|exp
+                  --fault-backoff-base S)  --spec-timeout F  (speculative
+                  backup after F x E[task], first-finish-wins)
+                  [--fault-seed S]  (dedicated fault RNG stream)
                   --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
                   --threads N      (split the run into N replication shards
                   on N workers; merged Welford/P2 stats. Deterministic per
@@ -140,12 +146,13 @@ COMMANDS:
                   --time-scale S --inject-overhead
                   --speeds 1.0,0.5,.. | --speed-dist SPEC  (slowdown-only
                   executor pinning, factors in (0,1])
-    trace       Persistent task traces (schema v1/v2, ndjson or binary;
+    trace       Persistent task traces (schema v1/v2/v3, ndjson or binary;
                 scenario runs record worker speeds, replicas and
-                replica-winner flags as schema v2)
+                replica-winner flags as schema v2; fault-injected runs
+                record attempt counters and failure causes as schema v3)
                   record    --source sim|emulator --out FILE [--format ndjson|bin]
                             + the simulate/emulate flag sets (--model, --k,
-                            --speeds, --redundancy, ...)
+                            --speeds, --redundancy, --mtbf, --task-fail-p, ...)
                   replay    --in FILE [--model sm|fj|fjps|ideal] [--servers L]
                             [--overhead ...] [--in-order] [--seed S]
                   summarize --in FILE
@@ -161,7 +168,7 @@ COMMANDS:
                   --model sm|fj --servers L --k-list 50,100,...
     figure      Regenerate a paper figure's data as CSV
                   fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|
-                  hetero|hetero-approx|all
+                  hetero|hetero-approx|faults|all
                   [--out DIR] [--scale quick|paper] [--threads N]
     calibrate   Fit the 4-parameter overhead model (Sec. 2.6)
                   [--jobs N] [--k K] [--executors L]   (live sparklite)
@@ -171,7 +178,9 @@ COMMANDS:
                   with --speeds/--speed-dist/--redundancy the advice comes
                   from the approx analytic engine (microseconds); add
                   --simulate to fall back to simulation sweeps
-                  ([--threads N] sizes the sweep pool)
+                  ([--threads N] sizes the sweep pool); fault flags
+                  (--mtbf, --task-fail-p, --spec-timeout, ...) always
+                  advise from a fault-injected simulation sweep
     selfcheck   Run artifact-vs-rust cross validation
     help        Show this help
 

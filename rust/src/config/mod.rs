@@ -10,7 +10,7 @@ mod schema;
 mod toml;
 
 pub use schema::{
-    ArrivalConfig, EmulatorConfig, ExperimentConfig, ModelKind, OverheadConfig,
-    RedundancyConfig, ServiceConfig, SimulationConfig, WorkersConfig,
+    ArrivalConfig, BackoffKind, EmulatorConfig, ExperimentConfig, FaultsConfig, ModelKind,
+    OverheadConfig, RedundancyConfig, ServiceConfig, SimulationConfig, WorkersConfig,
 };
 pub use toml::{parse as parse_toml, TomlValue};

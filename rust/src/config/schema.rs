@@ -218,6 +218,120 @@ impl Default for RedundancyConfig {
     }
 }
 
+/// Retry backoff policy for failed task attempts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackoffKind {
+    /// Every retry waits `backoff_base` seconds.
+    Fixed,
+    /// Retry n waits `backoff_base * 2^(n-1)` seconds.
+    Exponential,
+}
+
+impl BackoffKind {
+    /// Parse from config/CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "fixed" => Ok(Self::Fixed),
+            "exp" | "exponential" => Ok(Self::Exponential),
+            _ => Err(format!("unknown backoff kind {s:?} (fixed|exp)")),
+        }
+    }
+}
+
+impl fmt::Display for BackoffKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Fixed => "fixed",
+            Self::Exponential => "exp",
+        })
+    }
+}
+
+/// Fault-injection scenario (`[faults]` section): Markov on/off worker
+/// failures, per-task failure probability with bounded backoff retries,
+/// and speculative re-execution of straggling tasks.
+///
+/// Every mechanism defaults to *off* (`mtbf = 0`, `task_fail_p = 0`,
+/// `spec_timeout = 0`); a config with all three off is bit-for-bit the
+/// fault-free engine (enforced by `rust/tests/fault_injection.rs`). All
+/// fault randomness draws from a dedicated RNG stream derived from
+/// `seed` mixed with the simulation seed, so the workload stream is
+/// never perturbed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultsConfig {
+    /// Mean time between per-worker failures (exponential), seconds;
+    /// `0` disables worker crashes.
+    pub mtbf: f64,
+    /// Mean time to repair a crashed worker (exponential), seconds.
+    pub mttr: f64,
+    /// Per-attempt task failure probability (failure surfaces at the
+    /// attempt's completion); `0` disables.
+    pub task_fail_p: f64,
+    /// Maximum failed attempts per task; the attempt after the last
+    /// allowed failure runs to completion (bounded retries keep every
+    /// job departing, so sojourn statistics stay well-defined).
+    pub max_retries: u32,
+    /// Backoff policy between a failure and its retry.
+    pub backoff: BackoffKind,
+    /// Backoff base delay in seconds.
+    pub backoff_base: f64,
+    /// Speculative re-execution timeout as a *multiple of the expected
+    /// task service time*; a task attempt whose service exceeds it
+    /// launches a backup copy (first-finish-wins); `0` disables.
+    pub spec_timeout: f64,
+    /// Dedicated fault-stream seed, mixed with the simulation seed (so
+    /// replication shards get distinct fault schedules automatically).
+    pub seed: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        Self {
+            mtbf: 0.0,
+            mttr: 0.0,
+            task_fail_p: 0.0,
+            max_retries: 3,
+            backoff: BackoffKind::Fixed,
+            backoff_base: 0.0,
+            spec_timeout: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// True when any fault mechanism is switched on. Inactive configs
+    /// take the fault-free fast path (no injector is built at all).
+    pub fn is_active(&self) -> bool {
+        self.crashes_enabled() || self.failures_enabled() || self.speculation_enabled()
+    }
+
+    /// Worker crashes on (`mtbf > 0`).
+    pub fn crashes_enabled(&self) -> bool {
+        self.mtbf > 0.0
+    }
+
+    /// Per-task failures on (`task_fail_p > 0`).
+    pub fn failures_enabled(&self) -> bool {
+        self.task_fail_p > 0.0
+    }
+
+    /// Speculative re-execution on (`spec_timeout > 0`).
+    pub fn speculation_enabled(&self) -> bool {
+        self.spec_timeout > 0.0
+    }
+
+    /// Delay before retry number `retry` (1-based).
+    pub fn backoff_delay(&self, retry: u32) -> f64 {
+        match self.backoff {
+            BackoffKind::Fixed => self.backoff_base,
+            BackoffKind::Exponential => {
+                self.backoff_base * f64::from(1u32 << (retry - 1).min(30))
+            }
+        }
+    }
+}
+
 /// One simulation run configuration.
 #[derive(Clone, Debug)]
 pub struct SimulationConfig {
@@ -244,6 +358,8 @@ pub struct SimulationConfig {
     pub workers: Option<WorkersConfig>,
     /// Task replication; `None` = no redundancy (r = 1).
     pub redundancy: Option<RedundancyConfig>,
+    /// Fault injection; `None` (or an all-off section) = fault-free.
+    pub faults: Option<FaultsConfig>,
 }
 
 impl Default for SimulationConfig {
@@ -260,6 +376,7 @@ impl Default for SimulationConfig {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         }
     }
 }
@@ -276,6 +393,16 @@ impl SimulationConfig {
         if self.model != ModelKind::Ideal && self.tasks_per_job < self.servers {
             return Err(format!(
                 "tiny-tasks regime requires k >= l (got k={}, l={})",
+                self.tasks_per_job, self.servers
+            ));
+        }
+        if self.model == ModelKind::ForkJoinPerServer && self.tasks_per_job != self.servers {
+            // Was an assert in the model constructor — CLI-reachable via
+            // `simulate --model fjps --k 100 --servers 50`, so it must be
+            // an error with context, not a panic.
+            return Err(format!(
+                "per-server fork-join binds one task per server and requires k = l \
+                 (got k={}, l={})",
                 self.tasks_per_job, self.servers
             ));
         }
@@ -316,6 +443,80 @@ impl SimulationConfig {
                      remove [redundancy] or pick sm/fj/fjps"
                         .into(),
                 );
+            }
+        }
+        if let Some(f) = &self.faults {
+            if !(f.mtbf >= 0.0 && f.mtbf.is_finite()) {
+                return Err(format!("faults.mtbf must be finite and >= 0, got {}", f.mtbf));
+            }
+            if f.mtbf > 0.0 && !(f.mttr > 0.0 && f.mttr.is_finite()) {
+                return Err(format!(
+                    "faults.mttr must be finite and > 0 when mtbf > 0, got {}",
+                    f.mttr
+                ));
+            }
+            if !(0.0..1.0).contains(&f.task_fail_p) {
+                return Err(format!(
+                    "faults.task_fail_p must be in [0, 1), got {}",
+                    f.task_fail_p
+                ));
+            }
+            if f.task_fail_p > 0.0 && f.max_retries == 0 {
+                return Err(
+                    "faults.task_fail_p needs max_retries >= 1 (a zero retry budget \
+                     makes the failure draw a no-op)"
+                        .into(),
+                );
+            }
+            if !(f.backoff_base >= 0.0 && f.backoff_base.is_finite()) {
+                return Err(format!(
+                    "faults.backoff_base must be finite and >= 0, got {}",
+                    f.backoff_base
+                ));
+            }
+            if !(f.spec_timeout >= 0.0 && f.spec_timeout.is_finite()) {
+                return Err(format!(
+                    "faults.spec_timeout must be finite and >= 0, got {}",
+                    f.spec_timeout
+                ));
+            }
+            if f.is_active() && self.model == ModelKind::Ideal {
+                return Err(
+                    "fault injection needs per-worker dispatch; the ideal \
+                     equisized-partition model has none — pick sm/fj/fjps"
+                        .into(),
+                );
+            }
+            if f.is_active()
+                && self.model == ModelKind::ForkJoinPerServer
+                && (self.workers.is_some() || self.replicas() > 1)
+            {
+                return Err(
+                    "fault injection on the per-server fork-join model supports \
+                     homogeneous workers only; drop [workers]/[redundancy] or \
+                     use sm/fj"
+                        .into(),
+                );
+            }
+            if f.speculation_enabled() {
+                if self.servers < 2 {
+                    return Err("faults.spec_timeout needs at least 2 servers".into());
+                }
+                if self.model == ModelKind::ForkJoinPerServer {
+                    return Err(
+                        "speculative re-execution hedges across a shared queue; the \
+                         per-server fork-join model binds tasks to servers — use sm/fj"
+                            .into(),
+                    );
+                }
+                if self.workers.is_some() || self.replicas() > 1 {
+                    return Err(
+                        "faults.spec_timeout composes with the homogeneous dispatcher \
+                         (it is itself a dynamic replica); drop [workers]/[redundancy] \
+                         or use redundancy.replicas instead"
+                            .into(),
+                    );
+                }
             }
         }
         Ok(())
@@ -473,12 +674,17 @@ impl ExperimentConfig {
             Some(sec) => Some(redundancy_from_section(sec)?),
             None => None,
         };
-        if workers.is_some() || redundancy.is_some() {
+        let faults = match doc.get("faults") {
+            Some(sec) => Some(faults_from_section(sec)?),
+            None => None,
+        };
+        if workers.is_some() || redundancy.is_some() || faults.is_some() {
             let sim = simulation
                 .as_mut()
-                .ok_or("[workers]/[redundancy] require a [simulation] section")?;
+                .ok_or("[workers]/[redundancy]/[faults] require a [simulation] section")?;
             sim.workers = workers;
             sim.redundancy = redundancy;
+            sim.faults = faults;
         }
         let emulator = match doc.get("emulator") {
             Some(sec) => Some(emu_from_section(sec)?),
@@ -578,6 +784,20 @@ fn redundancy_from_section(sec: &Section) -> Result<RedundancyConfig, String> {
     Ok(RedundancyConfig { replicas, launch_overhead })
 }
 
+fn faults_from_section(sec: &Section) -> Result<FaultsConfig, String> {
+    let d = FaultsConfig::default();
+    Ok(FaultsConfig {
+        mtbf: get_f64(sec, "mtbf", d.mtbf)?,
+        mttr: get_f64(sec, "mttr", d.mttr)?,
+        task_fail_p: get_f64(sec, "task_fail_p", d.task_fail_p)?,
+        max_retries: get_usize(sec, "max_retries", d.max_retries as usize)? as u32,
+        backoff: BackoffKind::parse(&get_str(sec, "backoff", "fixed")?)?,
+        backoff_base: get_f64(sec, "backoff_base", d.backoff_base)?,
+        spec_timeout: get_f64(sec, "spec_timeout", d.spec_timeout)?,
+        seed: get_usize(sec, "seed", 0)? as u64,
+    })
+}
+
 fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
     let d = SimulationConfig::default();
     Ok(SimulationConfig {
@@ -592,6 +812,7 @@ fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
         overhead: overhead_from(sec)?,
         workers: None,
         redundancy: None,
+        faults: None,
     })
 }
 
@@ -797,6 +1018,83 @@ speed_seed = 7
             "[emulator]\nexecutors = 3\ntasks_per_job = 4\nspeeds = [1.0, 0.5]\n",
         )
         .is_err());
+    }
+
+    #[test]
+    fn parse_faults_section() {
+        let cfg = ExperimentConfig::from_str(
+            r#"
+[simulation]
+model = "fj"
+servers = 4
+tasks_per_job = 16
+[faults]
+mtbf = 500.0
+mttr = 25.0
+task_fail_p = 0.05
+max_retries = 4
+backoff = "exp"
+backoff_base = 0.5
+seed = 9
+"#,
+        )
+        .unwrap();
+        let f = cfg.simulation.unwrap().faults.unwrap();
+        assert!(f.is_active() && f.crashes_enabled() && f.failures_enabled());
+        assert!(!f.speculation_enabled());
+        assert_eq!(f.mtbf, 500.0);
+        assert_eq!(f.mttr, 25.0);
+        assert_eq!(f.max_retries, 4);
+        assert_eq!(f.backoff, BackoffKind::Exponential);
+        assert_eq!(f.backoff_delay(1), 0.5);
+        assert_eq!(f.backoff_delay(3), 2.0);
+        assert_eq!(f.seed, 9);
+        // An all-off section parses but reports inactive.
+        let cfg = ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[faults]\n",
+        )
+        .unwrap();
+        assert!(!cfg.simulation.unwrap().faults.unwrap().is_active());
+    }
+
+    #[test]
+    fn faults_section_is_validated() {
+        // Crashes need a repair time.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[faults]\nmtbf = 100.0\n",
+        )
+        .is_err());
+        // Failure probability outside [0, 1).
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[faults]\ntask_fail_p = 1.5\n",
+        )
+        .is_err());
+        // p > 0 with a zero retry budget is a silent no-op — rejected.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n\
+             [faults]\ntask_fail_p = 0.1\nmax_retries = 0\n",
+        )
+        .is_err());
+        // Faults need per-worker dispatch; ideal has none.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nmodel = \"ideal\"\nservers = 4\ntasks_per_job = 8\n\
+             [faults]\ntask_fail_p = 0.1\n",
+        )
+        .is_err());
+        // Speculation composes with the homogeneous dispatcher only.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [faults]\nspec_timeout = 3.0\n[redundancy]\nreplicas = 2\n",
+        )
+        .is_err());
+        // Faults without a [simulation] section.
+        assert!(ExperimentConfig::from_str("[faults]\ntask_fail_p = 0.1\n").is_err());
+        // fjps now rejects k != l at validation (was an assert).
+        let err = ExperimentConfig::from_str(
+            "[simulation]\nmodel = \"fjps\"\nservers = 4\ntasks_per_job = 8\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("k = l"), "{err}");
     }
 
     #[test]

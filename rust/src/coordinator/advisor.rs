@@ -240,6 +240,7 @@ mod tests {
                 1.5, 1.5, 1.5, 1.5, 0.5, 0.5, 0.5, 0.5,
             ])),
             redundancy: Some(RedundancyConfig::new(2)),
+            faults: None,
         };
         let pool = ThreadPool::new(4);
         let ks = k_grid(l, 16.0);

@@ -247,6 +247,7 @@ fn sim_base_for(
         overhead: None,
         workers,
         redundancy,
+        faults: None,
     }
 }
 
@@ -365,6 +366,7 @@ mod tests {
             overhead: Some(injected),
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = crate::sim::run(
             &cfg,

@@ -4,7 +4,8 @@ use super::figures::{self, FigureCtx, Scale};
 use super::{advisor, calibrate};
 use crate::cli::Args;
 use crate::config::{
-    EmulatorConfig, ModelKind, OverheadConfig, RedundancyConfig, SimulationConfig, WorkersConfig,
+    BackoffKind, EmulatorConfig, FaultsConfig, ModelKind, OverheadConfig, RedundancyConfig,
+    SimulationConfig, WorkersConfig,
 };
 use crate::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
 use crate::sim::{self, RunOptions};
@@ -65,6 +66,49 @@ fn scenario_from_args(
     Ok((workers, redundancy))
 }
 
+/// Parse the fault-injection flags: `--mtbf S --mttr S` (Markov worker
+/// crashes), `--task-fail-p P --max-retries N --fault-backoff fixed|exp
+/// --fault-backoff-base S` (per-task failures with bounded retries), and
+/// `--spec-timeout F` (speculative re-execution after F × E[task]).
+/// Returns `None` when no fault mechanism is enabled, so fault-free runs
+/// stay on the untouched (bit-for-bit identical) code paths.
+fn faults_from_args(args: &Args) -> Result<Option<FaultsConfig>> {
+    let d = FaultsConfig::default();
+    let max_retries = args.get_u64("max-retries", u64::from(d.max_retries)).map_err(e)?;
+    let cfg = FaultsConfig {
+        mtbf: args.get_f64("mtbf", d.mtbf).map_err(e)?,
+        mttr: args.get_f64("mttr", d.mttr).map_err(e)?,
+        task_fail_p: args.get_f64("task-fail-p", d.task_fail_p).map_err(e)?,
+        max_retries: u32::try_from(max_retries)
+            .map_err(|_| anyhow::anyhow!("--max-retries {max_retries} is out of range"))?,
+        backoff: BackoffKind::parse(&args.get_or("fault-backoff", "fixed")).map_err(e)?,
+        backoff_base: args.get_f64("fault-backoff-base", d.backoff_base).map_err(e)?,
+        spec_timeout: args.get_f64("spec-timeout", d.spec_timeout).map_err(e)?,
+        seed: args.get_u64("fault-seed", d.seed).map_err(e)?,
+    };
+    Ok(cfg.is_active().then_some(cfg))
+}
+
+/// Parse a `--k-list 50,100,...` flag into task counts, rejecting
+/// non-integer or non-positive entries (a negative value used to
+/// saturate to k = 0 and panic deep inside the sweep).
+fn k_list_from_args(args: &Args, key: &str) -> Result<Option<Vec<usize>>> {
+    let Some(list) = args.get_list_f64(key).map_err(e)? else {
+        return Ok(None);
+    };
+    let mut ks = Vec::with_capacity(list.len());
+    for x in list {
+        if !(x.is_finite() && x >= 1.0 && x.fract() == 0.0) {
+            bail!("--{key}: entries must be positive integers, got {x}");
+        }
+        ks.push(x as usize);
+    }
+    if ks.is_empty() {
+        bail!("--{key}: needs at least one entry");
+    }
+    Ok(Some(ks))
+}
+
 /// Sweep pool sized by `--threads` (absent or 0 = machine default).
 fn pool_from_args(args: &Args) -> Result<ThreadPool> {
     Ok(match args.get_usize("threads", 0).map_err(e)? {
@@ -112,6 +156,7 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         overhead: overhead_from_args(args)?,
         workers,
         redundancy,
+        faults: faults_from_args(args)?,
     };
     let opts = RunOptions {
         in_order_departures: args.get_bool("in-order"),
@@ -156,6 +201,18 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     println!("mean overhead/job {:.6} s", res.overhead_summary.mean());
     if cfg.replicas() > 1 {
         println!("mean redundant/job {:.6} s", res.redundant_summary.mean());
+    }
+    if let Some(f) = &cfg.faults {
+        println!(
+            "faults           mtbf {}, mttr {}, task_fail_p {}, max_retries {}, \
+             spec_timeout {}",
+            f.mtbf, f.mttr, f.task_fail_p, f.max_retries, f.spec_timeout
+        );
+        println!("mean lost/job    {:.6} s (crashed + failed-attempt work)", res.lost_summary.mean());
+        println!("mean retries/job {:.4}", res.retry_summary.mean());
+        if f.speculation_enabled() {
+            println!("mean redundant/job {:.6} s (speculative copies)", res.redundant_summary.mean());
+        }
     }
     println!("throughput       {:.0} jobs/s wall", res.jobs_per_second());
     Ok(0)
@@ -272,13 +329,8 @@ pub fn cmd_bounds(args: &Args) -> Result<i32> {
 /// `tiny-tasks stability` — stability scans.
 pub fn cmd_stability(args: &Args) -> Result<i32> {
     let l = args.get_usize("servers", 50).map_err(e)?;
-    let ks: Vec<usize> = args
-        .get_list_f64("k-list")
-        .map_err(e)?
-        .unwrap_or_else(|| vec![50.0, 100.0, 200.0, 400.0, 1000.0, 2000.0, 4000.0])
-        .into_iter()
-        .map(|x| x as usize)
-        .collect();
+    let ks: Vec<usize> = k_list_from_args(args, "k-list")?
+        .unwrap_or_else(|| vec![50, 100, 200, 400, 1000, 2000, 4000]);
     let overhead = overhead_from_args(args)?;
     println!("{:>8} {:>14} {:>14} {:>14}", "k", "sm_eq20", "sm_mc", "fj");
     for k in ks {
@@ -377,13 +429,8 @@ pub fn cmd_calibrate(args: &Args) -> Result<i32> {
         workers: None,
     };
     let l = base.executors;
-    let ks: Vec<usize> = args
-        .get_list_f64("k-list")
-        .map_err(e)?
-        .unwrap_or_else(|| vec![4.0 * l as f64, 16.0 * l as f64])
-        .into_iter()
-        .map(|x| x as usize)
-        .collect();
+    let ks: Vec<usize> =
+        k_list_from_args(args, "k-list")?.unwrap_or_else(|| vec![4 * l, 16 * l]);
     // μ = k/l per point, constant E[L].
     let mut cals = Vec::new();
     for &k in &ks {
@@ -415,14 +462,17 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let model = ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?;
     let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
     let (workers, redundancy) = scenario_from_args(args)?;
-    let rec = if workers.is_some() || redundancy.is_some() {
+    let faults = faults_from_args(args)?;
+    let rec = if workers.is_some() || redundancy.is_some() || faults.is_some() {
         if model == ModelKind::ForkJoinPerServer {
             bail!(
                 "the scenario advisor sweeps tasks-per-job and needs a \
                  tiny-tasks model (sm/fj); fjps is fixed at k = l"
             );
         }
-        if args.get_bool("simulate") {
+        // The analytic approximation knows nothing about faults, so
+        // fault-injected advice always comes from a simulation sweep.
+        if args.get_bool("simulate") || faults.is_some() {
             let jobs = args.get_usize("jobs", 8_000).map_err(e)?;
             let kappa_max = args.get_f64("kappa-max", 32.0).map_err(e)?;
             let base = SimulationConfig {
@@ -439,10 +489,15 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
                 overhead: Some(oh),
                 workers,
                 redundancy,
+                faults,
             };
             let pool = pool_from_args(args)?;
             let ks = advisor::k_grid(l, kappa_max);
-            println!("engine: simulation sweep (heterogeneous/redundant scenario)");
+            if faults.is_some() {
+                println!("engine: simulation sweep (fault-injected scenario)");
+            } else {
+                println!("engine: simulation sweep (heterogeneous/redundant scenario)");
+            }
             advisor::recommend_simulated(&pool, &base, workload, epsilon, &ks).map_err(e)?
         } else {
             let spec = crate::approx::ClusterSpec::from_scenario(l, workers.as_ref(), redundancy)
@@ -500,11 +555,21 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
     let am = ApproxModel::from_model_kind(model).map_err(e)?;
     let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
     let (workers, redundancy) = scenario_from_args(args)?;
+    let faults = faults_from_args(args)?;
+    if faults.is_some() && args.get_bool("check") {
+        bail!(
+            "--check compares the analytic curve against a fault-free sweep; \
+             the approximation does not model faults — drop the fault flags"
+        );
+    }
     let spec = ClusterSpec::from_scenario(l, workers.as_ref(), redundancy).map_err(e)?;
-    let ks: Vec<usize> = match args.get_list_f64("k-list").map_err(e)? {
-        Some(list) => list.into_iter().map(|x| x as usize).collect(),
+    let ks: Vec<usize> = match k_list_from_args(args, "k-list")? {
+        Some(list) => list,
         None => advisor::k_grid(l, args.get_f64("kappa-max", 16.0).map_err(e)?),
     };
+    if ks.is_empty() {
+        bail!("no k values to evaluate; give --k-list or a larger --kappa-max");
+    }
     if ks.iter().any(|&k| k < l) {
         bail!("tiny-tasks approximation needs k >= l for every k");
     }
@@ -523,9 +588,16 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
             Some(oh),
             workers,
             redundancy,
+            faults,
             &ks,
         )
         .map_err(e)?;
+        if faults.is_some() {
+            println!(
+                "note: faults are injected into the simulated column only; \
+                 the analytic curve is fault-free"
+            );
+        }
         let pool = pool_from_args(args)?;
         Some(
             run_sweep(&pool, points, 1.0 - epsilon, args.get_u64("seed", 1).map_err(e)?)
@@ -716,6 +788,7 @@ fn bench_sim_cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -
         overhead: None,
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 
@@ -1006,6 +1079,9 @@ fn trace_record(args: &Args) -> Result<i32> {
                 overhead: overhead_from_args(args)?,
                 workers,
                 redundancy,
+                // Fault-injected runs record as schema v3 (attempt
+                // counters + failure causes on task rows).
+                faults: faults_from_args(args)?,
             };
             let res = sim::run(
                 &cfg,
@@ -1055,6 +1131,9 @@ fn trace_replay(args: &Args) -> Result<i32> {
     let rep = crate::trace::replay(&trace, &opts).map_err(e)?;
     let recorded = trace.sojourns();
     let replayed = rep.sojourns();
+    if replayed.is_empty() || recorded.is_empty() {
+        bail!("{path}: no measured jobs to compare against");
+    }
     println!(
         "replayed {} jobs ({} tasks each) through {} on l={}",
         rep.jobs.len(),
@@ -1063,7 +1142,7 @@ fn trace_replay(args: &Args) -> Result<i32> {
         rep.servers
     );
     let mut sorted = replayed.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(f64::total_cmp);
     println!(
         "mean sojourn     {:.4} s (recorded {:.4} s)",
         replayed.iter().sum::<f64>() / replayed.len() as f64,
@@ -1115,6 +1194,18 @@ fn trace_summarize(args: &Args) -> Result<i32> {
         m.warmup,
         trace.tasks.len()
     );
+    if m.schema >= crate::trace::SCHEMA_V3 {
+        use crate::trace::cause;
+        let count = |c: u8| trace.tasks.iter().filter(|t| t.cause == c).count();
+        let max_attempt = trace.tasks.iter().map(|t| t.attempt).max().unwrap_or(1);
+        println!(
+            "faults           {} failed, {} crashed, {} speculative rows \
+             (max attempt {max_attempt})",
+            count(cause::FAILED),
+            count(cause::CRASHED),
+            count(cause::SPECULATION),
+        );
+    }
     println!("seed             {} (time_scale {})", m.seed, m.time_scale);
     let summarize = |label: &str, xs: Vec<f64>| {
         if xs.is_empty() {
@@ -1135,7 +1226,7 @@ fn trace_summarize(args: &Args) -> Result<i32> {
     );
     let mut sojourns = trace.sojourns();
     if !sojourns.is_empty() {
-        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sojourns.sort_by(f64::total_cmp);
         for q in [0.5, 0.9, 0.99] {
             println!(
                 "sojourn p{:<6} {:.4} s",

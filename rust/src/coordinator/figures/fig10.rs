@@ -55,6 +55,7 @@ pub fn fig10(ctx: &FigureCtx) -> Result<()> {
             overhead,
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = sim::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;

@@ -27,6 +27,7 @@ pub fn fig1_2(ctx: &FigureCtx) -> Result<()> {
             overhead: Some(crate::config::OverheadConfig::paper()),
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;
@@ -74,6 +75,7 @@ mod tests {
                 overhead: None,
                 workers: None,
                 redundancy: None,
+                faults: None,
             };
             let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
                 .unwrap();

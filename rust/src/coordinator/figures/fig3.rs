@@ -62,6 +62,7 @@ pub fn fig3(ctx: &FigureCtx) -> Result<()> {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         },
     };
     let q = 1.0 - eps;

@@ -78,6 +78,7 @@ pub fn fig8(ctx: &FigureCtx) -> Result<()> {
                 overhead,
                 workers: None,
                 redundancy: None,
+                faults: None,
             },
         };
         let q = 1.0 - eps;

@@ -1,0 +1,103 @@
+//! Fault-injection panel (beyond the paper): how task granularity
+//! interacts with worker crashes, task failures, and retries.
+//!
+//! The tiny-tasks argument extends to fault tolerance: a failure (crash
+//! or failed attempt) wastes at most one task's worth of service, so at
+//! constant mean job workload the *work lost per failure event* shrinks
+//! as ~1/k. The panel sweeps tasks-per-job k at constant workload
+//! (μ = k/l) twice — a fault-free baseline and a faulty configuration
+//! with Markov worker crashes plus per-attempt task failures — and
+//! emits one CSV row per (config, k):
+//!
+//! `config,k,sojourn_q,sojourn_mean,overhead_mean,lost_mean,retries_mean,lost_per_retry`
+//!
+//! where `lost_mean` is the mean crashed-plus-failed-attempt service
+//! time per job, `retries_mean` the mean retry count per job, and
+//! `lost_per_retry` their ratio — the work lost per failure event,
+//! which must decrease in k (test-enforced in
+//! `rust/tests/fault_injection.rs` and asserted by the CI smoke job).
+
+use super::{FigureCtx, Scale};
+use crate::config::{FaultsConfig, ModelKind, OverheadConfig};
+use crate::coordinator::sweep::{constant_workload_points, run_sweep};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+/// The faulty configuration swept against the baseline: worker crashes
+/// every 50 s of up-time (1 s repair) plus a 2% per-attempt failure
+/// probability with three bounded retries.
+pub fn panel_faults() -> FaultsConfig {
+    FaultsConfig {
+        mtbf: 50.0,
+        mttr: 1.0,
+        task_fail_p: 0.02,
+        max_retries: 3,
+        backoff_base: 0.01,
+        ..Default::default()
+    }
+}
+
+pub fn fig_faults(ctx: &FigureCtx) -> Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let eps = 0.01;
+    let oh = OverheadConfig::paper();
+    let (ks, jobs): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (vec![10, 20, 40, 80, 160], 6_000),
+        Scale::Paper => (vec![10, 20, 40, 80, 160, 320, 640], 40_000),
+    };
+    let configs: [(&str, Option<FaultsConfig>); 2] =
+        [("baseline", None), ("faults", Some(panel_faults()))];
+
+    let mut csv = Csv::new(vec![
+        "config",
+        "k",
+        "sojourn_q",
+        "sojourn_mean",
+        "overhead_mean",
+        "lost_mean",
+        "retries_mean",
+        "lost_per_retry",
+    ]);
+    for (cfg_i, (label, faults)) in configs.iter().enumerate() {
+        let points = constant_workload_points(
+            ModelKind::ForkJoinSingleQueue,
+            l,
+            lambda,
+            l as f64,
+            jobs,
+            Some(oh),
+            None,
+            None,
+            *faults,
+            &ks,
+        )
+        .map_err(anyhow::Error::msg)?;
+        let sims = run_sweep(ctx.pool, points, 1.0 - eps, ctx.seed ^ (0xFA17 + cfg_i as u64))
+            .map_err(anyhow::Error::msg)?;
+        for sim in &sims {
+            let lost_per_retry =
+                if sim.retry_mean > 0.0 { sim.lost_mean / sim.retry_mean } else { 0.0 };
+            csv.push_raw(vec![
+                label.to_string(),
+                sim.label.to_string(),
+                sim.sojourn_q.to_string(),
+                sim.sojourn_mean.to_string(),
+                sim.overhead_mean.to_string(),
+                sim.lost_mean.to_string(),
+                sim.retry_mean.to_string(),
+                lost_per_retry.to_string(),
+            ]);
+        }
+    }
+    let path = ctx.out_dir.join("faults_panel.csv");
+    csv.write_file(&path)?;
+    println!(
+        "faults: {} rows ({} configs x {} ks) -> {}",
+        csv.len(),
+        configs.len(),
+        ks.len(),
+        path.display()
+    );
+    Ok(())
+}

@@ -64,6 +64,7 @@ pub fn fig_hetero(ctx: &FigureCtx) -> Result<()> {
             } else {
                 None
             },
+            faults: None,
         },
     };
 

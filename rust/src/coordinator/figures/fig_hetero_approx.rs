@@ -61,6 +61,7 @@ pub fn fig_hetero_approx(ctx: &FigureCtx) -> Result<()> {
             } else {
                 None
             },
+            None,
             &ks,
         )
         .map_err(anyhow::Error::msg)?;

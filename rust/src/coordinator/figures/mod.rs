@@ -10,6 +10,7 @@ mod fig10;
 mod fig11;
 mod fig12;
 mod fig13;
+mod fig_faults;
 mod fig_hetero;
 mod fig_hetero_approx;
 
@@ -21,6 +22,7 @@ pub use fig10::fig10;
 pub use fig11::fig11;
 pub use fig12::{fig12a, fig12b};
 pub use fig13::fig13;
+pub use fig_faults::{fig_faults, panel_faults};
 pub use fig_hetero::{fig_hetero, two_class_speeds};
 pub use fig_hetero_approx::fig_hetero_approx;
 
@@ -65,7 +67,7 @@ pub struct FigureCtx<'a> {
 /// beyond-the-paper scenario panels.
 pub const ALL: &[&str] = &[
     "fig1-2", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12a", "fig12b", "fig13",
-    "hetero", "hetero-approx",
+    "hetero", "hetero-approx", "faults",
 ];
 
 /// Run one figure by id.
@@ -82,6 +84,7 @@ pub fn run(id: &str, ctx: &FigureCtx) -> Result<()> {
         "fig13" => fig13(ctx),
         "hetero" => fig_hetero(ctx),
         "hetero-approx" => fig_hetero_approx(ctx),
+        "faults" => fig_faults(ctx),
         "all" => {
             for id in ALL {
                 println!("== {id} ==");

@@ -2,7 +2,7 @@
 //! the thread pool, with per-point seeding derived from a master seed.
 
 use crate::config::{
-    ArrivalConfig, ModelKind, OverheadConfig, RedundancyConfig, ServiceConfig,
+    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, RedundancyConfig, ServiceConfig,
     SimulationConfig, WorkersConfig,
 };
 use crate::rng::spawn_seeds;
@@ -32,6 +32,11 @@ pub struct SweepOutcome {
     /// Mean cancelled-replica server time per job (redundancy cost;
     /// 0 outside redundancy scenarios).
     pub redundant_mean: f64,
+    /// Mean server time lost to crashed/failed attempts per job
+    /// (0 outside fault injection).
+    pub lost_mean: f64,
+    /// Mean task retries per job (0 outside fault injection).
+    pub retry_mean: f64,
     /// Jobs simulated per wall second (perf telemetry).
     pub jobs_per_sec: f64,
 }
@@ -68,6 +73,7 @@ pub fn constant_workload_points(
     overhead: Option<OverheadConfig>,
     workers: Option<WorkersConfig>,
     redundancy: Option<RedundancyConfig>,
+    faults: Option<FaultsConfig>,
     ks: &[usize],
 ) -> Result<Vec<SweepPoint>, String> {
     if !(mean_workload > 0.0 && mean_workload.is_finite()) {
@@ -95,6 +101,7 @@ pub fn constant_workload_points(
                 overhead,
                 workers: workers.clone(),
                 redundancy,
+                faults,
             },
         })
         .collect())
@@ -137,6 +144,8 @@ pub fn run_sweep_with(
             sojourn_mean: res.sojourn_summary.mean(),
             overhead_mean: res.overhead_summary.mean(),
             redundant_mean: res.redundant_summary.mean(),
+            lost_mean: res.lost_summary.mean(),
+            retry_mean: res.retry_summary.mean(),
             jobs_per_sec: res.jobs_per_second(),
         })
     })?;
@@ -165,6 +174,7 @@ mod tests {
                 overhead: None,
                 workers: None,
                 redundancy: None,
+                faults: None,
             },
         }
     }
@@ -251,6 +261,7 @@ mod tests {
                 None,
                 None,
                 None,
+                None,
                 &[10, 20],
             );
             assert!(r.is_err(), "workload {bad} must be rejected");
@@ -264,6 +275,7 @@ mod tests {
             None,
             None,
             None,
+            None,
             &[10],
         );
         assert!(r.is_err(), "lambda 0 must be rejected");
@@ -273,6 +285,7 @@ mod tests {
             0.5,
             10.0,
             1000,
+            None,
             None,
             None,
             None,

@@ -45,7 +45,8 @@
 //! must live until dispatch); the old engine drew at dispatch and kept
 //! O(1) per waiting job, but had no bitwise contract to honour.
 
-use super::{JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use super::{FaultInjector, JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use crate::trace::cause;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
@@ -61,11 +62,28 @@ enum EventKind {
         server: u32,
         /// Owning job's slab slot.
         slot: u32,
+        /// Dispatch sequence of the attempt (fault mode only): a finish
+        /// whose `dseq` no longer matches the server's running attempt
+        /// is stale — the attempt was killed by a crash or lost a
+        /// speculation race — and is ignored.
+        dseq: u64,
     },
     /// Split-merge: the in-service job departs (scheduled at
     /// last-task-finish + pre-departure overhead; the overhead *blocks*
     /// the next job, Sec. 2.6).
     Departure(u32),
+    /// Fault injection: the server goes down, killing its in-flight
+    /// attempt (Markov on/off worker process).
+    Crash(u32),
+    /// Fault injection: the server's repair completes and it rejoins the
+    /// idle pool; the next crash is scheduled from the injector.
+    Repair(u32),
+    /// Fault injection: a failed attempt re-enters the ready queue after
+    /// its backoff delay (carries the retry's pre-drawn samples).
+    Retry(ReadyTask),
+    /// Fault injection: the attempt dispatched at `dseq` exceeded the
+    /// speculation deadline; launch a backup copy if a server is idle.
+    SpecLaunch { server: u32, dseq: u64 },
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -124,19 +142,43 @@ struct JobState {
     /// Pre-departure overhead (set when the job completes; read when the
     /// split-merge departure event fires).
     pd: f64,
+    /// Server time lost to crashed/failed attempts (fault mode).
+    lost: f64,
+    /// Server time burnt by cancelled speculation copies (fault mode).
+    redundant: f64,
+    /// Attempts beyond the first across the job's tasks (fault mode).
+    retries: u32,
 }
 
 /// One queued task with its pre-drawn samples.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 struct ReadyTask {
     /// Owning job's slab slot.
     slot: u32,
     /// Task index within the job's current stage (trace label).
     task: u32,
+    /// Attempt number, 1-based (always 1 without fault injection).
+    attempt: u32,
     /// Pre-drawn execution time.
     exec: f64,
     /// Pre-drawn task-service overhead.
     overhead: f64,
+}
+
+/// A task attempt currently occupying a server (fault mode only; the
+/// fault-free path never reads or writes these).
+#[derive(Clone, Copy, Debug)]
+struct Running {
+    /// Dispatch sequence — the staleness token carried by the attempt's
+    /// `TaskFinish`/`SpecLaunch` events.
+    seq: u64,
+    /// The attempt's task and samples.
+    rt: ReadyTask,
+    start: f64,
+    /// Server running this attempt's speculation twin, if hedged.
+    partner: Option<u32>,
+    /// True for a speculative backup copy.
+    is_backup: bool,
 }
 
 /// Event-calendar simulator for (possibly multi-stage) tiny-task jobs.
@@ -168,6 +210,16 @@ pub struct Calendar {
     free_slots: Vec<u32>,
     total_jobs: u32,
     completed: Vec<JobRecord>,
+    /// Fault injection (crashes, retries, speculation). `None` keeps the
+    /// fault-free event flow bit-for-bit unchanged.
+    faults: Option<FaultInjector>,
+    /// Per-server in-flight attempt (fault mode only).
+    running: Vec<Option<Running>>,
+    /// Per-server down flag (fault mode only).
+    down: Vec<bool>,
+    /// Dispatch counter: each attempt gets a unique sequence number so
+    /// crashes and speculation races can invalidate its pending events.
+    dseq: u64,
 }
 
 impl Calendar {
@@ -194,7 +246,24 @@ impl Calendar {
             free_slots: Vec::new(),
             total_jobs: 0,
             completed: Vec::new(),
+            faults: None,
+            running: Vec::new(),
+            down: Vec::new(),
+            dseq: 0,
         }
+    }
+
+    /// Attach a fault injector (worker crashes, bounded retries,
+    /// speculative backups). The injector's crash schedule is consumed
+    /// forward across runs, so attach a fresh injector per measured run.
+    ///
+    /// Accounting note: `workload`/`task_overhead` always reflect the
+    /// primary pre-drawn samples (the draw-order contract); a winning
+    /// backup contributes its finish time, and the cancelled copy's wall
+    /// time lands in `redundant_work`.
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
     }
 
     fn push_event(&mut self, time: f64, kind: EventKind) {
@@ -223,8 +292,24 @@ impl Calendar {
         self.free_slots.clear();
         self.completed.clear();
         self.total_jobs = n_jobs as u32;
+        self.running.clear();
+        self.running.resize(self.servers, None);
+        self.down.clear();
+        self.down.resize(self.servers, false);
+        self.dseq = 0;
         if n_jobs == 0 {
             return Vec::new();
+        }
+        // Seed the crash calendar: one pending Crash event per server,
+        // rescheduled from each Repair. The worker on/off process runs
+        // regardless of load, so these live on the heap from t = 0.
+        if self.faults.is_some() {
+            for s in 0..self.servers as u32 {
+                let c = self.faults.as_ref().expect("checked").peek_crash(s);
+                if c.is_finite() {
+                    self.push_event(c, EventKind::Crash(s));
+                }
+            }
         }
 
         // Lazy arrival stream: draw only the first arrival here; each
@@ -237,16 +322,31 @@ impl Calendar {
         while let Some(ev) = self.heap.pop() {
             match ev.kind {
                 EventKind::Arrival(j) => self.on_arrival(ev.time, j, workload, overhead),
-                EventKind::TaskFinish { server, slot } => {
-                    self.on_finish(ev.time, server, slot, workload, overhead)
+                EventKind::TaskFinish { server, slot, dseq } => {
+                    self.on_finish(ev.time, server, slot, dseq, workload, overhead, trace)
                 }
                 EventKind::Departure(slot) => {
                     // Split-merge floor clears at the padded instant.
                     self.record_departure(ev.time, slot);
                     self.in_service = None;
                 }
+                EventKind::Crash(s) => self.on_crash(ev.time, s, trace),
+                EventKind::Repair(s) => self.on_repair(s),
+                // The backoff delay elapsed: the retry re-enters at the
+                // queue front (in split-merge the in-service job's task
+                // must run ahead of pending jobs' queued tasks).
+                EventKind::Retry(rt) => self.ready.push_front(rt),
+                EventKind::SpecLaunch { server, dseq } => {
+                    self.on_spec_launch(ev.time, server, dseq, workload, overhead)
+                }
             }
             self.dispatch(ev.time, trace);
+            // The crash/repair calendar reschedules itself forever; stop
+            // once every job has departed (no-op without faults — the
+            // heap simply drains).
+            if self.completed.len() as u32 == self.total_jobs {
+                break;
+            }
         }
         let mut out = std::mem::take(&mut self.completed);
         out.sort_by_key(|r| r.index);
@@ -265,6 +365,9 @@ impl Calendar {
             workload: 0.0,
             task_overhead: 0.0,
             pd: 0.0,
+            lost: 0.0,
+            redundant: 0.0,
+            retries: 0,
         };
         match self.free_slots.pop() {
             Some(s) => {
@@ -303,7 +406,7 @@ impl Calendar {
                 self.scratch.clear();
                 for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
                     js.workload += exec;
-                    self.scratch.push(ReadyTask { slot, task, exec, overhead: 0.0 });
+                    self.scratch.push(ReadyTask { slot, task, attempt: 1, exec, overhead: 0.0 });
                 }
                 for rt in self.scratch.drain(..).rev() {
                     self.ready.push_front(rt);
@@ -311,7 +414,7 @@ impl Calendar {
             } else {
                 for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
                     js.workload += exec;
-                    self.ready.push_back(ReadyTask { slot, task, exec, overhead: 0.0 });
+                    self.ready.push_back(ReadyTask { slot, task, attempt: 1, exec, overhead: 0.0 });
                 }
             }
             return;
@@ -325,7 +428,7 @@ impl Calendar {
                 let oh = overhead.sample_task(workload.rng());
                 js.workload += exec;
                 js.task_overhead += oh;
-                self.scratch.push(ReadyTask { slot, task, exec, overhead: oh });
+                self.scratch.push(ReadyTask { slot, task, attempt: 1, exec, overhead: oh });
             }
             for rt in self.scratch.drain(..).rev() {
                 self.ready.push_front(rt);
@@ -336,7 +439,7 @@ impl Calendar {
                 let oh = overhead.sample_task(workload.rng());
                 js.workload += exec;
                 js.task_overhead += oh;
-                self.ready.push_back(ReadyTask { slot, task, exec, overhead: oh });
+                self.ready.push_back(ReadyTask { slot, task, attempt: 1, exec, overhead: oh });
             }
         }
     }
@@ -359,15 +462,221 @@ impl Calendar {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_finish(
         &mut self,
         now: f64,
         server: u32,
         slot: u32,
+        dseq: u64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) {
+        if self.faults.is_some() {
+            return self.on_finish_faulty(now, server, dseq, workload, overhead, trace);
+        }
+        self.idle.push(server);
+        self.finish_logical_task(now, slot, workload, overhead);
+    }
+
+    /// Fault-mode finish: validate the attempt, resolve speculation
+    /// races, draw task failure, and either retry or complete.
+    fn on_finish_faulty(
+        &mut self,
+        now: f64,
+        server: u32,
+        dseq: u64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) {
+        let sv = server as usize;
+        let run = match self.running[sv] {
+            Some(r) if r.seq == dseq => r,
+            // Stale: the attempt was killed by a crash or lost a
+            // speculation race; its server was released back then.
+            _ => return,
+        };
+        self.running[sv] = None;
+        self.idle.push(server);
+        let slot = run.rt.slot;
+        // First finish wins a speculation race: cancel the twin and
+        // charge its wall time as redundant work.
+        if let Some(p) = run.partner {
+            if let Some(loser) = self.running[p as usize].take() {
+                let js = &mut self.jobs[slot as usize];
+                js.redundant += now - loser.start;
+                if trace.is_enabled() {
+                    let index = self.jobs[slot as usize].index;
+                    trace.record(TraceEvent {
+                        job: index,
+                        task: loser.rt.task,
+                        server: p,
+                        start: loser.start,
+                        end: now,
+                        overhead: loser.rt.overhead.min(now - loser.start),
+                        winner: false,
+                        attempt: loser.rt.attempt,
+                        cause: cause::SPECULATION,
+                    });
+                }
+                self.idle.push(p);
+            }
+        }
+        let fi = self.faults.as_mut().expect("fault path");
+        let attempt = run.rt.attempt;
+        if attempt <= fi.config().max_retries && fi.failure_draw() {
+            // The attempt fails at completion: its full service time is
+            // lost and the retry re-enters after the backoff delay with
+            // a freshly charged task overhead (Sec. 2.6 re-charge).
+            let oh = fi.retry_overhead(overhead);
+            let delay = fi.config().backoff_delay(attempt);
+            let js = &mut self.jobs[slot as usize];
+            js.lost += now - run.start;
+            js.retries += 1;
+            js.task_overhead += oh;
+            js.outstanding -= 1;
+            js.to_dispatch += 1;
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job: self.jobs[slot as usize].index,
+                    task: run.rt.task,
+                    server,
+                    start: run.start,
+                    end: now,
+                    overhead: run.rt.overhead,
+                    winner: false,
+                    attempt,
+                    cause: cause::FAILED,
+                });
+            }
+            let retry = ReadyTask { attempt: attempt + 1, overhead: oh, ..run.rt };
+            self.push_event(now + delay, EventKind::Retry(retry));
+            return;
+        }
+        if trace.is_enabled() {
+            trace.record(TraceEvent {
+                job: self.jobs[slot as usize].index,
+                task: run.rt.task,
+                server,
+                start: run.start,
+                end: now,
+                overhead: run.rt.overhead,
+                winner: true,
+                attempt,
+                cause: if run.is_backup { cause::SPECULATION } else { cause::NONE },
+            });
+        }
+        self.finish_logical_task(now, slot, workload, overhead);
+    }
+
+    /// Worker crash: consume the injector's pending crash, kill any
+    /// in-flight attempt (elapsed service is lost work; no retry budget
+    /// is spent), and schedule the repair.
+    fn on_crash(&mut self, now: f64, server: u32, trace: &mut TraceLog) {
+        let sv = server as usize;
+        let fi = self.faults.as_mut().expect("crash without injector");
+        let (up, _next) = fi.consume_crash(server);
+        self.down[sv] = true;
+        self.push_event(up, EventKind::Repair(server));
+        match self.running[sv].take() {
+            Some(run) => {
+                self.jobs[run.rt.slot as usize].lost += now - run.start;
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job: self.jobs[run.rt.slot as usize].index,
+                        task: run.rt.task,
+                        server,
+                        start: run.start,
+                        end: now,
+                        overhead: run.rt.overhead.min(now - run.start),
+                        winner: false,
+                        attempt: run.rt.attempt,
+                        cause: cause::CRASHED,
+                    });
+                }
+                match run.partner {
+                    // A speculation copy dies with its worker; the
+                    // surviving twin carries the logical task alone.
+                    Some(p) => {
+                        if let Some(other) = &mut self.running[p as usize] {
+                            other.partner = None;
+                        }
+                    }
+                    // A solo attempt dies: requeue it at the front for
+                    // immediate re-dispatch with the same draws.
+                    None => {
+                        let js = &mut self.jobs[run.rt.slot as usize];
+                        js.outstanding -= 1;
+                        js.to_dispatch += 1;
+                        self.ready.push_front(run.rt);
+                    }
+                }
+            }
+            // Idle worker goes down: pull it from the idle stack.
+            None => self.idle.retain(|&s| s != server),
+        }
+    }
+
+    /// Repair done: the worker rejoins the idle pool and its next crash
+    /// goes on the calendar.
+    fn on_repair(&mut self, server: u32) {
+        self.down[server as usize] = false;
+        self.idle.push(server);
+        let next = self.faults.as_ref().expect("repair without injector").peek_crash(server);
+        if next.is_finite() {
+            self.push_event(next, EventKind::Crash(server));
+        }
+    }
+
+    /// The attempt at (`server`, `dseq`) outlived the speculation
+    /// deadline: launch a backup copy with fresh fault-stream draws on
+    /// an idle server, first finish wins. No idle server → no hedge.
+    fn on_spec_launch(
+        &mut self,
+        now: f64,
+        server: u32,
+        dseq: u64,
         workload: &mut Workload,
         overhead: &OverheadModel,
     ) {
-        self.idle.push(server);
+        let sv = server as usize;
+        let rt = match self.running[sv] {
+            Some(r) if r.seq == dseq && r.partner.is_none() => r.rt,
+            _ => return,
+        };
+        let Some(backup_server) = self.idle.pop() else {
+            return;
+        };
+        let fi = self.faults.as_mut().expect("speculation without injector");
+        let (exec, oh) = fi.backup_draws(workload, overhead);
+        self.dseq += 1;
+        let backup = Running {
+            seq: self.dseq,
+            rt: ReadyTask { exec, overhead: oh, ..rt },
+            start: now,
+            partner: Some(server),
+            is_backup: true,
+        };
+        self.running[backup_server as usize] = Some(backup);
+        self.running[sv].as_mut().expect("validated above").partner = Some(backup_server);
+        self.push_event(
+            now + exec + oh,
+            EventKind::TaskFinish { server: backup_server, slot: rt.slot, dseq: self.dseq },
+        );
+    }
+
+    /// Shared tail of a logical task's completion: decrement the
+    /// outstanding count and cross the stage barrier / complete the job
+    /// when it was the last one.
+    fn finish_logical_task(
+        &mut self,
+        now: f64,
+        slot: u32,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+    ) {
         let js = &mut self.jobs[slot as usize];
         js.outstanding -= 1;
         if js.outstanding > 0 || js.to_dispatch > 0 {
@@ -411,7 +720,9 @@ impl Calendar {
             workload: js.workload,
             task_overhead: js.task_overhead,
             pre_departure_overhead: pd,
-            redundant_work: 0.0,
+            redundant_work: js.redundant,
+            lost_work: js.lost,
+            retries: js.retries,
         });
         self.free_slots.push(slot);
     }
@@ -429,7 +740,9 @@ impl Calendar {
             workload: js.workload,
             task_overhead: js.task_overhead,
             pre_departure_overhead: js.pd,
-            redundant_work: 0.0,
+            redundant_work: js.redundant,
+            lost_work: js.lost,
+            retries: js.retries,
         });
         self.free_slots.push(slot);
     }
@@ -462,7 +775,23 @@ impl Calendar {
                 js.first_start = start;
             }
             let finish = start + rt.exec + rt.overhead;
-            if trace.is_enabled() {
+            if self.faults.is_some() {
+                // Fault mode: register the attempt (its events carry the
+                // dispatch sequence for staleness checks) and put it on
+                // the speculation calendar if it outlives the deadline.
+                // Trace events are recorded at resolution, not here —
+                // the attempt may yet crash, fail, or lose a race.
+                self.dseq += 1;
+                self.running[server as usize] =
+                    Some(Running { seq: self.dseq, rt, start, partner: None, is_backup: false });
+                let deadline = self.faults.as_ref().expect("checked").spec_deadline();
+                if finish - start > deadline {
+                    self.push_event(
+                        start + deadline,
+                        EventKind::SpecLaunch { server, dseq: self.dseq },
+                    );
+                }
+            } else if trace.is_enabled() {
                 trace.record(TraceEvent {
                     job: js.index,
                     task: rt.task,
@@ -471,9 +800,14 @@ impl Calendar {
                     end: finish,
                     overhead: rt.overhead,
                     winner: true,
+                    attempt: 1,
+                    cause: cause::NONE,
                 });
             }
-            self.push_event(finish, EventKind::TaskFinish { server, slot: rt.slot });
+            self.push_event(
+                finish,
+                EventKind::TaskFinish { server, slot: rt.slot, dseq: self.dseq },
+            );
         }
     }
 
@@ -602,6 +936,86 @@ mod tests {
         let recs = cal.run(500, &mut w, &oh, &mut tr);
         assert_eq!(recs.len(), 500);
         assert!(cal.slab_len() <= 2, "slab grew to {} for a 1-in-flight run", cal.slab_len());
+    }
+
+    fn faults(cfg: crate::config::FaultsConfig, servers: usize, seed: u64) -> FaultInjector {
+        FaultInjector::new(cfg, servers, seed, 1.0)
+    }
+
+    /// Crashes kill in-flight attempts (lost work accrues) yet every job
+    /// still departs, deterministically in the seed.
+    #[test]
+    fn crashes_lose_work_deterministically() {
+        let cfg = crate::config::FaultsConfig {
+            mtbf: 5.0,
+            mttr: 0.5,
+            ..Default::default()
+        };
+        let run_once = || {
+            let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4])
+                .with_faults(Some(faults(cfg, 2, 42)));
+            let mut w = workload(4.0, 1.0, 1);
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            cal.run(50, &mut w, &oh, &mut tr)
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a.len(), 50);
+        let lost: f64 = a.iter().map(|r| r.lost_work).sum();
+        assert!(lost > 0.0, "crashes must lose work");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.departure, y.departure);
+            assert_eq!(x.lost_work, y.lost_work);
+        }
+    }
+
+    /// Task failures trigger counted retries with backoff; jobs depart.
+    #[test]
+    fn failures_retry_and_depart() {
+        let cfg = crate::config::FaultsConfig {
+            task_fail_p: 0.6,
+            max_retries: 3,
+            backoff_base: 0.1,
+            ..Default::default()
+        };
+        let mut cal = Calendar::new(Discipline::SplitMerge, 2, vec![4])
+            .with_faults(Some(faults(cfg, 2, 7)));
+        let mut w = workload(20.0, 1.0, 7);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(30, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 30);
+        let retries: u32 = recs.iter().map(|r| r.retries).sum();
+        let lost: f64 = recs.iter().map(|r| r.lost_work).sum();
+        assert!(retries > 0, "p=0.6 over 120 tasks must retry");
+        assert!(lost > 0.0);
+        for r in &recs {
+            assert!(r.departure >= r.arrival);
+        }
+    }
+
+    /// A straggling attempt is hedged at the speculation deadline; first
+    /// finish wins and the loser's wall time is redundant.
+    #[test]
+    fn speculation_hedges_stragglers() {
+        let cfg = crate::config::FaultsConfig {
+            spec_timeout: 0.5, // deadline = 0.5 × expected_task(=1.0)
+            ..Default::default()
+        };
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![1])
+            .with_faults(Some(faults(cfg, 2, 3)));
+        // Deterministic exec 1.0 > deadline 0.5: every task is hedged;
+        // the earlier-started primary always wins.
+        let mut w = workload(10.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(3, &mut w, &oh, &mut tr);
+        for r in &recs {
+            assert!((r.sojourn() - 1.0).abs() < 1e-12, "{}", r.sojourn());
+            assert!((r.redundant_work - 0.5).abs() < 1e-12, "{}", r.redundant_work);
+            assert_eq!(r.retries, 0);
+        }
     }
 
     /// The engine is reusable: back-to-back runs from the same instance

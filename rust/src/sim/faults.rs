@@ -1,0 +1,744 @@
+//! Fault injection & recovery: worker failures, task retries, and
+//! speculative re-execution.
+//!
+//! Three failure mechanisms, configured by the `[faults]` section
+//! ([`crate::config::FaultsConfig`]) and composable with every
+//! recursion-based engine plus the calendar DES:
+//!
+//! * **Markov on/off worker failures** — each worker alternates
+//!   exponential up-times (mean `mtbf`) and repair windows (mean
+//!   `mttr`). A crash kills the in-flight task (its partial work is
+//!   wasted) and the worker rejoins after repair; crashes retry
+//!   immediately and do not consume the retry budget.
+//! * **Per-task failure probability** — an attempt that runs to
+//!   completion fails with probability `task_fail_p`; the task retries
+//!   after a fixed or exponential backoff, up to `max_retries` failed
+//!   attempts, and each retry is re-charged the Sec.-2.6 task-service
+//!   overhead with a fresh draw. The attempt after the last allowed
+//!   retry always succeeds, so every job departs and retry accounting
+//!   is exact (`task_overhead` = completed attempts × overhead).
+//! * **Speculative re-execution** — a primary copy whose service time
+//!   exceeds `spec_timeout ×` the expected task service launches a
+//!   backup copy on the next-free server at that deadline; the first
+//!   copy to finish wins and the loser is cancelled at that instant,
+//!   exactly the first-finish-wins mechanics of the redundancy
+//!   dispatcher in [`super::scenario`]. Backup copies redraw their size
+//!   and overhead (fresh luck is the point of the hedge) and are
+//!   modeled crash- and failure-free — a documented simplification.
+//!
+//! **Determinism & degeneracy.** All fault randomness lives in streams
+//! separate from the workload stream: each worker owns a crash-schedule
+//! RNG and one shared task-level RNG serves failure draws, retry
+//! overheads, and backup copies (seeds from [`spawn_seeds`] over a mix
+//! of `simulation.seed` and `faults.seed`, so replication shards get
+//! independent fault schedules). Primary execution/overhead draws still
+//! come from the workload stream in the engine's original order, and a
+//! config without an active `[faults]` section resolves to `None`, so
+//! fault-free runs are bit-for-bit identical to the seed engines
+//! (enforced by `rust/tests/fault_injection.rs`).
+
+use super::{OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::config::{FaultsConfig, SimulationConfig};
+use crate::rng::{spawn_seeds, Pcg64, Rng, SplitMix64};
+use crate::trace::cause;
+
+/// Salt separating the fault stream family from the workload seed.
+const FAULT_STREAM_SALT: u64 = 0xFA17_1E57_C0FF_EE01;
+
+/// Outcome of dispatching one logical task under fault injection, over
+/// all of its attempts.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultOutcome {
+    /// Earliest instant any attempt of this task began service.
+    pub first_start: f64,
+    /// Finish time of the successful attempt (its winning copy).
+    pub finish: f64,
+    /// Execution draw of the winning copy (the useful work).
+    pub work: f64,
+    /// Total charged task-service overhead: one draw per attempt that
+    /// ran to completion (failed or successful); crashed attempts are
+    /// killed mid-run and charge nothing here.
+    pub overhead: f64,
+    /// Server time wasted by crashed and failed attempts.
+    pub lost: f64,
+    /// Server time consumed by cancelled speculative copies (merged
+    /// into the job's `redundant_work`, like cancelled replicas).
+    pub redundant: f64,
+    /// Attempts beyond the first (crashes + failures).
+    pub retries: u32,
+}
+
+/// Per-run fault state: worker crash schedules plus the task-level
+/// fault stream. One injector per engine instance; workers are indexed
+/// by the same server ids the engines use.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    cfg: FaultsConfig,
+    /// Next crash instant per worker (`INFINITY` when crashes are off).
+    next_crash: Vec<f64>,
+    /// Per-worker crash-schedule RNGs — crash schedules are a property
+    /// of the worker, independent of which tasks it serves.
+    worker_rng: Vec<Pcg64>,
+    /// Task-level fault stream: failure draws, retry overhead redraws,
+    /// backup-copy draws.
+    task_rng: Pcg64,
+    /// Absolute speculation deadline (seconds of service time);
+    /// `INFINITY` when speculation is off.
+    spec_deadline: f64,
+}
+
+#[inline]
+fn draw_exp(rng: &mut Pcg64, mean: f64) -> f64 {
+    -rng.next_f64_open().ln() * mean
+}
+
+impl FaultInjector {
+    /// Resolve a config's fault model. `None` when no `[faults]` section
+    /// is configured or every mechanism is off — the engines then keep
+    /// their fault-free hot paths bit-for-bit. `expected_task` is the
+    /// mean task service time E[exec] + E[overhead], the base of the
+    /// speculation deadline.
+    pub fn from_config(cfg: &SimulationConfig, expected_task: f64) -> Option<Self> {
+        let f = cfg.faults?;
+        if !f.is_active() {
+            return None;
+        }
+        Some(Self::new(f, cfg.servers, cfg.seed, expected_task))
+    }
+
+    /// Build directly from a fault config (`servers` workers, fault
+    /// streams derived from `sim_seed` and `cfg.seed`).
+    pub fn new(cfg: FaultsConfig, servers: usize, sim_seed: u64, expected_task: f64) -> Self {
+        let master = SplitMix64::new(sim_seed ^ FAULT_STREAM_SALT).next_u64() ^ cfg.seed;
+        let seeds = spawn_seeds(master, servers + 1);
+        let mut worker_rng: Vec<Pcg64> =
+            seeds[..servers].iter().map(|&s| Pcg64::seed_from_u64(s)).collect();
+        let task_rng = Pcg64::seed_from_u64(seeds[servers]);
+        let next_crash = if cfg.crashes_enabled() {
+            worker_rng.iter_mut().map(|r| draw_exp(r, cfg.mtbf)).collect()
+        } else {
+            vec![f64::INFINITY; servers]
+        };
+        let deadline = cfg.spec_timeout * expected_task;
+        let spec_deadline = if cfg.speculation_enabled() && deadline > 0.0 && deadline.is_finite()
+        {
+            deadline
+        } else {
+            f64::INFINITY
+        };
+        Self { cfg, next_crash, worker_rng, task_rng, spec_deadline }
+    }
+
+    /// The fault parameters in use.
+    pub fn config(&self) -> &FaultsConfig {
+        &self.cfg
+    }
+
+    /// Absolute speculation deadline in seconds of service time
+    /// (`INFINITY` when speculation is off).
+    pub fn spec_deadline(&self) -> f64 {
+        self.spec_deadline
+    }
+
+    /// Earliest instant `>= t` at which `server` is up, consuming any
+    /// repair windows that begin at or before `t`. Per-worker queries
+    /// must be time-monotone (they are: a server's free time only
+    /// grows), so the crash schedule is consumed strictly forward.
+    pub fn up_at(&mut self, server: u32, t: f64) -> f64 {
+        let w = server as usize;
+        let mut t = t;
+        while self.next_crash[w] <= t {
+            let c = self.next_crash[w];
+            let up = c + draw_exp(&mut self.worker_rng[w], self.cfg.mttr);
+            self.next_crash[w] = up + draw_exp(&mut self.worker_rng[w], self.cfg.mtbf);
+            if up > t {
+                t = up;
+            }
+        }
+        t
+    }
+
+    /// Does `server` crash during an attempt running over
+    /// `(start, finish)`? If so, consume the crash and return
+    /// `(crash instant, repair-done instant)`. Callers must have
+    /// resolved `start` through [`FaultInjector::up_at`] first, so the
+    /// pending crash is strictly after `start`.
+    pub fn crash_within(&mut self, server: u32, start: f64, finish: f64) -> Option<(f64, f64)> {
+        let w = server as usize;
+        let c = self.next_crash[w];
+        if c >= finish {
+            return None;
+        }
+        debug_assert!(c > start, "crash schedule not resolved via up_at");
+        let up = c + draw_exp(&mut self.worker_rng[w], self.cfg.mttr);
+        self.next_crash[w] = up + draw_exp(&mut self.worker_rng[w], self.cfg.mtbf);
+        Some((c, up))
+    }
+
+    /// Peek `server`'s next scheduled crash instant (calendar engine:
+    /// the Crash event's heap key).
+    pub fn peek_crash(&self, server: u32) -> f64 {
+        self.next_crash[server as usize]
+    }
+
+    /// Consume `server`'s pending crash (calendar engine: the Crash
+    /// event fired): draw its repair, schedule the next crash, and
+    /// return `(repair-done instant, next crash instant)`.
+    pub fn consume_crash(&mut self, server: u32) -> (f64, f64) {
+        let w = server as usize;
+        let c = self.next_crash[w];
+        debug_assert!(c.is_finite(), "consume_crash with crashes disabled");
+        let up = c + draw_exp(&mut self.worker_rng[w], self.cfg.mttr);
+        self.next_crash[w] = up + draw_exp(&mut self.worker_rng[w], self.cfg.mtbf);
+        (up, self.next_crash[w])
+    }
+
+    /// One per-attempt failure draw (false when failures are off).
+    pub fn failure_draw(&mut self) -> bool {
+        self.cfg.failures_enabled() && self.task_rng.next_f64() < self.cfg.task_fail_p
+    }
+
+    /// Fresh task-service overhead for a retry, drawn from the fault
+    /// stream ("each retry re-charges the Sec.-2.6 task overhead").
+    pub fn retry_overhead(&mut self, overhead: &OverheadModel) -> f64 {
+        overhead.sample_task(&mut self.task_rng)
+    }
+
+    /// Fresh `(execution, overhead)` draws for a backup or retry copy,
+    /// from the fault stream.
+    pub fn backup_draws(&mut self, workload: &Workload, overhead: &OverheadModel) -> (f64, f64) {
+        let exec = workload.execution_with(&mut self.task_rng);
+        let oh = overhead.sample_task(&mut self.task_rng);
+        (exec, oh)
+    }
+
+    /// Dispatch one logical task on the homogeneous earliest-free-server
+    /// heap (split-merge / single-queue fork-join) under fault
+    /// injection: resolve crashes, bounded retries with backoff, and
+    /// speculative backups until one attempt succeeds.
+    ///
+    /// The primary execution/overhead draws come from the workload
+    /// stream in exactly the fault-free engines' order; every extra
+    /// draw comes from the injector's streams.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task(
+        &mut self,
+        heap: &mut ServerHeap,
+        floor: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        job: u32,
+        task: u32,
+        trace: &mut TraceLog,
+    ) -> FaultOutcome {
+        let exec = workload.next_execution();
+        let mut oh = overhead.sample_task(workload.rng());
+
+        let mut retries = 0u32;
+        let mut fail_budget =
+            if self.cfg.failures_enabled() { self.cfg.max_retries } else { 0 };
+        let mut failed_attempts = 0u32;
+        let mut retry_floor = floor;
+        let mut first_start = f64::INFINITY;
+        let mut overhead_sum = 0.0;
+        let mut lost = 0.0;
+        let mut redundant = 0.0;
+
+        loop {
+            let attempt = 1 + retries;
+            let (t_free, server) = heap.pop();
+            let start = self.up_at(server, if retry_floor > t_free { retry_floor } else { t_free });
+            if start < first_start {
+                first_start = start;
+            }
+            let finish = start + exec + oh;
+
+            // (1) Worker crash mid-attempt: the partial work is lost,
+            // the worker rejoins after repair, the task retries
+            // immediately (crashes do not consume the retry budget).
+            if let Some((c, up)) = self.crash_within(server, start, finish) {
+                lost += c - start;
+                heap.push(up, server);
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server,
+                        start,
+                        end: c,
+                        overhead: oh.min(c - start),
+                        winner: false,
+                        attempt,
+                        cause: cause::CRASHED,
+                    });
+                }
+                retries += 1;
+                continue;
+            }
+
+            // (2) Straggler hedge: a primary exceeding the deadline
+            // launches a backup on the next-free server; first finish
+            // wins, the loser is cancelled at that instant.
+            let mut win_server = server;
+            let mut win_start = start;
+            let mut win_finish = finish;
+            let mut win_exec = exec;
+            let mut win_oh = oh;
+            if finish - start > self.spec_deadline && !heap.is_empty() {
+                let (t_free_b, server_b) = heap.pop();
+                let launch = start + self.spec_deadline;
+                let bstart =
+                    self.up_at(server_b, if launch > t_free_b { launch } else { t_free_b });
+                let (bexec, boh) = self.backup_draws(workload, overhead);
+                let bfinish = bstart + bexec + boh;
+                if bfinish < finish {
+                    // Backup wins; cancel the primary at that instant.
+                    redundant += bfinish - start;
+                    heap.push(bfinish, server);
+                    if trace.is_enabled() {
+                        trace.record(TraceEvent {
+                            job,
+                            task,
+                            server,
+                            start,
+                            end: bfinish,
+                            overhead: oh.min(bfinish - start),
+                            winner: false,
+                            attempt,
+                            cause: cause::SPECULATION,
+                        });
+                    }
+                    win_server = server_b;
+                    win_start = bstart;
+                    win_finish = bfinish;
+                    win_exec = bexec;
+                    win_oh = boh;
+                } else if bstart < finish {
+                    // Backup started but lost; cancelled mid-run.
+                    redundant += finish - bstart;
+                    heap.push(finish, server_b);
+                    if trace.is_enabled() {
+                        trace.record(TraceEvent {
+                            job,
+                            task,
+                            server: server_b,
+                            start: bstart,
+                            end: finish,
+                            overhead: boh.min(finish - bstart),
+                            winner: false,
+                            attempt,
+                            cause: cause::SPECULATION,
+                        });
+                    }
+                } else {
+                    // Backup never started; release its reservation.
+                    heap.push(t_free_b, server_b);
+                }
+            }
+
+            // (3) Failure surfaces when the attempt completes: the full
+            // service time is wasted and the task retries after backoff
+            // with a re-charged overhead draw. Once the retry budget is
+            // spent the attempt is forced to succeed, so every job
+            // departs and the accounting is exact.
+            overhead_sum += win_oh;
+            if fail_budget > 0 && self.failure_draw() {
+                fail_budget -= 1;
+                failed_attempts += 1;
+                lost += win_finish - win_start;
+                heap.push(win_finish, win_server);
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server: win_server,
+                        start: win_start,
+                        end: win_finish,
+                        overhead: win_oh,
+                        winner: false,
+                        attempt,
+                        cause: cause::FAILED,
+                    });
+                }
+                retries += 1;
+                retry_floor = win_finish + self.cfg.backoff_delay(failed_attempts);
+                oh = self.retry_overhead(overhead);
+                continue;
+            }
+
+            heap.push(win_finish, win_server);
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job,
+                    task,
+                    server: win_server,
+                    start: win_start,
+                    end: win_finish,
+                    overhead: win_oh,
+                    winner: true,
+                    attempt,
+                    cause: cause::NONE,
+                });
+            }
+            return FaultOutcome {
+                first_start,
+                finish: win_finish,
+                work: win_exec,
+                overhead: overhead_sum,
+                lost,
+                redundant,
+                retries,
+            };
+        }
+    }
+
+    /// Dispatch one task bound to a fixed server (per-server fork-join):
+    /// crashes and retries resolve on the same server; speculation is
+    /// rejected for this model at config validation. Returns the
+    /// outcome and the server's new free time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task_on(
+        &mut self,
+        server: u32,
+        t_free: f64,
+        floor: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        job: u32,
+        task: u32,
+        trace: &mut TraceLog,
+    ) -> (FaultOutcome, f64) {
+        let exec = workload.next_execution();
+        let mut oh = overhead.sample_task(workload.rng());
+
+        let mut retries = 0u32;
+        let mut fail_budget =
+            if self.cfg.failures_enabled() { self.cfg.max_retries } else { 0 };
+        let mut failed_attempts = 0u32;
+        let mut free = t_free;
+        let mut retry_floor = floor;
+        let mut first_start = f64::INFINITY;
+        let mut overhead_sum = 0.0;
+        let mut lost = 0.0;
+
+        loop {
+            let attempt = 1 + retries;
+            let start = self.up_at(server, if retry_floor > free { retry_floor } else { free });
+            if start < first_start {
+                first_start = start;
+            }
+            let finish = start + exec + oh;
+
+            if let Some((c, up)) = self.crash_within(server, start, finish) {
+                lost += c - start;
+                free = up;
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server,
+                        start,
+                        end: c,
+                        overhead: oh.min(c - start),
+                        winner: false,
+                        attempt,
+                        cause: cause::CRASHED,
+                    });
+                }
+                retries += 1;
+                continue;
+            }
+
+            overhead_sum += oh;
+            if fail_budget > 0 && self.failure_draw() {
+                fail_budget -= 1;
+                failed_attempts += 1;
+                lost += finish - start;
+                free = finish;
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server,
+                        start,
+                        end: finish,
+                        overhead: oh,
+                        winner: false,
+                        attempt,
+                        cause: cause::FAILED,
+                    });
+                }
+                retries += 1;
+                retry_floor = finish + self.cfg.backoff_delay(failed_attempts);
+                oh = self.retry_overhead(overhead);
+                continue;
+            }
+
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job,
+                    task,
+                    server,
+                    start,
+                    end: finish,
+                    overhead: oh,
+                    winner: true,
+                    attempt,
+                    cause: cause::NONE,
+                });
+            }
+            return (
+                FaultOutcome {
+                    first_start,
+                    finish,
+                    work: exec,
+                    overhead: overhead_sum,
+                    lost,
+                    redundant: 0.0,
+                    retries,
+                },
+                finish,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Deterministic;
+
+    fn det_workload(exec: f64) -> Workload {
+        Workload::new(Deterministic::new(100.0).into(), Deterministic::new(exec).into(), 1)
+    }
+
+    fn faults(f: impl FnOnce(&mut FaultsConfig)) -> FaultsConfig {
+        let mut cfg = FaultsConfig::default();
+        f(&mut cfg);
+        cfg
+    }
+
+    #[test]
+    fn inactive_config_resolves_to_none() {
+        let cfg = SimulationConfig::default();
+        assert!(FaultInjector::from_config(&cfg, 1.0).is_none());
+        let cfg = SimulationConfig {
+            faults: Some(FaultsConfig::default()),
+            ..SimulationConfig::default()
+        };
+        assert!(FaultInjector::from_config(&cfg, 1.0).is_none());
+    }
+
+    #[test]
+    fn no_crash_queries_when_crashes_disabled() {
+        let mut fi =
+            FaultInjector::new(faults(|f| f.task_fail_p = 0.1), 4, 7, 1.0);
+        for w in 0..4 {
+            assert_eq!(fi.peek_crash(w), f64::INFINITY);
+            assert_eq!(fi.up_at(w, 123.0), 123.0);
+            assert!(fi.crash_within(w, 0.0, 1e12).is_none());
+        }
+    }
+
+    #[test]
+    fn crash_schedule_deterministic_and_monotone() {
+        let mk = || {
+            FaultInjector::new(
+                faults(|f| {
+                    f.mtbf = 5.0;
+                    f.mttr = 1.0;
+                }),
+                3,
+                42,
+                1.0,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for w in 0..3 {
+            let mut prev = 0.0;
+            for _ in 0..50 {
+                let ca = a.peek_crash(w);
+                assert_eq!(ca, b.peek_crash(w), "worker {w}");
+                assert!(ca > prev);
+                let (up_a, next_a) = a.consume_crash(w);
+                let (up_b, next_b) = b.consume_crash(w);
+                assert_eq!((up_a, next_a), (up_b, next_b));
+                assert!(up_a > ca && next_a > up_a);
+                prev = ca;
+            }
+        }
+        // Distinct workers get distinct schedules.
+        let fresh = mk();
+        assert_ne!(fresh.peek_crash(0), fresh.peek_crash(1));
+    }
+
+    #[test]
+    fn up_at_skips_repair_windows() {
+        let mut fi = FaultInjector::new(
+            faults(|f| {
+                f.mtbf = 2.0;
+                f.mttr = 0.5;
+            }),
+            1,
+            9,
+            1.0,
+        );
+        let c = fi.peek_crash(0);
+        // Querying exactly at / after the crash lands after the repair.
+        let t = fi.up_at(0, c);
+        assert!(t > c);
+        assert!(fi.peek_crash(0) > t);
+    }
+
+    /// Retry accounting is exact: with a near-certain failure
+    /// probability and a deterministic overhead constant, the task
+    /// burns its whole retry budget, then the forced success lands —
+    /// total charged overhead = attempts × c, lost = failures × (e+c).
+    #[test]
+    fn retry_accounting_sums_exactly() {
+        let mut fi = FaultInjector::new(
+            faults(|f| {
+                f.task_fail_p = 1.0 - 1e-12;
+                f.max_retries = 3;
+                f.backoff_base = 0.0;
+            }),
+            2,
+            5,
+            1.0,
+        );
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::new(crate::config::OverheadConfig {
+            c_task_ts: 0.25,
+            mu_task_ts: f64::INFINITY,
+            c_job_pd: 0.0,
+            c_task_pd: 0.0,
+        });
+        let mut tr = TraceLog::enabled();
+        let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert_eq!(out.retries, 3);
+        assert!((out.overhead - 4.0 * 0.25).abs() < 1e-12, "{}", out.overhead);
+        assert!((out.lost - 3.0 * 1.25).abs() < 1e-12, "{}", out.lost);
+        assert_eq!(out.work, 1.0);
+        // 3 failed events + 1 winner, attempts 1..=4, causes recorded.
+        assert_eq!(tr.events().len(), 4);
+        assert_eq!(tr.events().iter().filter(|e| e.winner).count(), 1);
+        let win = tr.events().iter().find(|e| e.winner).unwrap();
+        assert_eq!((win.attempt, win.cause), (4, cause::NONE));
+        assert!(tr
+            .events()
+            .iter()
+            .filter(|e| !e.winner)
+            .all(|e| e.cause == cause::FAILED));
+    }
+
+    /// Backoff delays the retry: with base 2.0 fixed backoff the second
+    /// attempt cannot start before the first failure + 2.0.
+    #[test]
+    fn backoff_delays_retry() {
+        let mut fi = FaultInjector::new(
+            faults(|f| {
+                f.task_fail_p = 1.0 - 1e-12;
+                f.max_retries = 1;
+                f.backoff_base = 2.0;
+            }),
+            1,
+            5,
+            1.0,
+        );
+        let mut heap = ServerHeap::new(1, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        // Attempt 1: [0, 1], fails. Retry floor = 1 + 2. Attempt 2: [3, 4].
+        assert_eq!(out.retries, 1);
+        assert!((out.finish - 4.0).abs() < 1e-12, "{}", out.finish);
+    }
+
+    /// Speculation launches a backup at the deadline and resolves
+    /// first-finish-wins with loser time accounted as redundant work.
+    #[test]
+    fn speculation_first_finish_wins() {
+        // expected_task 0.5, spec_timeout 1 → deadline 0.5; det exec 1.0
+        // means the backup (also det 1.0) starts at 0.5 and finishes at
+        // 1.5 > 1.0 — the primary wins, loser ran [0.5, 1.0].
+        let mut fi = FaultInjector::new(faults(|f| f.spec_timeout = 1.0), 2, 3, 0.5);
+        assert_eq!(fi.spec_deadline(), 0.5);
+        let mut heap = ServerHeap::new(2, 0.0);
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        assert_eq!(out.finish, 1.0);
+        assert_eq!(out.retries, 0);
+        assert!((out.redundant - 0.5).abs() < 1e-12, "{}", out.redundant);
+        let loser = tr.events().iter().find(|e| !e.winner).unwrap();
+        assert_eq!(loser.cause, cause::SPECULATION);
+        assert_eq!((loser.start, loser.end), (0.5, 1.0));
+        // Both servers are free again at the winner's finish.
+        assert_eq!(heap.peek().0, 1.0);
+        assert_eq!(heap.max_time(), 1.0);
+    }
+
+    /// Crashes kill in-flight work deterministically per seed: two
+    /// injectors with the same seeds produce bitwise-equal outcomes,
+    /// and crash losses show up in `lost` with untouched retry budget.
+    #[test]
+    fn crashes_deterministic_and_accounted() {
+        let run = || {
+            let mut fi = FaultInjector::new(
+                faults(|f| {
+                    f.mtbf = 2.0;
+                    f.mttr = 0.5;
+                }),
+                2,
+                11,
+                1.0,
+            );
+            let mut heap = ServerHeap::new(2, 0.0);
+            let mut w = det_workload(1.0);
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            let mut lost = 0.0;
+            let mut retries = 0;
+            let mut finish = 0.0;
+            for t in 0..200 {
+                let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, t, &mut tr);
+                lost += out.lost;
+                retries += out.retries;
+                finish = out.finish;
+            }
+            (lost, retries, finish)
+        };
+        let (lost, retries, finish) = run();
+        assert_eq!(run(), (lost, retries, finish));
+        assert!(lost > 0.0, "200 unit tasks at MTBF 2 must hit crashes");
+        assert!(retries > 0);
+    }
+
+    /// The per-server variant retries on its own server and reports the
+    /// new free time.
+    #[test]
+    fn per_server_dispatch_accounts_and_frees() {
+        let mut fi = FaultInjector::new(
+            faults(|f| {
+                f.task_fail_p = 1.0 - 1e-12;
+                f.max_retries = 2;
+                f.backoff_base = 0.5;
+            }),
+            1,
+            5,
+            1.0,
+        );
+        let mut w = det_workload(1.0);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let (out, free) = fi.dispatch_task_on(0, 0.0, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        // [0,1] fail, [1.5,2.5] fail, [3,4] forced success.
+        assert_eq!(out.retries, 2);
+        assert!((out.finish - 4.0).abs() < 1e-12, "{}", out.finish);
+        assert_eq!(free, out.finish);
+        assert!((out.lost - 2.0).abs() < 1e-12);
+    }
+}

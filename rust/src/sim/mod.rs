@@ -25,6 +25,7 @@
 //! bit-for-bit to the homogeneous models.
 
 pub mod calendar;
+pub mod faults;
 mod heap;
 pub mod models;
 mod overhead;
@@ -34,6 +35,7 @@ pub mod stability;
 mod workload;
 
 pub use calendar::{Calendar, Discipline};
+pub use faults::{FaultInjector, FaultOutcome};
 pub use heap::ServerHeap;
 pub use overhead::OverheadModel;
 pub use runner::{run, RunOptions, SimResult, STREAMING_QS};
@@ -61,8 +63,14 @@ pub struct JobRecord {
     /// Pre-departure overhead applied to this job.
     pub pre_departure_overhead: f64,
     /// Server time consumed by cancelled task replicas (0 unless a
-    /// redundancy scenario is active).
+    /// redundancy scenario or speculative re-execution is active).
     pub redundant_work: f64,
+    /// Server time wasted by crashed and failed task attempts (0 unless
+    /// fault injection is active).
+    pub lost_work: f64,
+    /// Task attempts beyond the first across this job's tasks — crashes
+    /// plus failed attempts (0 unless fault injection is active).
+    pub retries: u32,
 }
 
 impl JobRecord {

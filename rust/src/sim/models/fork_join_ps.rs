@@ -4,7 +4,10 @@
 //! (Sec. 1.2), so the model requires k = l.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, Scenario, TraceEvent, TraceLog, Workload};
+use crate::sim::{
+    FaultInjector, JobRecord, OverheadModel, Scenario, TraceEvent, TraceLog, Workload,
+};
+use crate::trace::cause;
 
 /// Per-server fork-join with l servers (k = l tasks per job).
 pub struct ForkJoinPerServer {
@@ -15,13 +18,18 @@ pub struct ForkJoinPerServer {
     /// are bound to servers `i, i+1, …, i+r−1 (mod l)` — placement is
     /// static (the defining property of this model), only widened.
     scenario: Option<Scenario>,
+    /// Fault injection (crashes + bounded retries on the task's own
+    /// server; speculation and scenario composition are rejected for
+    /// this model at config validation). `None` keeps the fault-free
+    /// paths bit-for-bit unchanged.
+    faults: Option<FaultInjector>,
 }
 
 impl ForkJoinPerServer {
     /// New model with `l` servers.
     pub fn new(l: usize) -> Self {
         assert!(l >= 1);
-        Self { free: vec![0.0; l], scenario: None }
+        Self { free: vec![0.0; l], scenario: None, faults: None }
     }
 
     /// Attach a heterogeneous-worker / redundancy scenario.
@@ -31,6 +39,64 @@ impl ForkJoinPerServer {
         }
         self.scenario = scenario;
         self
+    }
+
+    /// Attach a fault injector (worker crashes + per-task retries).
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Job body under fault injection: each task retries on its own
+    /// bound server (static placement is the defining property of this
+    /// model, so recovery cannot migrate the task).
+    fn advance_faulty(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        let fi = self.faults.as_mut().expect("faulty path");
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        let mut lost_sum = 0.0;
+        let mut retries_sum = 0u32;
+        let mut last_finish = f64::NEG_INFINITY;
+        let mut first_start = f64::INFINITY;
+        for (i, free) in self.free.iter_mut().enumerate() {
+            let (out, new_free) = fi.dispatch_task_on(
+                i as u32,
+                *free,
+                arrival,
+                workload,
+                overhead,
+                n as u32,
+                i as u32,
+                trace,
+            );
+            *free = new_free;
+            workload_sum += out.work;
+            overhead_sum += out.overhead;
+            lost_sum += out.lost;
+            retries_sum += out.retries;
+            first_start = first_start.min(out.first_start);
+            last_finish = last_finish.max(out.finish);
+        }
+        let pd = overhead.pre_departure(self.free.len());
+        JobRecord {
+            index: n,
+            arrival,
+            departure: last_finish + pd,
+            first_start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+            redundant_work: 0.0,
+            lost_work: lost_sum,
+            retries: retries_sum,
+        }
     }
 
     fn advance_scenario(
@@ -96,6 +162,8 @@ impl ForkJoinPerServer {
                         // replicas cancelled before finishing theirs.
                         overhead: (oh / sc.speed(s as u32)).min(freed - start),
                         winner: j == win,
+                        attempt: 1,
+                        cause: cause::NONE,
                     });
                 }
             }
@@ -110,6 +178,8 @@ impl ForkJoinPerServer {
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
             redundant_work: redundant_sum,
+            lost_work: 0.0,
+            retries: 0,
         }
     }
 }
@@ -123,6 +193,9 @@ impl Model for ForkJoinPerServer {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> JobRecord {
+        if self.faults.is_some() {
+            return self.advance_faulty(n, arrival, workload, overhead, trace);
+        }
         if self.scenario.is_some() {
             return self.advance_scenario(n, arrival, workload, overhead, trace);
         }
@@ -149,6 +222,8 @@ impl Model for ForkJoinPerServer {
                     end: finish,
                     overhead: o,
                     winner: true,
+                    attempt: 1,
+                    cause: cause::NONE,
                 });
             }
         }
@@ -162,6 +237,8 @@ impl Model for ForkJoinPerServer {
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
             redundant_work: 0.0,
+            lost_work: 0.0,
+            retries: 0,
         }
     }
 

@@ -13,7 +13,11 @@
 //! apples-to-apples bound validation.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::sim::{
+    FaultInjector, JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog,
+    Workload,
+};
+use crate::trace::cause;
 
 /// Single-queue fork-join with l servers and k tasks per job.
 pub struct ForkJoinSingleQueue {
@@ -25,6 +29,9 @@ pub struct ForkJoinSingleQueue {
     /// Heterogeneous-speed / redundancy scenario; `None` keeps the
     /// homogeneous hot path bit-for-bit unchanged.
     scenario: Option<Scenario>,
+    /// Fault injection (crashes, retries, speculation); `None` keeps
+    /// every fault-free path bit-for-bit unchanged.
+    faults: Option<FaultInjector>,
 }
 
 impl ForkJoinSingleQueue {
@@ -37,6 +44,7 @@ impl ForkJoinSingleQueue {
             in_order_departures: false,
             prev_departure: 0.0,
             scenario: None,
+            faults: None,
         }
     }
 
@@ -54,6 +62,12 @@ impl ForkJoinSingleQueue {
         self.scenario = scenario;
         self
     }
+
+    /// Attach a fault injector (worker crashes, retries, speculation).
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
+    }
 }
 
 impl Model for ForkJoinSingleQueue {
@@ -68,12 +82,61 @@ impl Model for ForkJoinSingleQueue {
         let mut workload_sum = 0.0;
         let mut overhead_sum = 0.0;
         let mut redundant_sum = 0.0;
+        let mut lost_sum = 0.0;
+        let mut retries_sum = 0u32;
         let mut last_finish = f64::NEG_INFINITY;
         let mut first_start = f64::INFINITY;
 
         if let Some(sc) = &mut self.scenario {
+            if let Some(fi) = &mut self.faults {
+                for i in 0..self.k {
+                    let out = sc.dispatch_task_faulty(
+                        &mut self.heap,
+                        arrival,
+                        workload,
+                        overhead,
+                        fi,
+                        n as u32,
+                        i as u32,
+                        trace,
+                    );
+                    workload_sum += out.work;
+                    overhead_sum += out.overhead;
+                    redundant_sum += out.redundant;
+                    lost_sum += out.lost;
+                    retries_sum += out.retries;
+                    if out.first_start < first_start {
+                        first_start = out.first_start;
+                    }
+                    if out.finish > last_finish {
+                        last_finish = out.finish;
+                    }
+                }
+            } else {
+                for i in 0..self.k {
+                    let out = sc.dispatch_task(
+                        &mut self.heap,
+                        arrival,
+                        workload,
+                        overhead,
+                        n as u32,
+                        i as u32,
+                        trace,
+                    );
+                    workload_sum += out.work;
+                    overhead_sum += out.overhead;
+                    redundant_sum += out.redundant_time;
+                    if out.first_start < first_start {
+                        first_start = out.first_start;
+                    }
+                    if out.finish > last_finish {
+                        last_finish = out.finish;
+                    }
+                }
+            }
+        } else if let Some(fi) = &mut self.faults {
             for i in 0..self.k {
-                let out = sc.dispatch_task(
+                let out = fi.dispatch_task(
                     &mut self.heap,
                     arrival,
                     workload,
@@ -84,7 +147,9 @@ impl Model for ForkJoinSingleQueue {
                 );
                 workload_sum += out.work;
                 overhead_sum += out.overhead;
-                redundant_sum += out.redundant_time;
+                redundant_sum += out.redundant;
+                lost_sum += out.lost;
+                retries_sum += out.retries;
                 if out.first_start < first_start {
                     first_start = out.first_start;
                 }
@@ -119,6 +184,8 @@ impl Model for ForkJoinSingleQueue {
                         end: finish,
                         overhead: o,
                         winner: true,
+                        attempt: 1,
+                        cause: cause::NONE,
                     });
                 }
             }
@@ -142,6 +209,8 @@ impl Model for ForkJoinSingleQueue {
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
             redundant_work: redundant_sum,
+            lost_work: lost_sum,
+            retries: retries_sum,
         }
     }
 

@@ -6,6 +6,7 @@
 
 use super::Model;
 use crate::sim::{JobRecord, OverheadModel, Scenario, TraceEvent, TraceLog, Workload};
+use crate::trace::cause;
 
 /// Ideal partition over l servers; workload sampled as k task draws.
 pub struct IdealPartition {
@@ -79,6 +80,8 @@ impl Model for IdealPartition {
                     // All l equisized shares stall on the slowest draw.
                     overhead: max_overhead,
                     winner: true,
+                    attempt: 1,
+                    cause: cause::NONE,
                 });
             }
         }
@@ -91,6 +94,8 @@ impl Model for IdealPartition {
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
             redundant_work: 0.0,
+            lost_work: 0.0,
+            retries: 0,
         }
     }
 

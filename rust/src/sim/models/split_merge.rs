@@ -9,7 +9,11 @@
 //! `D(n) = max(A(n), D(n−1)) + Δ(n)`.
 
 use super::Model;
-use crate::sim::{JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::sim::{
+    FaultInjector, JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog,
+    Workload,
+};
+use crate::trace::cause;
 
 /// Split-merge with l servers and k tasks per job.
 pub struct SplitMerge {
@@ -19,13 +23,22 @@ pub struct SplitMerge {
     /// Heterogeneous-speed / redundancy scenario; `None` keeps the
     /// homogeneous hot path bit-for-bit unchanged.
     scenario: Option<Scenario>,
+    /// Fault injection (crashes, retries, speculation); `None` keeps
+    /// every fault-free path bit-for-bit unchanged.
+    faults: Option<FaultInjector>,
 }
 
 impl SplitMerge {
     /// New model with `l` servers, `k ≥ l` tasks per job.
     pub fn new(l: usize, k: usize) -> Self {
         assert!(l >= 1 && k >= l, "split-merge requires k >= l >= 1");
-        Self { k, heap: ServerHeap::new(l, 0.0), prev_departure: 0.0, scenario: None }
+        Self {
+            k,
+            heap: ServerHeap::new(l, 0.0),
+            prev_departure: 0.0,
+            scenario: None,
+            faults: None,
+        }
     }
 
     /// Attach a heterogeneous-worker / redundancy scenario.
@@ -35,6 +48,85 @@ impl SplitMerge {
         }
         self.scenario = scenario;
         self
+    }
+
+    /// Attach a fault injector (worker crashes, retries, speculation).
+    pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Job body under fault injection. Differs from the fault-free path
+    /// in two load-bearing ways: the barrier *raises* free times to the
+    /// start instead of resetting them (a worker under repair rejoins
+    /// only when repaired, even across the barrier), and the makespan is
+    /// the last **task** finish rather than `heap.max_time()` (a repair
+    /// window outlasting every task must not delay the departure).
+    fn advance_faulty(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        start: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        self.heap.raise_to(start);
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        let mut redundant_sum = 0.0;
+        let mut lost_sum = 0.0;
+        let mut retries_sum = 0u32;
+        let mut last_finish = f64::NEG_INFINITY;
+        for i in 0..self.k {
+            let out = if let Some(sc) = &mut self.scenario {
+                let fi = self.faults.as_mut().expect("faulty path");
+                sc.dispatch_task_faulty(
+                    &mut self.heap,
+                    start,
+                    workload,
+                    overhead,
+                    fi,
+                    n as u32,
+                    i as u32,
+                    trace,
+                )
+            } else {
+                let fi = self.faults.as_mut().expect("faulty path");
+                fi.dispatch_task(
+                    &mut self.heap,
+                    start,
+                    workload,
+                    overhead,
+                    n as u32,
+                    i as u32,
+                    trace,
+                )
+            };
+            workload_sum += out.work;
+            overhead_sum += out.overhead;
+            redundant_sum += out.redundant;
+            lost_sum += out.lost;
+            retries_sum += out.retries;
+            if out.finish > last_finish {
+                last_finish = out.finish;
+            }
+        }
+        let pd = overhead.pre_departure(self.k);
+        let departure = last_finish + pd;
+        self.prev_departure = departure;
+        JobRecord {
+            index: n,
+            arrival,
+            departure,
+            first_start: start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+            redundant_work: redundant_sum,
+            lost_work: lost_sum,
+            retries: retries_sum,
+        }
     }
 }
 
@@ -50,6 +142,9 @@ impl Model for SplitMerge {
         // Start barrier: job starts when it arrives AND the previous job
         // has departed; all servers are idle at that instant.
         let start = arrival.max(self.prev_departure);
+        if self.faults.is_some() {
+            return self.advance_faulty(n, arrival, start, workload, overhead, trace);
+        }
         self.heap.reset_all(start);
 
         let mut workload_sum = 0.0;
@@ -87,6 +182,8 @@ impl Model for SplitMerge {
                     end: finish,
                     overhead: o,
                     winner: true,
+                    attempt: 1,
+                    cause: cause::NONE,
                 });
             }
         } else {
@@ -115,6 +212,8 @@ impl Model for SplitMerge {
             task_overhead: overhead_sum,
             pre_departure_overhead: pd,
             redundant_work: redundant_sum,
+            lost_work: 0.0,
+            retries: 0,
         }
     }
 

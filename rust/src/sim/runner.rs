@@ -2,7 +2,7 @@
 //! warmup + measured jobs, and gathers statistics.
 
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
-use super::{JobRecord, OverheadModel, Scenario, TraceLog, Workload};
+use super::{FaultInjector, JobRecord, OverheadModel, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
 use crate::rng::spawn_seeds;
 use crate::stats::{QuantileEstimator, Summary};
@@ -60,8 +60,14 @@ pub struct SimResult {
     /// Per-job total task overhead summary.
     pub overhead_summary: Summary,
     /// Per-job cancelled-replica server time (all zeros unless a
-    /// redundancy scenario is active).
+    /// redundancy scenario or speculative re-execution is active).
     pub redundant_summary: Summary,
+    /// Per-job server time lost to crashed/failed attempts (all zeros
+    /// unless fault injection is active).
+    pub lost_summary: Summary,
+    /// Per-job retry counts — attempts beyond the first (all zeros
+    /// unless fault injection is active).
+    pub retry_summary: Summary,
     /// Sojourn summaries over the run's thirds (in measured-job order) —
     /// the stability detector's divergence signal, O(1) memory.
     pub thirds: [Summary; 3],
@@ -87,24 +93,32 @@ impl SimResult {
     }
 }
 
-fn build_model(cfg: &SimulationConfig, opts: &RunOptions) -> Result<Box<dyn Model>, String> {
+fn build_model(
+    cfg: &SimulationConfig,
+    opts: &RunOptions,
+    faults: Option<FaultInjector>,
+) -> Result<Box<dyn Model>, String> {
     let scenario = Scenario::from_config(cfg)?;
+    // k = l for per-server fork-join and the faults/model compatibility
+    // matrix are enforced by `SimulationConfig::validate` (run before
+    // this), so bad CLI input errors out instead of panicking here.
     Ok(match cfg.model {
         ModelKind::SplitMerge => Box::new(
-            SplitMerge::new(cfg.servers, cfg.tasks_per_job).with_scenario(scenario),
+            SplitMerge::new(cfg.servers, cfg.tasks_per_job)
+                .with_scenario(scenario)
+                .with_faults(faults),
         ),
         ModelKind::ForkJoinSingleQueue => Box::new(
             ForkJoinSingleQueue::new(cfg.servers, cfg.tasks_per_job)
                 .with_in_order_departures(opts.in_order_departures)
-                .with_scenario(scenario),
+                .with_scenario(scenario)
+                .with_faults(faults),
         ),
-        ModelKind::ForkJoinPerServer => {
-            assert_eq!(
-                cfg.tasks_per_job, cfg.servers,
-                "per-server fork-join requires k = l"
-            );
-            Box::new(ForkJoinPerServer::new(cfg.servers).with_scenario(scenario))
-        }
+        ModelKind::ForkJoinPerServer => Box::new(
+            ForkJoinPerServer::new(cfg.servers)
+                .with_scenario(scenario)
+                .with_faults(faults),
+        ),
         ModelKind::Ideal => Box::new(
             IdealPartition::new(cfg.servers, cfg.tasks_per_job).with_scenario(scenario),
         ),
@@ -199,6 +213,8 @@ fn run_sharded(
                 acc.sojourn_summary.merge(&res.sojourn_summary);
                 acc.overhead_summary.merge(&res.overhead_summary);
                 acc.redundant_summary.merge(&res.redundant_summary);
+                acc.lost_summary.merge(&res.lost_summary);
+                acc.retry_summary.merge(&res.retry_summary);
                 for (a, b) in acc.thirds.iter_mut().zip(&res.thirds) {
                     a.merge(b);
                 }
@@ -219,7 +235,10 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
     let t0 = std::time::Instant::now();
     let mut workload = Workload::from_config(cfg)?;
     let overhead = OverheadModel::from_option(cfg.overhead);
-    let mut model = build_model(cfg, opts)?;
+    // Speculation deadlines are a multiple of the expected task service.
+    let expected_task = workload.mean_execution() + overhead.mean_task();
+    let faults = FaultInjector::from_config(cfg, expected_task);
+    let mut model = build_model(cfg, opts, faults)?;
     let mut trace = if opts.trace { TraceLog::enabled() } else { TraceLog::disabled() };
 
     let total = cfg.warmup + cfg.jobs;
@@ -229,6 +248,8 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
     let mut sojourn_summary = Summary::new();
     let mut overhead_summary = Summary::new();
     let mut redundant_summary = Summary::new();
+    let mut lost_summary = Summary::new();
+    let mut retry_summary = Summary::new();
     let mut thirds = [Summary::new(), Summary::new(), Summary::new()];
     // Same partition as slicing measured jobs at [..t], [t..2t], [2t..]:
     // the remainder lands in the last third.
@@ -246,6 +267,8 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
         sojourn_summary.push(rec.sojourn());
         overhead_summary.push(rec.task_overhead + rec.pre_departure_overhead);
         redundant_summary.push(rec.redundant_work);
+        lost_summary.push(rec.lost_work);
+        retry_summary.push(f64::from(rec.retries));
         if third > 0 {
             thirds[(measured / third).min(2)].push(rec.sojourn());
         } else {
@@ -264,6 +287,8 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
         sojourn_summary,
         overhead_summary,
         redundant_summary,
+        lost_summary,
+        retry_summary,
         thirds,
         trace,
         wall_seconds: t0.elapsed().as_secs_f64(),
@@ -287,6 +312,7 @@ mod tests {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         }
     }
 
@@ -472,6 +498,7 @@ mod tests {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let mut res = run(&cfg, RunOptions::default()).unwrap();
         let expect = (100.0f64).ln() / (1.0 - 0.5);

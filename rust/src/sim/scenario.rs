@@ -20,8 +20,10 @@
 //! same arithmetic as the homogeneous models — `x / 1.0 == x` bit-for-bit
 //! — which `rust/tests/scenario_equivalence.rs` enforces.
 
+use super::faults::{FaultInjector, FaultOutcome};
 use super::{OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
 use crate::config::SimulationConfig;
+use crate::trace::cause;
 
 /// Per-replica bookkeeping for one task dispatch.
 #[derive(Clone, Copy, Debug)]
@@ -206,6 +208,8 @@ impl Scenario {
                         overhead: (rep.overhead / self.speeds[rep.server as usize])
                             .min(freed - rep.start),
                         winner: i == win,
+                        attempt: 1,
+                        cause: cause::NONE,
                     });
                 }
             }
@@ -218,6 +222,216 @@ impl Scenario {
             work: self.scratch[win].exec,
             overhead: self.scratch[win].overhead,
             redundant_time: redundant,
+        }
+    }
+
+    /// [`Scenario::dispatch_task`] under fault injection: every replica
+    /// can be crash-killed by its worker's Markov on/off schedule, and
+    /// the winning replica's attempt can fail (bounded retries with
+    /// backoff, re-dispatching the whole replica set). Speculation is
+    /// rejected for redundant/heterogeneous configs at validation — it
+    /// is itself a dynamic replica.
+    ///
+    /// The first attempt draws its replicas from the workload stream in
+    /// exactly the fault-free order; retry attempts redraw every replica
+    /// from the injector's fault stream. A replica whose worker crashes
+    /// mid-run is accounted as crashed (its time up to the crash counts
+    /// as lost work) even when another replica won earlier — the worker
+    /// goes down either way and rejoins only after repair.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task_faulty(
+        &mut self,
+        heap: &mut ServerHeap,
+        floor: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        fi: &mut FaultInjector,
+        job: u32,
+        task: u32,
+        trace: &mut TraceLog,
+    ) -> FaultOutcome {
+        let r = self.replicas.min(heap.len());
+        let launch = if self.replicas > 1 { self.launch_overhead } else { 0.0 };
+
+        let mut retries = 0u32;
+        let mut fail_budget =
+            if fi.config().failures_enabled() { fi.config().max_retries } else { 0 };
+        let mut failed_attempts = 0u32;
+        let mut retry_floor = floor;
+        let mut first_start = f64::INFINITY;
+        let mut overhead_sum = 0.0;
+        let mut lost = 0.0;
+        let mut redundant = 0.0;
+        let mut first_attempt = true;
+        // Per-replica crash resolution (crash instant, repair-done),
+        // kept parallel to `scratch`; rebuilt every attempt.
+        let mut crashed: Vec<Option<(f64, f64)>> = Vec::with_capacity(r);
+
+        loop {
+            let attempt = 1 + retries;
+            self.scratch.clear();
+            crashed.clear();
+            for _ in 0..r {
+                let (t_free, server) = heap.pop();
+                let (exec, oh) = if first_attempt {
+                    // Fault-free draw order: execution then overhead,
+                    // from the workload stream.
+                    let e = workload.next_execution();
+                    let o = overhead.sample_task(workload.rng()) + launch;
+                    (e, o)
+                } else {
+                    let (e, o) = fi.backup_draws(workload, overhead);
+                    (e, o + launch)
+                };
+                let floor_now = if retry_floor > t_free { retry_floor } else { t_free };
+                let start = fi.up_at(server, floor_now);
+                let speed = self.speeds[server as usize];
+                let finish = start + exec / speed + oh / speed;
+                let crash = fi.crash_within(server, start, finish);
+                self.scratch.push(Replica { t_free, server, start, finish, exec, overhead: oh });
+                crashed.push(crash);
+            }
+            first_attempt = false;
+
+            // Winner: earliest finish among replicas that survived.
+            let mut win: Option<usize> = None;
+            for (i, rep) in self.scratch.iter().enumerate() {
+                if crashed[i].is_some() {
+                    continue;
+                }
+                let better = match win {
+                    None => true,
+                    Some(w) => rep.finish < self.scratch[w].finish,
+                };
+                if better {
+                    win = Some(i);
+                }
+            }
+
+            // Crashed replicas: lost work up to the crash, worker back
+            // after repair — independent of how the attempt resolves.
+            for (i, rep) in self.scratch.iter().enumerate() {
+                if let Some((c, up)) = crashed[i] {
+                    lost += c - rep.start;
+                    if rep.start < first_start {
+                        first_start = rep.start;
+                    }
+                    heap.push(up, rep.server);
+                    if trace.is_enabled() {
+                        trace.record(TraceEvent {
+                            job,
+                            task,
+                            server: rep.server,
+                            start: rep.start,
+                            end: c,
+                            overhead: (rep.overhead / self.speeds[rep.server as usize])
+                                .min(c - rep.start),
+                            winner: false,
+                            attempt,
+                            cause: cause::CRASHED,
+                        });
+                    }
+                }
+            }
+
+            let Some(win) = win else {
+                // Every replica crashed: re-dispatch as a fresh attempt
+                // immediately (crashes do not consume the retry budget).
+                retries += 1;
+                continue;
+            };
+            let t_win = self.scratch[win].finish;
+
+            // Survivors resolve first-finish-wins exactly as the
+            // fault-free dispatcher: losers cancelled at the winner's
+            // finish, unstarted reservations released.
+            for (i, rep) in self.scratch.iter().enumerate() {
+                if crashed[i].is_some() {
+                    continue;
+                }
+                let ran = i == win || rep.start < t_win;
+                let freed = if i == win {
+                    rep.finish
+                } else if ran {
+                    t_win
+                } else {
+                    rep.t_free
+                };
+                if ran {
+                    if rep.start < first_start {
+                        first_start = rep.start;
+                    }
+                    if i != win {
+                        redundant += t_win - rep.start;
+                    }
+                    if trace.is_enabled() && i != win {
+                        trace.record(TraceEvent {
+                            job,
+                            task,
+                            server: rep.server,
+                            start: rep.start,
+                            end: freed,
+                            overhead: (rep.overhead / self.speeds[rep.server as usize])
+                                .min(freed - rep.start),
+                            winner: false,
+                            attempt,
+                            cause: cause::NONE,
+                        });
+                    }
+                }
+                heap.push(freed, rep.server);
+            }
+
+            // Failure surfaces at the winning replica's completion.
+            overhead_sum += self.scratch[win].overhead;
+            let winner = self.scratch[win];
+            if fail_budget > 0 && fi.failure_draw() {
+                fail_budget -= 1;
+                failed_attempts += 1;
+                lost += t_win - winner.start;
+                if trace.is_enabled() {
+                    trace.record(TraceEvent {
+                        job,
+                        task,
+                        server: winner.server,
+                        start: winner.start,
+                        end: t_win,
+                        overhead: (winner.overhead
+                            / self.speeds[winner.server as usize])
+                            .min(t_win - winner.start),
+                        winner: false,
+                        attempt,
+                        cause: cause::FAILED,
+                    });
+                }
+                retries += 1;
+                retry_floor = t_win + fi.config().backoff_delay(failed_attempts);
+                continue;
+            }
+
+            if trace.is_enabled() {
+                trace.record(TraceEvent {
+                    job,
+                    task,
+                    server: winner.server,
+                    start: winner.start,
+                    end: t_win,
+                    overhead: (winner.overhead / self.speeds[winner.server as usize])
+                        .min(t_win - winner.start),
+                    winner: true,
+                    attempt,
+                    cause: cause::NONE,
+                });
+            }
+            return FaultOutcome {
+                first_start,
+                finish: t_win,
+                work: winner.exec,
+                overhead: overhead_sum,
+                lost,
+                redundant,
+                retries,
+            };
         }
     }
 }

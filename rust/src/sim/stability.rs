@@ -187,6 +187,7 @@ mod tests {
             overhead: None,
             workers: None,
             redundancy: None,
+            faults: None,
         };
         assert_eq!(detect(&mk(50), 1.05).unwrap(), Stability::Unstable);
         assert_eq!(detect(&mk(400), 1.05).unwrap(), Stability::Stable);

@@ -79,6 +79,16 @@ impl Workload {
         self.execution.draw_batch(&mut self.rng, out)
     }
 
+    /// Draw one execution time from the task distribution with a
+    /// caller-provided RNG. Fault-injection backup copies and retries
+    /// redraw task sizes from the injector's own stream through this,
+    /// leaving the workload stream untouched (so fault-free portions of
+    /// a faulty run still see the exact seed-engine draws).
+    #[inline]
+    pub fn execution_with(&self, rng: &mut Pcg64) -> f64 {
+        self.execution.draw(rng)
+    }
+
     /// Mean task execution time of the configured distribution.
     pub fn mean_execution(&self) -> f64 {
         self.execution.mean()

@@ -208,21 +208,32 @@ impl P2Quantile {
             return;
         }
         if self.count == 0 {
+            // Adopt the other shard's state but keep our own q: the
+            // assert admits up to 1e-12 drift, and adopting other.q
+            // would break tracked-quantile lookups and later merge
+            // asserts keyed on the original value.
+            let q = self.q;
             *self = other.clone();
+            self.q = q;
             return;
         }
         if other.initial.len() < 5 {
+            // ≤ 4 samples ⇒ other.count == other.initial.len(): the
+            // shard's entire history is in its initial buffer, so a
+            // replay is exact (covers empty and single-sample shards).
             for &x in &other.initial {
                 self.push(x);
             }
             return;
         }
         if self.initial.len() < 5 {
+            let q = self.q;
             let mut merged = other.clone();
             for &x in &self.initial {
                 merged.push(x);
             }
             *self = merged;
+            self.q = q;
             return;
         }
         let n1 = self.count as f64;
@@ -559,6 +570,60 @@ mod tests {
         assert_eq!(empty.count(), 5);
         a.merge(&P2Quantile::new(0.5));
         assert_eq!(a.count(), 5);
+    }
+
+    /// A single-sample shard replays exactly into a converged estimator,
+    /// and a converged shard merging into a small one keeps tracking the
+    /// pooled quantile.
+    #[test]
+    fn p2_merge_single_sample_shard() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let mut big = P2Quantile::new(0.5);
+        for _ in 0..50_000 {
+            big.push(-rng.next_f64_open().ln());
+        }
+        let mut one = P2Quantile::new(0.5);
+        one.push(0.7);
+        let before = big.value();
+        big.merge(&one);
+        assert_eq!(big.count(), 50_001);
+        assert!((big.value() - before).abs() < 0.1, "one sample barely moves 50k");
+        // The reverse direction: small self adopts the converged shard.
+        let mut small = P2Quantile::new(0.5);
+        small.push(0.7);
+        small.merge(&big);
+        assert_eq!(small.count(), 50_002);
+        let exact = -(0.5f64).ln();
+        let est = small.value();
+        assert!((est - exact).abs() / exact < 0.05, "{est} vs {exact}");
+    }
+
+    /// Merging preserves the estimator's own q even when the shards'
+    /// q values differ within the 1e-12 assert tolerance — adopting
+    /// other.q used to break tracked-quantile lookups after a merge.
+    #[test]
+    fn p2_merge_preserves_own_q() {
+        let drifted = 0.99 + 5e-13;
+        let mut shard = P2Quantile::new(drifted);
+        let mut rng = Pcg64::seed_from_u64(43);
+        for _ in 0..10_000 {
+            shard.push(rng.next_f64_open());
+        }
+        // Empty-self adopt branch.
+        let mut a = P2Quantile::new(0.99);
+        a.merge(&shard);
+        assert_eq!(a.q(), 0.99);
+        // Small-self adopt branch.
+        let mut b = P2Quantile::new(0.99);
+        b.push(0.5);
+        b.merge(&shard);
+        assert_eq!(b.q(), 0.99);
+        // Bank lookups keyed on the original q keep working.
+        let mut bank = StreamingQuantiles::new(&[0.99]);
+        let mut other = StreamingQuantiles::new(&[drifted]);
+        other.push(1.0);
+        bank.merge(&other).unwrap();
+        assert!(bank.value(0.99).is_some(), "tracked q must survive the merge");
     }
 
     #[test]

@@ -6,12 +6,13 @@
 //! practical to keep.
 //!
 //! Schema versioning: the fifth magic byte carries the trace's schema
-//! (1 or 2) and must agree with the `schema` field that follows. A v1
-//! trace is written in the v1 wire layout byte-for-byte; schema 2
+//! (1, 2, or 3) and must agree with the `schema` field that follows. A
+//! v1 trace is written in the v1 wire layout byte-for-byte; schema 2
 //! appends the scenario shape (meta `replicas` + optional speeds, task
-//! `winner` bytes).
+//! `winner` bytes); schema 3 appends the fault shape (task `attempt` +
+//! `cause`), leaving the v2 layout untouched.
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2};
+use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3, SCHEMA_VERSION};
 use crate::emulator::{Decoder, Encoder};
 
 /// File magic prefix shared by every schema version.
@@ -26,6 +27,7 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
     let mut e = Encoder::new();
     let m = &trace.meta;
     let v1 = m.schema == SCHEMA_V1;
+    let v3 = m.schema >= SCHEMA_V3;
     for b in MAGIC_PREFIX {
         e.u8(b);
     }
@@ -74,6 +76,10 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
         if !v1 {
             e.u8(u8::from(t.winner));
         }
+        if v3 {
+            e.u32(t.attempt);
+            e.u8(t.cause);
+        }
     }
     e.finish()
 }
@@ -93,6 +99,7 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
         ));
     }
     let v1 = schema == SCHEMA_V1;
+    let v3 = schema >= SCHEMA_V3;
     let mut meta = TraceMeta {
         schema,
         source: d.str().map_err(err)?,
@@ -141,6 +148,8 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
             end: d.f64().map_err(err)?,
             overhead: d.f64().map_err(err)?,
             winner: if v1 { true } else { d.u8().map_err(err)? != 0 },
+            attempt: if v3 { d.u32().map_err(err)? } else { 1 },
+            cause: if v3 { d.u8().map_err(err)? } else { 0 },
         });
     }
     if d.remaining() != 0 {
@@ -154,12 +163,13 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
 pub fn is_binary(bytes: &[u8]) -> bool {
     bytes.len() >= 5
         && bytes[..4] == MAGIC_PREFIX
-        && (SCHEMA_V1..=SCHEMA_V2).contains(&(bytes[4] as u32))
+        && (SCHEMA_V1..=SCHEMA_VERSION).contains(&(bytes[4] as u32))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::record::SCHEMA_V2;
 
     fn tiny_trace() -> Trace {
         Trace {
@@ -197,6 +207,8 @@ mod tests {
                 end: 1.75,
                 overhead: 0.003,
                 winner: true,
+                attempt: 1,
+                cause: 0,
             }],
         }
     }
@@ -215,6 +227,27 @@ mod tests {
             end: 1.75,
             overhead: 0.001,
             winner: false,
+            attempt: 1,
+            cause: 0,
+        });
+        tr
+    }
+
+    fn tiny_trace_v3() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V3;
+        tr.tasks[0].attempt = 2;
+        tr.tasks[0].cause = crate::trace::cause::SPECULATION;
+        tr.tasks.push(TaskRow {
+            job: 2,
+            task: 0,
+            server: 1,
+            start: 1.0,
+            end: 1.25,
+            overhead: 0.001,
+            winner: false,
+            attempt: 1,
+            cause: crate::trace::cause::CRASHED,
         });
         tr
     }
@@ -260,8 +293,19 @@ mod tests {
     }
 
     #[test]
+    fn v3_round_trip_is_exact() {
+        let tr = tiny_trace_v3();
+        let bytes = to_binary(&tr);
+        assert!(is_binary(&bytes));
+        assert_eq!(bytes[4], 3);
+        let back = from_binary(&bytes).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(bytes, to_binary(&back));
+    }
+
+    #[test]
     fn truncation_and_garbage_are_errors() {
-        for tr in [tiny_trace(), tiny_trace_v2()] {
+        for tr in [tiny_trace(), tiny_trace_v2(), tiny_trace_v3()] {
             let bytes = to_binary(&tr);
             assert!(from_binary(&bytes[..bytes.len() - 3]).is_err());
             let mut trailing = bytes.clone();
@@ -274,7 +318,7 @@ mod tests {
     #[test]
     fn wrong_schema_byte_rejected() {
         let mut bytes = to_binary(&tiny_trace());
-        bytes[4] = 3; // future magic version: not a readable trace
+        bytes[4] = 4; // future magic version: not a readable trace
         assert!(from_binary(&bytes).is_err());
         let mut bytes = to_binary(&tiny_trace());
         bytes[4] = 2; // readable version, but disagrees with the body

@@ -4,6 +4,23 @@
 
 use crate::util::csv::Csv;
 
+/// Why a task attempt's row did not simply succeed (schema v3). A
+/// plain `u8` on the wire; the constants are the only defined values.
+pub mod cause {
+    /// Ordinary attempt (the only value in v1/v2 traces).
+    pub const NONE: u8 = 0;
+    /// The attempt failed at completion and was retried.
+    pub const FAILED: u8 = 1;
+    /// The worker crashed mid-attempt (fault injection).
+    pub const CRASHED: u8 = 2;
+    /// A speculative re-execution copy: on a loser row, the copy that
+    /// was cancelled when its twin finished first; on a winner row, a
+    /// backup copy whose result counted.
+    pub const SPECULATION: u8 = 3;
+    /// Largest defined cause value (validation bound).
+    pub const MAX: u8 = SPECULATION;
+}
+
 /// One task execution on one server.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TraceEvent {
@@ -26,6 +43,11 @@ pub struct TraceEvent {
     /// redundancy scenarios; under first-finish-wins dispatch the losing
     /// replicas record `false` (their rows measure cancelled work).
     pub winner: bool,
+    /// Attempt number, 1-based (schema v3; always 1 without fault
+    /// injection).
+    pub attempt: u32,
+    /// Failure cause tag (schema v3; see [`cause`]).
+    pub cause: u8,
 }
 
 /// Collected trace of task executions.
@@ -102,7 +124,17 @@ mod tests {
     use super::*;
 
     fn ev(job: u32, task: u32, server: u32, start: f64, end: f64) -> TraceEvent {
-        TraceEvent { job, task, server, start, end, overhead: 0.0, winner: true }
+        TraceEvent {
+            job,
+            task,
+            server,
+            start,
+            end,
+            overhead: 0.0,
+            winner: true,
+            attempt: 1,
+            cause: cause::NONE,
+        }
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //! it). Schema v2 adds the scenario shape — per-worker speeds and the
 //! replication factor in the meta, replica-winner flags on task rows —
 //! so heterogeneous/redundant runs record instead of being rejected;
-//! scenario-free captures stay on the v1 wire format byte-for-byte.
+//! schema v3 adds the fault shape — a 1-based attempt counter and a
+//! failure-cause tag on task rows — so fault-injected runs record every
+//! retry, crash, and speculative copy. Scenario- and fault-free captures
+//! stay on the v1 wire format byte-for-byte.
 //! On top of the format sit the consumers:
 //!
 //! * [`replay`] — feed a recorded trace's arrivals and task sizes back
@@ -35,10 +38,12 @@ mod ndjson;
 mod record;
 mod replay;
 
-pub use self::log::{TraceEvent, TraceLog};
+pub use self::log::{cause, TraceEvent, TraceLog};
 pub use binary::{from_binary, is_binary, to_binary, MAGIC, MAGIC_PREFIX};
 pub use ndjson::{from_ndjson, to_ndjson};
-pub use record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_VERSION};
+pub use record::{
+    JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_VERSION,
+};
 pub use replay::{replay, ReplayOptions, Replayed};
 
 use std::path::Path;

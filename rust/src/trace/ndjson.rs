@@ -13,9 +13,11 @@
 //! Schema versioning: the writer emits the v1 line shapes byte-for-byte
 //! when `meta.schema == 1` — pre-v2 files re-serialize identically — and
 //! appends the scenario fields (`speeds`, `replicas` on the meta row;
-//! `winner` on task rows) only for schema 2.
+//! `winner` on task rows) only for schema ≥ 2 and the fault fields
+//! (`attempt`, `cause` on task rows) only for schema 3, so v1 *and* v2
+//! files re-serialize byte-for-byte.
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1};
+use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3};
 use std::fmt::Write as _;
 
 /// Serialize a trace to NDJSON text.
@@ -23,6 +25,7 @@ pub fn to_ndjson(trace: &Trace) -> String {
     let mut out = String::new();
     let m = &trace.meta;
     let v1 = m.schema == SCHEMA_V1;
+    let v3 = m.schema >= SCHEMA_V3;
     let _ = write!(
         out,
         "{{\"type\":\"meta\",\"schema\":{},\"source\":{},\"model\":{},\"servers\":{},\
@@ -86,6 +89,9 @@ pub fn to_ndjson(trace: &Trace) -> String {
         if !v1 {
             let _ = write!(out, ",\"winner\":{}", t.winner);
         }
+        if v3 {
+            let _ = write!(out, ",\"attempt\":{},\"cause\":{}", t.attempt, t.cause);
+        }
         out.push_str("}\n");
     }
     out
@@ -144,6 +150,8 @@ pub fn from_ndjson(text: &str) -> Result<Trace, String> {
                 end: obj.get_f64("end")?,
                 overhead: obj.get_f64("overhead")?,
                 winner: obj.get_bool_or("winner", true)?,
+                attempt: obj.get_u64_or("attempt", 1)? as u32,
+                cause: obj.get_u64_or("cause", 0)? as u8,
             }),
             other => return Err(format!("line {}: unknown row type {other:?}", lineno + 1)),
         }
@@ -389,7 +397,7 @@ fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::record::{SCHEMA_V1, SCHEMA_V2};
+    use crate::trace::record::{SCHEMA_V1, SCHEMA_V2, SCHEMA_V3};
 
     fn tiny_trace() -> Trace {
         Trace {
@@ -428,6 +436,8 @@ mod tests {
                     end: 1.7,
                     overhead: 1e-3,
                     winner: true,
+                    attempt: 1,
+                    cause: 0,
                 },
                 TaskRow {
                     job: 0,
@@ -437,6 +447,8 @@ mod tests {
                     end: 1.4,
                     overhead: 0.0,
                     winner: true,
+                    attempt: 1,
+                    cause: 0,
                 },
             ],
         }
@@ -449,6 +461,16 @@ mod tests {
         tr.meta.replicas = 2;
         tr.meta.launch_overhead = 0.1 + 0.02; // non-representable bits
         tr.tasks[1].winner = false;
+        tr
+    }
+
+    fn tiny_trace_v3() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V3;
+        tr.tasks[0].attempt = 3;
+        tr.tasks[0].cause = crate::trace::cause::SPECULATION;
+        tr.tasks[1].winner = false;
+        tr.tasks[1].cause = crate::trace::cause::FAILED;
         tr
     }
 
@@ -496,6 +518,29 @@ mod tests {
         let b = back.meta.speeds.unwrap()[1];
         assert_eq!(a.to_bits(), b.to_bits(), "speed bits must survive");
         assert_eq!(text, to_ndjson(&tiny_trace_v2()));
+    }
+
+    /// v1/v2 task lines carry no fault keys (byte-compat with pre-v3
+    /// files); parsing fills the defaults.
+    #[test]
+    fn pre_v3_wire_format_has_no_fault_fields() {
+        for text in [to_ndjson(&tiny_trace()), to_ndjson(&tiny_trace_v2())] {
+            assert!(!text.contains("attempt"), "{text}");
+            assert!(!text.contains("cause"), "{text}");
+            let back = from_ndjson(&text).unwrap();
+            assert!(back.tasks.iter().all(|t| t.attempt == 1 && t.cause == 0));
+        }
+    }
+
+    #[test]
+    fn v3_round_trip_is_exact() {
+        let tr = tiny_trace_v3();
+        let text = to_ndjson(&tr);
+        assert!(text.contains("\"attempt\":3"), "{text}");
+        assert!(text.contains("\"cause\":1"), "{text}");
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(text, to_ndjson(&back));
     }
 
     #[test]

@@ -9,11 +9,16 @@
 //! **Schema v2** adds the scenario shape: optional per-worker speeds and
 //! the replication factor in the meta header, plus a per-task
 //! replica-winner flag — so heterogeneous/redundant runs can be recorded
-//! instead of rejected at `trace record`. Capture picks the lowest
-//! schema that carries the run (homogeneous non-redundant runs stay v1),
-//! and v1 files round-trip bit-exactly through both codecs: a v1 trace
-//! is written back in the v1 wire format, byte for byte.
+//! instead of rejected at `trace record`. **Schema v3** adds fault
+//! injection: a 1-based attempt counter and a failure-cause tag
+//! ([`crate::trace::cause`]) on every task row, so crashed, failed, and
+//! speculatively re-executed attempts are all persisted. Capture picks
+//! the lowest schema that carries the run (homogeneous non-redundant
+//! fault-free runs stay v1), and v1/v2 files round-trip bit-exactly
+//! through both codecs: a v1 trace is written back in the v1 wire
+//! format, byte for byte.
 
+use super::cause;
 use crate::config::ModelKind;
 use crate::emulator::EmulatorResult;
 use crate::sim::SimResult;
@@ -22,9 +27,11 @@ use crate::sim::SimResult;
 pub const SCHEMA_V1: u32 = 1;
 /// Scenario-aware schema: meta speeds/replicas + task winner flags.
 pub const SCHEMA_V2: u32 = 2;
+/// Fault-aware schema: per-task attempt counter + failure-cause tag.
+pub const SCHEMA_V3: u32 = 3;
 /// Highest on-disk schema version this build reads and writes (NDJSON
 /// and binary carry the same one).
-pub const SCHEMA_VERSION: u32 = SCHEMA_V2;
+pub const SCHEMA_VERSION: u32 = SCHEMA_V3;
 
 /// Trace header: where the trace came from and under which parameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -115,6 +122,11 @@ pub struct TaskRow {
     /// result counted; false rows measure cancelled redundant work.
     /// Always true in v1 traces.
     pub winner: bool,
+    /// Attempt number, 1-based (schema ≥ 3). Always 1 in v1/v2 traces.
+    pub attempt: u32,
+    /// Failure-cause tag (schema ≥ 3; see [`crate::trace::cause`]).
+    /// Always [`cause::NONE`] in v1/v2 traces.
+    pub cause: u8,
 }
 
 impl TaskRow {
@@ -146,7 +158,7 @@ impl Trace {
     /// consumers can rely on sorted rows even for hand-authored NDJSON).
     pub(crate) fn normalize(mut self) -> Self {
         self.jobs.sort_by_key(|j| j.index);
-        self.tasks.sort_by_key(|t| (t.job, t.task, t.server));
+        self.tasks.sort_by_key(|t| (t.job, t.task, t.server, t.attempt));
         self
     }
 
@@ -168,7 +180,15 @@ impl Trace {
             None => None,
         };
         let replicas = cfg.replicas() as u32;
-        let schema = if speeds.is_some() || replicas > 1 { SCHEMA_V2 } else { SCHEMA_V1 };
+        // Fault-injected runs need the v3 attempt/cause columns.
+        let faulty = cfg.faults.map(|f| f.is_active()).unwrap_or(false);
+        let schema = if faulty {
+            SCHEMA_V3
+        } else if speeds.is_some() || replicas > 1 {
+            SCHEMA_V2
+        } else {
+            SCHEMA_V1
+        };
         let meta = TraceMeta {
             schema,
             source: "sim".into(),
@@ -215,6 +235,8 @@ impl Trace {
                 end: e.end,
                 overhead: e.overhead,
                 winner: e.winner,
+                attempt: e.attempt,
+                cause: e.cause,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -280,6 +302,8 @@ impl Trace {
                 end: t.finished / scale,
                 overhead: t.overhead() / scale,
                 winner: true,
+                attempt: 1,
+                cause: cause::NONE,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -371,6 +395,17 @@ impl Trace {
                 );
             }
         }
+        if self.meta.schema < SCHEMA_V3 {
+            // v1/v2 carry no attempt/cause columns; a lower-schema trace
+            // claiming them would silently drop fault data on the wire.
+            if self.tasks.iter().any(|t| t.attempt != 1 || t.cause != cause::NONE) {
+                return Err(
+                    "schema v1/v2 cannot carry retry attempts or failure causes; \
+                     use schema 3"
+                        .into(),
+                );
+            }
+        }
         if let Some(speeds) = &self.meta.speeds {
             if speeds.len() != self.meta.servers as usize {
                 return Err(format!(
@@ -420,6 +455,21 @@ impl Trace {
                     t.job, t.task, t.server, self.meta.servers
                 ));
             }
+            if t.attempt == 0 {
+                return Err(format!(
+                    "task ({}, {}): attempt numbers are 1-based",
+                    t.job, t.task
+                ));
+            }
+            if t.cause > cause::MAX {
+                return Err(format!(
+                    "task ({}, {}): unknown failure cause {} (defined: 0..={})",
+                    t.job,
+                    t.task,
+                    t.cause,
+                    cause::MAX
+                ));
+            }
         }
         Ok(())
     }
@@ -444,6 +494,7 @@ mod tests {
             overhead: Some(crate::config::OverheadConfig::paper()),
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = sim::run(
             &cfg,
@@ -514,6 +565,7 @@ mod tests {
                 replicas: 2,
                 launch_overhead: 2e-3,
             }),
+            faults: None,
         };
         let res = sim::run(
             &cfg,
@@ -538,6 +590,69 @@ mod tests {
         // A v1 claim over this payload is rejected.
         let mut bad = tr.clone();
         bad.meta.schema = SCHEMA_V1;
+        assert!(bad.validate().is_err());
+    }
+
+    /// Fault-injected runs capture schema v3: retried attempts appear as
+    /// extra rows with attempt counters and cause tags; lower schemas
+    /// reject the payload.
+    #[test]
+    fn fault_capture_is_v3_with_attempts() {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 2,
+            tasks_per_job: 4,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.2".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 40,
+            warmup: 4,
+            seed: 11,
+            overhead: None,
+            workers: None,
+            redundancy: None,
+            faults: Some(crate::config::FaultsConfig {
+                task_fail_p: 0.3,
+                max_retries: 2,
+                backoff_base: 0.01,
+                ..Default::default()
+            }),
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        let tr = Trace::from_sim(&res).unwrap();
+        tr.validate().unwrap();
+        assert_eq!(tr.meta.schema, SCHEMA_V3);
+        assert!(
+            tr.tasks.iter().any(|t| t.cause == cause::FAILED),
+            "p=0.3 over 176 tasks must record failed attempts"
+        );
+        assert!(
+            tr.tasks.iter().any(|t| t.attempt > 1),
+            "failed tasks must record their retry attempts"
+        );
+        // Every logical task ends in exactly one winner.
+        let mut winners = std::collections::BTreeMap::new();
+        for t in &tr.tasks {
+            *winners.entry((t.job, t.task)).or_insert(0u32) += u32::from(t.winner);
+        }
+        assert!(winners.values().all(|&w| w == 1), "one winner per task");
+        // The sample banks keep only counted attempts.
+        assert_eq!(tr.task_services().len(), 44 * 4);
+        // v1/v2 claims over this payload are rejected.
+        for schema in [SCHEMA_V1, SCHEMA_V2] {
+            let mut bad = tr.clone();
+            bad.meta.schema = schema;
+            assert!(bad.validate().is_err(), "schema {schema} must reject attempts");
+        }
+        // Malformed v3 rows are rejected.
+        let mut bad = tr.clone();
+        bad.tasks[0].attempt = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = tr.clone();
+        bad.tasks[0].cause = cause::MAX + 1;
         assert!(bad.validate().is_err());
     }
 
@@ -597,6 +712,7 @@ mod tests {
                 overhead: Some(crate::config::OverheadConfig::paper()),
                 workers: None,
                 redundancy: None,
+                faults: None,
             };
             let res = sim::run(
                 &cfg,

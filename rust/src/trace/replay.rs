@@ -137,10 +137,14 @@ fn flush_winner(
 /// Task sizes come from the task rows; arrivals come from the job rows.
 /// Every measured job must carry the same task count. Redundant traces
 /// (schema v2) carry one row per replica: the recorded winner flag picks
-/// the replica whose service time drives the replay. Foreign traces
-/// without flags fall back to the earliest-finishing row, ties broken
-/// deterministically by row order — an approximation, since a winner is
-/// then indistinguishable from a replica cancelled at the same instant.
+/// the replica whose service time drives the replay. Fault-injected
+/// traces (schema v3) likewise carry one row per attempt — failed,
+/// crashed, and cancelled-speculation rows are all flagged non-winners,
+/// so only the succeeding attempt's service time is replayed. Foreign
+/// traces without flags fall back to the earliest-finishing row, ties
+/// broken deterministically by row order — an approximation, since a
+/// winner is then indistinguishable from a replica cancelled at the same
+/// instant.
 pub fn replay(trace: &Trace, opts: &ReplayOptions) -> Result<Replayed, String> {
     trace.validate()?;
     let model_kind = match opts.model {
@@ -270,6 +274,7 @@ mod tests {
             overhead: overhead.then(crate::config::OverheadConfig::paper),
             workers: None,
             redundancy: None,
+            faults: None,
         };
         let res = sim::run(
             &cfg,

@@ -28,6 +28,7 @@ fn random_config(g: &mut tiny_tasks::util::quickcheck::Gen, model: ModelKind) ->
         },
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 
@@ -177,6 +178,7 @@ fn prop_work_conservation_under_saturation() {
                 overhead: None,
                 workers: None,
                 redundancy: None,
+                faults: None,
             };
             let res = sim::run(
                 &cfg,

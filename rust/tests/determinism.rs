@@ -24,6 +24,7 @@ fn point(model: ModelKind, k: usize, jobs: usize) -> SweepPoint {
             overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
             workers: None,
             redundancy: None,
+            faults: None,
         },
     }
 }

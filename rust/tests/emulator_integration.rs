@@ -38,6 +38,7 @@ fn sim_cfg_from(e: &EmulatorConfig, jobs: usize) -> SimulationConfig {
         overhead: None,
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

@@ -1,0 +1,347 @@
+//! Fault-injection regressions: degenerate equivalence, determinism,
+//! exact retry accounting, sharded fault-stat merging, and the
+//! granularity/fault-tolerance interaction the `figure faults` panel
+//! plots.
+//!
+//! The degeneracy tests are bit-for-bit (`assert_eq!` on f64), not
+//! tolerance: an inactive `[faults]` section resolves to no injector at
+//! all, so the engines must take exactly their seed-era code paths.
+
+use tiny_tasks::config::{
+    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, ServiceConfig, SimulationConfig,
+};
+use tiny_tasks::dist::Exponential;
+use tiny_tasks::sim::{
+    self, Calendar, Discipline, FaultInjector, OverheadModel, RunOptions, TraceLog, Workload,
+};
+use tiny_tasks::trace::cause;
+
+fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs: 4_000,
+        warmup: 400,
+        seed: 2026,
+        overhead: Some(OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+        faults: None,
+    }
+}
+
+fn quantiles(cfg: &SimulationConfig) -> (Vec<f64>, f64, f64) {
+    let mut res = sim::run(cfg, RunOptions::default()).unwrap();
+    let qs = [0.1, 0.5, 0.9, 0.99]
+        .iter()
+        .map(|&q| res.sojourn_quantile(q))
+        .collect();
+    (qs, res.sojourn_summary.mean(), res.waiting_quantile(0.9))
+}
+
+/// An inactive `[faults]` section (every mechanism off — the parsed
+/// default) is bit-for-bit the seed engines, for every model.
+#[test]
+fn inactive_faults_bitwise_equal_to_seed_engines() {
+    for (model, l, k) in [
+        (ModelKind::SplitMerge, 5, 25),
+        (ModelKind::ForkJoinSingleQueue, 5, 25),
+        (ModelKind::ForkJoinPerServer, 5, 5),
+        (ModelKind::Ideal, 5, 25),
+    ] {
+        let plain = base(model, l, k);
+        let degenerate = SimulationConfig {
+            faults: Some(FaultsConfig::default()),
+            ..base(model, l, k)
+        };
+        let (qa, ma, wa) = quantiles(&plain);
+        let (qb, mb, wb) = quantiles(&degenerate);
+        assert_eq!(qa, qb, "{model}: sojourn quantiles diverge");
+        assert_eq!(ma, mb, "{model}: sojourn mean diverges");
+        assert_eq!(wa, wb, "{model}: waiting quantile diverges");
+    }
+}
+
+/// Fixed seed ⇒ fixed crash/retry schedule: two runs of an actively
+/// faulty config agree bitwise, and the fault stats genuinely populate.
+#[test]
+fn fault_schedules_reproducible_per_seed() {
+    let cfg = SimulationConfig {
+        faults: Some(FaultsConfig {
+            mtbf: 40.0,
+            mttr: 1.0,
+            task_fail_p: 0.05,
+            backoff_base: 0.01,
+            ..FaultsConfig::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    let a = sim::run(&cfg, RunOptions::default()).unwrap();
+    let b = sim::run(&cfg, RunOptions::default()).unwrap();
+    assert_eq!(a.sojourn_summary.mean(), b.sojourn_summary.mean());
+    assert_eq!(a.lost_summary.mean(), b.lost_summary.mean());
+    assert_eq!(a.retry_summary.mean(), b.retry_summary.mean());
+    assert!(a.retry_summary.mean() > 0.0, "failures configured but no retries");
+    assert!(a.lost_summary.mean() > 0.0, "retries without lost server time");
+    // A different fault seed re-rolls the schedules without touching the
+    // workload stream — the law changes, so the samples must too.
+    let mut faults = cfg.faults.unwrap();
+    faults.seed = 99;
+    let reseeded = sim::run(
+        &SimulationConfig { faults: Some(faults), ..cfg.clone() },
+        RunOptions::default(),
+    )
+    .unwrap();
+    assert_ne!(
+        reseeded.lost_summary.mean(),
+        a.lost_summary.mean(),
+        "fault seed must drive the fault schedule"
+    );
+}
+
+/// Faults only ever delay work (no speculation): with the identical
+/// workload stream, the faulty run's mean sojourn strictly dominates
+/// the fault-free run's.
+#[test]
+fn faults_degrade_sojourn_monotonically() {
+    let plain = base(ModelKind::ForkJoinSingleQueue, 4, 16);
+    let faulty = SimulationConfig {
+        faults: Some(FaultsConfig {
+            mtbf: 25.0,
+            mttr: 2.0,
+            task_fail_p: 0.1,
+            backoff_base: 0.05,
+            ..FaultsConfig::default()
+        }),
+        ..plain.clone()
+    };
+    let (_, mean_plain, _) = quantiles(&plain);
+    let (_, mean_faulty, _) = quantiles(&faulty);
+    assert!(
+        mean_faulty > mean_plain,
+        "crashes + failed attempts must slow jobs down: {mean_faulty} vs {mean_plain}"
+    );
+}
+
+/// Exact retry accounting, checked against the v3 trace: with a
+/// deterministic per-attempt overhead `c`, every job's charged task
+/// overhead is (k + retries) × c, its lost work is exactly the summed
+/// service of its failed attempts, and attempt counters line up.
+#[test]
+fn retry_accounting_matches_trace_exactly() {
+    let c = 0.02;
+    let k = 8usize;
+    let cfg = SimulationConfig {
+        jobs: 400,
+        warmup: 0,
+        overhead: Some(OverheadConfig {
+            c_task_ts: c,
+            mu_task_ts: f64::INFINITY, // deterministic attempt overhead
+            c_job_pd: 0.0,
+            c_task_pd: 0.0,
+        }),
+        faults: Some(FaultsConfig {
+            task_fail_p: 0.3,
+            max_retries: 3,
+            backoff_base: 0.05,
+            ..FaultsConfig::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 4, k)
+    };
+    let res = sim::run(
+        &cfg,
+        RunOptions { record_jobs: true, trace: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(res.jobs.len(), 400);
+    let events = res.trace.events();
+    let winners = events.iter().filter(|e| e.winner).count();
+    assert_eq!(winners, 400 * k, "exactly one winning attempt per task");
+    assert!(
+        events.iter().any(|e| e.cause == cause::FAILED),
+        "p = 0.3 over 3200 tasks must produce failures"
+    );
+    for job in &res.jobs {
+        let id = job.index as u32;
+        let failed: Vec<_> = events
+            .iter()
+            .filter(|e| e.job == id && e.cause == cause::FAILED)
+            .collect();
+        assert_eq!(
+            failed.len() as u32,
+            job.retries,
+            "job {id}: failed-attempt rows vs retry counter"
+        );
+        let attempts = k as u32 + job.retries;
+        assert!(
+            (job.task_overhead - f64::from(attempts) * c).abs() < 1e-9,
+            "job {id}: overhead {} != {attempts} attempts x {c}",
+            job.task_overhead
+        );
+        let lost: f64 = failed.iter().map(|e| e.end - e.start).sum();
+        assert!(
+            (job.lost_work - lost).abs() < 1e-9,
+            "job {id}: lost_work {} vs trace {lost}",
+            job.lost_work
+        );
+        // The winning attempt of a task with f failures is attempt f+1.
+        for t in 0..k as u32 {
+            let fails = failed.iter().filter(|e| e.task == t).count() as u32;
+            let win = events
+                .iter()
+                .find(|e| e.job == id && e.task == t && e.winner)
+                .expect("winner row");
+            assert_eq!(win.attempt, fails + 1, "job {id} task {t}");
+            assert_eq!(win.cause, cause::NONE);
+        }
+    }
+}
+
+/// Speculative re-execution hedges stragglers: backups launch, their
+/// cancelled copies are billed as redundant work, and every job departs.
+#[test]
+fn speculation_populates_redundant_work() {
+    let cfg = SimulationConfig {
+        jobs: 3_000,
+        warmup: 300,
+        overhead: None,
+        faults: Some(FaultsConfig { spec_timeout: 2.0, ..FaultsConfig::default() }),
+        ..base(ModelKind::ForkJoinSingleQueue, 4, 8)
+    };
+    let res = sim::run(&cfg, RunOptions::default()).unwrap();
+    assert_eq!(res.sojourn.len(), 3_000);
+    assert!(
+        res.redundant_summary.mean() > 0.0,
+        "exp service exceeds 2 x E[task] often; backups must fire"
+    );
+    // Speculation is a hedge, not a failure: no retries, nothing lost.
+    assert_eq!(res.retry_summary.mean(), 0.0);
+    assert_eq!(res.lost_summary.mean(), 0.0);
+}
+
+/// Sharded runs merge fault statistics: the thread count is
+/// unobservable (bitwise), a single shard is the unsharded engine, and
+/// (seed, shard count) pins the merged result.
+#[test]
+fn sharded_runs_merge_fault_stats() {
+    let cfg = SimulationConfig {
+        jobs: 6_000,
+        faults: Some(FaultsConfig {
+            mtbf: 40.0,
+            mttr: 1.0,
+            task_fail_p: 0.05,
+            backoff_base: 0.01,
+            ..FaultsConfig::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 4, 16)
+    };
+    let serial =
+        sim::run(&cfg, RunOptions { shards: 4, threads: 1, ..Default::default() }).unwrap();
+    let parallel =
+        sim::run(&cfg, RunOptions { shards: 4, threads: 4, ..Default::default() }).unwrap();
+    for (a, b) in [
+        (&serial.lost_summary, &parallel.lost_summary),
+        (&serial.retry_summary, &parallel.retry_summary),
+        (&serial.redundant_summary, &parallel.redundant_summary),
+    ] {
+        assert_eq!(a.count(), b.count());
+        assert_eq!(a.mean(), b.mean());
+        assert_eq!(a.variance(), b.variance());
+    }
+    assert_eq!(serial.lost_summary.count(), cfg.jobs as u64);
+    assert!(serial.retry_summary.mean() > 0.0, "fault stats lost in the merge");
+    // Replication shards draw independent fault schedules, so shard 0
+    // alone must not reproduce the merged stream — but the same (seed,
+    // shard count) must.
+    let again =
+        sim::run(&cfg, RunOptions { shards: 4, threads: 2, ..Default::default() }).unwrap();
+    assert_eq!(serial.lost_summary.mean(), again.lost_summary.mean());
+    let unsharded = sim::run(&cfg, RunOptions::default()).unwrap();
+    assert_eq!(unsharded.lost_summary.count(), cfg.jobs as u64);
+    let single =
+        sim::run(&cfg, RunOptions { shards: 1, threads: 4, ..Default::default() }).unwrap();
+    assert_eq!(unsharded.lost_summary.mean(), single.lost_summary.mean());
+    assert_eq!(unsharded.retry_summary.mean(), single.retry_summary.mean());
+}
+
+/// The `figure faults` acceptance property: at constant mean job
+/// workload, the server time lost per failure event shrinks with k —
+/// a failure wastes at most one task, and tasks shrink as ~1/k.
+#[test]
+fn work_lost_per_failure_shrinks_with_k() {
+    let ratio = |k: usize| {
+        let cfg = SimulationConfig {
+            arrival: ArrivalConfig { interarrival: "exp:0.5".into() },
+            service: ServiceConfig { execution: format!("exp:{}", k as f64 / 4.0) },
+            jobs: 4_000,
+            warmup: 400,
+            overhead: None,
+            faults: Some(FaultsConfig {
+                task_fail_p: 0.1,
+                backoff_base: 0.01,
+                ..FaultsConfig::default()
+            }),
+            ..base(ModelKind::ForkJoinSingleQueue, 4, k)
+        };
+        let res = sim::run(&cfg, RunOptions::default()).unwrap();
+        let retries = res.retry_summary.mean();
+        assert!(retries > 0.0, "k={k}: no retries observed");
+        res.lost_summary.mean() / retries
+    };
+    let (coarse, fine) = (ratio(8), ratio(64));
+    assert!(
+        fine < coarse / 2.0,
+        "lost work per retry must shrink with k: k=8 {coarse} vs k=64 {fine}"
+    );
+}
+
+/// The calendar engine under faults: deterministic per seed, every job
+/// departs, losses and retries are recorded, and crashes slow the
+/// system down relative to its own fault-free run on the same workload
+/// stream.
+#[test]
+fn calendar_engine_runs_faults_deterministically() {
+    let (l, k, n) = (4usize, 16usize, 2_000usize);
+    let mu = k as f64 / l as f64;
+    let faults = FaultsConfig {
+        mtbf: 30.0,
+        mttr: 1.0,
+        task_fail_p: 0.05,
+        backoff_base: 0.01,
+        ..FaultsConfig::default()
+    };
+    let oh = OverheadModel::none();
+    let run_cal = |inject: bool| {
+        let mut w =
+            Workload::new(Exponential::new(0.4).into(), Exponential::new(mu).into(), 7);
+        let injector = inject.then(|| FaultInjector::new(faults, l, 7, 1.0 / mu));
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, l, vec![k as u32])
+            .with_faults(injector);
+        let mut tr = TraceLog::disabled();
+        cal.run(n, &mut w, &oh, &mut tr)
+    };
+    let faulty = run_cal(true);
+    assert_eq!(faulty.len(), n, "every job must depart despite crashes");
+    let lost: f64 = faulty.iter().map(|r| r.lost_work).sum();
+    let retries: u32 = faulty.iter().map(|r| r.retries).sum();
+    assert!(lost > 0.0 && retries > 0, "fault accounting missing: {lost} / {retries}");
+    let again = run_cal(true);
+    for (a, b) in faulty.iter().zip(&again) {
+        assert_eq!(a.departure, b.departure, "calendar fault run not deterministic");
+        assert_eq!(a.lost_work, b.lost_work);
+        assert_eq!(a.retries, b.retries);
+    }
+    let plain = run_cal(false);
+    let mean = |rs: &[tiny_tasks::sim::JobRecord]| {
+        rs.iter().map(|r| r.sojourn()).sum::<f64>() / rs.len() as f64
+    };
+    assert!(
+        mean(&faulty) > mean(&plain),
+        "faults must delay the calendar engine: {} vs {}",
+        mean(&faulty),
+        mean(&plain)
+    );
+}

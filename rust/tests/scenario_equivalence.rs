@@ -25,6 +25,7 @@ fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
         overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

@@ -23,6 +23,7 @@ fn base(jobs: usize) -> SimulationConfig {
         overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

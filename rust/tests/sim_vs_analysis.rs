@@ -20,6 +20,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, lambda: f64, mu: f64, jobs: usize) 
         overhead: None,
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

@@ -21,6 +21,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -> Simulati
         overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
         workers: None,
         redundancy: None,
+        faults: None,
     }
 }
 

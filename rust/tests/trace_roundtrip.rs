@@ -10,8 +10,8 @@ use tiny_tasks::rng::{Pcg64, Rng};
 use tiny_tasks::sim::{self, RunOptions};
 use tiny_tasks::stats::{pp_distance, Ecdf};
 use tiny_tasks::trace::{
-    from_binary, from_ndjson, replay, to_binary, to_ndjson, JobRow, ReplayOptions, TaskRow,
-    Trace, TraceFormat, TraceMeta, SCHEMA_V1, SCHEMA_V2,
+    cause, from_binary, from_ndjson, replay, to_binary, to_ndjson, JobRow, ReplayOptions,
+    TaskRow, Trace, TraceFormat, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3,
 };
 
 fn tmp_dir() -> std::path::PathBuf {
@@ -22,11 +22,13 @@ fn tmp_dir() -> std::path::PathBuf {
 
 /// A randomized (but valid) trace exercising awkward float values.
 /// Even seeds build v1 traces; odd seeds build v2 traces with random
-/// scenario fields (speeds, replicas, loser rows), so the codec
-/// property test covers both wire formats.
+/// scenario fields (speeds, replicas, loser rows); seeds ≡ 3 (mod 4)
+/// upgrade to v3 with random attempt counters and failure causes, so the
+/// codec property test covers all three wire formats.
 fn random_trace(seed: u64) -> Trace {
     let mut rng = Pcg64::seed_from_u64(seed);
     let v2 = seed % 2 == 1;
+    let v3 = seed % 4 == 3;
     let n_jobs = 1 + (rng.next_below(40) as usize);
     let k = 1 + (rng.next_below(6) as u32);
     let mut jobs = Vec::new();
@@ -60,6 +62,8 @@ fn random_trace(seed: u64) -> Trace {
                 // v2 rows may be cancelled replicas; v1 rows must all be
                 // winners (enforced by Trace::validate).
                 winner: !v2 || rng.next_below(4) != 0,
+                attempt: if v3 { 1 + rng.next_below(4) as u32 } else { 1 },
+                cause: if v3 { rng.next_below(u64::from(cause::MAX) + 1) as u8 } else { 0 },
             });
         }
     }
@@ -70,7 +74,13 @@ fn random_trace(seed: u64) -> Trace {
     };
     Trace {
         meta: TraceMeta {
-            schema: if v2 { SCHEMA_V2 } else { SCHEMA_V1 },
+            schema: if v3 {
+                SCHEMA_V3
+            } else if v2 {
+                SCHEMA_V2
+            } else {
+                SCHEMA_V1
+            },
             source: "sim".into(),
             model: "single-queue-fork-join".into(),
             servers: 8,
@@ -104,6 +114,8 @@ fn assert_bitwise_eq(a: &Trace, b: &Trace, codec: &str) {
         assert_eq!(x.end.to_bits(), y.end.to_bits(), "{codec}");
         assert_eq!(x.overhead.to_bits(), y.overhead.to_bits(), "{codec}");
         assert_eq!(x.winner, y.winner, "{codec}: winner flag");
+        assert_eq!(x.attempt, y.attempt, "{codec}: attempt counter");
+        assert_eq!(x.cause, y.cause, "{codec}: failure cause");
     }
 }
 
@@ -138,6 +150,7 @@ fn record_run(jobs: usize, warmup: usize, overhead: bool) -> Trace {
         overhead: overhead.then(OverheadConfig::paper),
         workers: None,
         redundancy: None,
+        faults: None,
     };
     let res = sim::run(
         &cfg,
@@ -200,6 +213,7 @@ fn scenario_trace_records_as_v2_and_replays() {
             replicas: 2,
             launch_overhead: 1e-3,
         }),
+        faults: None,
     };
     let res = sim::run(
         &cfg,
@@ -236,6 +250,55 @@ fn scenario_trace_records_as_v2_and_replays() {
         rep_mean > 0.2 * rec_mean && rep_mean < 5.0 * rec_mean,
         "replayed mean {rep_mean} far from recorded {rec_mean}"
     );
+}
+
+/// Schema v3 end to end: a fault-injected run records attempt counters
+/// and failure causes, survives both codecs bitwise, and replays off the
+/// winning attempts.
+#[test]
+fn fault_trace_records_as_v3_and_replays() {
+    let cfg = SimulationConfig {
+        model: ModelKind::ForkJoinSingleQueue,
+        servers: 4,
+        tasks_per_job: 8,
+        arrival: tiny_tasks::config::ArrivalConfig { interarrival: "exp:0.3".into() },
+        service: tiny_tasks::config::ServiceConfig { execution: "exp:2.0".into() },
+        jobs: 200,
+        warmup: 0,
+        seed: 9,
+        overhead: Some(OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+        faults: Some(tiny_tasks::config::FaultsConfig {
+            task_fail_p: 0.25,
+            max_retries: 2,
+            backoff_base: 0.01,
+            ..Default::default()
+        }),
+    };
+    let res = sim::run(
+        &cfg,
+        RunOptions { record_jobs: true, trace: true, ..Default::default() },
+    )
+    .unwrap();
+    let tr = Trace::from_sim(&res).unwrap();
+    assert_eq!(tr.meta.schema, SCHEMA_V3);
+    assert!(tr.tasks.iter().any(|t| t.cause == cause::FAILED), "failures must be recorded");
+    assert!(tr.tasks.iter().any(|t| t.attempt > 1), "retries must be recorded");
+    // Winner-only sample banks: one service sample per logical task.
+    assert_eq!(tr.task_services().len(), 200 * 8);
+
+    let dir = tmp_dir();
+    for (name, fmt) in [("v3.ndjson", None), ("v3.bin", Some(TraceFormat::Binary))] {
+        let path = dir.join(name);
+        tr.write_file(&path, fmt).unwrap();
+        let back = Trace::read_file(&path).unwrap();
+        assert_bitwise_eq(&tr, &back, name);
+    }
+
+    let rep = replay(&tr, &ReplayOptions::default()).unwrap();
+    assert_eq!(rep.jobs.len(), 200);
+    assert_eq!(rep.tasks_per_job, 8);
 }
 
 /// `Dist::Empirical` inverse-transform draws agree with `stats::Ecdf`
@@ -361,6 +424,7 @@ fn calibrate_from_trace_end_to_end() {
         overhead: Some(injected),
         workers: None,
         redundancy: None,
+        faults: None,
     };
     let res = sim::run(
         &cfg,
