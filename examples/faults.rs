@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let mut clean = sim::run(&base, RunOptions::default()).map_err(anyhow::Error::msg)?;
         let faulty_cfg = SimulationConfig { faults: Some(faults), ..base };

@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = sim::run(
             &cfg,

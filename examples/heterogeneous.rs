@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
                     None
                 },
                 faults: None,
+                policy: None,
             };
             let rec = advisor::recommend_simulated(&pool, &base, mean_workload, epsilon, &ks)
                 .map_err(anyhow::Error::msg)?;

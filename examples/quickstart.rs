@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             };
             let mut res = sim::run(&cfg, RunOptions::default()).map_err(anyhow::Error::msg)?;
             Ok(Some(res.sojourn_quantile(1.0 - eps)))

@@ -29,6 +29,7 @@ fn base(l: usize, k: usize, exec: String, jobs: usize) -> SimulationConfig {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

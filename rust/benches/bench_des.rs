@@ -24,6 +24,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize) -> SimulationConfig {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

@@ -267,6 +267,7 @@ mod tests {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             };
             let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
             let sim_q = res.sojourn_quantile(1.0 - eps);

@@ -83,6 +83,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = crate::sim::run(&cfg, Default::default()).unwrap();
         let sim_mean = res.sojourn_summary.mean();

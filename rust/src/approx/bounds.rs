@@ -235,6 +235,7 @@ mod tests {
             workers: Some(WorkersConfig::Speeds(speeds)),
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let mut res = crate::sim::run(&cfg, Default::default()).unwrap();
         let sim_q = res.sojourn_quantile(0.99);

@@ -88,7 +88,22 @@ impl ClusterSpec {
     /// Resolve the scenario shape of a simulation config (speeds drawn
     /// from a distribution are resolved with the config's speed seed, so
     /// the analytic and simulated sides see the same cluster).
+    ///
+    /// Rejects active (non-FCFS) dispatch policies explicitly: every
+    /// stability region and sojourn bound in this module assumes the
+    /// paper's earliest-free-server FCFS dispatch, and a silently wrong
+    /// answer for a SITA/priority/work-stealing config would be worse
+    /// than no answer.
     pub fn from_sim_config(cfg: &SimulationConfig) -> Result<Self, String> {
+        if let Some(p) = &cfg.policy {
+            if p.is_active() {
+                return Err(format!(
+                    "the analytic approximation models FCFS dispatch only; \
+                     policy \"{}\" needs a simulation sweep",
+                    p.kind
+                ));
+            }
+        }
         Self::new(cfg.resolved_speeds()?, cfg.replicas(), cfg.launch_overhead())
     }
 
@@ -247,5 +262,26 @@ mod tests {
         // Default config is the degenerate scenario.
         let spec = ClusterSpec::from_sim_config(&SimulationConfig::default()).unwrap();
         assert!(spec.is_degenerate());
+    }
+
+    /// Non-FCFS dispatch is rejected with a pointed error (the analytics
+    /// assume the paper's FCFS rule); an explicit-but-inactive `fcfs`
+    /// section still resolves.
+    #[test]
+    fn from_sim_config_rejects_active_policy() {
+        let mut cfg = SimulationConfig {
+            servers: 4,
+            tasks_per_job: 8,
+            policy: Some(crate::config::PolicyConfig {
+                kind: crate::config::PolicyKind::Sita,
+                sita_boundaries: vec![1.0],
+                ..crate::config::PolicyConfig::default()
+            }),
+            ..SimulationConfig::default()
+        };
+        let err = ClusterSpec::from_sim_config(&cfg).unwrap_err();
+        assert!(err.contains("FCFS"), "{err}");
+        cfg.policy = Some(crate::config::PolicyConfig::default());
+        assert!(ClusterSpec::from_sim_config(&cfg).is_ok());
     }
 }

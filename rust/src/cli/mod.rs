@@ -119,6 +119,14 @@ COMMANDS:
                   --fault-backoff-base S)  --spec-timeout F  (speculative
                   backup after F x E[task], first-finish-wins)
                   [--fault-seed S]  (dedicated fault RNG stream)
+                  policy: --policy fcfs|sita|priority|worksteal  (dispatch
+                  discipline; fcfs/absent is bit-identical to the default)
+                  --sita-boundaries 0.5,2.0  (ascending size-interval
+                  boundaries; n boundaries -> n+1 server partitions)
+                  --classes N [--class-weights 2,1]  (priority classes,
+                  partition shares; per-class sojourns are reported)
+                  --steal-threshold S  (work stealing: a queued task is
+                  stealable S seconds after it becomes ready)
                   --streaming      (O(1)-memory P2 quantiles, for huge --jobs)
                   --threads N      (split the run into N replication shards
                   on N workers; merged Welford/P2 stats. Deterministic per
@@ -146,13 +154,15 @@ COMMANDS:
                   --time-scale S --inject-overhead
                   --speeds 1.0,0.5,.. | --speed-dist SPEC  (slowdown-only
                   executor pinning, factors in (0,1])
-    trace       Persistent task traces (schema v1/v2/v3, ndjson or binary;
+    trace       Persistent task traces (schema v1-v4, ndjson or binary;
                 scenario runs record worker speeds, replicas and
                 replica-winner flags as schema v2; fault-injected runs
-                record attempt counters and failure causes as schema v3)
+                record attempt counters and failure causes as schema v3;
+                policy runs record the dispatch policy and per-task
+                routing classes as schema v4)
                   record    --source sim|emulator --out FILE [--format ndjson|bin]
                             + the simulate/emulate flag sets (--model, --k,
-                            --speeds, --redundancy, --mtbf, --task-fail-p, ...)
+                            --speeds, --redundancy, --mtbf, --policy, ...)
                   replay    --in FILE [--model sm|fj|fjps|ideal] [--servers L]
                             [--overhead ...] [--in-order] [--seed S]
                   summarize --in FILE
@@ -168,7 +178,7 @@ COMMANDS:
                   --model sm|fj --servers L --k-list 50,100,...
     figure      Regenerate a paper figure's data as CSV
                   fig1-2|fig3|fig8|fig9|fig10|fig11|fig12a|fig12b|fig13|
-                  hetero|hetero-approx|faults|all
+                  hetero|hetero-approx|faults|policy|all
                   [--out DIR] [--scale quick|paper] [--threads N]
     calibrate   Fit the 4-parameter overhead model (Sec. 2.6)
                   [--jobs N] [--k K] [--executors L]   (live sparklite)
@@ -179,8 +189,9 @@ COMMANDS:
                   from the approx analytic engine (microseconds); add
                   --simulate to fall back to simulation sweeps
                   ([--threads N] sizes the sweep pool); fault flags
-                  (--mtbf, --task-fail-p, --spec-timeout, ...) always
-                  advise from a fault-injected simulation sweep
+                  (--mtbf, --task-fail-p, --spec-timeout, ...) and policy
+                  flags (--policy sita|priority|worksteal, ...) always
+                  advise from a simulation sweep
     selfcheck   Run artifact-vs-rust cross validation
     help        Show this help
 

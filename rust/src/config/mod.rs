@@ -11,6 +11,7 @@ mod toml;
 
 pub use schema::{
     ArrivalConfig, BackoffKind, EmulatorConfig, ExperimentConfig, FaultsConfig, ModelKind,
-    OverheadConfig, RedundancyConfig, ServiceConfig, SimulationConfig, WorkersConfig,
+    OverheadConfig, PolicyConfig, PolicyKind, RedundancyConfig, ServiceConfig,
+    SimulationConfig, WorkersConfig,
 };
 pub use toml::{parse as parse_toml, TomlValue};

@@ -332,6 +332,157 @@ impl FaultsConfig {
     }
 }
 
+/// Which discipline routes tasks to servers (the scheduling-policy axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// First-come-first-served to the earliest-free server — the paper's
+    /// dispatch rule and the bit-exact default.
+    Fcfs,
+    /// Size-interval task assignment: servers are partitioned into size
+    /// groups and each task is routed by its drawn execution time.
+    Sita,
+    /// Multi-class priority: jobs cycle through `classes` classes, each
+    /// class owning a dedicated server partition sized by `weights`.
+    Priority,
+    /// Round-robin server affinity with idle-server stealing when the
+    /// affinity server's backlog exceeds the idlest server's by more
+    /// than `steal_threshold` seconds.
+    WorkSteal,
+}
+
+impl PolicyKind {
+    /// Parse a CLI/TOML token.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "fcfs" => Ok(Self::Fcfs),
+            "sita" => Ok(Self::Sita),
+            "priority" => Ok(Self::Priority),
+            "worksteal" | "work-steal" | "steal" => Ok(Self::WorkSteal),
+            other => Err(format!(
+                "unknown policy {other:?} (use fcfs | sita | priority | worksteal)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Fcfs => "fcfs",
+            Self::Sita => "sita",
+            Self::Priority => "priority",
+            Self::WorkSteal => "worksteal",
+        })
+    }
+}
+
+/// Dispatch-policy configuration (`[policy]` section).
+///
+/// `policy = "fcfs"` (or an absent section) is bit-for-bit the seed
+/// engines — no policy state is built at all, mirroring how all-off
+/// `[faults]` sections degrade (enforced by
+/// `rust/tests/policy_equivalence.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicyConfig {
+    /// Selected discipline.
+    pub kind: PolicyKind,
+    /// SITA size-interval boundaries (strictly ascending, > 0). `n`
+    /// boundaries split the servers into `n + 1` size groups; an empty
+    /// list is the single-interval degenerate case (≡ FCFS).
+    pub sita_boundaries: Vec<f64>,
+    /// Number of priority classes (jobs are classed round-robin by
+    /// arrival index).
+    pub classes: usize,
+    /// Per-class server-partition weights; empty = equal shares. Must
+    /// have `classes` entries otherwise.
+    pub weights: Vec<f64>,
+    /// Work-stealing trigger: steal when the affinity server's free
+    /// time exceeds the idlest server's by more than this (seconds).
+    pub steal_threshold: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            kind: PolicyKind::Fcfs,
+            sita_boundaries: Vec::new(),
+            classes: 2,
+            weights: Vec::new(),
+            steal_threshold: 0.0,
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// True when the configured discipline departs from FCFS. Inactive
+    /// configs take the seed fast path (no policy state is built).
+    pub fn is_active(&self) -> bool {
+        self.kind != PolicyKind::Fcfs
+    }
+
+    /// Job classes that get their own sojourn summary (priority only;
+    /// SITA classes are per-task, so job sojourns are classless).
+    pub fn class_count(&self) -> usize {
+        match self.kind {
+            PolicyKind::Priority => self.classes,
+            _ => 0,
+        }
+    }
+
+    /// Number of server groups the cluster is partitioned into.
+    pub fn group_count(&self) -> usize {
+        match self.kind {
+            PolicyKind::Sita => self.sita_boundaries.len() + 1,
+            PolicyKind::Priority => self.classes,
+            _ => 1,
+        }
+    }
+
+    /// Partition weights per group (equal when unspecified).
+    pub fn group_weights(&self) -> Vec<f64> {
+        match self.kind {
+            PolicyKind::Priority if !self.weights.is_empty() => self.weights.clone(),
+            _ => vec![1.0; self.group_count()],
+        }
+    }
+
+    /// Split `servers` into `group_count()` contiguous partitions
+    /// proportional to the group weights, by largest remainder (ties to
+    /// the lower index), with every group guaranteed at least one
+    /// server. Deterministic; requires `servers >= group_count()`
+    /// (enforced by `validate`).
+    pub fn partition_sizes(&self, servers: usize) -> Vec<usize> {
+        let w = self.group_weights();
+        let total: f64 = w.iter().sum();
+        let mut sizes: Vec<usize> = w
+            .iter()
+            .map(|x| (servers as f64 * x / total).floor() as usize)
+            .collect();
+        let assigned: usize = sizes.iter().sum();
+        let mut frac: Vec<(usize, f64)> = w
+            .iter()
+            .enumerate()
+            .map(|(i, x)| (i, servers as f64 * x / total - sizes[i] as f64))
+            .collect();
+        frac.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for j in 0..servers.saturating_sub(assigned) {
+            sizes[frac[j % frac.len()].0] += 1;
+        }
+        // Heavily skewed weights can starve a group; steal from the
+        // largest (servers >= groups makes this always feasible).
+        for i in 0..sizes.len() {
+            if sizes[i] == 0 {
+                let big = (0..sizes.len())
+                    .max_by_key(|&j| sizes[j])
+                    .expect("non-empty partition");
+                sizes[big] -= 1;
+                sizes[i] += 1;
+            }
+        }
+        sizes
+    }
+}
+
 /// One simulation run configuration.
 #[derive(Clone, Debug)]
 pub struct SimulationConfig {
@@ -360,6 +511,9 @@ pub struct SimulationConfig {
     pub redundancy: Option<RedundancyConfig>,
     /// Fault injection; `None` (or an all-off section) = fault-free.
     pub faults: Option<FaultsConfig>,
+    /// Dispatch policy; `None` (or `policy = "fcfs"`) = the seed FCFS
+    /// earliest-free dispatch.
+    pub policy: Option<PolicyConfig>,
 }
 
 impl Default for SimulationConfig {
@@ -377,6 +531,7 @@ impl Default for SimulationConfig {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         }
     }
 }
@@ -516,6 +671,120 @@ impl SimulationConfig {
                          or use redundancy.replicas instead"
                             .into(),
                     );
+                }
+            }
+        }
+        if let Some(p) = &self.policy {
+            match p.kind {
+                PolicyKind::Fcfs => {}
+                PolicyKind::Sita => {
+                    for w in p.sita_boundaries.windows(2) {
+                        if !(w[0] < w[1]) {
+                            return Err(format!(
+                                "policy.sita_boundaries must be strictly ascending, \
+                                 got {:?}",
+                                p.sita_boundaries
+                            ));
+                        }
+                    }
+                    if p.sita_boundaries.iter().any(|b| !(b.is_finite() && *b > 0.0)) {
+                        return Err(format!(
+                            "policy.sita_boundaries must be finite and > 0, got {:?}",
+                            p.sita_boundaries
+                        ));
+                    }
+                }
+                PolicyKind::Priority => {
+                    if p.classes < 2 {
+                        return Err("policy.classes must be >= 2 for priority".into());
+                    }
+                    if !p.weights.is_empty() {
+                        if p.weights.len() != p.classes {
+                            return Err(format!(
+                                "policy.weights needs one entry per class \
+                                 (got {} weights for {} classes)",
+                                p.weights.len(),
+                                p.classes
+                            ));
+                        }
+                        if p.weights.iter().any(|w| !(w.is_finite() && *w > 0.0)) {
+                            return Err(format!(
+                                "policy.weights must be finite and > 0, got {:?}",
+                                p.weights
+                            ));
+                        }
+                    }
+                }
+                PolicyKind::WorkSteal => {
+                    if !(p.steal_threshold >= 0.0 && p.steal_threshold.is_finite()) {
+                        return Err(format!(
+                            "policy.steal_threshold must be finite and >= 0, got {}",
+                            p.steal_threshold
+                        ));
+                    }
+                }
+            }
+            if p.is_active() {
+                if self.model == ModelKind::Ideal {
+                    return Err(
+                        "dispatch policies need per-task dispatch; the ideal \
+                         equisized-partition model has none — pick sm/fj"
+                            .into(),
+                    );
+                }
+                if self.model == ModelKind::ForkJoinPerServer {
+                    return Err(
+                        "the per-server fork-join model binds one task per server \
+                         and leaves no dispatch decision for a policy — pick sm/fj"
+                            .into(),
+                    );
+                }
+                let groups = p.group_count();
+                if groups > self.servers {
+                    return Err(format!(
+                        "policy partitions the cluster into {} server groups but \
+                         only {} servers are configured",
+                        groups, self.servers
+                    ));
+                }
+                if self
+                    .faults
+                    .map(|f| f.speculation_enabled())
+                    .unwrap_or(false)
+                {
+                    return Err(
+                        "faults.spec_timeout assumes the shared FCFS queue; drop \
+                         speculation or use policy = \"fcfs\""
+                            .into(),
+                    );
+                }
+                match p.kind {
+                    PolicyKind::Sita | PolicyKind::WorkSteal => {
+                        if self.workers.is_some() || self.replicas() > 1 {
+                            return Err(format!(
+                                "policy = \"{}\" dispatches single attempts on a \
+                                 homogeneous cluster; drop [workers]/[redundancy] \
+                                 or use priority/fcfs",
+                                p.kind
+                            ));
+                        }
+                    }
+                    PolicyKind::Priority => {
+                        let min_group = p
+                            .partition_sizes(self.servers)
+                            .into_iter()
+                            .min()
+                            .unwrap_or(0);
+                        if self.replicas() > min_group {
+                            return Err(format!(
+                                "redundancy.replicas ({}) cannot exceed the smallest \
+                                 priority server group ({} servers)",
+                                self.replicas(),
+                                min_group
+                            ));
+                        }
+                    }
+                    PolicyKind::Fcfs => unreachable!("inactive"),
                 }
             }
         }
@@ -678,13 +947,18 @@ impl ExperimentConfig {
             Some(sec) => Some(faults_from_section(sec)?),
             None => None,
         };
-        if workers.is_some() || redundancy.is_some() || faults.is_some() {
-            let sim = simulation
-                .as_mut()
-                .ok_or("[workers]/[redundancy]/[faults] require a [simulation] section")?;
+        let policy = match doc.get("policy") {
+            Some(sec) => Some(policy_from_section(sec)?),
+            None => None,
+        };
+        if workers.is_some() || redundancy.is_some() || faults.is_some() || policy.is_some() {
+            let sim = simulation.as_mut().ok_or(
+                "[workers]/[redundancy]/[faults]/[policy] require a [simulation] section",
+            )?;
             sim.workers = workers;
             sim.redundancy = redundancy;
             sim.faults = faults;
+            sim.policy = policy;
         }
         let emulator = match doc.get("emulator") {
             Some(sec) => Some(emu_from_section(sec)?),
@@ -798,6 +1072,27 @@ fn faults_from_section(sec: &Section) -> Result<FaultsConfig, String> {
     })
 }
 
+fn policy_from_section(sec: &Section) -> Result<PolicyConfig, String> {
+    let d = PolicyConfig::default();
+    Ok(PolicyConfig {
+        kind: PolicyKind::parse(&get_str(sec, "policy", "fcfs")?)?,
+        sita_boundaries: match sec.get("sita_boundaries") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_f64_array()
+                .ok_or("policy.sita_boundaries must be an array of numbers")?,
+        },
+        classes: get_usize(sec, "classes", d.classes)?,
+        weights: match sec.get("weights") {
+            None => Vec::new(),
+            Some(v) => v
+                .as_f64_array()
+                .ok_or("policy.weights must be an array of numbers")?,
+        },
+        steal_threshold: get_f64(sec, "steal_threshold", d.steal_threshold)?,
+    })
+}
+
 fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
     let d = SimulationConfig::default();
     Ok(SimulationConfig {
@@ -813,6 +1108,7 @@ fn sim_from_section(sec: &Section) -> Result<SimulationConfig, String> {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     })
 }
 
@@ -1095,6 +1391,127 @@ seed = 9
         )
         .unwrap_err();
         assert!(err.contains("k = l"), "{err}");
+    }
+
+    #[test]
+    fn parse_policy_section() {
+        let cfg = ExperimentConfig::from_str(
+            r#"
+[simulation]
+model = "fj"
+servers = 8
+tasks_per_job = 16
+[policy]
+policy = "sita"
+sita_boundaries = [0.5, 2.0]
+"#,
+        )
+        .unwrap();
+        let p = cfg.simulation.unwrap().policy.unwrap();
+        assert_eq!(p.kind, PolicyKind::Sita);
+        assert!(p.is_active());
+        assert_eq!(p.group_count(), 3);
+        assert_eq!(p.class_count(), 0);
+        assert_eq!(p.sita_boundaries, vec![0.5, 2.0]);
+        // Priority with explicit weights.
+        let cfg = ExperimentConfig::from_str(
+            "[simulation]\nservers = 6\ntasks_per_job = 12\n\
+             [policy]\npolicy = \"priority\"\nclasses = 2\nweights = [2.0, 1.0]\n",
+        )
+        .unwrap();
+        let p = cfg.simulation.unwrap().policy.unwrap();
+        assert_eq!(p.class_count(), 2);
+        assert_eq!(p.partition_sizes(6), vec![4, 2]);
+        // An fcfs section parses but reports inactive.
+        let cfg = ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n[policy]\npolicy = \"fcfs\"\n",
+        )
+        .unwrap();
+        assert!(!cfg.simulation.unwrap().policy.unwrap().is_active());
+        // Kind token round-trip.
+        for (s, k) in [
+            ("fcfs", PolicyKind::Fcfs),
+            ("sita", PolicyKind::Sita),
+            ("priority", PolicyKind::Priority),
+            ("worksteal", PolicyKind::WorkSteal),
+            ("work-steal", PolicyKind::WorkSteal),
+        ] {
+            assert_eq!(PolicyKind::parse(s).unwrap(), k);
+        }
+        assert!(PolicyKind::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn policy_section_is_validated() {
+        // Boundaries must ascend.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"sita\"\nsita_boundaries = [2.0, 1.0]\n",
+        )
+        .is_err());
+        // More groups than servers.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 2\ntasks_per_job = 4\n\
+             [policy]\npolicy = \"sita\"\nsita_boundaries = [1.0, 2.0]\n",
+        )
+        .is_err());
+        // Policies need per-task dispatch; ideal has none.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nmodel = \"ideal\"\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"worksteal\"\n",
+        )
+        .is_err());
+        // SITA routes by size on a homogeneous cluster only.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"sita\"\n[redundancy]\nreplicas = 2\n",
+        )
+        .is_err());
+        // Priority + redundancy: replicas bounded by the smallest group.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"priority\"\nclasses = 2\n\
+             [redundancy]\nreplicas = 3\n",
+        )
+        .is_err());
+        // Speculation assumes the shared FCFS queue.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"worksteal\"\n[faults]\nspec_timeout = 3.0\n",
+        )
+        .is_err());
+        // Weight arity must match the class count.
+        assert!(ExperimentConfig::from_str(
+            "[simulation]\nservers = 4\ntasks_per_job = 8\n\
+             [policy]\npolicy = \"priority\"\nclasses = 3\nweights = [1.0, 2.0]\n",
+        )
+        .is_err());
+        // Policy without a [simulation] section.
+        assert!(ExperimentConfig::from_str("[policy]\npolicy = \"sita\"\n").is_err());
+    }
+
+    #[test]
+    fn partition_sizes_are_deterministic_and_exhaustive() {
+        let p = PolicyConfig {
+            kind: PolicyKind::Priority,
+            classes: 3,
+            weights: vec![5.0, 3.0, 1.0],
+            ..PolicyConfig::default()
+        };
+        for servers in 3..40 {
+            let sizes = p.partition_sizes(servers);
+            assert_eq!(sizes.len(), 3);
+            assert_eq!(sizes.iter().sum::<usize>(), servers);
+            assert!(sizes.iter().all(|&s| s >= 1), "{sizes:?}");
+            assert_eq!(sizes, p.partition_sizes(servers));
+        }
+        // Equal weights split near-evenly.
+        let p = PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![1.0],
+            ..PolicyConfig::default()
+        };
+        assert_eq!(p.partition_sizes(5), vec![3, 2]);
     }
 
     #[test]

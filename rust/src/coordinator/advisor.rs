@@ -241,6 +241,7 @@ mod tests {
             ])),
             redundancy: Some(RedundancyConfig::new(2)),
             faults: None,
+            policy: None,
         };
         let pool = ThreadPool::new(4);
         let ks = k_grid(l, 16.0);

@@ -248,6 +248,7 @@ fn sim_base_for(
         workers,
         redundancy,
         faults: None,
+        policy: None,
     }
 }
 
@@ -367,6 +368,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = crate::sim::run(
             &cfg,

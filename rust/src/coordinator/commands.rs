@@ -4,8 +4,8 @@ use super::figures::{self, FigureCtx, Scale};
 use super::{advisor, calibrate};
 use crate::cli::Args;
 use crate::config::{
-    BackoffKind, EmulatorConfig, FaultsConfig, ModelKind, OverheadConfig, RedundancyConfig,
-    SimulationConfig, WorkersConfig,
+    BackoffKind, EmulatorConfig, FaultsConfig, ModelKind, OverheadConfig, PolicyConfig,
+    PolicyKind, RedundancyConfig, SimulationConfig, WorkersConfig,
 };
 use crate::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
 use crate::sim::{self, RunOptions};
@@ -89,6 +89,60 @@ fn faults_from_args(args: &Args) -> Result<Option<FaultsConfig>> {
     Ok(cfg.is_active().then_some(cfg))
 }
 
+/// Parse the dispatch-policy flags: `--policy fcfs|sita|priority|worksteal`
+/// plus the per-policy knobs `--sita-boundaries 0.5,2.0` (ascending
+/// seconds), `--classes N --class-weights 2,1` (priority partitions) and
+/// `--steal-threshold S` (work stealing). Returns `None` for an absent or
+/// `fcfs` policy so default runs stay on the untouched (bit-for-bit
+/// identical) dispatch paths; cross-field validation (partition
+/// arithmetic, model/scenario compatibility) happens in
+/// `SimulationConfig::validate` when the run starts.
+fn policy_from_args(args: &Args) -> Result<Option<PolicyConfig>> {
+    let kind = match args.get("policy") {
+        Some(tok) => PolicyKind::parse(tok).map_err(e)?,
+        None => {
+            for flag in ["sita-boundaries", "classes", "class-weights", "steal-threshold"] {
+                if args.get(flag).is_some() {
+                    bail!("--{flag} needs --policy sita|priority|worksteal");
+                }
+            }
+            return Ok(None);
+        }
+    };
+    let d = PolicyConfig::default();
+    let cfg = PolicyConfig {
+        kind,
+        sita_boundaries: args
+            .get_list_f64("sita-boundaries")
+            .map_err(e)?
+            .unwrap_or_default(),
+        classes: args.get_usize("classes", d.classes).map_err(e)?,
+        weights: args.get_list_f64("class-weights").map_err(e)?.unwrap_or_default(),
+        steal_threshold: args.get_f64("steal-threshold", d.steal_threshold).map_err(e)?,
+    };
+    Ok(cfg.is_active().then_some(cfg))
+}
+
+/// One-line policy description for command banners.
+fn policy_banner(p: &PolicyConfig, servers: usize) -> String {
+    match p.kind {
+        PolicyKind::Sita => format!(
+            "sita (boundaries {:?} -> partitions {:?})",
+            p.sita_boundaries,
+            p.partition_sizes(servers)
+        ),
+        PolicyKind::Priority => format!(
+            "priority ({} classes -> partitions {:?})",
+            p.classes,
+            p.partition_sizes(servers)
+        ),
+        PolicyKind::WorkSteal => {
+            format!("worksteal (steal threshold {} s)", p.steal_threshold)
+        }
+        PolicyKind::Fcfs => "fcfs".into(),
+    }
+}
+
 /// Parse a `--k-list 50,100,...` flag into task counts, rejecting
 /// non-integer or non-positive entries (a negative value used to
 /// saturate to k = 0 and panic deep inside the sweep).
@@ -157,6 +211,7 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         workers,
         redundancy,
         faults: faults_from_args(args)?,
+        policy: policy_from_args(args)?,
     };
     let opts = RunOptions {
         in_order_departures: args.get_bool("in-order"),
@@ -184,6 +239,9 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
             cfg.replicas()
         );
     }
+    if let Some(p) = &cfg.policy {
+        println!("policy           {}", policy_banner(p, l));
+    }
     println!("jobs             {} (+{} warmup)", cfg.jobs, cfg.warmup);
     if opts.shards > 1 || opts.threads > 1 {
         let shards = if opts.shards == 0 { opts.threads.max(1) } else { opts.shards };
@@ -199,6 +257,13 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
     }
     println!("mean waiting     {:.4} s", res.waiting_quantile(0.5));
     println!("mean overhead/job {:.6} s", res.overhead_summary.mean());
+    for (c, s) in res.class_sojourn.iter().enumerate() {
+        println!(
+            "class {c} sojourn  {:.4} s mean over {} jobs",
+            s.mean(),
+            s.count()
+        );
+    }
     if cfg.replicas() > 1 {
         println!("mean redundant/job {:.6} s", res.redundant_summary.mean());
     }
@@ -463,16 +528,22 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
     let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
     let (workers, redundancy) = scenario_from_args(args)?;
     let faults = faults_from_args(args)?;
-    let rec = if workers.is_some() || redundancy.is_some() || faults.is_some() {
+    let policy = policy_from_args(args)?;
+    let rec = if workers.is_some()
+        || redundancy.is_some()
+        || faults.is_some()
+        || policy.is_some()
+    {
         if model == ModelKind::ForkJoinPerServer {
             bail!(
                 "the scenario advisor sweeps tasks-per-job and needs a \
                  tiny-tasks model (sm/fj); fjps is fixed at k = l"
             );
         }
-        // The analytic approximation knows nothing about faults, so
-        // fault-injected advice always comes from a simulation sweep.
-        if args.get_bool("simulate") || faults.is_some() {
+        // The analytic approximation knows nothing about faults or
+        // non-FCFS dispatch, so fault-injected and policy advice always
+        // comes from a simulation sweep.
+        if args.get_bool("simulate") || faults.is_some() || policy.is_some() {
             let jobs = args.get_usize("jobs", 8_000).map_err(e)?;
             let kappa_max = args.get_f64("kappa-max", 32.0).map_err(e)?;
             let base = SimulationConfig {
@@ -490,10 +561,13 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
                 workers,
                 redundancy,
                 faults,
+                policy,
             };
             let pool = pool_from_args(args)?;
             let ks = advisor::k_grid(l, kappa_max);
-            if faults.is_some() {
+            if let Some(p) = &base.policy {
+                println!("engine: simulation sweep (policy: {})", policy_banner(p, l));
+            } else if faults.is_some() {
                 println!("engine: simulation sweep (fault-injected scenario)");
             } else {
                 println!("engine: simulation sweep (heterogeneous/redundant scenario)");
@@ -556,6 +630,12 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
     let oh = overhead_from_args(args)?.unwrap_or_else(OverheadConfig::paper);
     let (workers, redundancy) = scenario_from_args(args)?;
     let faults = faults_from_args(args)?;
+    if policy_from_args(args)?.is_some() {
+        bail!(
+            "the analytic approximation models FCFS dispatch only; drop --policy \
+             (policy sweeps: `tiny-tasks advisor --policy ...` or `figure policy`)"
+        );
+    }
     if faults.is_some() && args.get_bool("check") {
         bail!(
             "--check compares the analytic curve against a fault-free sweep; \
@@ -589,6 +669,7 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
             workers,
             redundancy,
             faults,
+            None,
             &ks,
         )
         .map_err(e)?;
@@ -789,6 +870,7 @@ fn bench_sim_cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 
@@ -865,6 +947,29 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
                 .count()
         });
         rows.push(BenchRow::new(name, "recursion", "fj+streaming", l, k, jobs, r));
+
+        // Dispatch-policy variant: the --policy flag set selects the
+        // discipline; without flags the row defaults to SITA with a
+        // boundary at the mean task size (both size classes stay
+        // populated on the exp:{k/l} service law), so the policy layer's
+        // cost is tracked next to the plain fj row on every run.
+        let policy = match policy_from_args(args)? {
+            Some(p) => p,
+            None => PolicyConfig {
+                kind: PolicyKind::Sita,
+                sita_boundaries: vec![l as f64 / k as f64],
+                ..PolicyConfig::default()
+            },
+        };
+        let name = format!("sim/fj/l50/k400/policy-{}", policy.kind);
+        let cfg = SimulationConfig {
+            policy: Some(policy),
+            ..bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed)
+        };
+        let r = bencher.bench(&name, || {
+            sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
+        });
+        rows.push(BenchRow::new(&name, "recursion", "fj+policy", l, k, jobs, r));
     }
 
     // Event-calendar engine, both disciplines (cross-validation path).
@@ -1082,6 +1187,9 @@ fn trace_record(args: &Args) -> Result<i32> {
                 // Fault-injected runs record as schema v3 (attempt
                 // counters + failure causes on task rows).
                 faults: faults_from_args(args)?,
+                // Policy runs record as schema v4 (policy token in the
+                // meta + routing classes on task rows).
+                policy: policy_from_args(args)?,
             };
             let res = sim::run(
                 &cfg,

@@ -56,6 +56,7 @@ pub fn fig10(ctx: &FigureCtx) -> Result<()> {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = sim::run(&cfg, RunOptions { record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;

@@ -28,6 +28,7 @@ pub fn fig1_2(ctx: &FigureCtx) -> Result<()> {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
             .map_err(anyhow::Error::msg)?;
@@ -76,6 +77,7 @@ mod tests {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             };
             let res = sim::run(&cfg, RunOptions { trace: true, record_jobs: true, ..Default::default() })
                 .unwrap();

@@ -63,6 +63,7 @@ pub fn fig3(ctx: &FigureCtx) -> Result<()> {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         },
     };
     let q = 1.0 - eps;

@@ -79,6 +79,7 @@ pub fn fig8(ctx: &FigureCtx) -> Result<()> {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             },
         };
         let q = 1.0 - eps;

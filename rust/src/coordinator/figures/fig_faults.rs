@@ -70,6 +70,7 @@ pub fn fig_faults(ctx: &FigureCtx) -> Result<()> {
             None,
             None,
             *faults,
+            None,
             &ks,
         )
         .map_err(anyhow::Error::msg)?;

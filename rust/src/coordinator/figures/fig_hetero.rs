@@ -65,6 +65,7 @@ pub fn fig_hetero(ctx: &FigureCtx) -> Result<()> {
                 None
             },
             faults: None,
+            policy: None,
         },
     };
 

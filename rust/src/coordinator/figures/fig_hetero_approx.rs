@@ -62,6 +62,7 @@ pub fn fig_hetero_approx(ctx: &FigureCtx) -> Result<()> {
                 None
             },
             None,
+            None,
             &ks,
         )
         .map_err(anyhow::Error::msg)?;

@@ -1,0 +1,131 @@
+//! Scheduling-policy panel (beyond the paper): how task granularity
+//! interacts with the dispatch discipline.
+//!
+//! The paper's dispatch rule is FCFS to the earliest-free server; this
+//! panel sweeps tasks-per-job k at constant mean job workload (μ = k/l)
+//! once per policy — FCFS, degenerate single-interval SITA, SITA with a
+//! boundary at the mean task size, two-class priority, and work
+//! stealing — and emits one CSV row per (policy, k):
+//!
+//! `config,k,sojourn_q,sojourn_mean,overhead_mean,class0_mean,class1_mean`
+//!
+//! Every policy runs on the SAME master seed, so the `fcfs` and `sita1`
+//! rows must agree bitwise at every k: a single size interval routes
+//! every task to the one all-server partition, which is exactly the
+//! FCFS earliest-free dispatch (test-enforced in
+//! `rust/tests/policy_equivalence.rs` and asserted by the CI policy
+//! smoke job against this CSV). `class0_mean`/`class1_mean` are the
+//! per-class mean sojourns (priority rows only; `nan` elsewhere).
+//!
+//! The size-dependent knobs scale with k: the SITA boundary and the
+//! steal threshold both sit at the mean task size l/k, so every k sees
+//! the same *relative* policy shape.
+
+use super::{FigureCtx, Scale};
+use crate::config::{ModelKind, OverheadConfig, PolicyConfig, PolicyKind};
+use crate::coordinator::sweep::{constant_workload_points, run_sweep, SweepPoint};
+use crate::util::csv::Csv;
+use anyhow::Result;
+
+/// The swept policies, with knobs scaled to the mean task size at k.
+fn panel_policy(label: &str, mean_task: f64) -> Option<PolicyConfig> {
+    match label {
+        "fcfs" => None,
+        // Single size interval: active policy state, degenerate routing.
+        "sita1" => Some(PolicyConfig { kind: PolicyKind::Sita, ..Default::default() }),
+        "sita" => Some(PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![mean_task],
+            ..Default::default()
+        }),
+        "priority" => Some(PolicyConfig {
+            kind: PolicyKind::Priority,
+            classes: 2,
+            weights: vec![2.0, 1.0],
+            ..Default::default()
+        }),
+        "worksteal" => Some(PolicyConfig {
+            kind: PolicyKind::WorkSteal,
+            steal_threshold: mean_task,
+            ..Default::default()
+        }),
+        other => unreachable!("unknown panel policy {other:?}"),
+    }
+}
+
+pub fn fig_policy(ctx: &FigureCtx) -> Result<()> {
+    let l = 10usize;
+    let lambda = 0.4;
+    let eps = 0.01;
+    let oh = OverheadConfig::paper();
+    let (ks, jobs): (Vec<usize>, usize) = match ctx.scale {
+        Scale::Quick => (vec![10, 20, 40, 80, 160], 6_000),
+        Scale::Paper => (vec![10, 20, 40, 80, 160, 320, 640], 40_000),
+    };
+    let configs = ["fcfs", "sita1", "sita", "priority", "worksteal"];
+
+    let mut csv = Csv::new(vec![
+        "config",
+        "k",
+        "sojourn_q",
+        "sojourn_mean",
+        "overhead_mean",
+        "class0_mean",
+        "class1_mean",
+    ]);
+    for label in configs {
+        // One point per k so the size-dependent knobs can track l/k;
+        // points stay in k order, so run_sweep's per-index reseeding
+        // gives every policy the identical seed at the same k — that is
+        // what makes the fcfs and sita1 rows comparable bitwise.
+        let mut points: Vec<SweepPoint> = Vec::with_capacity(ks.len());
+        for &k in &ks {
+            points.extend(
+                constant_workload_points(
+                    ModelKind::ForkJoinSingleQueue,
+                    l,
+                    lambda,
+                    l as f64,
+                    jobs,
+                    Some(oh),
+                    None,
+                    None,
+                    None,
+                    panel_policy(label, l as f64 / k as f64),
+                    &[k],
+                )
+                .map_err(anyhow::Error::msg)?,
+            );
+        }
+        // Same master seed for every policy (see above).
+        let sims = run_sweep(ctx.pool, points, 1.0 - eps, ctx.seed ^ 0x701C)
+            .map_err(anyhow::Error::msg)?;
+        for sim in &sims {
+            let class = |c: usize| {
+                sim.class_sojourn_mean
+                    .get(c)
+                    .map(|m| m.to_string())
+                    .unwrap_or_else(|| "nan".into())
+            };
+            csv.push_raw(vec![
+                label.to_string(),
+                sim.label.to_string(),
+                sim.sojourn_q.to_string(),
+                sim.sojourn_mean.to_string(),
+                sim.overhead_mean.to_string(),
+                class(0),
+                class(1),
+            ]);
+        }
+    }
+    let path = ctx.out_dir.join("policy_panel.csv");
+    csv.write_file(&path)?;
+    println!(
+        "policy: {} rows ({} policies x {} ks) -> {}",
+        csv.len(),
+        configs.len(),
+        ks.len(),
+        path.display()
+    );
+    Ok(())
+}

@@ -13,6 +13,7 @@ mod fig13;
 mod fig_faults;
 mod fig_hetero;
 mod fig_hetero_approx;
+mod fig_policy;
 
 pub use fig1_2::fig1_2;
 pub use fig3::fig3;
@@ -25,6 +26,7 @@ pub use fig13::fig13;
 pub use fig_faults::{fig_faults, panel_faults};
 pub use fig_hetero::{fig_hetero, two_class_speeds};
 pub use fig_hetero_approx::fig_hetero_approx;
+pub use fig_policy::fig_policy;
 
 use anyhow::Result;
 use std::path::Path;
@@ -67,7 +69,7 @@ pub struct FigureCtx<'a> {
 /// beyond-the-paper scenario panels.
 pub const ALL: &[&str] = &[
     "fig1-2", "fig3", "fig8", "fig9", "fig10", "fig11", "fig12a", "fig12b", "fig13",
-    "hetero", "hetero-approx", "faults",
+    "hetero", "hetero-approx", "faults", "policy",
 ];
 
 /// Run one figure by id.
@@ -85,6 +87,7 @@ pub fn run(id: &str, ctx: &FigureCtx) -> Result<()> {
         "hetero" => fig_hetero(ctx),
         "hetero-approx" => fig_hetero_approx(ctx),
         "faults" => fig_faults(ctx),
+        "policy" => fig_policy(ctx),
         "all" => {
             for id in ALL {
                 println!("== {id} ==");

@@ -2,8 +2,8 @@
 //! the thread pool, with per-point seeding derived from a master seed.
 
 use crate::config::{
-    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, RedundancyConfig, ServiceConfig,
-    SimulationConfig, WorkersConfig,
+    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, PolicyConfig, RedundancyConfig,
+    ServiceConfig, SimulationConfig, WorkersConfig,
 };
 use crate::rng::spawn_seeds;
 use crate::sim::{self, RunOptions, SimResult};
@@ -37,6 +37,9 @@ pub struct SweepOutcome {
     pub lost_mean: f64,
     /// Mean task retries per job (0 outside fault injection).
     pub retry_mean: f64,
+    /// Per-class mean sojourns (priority policies only; empty
+    /// otherwise). Index = class.
+    pub class_sojourn_mean: Vec<f64>,
     /// Jobs simulated per wall second (perf telemetry).
     pub jobs_per_sec: f64,
 }
@@ -74,6 +77,7 @@ pub fn constant_workload_points(
     workers: Option<WorkersConfig>,
     redundancy: Option<RedundancyConfig>,
     faults: Option<FaultsConfig>,
+    policy: Option<PolicyConfig>,
     ks: &[usize],
 ) -> Result<Vec<SweepPoint>, String> {
     if !(mean_workload > 0.0 && mean_workload.is_finite()) {
@@ -102,6 +106,7 @@ pub fn constant_workload_points(
                 workers: workers.clone(),
                 redundancy,
                 faults,
+                policy: policy.clone(),
             },
         })
         .collect())
@@ -146,6 +151,7 @@ pub fn run_sweep_with(
             redundant_mean: res.redundant_summary.mean(),
             lost_mean: res.lost_summary.mean(),
             retry_mean: res.retry_summary.mean(),
+            class_sojourn_mean: res.class_sojourn.iter().map(|s| s.mean()).collect(),
             jobs_per_sec: res.jobs_per_second(),
         })
     })?;
@@ -175,6 +181,7 @@ mod tests {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             },
         }
     }
@@ -262,6 +269,7 @@ mod tests {
                 None,
                 None,
                 None,
+                None,
                 &[10, 20],
             );
             assert!(r.is_err(), "workload {bad} must be rejected");
@@ -276,6 +284,7 @@ mod tests {
             None,
             None,
             None,
+            None,
             &[10],
         );
         assert!(r.is_err(), "lambda 0 must be rejected");
@@ -285,6 +294,7 @@ mod tests {
             0.5,
             10.0,
             1000,
+            None,
             None,
             None,
             None,

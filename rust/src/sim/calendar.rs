@@ -46,6 +46,7 @@
 //! O(1) per waiting job, but had no bitwise contract to honour.
 
 use super::{FaultInjector, JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
+use crate::config::{PolicyConfig, PolicyKind};
 use crate::trace::cause;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -84,6 +85,10 @@ enum EventKind {
     /// Fault injection: the attempt dispatched at `dseq` exceeded the
     /// speculation deadline; launch a backup copy if a server is idle.
     SpecLaunch { server: u32, dseq: u64 },
+    /// Work stealing: a queued stage's steal deadline elapsed; re-run
+    /// dispatch so off-affinity idle servers may now take its tasks. The
+    /// event itself is a no-op — dispatch runs after every event.
+    StealTick,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -163,6 +168,91 @@ struct ReadyTask {
     exec: f64,
     /// Pre-drawn task-service overhead.
     overhead: f64,
+    /// Dispatch-policy class (SITA size interval / priority class);
+    /// 0 without a policy.
+    class: u32,
+    /// Work stealing: the task's preferred server; 0 otherwise.
+    affinity: u32,
+    /// Work stealing: instant from which any idle server may steal the
+    /// task (enqueue time + threshold); ∞ otherwise. Stored as the
+    /// absolute instant so the matching `StealTick` event compares
+    /// bit-equal.
+    steal_at: f64,
+}
+
+/// Policy routing table for the calendar engine — the event-calendar
+/// counterpart of [`super::PolicyState`] (which speaks the recursion
+/// engines' server-heap API). Built only for an *active* policy; FCFS
+/// configs build `None` and leave the engine bit-for-bit unchanged.
+#[derive(Clone, Debug)]
+struct PolicyDispatch {
+    kind: PolicyKind,
+    /// SITA size boundaries (class = number of boundaries ≤ exec).
+    boundaries: Vec<f64>,
+    /// Priority class count (class = job index mod classes).
+    classes: usize,
+    /// Server id → group index (contiguous largest-remainder partition,
+    /// as in the recursion engines). All zeros for work stealing.
+    server_group: Vec<u32>,
+    /// Work stealing: wait threshold before any server may steal.
+    threshold: f64,
+    /// Work stealing: round-robin affinity cursor (reset per run).
+    next: usize,
+}
+
+impl PolicyDispatch {
+    /// Build the routing table, or `None` for FCFS/absent policies.
+    fn from_config(p: &PolicyConfig, servers: usize) -> Option<Self> {
+        if !p.is_active() {
+            return None;
+        }
+        let mut server_group = vec![0u32; servers];
+        let mut s = 0usize;
+        for (g, size) in p.partition_sizes(servers).into_iter().enumerate() {
+            for _ in 0..size {
+                server_group[s] = g as u32;
+                s += 1;
+            }
+        }
+        Some(Self {
+            kind: p.kind,
+            boundaries: p.sita_boundaries.clone(),
+            classes: p.classes,
+            server_group,
+            threshold: p.steal_threshold,
+            next: 0,
+        })
+    }
+
+    /// Route one task: its policy class and (work stealing) preferred
+    /// server.
+    fn route(&mut self, job_index: u32, exec: f64) -> (u32, u32) {
+        match self.kind {
+            PolicyKind::Sita => {
+                let class = self.boundaries.iter().filter(|&&b| exec >= b).count();
+                (class as u32, 0)
+            }
+            PolicyKind::Priority => ((job_index as usize % self.classes) as u32, 0),
+            PolicyKind::WorkSteal => {
+                let a = (self.next % self.server_group.len()) as u32;
+                self.next += 1;
+                (0, a)
+            }
+            // Inactive policies never construct a table.
+            PolicyKind::Fcfs => unreachable!("FCFS builds no PolicyDispatch"),
+        }
+    }
+
+    /// May `server` run `rt` at `now`?
+    fn compatible(&self, server: u32, rt: &ReadyTask, now: f64) -> bool {
+        match self.kind {
+            PolicyKind::Sita | PolicyKind::Priority => {
+                self.server_group[server as usize] == rt.class
+            }
+            PolicyKind::WorkSteal => rt.affinity == server || now >= rt.steal_at,
+            PolicyKind::Fcfs => unreachable!("FCFS builds no PolicyDispatch"),
+        }
+    }
 }
 
 /// A task attempt currently occupying a server (fault mode only; the
@@ -213,6 +303,9 @@ pub struct Calendar {
     /// Fault injection (crashes, retries, speculation). `None` keeps the
     /// fault-free event flow bit-for-bit unchanged.
     faults: Option<FaultInjector>,
+    /// Dispatch-policy routing table. `None` (absent or FCFS config)
+    /// keeps the FIFO dispatch path bit-for-bit unchanged.
+    policy: Option<PolicyDispatch>,
     /// Per-server in-flight attempt (fault mode only).
     running: Vec<Option<Running>>,
     /// Per-server down flag (fault mode only).
@@ -247,6 +340,7 @@ impl Calendar {
             total_jobs: 0,
             completed: Vec::new(),
             faults: None,
+            policy: None,
             running: Vec::new(),
             down: Vec::new(),
             dseq: 0,
@@ -266,6 +360,16 @@ impl Calendar {
         self
     }
 
+    /// Attach a dispatch policy (SITA / priority / work stealing). FCFS
+    /// or absent configs build no routing table and leave the engine
+    /// bit-for-bit unchanged. Policies are fault-free in this engine
+    /// (config validation already rejects the combination for the
+    /// calendar's consumers); [`Calendar::run`] asserts it.
+    pub fn with_policy(mut self, policy: Option<&PolicyConfig>) -> Self {
+        self.policy = policy.and_then(|p| PolicyDispatch::from_config(p, self.servers));
+        self
+    }
+
     fn push_event(&mut self, time: f64, kind: EventKind) {
         self.seq += 1;
         self.heap.push(Event { time, seq: self.seq, kind });
@@ -281,6 +385,11 @@ impl Calendar {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> Vec<JobRecord> {
+        assert!(
+            self.faults.is_none() || self.policy.is_none(),
+            "the calendar engine composes faults with FCFS only; \
+             policy+faults runs go through the recursion engines"
+        );
         // Reset to an empty system (slab and queues keep their capacity).
         self.heap.clear();
         self.idle.clear();
@@ -297,6 +406,9 @@ impl Calendar {
         self.down.clear();
         self.down.resize(self.servers, false);
         self.dseq = 0;
+        if let Some(p) = &mut self.policy {
+            p.next = 0;
+        }
         if n_jobs == 0 {
             return Vec::new();
         }
@@ -339,6 +451,9 @@ impl Calendar {
                 EventKind::SpecLaunch { server, dseq } => {
                     self.on_spec_launch(ev.time, server, dseq, workload, overhead)
                 }
+                // Steal deadline reached: nothing to do here — the
+                // dispatch pass below re-evaluates the queue at ev.time.
+                EventKind::StealTick => {}
             }
             self.dispatch(ev.time, trace);
             // The crash/repair calendar reschedules itself forever; stop
@@ -387,12 +502,21 @@ impl Calendar {
     /// barrier stages must run before the next pending job's tasks).
     fn enqueue_stage(
         &mut self,
+        now: f64,
         slot: u32,
         count: u32,
         front: bool,
         workload: &mut Workload,
         overhead: &OverheadModel,
     ) {
+        // Work stealing: every task of this stage becomes stealable at
+        // the same absolute instant; one StealTick re-runs dispatch then.
+        // Stored absolute so the tick and the compatibility check compare
+        // the identical f64.
+        let steal_at = match &self.policy {
+            Some(p) if p.kind == PolicyKind::WorkSteal => now + p.threshold,
+            _ => f64::INFINITY,
+        };
         let js = &mut self.jobs[slot as usize];
         js.to_dispatch = count;
         if !overhead.enabled() {
@@ -406,7 +530,13 @@ impl Calendar {
                 self.scratch.clear();
                 for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
                     js.workload += exec;
-                    self.scratch.push(ReadyTask { slot, task, attempt: 1, exec, overhead: 0.0 });
+                    let (class, affinity) = match &mut self.policy {
+                        Some(p) => p.route(js.index, exec),
+                        None => (0, 0),
+                    };
+                    self.scratch.push(ReadyTask {
+                        slot, task, attempt: 1, exec, overhead: 0.0, class, affinity, steal_at,
+                    });
                 }
                 for rt in self.scratch.drain(..).rev() {
                     self.ready.push_front(rt);
@@ -414,8 +544,17 @@ impl Calendar {
             } else {
                 for (task, &exec) in (0..count).zip(self.exec_buf.iter()) {
                     js.workload += exec;
-                    self.ready.push_back(ReadyTask { slot, task, attempt: 1, exec, overhead: 0.0 });
+                    let (class, affinity) = match &mut self.policy {
+                        Some(p) => p.route(js.index, exec),
+                        None => (0, 0),
+                    };
+                    self.ready.push_back(ReadyTask {
+                        slot, task, attempt: 1, exec, overhead: 0.0, class, affinity, steal_at,
+                    });
                 }
+            }
+            if steal_at.is_finite() {
+                self.push_event(steal_at, EventKind::StealTick);
             }
             return;
         }
@@ -428,7 +567,13 @@ impl Calendar {
                 let oh = overhead.sample_task(workload.rng());
                 js.workload += exec;
                 js.task_overhead += oh;
-                self.scratch.push(ReadyTask { slot, task, attempt: 1, exec, overhead: oh });
+                let (class, affinity) = match &mut self.policy {
+                    Some(p) => p.route(js.index, exec),
+                    None => (0, 0),
+                };
+                self.scratch.push(ReadyTask {
+                    slot, task, attempt: 1, exec, overhead: oh, class, affinity, steal_at,
+                });
             }
             for rt in self.scratch.drain(..).rev() {
                 self.ready.push_front(rt);
@@ -439,8 +584,17 @@ impl Calendar {
                 let oh = overhead.sample_task(workload.rng());
                 js.workload += exec;
                 js.task_overhead += oh;
-                self.ready.push_back(ReadyTask { slot, task, attempt: 1, exec, overhead: oh });
+                let (class, affinity) = match &mut self.policy {
+                    Some(p) => p.route(js.index, exec),
+                    None => (0, 0),
+                };
+                self.ready.push_back(ReadyTask {
+                    slot, task, attempt: 1, exec, overhead: oh, class, affinity, steal_at,
+                });
             }
+        }
+        if steal_at.is_finite() {
+            self.push_event(steal_at, EventKind::StealTick);
         }
     }
 
@@ -449,7 +603,7 @@ impl Calendar {
         // Draw this job's first-stage tasks immediately (recursion-engine
         // draw order: arrival, then k × (execution, overhead)).
         let k = self.stage_tasks[0];
-        self.enqueue_stage(slot, k, false, workload, overhead);
+        self.enqueue_stage(now, slot, k, false, workload, overhead);
         if self.discipline == Discipline::SplitMerge {
             self.pending_jobs.push_back(slot);
         }
@@ -519,6 +673,7 @@ impl Calendar {
                         winner: false,
                         attempt: loser.rt.attempt,
                         cause: cause::SPECULATION,
+                        class: 0,
                     });
                 }
                 self.idle.push(p);
@@ -549,6 +704,7 @@ impl Calendar {
                     winner: false,
                     attempt,
                     cause: cause::FAILED,
+                    class: 0,
                 });
             }
             let retry = ReadyTask { attempt: attempt + 1, overhead: oh, ..run.rt };
@@ -566,6 +722,7 @@ impl Calendar {
                 winner: true,
                 attempt,
                 cause: if run.is_backup { cause::SPECULATION } else { cause::NONE },
+                class: 0,
             });
         }
         self.finish_logical_task(now, slot, workload, overhead);
@@ -594,6 +751,7 @@ impl Calendar {
                         winner: false,
                         attempt: run.rt.attempt,
                         cause: cause::CRASHED,
+                        class: 0,
                     });
                 }
                 match run.partner {
@@ -691,7 +849,7 @@ impl Calendar {
             js.stage = next_stage;
             let count = self.stage_tasks[next_stage as usize];
             let front = self.discipline == Discipline::SplitMerge;
-            self.enqueue_stage(slot, count, front, workload, overhead);
+            self.enqueue_stage(now, slot, count, front, workload, overhead);
         } else {
             // Job complete: record it right here (the handler knows the
             // finishing job, so no scan over the job table is needed).
@@ -748,6 +906,9 @@ impl Calendar {
     }
 
     fn dispatch(&mut self, now: f64, trace: &mut TraceLog) {
+        if self.policy.is_some() {
+            return self.dispatch_policy(now, trace);
+        }
         // Split-merge: admit the next job when the floor is clear (the
         // Departure event clears `in_service` at finish + pre-departure).
         if self.discipline == Discipline::SplitMerge && self.in_service.is_none() {
@@ -802,6 +963,7 @@ impl Calendar {
                     winner: true,
                     attempt: 1,
                     cause: cause::NONE,
+                    class: 0,
                 });
             }
             self.push_event(
@@ -809,6 +971,71 @@ impl Calendar {
                 EventKind::TaskFinish { server, slot: rt.slot, dseq: self.dseq },
             );
         }
+    }
+
+    /// Policy dispatch pass: pair each idle server with the first queued
+    /// task it may run — class-matched partitions for SITA/priority,
+    /// affinity-or-stolen for work stealing — instead of the strict-FIFO
+    /// head-of-queue rule. Fault-free by construction (asserted in
+    /// [`Calendar::run`]), so attempts complete unconditionally.
+    fn dispatch_policy(&mut self, now: f64, trace: &mut TraceLog) {
+        if self.discipline == Discipline::SplitMerge && self.in_service.is_none() {
+            if let Some(slot) = self.pending_jobs.pop_front() {
+                self.in_service = Some(slot);
+            }
+        }
+        let in_service = self.in_service;
+        let gated = self.discipline == Discipline::SplitMerge;
+        let mut i = 0;
+        while i < self.idle.len() {
+            let server = self.idle[i];
+            let found = {
+                let p = self.policy.as_ref().expect("policy dispatch");
+                self.ready.iter().position(|rt| {
+                    (!gated || Some(rt.slot) == in_service) && p.compatible(server, rt, now)
+                })
+            };
+            match found {
+                Some(idx) => {
+                    let rt = self.ready.remove(idx).expect("index from position");
+                    self.idle.swap_remove(i);
+                    self.start_task(now, server, rt, trace);
+                    // Don't advance: swap_remove moved a new server here.
+                }
+                None => i += 1,
+            }
+        }
+    }
+
+    /// Start `rt` on `server` at `now` (fault-free policy path): the
+    /// shared accounting + trace + finish-event tail of a dispatch.
+    fn start_task(&mut self, now: f64, server: u32, rt: ReadyTask, trace: &mut TraceLog) {
+        let js = &mut self.jobs[rt.slot as usize];
+        js.to_dispatch -= 1;
+        js.outstanding += 1;
+        let start = now.max(js.arrival);
+        if start < js.first_start {
+            js.first_start = start;
+        }
+        let finish = start + rt.exec + rt.overhead;
+        if trace.is_enabled() {
+            trace.record(TraceEvent {
+                job: js.index,
+                task: rt.task,
+                server,
+                start,
+                end: finish,
+                overhead: rt.overhead,
+                winner: true,
+                attempt: 1,
+                cause: cause::NONE,
+                class: rt.class,
+            });
+        }
+        self.push_event(
+            finish,
+            EventKind::TaskFinish { server, slot: rt.slot, dseq: self.dseq },
+        );
     }
 
     /// Slab capacity (test hook: bounded by in-flight jobs, not run
@@ -1016,6 +1243,111 @@ mod tests {
             assert!((r.redundant_work - 0.5).abs() < 1e-12, "{}", r.redundant_work);
             assert_eq!(r.retries, 0);
         }
+    }
+
+    /// An FCFS (or absent) policy builds no routing table: the run is
+    /// bit-for-bit the plain engine.
+    #[test]
+    fn fcfs_policy_is_bit_identical() {
+        let mk_w = || Workload::new(Exponential::new(0.4).into(), Exponential::new(2.0).into(), 5);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let mut plain = Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6]);
+        let a = plain.run(400, &mut mk_w(), &oh, &mut tr);
+        let pc = PolicyConfig { kind: PolicyKind::Fcfs, ..Default::default() };
+        let mut gated = Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6])
+            .with_policy(Some(&pc));
+        let b = gated.run(400, &mut mk_w(), &oh, &mut tr);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.departure, y.departure);
+            assert_eq!(x.first_start, y.first_start);
+        }
+    }
+
+    /// SITA: every dispatched task lands inside its size class's server
+    /// partition (servers 0–1 ↔ small, 2–3 ↔ large for one boundary over
+    /// four servers).
+    #[test]
+    fn sita_routes_size_classes_to_partitions() {
+        let pc = PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![0.5],
+            ..Default::default()
+        };
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![4])
+            .with_policy(Some(&pc));
+        let mut w = Workload::new(Exponential::new(0.3).into(), Exponential::new(2.0).into(), 9);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let recs = cal.run(200, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 200);
+        let mut seen = [false, false];
+        for e in tr.events() {
+            // Overhead is off, so the occupancy is the pre-drawn size
+            // (up to fp re-rounding of start + exec − start; skip the
+            // knife-edge).
+            let occ = e.end - e.start;
+            if (occ - 0.5).abs() > 1e-9 {
+                assert_eq!(e.class, u32::from(occ >= 0.5), "class from the size");
+            }
+            assert_eq!(e.server / 2, e.class, "server partition must match class");
+            seen[e.class as usize] = true;
+        }
+        assert!(seen[0] && seen[1], "both size classes must occur");
+    }
+
+    /// Priority: class = job mod classes, dispatched on the class's
+    /// partition.
+    #[test]
+    fn priority_partitions_by_job_class() {
+        let pc = PolicyConfig { kind: PolicyKind::Priority, classes: 2, ..Default::default() };
+        let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![2])
+            .with_policy(Some(&pc));
+        let mut w = Workload::new(Exponential::new(0.3).into(), Exponential::new(2.0).into(), 9);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let recs = cal.run(100, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 100);
+        for e in tr.events() {
+            assert_eq!(e.class, e.job % 2);
+            assert_eq!(e.server / 2, e.class);
+        }
+    }
+
+    /// Work stealing: at threshold 0 every task is instantly stealable —
+    /// exactly the FCFS head-of-queue rule — and a prohibitive threshold
+    /// (tasks pinned to their round-robin server) costs sojourn time.
+    #[test]
+    fn worksteal_threshold_shapes_sojourn() {
+        let mean = |threshold: f64| {
+            let pc = PolicyConfig {
+                kind: PolicyKind::WorkSteal,
+                steal_threshold: threshold,
+                ..Default::default()
+            };
+            let mut cal = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4])
+                .with_policy(Some(&pc));
+            let mut w =
+                Workload::new(Exponential::new(0.2).into(), Exponential::new(2.0).into(), 11);
+            let oh = OverheadModel::none();
+            let mut tr = TraceLog::disabled();
+            let recs = cal.run(2000, &mut w, &oh, &mut tr);
+            recs.iter().map(|r| r.sojourn()).sum::<f64>() / recs.len() as f64
+        };
+        let free = mean(0.0);
+        let pinned = mean(1e9);
+        assert!(
+            pinned > free,
+            "pinned affinities must queue longer: {pinned} !> {free}"
+        );
+        // Threshold 0 reduces to the plain FIFO engine sample-for-sample.
+        let mut plain = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4]);
+        let mut w = Workload::new(Exponential::new(0.2).into(), Exponential::new(2.0).into(), 11);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = plain.run(2000, &mut w, &oh, &mut tr);
+        let plain_mean = recs.iter().map(|r| r.sojourn()).sum::<f64>() / recs.len() as f64;
+        assert_eq!(free, plain_mean, "threshold 0 ≡ FCFS");
     }
 
     /// The engine is reusable: back-to-back runs from the same instance

@@ -232,8 +232,33 @@ impl FaultInjector {
         trace: &mut TraceLog,
     ) -> FaultOutcome {
         let exec = workload.next_execution();
-        let mut oh = overhead.sample_task(workload.rng());
+        let oh = overhead.sample_task(workload.rng());
+        self.dispatch_task_drawn(heap, floor, exec, oh, workload, overhead, job, task, 0, trace)
+    }
 
+    /// [`FaultInjector::dispatch_task`] with the primary execution and
+    /// overhead draws supplied by the caller. Dispatch policies use this
+    /// seam: SITA must classify a task by its execution draw *before*
+    /// choosing a server group, and the priority policy stamps its class
+    /// on the trace — both draw `(exec, oh)` in the fault-free stream
+    /// order and then hand dispatch to the injector on the group's
+    /// sub-heap. `dispatch_task` delegates here, so the two paths stay
+    /// draw-for-draw identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task_drawn(
+        &mut self,
+        heap: &mut ServerHeap,
+        floor: f64,
+        exec: f64,
+        oh: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        job: u32,
+        task: u32,
+        class: u32,
+        trace: &mut TraceLog,
+    ) -> FaultOutcome {
+        let mut oh = oh;
         let mut retries = 0u32;
         let mut fail_budget =
             if self.cfg.failures_enabled() { self.cfg.max_retries } else { 0 };
@@ -270,6 +295,7 @@ impl FaultInjector {
                         winner: false,
                         attempt,
                         cause: cause::CRASHED,
+                        class,
                     });
                 }
                 retries += 1;
@@ -306,6 +332,7 @@ impl FaultInjector {
                             winner: false,
                             attempt,
                             cause: cause::SPECULATION,
+                            class,
                         });
                     }
                     win_server = server_b;
@@ -328,6 +355,7 @@ impl FaultInjector {
                             winner: false,
                             attempt,
                             cause: cause::SPECULATION,
+                            class,
                         });
                     }
                 } else {
@@ -358,6 +386,7 @@ impl FaultInjector {
                         winner: false,
                         attempt,
                         cause: cause::FAILED,
+                        class,
                     });
                 }
                 retries += 1;
@@ -378,6 +407,7 @@ impl FaultInjector {
                     winner: true,
                     attempt,
                     cause: cause::NONE,
+                    class,
                 });
             }
             return FaultOutcome {
@@ -443,6 +473,7 @@ impl FaultInjector {
                         winner: false,
                         attempt,
                         cause: cause::CRASHED,
+                        class: 0,
                     });
                 }
                 retries += 1;
@@ -466,6 +497,7 @@ impl FaultInjector {
                         winner: false,
                         attempt,
                         cause: cause::FAILED,
+                        class: 0,
                     });
                 }
                 retries += 1;
@@ -485,6 +517,7 @@ impl FaultInjector {
                     winner: true,
                     attempt,
                     cause: cause::NONE,
+                    class: 0,
                 });
             }
             return (

@@ -20,6 +20,17 @@ impl ServerHeap {
         Self { slots: (0..l).map(|i| (t0, i as u32)).collect() }
     }
 
+    /// Heap over an explicit set of global server ids, all free at `t0` —
+    /// the dispatch-policy groups (SITA size intervals, priority classes)
+    /// partition one physical cluster into sub-heaps that keep the global
+    /// ids, so worker crash schedules and per-worker speeds stay valid.
+    pub fn from_servers(ids: impl IntoIterator<Item = u32>, t0: f64) -> Self {
+        let slots: Vec<(f64, u32)> = ids.into_iter().map(|i| (t0, i)).collect();
+        assert!(!slots.is_empty(), "at least one server");
+        // Equal keys: already a valid heap.
+        Self { slots }
+    }
+
     /// Number of servers.
     #[inline]
     pub fn len(&self) -> usize {
@@ -55,14 +66,24 @@ impl ServerHeap {
     /// next task is dispatched.
     #[inline]
     pub fn pop(&mut self) -> (f64, u32) {
-        assert!(!self.slots.is_empty(), "pop from empty server heap");
+        self.try_pop().expect("pop from empty server heap")
+    }
+
+    /// Checked [`ServerHeap::pop`]: `None` on an empty heap instead of a
+    /// panic, so dispatcher call sites can surface a misconfiguration
+    /// (e.g. a zero-server worker group) as a clean error.
+    #[inline]
+    pub fn try_pop(&mut self) -> Option<(f64, u32)> {
+        if self.slots.is_empty() {
+            return None;
+        }
         let root = self.slots[0];
         let last = self.slots.pop().expect("non-empty");
         if !self.slots.is_empty() {
             self.slots[0] = last;
             self.sift_down(0);
         }
-        root
+        Some(root)
     }
 
     /// Re-insert a server with its new free time.
@@ -226,6 +247,30 @@ mod tests {
             ids.insert(h.pop().1);
         }
         assert_eq!(ids.len(), 6);
+    }
+
+    #[test]
+    fn try_pop_drains_then_yields_none() {
+        let mut h = ServerHeap::new(3, 1.0);
+        for _ in 0..3 {
+            assert!(h.try_pop().is_some());
+        }
+        assert!(h.try_pop().is_none());
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn from_servers_keeps_global_ids() {
+        let mut h = ServerHeap::from_servers([4u32, 7, 9], 2.0);
+        assert_eq!(h.len(), 3);
+        let mut ids = Vec::new();
+        for _ in 0..3 {
+            let (t, id) = h.pop();
+            assert_eq!(t, 2.0);
+            ids.push(id);
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![4, 7, 9]);
     }
 
     #[test]

@@ -22,13 +22,17 @@
 //! The [`scenario`] module extends every model with heterogeneous worker
 //! speeds and first-finish-wins task redundancy (`[workers]` /
 //! `[redundancy]` config sections); the degenerate scenario reduces
-//! bit-for-bit to the homogeneous models.
+//! bit-for-bit to the homogeneous models. The [`policy`] module opens
+//! the scheduling-policy axis (`[policy]` section: SITA, priority
+//! classes, work stealing) behind the same degeneracy discipline —
+//! FCFS configs build no policy state at all.
 
 pub mod calendar;
 pub mod faults;
 mod heap;
 pub mod models;
 mod overhead;
+pub mod policy;
 mod runner;
 pub mod scenario;
 pub mod stability;
@@ -38,6 +42,7 @@ pub use calendar::{Calendar, Discipline};
 pub use faults::{FaultInjector, FaultOutcome};
 pub use heap::ServerHeap;
 pub use overhead::OverheadModel;
+pub use policy::{PolicyState, PolicyTaskOutcome};
 pub use runner::{run, RunOptions, SimResult, STREAMING_QS};
 pub use scenario::{Scenario, TaskOutcome};
 // The trace log lives in the top-level `crate::trace` subsystem now;

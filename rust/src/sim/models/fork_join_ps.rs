@@ -164,6 +164,7 @@ impl ForkJoinPerServer {
                         winner: j == win,
                         attempt: 1,
                         cause: cause::NONE,
+                        class: 0,
                     });
                 }
             }
@@ -224,6 +225,7 @@ impl Model for ForkJoinPerServer {
                     winner: true,
                     attempt: 1,
                     cause: cause::NONE,
+                    class: 0,
                 });
             }
         }

@@ -14,8 +14,8 @@
 
 use super::Model;
 use crate::sim::{
-    FaultInjector, JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog,
-    Workload,
+    FaultInjector, JobRecord, OverheadModel, PolicyState, Scenario, ServerHeap, TraceEvent,
+    TraceLog, Workload,
 };
 use crate::trace::cause;
 
@@ -32,6 +32,9 @@ pub struct ForkJoinSingleQueue {
     /// Fault injection (crashes, retries, speculation); `None` keeps
     /// every fault-free path bit-for-bit unchanged.
     faults: Option<FaultInjector>,
+    /// Dispatch policy (SITA / priority / work stealing); `None` keeps
+    /// the seed FCFS dispatch bit-for-bit unchanged.
+    policy: Option<PolicyState>,
 }
 
 impl ForkJoinSingleQueue {
@@ -45,6 +48,7 @@ impl ForkJoinSingleQueue {
             prev_departure: 0.0,
             scenario: None,
             faults: None,
+            policy: None,
         }
     }
 
@@ -68,6 +72,12 @@ impl ForkJoinSingleQueue {
         self.faults = faults;
         self
     }
+
+    /// Attach a dispatch policy (SITA / priority / work stealing).
+    pub fn with_policy(mut self, policy: Option<PolicyState>) -> Self {
+        self.policy = policy;
+        self
+    }
 }
 
 impl Model for ForkJoinSingleQueue {
@@ -87,7 +97,33 @@ impl Model for ForkJoinSingleQueue {
         let mut last_finish = f64::NEG_INFINITY;
         let mut first_start = f64::INFINITY;
 
-        if let Some(sc) = &mut self.scenario {
+        if let Some(pol) = &mut self.policy {
+            // Policy routing (composing with scenario/faults per task);
+            // no barrier — the job's floor is its arrival.
+            for i in 0..self.k {
+                let out = pol.dispatch_task(
+                    arrival,
+                    n,
+                    i as u32,
+                    &mut self.scenario,
+                    &mut self.faults,
+                    workload,
+                    overhead,
+                    trace,
+                );
+                workload_sum += out.work;
+                overhead_sum += out.overhead;
+                redundant_sum += out.redundant;
+                lost_sum += out.lost;
+                retries_sum += out.retries;
+                if out.first_start < first_start {
+                    first_start = out.first_start;
+                }
+                if out.finish > last_finish {
+                    last_finish = out.finish;
+                }
+            }
+        } else if let Some(sc) = &mut self.scenario {
             if let Some(fi) = &mut self.faults {
                 for i in 0..self.k {
                     let out = sc.dispatch_task_faulty(
@@ -98,6 +134,7 @@ impl Model for ForkJoinSingleQueue {
                         fi,
                         n as u32,
                         i as u32,
+                        0,
                         trace,
                     );
                     workload_sum += out.work;
@@ -121,6 +158,7 @@ impl Model for ForkJoinSingleQueue {
                         overhead,
                         n as u32,
                         i as u32,
+                        0,
                         trace,
                     );
                     workload_sum += out.work;
@@ -186,6 +224,7 @@ impl Model for ForkJoinSingleQueue {
                         winner: true,
                         attempt: 1,
                         cause: cause::NONE,
+                        class: 0,
                     });
                 }
             }

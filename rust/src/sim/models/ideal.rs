@@ -82,6 +82,7 @@ impl Model for IdealPartition {
                     winner: true,
                     attempt: 1,
                     cause: cause::NONE,
+                    class: 0,
                 });
             }
         }

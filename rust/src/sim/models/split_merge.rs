@@ -10,8 +10,8 @@
 
 use super::Model;
 use crate::sim::{
-    FaultInjector, JobRecord, OverheadModel, Scenario, ServerHeap, TraceEvent, TraceLog,
-    Workload,
+    FaultInjector, JobRecord, OverheadModel, PolicyState, Scenario, ServerHeap, TraceEvent,
+    TraceLog, Workload,
 };
 use crate::trace::cause;
 
@@ -26,6 +26,9 @@ pub struct SplitMerge {
     /// Fault injection (crashes, retries, speculation); `None` keeps
     /// every fault-free path bit-for-bit unchanged.
     faults: Option<FaultInjector>,
+    /// Dispatch policy (SITA / priority / work stealing); `None` keeps
+    /// the seed FCFS dispatch bit-for-bit unchanged.
+    policy: Option<PolicyState>,
 }
 
 impl SplitMerge {
@@ -38,6 +41,7 @@ impl SplitMerge {
             prev_departure: 0.0,
             scenario: None,
             faults: None,
+            policy: None,
         }
     }
 
@@ -54,6 +58,76 @@ impl SplitMerge {
     pub fn with_faults(mut self, faults: Option<FaultInjector>) -> Self {
         self.faults = faults;
         self
+    }
+
+    /// Attach a dispatch policy (SITA / priority / work stealing).
+    pub fn with_policy(mut self, policy: Option<PolicyState>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Job body under an active dispatch policy, composing with the
+    /// scenario dispatcher and fault injector per task. The split-merge
+    /// barrier applies to the policy's own server state: fault-free it
+    /// resets every group to the start (all servers idle), under faults
+    /// it only raises free times (repairs span the barrier); the
+    /// makespan is the last task finish either way.
+    fn advance_policy(
+        &mut self,
+        n: usize,
+        arrival: f64,
+        start: f64,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> JobRecord {
+        let pol = self.policy.as_mut().expect("policy path");
+        if self.faults.is_some() {
+            pol.raise_to(start);
+        } else {
+            pol.reset_all(start);
+        }
+        let mut workload_sum = 0.0;
+        let mut overhead_sum = 0.0;
+        let mut redundant_sum = 0.0;
+        let mut lost_sum = 0.0;
+        let mut retries_sum = 0u32;
+        let mut last_finish = f64::NEG_INFINITY;
+        for i in 0..self.k {
+            let out = pol.dispatch_task(
+                start,
+                n,
+                i as u32,
+                &mut self.scenario,
+                &mut self.faults,
+                workload,
+                overhead,
+                trace,
+            );
+            workload_sum += out.work;
+            overhead_sum += out.overhead;
+            redundant_sum += out.redundant;
+            lost_sum += out.lost;
+            retries_sum += out.retries;
+            if out.finish > last_finish {
+                last_finish = out.finish;
+            }
+        }
+        let pd = overhead.pre_departure(self.k);
+        let departure = last_finish + pd;
+        self.prev_departure = departure;
+        JobRecord {
+            index: n,
+            arrival,
+            departure,
+            first_start: start,
+            workload: workload_sum,
+            task_overhead: overhead_sum,
+            pre_departure_overhead: pd,
+            redundant_work: redundant_sum,
+            lost_work: lost_sum,
+            retries: retries_sum,
+        }
     }
 
     /// Job body under fault injection. Differs from the fault-free path
@@ -89,6 +163,7 @@ impl SplitMerge {
                     fi,
                     n as u32,
                     i as u32,
+                    0,
                     trace,
                 )
             } else {
@@ -142,6 +217,9 @@ impl Model for SplitMerge {
         // Start barrier: job starts when it arrives AND the previous job
         // has departed; all servers are idle at that instant.
         let start = arrival.max(self.prev_departure);
+        if self.policy.is_some() {
+            return self.advance_policy(n, arrival, start, workload, overhead, trace);
+        }
         if self.faults.is_some() {
             return self.advance_faulty(n, arrival, start, workload, overhead, trace);
         }
@@ -159,6 +237,7 @@ impl Model for SplitMerge {
                     overhead,
                     n as u32,
                     i as u32,
+                    0,
                     trace,
                 );
                 workload_sum += out.work;
@@ -184,6 +263,7 @@ impl Model for SplitMerge {
                     winner: true,
                     attempt: 1,
                     cause: cause::NONE,
+                    class: 0,
                 });
             }
         } else {

@@ -1,0 +1,546 @@
+//! The dispatch-policy abstraction — the scheduling-policy axis.
+//!
+//! The paper fixes one dispatch discipline (FCFS to the earliest-free
+//! server); this module inverts control at that seam so the granularity
+//! trade-off can be asked under other schedulers, following the
+//! fork-join scheduling-bounds lineage (KhudaBukhsh et al.):
+//!
+//! * **SITA** (`Sita { boundaries }`) — size-interval task assignment:
+//!   the cluster is partitioned into `boundaries.len() + 1` contiguous
+//!   server groups and each task is routed to the group matching its
+//!   drawn execution time (short tasks never queue behind long ones);
+//! * **priority classes** (`Priority { classes }`) — jobs cycle through
+//!   classes round-robin by arrival index; each class owns a dedicated
+//!   server partition sized by its weight, and per-class sojourn
+//!   summaries surface in `SimResult`;
+//! * **work stealing** (`WorkSteal { threshold }`) — tasks carry a
+//!   round-robin server affinity; when the affinity server's backlog
+//!   exceeds the idlest server's by more than `threshold` seconds the
+//!   task is stolen by the idle server.
+//!
+//! `policy = "fcfs"` (or an absent `[policy]` section) resolves to
+//! `None`: no policy state is built and every engine keeps its seed
+//! dispatch path untouched, the same bit-exact degeneracy discipline
+//! the scenario and fault axes follow (`rust/tests/policy_equivalence.rs`).
+//!
+//! Group sub-heaps keep **global** server ids, so per-worker crash
+//! schedules (fault injection) and per-worker speeds (scenarios) stay
+//! valid under any partition.
+
+use super::faults::{FaultInjector, FaultOutcome};
+use super::scenario::{Scenario, TaskOutcome};
+use super::{OverheadModel, ServerHeap, TraceEvent, TraceLog, Workload};
+use crate::config::{PolicyKind, SimulationConfig};
+use crate::trace::cause;
+
+/// Outcome of dispatching one logical task under a policy — the union
+/// of the fault-free and faulty dispatcher outcomes plus the class the
+/// task was routed by.
+#[derive(Clone, Copy, Debug)]
+pub struct PolicyTaskOutcome {
+    /// Earliest instant any attempt of this task began service.
+    pub first_start: f64,
+    /// Completion time of the winning attempt.
+    pub finish: f64,
+    /// Useful work (the winning attempt's execution draw).
+    pub work: f64,
+    /// Task-service overhead charged across attempts.
+    pub overhead: f64,
+    /// Server time consumed by cancelled replicas.
+    pub redundant: f64,
+    /// Work lost to crashes and failed attempts.
+    pub lost: f64,
+    /// Retry count (0 without fault injection).
+    pub retries: u32,
+    /// SITA size interval or priority class (0 under work stealing).
+    pub class: u32,
+}
+
+impl PolicyTaskOutcome {
+    fn from_task(out: TaskOutcome, class: u32) -> Self {
+        Self {
+            first_start: out.first_start,
+            finish: out.finish,
+            work: out.work,
+            overhead: out.overhead,
+            redundant: out.redundant_time,
+            lost: 0.0,
+            retries: 0,
+            class,
+        }
+    }
+
+    fn from_fault(out: FaultOutcome, class: u32) -> Self {
+        Self {
+            first_start: out.first_start,
+            finish: out.finish,
+            work: out.work,
+            overhead: out.overhead,
+            redundant: out.redundant,
+            lost: out.lost,
+            retries: out.retries,
+            class,
+        }
+    }
+}
+
+/// Resolved dispatch-policy state: the server partition (or free-time
+/// vector) one model instance routes every task through.
+#[derive(Clone, Debug)]
+pub enum PolicyState {
+    /// Size-interval task assignment over `boundaries.len() + 1` groups.
+    Sita {
+        /// Strictly ascending execution-time boundaries.
+        boundaries: Vec<f64>,
+        /// Per-interval server sub-heaps (global ids).
+        groups: Vec<ServerHeap>,
+    },
+    /// Multi-class priority with dedicated server partitions.
+    Priority {
+        /// Number of job classes (round-robin by job index).
+        classes: usize,
+        /// Per-class server sub-heaps (global ids).
+        groups: Vec<ServerHeap>,
+    },
+    /// Round-robin affinity with idle-server stealing.
+    WorkSteal {
+        /// Steal when affinity backlog exceeds the idlest by this.
+        threshold: f64,
+        /// Per-server free times (indexed by global server id).
+        free: Vec<f64>,
+        /// Round-robin affinity cursor.
+        next: usize,
+    },
+}
+
+impl PolicyState {
+    /// Resolve a config's policy. `Ok(None)` when no `[policy]` section
+    /// is configured or it selects FCFS, so models keep the seed
+    /// dispatch paths bit-exactly.
+    pub fn from_config(cfg: &SimulationConfig) -> Result<Option<Self>, String> {
+        let Some(p) = &cfg.policy else {
+            return Ok(None);
+        };
+        if !p.is_active() {
+            return Ok(None);
+        }
+        let groups_of = || -> Result<Vec<ServerHeap>, String> {
+            let sizes = p.partition_sizes(cfg.servers);
+            let mut groups = Vec::with_capacity(sizes.len());
+            let mut next_id = 0u32;
+            for &s in &sizes {
+                if s == 0 {
+                    return Err(format!(
+                        "policy partition produced an empty server group \
+                         ({} servers across {} groups)",
+                        cfg.servers,
+                        sizes.len()
+                    ));
+                }
+                groups.push(ServerHeap::from_servers(next_id..next_id + s as u32, 0.0));
+                next_id += s as u32;
+            }
+            Ok(groups)
+        };
+        match p.kind {
+            PolicyKind::Fcfs => unreachable!("inactive policy handled above"),
+            PolicyKind::Sita => Ok(Some(Self::Sita {
+                boundaries: p.sita_boundaries.clone(),
+                groups: groups_of()?,
+            })),
+            PolicyKind::Priority => Ok(Some(Self::Priority {
+                classes: p.classes,
+                groups: groups_of()?,
+            })),
+            PolicyKind::WorkSteal => Ok(Some(Self::WorkSteal {
+                threshold: p.steal_threshold,
+                free: vec![0.0; cfg.servers],
+                next: 0,
+            })),
+        }
+    }
+
+    /// Set every server free at exactly `t` (split-merge start barrier).
+    pub fn reset_all(&mut self, t: f64) {
+        match self {
+            Self::Sita { groups, .. } | Self::Priority { groups, .. } => {
+                for g in groups {
+                    g.reset_all(t);
+                }
+            }
+            Self::WorkSteal { free, .. } => {
+                for f in free {
+                    *f = t;
+                }
+            }
+        }
+    }
+
+    /// Raise every server's free time to at least `t` (split-merge
+    /// barrier under faults: repair times may extend past it).
+    pub fn raise_to(&mut self, t: f64) {
+        match self {
+            Self::Sita { groups, .. } | Self::Priority { groups, .. } => {
+                for g in groups {
+                    g.raise_to(t);
+                }
+            }
+            Self::WorkSteal { free, .. } => {
+                for f in free {
+                    if *f < t {
+                        *f = t;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Largest free time across every server (split-merge makespan).
+    pub fn max_time(&self) -> f64 {
+        match self {
+            Self::Sita { groups, .. } | Self::Priority { groups, .. } => groups
+                .iter()
+                .map(ServerHeap::max_time)
+                .fold(f64::NEG_INFINITY, f64::max),
+            Self::WorkSteal { free, .. } => {
+                free.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+            }
+        }
+    }
+
+    /// The SITA size interval of an execution draw.
+    #[inline]
+    fn sita_class(boundaries: &[f64], exec: f64) -> u32 {
+        boundaries.iter().filter(|&&b| exec >= b).count() as u32
+    }
+
+    /// Dispatch one logical task through the policy, composing with the
+    /// scenario dispatcher (priority only — SITA/work-steal reject
+    /// `[workers]`/`[redundancy]` at validation) and the fault injector
+    /// (any policy). `floor` is the earliest permissible start; `job`
+    /// is the job index (the priority class source).
+    ///
+    /// Draw order is the seed engines' order — execution then overhead
+    /// per task from the workload stream — so a policy run is
+    /// reproducible per seed and perturbs nothing outside its own
+    /// routing decisions.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dispatch_task(
+        &mut self,
+        floor: f64,
+        job: usize,
+        task: u32,
+        scenario: &mut Option<Scenario>,
+        faults: &mut Option<FaultInjector>,
+        workload: &mut Workload,
+        overhead: &OverheadModel,
+        trace: &mut TraceLog,
+    ) -> PolicyTaskOutcome {
+        match self {
+            Self::Sita { boundaries, groups } => {
+                debug_assert!(scenario.is_none(), "SITA rejects scenarios at validation");
+                let exec = workload.next_execution();
+                let oh = overhead.sample_task(workload.rng());
+                let class = Self::sita_class(boundaries, exec);
+                let heap = &mut groups[class as usize];
+                match faults.as_mut() {
+                    Some(fi) => PolicyTaskOutcome::from_fault(
+                        fi.dispatch_task_drawn(
+                            heap, floor, exec, oh, workload, overhead, job as u32, task,
+                            class, trace,
+                        ),
+                        class,
+                    ),
+                    None => dispatch_plain(heap, floor, exec, oh, job as u32, task, class, trace),
+                }
+            }
+            Self::Priority { classes, groups } => {
+                let class = (job % *classes) as u32;
+                let heap = &mut groups[class as usize];
+                if let Some(sc) = scenario.as_mut() {
+                    match faults.as_mut() {
+                        Some(fi) => PolicyTaskOutcome::from_fault(
+                            sc.dispatch_task_faulty(
+                                heap, floor, workload, overhead, fi, job as u32, task,
+                                class, trace,
+                            ),
+                            class,
+                        ),
+                        None => PolicyTaskOutcome::from_task(
+                            sc.dispatch_task(
+                                heap, floor, workload, overhead, job as u32, task, class,
+                                trace,
+                            ),
+                            class,
+                        ),
+                    }
+                } else {
+                    let exec = workload.next_execution();
+                    let oh = overhead.sample_task(workload.rng());
+                    match faults.as_mut() {
+                        Some(fi) => PolicyTaskOutcome::from_fault(
+                            fi.dispatch_task_drawn(
+                                heap, floor, exec, oh, workload, overhead, job as u32,
+                                task, class, trace,
+                            ),
+                            class,
+                        ),
+                        None => dispatch_plain(
+                            heap, floor, exec, oh, job as u32, task, class, trace,
+                        ),
+                    }
+                }
+            }
+            Self::WorkSteal { threshold, free, next } => {
+                debug_assert!(
+                    scenario.is_none(),
+                    "work stealing rejects scenarios at validation"
+                );
+                let l = free.len();
+                let affinity = *next % l;
+                *next = (*next + 1) % l;
+                let mut min_idx = 0usize;
+                let mut min_free = free[0];
+                for (i, &f) in free.iter().enumerate().skip(1) {
+                    if f < min_free {
+                        min_free = f;
+                        min_idx = i;
+                    }
+                }
+                // Steal only when the affinity backlog is worth it.
+                let server = if free[affinity] - min_free > *threshold {
+                    min_idx
+                } else {
+                    affinity
+                };
+                match faults.as_mut() {
+                    Some(fi) => {
+                        let (out, new_free) = fi.dispatch_task_on(
+                            server as u32,
+                            free[server],
+                            floor,
+                            workload,
+                            overhead,
+                            job as u32,
+                            task,
+                            trace,
+                        );
+                        free[server] = new_free;
+                        PolicyTaskOutcome::from_fault(out, 0)
+                    }
+                    None => {
+                        let exec = workload.next_execution();
+                        let oh = overhead.sample_task(workload.rng());
+                        let t_free = free[server];
+                        let start = if floor > t_free { floor } else { t_free };
+                        let finish = start + exec + oh;
+                        free[server] = finish;
+                        if trace.is_enabled() {
+                            trace.record(TraceEvent {
+                                job: job as u32,
+                                task,
+                                server: server as u32,
+                                start,
+                                end: finish,
+                                overhead: oh,
+                                winner: true,
+                                attempt: 1,
+                                cause: cause::NONE,
+                                class: 0,
+                            });
+                        }
+                        PolicyTaskOutcome {
+                            first_start: start,
+                            finish,
+                            work: exec,
+                            overhead: oh,
+                            redundant: 0.0,
+                            lost: 0.0,
+                            retries: 0,
+                            class: 0,
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Single-attempt FCFS dispatch inside one policy group — the seed
+/// engines' arithmetic (`start = max(t_free, floor)`, `finish = start +
+/// exec + oh`) on the group's sub-heap, which is why single-group SITA
+/// reproduces FCFS sojourns exactly.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_plain(
+    heap: &mut ServerHeap,
+    floor: f64,
+    exec: f64,
+    oh: f64,
+    job: u32,
+    task: u32,
+    class: u32,
+    trace: &mut TraceLog,
+) -> PolicyTaskOutcome {
+    let (t_free, server) = heap.pop();
+    let start = if floor > t_free { floor } else { t_free };
+    let finish = start + exec + oh;
+    heap.push(finish, server);
+    if trace.is_enabled() {
+        trace.record(TraceEvent {
+            job,
+            task,
+            server,
+            start,
+            end: finish,
+            overhead: oh,
+            winner: true,
+            attempt: 1,
+            cause: cause::NONE,
+            class,
+        });
+    }
+    PolicyTaskOutcome {
+        first_start: start,
+        finish,
+        work: exec,
+        overhead: oh,
+        redundant: 0.0,
+        lost: 0.0,
+        retries: 0,
+        class,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyConfig, SimulationConfig};
+    use crate::dist::Deterministic;
+
+    fn det_workload(exec: f64) -> Workload {
+        Workload::new(Deterministic::new(100.0).into(), Deterministic::new(exec).into(), 1)
+    }
+
+    fn cfg_with(policy: PolicyConfig, servers: usize) -> SimulationConfig {
+        SimulationConfig {
+            servers,
+            tasks_per_job: servers * 2,
+            policy: Some(policy),
+            ..SimulationConfig::default()
+        }
+    }
+
+    #[test]
+    fn fcfs_resolves_to_none() {
+        let cfg = SimulationConfig::default();
+        assert!(PolicyState::from_config(&cfg).unwrap().is_none());
+        let cfg = cfg_with(PolicyConfig::default(), 4);
+        assert!(PolicyState::from_config(&cfg).unwrap().is_none());
+    }
+
+    #[test]
+    fn sita_routes_by_size() {
+        let cfg = cfg_with(
+            PolicyConfig {
+                kind: PolicyKind::Sita,
+                sita_boundaries: vec![2.0],
+                ..PolicyConfig::default()
+            },
+            4,
+        );
+        let mut pol = PolicyState::from_config(&cfg).unwrap().unwrap();
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let mut sc = None;
+        let mut fi = None;
+        // Short task (exec 1.0 < 2.0) → interval 0; long (3.0) → 1.
+        let mut w = det_workload(1.0);
+        let a = pol.dispatch_task(0.0, 0, 0, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        assert_eq!(a.class, 0);
+        let mut w = det_workload(3.0);
+        let b = pol.dispatch_task(0.0, 0, 1, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        assert_eq!(b.class, 1);
+        // Groups are disjoint: the long task ran on a high-id server.
+        let evs = tr.events();
+        assert!(evs[0].server < 2 && evs[1].server >= 2, "{evs:?}");
+        assert_eq!(evs[0].class, 0);
+        assert_eq!(evs[1].class, 1);
+    }
+
+    #[test]
+    fn priority_classes_cycle_by_job() {
+        let cfg = cfg_with(
+            PolicyConfig { kind: PolicyKind::Priority, classes: 2, ..PolicyConfig::default() },
+            4,
+        );
+        let mut pol = PolicyState::from_config(&cfg).unwrap().unwrap();
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let (mut sc, mut fi) = (None, None);
+        let mut w = det_workload(1.0);
+        for job in 0..4usize {
+            let out = pol.dispatch_task(0.0, job, 0, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+            assert_eq!(out.class, (job % 2) as u32);
+        }
+        // Each class stays inside its own server partition.
+        for e in tr.events() {
+            assert_eq!(e.server / 2, e.class, "{e:?}");
+        }
+    }
+
+    #[test]
+    fn worksteal_steals_past_threshold() {
+        let cfg = cfg_with(
+            PolicyConfig {
+                kind: PolicyKind::WorkSteal,
+                steal_threshold: 0.5,
+                ..PolicyConfig::default()
+            },
+            2,
+        );
+        let mut pol = PolicyState::from_config(&cfg).unwrap().unwrap();
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::enabled();
+        let (mut sc, mut fi) = (None, None);
+        let mut w = det_workload(1.0);
+        // Jobs land round-robin: task 0 → server 0, task 1 → server 1.
+        pol.dispatch_task(0.0, 0, 0, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        pol.dispatch_task(0.0, 0, 1, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        // Server 0's backlog now equals server 1's; affinity returns to
+        // 0 and the gap (0.0) is under the threshold — no steal.
+        pol.dispatch_task(0.0, 0, 2, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        let evs = tr.events();
+        assert_eq!(evs[2].server, 0);
+        // Pile more work on server 0 via a raised free time, then the
+        // next affinity-0 task is stolen by server 1.
+        if let PolicyState::WorkSteal { free, next, .. } = &mut pol {
+            free[0] = 10.0;
+            *next = 0;
+        }
+        let out = pol.dispatch_task(0.0, 0, 3, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+        assert_eq!(tr.events()[3].server, 1);
+        assert!(out.finish < 10.0);
+    }
+
+    #[test]
+    fn single_interval_sita_is_plain_fcfs() {
+        // Empty boundary list → one group spanning the whole cluster;
+        // finish times match the seed earliest-free arithmetic.
+        let cfg = cfg_with(
+            PolicyConfig { kind: PolicyKind::Sita, ..PolicyConfig::default() },
+            3,
+        );
+        let mut pol = PolicyState::from_config(&cfg).unwrap().unwrap();
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let (mut sc, mut fi) = (None, None);
+        let mut w = det_workload(2.0);
+        let mut finishes = Vec::new();
+        for t in 0..6 {
+            let out = pol.dispatch_task(0.0, 0, t, &mut sc, &mut fi, &mut w, &oh, &mut tr);
+            finishes.push(out.finish);
+        }
+        assert_eq!(finishes, vec![2.0, 2.0, 2.0, 4.0, 4.0, 4.0]);
+        assert_eq!(pol.max_time(), 4.0);
+    }
+}

@@ -2,7 +2,7 @@
 //! warmup + measured jobs, and gathers statistics.
 
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
-use super::{FaultInjector, JobRecord, OverheadModel, Scenario, TraceLog, Workload};
+use super::{FaultInjector, JobRecord, OverheadModel, PolicyState, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
 use crate::rng::spawn_seeds;
 use crate::stats::{QuantileEstimator, Summary};
@@ -71,6 +71,12 @@ pub struct SimResult {
     /// Sojourn summaries over the run's thirds (in measured-job order) —
     /// the stability detector's divergence signal, O(1) memory.
     pub thirds: [Summary; 3],
+    /// Per-priority-class sojourn summaries, indexed by class (empty
+    /// unless a priority dispatch policy is active). Class membership is
+    /// the policy's static assignment (`job index mod classes`), so the
+    /// buckets are identical across shard counts and merge bitwise in
+    /// shard-index order.
+    pub class_sojourn: Vec<Summary>,
     /// Trace log (empty unless `trace`).
     pub trace: TraceLog,
     /// Wall-clock seconds spent simulating.
@@ -99,20 +105,25 @@ fn build_model(
     faults: Option<FaultInjector>,
 ) -> Result<Box<dyn Model>, String> {
     let scenario = Scenario::from_config(cfg)?;
-    // k = l for per-server fork-join and the faults/model compatibility
-    // matrix are enforced by `SimulationConfig::validate` (run before
-    // this), so bad CLI input errors out instead of panicking here.
+    let policy = PolicyState::from_config(cfg)?;
+    // k = l for per-server fork-join, the faults/model compatibility
+    // matrix, and the policy/model matrix (policies only reach the
+    // split-merge and single-queue models) are enforced by
+    // `SimulationConfig::validate` (run before this), so bad CLI input
+    // errors out instead of panicking here.
     Ok(match cfg.model {
         ModelKind::SplitMerge => Box::new(
             SplitMerge::new(cfg.servers, cfg.tasks_per_job)
                 .with_scenario(scenario)
-                .with_faults(faults),
+                .with_faults(faults)
+                .with_policy(policy),
         ),
         ModelKind::ForkJoinSingleQueue => Box::new(
             ForkJoinSingleQueue::new(cfg.servers, cfg.tasks_per_job)
                 .with_in_order_departures(opts.in_order_departures)
                 .with_scenario(scenario)
-                .with_faults(faults),
+                .with_faults(faults)
+                .with_policy(policy),
         ),
         ModelKind::ForkJoinPerServer => Box::new(
             ForkJoinPerServer::new(cfg.servers)
@@ -218,6 +229,9 @@ fn run_sharded(
                 for (a, b) in acc.thirds.iter_mut().zip(&res.thirds) {
                     a.merge(b);
                 }
+                for (a, b) in acc.class_sojourn.iter_mut().zip(&res.class_sojourn) {
+                    a.merge(b);
+                }
             }
         }
     }
@@ -254,6 +268,10 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
     // Same partition as slicing measured jobs at [..t], [t..2t], [2t..]:
     // the remainder lands in the last third.
     let third = cfg.jobs / 3;
+    // Priority policies get per-class sojourn buckets (class = job
+    // index mod classes, the policy's static assignment).
+    let classes = cfg.policy.as_ref().map(|p| p.class_count()).unwrap_or(0);
+    let mut class_sojourn: Vec<Summary> = (0..classes).map(|_| Summary::new()).collect();
 
     for n in 0..total {
         let arrival = workload.next_arrival();
@@ -274,6 +292,9 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
         } else {
             thirds[2].push(rec.sojourn());
         }
+        if classes > 0 {
+            class_sojourn[rec.index % classes].push(rec.sojourn());
+        }
         if opts.record_jobs {
             jobs.push(rec);
         }
@@ -290,6 +311,7 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
         lost_summary,
         retry_summary,
         thirds,
+        class_sojourn,
         trace,
         wall_seconds: t0.elapsed().as_secs_f64(),
     })
@@ -313,6 +335,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         }
     }
 
@@ -469,6 +492,52 @@ mod tests {
         assert_eq!(a.sojourn_summary.variance(), b.sojourn_summary.variance());
     }
 
+    /// A priority policy run fills the per-class sojourn buckets and the
+    /// buckets merge across shards without losing jobs.
+    #[test]
+    fn priority_run_collects_class_summaries() {
+        let cfg = SimulationConfig {
+            policy: Some(crate::config::PolicyConfig {
+                kind: crate::config::PolicyKind::Priority,
+                classes: 2,
+                ..Default::default()
+            }),
+            ..base_cfg()
+        };
+        let res = run(&cfg, RunOptions::default()).unwrap();
+        assert_eq!(res.class_sojourn.len(), 2);
+        let n: u64 = res.class_sojourn.iter().map(|s| s.count()).sum();
+        assert_eq!(n, cfg.jobs as u64);
+        assert!(res.class_sojourn.iter().all(|s| s.mean() > 0.0));
+        // Sharded runs merge the buckets in shard-index order.
+        let opts = RunOptions { shards: 3, threads: 2, ..Default::default() };
+        let a = run(&cfg, opts).unwrap();
+        let b = run(&cfg, opts).unwrap();
+        assert_eq!(a.class_sojourn.len(), 2);
+        let n: u64 = a.class_sojourn.iter().map(|s| s.count()).sum();
+        assert_eq!(n, cfg.jobs as u64);
+        for (x, y) in a.class_sojourn.iter().zip(&b.class_sojourn) {
+            assert_eq!(x.mean(), y.mean());
+        }
+    }
+
+    /// Non-priority runs keep the class buckets empty; SITA still runs
+    /// end to end through the public runner.
+    #[test]
+    fn sita_run_has_no_class_buckets() {
+        let cfg = SimulationConfig {
+            policy: Some(crate::config::PolicyConfig {
+                kind: crate::config::PolicyKind::Sita,
+                sita_boundaries: vec![0.5],
+                ..Default::default()
+            }),
+            ..base_cfg()
+        };
+        let res = run(&cfg, RunOptions::default()).unwrap();
+        assert!(res.class_sojourn.is_empty());
+        assert_eq!(res.sojourn.len(), cfg.jobs);
+    }
+
     /// Overhead strictly increases sojourn times (coupling: same seed).
     #[test]
     fn overhead_increases_sojourn() {
@@ -499,6 +568,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let mut res = run(&cfg, RunOptions::default()).unwrap();
         let expect = (100.0f64).ln() / (1.0 - 0.5);

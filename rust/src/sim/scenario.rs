@@ -140,6 +140,10 @@ impl Scenario {
     /// `floor` is the earliest permissible start (the job arrival in
     /// fork-join; the start barrier in split-merge, where it is a no-op
     /// because the heap is already reset to the barrier).
+    ///
+    /// `class` is the dispatch-policy class recorded on trace events
+    /// (0 outside an active policy; the priority policy passes the job
+    /// class and hands this dispatcher its class's server sub-heap).
     #[allow(clippy::too_many_arguments)]
     pub fn dispatch_task(
         &mut self,
@@ -149,6 +153,7 @@ impl Scenario {
         overhead: &OverheadModel,
         job: u32,
         task: u32,
+        class: u32,
         trace: &mut TraceLog,
     ) -> TaskOutcome {
         let r = self.replicas.min(heap.len());
@@ -210,6 +215,7 @@ impl Scenario {
                         winner: i == win,
                         attempt: 1,
                         cause: cause::NONE,
+                        class,
                     });
                 }
             }
@@ -248,6 +254,7 @@ impl Scenario {
         fi: &mut FaultInjector,
         job: u32,
         task: u32,
+        class: u32,
         trace: &mut TraceLog,
     ) -> FaultOutcome {
         let r = self.replicas.min(heap.len());
@@ -329,6 +336,7 @@ impl Scenario {
                             winner: false,
                             attempt,
                             cause: cause::CRASHED,
+                            class,
                         });
                     }
                 }
@@ -376,6 +384,7 @@ impl Scenario {
                             winner: false,
                             attempt,
                             cause: cause::NONE,
+                            class,
                         });
                     }
                 }
@@ -402,6 +411,7 @@ impl Scenario {
                         winner: false,
                         attempt,
                         cause: cause::FAILED,
+                        class,
                     });
                 }
                 retries += 1;
@@ -421,6 +431,7 @@ impl Scenario {
                     winner: true,
                     attempt,
                     cause: cause::NONE,
+                    class,
                 });
             }
             return FaultOutcome {
@@ -454,8 +465,8 @@ mod tests {
         let mut w = det_workload(1.0);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
-        let a = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
-        let b = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 1, &mut tr);
+        let a = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, 0, &mut tr);
+        let b = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 1, 0, &mut tr);
         let mut finishes = [a.finish, b.finish];
         finishes.sort_by(|x, y| x.partial_cmp(y).unwrap());
         assert_eq!(finishes, [0.5, 1.0]);
@@ -470,7 +481,7 @@ mod tests {
         let mut w = det_workload(1.0);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::enabled();
-        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, 0, &mut tr);
         assert_eq!(out.finish, 0.25);
         assert_eq!(out.first_start, 0.0);
         assert_eq!(out.redundant_time, 0.25);
@@ -495,14 +506,14 @@ mod tests {
         let mut w = det_workload(1.0);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
-        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, 0, &mut tr);
         assert_eq!(out.finish, 1.5);
         // r = 1: launch cost is ignored (degenerate scenarios bit-exact).
         let mut sc = Scenario::new(vec![1.0, 1.0], 1).with_launch_overhead(0.5);
         let mut heap = ServerHeap::new(2, 0.0);
         let mut w = det_workload(1.0);
         let mut tr = TraceLog::disabled();
-        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, 0, &mut tr);
         assert_eq!(out.finish, 1.0);
     }
 
@@ -527,7 +538,7 @@ mod tests {
         let mut w = det_workload(1.0);
         let oh = OverheadModel::none();
         let mut tr = TraceLog::disabled();
-        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
+        let out = sc.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, 0, &mut tr);
         assert!((out.finish - 0.1).abs() < 1e-12);
         assert_eq!(out.redundant_time, 0.0);
         // Worker 1's reservation was released at its original free time.

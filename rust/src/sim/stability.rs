@@ -188,6 +188,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         assert_eq!(detect(&mk(50), 1.05).unwrap(), Stability::Unstable);
         assert_eq!(detect(&mk(400), 1.05).unwrap(), Stability::Stable);

@@ -6,13 +6,16 @@
 //! practical to keep.
 //!
 //! Schema versioning: the fifth magic byte carries the trace's schema
-//! (1, 2, or 3) and must agree with the `schema` field that follows. A
-//! v1 trace is written in the v1 wire layout byte-for-byte; schema 2
+//! (1–4) and must agree with the `schema` field that follows. A v1
+//! trace is written in the v1 wire layout byte-for-byte; schema 2
 //! appends the scenario shape (meta `replicas` + optional speeds, task
 //! `winner` bytes); schema 3 appends the fault shape (task `attempt` +
-//! `cause`), leaving the v2 layout untouched.
+//! `cause`); schema 4 appends the policy shape (meta `policy` string,
+//! task `class`), each leaving the lower layouts untouched.
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3, SCHEMA_VERSION};
+use super::record::{
+    JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3, SCHEMA_V4, SCHEMA_VERSION,
+};
 use crate::emulator::{Decoder, Encoder};
 
 /// File magic prefix shared by every schema version.
@@ -28,6 +31,7 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
     let m = &trace.meta;
     let v1 = m.schema == SCHEMA_V1;
     let v3 = m.schema >= SCHEMA_V3;
+    let v4 = m.schema >= SCHEMA_V4;
     for b in MAGIC_PREFIX {
         e.u8(b);
     }
@@ -52,6 +56,9 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
             }
             None => e.u8(0),
         }
+    }
+    if v4 {
+        e.str(&m.policy);
     }
     e.u32(trace.jobs.len() as u32);
     for j in &trace.jobs {
@@ -80,6 +87,9 @@ pub fn to_binary(trace: &Trace) -> Vec<u8> {
             e.u32(t.attempt);
             e.u8(t.cause);
         }
+        if v4 {
+            e.u32(t.class);
+        }
     }
     e.finish()
 }
@@ -100,6 +110,7 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
     }
     let v1 = schema == SCHEMA_V1;
     let v3 = schema >= SCHEMA_V3;
+    let v4 = schema >= SCHEMA_V4;
     let mut meta = TraceMeta {
         schema,
         source: d.str().map_err(err)?,
@@ -114,6 +125,7 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
         speeds: None,
         replicas: 1,
         launch_overhead: 0.0,
+        policy: String::new(),
     };
     if !v1 {
         meta.replicas = d.u32().map_err(err)?;
@@ -121,6 +133,9 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
         if d.u8().map_err(err)? != 0 {
             meta.speeds = Some(d.f64_seq().map_err(err)?);
         }
+    }
+    if v4 {
+        meta.policy = d.str().map_err(err)?;
     }
     let n_jobs = d.u32().map_err(err)? as usize;
     let mut jobs = Vec::with_capacity(n_jobs.min(1 << 24));
@@ -150,6 +165,7 @@ pub fn from_binary(bytes: &[u8]) -> Result<Trace, String> {
             winner: if v1 { true } else { d.u8().map_err(err)? != 0 },
             attempt: if v3 { d.u32().map_err(err)? } else { 1 },
             cause: if v3 { d.u8().map_err(err)? } else { 0 },
+            class: if v4 { d.u32().map_err(err)? } else { 0 },
         });
     }
     if d.remaining() != 0 {
@@ -187,6 +203,7 @@ mod tests {
                 speeds: None,
                 replicas: 1,
                 launch_overhead: 0.0,
+                policy: String::new(),
             },
             jobs: vec![JobRow {
                 index: 2,
@@ -209,6 +226,7 @@ mod tests {
                 winner: true,
                 attempt: 1,
                 cause: 0,
+                class: 0,
             }],
         }
     }
@@ -229,6 +247,7 @@ mod tests {
             winner: false,
             attempt: 1,
             cause: 0,
+            class: 0,
         });
         tr
     }
@@ -248,7 +267,16 @@ mod tests {
             winner: false,
             attempt: 1,
             cause: crate::trace::cause::CRASHED,
+            class: 0,
         });
+        tr
+    }
+
+    fn tiny_trace_v4() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V4;
+        tr.meta.policy = "priority".into();
+        tr.tasks[0].class = 1;
         tr
     }
 
@@ -304,8 +332,19 @@ mod tests {
     }
 
     #[test]
+    fn v4_round_trip_is_exact() {
+        let tr = tiny_trace_v4();
+        let bytes = to_binary(&tr);
+        assert!(is_binary(&bytes));
+        assert_eq!(bytes[4], 4);
+        let back = from_binary(&bytes).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(bytes, to_binary(&back));
+    }
+
+    #[test]
     fn truncation_and_garbage_are_errors() {
-        for tr in [tiny_trace(), tiny_trace_v2(), tiny_trace_v3()] {
+        for tr in [tiny_trace(), tiny_trace_v2(), tiny_trace_v3(), tiny_trace_v4()] {
             let bytes = to_binary(&tr);
             assert!(from_binary(&bytes[..bytes.len() - 3]).is_err());
             let mut trailing = bytes.clone();
@@ -318,7 +357,7 @@ mod tests {
     #[test]
     fn wrong_schema_byte_rejected() {
         let mut bytes = to_binary(&tiny_trace());
-        bytes[4] = 4; // future magic version: not a readable trace
+        bytes[4] = 5; // future magic version: not a readable trace
         assert!(from_binary(&bytes).is_err());
         let mut bytes = to_binary(&tiny_trace());
         bytes[4] = 2; // readable version, but disagrees with the body

@@ -48,6 +48,10 @@ pub struct TraceEvent {
     pub attempt: u32,
     /// Failure cause tag (schema v3; see [`cause`]).
     pub cause: u8,
+    /// Dispatch-policy class (schema v4): the SITA size interval or the
+    /// priority class the task was routed by. Always 0 under FCFS and
+    /// work stealing.
+    pub class: u32,
 }
 
 /// Collected trace of task executions.
@@ -134,6 +138,7 @@ mod tests {
             winner: true,
             attempt: 1,
             cause: cause::NONE,
+            class: 0,
         }
     }
 

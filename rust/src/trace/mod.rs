@@ -20,8 +20,11 @@
 //! so heterogeneous/redundant runs record instead of being rejected;
 //! schema v3 adds the fault shape — a 1-based attempt counter and a
 //! failure-cause tag on task rows — so fault-injected runs record every
-//! retry, crash, and speculative copy. Scenario- and fault-free captures
-//! stay on the v1 wire format byte-for-byte.
+//! retry, crash, and speculative copy; schema v4 adds the dispatch
+//! policy — the policy token in the meta and a routing class on task
+//! rows — so SITA/priority/work-stealing runs record too. Scenario-,
+//! fault- and policy-free captures stay on the v1 wire format
+//! byte-for-byte.
 //! On top of the format sit the consumers:
 //!
 //! * [`replay`] — feed a recorded trace's arrivals and task sizes back
@@ -42,7 +45,8 @@ pub use self::log::{cause, TraceEvent, TraceLog};
 pub use binary::{from_binary, is_binary, to_binary, MAGIC, MAGIC_PREFIX};
 pub use ndjson::{from_ndjson, to_ndjson};
 pub use record::{
-    JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_VERSION,
+    JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4,
+    SCHEMA_VERSION,
 };
 pub use replay::{replay, ReplayOptions, Replayed};
 

@@ -13,11 +13,12 @@
 //! Schema versioning: the writer emits the v1 line shapes byte-for-byte
 //! when `meta.schema == 1` — pre-v2 files re-serialize identically — and
 //! appends the scenario fields (`speeds`, `replicas` on the meta row;
-//! `winner` on task rows) only for schema ≥ 2 and the fault fields
-//! (`attempt`, `cause` on task rows) only for schema 3, so v1 *and* v2
-//! files re-serialize byte-for-byte.
+//! `winner` on task rows) only for schema ≥ 2, the fault fields
+//! (`attempt`, `cause` on task rows) only for schema ≥ 3, and the
+//! policy fields (`policy` on the meta row; `class` on task rows) only
+//! for schema 4, so v1, v2 *and* v3 files re-serialize byte-for-byte.
 
-use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3};
+use super::record::{JobRow, TaskRow, Trace, TraceMeta, SCHEMA_V1, SCHEMA_V3, SCHEMA_V4};
 use std::fmt::Write as _;
 
 /// Serialize a trace to NDJSON text.
@@ -26,6 +27,7 @@ pub fn to_ndjson(trace: &Trace) -> String {
     let m = &trace.meta;
     let v1 = m.schema == SCHEMA_V1;
     let v3 = m.schema >= SCHEMA_V3;
+    let v4 = m.schema >= SCHEMA_V4;
     let _ = write!(
         out,
         "{{\"type\":\"meta\",\"schema\":{},\"source\":{},\"model\":{},\"servers\":{},\
@@ -55,6 +57,9 @@ pub fn to_ndjson(trace: &Trace) -> String {
             }
             out.push(']');
         }
+    }
+    if v4 {
+        let _ = write!(out, ",\"policy\":{}", quote(&m.policy));
     }
     out.push_str("}\n");
     for j in &trace.jobs {
@@ -91,6 +96,9 @@ pub fn to_ndjson(trace: &Trace) -> String {
         }
         if v3 {
             let _ = write!(out, ",\"attempt\":{},\"cause\":{}", t.attempt, t.cause);
+        }
+        if v4 {
+            let _ = write!(out, ",\"class\":{}", t.class);
         }
         out.push_str("}\n");
     }
@@ -129,6 +137,7 @@ pub fn from_ndjson(text: &str) -> Result<Trace, String> {
                     speeds: obj.get_f64_array_opt("speeds")?,
                     replicas: obj.get_u64_or("replicas", 1)? as u32,
                     launch_overhead: obj.get_f64_or("launch_overhead", 0.0)?,
+                    policy: obj.get_str_or("policy", "")?,
                 });
             }
             "job" => jobs.push(JobRow {
@@ -152,6 +161,7 @@ pub fn from_ndjson(text: &str) -> Result<Trace, String> {
                 winner: obj.get_bool_or("winner", true)?,
                 attempt: obj.get_u64_or("attempt", 1)? as u32,
                 cause: obj.get_u64_or("cause", 0)? as u8,
+                class: obj.get_u64_or("class", 0)? as u32,
             }),
             other => return Err(format!("line {}: unknown row type {other:?}", lineno + 1)),
         }
@@ -248,6 +258,14 @@ impl FlatObject {
         match self.get_opt(key) {
             None => Ok(default),
             Some(_) => self.get_f64(key),
+        }
+    }
+
+    /// Optional string with a default (absent in pre-v4 meta rows).
+    fn get_str_or(&self, key: &str, default: &str) -> Result<String, String> {
+        match self.get_opt(key) {
+            None => Ok(default.to_string()),
+            Some(_) => self.get_str(key),
         }
     }
 
@@ -397,7 +415,7 @@ fn parse_flat_object(line: &str) -> Result<FlatObject, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::record::{SCHEMA_V1, SCHEMA_V2, SCHEMA_V3};
+    use crate::trace::record::{SCHEMA_V1, SCHEMA_V2, SCHEMA_V3, SCHEMA_V4};
 
     fn tiny_trace() -> Trace {
         Trace {
@@ -415,6 +433,7 @@ mod tests {
                 speeds: None,
                 replicas: 1,
                 launch_overhead: 0.0,
+                policy: String::new(),
             },
             jobs: vec![JobRow {
                 index: 0,
@@ -438,6 +457,7 @@ mod tests {
                     winner: true,
                     attempt: 1,
                     cause: 0,
+                    class: 0,
                 },
                 TaskRow {
                     job: 0,
@@ -449,6 +469,7 @@ mod tests {
                     winner: true,
                     attempt: 1,
                     cause: 0,
+                    class: 0,
                 },
             ],
         }
@@ -471,6 +492,14 @@ mod tests {
         tr.tasks[0].cause = crate::trace::cause::SPECULATION;
         tr.tasks[1].winner = false;
         tr.tasks[1].cause = crate::trace::cause::FAILED;
+        tr
+    }
+
+    fn tiny_trace_v4() -> Trace {
+        let mut tr = tiny_trace();
+        tr.meta.schema = SCHEMA_V4;
+        tr.meta.policy = "sita".into();
+        tr.tasks[0].class = 1;
         tr
     }
 
@@ -538,6 +567,34 @@ mod tests {
         let text = to_ndjson(&tr);
         assert!(text.contains("\"attempt\":3"), "{text}");
         assert!(text.contains("\"cause\":1"), "{text}");
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(tr, back);
+        assert_eq!(text, to_ndjson(&back));
+    }
+
+    /// v1–v3 lines carry no policy keys (byte-compat with pre-v4 files);
+    /// parsing fills the defaults.
+    #[test]
+    fn pre_v4_wire_format_has_no_policy_fields() {
+        for text in [
+            to_ndjson(&tiny_trace()),
+            to_ndjson(&tiny_trace_v2()),
+            to_ndjson(&tiny_trace_v3()),
+        ] {
+            assert!(!text.contains("policy"), "{text}");
+            assert!(!text.contains("class"), "{text}");
+            let back = from_ndjson(&text).unwrap();
+            assert!(back.meta.policy.is_empty());
+            assert!(back.tasks.iter().all(|t| t.class == 0));
+        }
+    }
+
+    #[test]
+    fn v4_round_trip_is_exact() {
+        let tr = tiny_trace_v4();
+        let text = to_ndjson(&tr);
+        assert!(text.contains("\"policy\":\"sita\""), "{text}");
+        assert!(text.contains("\"class\":1"), "{text}");
         let back = from_ndjson(&text).unwrap();
         assert_eq!(tr, back);
         assert_eq!(text, to_ndjson(&back));

@@ -12,11 +12,14 @@
 //! instead of rejected at `trace record`. **Schema v3** adds fault
 //! injection: a 1-based attempt counter and a failure-cause tag
 //! ([`crate::trace::cause`]) on every task row, so crashed, failed, and
-//! speculatively re-executed attempts are all persisted. Capture picks
-//! the lowest schema that carries the run (homogeneous non-redundant
-//! fault-free runs stay v1), and v1/v2 files round-trip bit-exactly
-//! through both codecs: a v1 trace is written back in the v1 wire
-//! format, byte for byte.
+//! speculatively re-executed attempts are all persisted. **Schema v4**
+//! adds the dispatch-policy shape: the policy token in the meta header
+//! and a per-task policy class on every task row, so SITA / priority /
+//! work-stealing runs can be recorded. Capture picks the lowest schema
+//! that carries the run (homogeneous non-redundant fault-free FCFS runs
+//! stay v1), and v1/v2/v3 files round-trip bit-exactly through both
+//! codecs: a v1 trace is written back in the v1 wire format, byte for
+//! byte.
 
 use super::cause;
 use crate::config::ModelKind;
@@ -29,9 +32,11 @@ pub const SCHEMA_V1: u32 = 1;
 pub const SCHEMA_V2: u32 = 2;
 /// Fault-aware schema: per-task attempt counter + failure-cause tag.
 pub const SCHEMA_V3: u32 = 3;
+/// Policy-aware schema: meta policy token + per-task policy class.
+pub const SCHEMA_V4: u32 = 4;
 /// Highest on-disk schema version this build reads and writes (NDJSON
 /// and binary carry the same one).
-pub const SCHEMA_VERSION: u32 = SCHEMA_V3;
+pub const SCHEMA_VERSION: u32 = SCHEMA_V4;
 
 /// Trace header: where the trace came from and under which parameters.
 #[derive(Clone, Debug, PartialEq)]
@@ -66,6 +71,9 @@ pub struct TraceMeta {
     /// replica-launch cost term of the redundancy-aware overhead model;
     /// 0 when not configured).
     pub launch_overhead: f64,
+    /// Dispatch-policy token of the producing run (schema ≥ 4;
+    /// `"sita"`, `"priority"`, or `"worksteal"`). Empty = plain FCFS.
+    pub policy: String,
 }
 
 /// One job's arrival/departure row.
@@ -127,6 +135,10 @@ pub struct TaskRow {
     /// Failure-cause tag (schema ≥ 3; see [`crate::trace::cause`]).
     /// Always [`cause::NONE`] in v1/v2 traces.
     pub cause: u8,
+    /// Dispatch-policy class of the task (schema ≥ 4): the SITA size
+    /// interval or priority class that routed it. Always 0 in v1–v3
+    /// traces and under FCFS / work stealing.
+    pub class: u32,
 }
 
 impl TaskRow {
@@ -182,7 +194,14 @@ impl Trace {
         let replicas = cfg.replicas() as u32;
         // Fault-injected runs need the v3 attempt/cause columns.
         let faulty = cfg.faults.map(|f| f.is_active()).unwrap_or(false);
-        let schema = if faulty {
+        // Policy runs need the v4 meta token / class column.
+        let policy = match &cfg.policy {
+            Some(p) if p.is_active() => p.kind.to_string(),
+            _ => String::new(),
+        };
+        let schema = if !policy.is_empty() {
+            SCHEMA_V4
+        } else if faulty {
             SCHEMA_V3
         } else if speeds.is_some() || replicas > 1 {
             SCHEMA_V2
@@ -206,6 +225,7 @@ impl Trace {
             // validation there); the clamp keeps a hand-built r = 1
             // config from producing an unreadable v1 trace.
             launch_overhead: if replicas > 1 { cfg.launch_overhead() } else { 0.0 },
+            policy,
         };
         let k = cfg.tasks_per_job as u32;
         let jobs = res
@@ -237,6 +257,7 @@ impl Trace {
                 winner: e.winner,
                 attempt: e.attempt,
                 cause: e.cause,
+                class: e.class,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -273,6 +294,7 @@ impl Trace {
             speeds,
             replicas: 1,
             launch_overhead: 0.0,
+            policy: String::new(),
         };
         let jobs = res
             .listener
@@ -304,6 +326,7 @@ impl Trace {
                 winner: true,
                 attempt: 1,
                 cause: cause::NONE,
+                class: 0,
             })
             .collect();
         Ok(Trace { meta, jobs, tasks }.normalize())
@@ -406,6 +429,17 @@ impl Trace {
                 );
             }
         }
+        if self.meta.schema < SCHEMA_V4 {
+            // v1–v3 carry no policy columns; a lower-schema trace
+            // claiming them would silently drop policy data on the wire.
+            if !self.meta.policy.is_empty() || self.tasks.iter().any(|t| t.class != 0) {
+                return Err(
+                    "schema v1-v3 cannot carry a dispatch policy or task classes; \
+                     use schema 4"
+                        .into(),
+                );
+            }
+        }
         if let Some(speeds) = &self.meta.speeds {
             if speeds.len() != self.meta.servers as usize {
                 return Err(format!(
@@ -495,6 +529,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = sim::run(
             &cfg,
@@ -566,6 +601,7 @@ mod tests {
                 launch_overhead: 2e-3,
             }),
             faults: None,
+            policy: None,
         };
         let res = sim::run(
             &cfg,
@@ -616,6 +652,7 @@ mod tests {
                 backoff_base: 0.01,
                 ..Default::default()
             }),
+            policy: None,
         };
         let res = sim::run(
             &cfg,
@@ -654,6 +691,51 @@ mod tests {
         let mut bad = tr.clone();
         bad.tasks[0].cause = cause::MAX + 1;
         assert!(bad.validate().is_err());
+    }
+
+    /// Policy runs capture schema v4: the policy token lands in the meta
+    /// and task rows carry the routing class; lower schemas reject the
+    /// payload.
+    #[test]
+    fn policy_capture_is_v4_with_classes() {
+        let cfg = SimulationConfig {
+            model: ModelKind::ForkJoinSingleQueue,
+            servers: 4,
+            tasks_per_job: 4,
+            arrival: crate::config::ArrivalConfig { interarrival: "exp:0.2".into() },
+            service: crate::config::ServiceConfig { execution: "exp:2.0".into() },
+            jobs: 40,
+            warmup: 4,
+            seed: 7,
+            overhead: None,
+            workers: None,
+            redundancy: None,
+            faults: None,
+            policy: Some(crate::config::PolicyConfig {
+                kind: crate::config::PolicyKind::Sita,
+                sita_boundaries: vec![0.5],
+                ..Default::default()
+            }),
+        };
+        let res = sim::run(
+            &cfg,
+            RunOptions { record_jobs: true, trace: true, ..Default::default() },
+        )
+        .unwrap();
+        let tr = Trace::from_sim(&res).unwrap();
+        tr.validate().unwrap();
+        assert_eq!(tr.meta.schema, SCHEMA_V4);
+        assert_eq!(tr.meta.policy, "sita");
+        // A boundary near the service distribution's bulk: over 176
+        // tasks both size intervals are hit.
+        assert!(tr.tasks.iter().any(|t| t.class == 0));
+        assert!(tr.tasks.iter().any(|t| t.class == 1));
+        // v1–v3 claims over this payload are rejected.
+        for schema in [SCHEMA_V1, SCHEMA_V2, SCHEMA_V3] {
+            let mut bad = tr.clone();
+            bad.meta.schema = schema;
+            assert!(bad.validate().is_err(), "schema {schema} must reject classes");
+        }
     }
 
     /// Speeds arity/positivity and replica range are validated.
@@ -713,6 +795,7 @@ mod tests {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             };
             let res = sim::run(
                 &cfg,

@@ -275,6 +275,7 @@ mod tests {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         };
         let res = sim::run(
             &cfg,

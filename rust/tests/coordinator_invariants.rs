@@ -29,6 +29,7 @@ fn random_config(g: &mut tiny_tasks::util::quickcheck::Gen, model: ModelKind) ->
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 
@@ -179,6 +180,7 @@ fn prop_work_conservation_under_saturation() {
                 workers: None,
                 redundancy: None,
                 faults: None,
+                policy: None,
             };
             let res = sim::run(
                 &cfg,

@@ -25,6 +25,7 @@ fn point(model: ModelKind, k: usize, jobs: usize) -> SweepPoint {
             workers: None,
             redundancy: None,
             faults: None,
+            policy: None,
         },
     }
 }

@@ -39,6 +39,7 @@ fn sim_cfg_from(e: &EmulatorConfig, jobs: usize) -> SimulationConfig {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

@@ -1,0 +1,244 @@
+//! Dispatch-policy equivalence regressions: the scheduling-policy axis
+//! must be invisible until it is used.
+//!
+//! Two degeneracy ladders are pinned bit-for-bit (`assert_eq!` on f64,
+//! no tolerance):
+//!
+//! 1. `policy = "fcfs"` (an explicit but inactive `[policy]` section)
+//!    builds no policy state at all, so every model — with or without
+//!    scenario and fault machinery — reproduces the absent-section run
+//!    exactly.
+//! 2. Single-interval SITA (no boundaries) *does* build policy state,
+//!    but its one size group owns the whole cluster, so its dispatch
+//!    decisions collapse onto FCFS earliest-free-server and the sojourn
+//!    law must match FCFS bitwise.
+//!
+//! Plus the usual axis guards: per-seed reproducibility for every
+//! active policy, a non-degenerate policy genuinely changing the law,
+//! priority runs populating per-class summaries, and partitionless
+//! models (ideal, fjps) rejecting active policies outright.
+
+use tiny_tasks::config::{
+    ArrivalConfig, FaultsConfig, ModelKind, PolicyConfig, PolicyKind, RedundancyConfig,
+    ServiceConfig, SimulationConfig, WorkersConfig,
+};
+use tiny_tasks::sim::{self, RunOptions};
+
+fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs: 4_000,
+        warmup: 400,
+        seed: 2027,
+        overhead: Some(tiny_tasks::config::OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+        faults: None,
+        policy: None,
+    }
+}
+
+fn policy(kind: PolicyKind) -> PolicyConfig {
+    PolicyConfig { kind, ..Default::default() }
+}
+
+fn quantiles(cfg: &SimulationConfig) -> (Vec<f64>, f64, f64) {
+    let mut res = sim::run(cfg, RunOptions::default()).unwrap();
+    let qs = [0.1, 0.5, 0.9, 0.99]
+        .iter()
+        .map(|&q| res.sojourn_quantile(q))
+        .collect();
+    (qs, res.sojourn_summary.mean(), res.waiting_quantile(0.9))
+}
+
+/// An explicit `policy = "fcfs"` section is bit-for-bit the absent
+/// section, for every model.
+#[test]
+fn fcfs_policy_is_bitwise_default() {
+    for (model, l, k) in [
+        (ModelKind::SplitMerge, 5, 25),
+        (ModelKind::ForkJoinSingleQueue, 5, 25),
+        (ModelKind::ForkJoinPerServer, 5, 5),
+        (ModelKind::Ideal, 5, 25),
+    ] {
+        let plain = base(model, l, k);
+        let fcfs = SimulationConfig {
+            policy: Some(policy(PolicyKind::Fcfs)),
+            ..base(model, l, k)
+        };
+        let (qa, ma, wa) = quantiles(&plain);
+        let (qb, mb, wb) = quantiles(&fcfs);
+        assert_eq!(qa, qb, "{model}: sojourn quantiles diverge under fcfs policy");
+        assert_eq!(ma, mb, "{model}: sojourn mean diverges");
+        assert_eq!(wa, wb, "{model}: waiting quantile diverges");
+    }
+}
+
+/// The fcfs degeneracy composes with the scenario (skewed + redundant)
+/// and fault-injection machinery: the policy layer must not disturb
+/// either RNG stream.
+#[test]
+fn fcfs_policy_is_bitwise_with_scenario_and_faults() {
+    let scenario = SimulationConfig {
+        workers: Some(WorkersConfig::Speeds(vec![1.5, 1.5, 1.0, 0.5, 0.5])),
+        redundancy: Some(RedundancyConfig::new(2)),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    let faulty = SimulationConfig {
+        faults: Some(FaultsConfig {
+            mtbf: 40.0,
+            mttr: 1.0,
+            task_fail_p: 0.05,
+            ..FaultsConfig::default()
+        }),
+        ..base(ModelKind::SplitMerge, 5, 25)
+    };
+    for plain in [scenario, faulty] {
+        let fcfs = SimulationConfig {
+            policy: Some(policy(PolicyKind::Fcfs)),
+            ..plain.clone()
+        };
+        let (qa, ma, wa) = quantiles(&plain);
+        let (qb, mb, wb) = quantiles(&fcfs);
+        assert_eq!(qa, qb, "{}: quantiles diverge under fcfs policy", plain.model);
+        assert_eq!(ma, mb);
+        assert_eq!(wa, wb);
+    }
+}
+
+/// Single-interval SITA (no boundaries): the policy state is live, its
+/// one partition is the whole cluster, and the dispatch decisions must
+/// collapse onto FCFS bitwise — for both recursion models.
+#[test]
+fn sita_single_interval_matches_fcfs_bitwise() {
+    for model in [ModelKind::SplitMerge, ModelKind::ForkJoinSingleQueue] {
+        let plain = base(model, 5, 25);
+        let sita1 = SimulationConfig {
+            policy: Some(policy(PolicyKind::Sita)),
+            ..base(model, 5, 25)
+        };
+        let (qa, ma, wa) = quantiles(&plain);
+        let (qb, mb, wb) = quantiles(&sita1);
+        assert_eq!(qa, qb, "{model}: single-interval SITA must be FCFS");
+        assert_eq!(ma, mb, "{model}: sojourn mean diverges");
+        assert_eq!(wb, wa, "{model}: waiting quantile diverges");
+    }
+}
+
+/// The active policies the panel sweeps, with knobs sized for the
+/// l = 5, k = 25 shape (mean task size l/k = 0.2 s).
+fn active_policies() -> Vec<PolicyConfig> {
+    vec![
+        PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![0.2],
+            ..Default::default()
+        },
+        PolicyConfig {
+            kind: PolicyKind::Priority,
+            classes: 2,
+            weights: vec![2.0, 1.0],
+            ..Default::default()
+        },
+        PolicyConfig {
+            kind: PolicyKind::WorkSteal,
+            steal_threshold: 0.2,
+            ..Default::default()
+        },
+    ]
+}
+
+/// Fixed seed ⇒ fixed dispatch schedule for every active policy, and a
+/// reseed genuinely re-rolls the law.
+#[test]
+fn policy_runs_reproducible_per_seed() {
+    for pol in active_policies() {
+        let kind = pol.kind;
+        let cfg = SimulationConfig {
+            policy: Some(pol),
+            ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+        };
+        let (qa, ma, wa) = quantiles(&cfg);
+        let (qb, mb, wb) = quantiles(&cfg);
+        assert_eq!(qa, qb, "{kind}: same seed must give identical quantiles");
+        assert_eq!(ma, mb);
+        assert_eq!(wa, wb);
+        let reseeded = SimulationConfig { seed: cfg.seed ^ 0xBEEF, ..cfg.clone() };
+        let (_, mc, _) = quantiles(&reseeded);
+        assert_ne!(ma, mc, "{kind}: a reseed must change the sampled law");
+    }
+}
+
+/// A non-degenerate policy genuinely changes the sojourn law (guards
+/// against the policy plumbing silently not reaching the models).
+#[test]
+fn active_policy_changes_the_distribution() {
+    let plain = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let sita = SimulationConfig {
+        policy: Some(PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![0.2],
+            ..Default::default()
+        }),
+        ..plain.clone()
+    };
+    let (qa, _, _) = quantiles(&plain);
+    let (qb, _, _) = quantiles(&sita);
+    assert_ne!(qa, qb, "a real SITA split must alter the sojourn quantiles");
+}
+
+/// Priority runs populate the per-class sojourn summaries: one bucket
+/// per class, counts summing to the measured jobs, and the buckets
+/// merge identically under sharding.
+#[test]
+fn priority_run_populates_class_summaries() {
+    let cfg = SimulationConfig {
+        policy: Some(PolicyConfig {
+            kind: PolicyKind::Priority,
+            classes: 2,
+            weights: vec![2.0, 1.0],
+            ..Default::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    let res = sim::run(&cfg, RunOptions::default()).unwrap();
+    assert_eq!(res.class_sojourn.len(), 2);
+    let total: u64 = res.class_sojourn.iter().map(|s| s.count()).sum();
+    assert_eq!(total, res.sojourn_summary.count());
+    for (c, s) in res.class_sojourn.iter().enumerate() {
+        assert!(s.count() > 0, "class {c} never observed");
+    }
+    // SITA classes are per-task, so job sojourns stay classless.
+    let sita = SimulationConfig {
+        policy: Some(PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![0.2],
+            ..Default::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    let res = sim::run(&sita, RunOptions::default()).unwrap();
+    assert!(res.class_sojourn.is_empty());
+}
+
+/// The partitionless models reject active policies with a pointed
+/// config error instead of silently running FCFS.
+#[test]
+fn partitionless_models_reject_active_policies() {
+    for model in [ModelKind::Ideal, ModelKind::ForkJoinPerServer] {
+        let (l, k) = if model == ModelKind::ForkJoinPerServer { (5, 5) } else { (5, 25) };
+        let cfg = SimulationConfig {
+            policy: Some(policy(PolicyKind::Sita)),
+            ..base(model, l, k)
+        };
+        let err = sim::run(&cfg, RunOptions::default()).unwrap_err();
+        assert!(
+            err.contains("policy") || err.contains("dispatch"),
+            "{model}: unexpected error text {err:?}"
+        );
+    }
+}

@@ -26,6 +26,7 @@ fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

@@ -24,6 +24,7 @@ fn base(jobs: usize) -> SimulationConfig {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

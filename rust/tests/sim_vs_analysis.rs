@@ -21,6 +21,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, lambda: f64, mu: f64, jobs: usize) 
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

@@ -22,6 +22,7 @@ fn cfg(model: ModelKind, l: usize, k: usize, jobs: usize, seed: u64) -> Simulati
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     }
 }
 

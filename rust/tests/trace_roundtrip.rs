@@ -151,6 +151,7 @@ fn record_run(jobs: usize, warmup: usize, overhead: bool) -> Trace {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     };
     let res = sim::run(
         &cfg,
@@ -214,6 +215,7 @@ fn scenario_trace_records_as_v2_and_replays() {
             launch_overhead: 1e-3,
         }),
         faults: None,
+        policy: None,
     };
     let res = sim::run(
         &cfg,
@@ -275,6 +277,7 @@ fn fault_trace_records_as_v3_and_replays() {
             backoff_base: 0.01,
             ..Default::default()
         }),
+        policy: None,
     };
     let res = sim::run(
         &cfg,
@@ -425,6 +428,7 @@ fn calibrate_from_trace_end_to_end() {
         workers: None,
         redundancy: None,
         faults: None,
+        policy: None,
     };
     let res = sim::run(
         &cfg,
