@@ -132,6 +132,15 @@ COMMANDS:
                   on N workers; merged Welford/P2 stats. Deterministic per
                   (seed, shard count); --shards M decouples the shard count
                   from the worker count -- thread count never changes results)
+                  --metrics FILE   (write the RUN_METRICS.json obs report:
+                  counters, phase wall-times, latency histograms, peak RSS;
+                  consumes no RNG draws -- results stay bitwise identical)
+                  --progress       (heartbeat on stderr: jobs done, jobs/s,
+                  ETA, per-shard lag)
+    profile     Run one configuration with the obs registry on and print
+                the phase/counter table
+                  --engine recursion|calendar + the simulate flag set
+                  [--csv FILE]  (metric,value dump)  [--metrics FILE]
     approx      Analytic approximation for skewed/redundant clusters,
                 cross-validated against a simulation sweep (CSV per k)
                   --servers L --lambda RATE --workload SECONDS --epsilon E
@@ -140,18 +149,21 @@ COMMANDS:
                   [--replica-launch S] [--jobs N] [--out FILE.csv]
                   [--threads N]  (sweep pool size; default: all cores)
                   [--no-sim]  (pure analytics, microseconds)
+                  [--metrics FILE]  (merged obs report across the sweep)
                   [--check [--floor F] [--tolerance F]]  (exit 1 unless
                   analytic/sim lands in [floor, tolerance] at every
                   stable k -- the CI smoke gate)
     bench       Run the deterministic perf suite and write BENCH.json
                   [--out FILE] [--fast] [--seed S] [--threads N]
                   [--baseline BENCH_BASELINE.json [--max-regression F]]
+                  [--metrics FILE]  (bench-wide obs report)
                   jobs/sec + tasks/sec per model x k, both DES engines,
                   plus the sharded multicore headline row (headline-mt);
+                  rows embed a phase-profile breakdown (schema v2);
                   with --baseline, exit 1 when a gated row regresses
     emulate     Run the sparklite cluster emulator
                   --executors L --k K --mode sm|fj --jobs N
-                  --time-scale S --inject-overhead
+                  --time-scale S --inject-overhead [--metrics FILE]
                   --speeds 1.0,0.5,.. | --speed-dist SPEC  (slowdown-only
                   executor pinning, factors in (0,1])
     trace       Persistent task traces (schema v1-v4, ndjson or binary;
@@ -163,6 +175,7 @@ COMMANDS:
                   record    --source sim|emulator --out FILE [--format ndjson|bin]
                             + the simulate/emulate flag sets (--model, --k,
                             --speeds, --redundancy, --mtbf, --policy, ...)
+                            [--metrics FILE]  (obs report incl. I/O phase)
                   replay    --in FILE [--model sm|fj|fjps|ideal] [--servers L]
                             [--overhead ...] [--in-order] [--seed S]
                   summarize --in FILE

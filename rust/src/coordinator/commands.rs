@@ -7,6 +7,7 @@ use crate::config::{
     BackoffKind, EmulatorConfig, FaultsConfig, ModelKind, OverheadConfig, PolicyConfig,
     PolicyKind, RedundancyConfig, SimulationConfig, WorkersConfig,
 };
+use crate::obs::{self, Counter, Metrics, Phase};
 use crate::runtime::{BoundQuery, BoundsEngine, ErlangQuery};
 use crate::sim::{self, RunOptions};
 use crate::util::threadpool::ThreadPool;
@@ -163,6 +164,22 @@ fn k_list_from_args(args: &Args, key: &str) -> Result<Option<Vec<usize>>> {
     Ok(Some(ks))
 }
 
+/// Write the RUN_METRICS.json report when the command got
+/// `--metrics FILE` (the schema-v1 surface shared by every command).
+fn write_metrics_report(
+    args: &Args,
+    source: &str,
+    m: &Metrics,
+    jobs: u64,
+    wall_seconds: f64,
+) -> Result<()> {
+    if let Some(path) = args.get("metrics") {
+        obs::report::write_file(path, source, m, jobs, wall_seconds).map_err(e)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 /// Sweep pool sized by `--threads` (absent or 0 = machine default).
 fn pool_from_args(args: &Args) -> Result<ThreadPool> {
     Ok(match args.get_usize("threads", 0).map_err(e)? {
@@ -180,39 +197,23 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         let cfg = exp
             .simulation
             .ok_or_else(|| anyhow::anyhow!("{path}: no [simulation] section"))?;
-        let mut res = sim::run(&cfg, RunOptions::default()).map_err(e)?;
+        let opts = RunOptions {
+            metrics: args.get("metrics").is_some(),
+            progress: args.get_bool("progress"),
+            ..Default::default()
+        };
+        let mut res = sim::run(&cfg, opts).map_err(e)?;
         println!("experiment       {}", exp.name);
         println!("model            {}", cfg.model);
         println!("mean sojourn     {:.4} s", res.sojourn_summary.mean());
         for q in [0.5, 0.9, 0.99] {
             println!("sojourn p{:<6} {:.4} s", q * 100.0, res.sojourn_quantile(q));
         }
+        write_metrics_report(args, "simulate", &res.metrics, cfg.jobs as u64, res.wall_seconds)?;
         return Ok(0);
     }
-    let l = args.get_usize("servers", 50).map_err(e)?;
-    let k = args.get_usize("k", l).map_err(e)?;
-    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
-    let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
-    let (workers, redundancy) = scenario_from_args(args)?;
-    let cfg = SimulationConfig {
-        model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
-        servers: l,
-        tasks_per_job: k,
-        arrival: crate::config::ArrivalConfig {
-            interarrival: args.get_or("interarrival", &format!("exp:{lambda}")),
-        },
-        service: crate::config::ServiceConfig {
-            execution: args.get_or("execution", &format!("exp:{mu}")),
-        },
-        jobs: args.get_usize("jobs", 30_000).map_err(e)?,
-        warmup: args.get_usize("warmup", 3_000).map_err(e)?,
-        seed: args.get_u64("seed", 1).map_err(e)?,
-        overhead: overhead_from_args(args)?,
-        workers,
-        redundancy,
-        faults: faults_from_args(args)?,
-        policy: policy_from_args(args)?,
-    };
+    let cfg = sim_cfg_from_args(args)?;
+    let (l, k) = (cfg.servers, cfg.tasks_per_job);
     let opts = RunOptions {
         in_order_departures: args.get_bool("in-order"),
         // O(1)-memory mode for huge --jobs: P² quantiles on the default
@@ -223,6 +224,8 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         // (the sample stream) from the worker count (never observable).
         threads: args.get_usize("threads", 1).map_err(e)?,
         shards: args.get_usize("shards", 0).map_err(e)?,
+        metrics: args.get("metrics").is_some(),
+        progress: args.get_bool("progress"),
         ..Default::default()
     };
     let mut res = sim::run(&cfg, opts).map_err(e)?;
@@ -280,6 +283,138 @@ pub fn cmd_simulate(args: &Args) -> Result<i32> {
         }
     }
     println!("throughput       {:.0} jobs/s wall", res.jobs_per_second());
+    write_metrics_report(args, "simulate", &res.metrics, cfg.jobs as u64, res.wall_seconds)?;
+    Ok(0)
+}
+
+/// Build a [`SimulationConfig`] from `simulate`-style flags (shared with
+/// `tiny-tasks profile`).
+fn sim_cfg_from_args(args: &Args) -> Result<SimulationConfig> {
+    let l = args.get_usize("servers", 50).map_err(e)?;
+    let k = args.get_usize("k", l).map_err(e)?;
+    let lambda = args.get_f64("lambda", 0.5).map_err(e)?;
+    let mu = args.get_f64("mu", k as f64 / l as f64).map_err(e)?;
+    let (workers, redundancy) = scenario_from_args(args)?;
+    Ok(SimulationConfig {
+        model: ModelKind::parse(&args.get_or("model", "fj")).map_err(e)?,
+        servers: l,
+        tasks_per_job: k,
+        arrival: crate::config::ArrivalConfig {
+            interarrival: args.get_or("interarrival", &format!("exp:{lambda}")),
+        },
+        service: crate::config::ServiceConfig {
+            execution: args.get_or("execution", &format!("exp:{mu}")),
+        },
+        jobs: args.get_usize("jobs", 30_000).map_err(e)?,
+        warmup: args.get_usize("warmup", 3_000).map_err(e)?,
+        seed: args.get_u64("seed", 1).map_err(e)?,
+        overhead: overhead_from_args(args)?,
+        workers,
+        redundancy,
+        faults: faults_from_args(args)?,
+        policy: policy_from_args(args)?,
+    })
+}
+
+/// `tiny-tasks profile` — run one configuration with the obs registry on
+/// and print the phase/counter table. The profiled run is bitwise
+/// identical to `simulate` with the same flags: metrics consume no RNG
+/// draws. `--engine recursion` (default) profiles `sim::run`;
+/// `--engine calendar` drives the event-calendar engine with its
+/// sampling-phase hook. `--csv FILE` dumps the table as metric,value
+/// rows; `--metrics FILE` writes the RUN_METRICS.json report.
+pub fn cmd_profile(args: &Args) -> Result<i32> {
+    let cfg = sim_cfg_from_args(args)?;
+    cfg.validate().map_err(e)?;
+    let engine = args.get_or("engine", "recursion");
+    let (metrics, jobs, wall) = match engine.as_str() {
+        "recursion" | "sim" => {
+            let opts = RunOptions {
+                streaming: args.get_bool("streaming"),
+                threads: args.get_usize("threads", 1).map_err(e)?,
+                shards: args.get_usize("shards", 0).map_err(e)?,
+                metrics: true,
+                progress: args.get_bool("progress"),
+                ..Default::default()
+            };
+            let res = sim::run(&cfg, opts).map_err(e)?;
+            (res.metrics, cfg.jobs as u64, res.wall_seconds)
+        }
+        "calendar" | "cal" => {
+            use crate::sim::{
+                Calendar, Discipline, FaultInjector, OverheadModel, TraceLog, Workload,
+            };
+            if cfg.workers.is_some() || cfg.redundancy.is_some() {
+                bail!("the calendar engine has no scenario support; drop --workers/--redundancy");
+            }
+            if cfg.faults.is_some() && cfg.policy.is_some() {
+                bail!("the calendar engine composes faults with FCFS only; drop one flag set");
+            }
+            let disc = match cfg.model {
+                ModelKind::SplitMerge => Discipline::SplitMerge,
+                ModelKind::ForkJoinSingleQueue => Discipline::SingleQueueForkJoin,
+                other => bail!("--engine calendar profiles sm/fj models, not {other}"),
+            };
+            let mut workload = Workload::from_config(&cfg).map_err(e)?;
+            let overhead = OverheadModel::from_option(cfg.overhead);
+            let expected_task = workload.mean_execution() + overhead.mean_task();
+            let faults = FaultInjector::from_config(&cfg, expected_task);
+            let mut cal = Calendar::new(disc, cfg.servers, vec![cfg.tasks_per_job as u32])
+                .with_faults(faults)
+                .with_policy(cfg.policy.as_ref())
+                .with_profile(true);
+            let mut tr = TraceLog::disabled();
+            let t0 = std::time::Instant::now();
+            let recs = cal.run(cfg.jobs, &mut workload, &overhead, &mut tr);
+            let wall = t0.elapsed().as_secs_f64();
+            let mut m = Metrics::enabled();
+            m.absorb_tallies(&cal.tallies());
+            let (arrivals, executions, batches) = workload.draw_counts();
+            m.add(Counter::ArrivalDraws, arrivals);
+            m.add(Counter::ExecutionDraws, executions);
+            m.add(Counter::BatchDraws, batches);
+            let sampling = cal.sampling_seconds();
+            m.phase_add_secs(Phase::Sampling, sampling);
+            m.phase_add_secs(Phase::Dispatch, (wall - sampling).max(0.0));
+            for r in &recs {
+                m.observe_sojourn(r.sojourn());
+                m.observe_waiting(r.waiting());
+            }
+            (m, recs.len() as u64, wall)
+        }
+        other => bail!("unknown --engine {other:?} (recursion|calendar)"),
+    };
+
+    println!(
+        "profile          {} on the {engine} engine (l={}, k={}, jobs={jobs})",
+        cfg.model, cfg.servers, cfg.tasks_per_job
+    );
+    println!("\n{:>24} {:>16}", "phase", "seconds");
+    for p in Phase::ALL {
+        println!("{:>24} {:>16.6}", p.key(), metrics.phase_seconds(p));
+    }
+    println!("\n{:>24} {:>16}", "counter", "value");
+    for c in Counter::ALL {
+        println!("{:>24} {:>16}", c.key(), metrics.counter(c));
+    }
+    println!(
+        "\nwall             {:.3} s ({:.0} jobs/s), peak rss {} bytes",
+        wall,
+        jobs as f64 / wall.max(1e-12),
+        obs::report::peak_rss_bytes()
+    );
+    if let Some(path) = args.get("csv") {
+        let mut s = String::from("metric,value\n");
+        for p in Phase::ALL {
+            s.push_str(&format!("phase_{},{}\n", p.key(), metrics.phase_seconds(p)));
+        }
+        for c in Counter::ALL {
+            s.push_str(&format!("{},{}\n", c.key(), metrics.counter(c)));
+        }
+        std::fs::write(path, s)?;
+        println!("wrote {path}");
+    }
+    write_metrics_report(args, "profile", &metrics, jobs, wall)?;
     Ok(0)
 }
 
@@ -342,6 +477,13 @@ pub fn cmd_emulate(args: &Args) -> Result<i32> {
         res.listener.mean_overhead_fraction()
     );
     println!("wall time        {:.1} s", res.wall_seconds);
+    if args.get("metrics").is_some() {
+        // Project the Spark-style listener into the engine-wide schema so
+        // emulate emits the same RUN_METRICS.json as the simulators.
+        let m = res.listener.to_obs();
+        let jobs = res.listener.jobs.len() as u64;
+        write_metrics_report(args, "emulate", &m, jobs, res.wall_seconds)?;
+    }
     Ok(0)
 }
 
@@ -618,7 +760,7 @@ pub fn cmd_advisor(args: &Args) -> Result<i32> {
 /// a one-sided dominance test.
 pub fn cmd_approx(args: &Args) -> Result<i32> {
     use crate::approx::{self, ApproxModel, ClusterSpec};
-    use crate::coordinator::sweep::{constant_workload_points, run_sweep};
+    use crate::coordinator::sweep::{constant_workload_points, run_sweep_with, SweepOptions};
     use crate::util::csv::Csv;
 
     let l = args.get_usize("servers", 8).map_err(e)?;
@@ -680,10 +822,31 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
             );
         }
         let pool = pool_from_args(args)?;
-        Some(
-            run_sweep(&pool, points, 1.0 - epsilon, args.get_u64("seed", 1).map_err(e)?)
-                .map_err(e)?,
+        let want_metrics = args.get("metrics").is_some();
+        let n_points = points.len();
+        let t_sweep = std::time::Instant::now();
+        let outcomes = run_sweep_with(
+            &pool,
+            points,
+            SweepOptions { q: 1.0 - epsilon, streaming: false, metrics: want_metrics },
+            args.get_u64("seed", 1).map_err(e)?,
         )
+        .map_err(e)?;
+        if want_metrics {
+            // Merge per-point registries in point order (deterministic).
+            let mut m = Metrics::enabled();
+            for o in &outcomes {
+                m.merge(&o.metrics);
+            }
+            write_metrics_report(
+                args,
+                "sweep",
+                &m,
+                (jobs * n_points) as u64,
+                t_sweep.elapsed().as_secs_f64(),
+            )?;
+        }
+        Some(outcomes)
     };
 
     println!(
@@ -790,6 +953,11 @@ struct BenchRow {
     mean_seconds: f64,
     jobs_per_sec: f64,
     tasks_per_sec: f64,
+    /// Phase-profile breakdown of one profiled (non-timed) run of the
+    /// same workload, as (phase key, wall seconds); empty for rows that
+    /// aren't profiled. Serialized last in each entry so schema-v1
+    /// readers that scan up to the first close brace keep working.
+    phases: Vec<(String, f64)>,
 }
 
 impl BenchRow {
@@ -814,8 +982,68 @@ impl BenchRow {
             mean_seconds,
             jobs_per_sec: jobs_per_iter as f64 / mean_seconds,
             tasks_per_sec: (jobs_per_iter * k) as f64 / mean_seconds,
+            phases: Vec::new(),
         }
     }
+
+    fn with_phases(mut self, phases: Vec<(String, f64)>) -> Self {
+        self.phases = phases;
+        self
+    }
+}
+
+/// The obs phases of one profiled run as (key, seconds) pairs.
+fn phase_pairs(m: &Metrics) -> Vec<(String, f64)> {
+    Phase::ALL
+        .iter()
+        .map(|p| (p.key().to_string(), m.phase_seconds(*p)))
+        .collect()
+}
+
+/// One profiled (untimed) recursion run for a bench row; folds the
+/// registry into the bench-wide aggregate and returns the row's phases.
+fn profile_sim_row(
+    cfg: &SimulationConfig,
+    streaming: bool,
+    agg: &mut Metrics,
+) -> Result<Vec<(String, f64)>> {
+    let prof = sim::run(cfg, RunOptions { streaming, metrics: true, ..Default::default() })
+        .map_err(e)?;
+    agg.merge(&prof.metrics);
+    Ok(phase_pairs(&prof.metrics))
+}
+
+/// One profiled calendar run for a bench row: times the run, splits the
+/// wall clock into sampling vs dispatch via the engine's profile hook,
+/// and folds tallies + RNG draw counts into the bench-wide aggregate.
+fn profile_calendar_row(
+    disc: crate::sim::Discipline,
+    l: usize,
+    k: usize,
+    jobs: usize,
+    mu: f64,
+    seed: u64,
+    agg: &mut Metrics,
+) -> Vec<(String, f64)> {
+    use crate::dist::Exponential;
+    use crate::sim::{Calendar, OverheadModel, TraceLog, Workload};
+    let mut cal = Calendar::new(disc, l, vec![k as u32]).with_profile(true);
+    let oh = OverheadModel::none();
+    let mut w = Workload::new(Exponential::new(0.5).into(), Exponential::new(mu).into(), seed);
+    let mut tr = TraceLog::disabled();
+    let t0 = std::time::Instant::now();
+    cal.run(jobs, &mut w, &oh, &mut tr);
+    let total = t0.elapsed().as_secs_f64();
+    let sampling = cal.sampling_seconds();
+    let dispatch = (total - sampling).max(0.0);
+    agg.absorb_tallies(&cal.tallies());
+    let (arrivals, executions, batches) = w.draw_counts();
+    agg.add(Counter::ArrivalDraws, arrivals);
+    agg.add(Counter::ExecutionDraws, executions);
+    agg.add(Counter::BatchDraws, batches);
+    agg.phase_add_secs(Phase::Sampling, sampling);
+    agg.phase_add_secs(Phase::Dispatch, dispatch);
+    vec![("sampling".to_string(), sampling), ("dispatch".to_string(), dispatch)]
 }
 
 fn json_escape(s: &str) -> String {
@@ -828,15 +1056,25 @@ fn json_escape(s: &str) -> String {
 fn bench_json(fast: bool, seed: u64, rows: &[BenchRow]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema_version\": 1,\n");
+    // v2: entries may carry a trailing "phases" object (profiled wall
+    // seconds per obs phase). v1 readers that ignore unknown keys — and
+    // the gate's innermost-brace scanner — stay compatible.
+    s.push_str("  \"schema_version\": 2,\n");
     s.push_str(&format!("  \"fast\": {fast},\n"));
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str("  \"entries\": [\n");
     for (i, r) in rows.iter().enumerate() {
+        let phases = if r.phases.is_empty() {
+            String::new()
+        } else {
+            let body: Vec<String> =
+                r.phases.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+            format!(", \"phases\": {{{}}}", body.join(", "))
+        };
         s.push_str(&format!(
             "    {{\"name\": \"{}\", \"engine\": \"{}\", \"model\": \"{}\", \
              \"servers\": {}, \"k\": {}, \"jobs_per_iter\": {}, \"iters\": {}, \
-             \"mean_seconds\": {}, \"jobs_per_sec\": {}, \"tasks_per_sec\": {}}}{}\n",
+             \"mean_seconds\": {}, \"jobs_per_sec\": {}, \"tasks_per_sec\": {}{}}}{}\n",
             json_escape(&r.name),
             r.engine,
             json_escape(&r.model),
@@ -847,6 +1085,7 @@ fn bench_json(fast: bool, seed: u64, rows: &[BenchRow]) -> String {
             r.mean_seconds,
             r.jobs_per_sec,
             r.tasks_per_sec,
+            phases,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -894,6 +1133,12 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         Bencher::default()
     };
     let mut rows: Vec<BenchRow> = Vec::new();
+    let t_bench = std::time::Instant::now();
+    // Bench-wide profiled registry: each row gets one extra untimed run
+    // with metrics on; its phase breakdown lands in the row's "phases"
+    // object (BENCH.json schema v2) and the merged registry backs
+    // `bench --metrics`.
+    let mut profiled = Metrics::enabled();
 
     // Recursion engines: the four models on the Fig.-8 sweep shapes.
     let suite: &[(&str, ModelKind, usize, usize, usize)] = &[
@@ -908,7 +1153,11 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         let r = bencher.bench(name, || {
             sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
         });
-        rows.push(BenchRow::new(name, "recursion", &model.to_string(), l, k, jobs, r));
+        let phases = profile_sim_row(&cfg, false, &mut profiled)?;
+        rows.push(
+            BenchRow::new(name, "recursion", &model.to_string(), l, k, jobs, r)
+                .with_phases(phases),
+        );
     }
 
     // Variants on the fork-join shape: overhead model, heterogeneous +
@@ -923,7 +1172,10 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         let r = bencher.bench(name, || {
             sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
         });
-        rows.push(BenchRow::new(name, "recursion", "fj+overhead", l, k, jobs, r));
+        let phases = profile_sim_row(&cfg, false, &mut profiled)?;
+        rows.push(
+            BenchRow::new(name, "recursion", "fj+overhead", l, k, jobs, r).with_phases(phases),
+        );
 
         let mut speeds = vec![1.5; l / 2];
         speeds.extend(vec![0.5; l - l / 2]);
@@ -936,7 +1188,10 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         let r = bencher.bench(name, || {
             sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
         });
-        rows.push(BenchRow::new(name, "recursion", "fj+scenario", l, k, jobs, r));
+        let phases = profile_sim_row(&cfg, false, &mut profiled)?;
+        rows.push(
+            BenchRow::new(name, "recursion", "fj+scenario", l, k, jobs, r).with_phases(phases),
+        );
 
         let cfg = bench_sim_cfg(ModelKind::ForkJoinSingleQueue, l, k, jobs, seed);
         let name = "sim/fj/l50/k400/streaming";
@@ -946,7 +1201,10 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
                 .sojourn_summary
                 .count()
         });
-        rows.push(BenchRow::new(name, "recursion", "fj+streaming", l, k, jobs, r));
+        let phases = profile_sim_row(&cfg, true, &mut profiled)?;
+        rows.push(
+            BenchRow::new(name, "recursion", "fj+streaming", l, k, jobs, r).with_phases(phases),
+        );
 
         // Dispatch-policy variant: the --policy flag set selects the
         // discipline; without flags the row defaults to SITA with a
@@ -969,7 +1227,10 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
         let r = bencher.bench(&name, || {
             sim::run(&cfg, RunOptions::default()).unwrap().sojourn_summary.count()
         });
-        rows.push(BenchRow::new(&name, "recursion", "fj+policy", l, k, jobs, r));
+        let phases = profile_sim_row(&cfg, false, &mut profiled)?;
+        rows.push(
+            BenchRow::new(&name, "recursion", "fj+policy", l, k, jobs, r).with_phases(phases),
+        );
     }
 
     // Event-calendar engine, both disciplines (cross-validation path).
@@ -989,7 +1250,8 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
             let mut tr = TraceLog::disabled();
             cal.run(jobs, &mut w, &oh, &mut tr).len()
         });
-        rows.push(BenchRow::new(name, "calendar", tag, l, k, jobs, r));
+        let phases = profile_calendar_row(disc, l, k, jobs, mu, seed, &mut profiled);
+        rows.push(BenchRow::new(name, "calendar", tag, l, k, jobs, r).with_phases(phases));
     }
 
     // Headline: the 500k-job single-queue fork-join run through the
@@ -1011,7 +1273,16 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
             let mut tr = TraceLog::disabled();
             cal.run(jobs, &mut w, &oh, &mut tr).len()
         });
-        rows.push(BenchRow::new(name, "calendar", "fj", l, k, jobs, r));
+        let phases = profile_calendar_row(
+            Discipline::SingleQueueForkJoin,
+            l,
+            k,
+            jobs,
+            mu,
+            seed,
+            &mut profiled,
+        );
+        rows.push(BenchRow::new(name, "calendar", "fj", l, k, jobs, r).with_phases(phases));
     }
 
     // Multithreaded headline: the same workload split into replication
@@ -1062,6 +1333,13 @@ pub fn cmd_bench(args: &Args) -> Result<i32> {
     let json = bench_json(fast, seed, &rows);
     std::fs::write(&out_path, &json)?;
     println!("wrote {}", out_path.display());
+    write_metrics_report(
+        args,
+        "bench",
+        &profiled,
+        profiled.counter(Counter::JobsCompleted),
+        t_bench.elapsed().as_secs_f64(),
+    )?;
 
     // Regression gate: compare the headline row against a committed
     // baseline (CI fails the job when it regresses by more than
@@ -1158,6 +1436,9 @@ fn trace_format_flag(args: &Args) -> Result<Option<crate::trace::TraceFormat>> {
 fn trace_record(args: &Args) -> Result<i32> {
     let out = args.get_or("out", "trace.ndjson");
     let format = trace_format_flag(args)?;
+    let want_metrics = args.get("metrics").is_some();
+    let t0 = std::time::Instant::now();
+    let mut run_metrics: Option<Metrics> = None;
     let trace = match args.get_or("source", "sim").as_str() {
         "sim" | "des" => {
             let l = args.get_usize("servers", 8).map_err(e)?;
@@ -1191,27 +1472,51 @@ fn trace_record(args: &Args) -> Result<i32> {
                 // meta + routing classes on task rows).
                 policy: policy_from_args(args)?,
             };
-            let res = sim::run(
+            let mut res = sim::run(
                 &cfg,
-                RunOptions { record_jobs: true, trace: true, ..Default::default() },
+                RunOptions {
+                    record_jobs: true,
+                    trace: true,
+                    metrics: want_metrics,
+                    progress: args.get_bool("progress"),
+                    ..Default::default()
+                },
             )
             .map_err(e)?;
+            if want_metrics {
+                run_metrics = Some(std::mem::take(&mut res.metrics));
+            }
             crate::trace::Trace::from_sim(&res).map_err(e)?
         }
         "emulator" | "emu" | "sparklite" => {
             let cfg = emulator_cfg_from_args(args)?;
             let res = emulator::run(&cfg).map_err(e)?;
+            if want_metrics {
+                run_metrics = Some(res.listener.to_obs());
+            }
             crate::trace::Trace::from_emulator(&res).map_err(e)?
         }
         other => bail!("unknown --source {other:?} (sim|emulator)"),
     };
+    let io_t0 = std::time::Instant::now();
     trace.write_file(&out, format).map_err(e)?;
+    let io_secs = io_t0.elapsed().as_secs_f64();
     println!(
         "recorded {} jobs / {} task rows ({} source) -> {out}",
         trace.jobs.len(),
         trace.tasks.len(),
         trace.meta.source
     );
+    if let Some(mut m) = run_metrics {
+        m.phase_add_secs(Phase::Io, io_secs);
+        write_metrics_report(
+            args,
+            "trace-record",
+            &m,
+            trace.jobs.len() as u64,
+            t0.elapsed().as_secs_f64(),
+        )?;
+    }
     Ok(0)
 }
 
@@ -1355,13 +1660,21 @@ fn trace_convert(args: &Args) -> Result<i32> {
         bail!("trace convert needs --out FILE (.bin/.tbin -> binary, else ndjson)");
     };
     let format = trace_format_flag(args)?;
+    let t0 = std::time::Instant::now();
     let trace = crate::trace::Trace::read_file(input).map_err(e)?;
     trace.write_file(out, format).map_err(e)?;
+    let io_secs = t0.elapsed().as_secs_f64();
     println!(
         "converted {input} -> {out} ({} jobs, {} tasks)",
         trace.jobs.len(),
         trace.tasks.len()
     );
+    if args.get("metrics").is_some() {
+        // Codec-only workload: the whole wall clock is I/O.
+        let mut m = Metrics::enabled();
+        m.phase_add_secs(Phase::Io, io_secs);
+        write_metrics_report(args, "trace-convert", &m, trace.jobs.len() as u64, io_secs)?;
+    }
     Ok(0)
 }
 

@@ -21,6 +21,7 @@ pub fn dispatch(args: &Args) -> Result<i32> {
             Ok(0)
         }
         "simulate" => commands::cmd_simulate(args),
+        "profile" => commands::cmd_profile(args),
         "emulate" => commands::cmd_emulate(args),
         "bounds" => commands::cmd_bounds(args),
         "stability" => commands::cmd_stability(args),

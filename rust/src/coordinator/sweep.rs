@@ -42,6 +42,10 @@ pub struct SweepOutcome {
     pub class_sojourn_mean: Vec<f64>,
     /// Jobs simulated per wall second (perf telemetry).
     pub jobs_per_sec: f64,
+    /// The point's obs registry (disabled no-op unless
+    /// [`SweepOptions::metrics`]); callers merge these across points in
+    /// point order for a sweep-wide RUN_METRICS report.
+    pub metrics: crate::obs::Metrics,
 }
 
 /// Sweep-wide options: the quantile to extract and the runner's memory
@@ -54,6 +58,9 @@ pub struct SweepOptions {
     /// bank instead of storing every sojourn sample — million-job sweep
     /// points stop costing O(jobs) memory each.
     pub streaming: bool,
+    /// Collect per-point obs metrics (counters + phase timers). Metrics
+    /// consume no RNG, so sweep outputs are bitwise identical either way.
+    pub metrics: bool,
 }
 
 /// One [`SweepPoint`] per k at constant mean job workload: Poisson
@@ -120,7 +127,12 @@ pub fn run_sweep(
     q: f64,
     master_seed: u64,
 ) -> Result<Vec<SweepOutcome>, String> {
-    run_sweep_with(pool, points, SweepOptions { q, streaming: false }, master_seed)
+    run_sweep_with(
+        pool,
+        points,
+        SweepOptions { q, streaming: false, metrics: false },
+        master_seed,
+    )
 }
 
 /// [`run_sweep`] with explicit [`SweepOptions`].
@@ -135,6 +147,7 @@ pub fn run_sweep_with(
     let run_opts = RunOptions {
         streaming: opts.streaming,
         streaming_q: Some(opts.q),
+        metrics: opts.metrics,
         ..Default::default()
     };
     let q = opts.q;
@@ -153,6 +166,7 @@ pub fn run_sweep_with(
             retry_mean: res.retry_summary.mean(),
             class_sojourn_mean: res.class_sojourn.iter().map(|s| s.mean()).collect(),
             jobs_per_sec: res.jobs_per_second(),
+            metrics: res.metrics,
         })
     })?;
     outcomes.into_iter().collect()
@@ -236,7 +250,7 @@ mod tests {
         let stream = run_sweep_with(
             &pool,
             points,
-            SweepOptions { q: 0.99, streaming: true },
+            SweepOptions { q: 0.99, streaming: true, metrics: false },
             7,
         )
         .unwrap();
@@ -251,6 +265,30 @@ mod tests {
                 a.sojourn_q,
                 b.sojourn_q
             );
+        }
+    }
+
+    /// Metrics collection consumes no RNG, so a metrics-on sweep matches
+    /// the metrics-off sweep bitwise while the registries fill up.
+    #[test]
+    fn metrics_sweep_is_bitwise_identical() {
+        let points: Vec<SweepPoint> = [10, 20].iter().map(|&k| point(k, 2000)).collect();
+        let pool = ThreadPool::new(2);
+        let off = run_sweep(&pool, points.clone(), 0.99, 7).unwrap();
+        let on = run_sweep_with(
+            &pool,
+            points,
+            SweepOptions { q: 0.99, streaming: false, metrics: true },
+            7,
+        )
+        .unwrap();
+        for (a, b) in off.iter().zip(&on) {
+            assert_eq!(a.sojourn_q, b.sojourn_q);
+            assert_eq!(a.sojourn_mean, b.sojourn_mean);
+            assert!(!a.metrics.is_enabled());
+            assert!(b.metrics.is_enabled());
+            // Warmup jobs run through the model too: 2000 measured + 100.
+            assert_eq!(b.metrics.counter(crate::obs::Counter::JobsCompleted), 2100);
         }
     }
 

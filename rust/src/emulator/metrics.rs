@@ -105,6 +105,21 @@ impl MetricsListener {
     pub fn job_overheads(&self) -> Vec<f64> {
         self.jobs.iter().map(|j| j.total_task_overhead).collect()
     }
+
+    /// Project the listener into the engine-wide obs registry so
+    /// `emulate --metrics` emits the same RUN_METRICS.json schema as the
+    /// simulators: tasks → dispatches, jobs → completions, sojourns into
+    /// the latency histogram.
+    pub fn to_obs(&self) -> crate::obs::Metrics {
+        let mut m = crate::obs::Metrics::enabled();
+        m.add(crate::obs::Counter::TasksDispatched, self.tasks.len() as u64);
+        m.add(crate::obs::Counter::JobsCompleted, self.jobs.len() as u64);
+        for j in &self.jobs {
+            m.observe_sojourn(j.sojourn());
+            m.observe_waiting((j.submitted - j.arrival).max(0.0));
+        }
+        m
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +149,24 @@ mod tests {
         l.tasks.push(TaskMetrics { occupancy: 1.0, execution: 0.5, ..Default::default() });
         l.tasks.push(TaskMetrics { occupancy: 1.0, execution: 1.0, ..Default::default() });
         assert!((l.mean_overhead_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_obs_projects_counts_and_sojourns() {
+        let mut l = MetricsListener::default();
+        l.tasks.push(TaskMetrics::default());
+        l.tasks.push(TaskMetrics::default());
+        l.jobs.push(JobMetrics {
+            arrival: 1.0,
+            submitted: 1.5,
+            departure: 3.0,
+            ..Default::default()
+        });
+        let m = l.to_obs();
+        assert!(m.is_enabled());
+        assert_eq!(m.counter(crate::obs::Counter::TasksDispatched), 2);
+        assert_eq!(m.counter(crate::obs::Counter::JobsCompleted), 1);
+        assert_eq!(m.sojourn_hist.total(), 1);
+        assert_eq!(m.waiting_hist.total(), 1);
     }
 }

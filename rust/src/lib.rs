@@ -30,6 +30,11 @@
 //! * [`trace`] — persistent task traces: a versioned on-disk format
 //!   (NDJSON + compact binary), capture from both engines, trace-driven
 //!   replay, and empirical-distribution extraction.
+//! * [`obs`] — engine-wide observability: always-on raw engine tallies,
+//!   a lock-free-when-off metrics registry (counters, phase timers,
+//!   fixed-bucket histograms), the `RUN_METRICS.json` report, and the
+//!   `--progress` heartbeat — all with zero determinism cost (bitwise
+//!   identical simulation output with metrics on vs. off).
 //! * [`dist`], [`rng`], [`stats`], [`config`], [`cli`], [`util`] —
 //!   supporting substrates (offline environment: no external crates beyond
 //!   the vendored `xla`/`anyhow`/`log`; see DESIGN.md §2).
@@ -41,6 +46,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dist;
 pub mod emulator;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,505 @@
+//! Observability — engine-wide metrics and profiling with zero
+//! determinism cost.
+//!
+//! Two layers, split by cost model:
+//!
+//! * [`Tallies`] — raw, always-on `u64` event counts owned by the
+//!   engines themselves (heap ops, dispatches, steals, retries, crashes,
+//!   speculative launches, replica losers, sampler draws). A plain
+//!   unconditional integer increment is cheaper than the branch that
+//!   would gate it, so these run unconditionally and are harvested once
+//!   per run.
+//! * [`Metrics`] — the gated registry (counters, phase wall-times,
+//!   fixed-bucket latency histograms, gauges). Every recording method is
+//!   `#[inline]` and early-returns when the registry is disabled, so the
+//!   disabled path compiles down to a predicted-not-taken branch on a
+//!   local bool; phase clocks take **no** `Instant` reading when
+//!   disabled ([`PhaseClock`] holds `None`).
+//!
+//! The hard invariant: nothing in this module consumes RNG draws or
+//! feeds back into simulation state, so results are bitwise identical
+//! with metrics on vs. off (test-enforced in `rust/tests/obs_metrics.rs`
+//! the same way `TT_NO_FAST_EXP` and thread-count invariance are).
+//! Registries are per-shard (each shard owns its own `Metrics`) and
+//! merge deterministically in shard-index order alongside the Welford/P²
+//! merges — there are no locks because there is no sharing.
+
+pub mod progress;
+pub mod report;
+
+/// Counters tracked by the registry. Enum-indexed into a fixed array,
+/// so recording is a bounds-check-free store and the report always
+/// emits every key (CI asserts on their presence).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Calendar engine: events popped off the event heap.
+    EventsProcessed,
+    /// Server-heap / event-heap pushes.
+    HeapPushes,
+    /// Server-heap / event-heap pops.
+    HeapPops,
+    /// Logical tasks handed to a server (one per task, not per attempt).
+    TasksDispatched,
+    /// Jobs run to completion (warmup included — the engines cannot
+    /// tell a warmup job from a measured one).
+    JobsCompleted,
+    /// Work-stealing: tasks run on a non-affinity server.
+    Steals,
+    /// Fault injection: failed attempts that re-entered the queue.
+    Retries,
+    /// Fault injection: worker crash events consumed.
+    Crashes,
+    /// Fault injection: speculative backup copies actually launched.
+    SpeculativeLaunches,
+    /// Redundancy: replica copies cancelled after losing the
+    /// first-finish-wins race (having occupied a server).
+    ReplicaLosers,
+    /// Batched sampler calls (`Dist::draw_batch` via
+    /// `Workload::next_executions`).
+    BatchDraws,
+    /// Interarrival draws.
+    ArrivalDraws,
+    /// Task execution-time draws (batched draws count per element).
+    ExecutionDraws,
+}
+
+/// Number of [`Counter`] variants.
+pub const COUNTER_COUNT: usize = 13;
+
+impl Counter {
+    /// Every counter, in report order.
+    pub const ALL: [Counter; COUNTER_COUNT] = [
+        Counter::EventsProcessed,
+        Counter::HeapPushes,
+        Counter::HeapPops,
+        Counter::TasksDispatched,
+        Counter::JobsCompleted,
+        Counter::Steals,
+        Counter::Retries,
+        Counter::Crashes,
+        Counter::SpeculativeLaunches,
+        Counter::ReplicaLosers,
+        Counter::BatchDraws,
+        Counter::ArrivalDraws,
+        Counter::ExecutionDraws,
+    ];
+
+    /// Stable snake-case key used in `RUN_METRICS.json`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Counter::EventsProcessed => "events_processed",
+            Counter::HeapPushes => "heap_pushes",
+            Counter::HeapPops => "heap_pops",
+            Counter::TasksDispatched => "tasks_dispatched",
+            Counter::JobsCompleted => "jobs_completed",
+            Counter::Steals => "steals",
+            Counter::Retries => "retries",
+            Counter::Crashes => "crashes",
+            Counter::SpeculativeLaunches => "speculative_launches",
+            Counter::ReplicaLosers => "replica_losers",
+            Counter::BatchDraws => "batch_draws",
+            Counter::ArrivalDraws => "arrival_draws",
+            Counter::ExecutionDraws => "execution_draws",
+        }
+    }
+}
+
+/// Wall-clock phases profiled around the engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Config parsing, workload/model construction.
+    Setup,
+    /// Batched sample drawing (calendar stage pre-draws).
+    Sampling,
+    /// The main simulation / event loop.
+    Dispatch,
+    /// Cross-shard statistics merging.
+    StatsMerge,
+    /// File I/O (reports, traces, CSVs).
+    Io,
+}
+
+/// Number of [`Phase`] variants.
+pub const PHASE_COUNT: usize = 5;
+
+impl Phase {
+    /// Every phase, in report order.
+    pub const ALL: [Phase; PHASE_COUNT] =
+        [Phase::Setup, Phase::Sampling, Phase::Dispatch, Phase::StatsMerge, Phase::Io];
+
+    /// Stable snake-case key used in `RUN_METRICS.json`.
+    pub fn key(self) -> &'static str {
+        match self {
+            Phase::Setup => "setup",
+            Phase::Sampling => "sampling",
+            Phase::Dispatch => "dispatch",
+            Phase::StatsMerge => "stats_merge",
+            Phase::Io => "io",
+        }
+    }
+}
+
+/// Raw always-on engine tallies (see module docs). Engines own one (or
+/// expose per-component counts) and the runner folds them into the
+/// registry at end of run via [`Metrics::absorb_tallies`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Tallies {
+    /// Calendar events processed.
+    pub events: u64,
+    /// Heap pushes (server heap or event heap).
+    pub heap_pushes: u64,
+    /// Heap pops.
+    pub heap_pops: u64,
+    /// Logical tasks dispatched.
+    pub dispatched: u64,
+    /// Jobs completed (warmup included).
+    pub jobs: u64,
+    /// Work-stealing steals.
+    pub steals: u64,
+    /// Failed-attempt retries.
+    pub retries: u64,
+    /// Worker crashes consumed.
+    pub crashes: u64,
+    /// Speculative backups launched.
+    pub spec_launches: u64,
+    /// Cancelled first-finish-wins replicas.
+    pub replica_losers: u64,
+    /// Dispatches per policy class (index = class).
+    pub class_dispatches: Vec<u64>,
+}
+
+impl Tallies {
+    /// Count one dispatch of a task routed to `class`.
+    #[inline]
+    pub fn class_dispatch(&mut self, class: usize) {
+        if class >= self.class_dispatches.len() {
+            self.class_dispatches.resize(class + 1, 0);
+        }
+        self.class_dispatches[class] += 1;
+    }
+
+    /// Fold another tally set into this one.
+    pub fn absorb(&mut self, other: &Tallies) {
+        self.events += other.events;
+        self.heap_pushes += other.heap_pushes;
+        self.heap_pops += other.heap_pops;
+        self.dispatched += other.dispatched;
+        self.jobs += other.jobs;
+        self.steals += other.steals;
+        self.retries += other.retries;
+        self.crashes += other.crashes;
+        self.spec_launches += other.spec_launches;
+        self.replica_losers += other.replica_losers;
+        if other.class_dispatches.len() > self.class_dispatches.len() {
+            self.class_dispatches.resize(other.class_dispatches.len(), 0);
+        }
+        for (a, b) in self.class_dispatches.iter_mut().zip(&other.class_dispatches) {
+            *a += *b;
+        }
+    }
+}
+
+/// Fixed-bucket log-spaced latency histogram: bucket `i` covers
+/// `[HIST_LO * 2^i, HIST_LO * 2^(i+1))` seconds; the first bucket also
+/// absorbs everything below `HIST_LO`, the last everything above.
+/// Fixed buckets make cross-shard merging a plain element-wise sum —
+/// no interpolation, bitwise deterministic in merge order.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Lower edge of the first histogram bucket (seconds).
+pub const HIST_LO: f64 = 1e-4;
+
+/// Fixed-bucket latency histogram (see [`HIST_BUCKETS`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FixedHistogram {
+    counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for FixedHistogram {
+    fn default() -> Self {
+        Self { counts: [0; HIST_BUCKETS] }
+    }
+}
+
+impl FixedHistogram {
+    /// Record one sample (seconds).
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        let idx = if x.is_finite() && x > HIST_LO {
+            ((x / HIST_LO).log2() as usize).min(HIST_BUCKETS - 1)
+        } else {
+            0
+        };
+        self.counts[idx] += 1;
+    }
+
+    /// Bucket counts.
+    pub fn counts(&self) -> &[u64; HIST_BUCKETS] {
+        &self.counts
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Lower edge of bucket `i` in seconds (`0.0` for the underflow
+    /// bucket's nominal edge).
+    pub fn bucket_lo(i: usize) -> f64 {
+        if i == 0 {
+            0.0
+        } else {
+            HIST_LO * (i as f64).exp2()
+        }
+    }
+
+    /// Element-wise sum merge.
+    pub fn merge(&mut self, other: &FixedHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+    }
+}
+
+/// A started (or inert) phase timer. Disabled registries hand out the
+/// inert variant — no `Instant::now` call, no syscall, nothing to drop.
+#[derive(Debug)]
+pub struct PhaseClock(Option<std::time::Instant>);
+
+impl PhaseClock {
+    /// An inert clock (the disabled path).
+    pub fn inert() -> Self {
+        PhaseClock(None)
+    }
+
+    /// Seconds since the clock started, or `None` for an inert clock.
+    pub fn elapsed_secs(&self) -> Option<f64> {
+        self.0.map(|t| t.elapsed().as_secs_f64())
+    }
+}
+
+/// The per-run (per-shard) metrics registry. Lock-free by construction:
+/// each shard owns its registry exclusively and the sharded runner
+/// merges them in shard-index order.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    enabled: bool,
+    counters: [u64; COUNTER_COUNT],
+    phases: [f64; PHASE_COUNT],
+    /// Dispatches per policy class (index = class; empty without a
+    /// policy).
+    pub class_dispatches: Vec<u64>,
+    /// Measured-job sojourn times.
+    pub sojourn_hist: FixedHistogram,
+    /// Measured-job waiting times.
+    pub waiting_hist: FixedHistogram,
+}
+
+impl Metrics {
+    /// An enabled registry.
+    pub fn enabled() -> Self {
+        Metrics { enabled: true, ..Metrics::default() }
+    }
+
+    /// A disabled registry: every recording method is a no-op and phase
+    /// clocks never read the system clock.
+    pub fn disabled() -> Self {
+        Metrics::default()
+    }
+
+    /// Is this registry recording?
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Add `n` to a counter (no-op when disabled).
+    #[inline]
+    pub fn add(&mut self, c: Counter, n: u64) {
+        if self.enabled {
+            self.counters[c as usize] += n;
+        }
+    }
+
+    /// Read a counter.
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// Fold an engine's raw tallies into the counters (no-op when
+    /// disabled).
+    pub fn absorb_tallies(&mut self, t: &Tallies) {
+        if !self.enabled {
+            return;
+        }
+        self.counters[Counter::EventsProcessed as usize] += t.events;
+        self.counters[Counter::HeapPushes as usize] += t.heap_pushes;
+        self.counters[Counter::HeapPops as usize] += t.heap_pops;
+        self.counters[Counter::TasksDispatched as usize] += t.dispatched;
+        self.counters[Counter::JobsCompleted as usize] += t.jobs;
+        self.counters[Counter::Steals as usize] += t.steals;
+        self.counters[Counter::Retries as usize] += t.retries;
+        self.counters[Counter::Crashes as usize] += t.crashes;
+        self.counters[Counter::SpeculativeLaunches as usize] += t.spec_launches;
+        self.counters[Counter::ReplicaLosers as usize] += t.replica_losers;
+        if t.class_dispatches.len() > self.class_dispatches.len() {
+            self.class_dispatches.resize(t.class_dispatches.len(), 0);
+        }
+        for (a, b) in self.class_dispatches.iter_mut().zip(&t.class_dispatches) {
+            *a += *b;
+        }
+    }
+
+    /// Record a measured job's sojourn time (no-op when disabled).
+    #[inline]
+    pub fn observe_sojourn(&mut self, x: f64) {
+        if self.enabled {
+            self.sojourn_hist.record(x);
+        }
+    }
+
+    /// Record a measured job's waiting time (no-op when disabled).
+    #[inline]
+    pub fn observe_waiting(&mut self, x: f64) {
+        if self.enabled {
+            self.waiting_hist.record(x);
+        }
+    }
+
+    /// Start a phase clock. Disabled registries return an inert clock —
+    /// **no** `Instant::now` is taken on the no-op path.
+    #[inline]
+    pub fn phase_start(&self) -> PhaseClock {
+        if self.enabled {
+            PhaseClock(Some(std::time::Instant::now()))
+        } else {
+            PhaseClock::inert()
+        }
+    }
+
+    /// Close a phase clock into `phase` (no-op for inert clocks).
+    #[inline]
+    pub fn phase_add(&mut self, phase: Phase, clock: PhaseClock) {
+        if let Some(secs) = clock.elapsed_secs() {
+            self.phases[phase as usize] += secs;
+        }
+    }
+
+    /// Add raw seconds to a phase (no-op when disabled).
+    pub fn phase_add_secs(&mut self, phase: Phase, secs: f64) {
+        if self.enabled {
+            self.phases[phase as usize] += secs;
+        }
+    }
+
+    /// Seconds accumulated in `phase`.
+    pub fn phase_seconds(&self, phase: Phase) -> f64 {
+        self.phases[phase as usize]
+    }
+
+    /// Phase seconds in [`Phase::ALL`] order.
+    pub fn phases_array(&self) -> [f64; PHASE_COUNT] {
+        self.phases
+    }
+
+    /// Merge another registry (shard-index order in the sharded runner).
+    /// Counters, phases and histograms sum; an enabled side wins.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.enabled |= other.enabled;
+        for (a, b) in self.counters.iter_mut().zip(&other.counters) {
+            *a += *b;
+        }
+        for (a, b) in self.phases.iter_mut().zip(&other.phases) {
+            *a += *b;
+        }
+        if other.class_dispatches.len() > self.class_dispatches.len() {
+            self.class_dispatches.resize(other.class_dispatches.len(), 0);
+        }
+        for (a, b) in self.class_dispatches.iter_mut().zip(&other.class_dispatches) {
+            *a += *b;
+        }
+        self.sojourn_hist.merge(&other.sojourn_hist);
+        self.waiting_hist.merge(&other.waiting_hist);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let mut m = Metrics::disabled();
+        m.add(Counter::Steals, 7);
+        m.observe_sojourn(1.0);
+        let c = m.phase_start();
+        assert!(c.elapsed_secs().is_none());
+        m.phase_add(Phase::Dispatch, c);
+        m.phase_add_secs(Phase::Io, 3.0);
+        assert_eq!(m.counter(Counter::Steals), 0);
+        assert_eq!(m.sojourn_hist.total(), 0);
+        assert_eq!(m.phase_seconds(Phase::Dispatch), 0.0);
+        assert_eq!(m.phase_seconds(Phase::Io), 0.0);
+    }
+
+    #[test]
+    fn tallies_fold_into_counters() {
+        let mut t = Tallies { dispatched: 10, retries: 2, ..Tallies::default() };
+        t.class_dispatch(1);
+        t.class_dispatch(1);
+        let mut m = Metrics::enabled();
+        m.absorb_tallies(&t);
+        assert_eq!(m.counter(Counter::TasksDispatched), 10);
+        assert_eq!(m.counter(Counter::Retries), 2);
+        assert_eq!(m.class_dispatches, vec![0, 2]);
+    }
+
+    #[test]
+    fn merge_sums_and_enables() {
+        let mut a = Metrics::disabled();
+        let mut b = Metrics::enabled();
+        b.add(Counter::HeapPushes, 3);
+        b.observe_waiting(0.5);
+        b.phase_add_secs(Phase::Setup, 1.5);
+        a.merge(&b);
+        assert!(a.is_enabled());
+        assert_eq!(a.counter(Counter::HeapPushes), 3);
+        assert_eq!(a.waiting_hist.total(), 1);
+        assert_eq!(a.phase_seconds(Phase::Setup), 1.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        let mut h = FixedHistogram::default();
+        h.record(0.0); // underflow
+        h.record(HIST_LO * 3.0); // bucket 1
+        h.record(f64::INFINITY); // clamps to last
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.counts()[0], 1);
+        assert_eq!(h.counts()[1], 1);
+        assert_eq!(h.counts()[HIST_BUCKETS - 1], 1);
+        let mut g = h.clone();
+        g.merge(&h);
+        assert_eq!(g.total(), 6);
+        assert!(FixedHistogram::bucket_lo(1) > 0.0);
+    }
+
+    #[test]
+    fn counter_and_phase_keys_are_unique() {
+        let keys: std::collections::BTreeSet<_> =
+            Counter::ALL.iter().map(|c| c.key()).collect();
+        assert_eq!(keys.len(), COUNTER_COUNT);
+        let pkeys: std::collections::BTreeSet<_> =
+            Phase::ALL.iter().map(|p| p.key()).collect();
+        assert_eq!(pkeys.len(), PHASE_COUNT);
+    }
+
+    #[test]
+    fn tallies_absorb_resizes_classes() {
+        let mut a = Tallies::default();
+        let mut b = Tallies::default();
+        b.class_dispatch(2);
+        a.absorb(&b);
+        assert_eq!(a.class_dispatches, vec![0, 0, 1]);
+    }
+}

@@ -1,0 +1,113 @@
+//! `--progress` heartbeat: a throttled stderr line with jobs done,
+//! jobs/sec, ETA, and per-shard lag. Print-on-tick — no background
+//! thread: the runner calls [`tick`] every few hundred measured jobs
+//! and the line is emitted at most once a second. The state is a
+//! process-global mutex because shards tick concurrently from the
+//! thread pool; the lock is taken only on tick boundaries (every
+//! [`TICK_JOBS`] jobs per shard), never per job, and never at all
+//! unless `--progress` was requested. The heartbeat reads only
+//! wall-clock time and shard completion counts — it consumes no RNG
+//! draws and cannot affect simulation output.
+
+use crate::util::logging::stderr_line;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Jobs between [`tick`] calls in the runner (per shard).
+pub const TICK_JOBS: usize = 512;
+
+struct ProgressState {
+    total: u64,
+    done: Vec<u64>,
+    started: Instant,
+    last_print: Option<Instant>,
+}
+
+static STATE: Mutex<Option<ProgressState>> = Mutex::new(None);
+
+/// Begin a progress session for `total` measured jobs across `shards`
+/// shards. Replaces any previous session.
+pub fn start(total: u64, shards: usize) {
+    let mut st = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    *st = Some(ProgressState {
+        total,
+        done: vec![0; shards.max(1)],
+        started: Instant::now(),
+        last_print: None,
+    });
+}
+
+fn render(st: &ProgressState) -> String {
+    let done: u64 = st.done.iter().sum();
+    let secs = st.started.elapsed().as_secs_f64().max(1e-9);
+    let rate = done as f64 / secs;
+    let eta = if rate > 0.0 && done < st.total {
+        (st.total - done) as f64 / rate
+    } else {
+        0.0
+    };
+    let lag = match (st.done.iter().max(), st.done.iter().min()) {
+        (Some(max), Some(min)) if st.done.len() > 1 => max - min,
+        _ => 0,
+    };
+    format!(
+        "jobs {done}/{} ({rate:.0} jobs/s, eta {eta:.0}s, shard lag {lag})",
+        st.total
+    )
+}
+
+/// Update shard `shard`'s completed-job count and emit the heartbeat if
+/// at least a second has passed since the last line. No-op without an
+/// active session.
+pub fn tick(shard: usize, done: u64) {
+    let mut guard = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(st) = guard.as_mut() else {
+        return;
+    };
+    if shard < st.done.len() {
+        st.done[shard] = done;
+    }
+    let due = match st.last_print {
+        None => true,
+        Some(t) => t.elapsed().as_secs_f64() >= 1.0,
+    };
+    if due {
+        st.last_print = Some(Instant::now());
+        let line = render(st);
+        stderr_line("PROG ", "obs::progress", &line);
+    }
+}
+
+/// Emit the final line and end the session. No-op without one.
+pub fn finish() {
+    let mut guard = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(st) = guard.take() {
+        let line = render(&st);
+        stderr_line("PROG ", "obs::progress", &format!("{line} — done"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_is_safe_and_lag_tracks_shards() {
+        finish(); // no session: no-op
+        tick(0, 10); // no session: no-op
+        start(100, 4);
+        tick(0, 30);
+        tick(1, 10);
+        tick(7, 5); // out-of-range shard ignored
+        {
+            let guard = STATE.lock().unwrap();
+            let st = guard.as_ref().expect("session active");
+            assert_eq!(st.done.iter().sum::<u64>(), 40);
+            let line = render(st);
+            assert!(line.contains("jobs 40/100"), "{line}");
+            assert!(line.contains("shard lag 30"), "{line}");
+        }
+        finish();
+        assert!(STATE.lock().unwrap().is_none());
+    }
+}

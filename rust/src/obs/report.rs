@@ -1,0 +1,290 @@
+//! `RUN_METRICS.json` — the schema-v1 run report shared by every
+//! command surface (`simulate`, `approx` sweeps, `bench`, `trace`,
+//! `emulate`, `profile`): counters, phase wall-times, throughput, and a
+//! peak-RSS estimate. Hand-rolled writer *and* parser (the offline
+//! registry has no serde); the parser exists so reports can be
+//! round-trip-tested and consumed by the CI smoke job.
+
+use super::{Counter, FixedHistogram, Metrics, Phase, HIST_BUCKETS};
+use std::collections::BTreeMap;
+
+/// Report schema version.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Peak resident set size of this process in bytes, from
+/// `/proc/self/status` (`VmHWM`). Returns 0 where the file or field is
+/// unavailable (non-Linux) — the report field is an estimate, not a
+/// guarantee.
+pub fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+fn render_hist(h: &FixedHistogram) -> String {
+    let counts: Vec<String> = h.counts().iter().map(|c| c.to_string()).collect();
+    format!("[{}]", counts.join(", "))
+}
+
+/// Serialize a registry into the schema-v1 report.
+pub fn render(source: &str, m: &Metrics, jobs: u64, wall_seconds: f64) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
+    s.push_str(&format!("  \"source\": \"{source}\",\n"));
+    s.push_str("  \"counters\": {\n");
+    for (i, c) in Counter::ALL.iter().enumerate() {
+        let sep = if i + 1 < Counter::ALL.len() { "," } else { "" };
+        s.push_str(&format!("    \"{}\": {}{sep}\n", c.key(), m.counter(*c)));
+    }
+    s.push_str("  },\n");
+    let classes: Vec<String> = m.class_dispatches.iter().map(|c| c.to_string()).collect();
+    s.push_str(&format!("  \"class_dispatches\": [{}],\n", classes.join(", ")));
+    s.push_str("  \"phases\": {\n");
+    for (i, p) in Phase::ALL.iter().enumerate() {
+        let sep = if i + 1 < Phase::ALL.len() { "," } else { "" };
+        s.push_str(&format!("    \"{}\": {}{sep}\n", p.key(), m.phase_seconds(*p)));
+    }
+    s.push_str("  },\n");
+    let rate = if wall_seconds > 0.0 { jobs as f64 / wall_seconds } else { 0.0 };
+    s.push_str("  \"throughput\": {\n");
+    s.push_str(&format!("    \"jobs\": {jobs},\n"));
+    s.push_str(&format!("    \"wall_seconds\": {wall_seconds},\n"));
+    s.push_str(&format!("    \"jobs_per_sec\": {rate}\n"));
+    s.push_str("  },\n");
+    s.push_str(&format!("  \"peak_rss_bytes\": {},\n", peak_rss_bytes()));
+    s.push_str("  \"histograms\": {\n");
+    s.push_str(&format!(
+        "    \"sojourn_seconds\": {},\n",
+        render_hist(&m.sojourn_hist)
+    ));
+    s.push_str(&format!(
+        "    \"waiting_seconds\": {}\n",
+        render_hist(&m.waiting_hist)
+    ));
+    s.push_str("  }\n}\n");
+    s
+}
+
+/// Write the report to `path`.
+pub fn write_file(
+    path: &str,
+    source: &str,
+    m: &Metrics,
+    jobs: u64,
+    wall_seconds: f64,
+) -> Result<(), String> {
+    std::fs::write(path, render(source, m, jobs, wall_seconds))
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+/// A parsed `RUN_METRICS.json` document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ParsedReport {
+    /// `schema_version`.
+    pub schema_version: u64,
+    /// Producing command (`simulate`, `sweep`, `bench`, ...).
+    pub source: String,
+    /// Counter key → value.
+    pub counters: BTreeMap<String, u64>,
+    /// Dispatches per policy class.
+    pub class_dispatches: Vec<u64>,
+    /// Phase key → wall seconds.
+    pub phases: BTreeMap<String, f64>,
+    /// Measured jobs.
+    pub jobs: u64,
+    /// Wall seconds.
+    pub wall_seconds: f64,
+    /// jobs / wall_seconds.
+    pub jobs_per_sec: f64,
+    /// Peak RSS estimate.
+    pub peak_rss_bytes: u64,
+    /// Sojourn histogram bucket counts (empty if absent).
+    pub sojourn_hist: Vec<u64>,
+    /// Waiting histogram bucket counts (empty if absent).
+    pub waiting_hist: Vec<u64>,
+}
+
+/// Slice out the object body following `"key": {`, assuming no nested
+/// braces inside (true for every object this schema emits).
+fn object_body<'a>(compact: &'a str, key: &str) -> Result<&'a str, String> {
+    let needle = format!("\"{key}\":{{");
+    let at = compact
+        .find(&needle)
+        .ok_or_else(|| format!("RUN_METRICS.json: missing \"{key}\" object"))?;
+    let start = at + needle.len();
+    let end = compact[start..]
+        .find('}')
+        .ok_or_else(|| format!("RUN_METRICS.json: unterminated \"{key}\" object"))?;
+    Ok(&compact[start..start + end])
+}
+
+/// Slice out the array body following `"key": [`.
+fn array_body<'a>(compact: &'a str, key: &str) -> Result<&'a str, String> {
+    let needle = format!("\"{key}\":[");
+    let at = compact
+        .find(&needle)
+        .ok_or_else(|| format!("RUN_METRICS.json: missing \"{key}\" array"))?;
+    let start = at + needle.len();
+    let end = compact[start..]
+        .find(']')
+        .ok_or_else(|| format!("RUN_METRICS.json: unterminated \"{key}\" array"))?;
+    Ok(&compact[start..start + end])
+}
+
+fn parse_u64_array(body: &str) -> Result<Vec<u64>, String> {
+    if body.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    body.split(',')
+        .map(|t| t.trim().parse::<u64>().map_err(|e| format!("RUN_METRICS.json: {e}")))
+        .collect()
+}
+
+/// `"k":v` pairs of a flat object body.
+fn parse_pairs(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for entry in body.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (k, v) = entry
+            .split_once(':')
+            .ok_or_else(|| format!("RUN_METRICS.json: bad entry {entry:?}"))?;
+        out.push((k.trim().trim_matches('"').to_string(), v.trim().to_string()));
+    }
+    Ok(out)
+}
+
+fn scalar(compact: &str, key: &str) -> Result<String, String> {
+    let needle = format!("\"{key}\":");
+    let at = compact
+        .find(&needle)
+        .ok_or_else(|| format!("RUN_METRICS.json: missing \"{key}\""))?;
+    let rest = &compact[at + needle.len()..];
+    let end = rest
+        .find(|c| matches!(c, ',' | '}' | ']'))
+        .unwrap_or(rest.len());
+    Ok(rest[..end].trim_matches('"').to_string())
+}
+
+/// Parse a schema-v1 report. Tolerant of whitespace/pretty-printing;
+/// unknown top-level keys are ignored.
+pub fn parse(text: &str) -> Result<ParsedReport, String> {
+    // Keys and numeric values in this schema contain no whitespace, so a
+    // whitespace strip yields a canonical compact form to scan.
+    let compact: String = text.chars().filter(|c| !c.is_whitespace()).collect();
+    let mut rep = ParsedReport {
+        schema_version: scalar(&compact, "schema_version")?
+            .parse()
+            .map_err(|e| format!("RUN_METRICS.json: schema_version: {e}"))?,
+        source: scalar(&compact, "source")?,
+        ..ParsedReport::default()
+    };
+    for (k, v) in parse_pairs(object_body(&compact, "counters")?)? {
+        rep.counters
+            .insert(k, v.parse().map_err(|e| format!("RUN_METRICS.json: counters: {e}"))?);
+    }
+    for (k, v) in parse_pairs(object_body(&compact, "phases")?)? {
+        rep.phases
+            .insert(k, v.parse().map_err(|e| format!("RUN_METRICS.json: phases: {e}"))?);
+    }
+    rep.class_dispatches = parse_u64_array(array_body(&compact, "class_dispatches")?)?;
+    let thr = object_body(&compact, "throughput")?;
+    for (k, v) in parse_pairs(thr)? {
+        match k.as_str() {
+            "jobs" => rep.jobs = v.parse().map_err(|e| format!("jobs: {e}"))?,
+            "wall_seconds" => {
+                rep.wall_seconds = v.parse().map_err(|e| format!("wall_seconds: {e}"))?
+            }
+            "jobs_per_sec" => {
+                rep.jobs_per_sec = v.parse().map_err(|e| format!("jobs_per_sec: {e}"))?
+            }
+            _ => {}
+        }
+    }
+    rep.peak_rss_bytes = scalar(&compact, "peak_rss_bytes")?
+        .parse()
+        .map_err(|e| format!("peak_rss_bytes: {e}"))?;
+    if let Ok(body) = array_body(&compact, "sojourn_seconds") {
+        rep.sojourn_hist = parse_u64_array(body)?;
+    }
+    if let Ok(body) = array_body(&compact, "waiting_seconds") {
+        rep.waiting_hist = parse_u64_array(body)?;
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tallies;
+
+    #[test]
+    fn render_parse_round_trip() {
+        let mut m = Metrics::enabled();
+        let mut t = Tallies {
+            dispatched: 4000,
+            jobs: 100,
+            retries: 7,
+            heap_pushes: 4100,
+            heap_pops: 4100,
+            ..Tallies::default()
+        };
+        t.class_dispatch(0);
+        t.class_dispatch(1);
+        m.absorb_tallies(&t);
+        m.observe_sojourn(0.25);
+        m.observe_waiting(0.125);
+        m.phase_add_secs(Phase::Setup, 0.5);
+        m.phase_add_secs(Phase::Dispatch, 2.0);
+        let text = render("simulate", &m, 100, 2.5);
+        let rep = parse(&text).unwrap();
+        assert_eq!(rep.schema_version, SCHEMA_VERSION);
+        assert_eq!(rep.source, "simulate");
+        assert_eq!(rep.counters["tasks_dispatched"], 4000);
+        assert_eq!(rep.counters["retries"], 7);
+        assert_eq!(rep.counters["jobs_completed"], 100);
+        // Every counter key is present, even at zero (CI asserts this).
+        for c in Counter::ALL {
+            assert!(rep.counters.contains_key(c.key()), "{}", c.key());
+        }
+        for p in Phase::ALL {
+            assert!(rep.phases.contains_key(p.key()), "{}", p.key());
+        }
+        assert_eq!(rep.class_dispatches, vec![1, 1]);
+        assert_eq!(rep.phases["setup"], 0.5);
+        assert_eq!(rep.phases["dispatch"], 2.0);
+        assert_eq!(rep.jobs, 100);
+        assert_eq!(rep.wall_seconds, 2.5);
+        assert_eq!(rep.jobs_per_sec, 40.0);
+        assert_eq!(rep.sojourn_hist.len(), HIST_BUCKETS);
+        assert_eq!(rep.sojourn_hist.iter().sum::<u64>(), 1);
+        assert_eq!(rep.waiting_hist.iter().sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse("{}").is_err());
+        assert!(parse("not json").is_err());
+    }
+
+    #[test]
+    fn peak_rss_probe_is_safe() {
+        // On Linux this is positive; elsewhere it degrades to 0.
+        let _ = peak_rss_bytes();
+    }
+}

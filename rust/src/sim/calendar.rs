@@ -47,6 +47,7 @@
 
 use super::{FaultInjector, JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
 use crate::config::{PolicyConfig, PolicyKind};
+use crate::obs::Tallies;
 use crate::trace::cause;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -313,6 +314,15 @@ pub struct Calendar {
     /// Dispatch counter: each attempt gets a unique sequence number so
     /// crashes and speculation races can invalidate its pending events.
     dseq: u64,
+    /// Raw obs tallies for the current run (reset on every [`Calendar::run`]).
+    /// Plain u64 increments on paths the engine already branches through —
+    /// cheaper than gating, and they consume no RNG.
+    tallies: Tallies,
+    /// Measure wall time spent pre-drawing stage samples (the Sampling
+    /// phase). Off by default: the hot path then never reads the clock.
+    profile: bool,
+    /// Seconds accumulated in `enqueue_stage` under `profile`.
+    sampling_secs: f64,
 }
 
 impl Calendar {
@@ -344,6 +354,9 @@ impl Calendar {
             running: Vec::new(),
             down: Vec::new(),
             dseq: 0,
+            tallies: Tallies::default(),
+            profile: false,
+            sampling_secs: 0.0,
         }
     }
 
@@ -370,8 +383,33 @@ impl Calendar {
         self
     }
 
+    /// Time the Sampling phase (wall clock spent pre-drawing stage
+    /// samples) during `run`. Disabled engines never read the clock.
+    pub fn with_profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
+    /// Raw obs tallies for the most recent [`Calendar::run`]. Crashes are
+    /// consumed through the injector's `consume_crash` on this engine, so
+    /// its count is folded in here.
+    pub fn tallies(&self) -> Tallies {
+        let mut t = self.tallies.clone();
+        if let Some(fi) = &self.faults {
+            t.crashes += fi.crash_count();
+        }
+        t
+    }
+
+    /// Wall-clock seconds the most recent run spent pre-drawing stage
+    /// samples (0 unless [`Calendar::with_profile`] was enabled).
+    pub fn sampling_seconds(&self) -> f64 {
+        self.sampling_secs
+    }
+
     fn push_event(&mut self, time: f64, kind: EventKind) {
         self.seq += 1;
+        self.tallies.heap_pushes += 1;
         self.heap.push(Event { time, seq: self.seq, kind });
     }
 
@@ -406,6 +444,8 @@ impl Calendar {
         self.down.clear();
         self.down.resize(self.servers, false);
         self.dseq = 0;
+        self.tallies = Tallies::default();
+        self.sampling_secs = 0.0;
         if let Some(p) = &mut self.policy {
             p.next = 0;
         }
@@ -432,6 +472,8 @@ impl Calendar {
         self.push_event(t0, EventKind::Arrival(0));
 
         while let Some(ev) = self.heap.pop() {
+            self.tallies.events += 1;
+            self.tallies.heap_pops += 1;
             match ev.kind {
                 EventKind::Arrival(j) => self.on_arrival(ev.time, j, workload, overhead),
                 EventKind::TaskFinish { server, slot, dseq } => {
@@ -517,6 +559,7 @@ impl Calendar {
             Some(p) if p.kind == PolicyKind::WorkSteal => now + p.threshold,
             _ => f64::INFINITY,
         };
+        let sample_t0 = if self.profile { Some(std::time::Instant::now()) } else { None };
         let js = &mut self.jobs[slot as usize];
         js.to_dispatch = count;
         if !overhead.enabled() {
@@ -555,6 +598,9 @@ impl Calendar {
             }
             if steal_at.is_finite() {
                 self.push_event(steal_at, EventKind::StealTick);
+            }
+            if let Some(t) = sample_t0 {
+                self.sampling_secs += t.elapsed().as_secs_f64();
             }
             return;
         }
@@ -595,6 +641,9 @@ impl Calendar {
         }
         if steal_at.is_finite() {
             self.push_event(steal_at, EventKind::StealTick);
+        }
+        if let Some(t) = sample_t0 {
+            self.sampling_secs += t.elapsed().as_secs_f64();
         }
     }
 
@@ -659,6 +708,7 @@ impl Calendar {
         // charge its wall time as redundant work.
         if let Some(p) = run.partner {
             if let Some(loser) = self.running[p as usize].take() {
+                self.tallies.replica_losers += 1;
                 let js = &mut self.jobs[slot as usize];
                 js.redundant += now - loser.start;
                 if trace.is_enabled() {
@@ -687,6 +737,7 @@ impl Calendar {
             // a freshly charged task overhead (Sec. 2.6 re-charge).
             let oh = fi.retry_overhead(overhead);
             let delay = fi.config().backoff_delay(attempt);
+            self.tallies.retries += 1;
             let js = &mut self.jobs[slot as usize];
             js.lost += now - run.start;
             js.retries += 1;
@@ -807,6 +858,7 @@ impl Calendar {
         let Some(backup_server) = self.idle.pop() else {
             return;
         };
+        self.tallies.spec_launches += 1;
         let fi = self.faults.as_mut().expect("speculation without injector");
         let (exec, oh) = fi.backup_draws(workload, overhead);
         self.dseq += 1;
@@ -869,6 +921,7 @@ impl Calendar {
     /// Record a completed fork-join job departing at `now + pd` and
     /// retire its slot.
     fn complete_job(&mut self, now: f64, slot: u32, pd: f64) {
+        self.tallies.jobs += 1;
         let js = &self.jobs[slot as usize];
         self.completed.push(JobRecord {
             index: js.index as usize,
@@ -889,6 +942,7 @@ impl Calendar {
     /// instant already includes the pre-departure overhead) and retire
     /// the slot.
     fn record_departure(&mut self, time: f64, slot: u32) {
+        self.tallies.jobs += 1;
         let js = &self.jobs[slot as usize];
         self.completed.push(JobRecord {
             index: js.index as usize,
@@ -926,6 +980,7 @@ impl Calendar {
             let rt = *rt;
             self.ready.pop_front();
             let server = self.idle.pop().expect("checked non-empty");
+            self.tallies.dispatched += 1;
             let js = &mut self.jobs[rt.slot as usize];
             js.to_dispatch -= 1;
             js.outstanding += 1;
@@ -999,6 +1054,12 @@ impl Calendar {
                 Some(idx) => {
                     let rt = self.ready.remove(idx).expect("index from position");
                     self.idle.swap_remove(i);
+                    let p = self.policy.as_ref().expect("policy dispatch");
+                    if p.kind == PolicyKind::WorkSteal && rt.affinity != server {
+                        self.tallies.steals += 1;
+                    }
+                    self.tallies.dispatched += 1;
+                    self.tallies.class_dispatch(rt.class as usize);
                     self.start_task(now, server, rt, trace);
                     // Don't advance: swap_remove moved a new server here.
                 }
@@ -1151,6 +1212,28 @@ mod tests {
         assert!(staged > single, "barrier must cost: {staged} !> {single}");
     }
 
+    /// Raw tallies track the run's event flow and reset between runs;
+    /// the profile clock only measures when enabled.
+    #[test]
+    fn tallies_and_profile_track_run() {
+        let mut cal =
+            Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4]).with_profile(true);
+        let mut w = workload(10.0, 1.0, 1);
+        let oh = OverheadModel::none();
+        let mut tr = TraceLog::disabled();
+        let recs = cal.run(3, &mut w, &oh, &mut tr);
+        assert_eq!(recs.len(), 3);
+        let t = cal.tallies();
+        assert_eq!(t.jobs, 3);
+        assert_eq!(t.dispatched, 12, "3 jobs × 4 tasks");
+        assert_eq!(t.heap_pushes, t.heap_pops, "every event pushed is popped");
+        assert_eq!(t.events, t.heap_pops);
+        assert!(cal.sampling_seconds() >= 0.0);
+        // A second run resets the tallies instead of accumulating.
+        cal.run(3, &mut workload(10.0, 1.0, 1), &oh, &mut tr);
+        assert_eq!(cal.tallies().jobs, 3);
+    }
+
     /// Retired job slots are recycled: a long lightly-loaded run keeps
     /// the slab at the in-flight width, not the run length.
     #[test]
@@ -1217,6 +1300,7 @@ mod tests {
         let lost: f64 = recs.iter().map(|r| r.lost_work).sum();
         assert!(retries > 0, "p=0.6 over 120 tasks must retry");
         assert!(lost > 0.0);
+        assert_eq!(cal.tallies().retries, u64::from(retries));
         for r in &recs {
             assert!(r.departure >= r.arrival);
         }
@@ -1243,6 +1327,9 @@ mod tests {
             assert!((r.redundant_work - 0.5).abs() < 1e-12, "{}", r.redundant_work);
             assert_eq!(r.retries, 0);
         }
+        let t = cal.tallies();
+        assert_eq!(t.spec_launches, 3, "every task is hedged");
+        assert_eq!(t.replica_losers, 3, "every backup loses the race");
     }
 
     /// An FCFS (or absent) policy builds no routing table: the run is

@@ -85,6 +85,12 @@ pub struct FaultInjector {
     /// Absolute speculation deadline (seconds of service time);
     /// `INFINITY` when speculation is off.
     spec_deadline: f64,
+    // Raw tallies for the obs layer: crashes consumed, retry attempts,
+    // and speculative backups that actually started. Unconditional u64
+    // increments off the hot path; no RNG, no behavior change.
+    n_crashes: u64,
+    n_retries: u64,
+    n_spec: u64,
 }
 
 #[inline]
@@ -126,7 +132,45 @@ impl FaultInjector {
         } else {
             f64::INFINITY
         };
-        Self { cfg, next_crash, worker_rng, task_rng, spec_deadline }
+        Self {
+            cfg,
+            next_crash,
+            worker_rng,
+            task_rng,
+            spec_deadline,
+            n_crashes: 0,
+            n_retries: 0,
+            n_spec: 0,
+        }
+    }
+
+    /// Crashes consumed since construction (both the recursion engines'
+    /// [`FaultInjector::crash_within`] path and the calendar's
+    /// [`FaultInjector::consume_crash`] path — each crash is consumed on
+    /// exactly one of them).
+    #[inline]
+    pub fn crash_count(&self) -> u64 {
+        self.n_crashes
+    }
+
+    /// Retry attempts tallied by the injector's own dispatchers (the
+    /// calendar engine runs its own retry loop and tallies separately).
+    #[inline]
+    pub fn retry_count(&self) -> u64 {
+        self.n_retries
+    }
+
+    /// Speculative backup copies that actually started.
+    #[inline]
+    pub fn spec_count(&self) -> u64 {
+        self.n_spec
+    }
+
+    /// Tally one retry attempt resolved outside the injector's own
+    /// dispatch loops (the redundancy dispatcher's attempt loop).
+    #[inline]
+    pub(crate) fn note_retry(&mut self) {
+        self.n_retries += 1;
     }
 
     /// The fault parameters in use.
@@ -170,6 +214,7 @@ impl FaultInjector {
             return None;
         }
         debug_assert!(c > start, "crash schedule not resolved via up_at");
+        self.n_crashes += 1;
         let up = c + draw_exp(&mut self.worker_rng[w], self.cfg.mttr);
         self.next_crash[w] = up + draw_exp(&mut self.worker_rng[w], self.cfg.mtbf);
         Some((c, up))
@@ -188,6 +233,7 @@ impl FaultInjector {
         let w = server as usize;
         let c = self.next_crash[w];
         debug_assert!(c.is_finite(), "consume_crash with crashes disabled");
+        self.n_crashes += 1;
         let up = c + draw_exp(&mut self.worker_rng[w], self.cfg.mttr);
         self.next_crash[w] = up + draw_exp(&mut self.worker_rng[w], self.cfg.mtbf);
         (up, self.next_crash[w])
@@ -299,6 +345,7 @@ impl FaultInjector {
                     });
                 }
                 retries += 1;
+                self.n_retries += 1;
                 continue;
             }
 
@@ -317,6 +364,11 @@ impl FaultInjector {
                     self.up_at(server_b, if launch > t_free_b { launch } else { t_free_b });
                 let (bexec, boh) = self.backup_draws(workload, overhead);
                 let bfinish = bstart + bexec + boh;
+                // A backup "launched" iff it started before the primary
+                // finished (bfinish < finish implies bstart < finish).
+                if bstart < finish {
+                    self.n_spec += 1;
+                }
                 if bfinish < finish {
                     // Backup wins; cancel the primary at that instant.
                     redundant += bfinish - start;
@@ -390,6 +442,7 @@ impl FaultInjector {
                     });
                 }
                 retries += 1;
+                self.n_retries += 1;
                 retry_floor = win_finish + self.cfg.backoff_delay(failed_attempts);
                 oh = self.retry_overhead(overhead);
                 continue;
@@ -477,6 +530,7 @@ impl FaultInjector {
                     });
                 }
                 retries += 1;
+                self.n_retries += 1;
                 continue;
             }
 
@@ -501,6 +555,7 @@ impl FaultInjector {
                     });
                 }
                 retries += 1;
+                self.n_retries += 1;
                 retry_floor = finish + self.cfg.backoff_delay(failed_attempts);
                 oh = self.retry_overhead(overhead);
                 continue;
@@ -650,6 +705,9 @@ mod tests {
         let mut tr = TraceLog::enabled();
         let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
         assert_eq!(out.retries, 3);
+        assert_eq!(fi.retry_count(), 3);
+        assert_eq!(fi.crash_count(), 0);
+        assert_eq!(fi.spec_count(), 0);
         assert!((out.overhead - 4.0 * 0.25).abs() < 1e-12, "{}", out.overhead);
         assert!((out.lost - 3.0 * 1.25).abs() < 1e-12, "{}", out.lost);
         assert_eq!(out.work, 1.0);
@@ -705,6 +763,7 @@ mod tests {
         let out = fi.dispatch_task(&mut heap, 0.0, &mut w, &oh, 0, 0, &mut tr);
         assert_eq!(out.finish, 1.0);
         assert_eq!(out.retries, 0);
+        assert_eq!(fi.spec_count(), 1);
         assert!((out.redundant - 0.5).abs() < 1e-12, "{}", out.redundant);
         let loser = tr.events().iter().find(|e| !e.winner).unwrap();
         assert_eq!(loser.cause, cause::SPECULATION);

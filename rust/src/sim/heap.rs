@@ -11,13 +11,18 @@
 pub struct ServerHeap {
     // (free_time, server_id), heap-ordered by free_time.
     slots: Vec<(f64, u32)>,
+    // Raw op tallies for the obs layer. Unconditional u64 increments on
+    // the hot path are cheaper than a would-be enabled-check branch, so
+    // metrics-off runs pay nothing they would not pay anyway.
+    pushes: u64,
+    pops: u64,
 }
 
 impl ServerHeap {
     /// Heap of `l` servers, all free at time `t0`.
     pub fn new(l: usize, t0: f64) -> Self {
         assert!(l >= 1, "at least one server");
-        Self { slots: (0..l).map(|i| (t0, i as u32)).collect() }
+        Self { slots: (0..l).map(|i| (t0, i as u32)).collect(), pushes: 0, pops: 0 }
     }
 
     /// Heap over an explicit set of global server ids, all free at `t0` —
@@ -28,7 +33,17 @@ impl ServerHeap {
         let slots: Vec<(f64, u32)> = ids.into_iter().map(|i| (t0, i)).collect();
         assert!(!slots.is_empty(), "at least one server");
         // Equal keys: already a valid heap.
-        Self { slots }
+        Self { slots, pushes: 0, pops: 0 }
+    }
+
+    /// Raw (pushes, pops) op tallies since construction. An [`assign`]
+    /// counts as one pop plus one push (it is the fused form of the
+    /// pop/push pair the redundancy dispatcher performs explicitly).
+    ///
+    /// [`assign`]: ServerHeap::assign
+    #[inline]
+    pub fn ops(&self) -> (u64, u64) {
+        (self.pushes, self.pops)
     }
 
     /// Number of servers.
@@ -54,6 +69,8 @@ impl ServerHeap {
     /// Returns the server id that received the task.
     #[inline]
     pub fn assign(&mut self, new_time: f64) -> u32 {
+        self.pops += 1;
+        self.pushes += 1;
         let id = self.slots[0].1;
         self.slots[0].0 = new_time;
         self.sift_down(0);
@@ -77,6 +94,7 @@ impl ServerHeap {
         if self.slots.is_empty() {
             return None;
         }
+        self.pops += 1;
         let root = self.slots[0];
         let last = self.slots.pop().expect("non-empty");
         if !self.slots.is_empty() {
@@ -89,6 +107,7 @@ impl ServerHeap {
     /// Re-insert a server with its new free time.
     #[inline]
     pub fn push(&mut self, free_time: f64, server: u32) {
+        self.pushes += 1;
         self.slots.push((free_time, server));
         self.sift_up(self.slots.len() - 1);
     }
@@ -271,6 +290,19 @@ mod tests {
         }
         ids.sort_unstable();
         assert_eq!(ids, vec![4, 7, 9]);
+    }
+
+    #[test]
+    fn op_tallies_count_assign_pop_push() {
+        let mut h = ServerHeap::new(3, 0.0);
+        assert_eq!(h.ops(), (0, 0));
+        h.assign(1.0); // fused pop+push
+        assert_eq!(h.ops(), (1, 1));
+        let (t, id) = h.pop();
+        h.push(t + 1.0, id);
+        assert_eq!(h.ops(), (2, 2));
+        assert!(h.try_pop().is_some());
+        assert_eq!(h.ops(), (2, 3));
     }
 
     #[test]

@@ -23,13 +23,20 @@ pub struct ForkJoinPerServer {
     /// this model at config validation). `None` keeps the fault-free
     /// paths bit-for-bit unchanged.
     faults: Option<FaultInjector>,
+    /// Raw obs tallies (jobs, dispatches).
+    tallies: crate::obs::Tallies,
 }
 
 impl ForkJoinPerServer {
     /// New model with `l` servers.
     pub fn new(l: usize) -> Self {
         assert!(l >= 1);
-        Self { free: vec![0.0; l], scenario: None, faults: None }
+        Self {
+            free: vec![0.0; l],
+            scenario: None,
+            faults: None,
+            tallies: crate::obs::Tallies::default(),
+        }
     }
 
     /// Attach a heterogeneous-worker / redundancy scenario.
@@ -150,6 +157,9 @@ impl ForkJoinPerServer {
                 first_start = first_start.min(start);
                 if j != win {
                     redundant_sum += t_win - start;
+                    // Losers resolve inline here (not via the Scenario
+                    // dispatcher), so tally them on the model.
+                    self.tallies.replica_losers += 1;
                 }
                 if trace.is_enabled() {
                     trace.record(TraceEvent {
@@ -194,6 +204,8 @@ impl Model for ForkJoinPerServer {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> JobRecord {
+        self.tallies.jobs += 1;
+        self.tallies.dispatched += self.free.len() as u64;
         if self.faults.is_some() {
             return self.advance_faulty(n, arrival, workload, overhead, trace);
         }
@@ -246,6 +258,21 @@ impl Model for ForkJoinPerServer {
 
     fn name(&self) -> &'static str {
         "fork-join-per-server"
+    }
+
+    fn tallies(&self) -> crate::obs::Tallies {
+        // No ServerHeap here — per-server queues are a flat free-time
+        // vector, so the model contributes no heap ops.
+        let mut t = self.tallies.clone();
+        if let Some(sc) = &self.scenario {
+            t.replica_losers += sc.loser_count();
+        }
+        if let Some(fi) = &self.faults {
+            t.crashes += fi.crash_count();
+            t.retries += fi.retry_count();
+            t.spec_launches += fi.spec_count();
+        }
+        t
     }
 }
 

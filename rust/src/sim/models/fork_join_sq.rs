@@ -35,6 +35,8 @@ pub struct ForkJoinSingleQueue {
     /// Dispatch policy (SITA / priority / work stealing); `None` keeps
     /// the seed FCFS dispatch bit-for-bit unchanged.
     policy: Option<PolicyState>,
+    /// Raw obs tallies (jobs, dispatches, per-class routing).
+    tallies: crate::obs::Tallies,
 }
 
 impl ForkJoinSingleQueue {
@@ -49,6 +51,7 @@ impl ForkJoinSingleQueue {
             scenario: None,
             faults: None,
             policy: None,
+            tallies: crate::obs::Tallies::default(),
         }
     }
 
@@ -96,6 +99,8 @@ impl Model for ForkJoinSingleQueue {
         let mut retries_sum = 0u32;
         let mut last_finish = f64::NEG_INFINITY;
         let mut first_start = f64::INFINITY;
+        self.tallies.jobs += 1;
+        self.tallies.dispatched += self.k as u64;
 
         if let Some(pol) = &mut self.policy {
             // Policy routing (composing with scenario/faults per task);
@@ -111,6 +116,7 @@ impl Model for ForkJoinSingleQueue {
                     overhead,
                     trace,
                 );
+                self.tallies.class_dispatch(out.class as usize);
                 workload_sum += out.work;
                 overhead_sum += out.overhead;
                 redundant_sum += out.redundant;
@@ -255,6 +261,28 @@ impl Model for ForkJoinSingleQueue {
 
     fn name(&self) -> &'static str {
         "single-queue-fork-join"
+    }
+
+    fn tallies(&self) -> crate::obs::Tallies {
+        let mut t = self.tallies.clone();
+        let (pushes, pops) = self.heap.ops();
+        t.heap_pushes += pushes;
+        t.heap_pops += pops;
+        if let Some(sc) = &self.scenario {
+            t.replica_losers += sc.loser_count();
+        }
+        if let Some(fi) = &self.faults {
+            t.crashes += fi.crash_count();
+            t.retries += fi.retry_count();
+            t.spec_launches += fi.spec_count();
+        }
+        if let Some(pol) = &self.policy {
+            t.steals += pol.steal_count();
+            let (p, q) = pol.heap_ops();
+            t.heap_pushes += p;
+            t.heap_pops += q;
+        }
+        t
     }
 }
 

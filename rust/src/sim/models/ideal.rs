@@ -20,6 +20,8 @@ pub struct IdealPartition {
     /// rejects `replicas > 1` for this model.
     total_speed: f64,
     prev_departure: f64,
+    /// Raw obs tallies (jobs, dispatches — the `l` equisized shares).
+    tallies: crate::obs::Tallies,
 }
 
 impl IdealPartition {
@@ -27,7 +29,13 @@ impl IdealPartition {
     /// tasks on `l` servers.
     pub fn new(l: usize, k: usize) -> Self {
         assert!(l >= 1 && k >= 1);
-        Self { l, k, total_speed: l as f64, prev_departure: 0.0 }
+        Self {
+            l,
+            k,
+            total_speed: l as f64,
+            prev_departure: 0.0,
+            tallies: crate::obs::Tallies::default(),
+        }
     }
 
     /// Attach a heterogeneous-worker scenario (speeds only).
@@ -49,6 +57,8 @@ impl Model for IdealPartition {
         overhead: &OverheadModel,
         trace: &mut TraceLog,
     ) -> JobRecord {
+        self.tallies.jobs += 1;
+        self.tallies.dispatched += self.l as u64;
         let mut workload_sum = 0.0;
         for _ in 0..self.k {
             workload_sum += workload.next_execution();
@@ -102,6 +112,10 @@ impl Model for IdealPartition {
 
     fn name(&self) -> &'static str {
         "ideal"
+    }
+
+    fn tallies(&self) -> crate::obs::Tallies {
+        self.tallies.clone()
     }
 }
 

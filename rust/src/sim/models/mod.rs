@@ -30,4 +30,12 @@ pub trait Model {
 
     /// Human-readable model name.
     fn name(&self) -> &'static str;
+
+    /// Raw observability tallies accumulated so far (dispatches, heap
+    /// ops, fault/scenario/policy counts). The runner harvests this once
+    /// per run when `--metrics` is on; the default covers model
+    /// implementations that do not tally (e.g. trace replay).
+    fn tallies(&self) -> crate::obs::Tallies {
+        crate::obs::Tallies::default()
+    }
 }

@@ -29,6 +29,8 @@ pub struct SplitMerge {
     /// Dispatch policy (SITA / priority / work stealing); `None` keeps
     /// the seed FCFS dispatch bit-for-bit unchanged.
     policy: Option<PolicyState>,
+    /// Raw obs tallies (jobs, dispatches, per-class routing).
+    tallies: crate::obs::Tallies,
 }
 
 impl SplitMerge {
@@ -42,6 +44,7 @@ impl SplitMerge {
             scenario: None,
             faults: None,
             policy: None,
+            tallies: crate::obs::Tallies::default(),
         }
     }
 
@@ -104,6 +107,7 @@ impl SplitMerge {
                 overhead,
                 trace,
             );
+            self.tallies.class_dispatch(out.class as usize);
             workload_sum += out.work;
             overhead_sum += out.overhead;
             redundant_sum += out.redundant;
@@ -217,6 +221,8 @@ impl Model for SplitMerge {
         // Start barrier: job starts when it arrives AND the previous job
         // has departed; all servers are idle at that instant.
         let start = arrival.max(self.prev_departure);
+        self.tallies.jobs += 1;
+        self.tallies.dispatched += self.k as u64;
         if self.policy.is_some() {
             return self.advance_policy(n, arrival, start, workload, overhead, trace);
         }
@@ -299,6 +305,28 @@ impl Model for SplitMerge {
 
     fn name(&self) -> &'static str {
         "split-merge"
+    }
+
+    fn tallies(&self) -> crate::obs::Tallies {
+        let mut t = self.tallies.clone();
+        let (pushes, pops) = self.heap.ops();
+        t.heap_pushes += pushes;
+        t.heap_pops += pops;
+        if let Some(sc) = &self.scenario {
+            t.replica_losers += sc.loser_count();
+        }
+        if let Some(fi) = &self.faults {
+            t.crashes += fi.crash_count();
+            t.retries += fi.retry_count();
+            t.spec_launches += fi.spec_count();
+        }
+        if let Some(pol) = &self.policy {
+            t.steals += pol.steal_count();
+            let (p, q) = pol.heap_ops();
+            t.heap_pushes += p;
+            t.heap_pops += q;
+        }
+        t
     }
 }
 

@@ -110,6 +110,9 @@ pub enum PolicyState {
         free: Vec<f64>,
         /// Round-robin affinity cursor.
         next: usize,
+        /// Raw tally of tasks stolen away from their affinity server
+        /// (obs layer; no behavior change).
+        steals: u64,
     },
 }
 
@@ -156,6 +159,7 @@ impl PolicyState {
                 threshold: p.steal_threshold,
                 free: vec![0.0; cfg.servers],
                 next: 0,
+                steals: 0,
             })),
         }
     }
@@ -205,6 +209,27 @@ impl PolicyState {
             Self::WorkSteal { free, .. } => {
                 free.iter().copied().fold(f64::NEG_INFINITY, f64::max)
             }
+        }
+    }
+
+    /// Tasks stolen from their affinity server (0 outside work stealing).
+    pub fn steal_count(&self) -> u64 {
+        match self {
+            Self::WorkSteal { steals, .. } => *steals,
+            _ => 0,
+        }
+    }
+
+    /// Summed (pushes, pops) across every group sub-heap — the policy
+    /// partitions' share of the engine's heap traffic (work stealing
+    /// keeps a flat free-time vector, so its share is (0, 0)).
+    pub fn heap_ops(&self) -> (u64, u64) {
+        match self {
+            Self::Sita { groups, .. } | Self::Priority { groups, .. } => groups
+                .iter()
+                .map(ServerHeap::ops)
+                .fold((0, 0), |(a, b), (p, q)| (a + p, b + q)),
+            Self::WorkSteal { .. } => (0, 0),
         }
     }
 
@@ -291,7 +316,7 @@ impl PolicyState {
                     }
                 }
             }
-            Self::WorkSteal { threshold, free, next } => {
+            Self::WorkSteal { threshold, free, next, steals } => {
                 debug_assert!(
                     scenario.is_none(),
                     "work stealing rejects scenarios at validation"
@@ -309,6 +334,7 @@ impl PolicyState {
                 }
                 // Steal only when the affinity backlog is worth it.
                 let server = if free[affinity] - min_free > *threshold {
+                    *steals += 1;
                     min_idx
                 } else {
                     affinity
@@ -520,6 +546,8 @@ mod tests {
         let out = pol.dispatch_task(0.0, 0, 3, &mut sc, &mut fi, &mut w, &oh, &mut tr);
         assert_eq!(tr.events()[3].server, 1);
         assert!(out.finish < 10.0);
+        assert_eq!(pol.steal_count(), 1);
+        assert_eq!(pol.heap_ops(), (0, 0));
     }
 
     #[test]

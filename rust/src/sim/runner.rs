@@ -4,6 +4,7 @@
 use super::models::{ForkJoinPerServer, ForkJoinSingleQueue, IdealPartition, Model, SplitMerge};
 use super::{FaultInjector, JobRecord, OverheadModel, PolicyState, Scenario, TraceLog, Workload};
 use crate::config::{ModelKind, SimulationConfig};
+use crate::obs::{progress, Counter, Metrics, Phase};
 use crate::rng::spawn_seeds;
 use crate::stats::{QuantileEstimator, Summary};
 use crate::util::threadpool::ThreadPool;
@@ -43,6 +44,16 @@ pub struct RunOptions {
     /// results — shards merge in shard-index order regardless of which
     /// worker finished first.
     pub threads: usize,
+    /// Collect the obs registry (counters, phase timers, histograms)
+    /// into [`SimResult::metrics`]. Off by default; metrics consume no
+    /// RNG and never perturb results, so output is bitwise identical
+    /// either way (`rust/tests/obs_metrics.rs`).
+    pub metrics: bool,
+    /// Emit the `--progress` stderr heartbeat while running.
+    pub progress: bool,
+    /// This run's shard index in a sharded parent run (progress lag
+    /// attribution only; 0 for unsharded runs).
+    pub shard_index: usize,
 }
 
 /// Aggregated simulation output.
@@ -81,6 +92,9 @@ pub struct SimResult {
     pub trace: TraceLog,
     /// Wall-clock seconds spent simulating.
     pub wall_seconds: f64,
+    /// Obs registry for the run: counters, phase timers, and latency
+    /// histograms (disabled no-op unless [`RunOptions::metrics`]).
+    pub metrics: Metrics,
 }
 
 impl SimResult {
@@ -160,10 +174,14 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         0 => opts.threads.max(1),
         n => n,
     };
-    if shards <= 1 {
-        return run_single(cfg, &opts);
+    if opts.progress {
+        progress::start(cfg.jobs as u64, shards.max(1));
     }
-    run_sharded(cfg, &opts, shards)
+    let res = if shards <= 1 { run_single(cfg, &opts) } else { run_sharded(cfg, &opts, shards) };
+    if opts.progress {
+        progress::finish();
+    }
+    res
 }
 
 /// Split `jobs` into `shards` near-equal shares (the remainder lands on
@@ -197,12 +215,19 @@ fn run_sharded(
     // Never spin up more shards than measured jobs.
     let shards = shards.min(cfg.jobs).max(1);
     let seeds = spawn_seeds(cfg.seed, shards);
-    let shard_cfgs: Vec<SimulationConfig> = shard_shares(cfg.jobs, shards)
+    // Each shard carries its own options so the progress heartbeat can
+    // attribute lag to a shard index; everything else is shared.
+    let shard_inputs: Vec<(SimulationConfig, RunOptions)> = shard_shares(cfg.jobs, shards)
         .into_iter()
         .zip(seeds)
-        .map(|(share, seed)| SimulationConfig { jobs: share, seed, ..cfg.clone() })
+        .enumerate()
+        .map(|(i, (share, seed))| {
+            (
+                SimulationConfig { jobs: share, seed, ..cfg.clone() },
+                RunOptions { shards: 1, threads: 1, shard_index: i, ..*opts },
+            )
+        })
         .collect();
-    let shard_opts = RunOptions { shards: 1, threads: 1, ..*opts };
     let workers = match opts.threads {
         0 => {
             let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
@@ -212,7 +237,8 @@ fn run_sharded(
     }
     .max(1);
     let pool = ThreadPool::new(workers);
-    let results = pool.map(shard_cfgs, move |scfg| run_single(&scfg, &shard_opts))?;
+    let results = pool.map(shard_inputs, move |(scfg, sopts)| run_single(&scfg, &sopts))?;
+    let merge_t0 = if opts.metrics { Some(std::time::Instant::now()) } else { None };
     let mut merged: Option<SimResult> = None;
     for res in results {
         let res = res?;
@@ -232,10 +258,16 @@ fn run_sharded(
                 for (a, b) in acc.class_sojourn.iter_mut().zip(&res.class_sojourn) {
                     a.merge(b);
                 }
+                // Shard-index order: the pool returns results in input
+                // order, so the counter merge is deterministic.
+                acc.metrics.merge(&res.metrics);
             }
         }
     }
     let mut out = merged.expect("at least one shard");
+    if let Some(t) = merge_t0 {
+        out.metrics.phase_add_secs(Phase::StatsMerge, t.elapsed().as_secs_f64());
+    }
     // Echo the caller's config (not shard 0's slice) and report the
     // orchestration wall time, warmups included via the per-shard runs.
     out.config = cfg.clone();
@@ -247,6 +279,8 @@ fn run_sharded(
 fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, String> {
     cfg.validate()?;
     let t0 = std::time::Instant::now();
+    let mut metrics = if opts.metrics { Metrics::enabled() } else { Metrics::disabled() };
+    let setup_clock = metrics.phase_start();
     let mut workload = Workload::from_config(cfg)?;
     let overhead = OverheadModel::from_option(cfg.overhead);
     // Speculation deadlines are a multiple of the expected task service.
@@ -254,6 +288,7 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
     let faults = FaultInjector::from_config(cfg, expected_task);
     let mut model = build_model(cfg, opts, faults)?;
     let mut trace = if opts.trace { TraceLog::enabled() } else { TraceLog::disabled() };
+    metrics.phase_add(Phase::Setup, setup_clock);
 
     let total = cfg.warmup + cfg.jobs;
     let mut jobs = Vec::with_capacity(if opts.record_jobs { cfg.jobs } else { 0 });
@@ -273,6 +308,7 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
     let classes = cfg.policy.as_ref().map(|p| p.class_count()).unwrap_or(0);
     let mut class_sojourn: Vec<Summary> = (0..classes).map(|_| Summary::new()).collect();
 
+    let dispatch_clock = metrics.phase_start();
     for n in 0..total {
         let arrival = workload.next_arrival();
         let rec = model.advance(n, arrival, &mut workload, &overhead, &mut trace);
@@ -280,6 +316,11 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
             continue;
         }
         let measured = n - cfg.warmup;
+        metrics.observe_sojourn(rec.sojourn());
+        metrics.observe_waiting(rec.waiting());
+        if opts.progress && (measured + 1) % progress::TICK_JOBS == 0 {
+            progress::tick(opts.shard_index, measured as u64 + 1);
+        }
         sojourn.push(rec.sojourn());
         waiting.push(rec.waiting());
         sojourn_summary.push(rec.sojourn());
@@ -299,6 +340,18 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
             jobs.push(rec);
         }
     }
+    metrics.phase_add(Phase::Dispatch, dispatch_clock);
+    if opts.progress {
+        progress::tick(opts.shard_index, cfg.jobs as u64);
+    }
+    if metrics.is_enabled() {
+        // Harvest the engines' always-on raw tallies once, at run end.
+        metrics.absorb_tallies(&model.tallies());
+        let (arrivals, executions, batches) = workload.draw_counts();
+        metrics.add(Counter::ArrivalDraws, arrivals);
+        metrics.add(Counter::ExecutionDraws, executions);
+        metrics.add(Counter::BatchDraws, batches);
+    }
 
     Ok(SimResult {
         config: cfg.clone(),
@@ -314,6 +367,7 @@ fn run_single(cfg: &SimulationConfig, opts: &RunOptions) -> Result<SimResult, St
         class_sojourn,
         trace,
         wall_seconds: t0.elapsed().as_secs_f64(),
+        metrics,
     })
 }
 

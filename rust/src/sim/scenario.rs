@@ -62,6 +62,9 @@ pub struct Scenario {
     /// stay bit-exact with the homogeneous models).
     launch_overhead: f64,
     scratch: Vec<Replica>,
+    // Raw tally of cancelled replicas that actually ran (first-finish
+    // losers), harvested by the obs layer after a run.
+    losers: u64,
 }
 
 impl Scenario {
@@ -76,7 +79,20 @@ impl Scenario {
             (1..=speeds.len()).contains(&replicas),
             "replicas must be in 1..=l"
         );
-        Self { speeds, replicas, launch_overhead: 0.0, scratch: Vec::with_capacity(replicas) }
+        Self {
+            speeds,
+            replicas,
+            launch_overhead: 0.0,
+            scratch: Vec::with_capacity(replicas),
+            losers: 0,
+        }
+    }
+
+    /// Raw tally of cancelled replicas that ran (first-finish losers)
+    /// since construction.
+    #[inline]
+    pub fn loser_count(&self) -> u64 {
+        self.losers
     }
 
     /// Attach a per-replica launch cost (seconds).
@@ -200,6 +216,7 @@ impl Scenario {
                 }
                 if i != win {
                     redundant += t_win - rep.start;
+                    self.losers += 1;
                 }
                 if trace.is_enabled() {
                     trace.record(TraceEvent {
@@ -346,6 +363,7 @@ impl Scenario {
                 // Every replica crashed: re-dispatch as a fresh attempt
                 // immediately (crashes do not consume the retry budget).
                 retries += 1;
+                fi.note_retry();
                 continue;
             };
             let t_win = self.scratch[win].finish;
@@ -371,6 +389,7 @@ impl Scenario {
                     }
                     if i != win {
                         redundant += t_win - rep.start;
+                        self.losers += 1;
                     }
                     if trace.is_enabled() && i != win {
                         trace.record(TraceEvent {
@@ -415,6 +434,7 @@ impl Scenario {
                     });
                 }
                 retries += 1;
+                fi.note_retry();
                 retry_floor = t_win + fi.config().backoff_delay(failed_attempts);
                 continue;
             }
@@ -485,6 +505,7 @@ mod tests {
         assert_eq!(out.finish, 0.25);
         assert_eq!(out.first_start, 0.0);
         assert_eq!(out.redundant_time, 0.25);
+        assert_eq!(sc.loser_count(), 1);
         // Both servers are free again at 0.25.
         assert_eq!(heap.peek().0, 0.25);
         assert_eq!(heap.max_time(), 0.25);

@@ -21,6 +21,11 @@ pub struct Workload {
     force_dyn: bool,
     rng: Pcg64,
     clock: f64,
+    // Raw draw tallies for the obs layer (unconditional u64 increments;
+    // no branch, no RNG consumption, no effect on the draw stream).
+    arrival_draws: u64,
+    execution_draws: u64,
+    batch_draws: u64,
 }
 
 impl Workload {
@@ -41,12 +46,25 @@ impl Workload {
             force_dyn: std::env::var_os("TT_NO_FAST_EXP").is_some(),
             rng: Pcg64::seed_from_u64(seed),
             clock: 0.0,
+            arrival_draws: 0,
+            execution_draws: 0,
+            batch_draws: 0,
         }
+    }
+
+    /// Raw (arrival, execution, batch) draw tallies since construction.
+    /// Batch calls count each slot as an execution draw plus one batch
+    /// draw; [`Workload::execution_with`] draws are excluded (they come
+    /// from the caller's RNG stream, not the workload's).
+    #[inline]
+    pub fn draw_counts(&self) -> (u64, u64, u64) {
+        (self.arrival_draws, self.execution_draws, self.batch_draws)
     }
 
     /// Advance to and return the next job arrival time.
     #[inline]
     pub fn next_arrival(&mut self) -> f64 {
+        self.arrival_draws += 1;
         self.clock += self.interarrival.draw(&mut self.rng);
         self.clock
     }
@@ -54,6 +72,7 @@ impl Workload {
     /// Draw one task execution time `E_i(n)`.
     #[inline]
     pub fn next_execution(&mut self) -> f64 {
+        self.execution_draws += 1;
         if self.force_dyn {
             let mut f = || self.rng.next_f64_open();
             let d: &dyn Distribution = &self.execution;
@@ -68,6 +87,8 @@ impl Workload {
     /// `TT_NO_FAST_EXP=1` forces the dyn-dispatch loop here too.
     #[inline]
     pub fn next_executions(&mut self, out: &mut [f64]) {
+        self.execution_draws += out.len() as u64;
+        self.batch_draws += 1;
         if self.force_dyn {
             for o in out {
                 let mut f = || self.rng.next_f64_open();
@@ -132,6 +153,20 @@ mod tests {
             assert_eq!(a.next_arrival(), b.next_arrival());
             assert_eq!(a.next_execution(), b.next_execution());
         }
+    }
+
+    #[test]
+    fn draw_tallies_track_every_path() {
+        let mut w = Workload::new(Exponential::new(1.0).into(), Exponential::new(2.0).into(), 3);
+        w.next_arrival();
+        w.next_execution();
+        let mut buf = [0.0; 4];
+        w.next_executions(&mut buf);
+        assert_eq!(w.draw_counts(), (1, 5, 1));
+        // execution_with uses a foreign RNG stream: not tallied.
+        let mut rng = crate::rng::Pcg64::seed_from_u64(1);
+        let _ = w.execution_with(&mut rng);
+        assert_eq!(w.draw_counts(), (1, 5, 1));
     }
 
     #[test]

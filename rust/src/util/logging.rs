@@ -1,7 +1,18 @@
 //! Minimal `log` backend (env_logger substitute): stderr, level filter
-//! from `TT_LOG` (`error|warn|info|debug|trace`, default `warn`).
+//! from `TT_LOG` (`off|error|warn|info|debug|trace`, default `warn`).
+//! Unrecognized `TT_LOG` values fall back to `warn` with a one-time
+//! stderr warning instead of silently defaulting. The obs progress
+//! heartbeat ([`crate::obs::progress`]) emits through [`stderr_line`],
+//! the same formatting backend the logger uses.
 
 use log::{Level, LevelFilter, Metadata, Record};
+
+/// The shared stderr line format: `[TAG ] target: message`. Both the
+/// `log` backend and the obs heartbeat route through here so every
+/// diagnostic line on stderr has one shape.
+pub fn stderr_line(tag: &str, target: &str, msg: &str) {
+    eprintln!("[{tag}] {target}: {msg}");
+}
 
 struct StderrLogger;
 
@@ -21,7 +32,7 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{tag}] {}: {}", record.target(), record.args());
+        stderr_line(tag, record.target(), &record.args().to_string());
     }
 
     fn flush(&self) {}
@@ -29,16 +40,43 @@ impl log::Log for StderrLogger {
 
 static LOGGER: StderrLogger = StderrLogger;
 
+/// Resolve a `TT_LOG` value to a level filter. Returns the filter and
+/// whether the value was recognized (`warn` is now an accepted spelling,
+/// not just the silent default).
+fn level_from(value: Option<&str>) -> (LevelFilter, bool) {
+    match value {
+        Some("error") => (LevelFilter::Error, true),
+        Some("warn") => (LevelFilter::Warn, true),
+        Some("info") => (LevelFilter::Info, true),
+        Some("debug") => (LevelFilter::Debug, true),
+        Some("trace") => (LevelFilter::Trace, true),
+        Some("off") => (LevelFilter::Off, true),
+        None => (LevelFilter::Warn, true),
+        Some(_) => (LevelFilter::Warn, false),
+    }
+}
+
 /// Install the logger (idempotent); level from `TT_LOG`.
 pub fn init() {
-    let level = match std::env::var("TT_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Warn,
-    };
+    let var = std::env::var("TT_LOG").ok();
+    let (level, recognized) = level_from(var.as_deref());
+    if !recognized {
+        // One-time: init is guarded by set_logger's first-wins semantics
+        // below, but warn even on repeat inits only once per process.
+        static WARNED: std::sync::atomic::AtomicBool =
+            std::sync::atomic::AtomicBool::new(false);
+        if !WARNED.swap(true, std::sync::atomic::Ordering::Relaxed) {
+            stderr_line(
+                "WARN ",
+                "tiny_tasks::util::logging",
+                &format!(
+                    "unrecognized TT_LOG value {:?}; expected \
+                     off|error|warn|info|debug|trace, defaulting to warn",
+                    var.as_deref().unwrap_or("")
+                ),
+            );
+        }
+    }
     if log::set_logger(&LOGGER).is_ok() {
         log::set_max_level(level);
     }
@@ -46,10 +84,26 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::warn!("logger smoke test (expected in test output)");
+    }
+
+    #[test]
+    fn warn_is_an_accepted_spelling() {
+        assert_eq!(level_from(Some("warn")), (LevelFilter::Warn, true));
+    }
+
+    #[test]
+    fn unrecognized_values_flag_and_default() {
+        assert_eq!(level_from(Some("verbose")), (LevelFilter::Warn, false));
+        assert_eq!(level_from(None), (LevelFilter::Warn, true));
+        for v in ["off", "error", "info", "debug", "trace"] {
+            assert!(level_from(Some(v)).1, "{v} should be recognized");
+        }
     }
 }

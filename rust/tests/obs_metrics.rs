@@ -1,0 +1,240 @@
+//! Obs-layer invariants (the metrics & profiling tentpole).
+//!
+//! The hard contract: the registry consumes NO RNG draws and never
+//! branches on collected values, so a run with `metrics: true` is
+//! **bitwise identical** to the same run with metrics off — for every
+//! model and every composed feature axis (overhead, scenario, faults,
+//! policy). On top of that: sharded registries merge in shard-index
+//! order (thread count unobservable), the RUN_METRICS.json report
+//! round-trips, and counters reconcile exactly with a recorded trace.
+
+use tiny_tasks::config::{
+    ArrivalConfig, FaultsConfig, ModelKind, OverheadConfig, PolicyConfig, PolicyKind,
+    RedundancyConfig, ServiceConfig, SimulationConfig, WorkersConfig,
+};
+use tiny_tasks::obs::{report, Counter, Phase};
+use tiny_tasks::sim::{self, RunOptions};
+use tiny_tasks::trace::{cause, Trace};
+
+fn base(model: ModelKind, l: usize, k: usize) -> SimulationConfig {
+    SimulationConfig {
+        model,
+        servers: l,
+        tasks_per_job: k,
+        arrival: ArrivalConfig { interarrival: "exp:0.4".into() },
+        service: ServiceConfig { execution: format!("exp:{}", k as f64 / l as f64) },
+        jobs: 2_000,
+        warmup: 200,
+        seed: 99,
+        overhead: Some(OverheadConfig::paper()),
+        workers: None,
+        redundancy: None,
+        faults: None,
+        policy: None,
+    }
+}
+
+/// Every feature-composed config the runner accepts, one per axis.
+fn composed_configs() -> Vec<(&'static str, SimulationConfig)> {
+    vec![
+        ("sm/plain", base(ModelKind::SplitMerge, 5, 25)),
+        (
+            "fj/faults",
+            SimulationConfig {
+                faults: Some(FaultsConfig {
+                    mtbf: 60.0,
+                    mttr: 1.0,
+                    task_fail_p: 0.04,
+                    backoff_base: 0.01,
+                    ..FaultsConfig::default()
+                }),
+                ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+            },
+        ),
+        (
+            "fj/scenario",
+            SimulationConfig {
+                workers: Some(WorkersConfig::Speeds(vec![1.5, 1.5, 1.0, 0.5, 0.5])),
+                redundancy: Some(RedundancyConfig::new(2)),
+                ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+            },
+        ),
+        (
+            "fj/policy",
+            SimulationConfig {
+                policy: Some(PolicyConfig {
+                    kind: PolicyKind::Priority,
+                    classes: 2,
+                    ..PolicyConfig::default()
+                }),
+                ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+            },
+        ),
+        ("fjps/plain", base(ModelKind::ForkJoinPerServer, 5, 5)),
+        ("ideal/plain", base(ModelKind::Ideal, 5, 25)),
+    ]
+}
+
+/// Collecting metrics never perturbs results: every statistic the off
+/// run produces, the on run reproduces bit for bit, across all four
+/// models with scenario/faults/policy composed in.
+#[test]
+fn metrics_on_is_bitwise_identical_for_every_model() {
+    for (name, cfg) in composed_configs() {
+        let mut off = sim::run(&cfg, RunOptions::default()).unwrap();
+        let mut on = sim::run(&cfg, RunOptions { metrics: true, ..Default::default() }).unwrap();
+        assert!(!off.metrics.is_enabled(), "{name}: off run carries a registry");
+        assert!(on.metrics.is_enabled(), "{name}: on run lost its registry");
+        assert_eq!(off.sojourn_summary.mean(), on.sojourn_summary.mean(), "{name}");
+        assert_eq!(off.sojourn_summary.variance(), on.sojourn_summary.variance(), "{name}");
+        assert_eq!(off.sojourn_summary.min(), on.sojourn_summary.min(), "{name}");
+        assert_eq!(off.sojourn_summary.max(), on.sojourn_summary.max(), "{name}");
+        assert_eq!(off.overhead_summary.mean(), on.overhead_summary.mean(), "{name}");
+        assert_eq!(off.redundant_summary.mean(), on.redundant_summary.mean(), "{name}");
+        assert_eq!(off.lost_summary.mean(), on.lost_summary.mean(), "{name}");
+        assert_eq!(off.retry_summary.mean(), on.retry_summary.mean(), "{name}");
+        for q in [0.5, 0.9, 0.99] {
+            assert_eq!(off.sojourn_quantile(q), on.sojourn_quantile(q), "{name} q={q}");
+            assert_eq!(off.waiting_quantile(q), on.waiting_quantile(q), "{name} q={q}");
+        }
+        // The engines' tallies populate: every run completes its jobs
+        // (warmup included — the engines cannot tell them apart) and
+        // dispatches k logical tasks per job.
+        let total = (cfg.jobs + cfg.warmup) as u64;
+        let m = &on.metrics;
+        assert_eq!(m.counter(Counter::JobsCompleted), total, "{name}");
+        assert_eq!(
+            m.counter(Counter::TasksDispatched),
+            total * cfg.tasks_per_job as u64,
+            "{name}"
+        );
+        assert!(
+            m.counter(Counter::ExecutionDraws) >= m.counter(Counter::TasksDispatched),
+            "{name}"
+        );
+        assert_eq!(m.sojourn_hist.total(), cfg.jobs as u64, "{name}");
+        assert!(m.phase_seconds(Phase::Dispatch) > 0.0, "{name}");
+        match name {
+            "fj/faults" => assert!(m.counter(Counter::Retries) > 0, "{name}: no retries tallied"),
+            "fj/scenario" => {
+                assert!(m.counter(Counter::ReplicaLosers) > 0, "{name}: no losers tallied")
+            }
+            _ => {}
+        }
+    }
+}
+
+/// One interarrival draw per job on the plain path; heap pushes balance
+/// pops on the recursion engine's server heap.
+#[test]
+fn draw_and_heap_counters_reconcile() {
+    let cfg = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let res = sim::run(&cfg, RunOptions { metrics: true, ..Default::default() }).unwrap();
+    let m = &res.metrics;
+    let total = (cfg.jobs + cfg.warmup) as u64;
+    assert_eq!(m.counter(Counter::ArrivalDraws), total);
+    assert_eq!(m.counter(Counter::ExecutionDraws), total * cfg.tasks_per_job as u64);
+    assert_eq!(m.counter(Counter::HeapPushes), m.counter(Counter::HeapPops));
+}
+
+/// Sharded runs merge per-shard registries in shard-index order: the
+/// thread count is unobservable bit for bit, and the merged counters
+/// account for every shard's jobs (each shard runs its own warmup).
+#[test]
+fn sharded_registries_merge_deterministically() {
+    let cfg = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let shards = 3usize;
+    let serial = sim::run(
+        &cfg,
+        RunOptions { shards, threads: 1, metrics: true, ..Default::default() },
+    )
+    .unwrap();
+    let parallel = sim::run(
+        &cfg,
+        RunOptions { shards, threads: 3, metrics: true, ..Default::default() },
+    )
+    .unwrap();
+    for c in Counter::ALL {
+        assert_eq!(
+            serial.metrics.counter(c),
+            parallel.metrics.counter(c),
+            "thread count changed counter {}",
+            c.key()
+        );
+    }
+    assert_eq!(serial.metrics.sojourn_hist.counts(), parallel.metrics.sojourn_hist.counts());
+    let total = (cfg.jobs + shards * cfg.warmup) as u64;
+    assert_eq!(serial.metrics.counter(Counter::JobsCompleted), total);
+    assert_eq!(
+        serial.metrics.counter(Counter::TasksDispatched),
+        total * cfg.tasks_per_job as u64
+    );
+    // Only the measured jobs land in the latency histogram.
+    assert_eq!(serial.metrics.sojourn_hist.total(), cfg.jobs as u64);
+    // And the merged run is still bitwise the metrics-off sharded run.
+    let mut off = sim::run(&cfg, RunOptions { shards, threads: 2, ..Default::default() }).unwrap();
+    let mut on = sim::run(
+        &cfg,
+        RunOptions { shards, threads: 2, metrics: true, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(off.sojourn_summary.mean(), on.sojourn_summary.mean());
+    assert_eq!(off.sojourn_quantile(0.99), on.sojourn_quantile(0.99));
+}
+
+/// RUN_METRICS.json round-trips through a real run: render → parse
+/// reproduces every counter, phase, and throughput figure.
+#[test]
+fn run_metrics_report_round_trips() {
+    let cfg = base(ModelKind::SplitMerge, 5, 25);
+    let res = sim::run(&cfg, RunOptions { metrics: true, ..Default::default() }).unwrap();
+    let text = report::render("simulate", &res.metrics, cfg.jobs as u64, res.wall_seconds);
+    let rep = report::parse(&text).unwrap();
+    assert_eq!(rep.schema_version, report::SCHEMA_VERSION);
+    assert_eq!(rep.source, "simulate");
+    for c in Counter::ALL {
+        assert_eq!(rep.counters[c.key()], res.metrics.counter(c), "{}", c.key());
+    }
+    for p in Phase::ALL {
+        assert_eq!(rep.phases[p.key()], res.metrics.phase_seconds(p), "{}", p.key());
+    }
+    assert_eq!(rep.jobs, cfg.jobs as u64);
+    assert_eq!(rep.wall_seconds, res.wall_seconds);
+    assert_eq!(rep.sojourn_hist.iter().sum::<u64>(), cfg.jobs as u64);
+}
+
+/// Counters reconcile exactly with a recorded trace: one task row per
+/// dispatched task on the plain path; with per-attempt failures, one
+/// extra FAILED row per tallied retry.
+#[test]
+fn counters_reconcile_with_recorded_trace() {
+    let opts = RunOptions { record_jobs: true, trace: true, metrics: true, ..Default::default() };
+
+    let plain = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let res = sim::run(&plain, opts).unwrap();
+    let trace = Trace::from_sim(&res).unwrap();
+    assert_eq!(trace.tasks.len() as u64, res.metrics.counter(Counter::TasksDispatched));
+
+    let faulty = SimulationConfig {
+        faults: Some(FaultsConfig {
+            task_fail_p: 0.05,
+            max_retries: 3,
+            backoff_base: 0.01,
+            ..FaultsConfig::default()
+        }),
+        ..base(ModelKind::ForkJoinSingleQueue, 5, 25)
+    };
+    let res = sim::run(&faulty, opts).unwrap();
+    let trace = Trace::from_sim(&res).unwrap();
+    let retries = res.metrics.counter(Counter::Retries);
+    assert!(retries > 0, "fault config produced no retries");
+    // Every attempt leaves a row: the success per task plus one FAILED
+    // row per retried attempt.
+    assert_eq!(
+        trace.tasks.len() as u64,
+        res.metrics.counter(Counter::TasksDispatched) + retries
+    );
+    let failed_rows =
+        trace.tasks.iter().filter(|t| t.cause == cause::FAILED).count() as u64;
+    assert_eq!(failed_rows, retries);
+}
