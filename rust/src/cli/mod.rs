@@ -138,9 +138,18 @@ COMMANDS:
                   --progress       (heartbeat on stderr: jobs done, jobs/s,
                   ETA, per-shard lag)
     profile     Run one configuration with the obs registry on and print
-                the phase/counter table
+                the phase/counter/percentile tables (plus the event-loop
+                span tree on the calendar engine)
                   --engine recursion|calendar + the simulate flag set
                   [--csv FILE]  (metric,value dump)  [--metrics FILE]
+                  [--folded FILE]  (collapsed-stack span profile for
+                  inferno / flamegraph.pl; calendar engine only)
+                  --diff BASE.json NEW.json  (align two RUN_METRICS
+                  reports: counters, phases, percentiles, spans, with
+                  absolute + ratio deltas; no simulation is run)
+                  [--gate name:max_ratio,...]  (with --diff: exit 1 when
+                  NEW exceeds max_ratio x BASE on any named row, e.g.
+                  --gate dispatch:1.25,span:event_loop:1.25)
     approx      Analytic approximation for skewed/redundant clusters,
                 cross-validated against a simulation sweep (CSV per k)
                   --servers L --lambda RATE --workload SECONDS --epsilon E
@@ -149,7 +158,8 @@ COMMANDS:
                   [--replica-launch S] [--jobs N] [--out FILE.csv]
                   [--threads N]  (sweep pool size; default: all cores)
                   [--no-sim]  (pure analytics, microseconds)
-                  [--metrics FILE]  (merged obs report across the sweep)
+                  [--metrics FILE]  (merged obs report across the sweep;
+                  schema v2 adds one sweep_points row per k)
                   [--check [--floor F] [--tolerance F]]  (exit 1 unless
                   analytic/sim lands in [floor, tolerance] at every
                   stable k -- the CI smoke gate)

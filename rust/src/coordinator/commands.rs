@@ -323,7 +323,51 @@ fn sim_cfg_from_args(args: &Args) -> Result<SimulationConfig> {
 /// `--engine calendar` drives the event-calendar engine with its
 /// sampling-phase hook. `--csv FILE` dumps the table as metric,value
 /// rows; `--metrics FILE` writes the RUN_METRICS.json report.
+/// `profile --diff BASE.json NEW.json [--gate name:ratio,...]` — align
+/// two RUN_METRICS reports into one table of absolute and ratio deltas,
+/// then evaluate the gates (exit 1 on any regression past its ratio).
+fn profile_diff(args: &Args, base_path: &str) -> Result<i32> {
+    let new_path = args.positional.first().ok_or_else(|| {
+        anyhow::anyhow!("--diff BASE.json needs the new report's path as a positional arg")
+    })?;
+    let read = |p: &str| -> Result<obs::report::ParsedReport> {
+        let text = std::fs::read_to_string(p).map_err(|err| anyhow::anyhow!("{p}: {err}"))?;
+        obs::report::parse(&text).map_err(e)
+    };
+    let base = read(base_path)?;
+    let new = read(new_path)?;
+    let rows = obs::report::diff_rows(&base, &new);
+    println!("profile diff     {base_path} (base) vs {new_path} (new)");
+    println!("\n{:>28} {:>16} {:>16} {:>16} {:>9}", "row", "base", "new", "delta", "ratio");
+    for r in &rows {
+        let ratio = r.ratio().map_or_else(|| "-".into(), |x| format!("{x:.4}"));
+        println!(
+            "{:>28} {:>16.6} {:>16.6} {:>+16.6} {ratio:>9}",
+            r.name,
+            r.base,
+            r.new,
+            r.new - r.base
+        );
+    }
+    if let Some(spec) = args.get("gate") {
+        let gates = obs::report::parse_gates(spec).map_err(e)?;
+        let failures = obs::report::check_gates(&rows, &gates);
+        if !failures.is_empty() {
+            println!("\ngates: FAIL");
+            for f in &failures {
+                println!("  {f}");
+            }
+            return Ok(1);
+        }
+        println!("\ngates: OK ({} checked)", gates.len());
+    }
+    Ok(0)
+}
+
 pub fn cmd_profile(args: &Args) -> Result<i32> {
+    if let Some(base_path) = args.get("diff") {
+        return profile_diff(args, base_path);
+    }
     let cfg = sim_cfg_from_args(args)?;
     cfg.validate().map_err(e)?;
     let engine = args.get_or("engine", "recursion");
@@ -376,6 +420,7 @@ pub fn cmd_profile(args: &Args) -> Result<i32> {
             let sampling = cal.sampling_seconds();
             m.phase_add_secs(Phase::Sampling, sampling);
             m.phase_add_secs(Phase::Dispatch, (wall - sampling).max(0.0));
+            m.absorb_spans(cal.spans());
             for r in &recs {
                 m.observe_sojourn(r.sojourn());
                 m.observe_waiting(r.waiting());
@@ -397,12 +442,31 @@ pub fn cmd_profile(args: &Args) -> Result<i32> {
     for c in Counter::ALL {
         println!("{:>24} {:>16}", c.key(), metrics.counter(c));
     }
+    println!("\n{:>24} {:>16} {:>16}", "percentile", "sojourn s", "waiting s");
+    for (q, name) in obs::report::PERCENTILES {
+        println!(
+            "{name:>24} {:>16.6} {:>16.6}",
+            metrics.sojourn_hist.percentile(q).unwrap_or(0.0),
+            metrics.waiting_hist.percentile(q).unwrap_or(0.0),
+        );
+    }
+    if !metrics.spans.is_empty() {
+        println!("\nevent-loop spans (total / self wall seconds, enter counts):");
+        print!("{}", metrics.spans.render_tree());
+    }
     println!(
         "\nwall             {:.3} s ({:.0} jobs/s), peak rss {} bytes",
         wall,
         jobs as f64 / wall.max(1e-12),
         obs::report::peak_rss_bytes()
     );
+    if let Some(path) = args.get("folded") {
+        if metrics.spans.is_empty() {
+            bail!("--folded needs the calendar engine's span profile; use --engine calendar");
+        }
+        std::fs::write(path, metrics.spans.render_folded())?;
+        println!("wrote {path}");
+    }
     if let Some(path) = args.get("csv") {
         let mut s = String::from("metric,value\n");
         for p in Phase::ALL {
@@ -833,18 +897,31 @@ pub fn cmd_approx(args: &Args) -> Result<i32> {
         )
         .map_err(e)?;
         if want_metrics {
-            // Merge per-point registries in point order (deterministic).
+            // Merge per-point registries in point order (deterministic),
+            // keeping a per-k row for the report's `sweep_points` array.
             let mut m = Metrics::enabled();
+            let mut rows = Vec::with_capacity(outcomes.len());
             for o in &outcomes {
                 m.merge(&o.metrics);
+                rows.push(obs::report::SweepPointRecord::from_metrics(
+                    o.label,
+                    jobs as u64,
+                    o.jobs_per_sec,
+                    &o.metrics,
+                ));
             }
-            write_metrics_report(
-                args,
-                "sweep",
-                &m,
-                (jobs * n_points) as u64,
-                t_sweep.elapsed().as_secs_f64(),
-            )?;
+            if let Some(path) = args.get("metrics") {
+                obs::report::write_file_with_points(
+                    path,
+                    "sweep",
+                    &m,
+                    (jobs * n_points) as u64,
+                    t_sweep.elapsed().as_secs_f64(),
+                    &rows,
+                )
+                .map_err(e)?;
+                println!("wrote {path}");
+            }
         }
         Some(outcomes)
     };
@@ -1043,6 +1120,7 @@ fn profile_calendar_row(
     agg.add(Counter::BatchDraws, batches);
     agg.phase_add_secs(Phase::Sampling, sampling);
     agg.phase_add_secs(Phase::Dispatch, dispatch);
+    agg.absorb_spans(cal.spans());
     vec![("sampling".to_string(), sampling), ("dispatch".to_string(), dispatch)]
 }
 

@@ -139,6 +139,218 @@ impl Phase {
     }
 }
 
+/// Hierarchical event-loop spans profiled inside the calendar engine.
+/// Each span has a static parent, so the set forms a fixed tree rooted
+/// at [`Span::EventLoop`] — renderable as a text tree or as
+/// collapsed-stack ("folded") lines for flamegraph tooling. Spans obey
+/// the same two-layer contract as phases: clocks are only read when
+/// profiling is on, no RNG is consumed, and results stay bitwise
+/// identical either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Span {
+    /// The whole calendar event loop (root).
+    EventLoop,
+    /// Popping the next event off the calendar heap.
+    HeapPop,
+    /// Arrival events (job admission + stage-0 enqueue).
+    Arrival,
+    /// Task-finish events (stage bookkeeping, barrier checks).
+    Finish,
+    /// Departure events (split-merge job completion records).
+    Departure,
+    /// Fault-axis events: crash, repair, retry re-queue, speculative
+    /// launch.
+    Fault,
+    /// Work-stealing periodic scan ticks.
+    StealTick,
+    /// The dispatch pass after each event (FCFS fast path included).
+    Dispatch,
+    /// Stage pre-draw sampling under an arrival (stage 0).
+    ArrivalSampling,
+    /// Stage pre-draw sampling under a finish (barrier stages ≥ 1).
+    FinishSampling,
+    /// Completion-record/statistics updates under a finish.
+    FinishStats,
+    /// Policy-routed dispatch (SITA / priority / work stealing).
+    PolicyDispatch,
+}
+
+/// Number of [`Span`] variants.
+pub const SPAN_COUNT: usize = 12;
+
+impl Span {
+    /// Every span, parents before children (report order).
+    pub const ALL: [Span; SPAN_COUNT] = [
+        Span::EventLoop,
+        Span::HeapPop,
+        Span::Arrival,
+        Span::Finish,
+        Span::Departure,
+        Span::Fault,
+        Span::StealTick,
+        Span::Dispatch,
+        Span::ArrivalSampling,
+        Span::FinishSampling,
+        Span::FinishStats,
+        Span::PolicyDispatch,
+    ];
+
+    /// Stable path key used in `RUN_METRICS.json` (`/`-separated along
+    /// the parent chain, so sibling sub-spans stay distinct).
+    pub fn key(self) -> &'static str {
+        match self {
+            Span::EventLoop => "event_loop",
+            Span::HeapPop => "heap_pop",
+            Span::Arrival => "arrival",
+            Span::Finish => "finish",
+            Span::Departure => "departure",
+            Span::Fault => "fault",
+            Span::StealTick => "steal_tick",
+            Span::Dispatch => "dispatch",
+            Span::ArrivalSampling => "arrival/sampling",
+            Span::FinishSampling => "finish/sampling",
+            Span::FinishStats => "finish/stats",
+            Span::PolicyDispatch => "dispatch/policy",
+        }
+    }
+
+    /// Display label (the last segment of [`Span::key`]).
+    pub fn label(self) -> &'static str {
+        match self.key().rsplit_once('/') {
+            Some((_, leaf)) => leaf,
+            None => self.key(),
+        }
+    }
+
+    /// Static parent in the span tree (`None` for the root).
+    pub fn parent(self) -> Option<Span> {
+        match self {
+            Span::EventLoop => None,
+            Span::HeapPop
+            | Span::Arrival
+            | Span::Finish
+            | Span::Departure
+            | Span::Fault
+            | Span::StealTick
+            | Span::Dispatch => Some(Span::EventLoop),
+            Span::ArrivalSampling => Some(Span::Arrival),
+            Span::FinishSampling | Span::FinishStats => Some(Span::Finish),
+            Span::PolicyDispatch => Some(Span::Dispatch),
+        }
+    }
+}
+
+/// Accumulated wall time and enter counts per [`Span`]. Owned by the
+/// calendar engine (populated only under `--profile`-style flags) and
+/// folded into the registry via [`Metrics::absorb_spans`]; merges are a
+/// plain element-wise sum in shard-index order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanSet {
+    secs: [f64; SPAN_COUNT],
+    counts: [u64; SPAN_COUNT],
+}
+
+impl Default for SpanSet {
+    fn default() -> Self {
+        SpanSet { secs: [0.0; SPAN_COUNT], counts: [0; SPAN_COUNT] }
+    }
+}
+
+impl SpanSet {
+    /// Add one timed entry of `span`.
+    #[inline]
+    pub fn add(&mut self, span: Span, secs: f64) {
+        self.secs[span as usize] += secs;
+        self.counts[span as usize] += 1;
+    }
+
+    /// Total seconds accumulated in `span` (children included).
+    pub fn seconds(&self, span: Span) -> f64 {
+        self.secs[span as usize]
+    }
+
+    /// Times `span` was entered.
+    pub fn count(&self, span: Span) -> u64 {
+        self.counts[span as usize]
+    }
+
+    /// No span was ever entered.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Seconds spent in `span` itself, excluding its timed children
+    /// (clamped at zero: child clocks nest inside the parent's, so
+    /// timer noise can only push the difference slightly negative).
+    pub fn self_seconds(&self, span: Span) -> f64 {
+        let children: f64 = Span::ALL
+            .iter()
+            .filter(|c| c.parent() == Some(span))
+            .map(|c| self.seconds(*c))
+            .sum();
+        (self.seconds(span) - children).max(0.0)
+    }
+
+    /// Element-wise sum merge (shard-index order in the runner).
+    pub fn merge(&mut self, other: &SpanSet) {
+        for (a, b) in self.secs.iter_mut().zip(&other.secs) {
+            *a += *b;
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += *b;
+        }
+    }
+
+    /// Render the populated spans as an indented text tree with total,
+    /// self, and enter-count columns. Empty string if nothing recorded.
+    pub fn render_tree(&self) -> String {
+        fn walk(set: &SpanSet, span: Span, depth: usize, out: &mut String) {
+            if set.count(span) > 0 {
+                let name = format!("{}{}", "  ".repeat(depth), span.label());
+                out.push_str(&format!(
+                    "{:<24} total {:>12.6}s  self {:>12.6}s  n {}\n",
+                    name,
+                    set.seconds(span),
+                    set.self_seconds(span),
+                    set.count(span)
+                ));
+            }
+            for child in Span::ALL {
+                if child.parent() == Some(span) {
+                    walk(set, child, depth + 1, out);
+                }
+            }
+        }
+        let mut out = String::new();
+        for root in Span::ALL.iter().filter(|s| s.parent().is_none()) {
+            walk(self, *root, 0, &mut out);
+        }
+        out
+    }
+
+    /// Render collapsed-stack ("folded") lines — `a;b;leaf COUNT`, one
+    /// per populated span, where COUNT is the span's **self** time in
+    /// integer microseconds — consumable by inferno / flamegraph.pl.
+    pub fn render_folded(&self) -> String {
+        let mut out = String::new();
+        for span in Span::ALL {
+            if self.count(span) == 0 {
+                continue;
+            }
+            let mut stack = vec![span.label()];
+            let mut up = span.parent();
+            while let Some(p) = up {
+                stack.push(p.label());
+                up = p.parent();
+            }
+            stack.reverse();
+            let micros = (self.self_seconds(span) * 1e6).round() as u64;
+            out.push_str(&format!("{} {}\n", stack.join(";"), micros));
+        }
+        out
+    }
+}
+
 /// Raw always-on engine tallies (see module docs). Engines own one (or
 /// expose per-component counts) and the runner folds them into the
 /// registry at end of run via [`Metrics::absorb_tallies`].
@@ -213,19 +425,27 @@ pub const HIST_LO: f64 = 1e-4;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct FixedHistogram {
     counts: [u64; HIST_BUCKETS],
+    /// Non-finite samples (NaN/±inf): counted here, never bucketed, so
+    /// the underflow bucket only holds genuine sub-`HIST_LO` values.
+    dropped: u64,
 }
 
 impl Default for FixedHistogram {
     fn default() -> Self {
-        Self { counts: [0; HIST_BUCKETS] }
+        Self { counts: [0; HIST_BUCKETS], dropped: 0 }
     }
 }
 
 impl FixedHistogram {
-    /// Record one sample (seconds).
+    /// Record one sample (seconds). Non-finite samples land in the
+    /// `dropped` tally instead of polluting the underflow bucket.
     #[inline]
     pub fn record(&mut self, x: f64) {
-        let idx = if x.is_finite() && x > HIST_LO {
+        if !x.is_finite() {
+            self.dropped += 1;
+            return;
+        }
+        let idx = if x > HIST_LO {
             ((x / HIST_LO).log2() as usize).min(HIST_BUCKETS - 1)
         } else {
             0
@@ -238,9 +458,14 @@ impl FixedHistogram {
         &self.counts
     }
 
-    /// Total samples recorded.
+    /// Total finite samples recorded (dropped samples excluded).
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
+    }
+
+    /// Non-finite samples rejected by [`FixedHistogram::record`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
     /// Lower edge of bucket `i` in seconds (`0.0` for the underflow
@@ -253,11 +478,49 @@ impl FixedHistogram {
         }
     }
 
+    /// Upper edge of bucket `i` in seconds. The open-ended last bucket
+    /// reports one further octave — its interpolation ceiling.
+    pub fn bucket_hi(i: usize) -> f64 {
+        HIST_LO * ((i + 1) as f64).exp2()
+    }
+
+    /// Quantile `q` in `[0, 1]` via interpolation inside the covering
+    /// log bucket: log-linear between the bucket edges (the natural
+    /// scale for log-spaced buckets), linear from zero inside the
+    /// underflow bucket (whose floor has no logarithm). `None` for an
+    /// empty histogram or out-of-range `q`. Monotone in `q` and always
+    /// within the covering bucket's `[lo, hi]` edges.
+    pub fn percentile(&self, q: f64) -> Option<f64> {
+        if !(0.0..=1.0).contains(&q) {
+            return None;
+        }
+        let total = self.total();
+        if total == 0 {
+            return None;
+        }
+        let rank = (q * total as f64).ceil().clamp(1.0, total as f64) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if cum + c >= rank {
+                let frac = (rank - cum) as f64 / c as f64;
+                let lo = Self::bucket_lo(i);
+                let hi = Self::bucket_hi(i);
+                return Some(if i == 0 { hi * frac } else { lo * (hi / lo).powf(frac) });
+            }
+            cum += c;
+        }
+        None // unreachable: rank ≤ total
+    }
+
     /// Element-wise sum merge.
     pub fn merge(&mut self, other: &FixedHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += *b;
         }
+        self.dropped += other.dropped;
     }
 }
 
@@ -293,6 +556,9 @@ pub struct Metrics {
     pub sojourn_hist: FixedHistogram,
     /// Measured-job waiting times.
     pub waiting_hist: FixedHistogram,
+    /// Calendar event-loop span profile (empty unless the engine ran
+    /// with profiling on).
+    pub spans: SpanSet,
 }
 
 impl Metrics {
@@ -347,6 +613,14 @@ impl Metrics {
         }
         for (a, b) in self.class_dispatches.iter_mut().zip(&t.class_dispatches) {
             *a += *b;
+        }
+    }
+
+    /// Fold an engine's span set into the registry (no-op when
+    /// disabled).
+    pub fn absorb_spans(&mut self, s: &SpanSet) {
+        if self.enabled {
+            self.spans.merge(s);
         }
     }
 
@@ -420,6 +694,7 @@ impl Metrics {
         }
         self.sojourn_hist.merge(&other.sojourn_hist);
         self.waiting_hist.merge(&other.waiting_hist);
+        self.spans.merge(&other.spans);
     }
 }
 
@@ -473,15 +748,95 @@ mod tests {
         let mut h = FixedHistogram::default();
         h.record(0.0); // underflow
         h.record(HIST_LO * 3.0); // bucket 1
-        h.record(f64::INFINITY); // clamps to last
-        assert_eq!(h.total(), 3);
+        h.record(f64::INFINITY); // non-finite: dropped, not bucketed
+        h.record(f64::NAN); // likewise
+        assert_eq!(h.total(), 2);
+        assert_eq!(h.dropped(), 2);
         assert_eq!(h.counts()[0], 1);
         assert_eq!(h.counts()[1], 1);
-        assert_eq!(h.counts()[HIST_BUCKETS - 1], 1);
+        assert_eq!(h.counts()[HIST_BUCKETS - 1], 0);
         let mut g = h.clone();
         g.merge(&h);
-        assert_eq!(g.total(), 6);
+        assert_eq!(g.total(), 4);
+        assert_eq!(g.dropped(), 4);
         assert!(FixedHistogram::bucket_lo(1) > 0.0);
+        assert_eq!(FixedHistogram::bucket_hi(0), FixedHistogram::bucket_lo(1));
+    }
+
+    #[test]
+    fn percentile_interpolates_within_bucket_edges() {
+        let mut h = FixedHistogram::default();
+        assert_eq!(h.percentile(0.5), None); // empty
+        // 10 samples, all in bucket 3.
+        for _ in 0..10 {
+            h.record(HIST_LO * 10.0);
+        }
+        assert_eq!(h.percentile(-0.1), None);
+        assert_eq!(h.percentile(1.1), None);
+        let (lo, hi) = (FixedHistogram::bucket_lo(3), FixedHistogram::bucket_hi(3));
+        for q in [0.01, 0.25, 0.5, 0.9, 1.0] {
+            let p = h.percentile(q).unwrap();
+            assert!(p >= lo && p <= hi, "q={q}: {p} outside [{lo}, {hi}]");
+        }
+        // q = 1 lands exactly on the bucket's upper edge.
+        assert_eq!(h.percentile(1.0).unwrap(), hi);
+    }
+
+    #[test]
+    fn percentile_is_monotone_in_q() {
+        let mut h = FixedHistogram::default();
+        // Spread over several buckets, underflow included.
+        for x in [0.0, HIST_LO * 0.5, HIST_LO * 3.0, 0.01, 0.02, 0.1, 0.5, 2.0, 8.0] {
+            h.record(x);
+        }
+        let mut prev = 0.0;
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            let p = h.percentile(q).unwrap();
+            assert!(p >= prev, "q={q}: {p} < {prev}");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn span_tree_keys_and_rendering() {
+        // Keys unique; every non-root span chains up to the root.
+        let keys: std::collections::BTreeSet<_> = Span::ALL.iter().map(|s| s.key()).collect();
+        assert_eq!(keys.len(), SPAN_COUNT);
+        for s in Span::ALL {
+            let mut cur = s;
+            let mut hops = 0;
+            while let Some(p) = cur.parent() {
+                cur = p;
+                hops += 1;
+                assert!(hops <= SPAN_COUNT, "parent cycle at {}", s.key());
+            }
+            assert_eq!(cur, Span::EventLoop);
+        }
+
+        let mut set = SpanSet::default();
+        assert!(set.is_empty());
+        assert_eq!(set.render_tree(), "");
+        set.add(Span::EventLoop, 10.0);
+        set.add(Span::Arrival, 4.0);
+        set.add(Span::ArrivalSampling, 1.0);
+        set.add(Span::Dispatch, 2.0);
+        // Self time excludes timed children.
+        assert_eq!(set.self_seconds(Span::Arrival), 3.0);
+        assert_eq!(set.self_seconds(Span::EventLoop), 4.0);
+        let tree = set.render_tree();
+        assert!(tree.contains("event_loop"), "{tree}");
+        assert!(tree.contains("sampling"), "{tree}");
+        let folded = set.render_folded();
+        assert!(folded.contains("event_loop;arrival;sampling 1000000\n"), "{folded}");
+        assert!(folded.contains("event_loop;arrival 3000000\n"), "{folded}");
+        assert!(folded.contains("event_loop 4000000\n"), "{folded}");
+        // Merge sums both time and enter counts.
+        let mut other = SpanSet::default();
+        other.add(Span::Arrival, 1.0);
+        set.merge(&other);
+        assert_eq!(set.seconds(Span::Arrival), 5.0);
+        assert_eq!(set.count(Span::Arrival), 2);
     }
 
     #[test]

@@ -78,18 +78,79 @@ pub fn tick(shard: usize, done: u64) {
     }
 }
 
-/// Emit the final line and end the session. No-op without one.
+/// Final 100% line: actual completion count, total wall time, and the
+/// run's *mean* rate — unlike [`render`]'s instantaneous view, this
+/// cannot under-report by a stale throttled tick.
+fn render_final(st: &ProgressState) -> String {
+    let done: u64 = st.done.iter().sum();
+    let secs = st.started.elapsed().as_secs_f64().max(1e-9);
+    let rate = done as f64 / secs;
+    format!(
+        "jobs {done}/{} done in {secs:.2}s ({rate:.0} jobs/s mean)",
+        st.total
+    )
+}
+
+/// Emit the final 100% heartbeat (unthrottled — the last periodic tick
+/// can lag by up to `TICK_JOBS` jobs / 1 s) and end the session. No-op
+/// without one.
 pub fn finish() {
     let mut guard = STATE.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(st) = guard.take() {
-        let line = render(&st);
-        stderr_line("PROG ", "obs::progress", &format!("{line} — done"));
+        stderr_line("PROG ", "obs::progress", &render_final(&st));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
+
+    /// A state whose clock started `secs_ago` seconds in the past, for
+    /// deterministic-enough rate/ETA assertions without sleeping.
+    fn aged_state(total: u64, done: Vec<u64>, secs_ago: u64) -> ProgressState {
+        ProgressState {
+            total,
+            done,
+            started: Instant::now() - Duration::from_secs(secs_ago),
+            last_print: None,
+        }
+    }
+
+    #[test]
+    fn render_reports_rate_eta_and_lag() {
+        // 40/100 jobs in ~2 s → 20 jobs/s, eta (100-40)/20 = 3 s.
+        let st = aged_state(100, vec![30, 10], 2);
+        let line = render(&st);
+        assert!(line.starts_with("jobs 40/100 ("), "{line}");
+        assert!(line.contains("20 jobs/s"), "{line}");
+        assert!(line.contains("eta 3s"), "{line}");
+        assert!(line.contains("shard lag 20"), "{line}");
+    }
+
+    #[test]
+    fn render_handles_done_and_single_shard() {
+        // Complete: eta 0, and a single shard reports zero lag.
+        let st = aged_state(100, vec![100], 2);
+        let line = render(&st);
+        assert!(line.starts_with("jobs 100/100 ("), "{line}");
+        assert!(line.contains("eta 0s"), "{line}");
+        assert!(line.contains("shard lag 0"), "{line}");
+        // Nothing done yet: rate 0 and eta degrades to 0, not inf/NaN.
+        let idle = aged_state(100, vec![0, 0], 2);
+        let line = render(&idle);
+        assert!(line.contains("eta 0s"), "{line}");
+    }
+
+    #[test]
+    fn final_line_reports_total_wall_and_mean_rate() {
+        let st = aged_state(100, vec![60, 40], 2);
+        let line = render_final(&st);
+        assert!(line.starts_with("jobs 100/100 done in "), "{line}");
+        assert!(line.ends_with("jobs/s mean)"), "{line}");
+        // ~2 s wall → mean rate rounds to 50 jobs/s.
+        assert!(line.contains("(50 jobs/s mean)"), "{line}");
+    }
 
     #[test]
     fn lifecycle_is_safe_and_lag_tracks_shards() {

@@ -1,15 +1,27 @@
-//! `RUN_METRICS.json` — the schema-v1 run report shared by every
+//! `RUN_METRICS.json` — the schema-v2 run report shared by every
 //! command surface (`simulate`, `approx` sweeps, `bench`, `trace`,
-//! `emulate`, `profile`): counters, phase wall-times, throughput, and a
-//! peak-RSS estimate. Hand-rolled writer *and* parser (the offline
-//! registry has no serde); the parser exists so reports can be
-//! round-trip-tested and consumed by the CI smoke job.
+//! `emulate`, `profile`): counters, phase wall-times, throughput, a
+//! peak-RSS estimate, and (new in v2) histogram percentiles, the
+//! calendar span profile, dropped-sample tallies, and per-sweep-point
+//! registries. Hand-rolled writer *and* parser (the offline registry
+//! has no serde); the parser exists so reports can be
+//! round-trip-tested, consumed by the CI smoke job, and diffed by
+//! `profile --diff` (see [`diff_rows`] / [`check_gates`]).
+//!
+//! Compatibility contract (the BENCH v1→v2 precedent): every v2
+//! addition is a **trailing** top-level key, so v1 readers that scan
+//! for their keys keep working on v2 files, and this parser treats the
+//! v2 keys as optional, so v1 files still parse (with empty maps).
 
-use super::{Counter, FixedHistogram, Metrics, Phase, HIST_BUCKETS};
+use super::{Counter, FixedHistogram, Metrics, Phase, Span, HIST_BUCKETS};
 use std::collections::BTreeMap;
 
 /// Report schema version.
-pub const SCHEMA_VERSION: u64 = 1;
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// Percentiles summarized in the report, as (quantile, key-suffix).
+pub const PERCENTILES: [(f64, &str); 4] =
+    [(0.5, "p50"), (0.9, "p90"), (0.99, "p99"), (0.999, "p999")];
 
 /// Peak resident set size of this process in bytes, from
 /// `/proc/self/status` (`VmHWM`). Returns 0 where the file or field is
@@ -38,8 +50,57 @@ fn render_hist(h: &FixedHistogram) -> String {
     format!("[{}]", counts.join(", "))
 }
 
-/// Serialize a registry into the schema-v1 report.
+/// One sweep point's summary row embedded in a sweep/bench report
+/// (schema v2 `sweep_points`): the per-k registry slice that lets
+/// downstream consumers read per-point cost without a separate
+/// profiled run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepPointRecord {
+    /// Sweep label (the swept k, or another axis value).
+    pub label: f64,
+    /// Measured jobs at this point.
+    pub jobs: u64,
+    /// Simulated jobs per wall second at this point.
+    pub jobs_per_sec: f64,
+    /// Calendar events processed (0 on the recursion engine).
+    pub events: u64,
+    /// Logical tasks dispatched.
+    pub tasks_dispatched: u64,
+    /// Seconds in the sampling phase.
+    pub sampling_seconds: f64,
+    /// Seconds in the dispatch phase.
+    pub dispatch_seconds: f64,
+}
+
+impl SweepPointRecord {
+    /// Build from one point's registry and throughput.
+    pub fn from_metrics(label: f64, jobs: u64, jobs_per_sec: f64, m: &Metrics) -> Self {
+        SweepPointRecord {
+            label,
+            jobs,
+            jobs_per_sec,
+            events: m.counter(Counter::EventsProcessed),
+            tasks_dispatched: m.counter(Counter::TasksDispatched),
+            sampling_seconds: m.phase_seconds(Phase::Sampling),
+            dispatch_seconds: m.phase_seconds(Phase::Dispatch),
+        }
+    }
+}
+
+/// Serialize a registry into the schema-v2 report.
 pub fn render(source: &str, m: &Metrics, jobs: u64, wall_seconds: f64) -> String {
+    render_with_points(source, m, jobs, wall_seconds, &[])
+}
+
+/// Serialize a registry plus per-sweep-point rows. With an empty
+/// `points` slice the `sweep_points` key is omitted entirely.
+pub fn render_with_points(
+    source: &str,
+    m: &Metrics,
+    jobs: u64,
+    wall_seconds: f64,
+    points: &[SweepPointRecord],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!("  \"schema_version\": {SCHEMA_VERSION},\n"));
@@ -74,7 +135,56 @@ pub fn render(source: &str, m: &Metrics, jobs: u64, wall_seconds: f64) -> String
         "    \"waiting_seconds\": {}\n",
         render_hist(&m.waiting_hist)
     ));
-    s.push_str("  }\n}\n");
+    s.push_str("  },\n");
+    // Schema-v2 additions: trailing keys only, so v1 readers that scan
+    // for their own keys stay compatible.
+    s.push_str("  \"percentiles\": {\n");
+    for (hist, prefix) in [(&m.sojourn_hist, "sojourn"), (&m.waiting_hist, "waiting")] {
+        for (i, (q, suffix)) in PERCENTILES.iter().enumerate() {
+            let last = prefix == "waiting" && i + 1 == PERCENTILES.len();
+            let sep = if last { "" } else { "," };
+            let v = hist.percentile(*q).unwrap_or(0.0);
+            s.push_str(&format!("    \"{prefix}_{suffix}\": {v}{sep}\n"));
+        }
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"span_seconds\": {\n");
+    for (i, sp) in Span::ALL.iter().enumerate() {
+        let sep = if i + 1 < Span::ALL.len() { "," } else { "" };
+        s.push_str(&format!("    \"{}\": {}{sep}\n", sp.key(), m.spans.seconds(*sp)));
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"span_counts\": {\n");
+    for (i, sp) in Span::ALL.iter().enumerate() {
+        let sep = if i + 1 < Span::ALL.len() { "," } else { "" };
+        s.push_str(&format!("    \"{}\": {}{sep}\n", sp.key(), m.spans.count(*sp)));
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"dropped_samples\": {\n");
+    s.push_str(&format!("    \"sojourn_seconds\": {},\n", m.sojourn_hist.dropped()));
+    s.push_str(&format!("    \"waiting_seconds\": {}\n", m.waiting_hist.dropped()));
+    if points.is_empty() {
+        s.push_str("  }\n}\n");
+        return s;
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"sweep_points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let sep = if i + 1 < points.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"label\": {}, \"jobs\": {}, \"jobs_per_sec\": {}, \
+             \"events\": {}, \"tasks_dispatched\": {}, \
+             \"sampling_seconds\": {}, \"dispatch_seconds\": {}}}{sep}\n",
+            p.label,
+            p.jobs,
+            p.jobs_per_sec,
+            p.events,
+            p.tasks_dispatched,
+            p.sampling_seconds,
+            p.dispatch_seconds
+        ));
+    }
+    s.push_str("  ]\n}\n");
     s
 }
 
@@ -87,6 +197,19 @@ pub fn write_file(
     wall_seconds: f64,
 ) -> Result<(), String> {
     std::fs::write(path, render(source, m, jobs, wall_seconds))
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+/// Write a report with per-sweep-point rows to `path`.
+pub fn write_file_with_points(
+    path: &str,
+    source: &str,
+    m: &Metrics,
+    jobs: u64,
+    wall_seconds: f64,
+    points: &[SweepPointRecord],
+) -> Result<(), String> {
+    std::fs::write(path, render_with_points(source, m, jobs, wall_seconds, points))
         .map_err(|e| format!("{path}: {e}"))
 }
 
@@ -115,6 +238,16 @@ pub struct ParsedReport {
     pub sojourn_hist: Vec<u64>,
     /// Waiting histogram bucket counts (empty if absent).
     pub waiting_hist: Vec<u64>,
+    /// Percentile key → seconds (empty for schema-v1 files).
+    pub percentiles: BTreeMap<String, f64>,
+    /// Span path key → total seconds (empty for v1 files).
+    pub span_seconds: BTreeMap<String, f64>,
+    /// Span path key → enter count (empty for v1 files).
+    pub span_counts: BTreeMap<String, u64>,
+    /// Histogram name → non-finite samples dropped (empty for v1).
+    pub dropped_samples: BTreeMap<String, u64>,
+    /// Per-sweep-point rows (empty unless a sweep report).
+    pub sweep_points: Vec<SweepPointRecord>,
 }
 
 /// Slice out the object body following `"key": {`, assuming no nested
@@ -225,7 +358,185 @@ pub fn parse(text: &str) -> Result<ParsedReport, String> {
     if let Ok(body) = array_body(&compact, "waiting_seconds") {
         rep.waiting_hist = parse_u64_array(body)?;
     }
+    // Schema-v2 trailing keys — all optional, so v1 files still parse.
+    if let Ok(body) = object_body(&compact, "percentiles") {
+        for (k, v) in parse_pairs(body)? {
+            rep.percentiles
+                .insert(k, v.parse().map_err(|e| format!("percentiles: {e}"))?);
+        }
+    }
+    if let Ok(body) = object_body(&compact, "span_seconds") {
+        for (k, v) in parse_pairs(body)? {
+            rep.span_seconds
+                .insert(k, v.parse().map_err(|e| format!("span_seconds: {e}"))?);
+        }
+    }
+    if let Ok(body) = object_body(&compact, "span_counts") {
+        for (k, v) in parse_pairs(body)? {
+            rep.span_counts
+                .insert(k, v.parse().map_err(|e| format!("span_counts: {e}"))?);
+        }
+    }
+    if let Ok(body) = object_body(&compact, "dropped_samples") {
+        for (k, v) in parse_pairs(body)? {
+            rep.dropped_samples
+                .insert(k, v.parse().map_err(|e| format!("dropped_samples: {e}"))?);
+        }
+    }
+    if let Ok(body) = array_body(&compact, "sweep_points") {
+        let body = body.trim_start_matches('{').trim_end_matches('}');
+        if !body.is_empty() {
+            for obj in body.split("},{") {
+                let mut p = SweepPointRecord::default();
+                for (k, v) in parse_pairs(obj)? {
+                    let fv = || -> Result<f64, String> {
+                        v.parse().map_err(|e| format!("sweep_points.{k}: {e}"))
+                    };
+                    let uv = || -> Result<u64, String> {
+                        v.parse().map_err(|e| format!("sweep_points.{k}: {e}"))
+                    };
+                    match k.as_str() {
+                        "label" => p.label = fv()?,
+                        "jobs" => p.jobs = uv()?,
+                        "jobs_per_sec" => p.jobs_per_sec = fv()?,
+                        "events" => p.events = uv()?,
+                        "tasks_dispatched" => p.tasks_dispatched = uv()?,
+                        "sampling_seconds" => p.sampling_seconds = fv()?,
+                        "dispatch_seconds" => p.dispatch_seconds = fv()?,
+                        _ => {}
+                    }
+                }
+                rep.sweep_points.push(p);
+            }
+        }
+    }
     Ok(rep)
+}
+
+/// One aligned row of a `profile --diff` comparison.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiffRow {
+    /// Row name: a counter/phase/percentile/throughput key, or
+    /// `span:<path>` (prefixed — the `dispatch` *span* is not the
+    /// `dispatch` *phase*).
+    pub name: String,
+    /// Value in the baseline report.
+    pub base: f64,
+    /// Value in the new report.
+    pub new: f64,
+}
+
+impl DiffRow {
+    /// `new / base`, or `None` when the baseline value is zero.
+    pub fn ratio(&self) -> Option<f64> {
+        if self.base != 0.0 {
+            Some(self.new / self.base)
+        } else {
+            None
+        }
+    }
+}
+
+fn union_keys<'a, V>(
+    a: &'a BTreeMap<String, V>,
+    b: &'a BTreeMap<String, V>,
+) -> Vec<&'a String> {
+    let mut keys: Vec<&String> = a.keys().chain(b.keys()).collect();
+    keys.sort();
+    keys.dedup();
+    keys
+}
+
+/// Align two parsed reports into named rows over the union of their
+/// counters, phases, percentiles, throughput figures, and spans. A key
+/// missing on one side contributes 0 to that side.
+pub fn diff_rows(base: &ParsedReport, new: &ParsedReport) -> Vec<DiffRow> {
+    let mut rows = Vec::new();
+    for k in union_keys(&base.counters, &new.counters) {
+        rows.push(DiffRow {
+            name: k.clone(),
+            base: base.counters.get(k).copied().unwrap_or(0) as f64,
+            new: new.counters.get(k).copied().unwrap_or(0) as f64,
+        });
+    }
+    for k in union_keys(&base.phases, &new.phases) {
+        rows.push(DiffRow {
+            name: k.clone(),
+            base: base.phases.get(k).copied().unwrap_or(0.0),
+            new: new.phases.get(k).copied().unwrap_or(0.0),
+        });
+    }
+    for k in union_keys(&base.percentiles, &new.percentiles) {
+        rows.push(DiffRow {
+            name: k.clone(),
+            base: base.percentiles.get(k).copied().unwrap_or(0.0),
+            new: new.percentiles.get(k).copied().unwrap_or(0.0),
+        });
+    }
+    rows.push(DiffRow {
+        name: "jobs_per_sec".into(),
+        base: base.jobs_per_sec,
+        new: new.jobs_per_sec,
+    });
+    rows.push(DiffRow {
+        name: "wall_seconds".into(),
+        base: base.wall_seconds,
+        new: new.wall_seconds,
+    });
+    for k in union_keys(&base.span_seconds, &new.span_seconds) {
+        rows.push(DiffRow {
+            name: format!("span:{k}"),
+            base: base.span_seconds.get(k).copied().unwrap_or(0.0),
+            new: new.span_seconds.get(k).copied().unwrap_or(0.0),
+        });
+    }
+    rows
+}
+
+/// Parse a `--gate` spec: `name:max_ratio[,name:max_ratio...]`. The
+/// ratio is split off the **last** `:`, so row names containing colons
+/// (`span:dispatch/policy`) gate naturally.
+pub fn parse_gates(spec: &str) -> Result<Vec<(String, f64)>, String> {
+    spec.split(',')
+        .filter(|e| !e.trim().is_empty())
+        .map(|entry| {
+            let (name, ratio) = entry
+                .rsplit_once(':')
+                .ok_or_else(|| format!("bad gate {entry:?} (want name:max_ratio)"))?;
+            let r: f64 =
+                ratio.trim().parse().map_err(|e| format!("gate {entry:?}: {e}"))?;
+            if !(r > 0.0) {
+                return Err(format!("gate {entry:?}: max_ratio must be positive"));
+            }
+            Ok((name.trim().to_string(), r))
+        })
+        .collect()
+}
+
+/// Evaluate gates against diff rows: a gate fails when the named row's
+/// `new` exceeds `max_ratio ×` its baseline (a zero baseline with a
+/// nonzero new value is an infinite ratio and always fails). Returns
+/// one human-readable line per failure; empty means all gates passed.
+pub fn check_gates(rows: &[DiffRow], gates: &[(String, f64)]) -> Vec<String> {
+    let mut failures = Vec::new();
+    for (name, max_ratio) in gates {
+        let Some(row) = rows.iter().find(|r| &r.name == name) else {
+            failures.push(format!("gate {name}: no such row in either report"));
+            continue;
+        };
+        match row.ratio() {
+            Some(r) if r > *max_ratio => failures.push(format!(
+                "gate {name}: {} vs baseline {} (ratio {:.4} > max {})",
+                row.new, row.base, r, max_ratio
+            )),
+            None if row.new > 0.0 => failures.push(format!(
+                "gate {name}: {} vs baseline 0 (ratio inf > max {})",
+                row.new, max_ratio
+            )),
+            _ => {}
+        }
+    }
+    failures
 }
 
 #[cfg(test)]
@@ -280,6 +591,127 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(parse("{}").is_err());
         assert!(parse("not json").is_err());
+    }
+
+    /// Schema-v2 trailing sections round-trip: percentiles, spans,
+    /// dropped-sample tallies, and sweep points.
+    #[test]
+    fn v2_sections_round_trip() {
+        let mut m = Metrics::enabled();
+        for _ in 0..100 {
+            m.observe_sojourn(0.25);
+        }
+        m.observe_sojourn(f64::NAN);
+        m.observe_waiting(0.125);
+        m.spans.add(Span::EventLoop, 2.0);
+        m.spans.add(Span::Dispatch, 0.5);
+        m.spans.add(Span::PolicyDispatch, 0.25);
+        let points = vec![
+            SweepPointRecord {
+                label: 2.0,
+                jobs: 500,
+                jobs_per_sec: 1000.0,
+                events: 1500,
+                tasks_dispatched: 1000,
+                sampling_seconds: 0.125,
+                dispatch_seconds: 0.25,
+            },
+            SweepPointRecord { label: 4.0, jobs: 500, ..SweepPointRecord::default() },
+        ];
+        let text = render_with_points("sweep", &m, 1000, 4.0, &points);
+        let rep = parse(&text).unwrap();
+        assert_eq!(rep.schema_version, 2);
+        for prefix in ["sojourn", "waiting"] {
+            for (_, suffix) in PERCENTILES {
+                let key = format!("{prefix}_{suffix}");
+                assert!(rep.percentiles.contains_key(&key), "{key}");
+            }
+        }
+        let p50 = rep.percentiles["sojourn_p50"];
+        assert_eq!(p50, m.sojourn_hist.percentile(0.5).unwrap());
+        assert!(p50 > 0.0);
+        for sp in Span::ALL {
+            assert_eq!(rep.span_seconds[sp.key()], m.spans.seconds(sp), "{}", sp.key());
+            assert_eq!(rep.span_counts[sp.key()], m.spans.count(sp), "{}", sp.key());
+        }
+        assert_eq!(rep.dropped_samples["sojourn_seconds"], 1);
+        assert_eq!(rep.dropped_samples["waiting_seconds"], 0);
+        assert_eq!(rep.sweep_points, points);
+    }
+
+    /// A v1-shaped document (no v2 keys) still parses, with the v2
+    /// fields left empty — old reports stay consumable.
+    #[test]
+    fn v1_document_still_parses() {
+        let v1 = r#"{
+  "schema_version": 1,
+  "source": "simulate",
+  "counters": { "tasks_dispatched": 40, "jobs_completed": 10 },
+  "class_dispatches": [],
+  "phases": { "setup": 0.5, "dispatch": 2.0 },
+  "throughput": { "jobs": 10, "wall_seconds": 2.5, "jobs_per_sec": 4.0 },
+  "peak_rss_bytes": 0
+}"#;
+        let rep = parse(v1).unwrap();
+        assert_eq!(rep.schema_version, 1);
+        assert_eq!(rep.counters["tasks_dispatched"], 40);
+        assert_eq!(rep.phases["dispatch"], 2.0);
+        assert!(rep.percentiles.is_empty());
+        assert!(rep.span_seconds.is_empty());
+        assert!(rep.span_counts.is_empty());
+        assert!(rep.dropped_samples.is_empty());
+        assert!(rep.sweep_points.is_empty());
+        assert!(rep.sojourn_hist.is_empty());
+    }
+
+    /// v2 keys trail every v1 key, so v1 readers that scan forward for
+    /// their keys never see them first (the BENCH v1→v2 precedent).
+    #[test]
+    fn v2_keys_trail_v1_keys() {
+        let m = Metrics::enabled();
+        let text = render("simulate", &m, 10, 1.0);
+        let last_v1 = text.find("\"histograms\"").unwrap();
+        for key in ["\"percentiles\"", "\"span_seconds\"", "\"span_counts\"", "\"dropped_samples\""]
+        {
+            assert!(text.find(key).unwrap() > last_v1, "{key} before histograms");
+        }
+    }
+
+    #[test]
+    fn diff_rows_and_gates() {
+        let mut base = Metrics::enabled();
+        base.absorb_tallies(&Tallies { dispatched: 100, ..Tallies::default() });
+        base.phase_add_secs(Phase::Dispatch, 1.0);
+        base.spans.add(Span::EventLoop, 1.0);
+        let a = parse(&render("profile", &base, 100, 1.0)).unwrap();
+        // Degrade: 3x the dispatch phase, same counters.
+        let mut worse = Metrics::enabled();
+        worse.absorb_tallies(&Tallies { dispatched: 100, ..Tallies::default() });
+        worse.phase_add_secs(Phase::Dispatch, 3.0);
+        worse.spans.add(Span::EventLoop, 3.0);
+        let b = parse(&render("profile", &worse, 100, 3.0)).unwrap();
+        let rows = diff_rows(&a, &b);
+        let dispatch = rows.iter().find(|r| r.name == "dispatch").unwrap();
+        assert_eq!(dispatch.ratio(), Some(3.0));
+        let span = rows.iter().find(|r| r.name == "span:event_loop").unwrap();
+        assert_eq!(span.ratio(), Some(3.0));
+        let counter = rows.iter().find(|r| r.name == "tasks_dispatched").unwrap();
+        assert_eq!(counter.ratio(), Some(1.0));
+
+        let gates = parse_gates("dispatch:1.5,tasks_dispatched:1.01").unwrap();
+        let failures = check_gates(&rows, &gates);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("dispatch"), "{failures:?}");
+        // Same-report diff passes the same gates.
+        assert!(check_gates(&diff_rows(&a, &a), &gates).is_empty());
+        // Span rows gate through the last-colon split.
+        let g = parse_gates("span:event_loop:1.5").unwrap();
+        assert_eq!(g[0].0, "span:event_loop");
+        assert_eq!(check_gates(&rows, &g).len(), 1);
+        // Unknown rows and malformed specs are errors, not silence.
+        assert!(!check_gates(&rows, &[("nope".into(), 2.0)]).is_empty());
+        assert!(parse_gates("dispatch").is_err());
+        assert!(parse_gates("dispatch:-1").is_err());
     }
 
     #[test]

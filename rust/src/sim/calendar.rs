@@ -47,7 +47,7 @@
 
 use super::{FaultInjector, JobRecord, OverheadModel, TraceEvent, TraceLog, Workload};
 use crate::config::{PolicyConfig, PolicyKind};
-use crate::obs::Tallies;
+use crate::obs::{Span, SpanSet, Tallies};
 use crate::trace::cause;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -318,11 +318,15 @@ pub struct Calendar {
     /// Plain u64 increments on paths the engine already branches through —
     /// cheaper than gating, and they consume no RNG.
     tallies: Tallies,
-    /// Measure wall time spent pre-drawing stage samples (the Sampling
-    /// phase). Off by default: the hot path then never reads the clock.
+    /// Measure where the event loop's wall time goes (the hierarchical
+    /// span profile plus the Sampling phase). Off by default: the hot
+    /// path then never reads the clock.
     profile: bool,
-    /// Seconds accumulated in `enqueue_stage` under `profile`.
-    sampling_secs: f64,
+    /// Per-span wall time and enter counts under `profile` (reset on
+    /// every [`Calendar::run`]). Spans read only the wall clock — no
+    /// RNG, no feedback into simulation state — so profiled runs stay
+    /// bitwise identical to unprofiled ones.
+    spans: SpanSet,
 }
 
 impl Calendar {
@@ -356,7 +360,7 @@ impl Calendar {
             dseq: 0,
             tallies: Tallies::default(),
             profile: false,
-            sampling_secs: 0.0,
+            spans: SpanSet::default(),
         }
     }
 
@@ -383,8 +387,11 @@ impl Calendar {
         self
     }
 
-    /// Time the Sampling phase (wall clock spent pre-drawing stage
-    /// samples) during `run`. Disabled engines never read the clock.
+    /// Profile the event loop during `run`: per-event-kind spans with
+    /// nested sampling/stats/policy sub-spans ([`Calendar::spans`]),
+    /// including the wall clock spent pre-drawing stage samples
+    /// ([`Calendar::sampling_seconds`]). Disabled engines never read
+    /// the clock.
     pub fn with_profile(mut self, on: bool) -> Self {
         self.profile = on;
         self
@@ -404,7 +411,33 @@ impl Calendar {
     /// Wall-clock seconds the most recent run spent pre-drawing stage
     /// samples (0 unless [`Calendar::with_profile`] was enabled).
     pub fn sampling_seconds(&self) -> f64 {
-        self.sampling_secs
+        self.spans.seconds(Span::ArrivalSampling) + self.spans.seconds(Span::FinishSampling)
+    }
+
+    /// Event-loop span profile of the most recent run (empty unless
+    /// [`Calendar::with_profile`] was enabled).
+    pub fn spans(&self) -> &SpanSet {
+        &self.spans
+    }
+
+    /// Read the wall clock iff profiling is on — the disabled hot path
+    /// never takes an `Instant` (the [`crate::obs::PhaseClock`] rule).
+    #[inline]
+    fn clock(&self) -> Option<std::time::Instant> {
+        if self.profile {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span clock opened by [`Calendar::clock`] (no-op when
+    /// profiling is off).
+    #[inline]
+    fn span_close(&mut self, span: Span, t0: Option<std::time::Instant>) {
+        if let Some(t) = t0 {
+            self.spans.add(span, t.elapsed().as_secs_f64());
+        }
     }
 
     fn push_event(&mut self, time: f64, kind: EventKind) {
@@ -445,7 +478,7 @@ impl Calendar {
         self.down.resize(self.servers, false);
         self.dseq = 0;
         self.tallies = Tallies::default();
-        self.sampling_secs = 0.0;
+        self.spans = SpanSet::default();
         if let Some(p) = &mut self.policy {
             p.next = 0;
         }
@@ -471,9 +504,27 @@ impl Calendar {
         let t0 = workload.next_arrival();
         self.push_event(t0, EventKind::Arrival(0));
 
-        while let Some(ev) = self.heap.pop() {
+        // Span clocks are only read under `profile` (see `clock`); the
+        // kind span nests the handler, Dispatch nests the post-event
+        // dispatch pass, and EventLoop wraps the whole loop.
+        let loop_t0 = self.clock();
+        loop {
+            let pop_t0 = self.clock();
+            let Some(ev) = self.heap.pop() else { break };
+            self.span_close(Span::HeapPop, pop_t0);
             self.tallies.events += 1;
             self.tallies.heap_pops += 1;
+            let kind_span = match ev.kind {
+                EventKind::Arrival(_) => Span::Arrival,
+                EventKind::TaskFinish { .. } => Span::Finish,
+                EventKind::Departure(_) => Span::Departure,
+                EventKind::Crash(_)
+                | EventKind::Repair(_)
+                | EventKind::Retry(_)
+                | EventKind::SpecLaunch { .. } => Span::Fault,
+                EventKind::StealTick => Span::StealTick,
+            };
+            let ev_t0 = self.clock();
             match ev.kind {
                 EventKind::Arrival(j) => self.on_arrival(ev.time, j, workload, overhead),
                 EventKind::TaskFinish { server, slot, dseq } => {
@@ -497,7 +548,10 @@ impl Calendar {
                 // dispatch pass below re-evaluates the queue at ev.time.
                 EventKind::StealTick => {}
             }
+            self.span_close(kind_span, ev_t0);
+            let dispatch_t0 = self.clock();
             self.dispatch(ev.time, trace);
+            self.span_close(Span::Dispatch, dispatch_t0);
             // The crash/repair calendar reschedules itself forever; stop
             // once every job has departed (no-op without faults — the
             // heap simply drains).
@@ -505,6 +559,7 @@ impl Calendar {
                 break;
             }
         }
+        self.span_close(Span::EventLoop, loop_t0);
         let mut out = std::mem::take(&mut self.completed);
         out.sort_by_key(|r| r.index);
         out
@@ -559,7 +614,7 @@ impl Calendar {
             Some(p) if p.kind == PolicyKind::WorkSteal => now + p.threshold,
             _ => f64::INFINITY,
         };
-        let sample_t0 = if self.profile { Some(std::time::Instant::now()) } else { None };
+        let sample_t0 = self.clock();
         let js = &mut self.jobs[slot as usize];
         js.to_dispatch = count;
         if !overhead.enabled() {
@@ -599,8 +654,8 @@ impl Calendar {
             if steal_at.is_finite() {
                 self.push_event(steal_at, EventKind::StealTick);
             }
-            if let Some(t) = sample_t0 {
-                self.sampling_secs += t.elapsed().as_secs_f64();
+            if sample_t0.is_some() {
+                self.close_sampling_span(slot, sample_t0);
             }
             return;
         }
@@ -642,9 +697,21 @@ impl Calendar {
         if steal_at.is_finite() {
             self.push_event(steal_at, EventKind::StealTick);
         }
-        if let Some(t) = sample_t0 {
-            self.sampling_secs += t.elapsed().as_secs_f64();
+        if sample_t0.is_some() {
+            self.close_sampling_span(slot, sample_t0);
         }
+    }
+
+    /// Close a stage pre-draw clock into the sub-span matching where the
+    /// stage was enqueued from: stage 0 under an arrival, barrier stages
+    /// (≥ 1) under the finish that crossed the barrier.
+    fn close_sampling_span(&mut self, slot: u32, t0: Option<std::time::Instant>) {
+        let span = if self.jobs[slot as usize].stage == 0 {
+            Span::ArrivalSampling
+        } else {
+            Span::FinishSampling
+        };
+        self.span_close(span, t0);
     }
 
     fn on_arrival(&mut self, now: f64, j: u32, workload: &mut Workload, overhead: &OverheadModel) {
@@ -921,6 +988,7 @@ impl Calendar {
     /// Record a completed fork-join job departing at `now + pd` and
     /// retire its slot.
     fn complete_job(&mut self, now: f64, slot: u32, pd: f64) {
+        let stats_t0 = self.clock();
         self.tallies.jobs += 1;
         let js = &self.jobs[slot as usize];
         self.completed.push(JobRecord {
@@ -936,6 +1004,7 @@ impl Calendar {
             retries: js.retries,
         });
         self.free_slots.push(slot);
+        self.span_close(Span::FinishStats, stats_t0);
     }
 
     /// Record a (split-merge) departure at exactly `time` (the scheduled
@@ -961,7 +1030,10 @@ impl Calendar {
 
     fn dispatch(&mut self, now: f64, trace: &mut TraceLog) {
         if self.policy.is_some() {
-            return self.dispatch_policy(now, trace);
+            let t0 = self.clock();
+            self.dispatch_policy(now, trace);
+            self.span_close(Span::PolicyDispatch, t0);
+            return;
         }
         // Split-merge: admit the next job when the floor is clear (the
         // Departure event clears `in_service` at finish + pre-departure).
@@ -1213,7 +1285,8 @@ mod tests {
     }
 
     /// Raw tallies track the run's event flow and reset between runs;
-    /// the profile clock only measures when enabled.
+    /// the span profile only measures when enabled, and its enter
+    /// counts reconcile exactly with the (deterministic) event flow.
     #[test]
     fn tallies_and_profile_track_run() {
         let mut cal =
@@ -1229,9 +1302,104 @@ mod tests {
         assert_eq!(t.heap_pushes, t.heap_pops, "every event pushed is popped");
         assert_eq!(t.events, t.heap_pops);
         assert!(cal.sampling_seconds() >= 0.0);
-        // A second run resets the tallies instead of accumulating.
+        let spans = cal.spans();
+        assert_eq!(spans.count(Span::EventLoop), 1);
+        assert_eq!(spans.count(Span::HeapPop), t.heap_pops);
+        assert_eq!(spans.count(Span::Dispatch), t.events, "one pass per event");
+        assert_eq!(spans.count(Span::Arrival), 3);
+        assert_eq!(spans.count(Span::Finish), 12);
+        assert_eq!(spans.count(Span::ArrivalSampling), 3, "one stage pre-draw per arrival");
+        assert_eq!(spans.count(Span::FinishStats), 3, "one completion record per job");
+        assert_eq!(spans.count(Span::FinishSampling), 0, "single-stage: no barrier");
+        assert_eq!(spans.count(Span::PolicyDispatch), 0, "no policy attached");
+        assert!(spans.seconds(Span::EventLoop) > 0.0);
+        // A second run resets the tallies and spans instead of
+        // accumulating.
         cal.run(3, &mut workload(10.0, 1.0, 1), &oh, &mut tr);
         assert_eq!(cal.tallies().jobs, 3);
+        assert_eq!(cal.spans().count(Span::EventLoop), 1);
+        // An unprofiled engine records no spans at all.
+        let mut cold = Calendar::new(Discipline::SingleQueueForkJoin, 2, vec![4]);
+        cold.run(3, &mut workload(10.0, 1.0, 1), &oh, &mut tr);
+        assert!(cold.spans().is_empty());
+    }
+
+    /// Profiling never perturbs the simulation: same seed, spans on vs
+    /// off, bit-for-bit identical records — across plain, multi-stage,
+    /// faulty, and policy-routed runs.
+    #[test]
+    fn profile_on_is_bitwise_identical() {
+        let fault_cfg = crate::config::FaultsConfig {
+            mtbf: 5.0,
+            mttr: 0.5,
+            task_fail_p: 0.2,
+            max_retries: 2,
+            backoff_base: 0.05,
+            spec_timeout: 1.5,
+            ..Default::default()
+        };
+        let sita = PolicyConfig {
+            kind: PolicyKind::Sita,
+            sita_boundaries: vec![0.5],
+            ..Default::default()
+        };
+        let steal = PolicyConfig {
+            kind: PolicyKind::WorkSteal,
+            steal_threshold: 0.25,
+            ..Default::default()
+        };
+        type Build = Box<dyn Fn() -> Calendar>;
+        let cases: Vec<(&str, Build)> = vec![
+            (
+                "fj/plain",
+                Box::new(|| Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6])),
+            ),
+            ("sm/stages", Box::new(|| Calendar::new(Discipline::SplitMerge, 3, vec![4, 2]))),
+            (
+                "fj/faults",
+                Box::new(move || {
+                    Calendar::new(Discipline::SingleQueueForkJoin, 3, vec![6])
+                        .with_faults(Some(faults(fault_cfg, 3, 42)))
+                }),
+            ),
+            (
+                "fj/sita",
+                Box::new(move || {
+                    Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![4])
+                        .with_policy(Some(&sita))
+                }),
+            ),
+            (
+                "sm/steal",
+                Box::new(move || {
+                    Calendar::new(Discipline::SplitMerge, 3, vec![6]).with_policy(Some(&steal))
+                }),
+            ),
+        ];
+        for (name, build) in cases {
+            let mk_w = || {
+                Workload::new(Exponential::new(0.4).into(), Exponential::new(2.0).into(), 5)
+            };
+            let oh = OverheadModel::paper_default();
+            let mut tr = TraceLog::disabled();
+            let mut off = build();
+            let a = off.run(300, &mut mk_w(), &oh, &mut tr);
+            let mut on = build().with_profile(true);
+            let b = on.run(300, &mut mk_w(), &oh, &mut tr);
+            assert!(off.spans().is_empty(), "{name}: unprofiled run recorded spans");
+            assert!(!on.spans().is_empty(), "{name}: profiled run recorded nothing");
+            assert_eq!(a.len(), b.len(), "{name}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival, y.arrival, "{name}");
+                assert_eq!(x.departure, y.departure, "{name}");
+                assert_eq!(x.first_start, y.first_start, "{name}");
+                assert_eq!(x.workload, y.workload, "{name}");
+                assert_eq!(x.task_overhead, y.task_overhead, "{name}");
+                assert_eq!(x.lost_work, y.lost_work, "{name}");
+                assert_eq!(x.redundant_work, y.redundant_work, "{name}");
+                assert_eq!(x.retries, y.retries, "{name}");
+            }
+        }
     }
 
     /// Retired job slots are recycled: a long lightly-loaded run keeps

@@ -175,7 +175,9 @@ pub fn run(cfg: &SimulationConfig, opts: RunOptions) -> Result<SimResult, String
         n => n,
     };
     if opts.progress {
-        progress::start(cfg.jobs as u64, shards.max(1));
+        // Mirror run_sharded's clamp so the heartbeat's shard-lag view
+        // matches the shard count actually run.
+        progress::start(cfg.jobs as u64, shards.min(cfg.jobs.max(1)).max(1));
     }
     let res = if shards <= 1 { run_single(cfg, &opts) } else { run_sharded(cfg, &opts, shards) };
     if opts.progress {

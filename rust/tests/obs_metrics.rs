@@ -238,3 +238,161 @@ fn counters_reconcile_with_recorded_trace() {
         trace.tasks.iter().filter(|t| t.cause == cause::FAILED).count() as u64;
     assert_eq!(failed_rows, retries);
 }
+
+/// The span profiler obeys the same hard contract as the registry:
+/// profiling on is bit-for-bit profiling off, across the calendar
+/// engine's model/faults/policy matrix — and the span enter counts
+/// reconcile exactly with the engine's raw tallies.
+#[test]
+fn calendar_span_profile_is_bitwise_inert_and_reconciles() {
+    use tiny_tasks::dist::Exponential;
+    use tiny_tasks::obs::Span;
+    use tiny_tasks::sim::{
+        Calendar, Discipline, FaultInjector, OverheadModel, TraceLog, Workload,
+    };
+
+    let fault_cfg = FaultsConfig {
+        mtbf: 8.0,
+        mttr: 0.5,
+        task_fail_p: 0.05,
+        backoff_base: 0.02,
+        ..FaultsConfig::default()
+    };
+    let sita = PolicyConfig {
+        kind: PolicyKind::Sita,
+        sita_boundaries: vec![0.5],
+        ..PolicyConfig::default()
+    };
+    let steal = PolicyConfig {
+        kind: PolicyKind::WorkSteal,
+        steal_threshold: 0.25,
+        ..PolicyConfig::default()
+    };
+    type Build = Box<dyn Fn() -> Calendar>;
+    let cases: Vec<(&str, Build)> = vec![
+        (
+            "fj/plain",
+            Box::new(|| Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![8])),
+        ),
+        ("sm/stages", Box::new(|| Calendar::new(Discipline::SplitMerge, 4, vec![6, 2]))),
+        (
+            "fj/faults",
+            Box::new(move || {
+                Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![8])
+                    .with_faults(Some(FaultInjector::new(fault_cfg, 4, 17, 1.0)))
+            }),
+        ),
+        (
+            "fj/sita",
+            Box::new(move || {
+                Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![8])
+                    .with_policy(Some(&sita))
+            }),
+        ),
+        (
+            "fj/steal",
+            Box::new(move || {
+                Calendar::new(Discipline::SingleQueueForkJoin, 4, vec![8])
+                    .with_policy(Some(&steal))
+            }),
+        ),
+    ];
+    for (name, build) in cases {
+        let mk_w =
+            || Workload::new(Exponential::new(0.35).into(), Exponential::new(2.0).into(), 23);
+        let oh = OverheadModel::paper_default();
+        let mut tr = TraceLog::disabled();
+        let mut off = build();
+        let a = off.run(400, &mut mk_w(), &oh, &mut tr);
+        let mut on = build().with_profile(true);
+        let b = on.run(400, &mut mk_w(), &oh, &mut tr);
+        assert!(off.spans().is_empty(), "{name}: unprofiled run recorded spans");
+        assert_eq!(a.len(), b.len(), "{name}");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival, "{name}");
+            assert_eq!(x.departure, y.departure, "{name}");
+            assert_eq!(x.first_start, y.first_start, "{name}");
+            assert_eq!(x.workload, y.workload, "{name}");
+            assert_eq!(x.task_overhead, y.task_overhead, "{name}");
+            assert_eq!(x.lost_work, y.lost_work, "{name}");
+            assert_eq!(x.redundant_work, y.redundant_work, "{name}");
+            assert_eq!(x.retries, y.retries, "{name}");
+        }
+        let t = on.tallies();
+        let s = on.spans();
+        assert_eq!(s.count(Span::EventLoop), 1, "{name}");
+        assert_eq!(s.count(Span::HeapPop), t.events, "{name}");
+        assert_eq!(s.count(Span::Dispatch), t.events, "{name}");
+        let kind_sum = s.count(Span::Arrival)
+            + s.count(Span::Finish)
+            + s.count(Span::Departure)
+            + s.count(Span::Fault)
+            + s.count(Span::StealTick);
+        assert_eq!(kind_sum, t.events, "{name}: every event lands in exactly one kind span");
+        assert_eq!(s.count(Span::Arrival), 400, "{name}: one arrival event per job");
+    }
+}
+
+/// Schema v2 adds percentiles, span maps, and dropped-sample tallies as
+/// trailing keys: a real run's report carries monotone percentiles and
+/// zero dropped samples, and the (span-less) recursion engines still
+/// serialize the full span key set at zero.
+#[test]
+fn report_v2_surfaces_percentiles_spans_and_dropped_samples() {
+    let cfg = base(ModelKind::ForkJoinSingleQueue, 5, 25);
+    let res = sim::run(&cfg, RunOptions { metrics: true, ..Default::default() }).unwrap();
+    let text = report::render("simulate", &res.metrics, cfg.jobs as u64, res.wall_seconds);
+    let rep = report::parse(&text).unwrap();
+    assert_eq!(rep.schema_version, 2);
+    assert_eq!(rep.percentiles.len(), 8, "4 quantiles x (sojourn, waiting)");
+    let p = |k: &str| rep.percentiles[k];
+    assert!(p("sojourn_p50") > 0.0);
+    assert!(p("sojourn_p50") <= p("sojourn_p90"));
+    assert!(p("sojourn_p90") <= p("sojourn_p99"));
+    assert!(p("sojourn_p99") <= p("sojourn_p999"));
+    assert!(p("waiting_p50") <= p("waiting_p999"));
+    assert_eq!(rep.dropped_samples["sojourn_seconds"], 0);
+    assert_eq!(rep.dropped_samples["waiting_seconds"], 0);
+    // The recursion engines have no event loop: the span maps still
+    // serialize every key, all zero.
+    assert_eq!(rep.span_counts.len(), rep.span_seconds.len());
+    assert_eq!(rep.span_counts["event_loop"], 0);
+    assert!(rep.span_counts.values().all(|&n| n == 0));
+}
+
+/// End-to-end regression gating: `profile --diff --gate` exits non-zero
+/// when the new report's gated phase degrades past the ratio, and 0
+/// when the allowance covers it.
+#[test]
+fn profile_diff_gate_exits_nonzero_on_degraded_phase() {
+    use std::collections::BTreeMap;
+    use tiny_tasks::cli::Args;
+    use tiny_tasks::coordinator::commands;
+    use tiny_tasks::obs::Metrics;
+
+    let dir = std::env::temp_dir();
+    let base_path = dir.join(format!("tt_obs_diff_base_{}.json", std::process::id()));
+    let new_path = dir.join(format!("tt_obs_diff_new_{}.json", std::process::id()));
+    let mut mb = Metrics::enabled();
+    mb.phase_add_secs(Phase::Dispatch, 1.0);
+    let mut mn = Metrics::enabled();
+    mn.phase_add_secs(Phase::Dispatch, 3.0);
+    std::fs::write(&base_path, report::render("profile", &mb, 100, 2.0)).unwrap();
+    std::fs::write(&new_path, report::render("profile", &mn, 100, 2.0)).unwrap();
+    let run = |gate: &str| {
+        let mut flags = BTreeMap::new();
+        flags.insert("diff".to_string(), base_path.display().to_string());
+        flags.insert("gate".to_string(), gate.to_string());
+        let args = Args {
+            command: "profile".into(),
+            positional: vec![new_path.display().to_string()],
+            flags,
+        };
+        commands::cmd_profile(&args).unwrap()
+    };
+    assert_eq!(run("dispatch:1.5"), 1, "3x dispatch must trip a 1.5x gate");
+    assert_eq!(run("dispatch:4.0"), 0, "a 4x allowance passes");
+    assert_eq!(run("no_such_row:2.0"), 1, "unknown rows fail closed");
+    let _ = std::fs::remove_file(&base_path);
+    let _ = std::fs::remove_file(&new_path);
+}
